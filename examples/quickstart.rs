@@ -1,0 +1,65 @@
+//! Quickstart: solve one HPCG-style system through the full three-layer
+//! stack — Rust coordinator driving the AOT-compiled JAX/Pallas kernels
+//! via PJRT — and cross-check against the native Rust kernels.
+//!
+//!     make artifacts && cargo run --release --example quickstart
+//!
+//! Falls back to the native backend (with a notice) if artifacts are
+//! missing, so the example always runs.
+
+use std::rc::Rc;
+
+use hlam::mesh::Grid3;
+use hlam::runtime::{Runtime, XlaCompute};
+use hlam::solvers::{Method, Native, Problem, SolveOpts};
+use hlam::sparse::StencilKind;
+
+fn main() {
+    // 16x16x16 local grid, single rank — the `quickstart` artifact preset
+    let grid = Grid3::cube(16);
+    let kind = StencilKind::P7;
+    let opts = SolveOpts::default();
+
+    println!("HLAM-RS quickstart — CG on the HPCG system, grid 16³, 7-point stencil\n");
+
+    // 1) native Rust kernels
+    let mut pb = Problem::build(grid, kind, 1);
+    let native = pb.solve(Method::parse("cg").unwrap(), &opts, &mut Native);
+    println!(
+        "native backend: {} iterations, |x - 1|_max = {:.2e}",
+        native.iterations, native.x_error
+    );
+
+    // 2) XLA backend: same algorithm, kernels executed from the AOT
+    //    artifacts produced by python/compile (Pallas SpMV + fused ops)
+    match Runtime::load("artifacts") {
+        Ok(rt) => {
+            let rt = Rc::new(rt);
+            let mut pb = Problem::build(grid, kind, 1);
+            let (n, n_ext) = {
+                let st = &pb.ranks[0];
+                (st.n(), st.sys.part.n_ext())
+            };
+            let mut xc = XlaCompute::new(rt, n, kind.width(), n_ext)
+                .expect("quickstart artifacts (run `make artifacts`)");
+            let xla = pb.solve(Method::parse("cg").unwrap(), &opts, &mut xc);
+            println!(
+                "xla backend:    {} iterations, |x - 1|_max = {:.2e} ({} kernel executions)",
+                xla.iterations,
+                xla.x_error,
+                xc.calls.borrow()
+            );
+            assert_eq!(native.iterations, xla.iterations, "backends disagree!");
+            println!("\nboth backends agree — the Pallas/JAX compute stack is live.");
+        }
+        Err(e) => {
+            println!("xla backend skipped: {e:#}");
+        }
+    }
+
+    // 3) convergence history
+    println!("\nresidual history (relative):");
+    for (k, r) in native.history.iter().enumerate() {
+        println!("  iter {:>2}: {:.3e}", k + 1, r);
+    }
+}

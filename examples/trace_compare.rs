@@ -1,0 +1,47 @@
+//! Fig. 1 reproduction: Paraver-style traces of classic CG vs CG-NB under
+//! the task model (MPI-OSS_t, one rank's 8 cores, two iterations).
+//!
+//!     cargo run --release --example trace_compare
+//!
+//! The classic trace shows two idle bands per iteration — the blocking
+//! MPI collectives the paper marks with arrows in Fig. 1(a); the
+//! nonblocking algorithm's trace shows the NIC lane busy *under* compute.
+
+use hlam::machine::MachineModel;
+use hlam::trace::build_trace;
+
+fn main() {
+    let m = MachineModel::marenostrum4();
+    let rows = 128.0 * 128.0 * 384.0; // readable window, like the paper
+    println!("Fig 1 — task traces, 8 cores, 32 subdomain tasks, 2 iterations\n");
+
+    let mut summaries = Vec::new();
+    for method in ["cg", "cg-nb"] {
+        let tr = build_trace(&m, method, 7.0, rows, 32, 8, 2, 1.2e-3);
+        println!("{}", tr.to_ascii(100));
+        summaries.push((method, tr.schedule.makespan, tr.idle_fraction()));
+        std::fs::create_dir_all("results").ok();
+        std::fs::write(format!("results/trace_{method}.csv"), tr.to_csv())
+            .expect("write trace csv");
+    }
+
+    println!("summary:");
+    for (method, makespan, idle) in &summaries {
+        println!(
+            "  {:<6} makespan {:.3} ms, core idle {:>5.1}%",
+            method,
+            makespan * 1e3,
+            idle * 100.0
+        );
+    }
+    let (_, m_cg, i_cg) = summaries[0];
+    let (_, m_nb, i_nb) = summaries[1];
+    println!(
+        "\nCG-NB suppresses the blocking barriers: idle {:.1}% -> {:.1}%, \
+         makespan {:+.1}% despite {:.1}% more touched elements",
+        i_cg * 100.0,
+        i_nb * 100.0,
+        (m_nb / m_cg - 1.0) * 100.0,
+        100.0 * 3.0 / 19.0
+    );
+}

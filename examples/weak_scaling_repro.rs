@@ -1,0 +1,117 @@
+//! END-TO-END DRIVER (EXPERIMENTS.md §E2E): proves all layers compose on
+//! a real workload and reproduces the paper's headline result.
+//!
+//!     make artifacts && cargo run --release --example weak_scaling_repro
+//!
+//! Phase 1 — real numerics through the full stack: a 32x32x64 HPCG system
+//! split over 2 simulated MPI ranks, every kernel of every CG iteration
+//! executed from the AOT-compiled JAX/Pallas artifacts via PJRT (the
+//! `e2e` artifact preset), residual curve logged, solution verified
+//! against x* = 1 and against the native-kernel run.
+//!
+//! Phase 2 — the paper's headline experiment at full scale on the
+//! MareNostrum 4 machine model: weak scaling to 64 nodes, MPI-only
+//! classic vs MPI-OSS_t nonblocking variants, 10 repetitions, medians.
+//! Expected: task-based CG-NB ≈ 20%/25% faster (7-/27-pt), BiCGStab
+//! ≈ 10-20%, Jacobi ≈ 14%, GS ≈ 13-16% — the abstract's numbers.
+
+use std::rc::Rc;
+use std::time::Instant;
+
+use hlam::harness::{paper_iterations, weak_config, HarnessOpts};
+use hlam::mesh::Grid3;
+use hlam::runtime::{Runtime, XlaCompute};
+use hlam::simulator::{repeat_runs, ExecModel};
+use hlam::solvers::{Method, Native, Problem, SolveOpts};
+use hlam::sparse::StencilKind;
+use hlam::stats::median;
+
+fn main() {
+    phase1_real_numerics();
+    phase2_headline();
+}
+
+fn phase1_real_numerics() {
+    println!("=== Phase 1: end-to-end numerics through PJRT (e2e preset) ===\n");
+    let grid = Grid3::new(32, 32, 64); // 2 ranks x 32768 rows, halo = 1024
+    let kind = StencilKind::P7;
+    let opts = SolveOpts::default();
+
+    let rt = match Runtime::load("artifacts") {
+        Ok(rt) => Rc::new(rt),
+        Err(e) => {
+            eprintln!("cannot run the e2e phase without artifacts: {e:#}");
+            eprintln!("run `make artifacts` first.");
+            std::process::exit(1);
+        }
+    };
+
+    let t0 = Instant::now();
+    let mut pb = Problem::build(grid, kind, 2);
+    let (n, n_ext) = {
+        let st = &pb.ranks[0];
+        (st.n(), st.sys.part.n_ext())
+    };
+    let mut xc = XlaCompute::new(rt, n, kind.width(), n_ext).expect("e2e artifacts");
+    let xla = pb.solve(Method::parse("cg").unwrap(), &opts, &mut xc);
+    let t_xla = t0.elapsed();
+
+    println!("CG via XLA artifacts: {} iterations in {:.2?}", xla.iterations, t_xla);
+    println!("  kernel executions: {}", xc.calls.borrow());
+    println!("  |x - 1|_max = {:.2e}, converged = {}", xla.x_error, xla.converged);
+    println!("  residual curve:");
+    for (k, r) in xla.history.iter().enumerate() {
+        println!("    iter {:>2}: {:.3e}", k + 1, r);
+    }
+    assert!(xla.converged && xla.x_error < 1e-5);
+
+    // cross-check vs native
+    let mut pb2 = Problem::build(grid, kind, 2);
+    let nat = pb2.solve(Method::parse("cg").unwrap(), &opts, &mut Native);
+    assert_eq!(nat.iterations, xla.iterations, "backend mismatch");
+    println!(
+        "  native cross-check: {} iterations, identical count ✓\n",
+        nat.iterations
+    );
+}
+
+fn phase2_headline() {
+    println!("=== Phase 2: paper headline — weak scaling to 64 nodes ===\n");
+    let opts = HarnessOpts::default();
+    let rows: Vec<(&str, &str, StencilKind, f64)> = vec![
+        ("cg-nb", "cg", StencilKind::P7, 19.7),
+        ("cg-nb", "cg", StencilKind::P27, 25.0),
+        ("bicgstab", "bicgstab", StencilKind::P7, 10.6),
+        ("bicgstab", "bicgstab", StencilKind::P27, 20.0),
+        ("jacobi", "jacobi", StencilKind::P7, 14.4),
+        ("jacobi", "jacobi", StencilKind::P27, 14.3),
+        ("gs-relaxed", "gs", StencilKind::P7, 15.9),
+        ("gs-relaxed", "gs", StencilKind::P27, 13.1),
+    ];
+    println!(
+        "{:<26} {:>3} {:>8} {:>8} {:>10} {:>8}",
+        "series (OSS_t vs MPI)", "w", "t_mpi", "t_oss", "measured%", "paper%"
+    );
+    for (oss_m, mpi_m, kind, paper) in rows {
+        let mpi_cfg = weak_config(ExecModel::MpiOnly, mpi_m, kind, 64, &opts);
+        let oss_cfg = weak_config(ExecModel::MpiOssTask, oss_m, kind, 64, &opts);
+        let t_mpi = median(&repeat_runs(&mpi_cfg, opts.reps));
+        let t_oss = median(&repeat_runs(&oss_cfg, opts.reps));
+        let speedup = (t_mpi / t_oss - 1.0) * 100.0;
+        println!(
+            "{:<26} {:>3} {:>7.2}s {:>7.2}s {:>9.1}% {:>7.1}%",
+            format!("{oss_m} vs {mpi_m}"),
+            kind.width(),
+            t_mpi,
+            t_oss,
+            speedup,
+            paper
+        );
+    }
+    println!(
+        "\n(iterations per method from §4.1: e.g. CG 7-pt = {}, Jacobi 27-pt = {})",
+        paper_iterations("cg", StencilKind::P7),
+        paper_iterations("jacobi", StencilKind::P27)
+    );
+    println!("full figure regeneration: `hlam figures --all --out results`");
+}

@@ -1,0 +1,146 @@
+"""AOT pipeline: lower every L2 entry point to HLO *text* artifacts.
+
+Interchange format is HLO text, NOT a serialized HloModuleProto: jax>=0.5
+emits protos with 64-bit instruction ids that the xla crate's bundled
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Each entry point from model.entry_specs is lowered for one or more local
+problem sizes (n, w, n_ext) and written to
+
+    artifacts/<entry>_n<n>_w<w>_e<n_ext>.hlo.txt
+
+(the extended length is part of the identity: the same local size can be
+compiled with different halo layouts — single-rank, edge rank, middle
+rank — and they are distinct artifacts)
+
+together with ``artifacts/manifest.json`` describing the ABI (argument
+and result shapes/dtypes) that the Rust runtime (rust/src/runtime) reads
+to drive the executables. All entries are lowered with
+``return_tuple=True`` so the Rust side unwraps with ``to_tuple()``.
+
+Run via ``make artifacts`` — a no-op when artifacts are newer than the
+python sources.
+
+Usage:
+    python -m compile.aot --out-dir ../artifacts --sizes quickstart,test
+    python -m compile.aot --n 4096 --w 7 --halo 128
+"""
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+from jax._src.lib import xla_client as xc  # noqa: E402
+
+from . import model  # noqa: E402
+
+# Named size presets: (n, w, n_halo). n is the per-rank row count, halo is
+# the exact receive-region length appended to own rows (one xy-plane per
+# neighbour under the paper's 1-D z decomposition — 0 for a single rank,
+# plane for an edge rank of a 2-rank split).
+#
+#   test       — 8x8x8 local grid (single-rank and 2-rank halo layouts)
+#   quickstart — 16x16x16 local grid, single rank, both stencils
+#   e2e        — 32x32x32 local grid, 2-rank split, both stencils
+SIZE_PRESETS = {
+    "test": [(512, 7, 0), (512, 27, 0), (512, 7, 64), (512, 27, 64)],
+    "quickstart": [(4096, 7, 0), (4096, 27, 0)],
+    "e2e": [(32768, 7, 1024), (32768, 27, 1024)],
+}
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _abi(avals):
+    return [
+        {"dtype": str(a.dtype), "shape": list(a.shape)}
+        for a in avals
+    ]
+
+
+def lower_entry(name, fn, arg_specs):
+    lowered = jax.jit(fn).lower(*arg_specs)
+    text = to_hlo_text(lowered)
+    out_avals = jax.eval_shape(fn, *arg_specs)
+    return text, _abi(arg_specs), _abi(list(out_avals))
+
+
+def build_size(n, w, n_halo, out_dir, entries=None, manifest=None):
+    """Lower all (or selected) entries for one local problem size."""
+    n_ext = n + n_halo + 1  # own + halo + zero-pad slot
+    specs = model.entry_specs(n, w, n_ext)
+    manifest = manifest if manifest is not None else {}
+    for entry, (fn, args) in sorted(specs.items()):
+        if entries and entry not in entries:
+            continue
+        fname = f"{entry}_n{n}_w{w}_e{n_ext}.hlo.txt"
+        path = os.path.join(out_dir, fname)
+        text, in_abi, out_abi = lower_entry(entry, fn, args)
+        with open(path, "w") as f:
+            f.write(text)
+        manifest[f"{entry}_n{n}_w{w}_e{n_ext}"] = {
+            "entry": entry,
+            "n": n,
+            "w": w,
+            "n_ext": n_ext,
+            "file": fname,
+            "inputs": in_abi,
+            "outputs": out_abi,
+            "sha256": hashlib.sha256(text.encode()).hexdigest()[:16],
+        }
+        print(f"  {fname}: {len(text)} chars")
+    return manifest
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--sizes", default="test,quickstart",
+                    help="comma-separated preset names from SIZE_PRESETS")
+    ap.add_argument("--n", type=int, help="explicit local rows")
+    ap.add_argument("--w", type=int, default=7, choices=(7, 27))
+    ap.add_argument("--halo", type=int, default=0)
+    ap.add_argument("--entries", default=None,
+                    help="comma-separated subset of entry names")
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    entries = set(args.entries.split(",")) if args.entries else None
+
+    sizes = []
+    if args.n:
+        sizes.append((args.n, args.w, args.halo))
+    else:
+        for preset in args.sizes.split(","):
+            sizes.extend(SIZE_PRESETS[preset.strip()])
+
+    manifest_path = os.path.join(args.out_dir, "manifest.json")
+    manifest = {}
+    if os.path.exists(manifest_path):
+        with open(manifest_path) as f:
+            manifest = json.load(f)
+
+    for n, w, halo in sizes:
+        print(f"lowering n={n} w={w} halo={halo}")
+        build_size(n, w, halo, args.out_dir, entries, manifest)
+
+    with open(manifest_path, "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+    print(f"wrote {manifest_path} ({len(manifest)} entries)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,12 @@
+"""L1 Pallas kernels for HLAM-RS (compile-time only; never on the solve path).
+
+Public surface:
+  spmv.spmv                 — ELL sparse matrix-vector product
+  fused.axpby / waxpby      — vector updates (incl. the paper's ad-hoc kernel)
+  fused.dot / axpby_dot     — local reductions (global reduce lives in Rust)
+  ref.*                     — pure-jnp oracles for all of the above
+"""
+
+from . import fused, ref, spmv  # noqa: F401
+from .fused import axpby, axpby_dot, dot, waxpby  # noqa: F401
+from .spmv import spmv  # noqa: F401

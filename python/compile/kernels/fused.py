@@ -1,0 +1,148 @@
+"""L1 Pallas kernels: vector updates and reductions of the iterative methods.
+
+These are the paper's three arithmetic families besides SpMV (Section 1):
+vector updates (``axpby``, and the ad-hoc ``waxpby`` z := a·x + b·y + c·z
+of Section 3.1) and scalar products (``dot``). The fused ``axpby_dot``
+implements the body of CG-NB Task 2 (Code 1, lines 14-21): two array
+updates and a partial reduction in a single pass over the operands, which
+is the memory-traffic accounting the paper uses ((15+n̄)·r touched
+elements per CG-NB iteration).
+
+Scalars are passed as (1,)-shaped arrays so the same HLO artifact can be
+driven iteration after iteration from Rust without recompilation.
+
+Reductions accumulate across grid steps into a (1,) output block mapped to
+the same position every step — the standard Pallas revisiting-output
+pattern, sequential and deterministic under both the interpreter and a
+real TPU grid, which matters because task-ordering effects on reductions
+are modelled at the coordinator level (L3), not inside the kernel.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .spmv import pick_block_rows
+
+
+# --------------------------------------------------------------------------
+# axpby: y' = a*x + b*y
+# --------------------------------------------------------------------------
+
+def _axpby_kernel(a_ref, x_ref, b_ref, y_ref, o_ref):
+    o_ref[...] = a_ref[0] * x_ref[...] + b_ref[0] * y_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows",))
+def axpby(a, x, b, y, *, block_rows=None):
+    """y' = a*x + b*y with scalar coefficients shaped (1,)."""
+    n = x.shape[0]
+    bs = pick_block_rows(n, block_rows)
+    return pl.pallas_call(
+        _axpby_kernel,
+        grid=(n // bs,),
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((bs,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((bs,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((bs,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), x.dtype),
+        interpret=True,
+    )(a, x, b, y)
+
+
+# --------------------------------------------------------------------------
+# waxpby: z' = a*x + b*y + c*z  (paper Section 3.1 ad-hoc kernel)
+# --------------------------------------------------------------------------
+
+def _waxpby_kernel(a_ref, x_ref, b_ref, y_ref, c_ref, z_ref, o_ref):
+    o_ref[...] = (
+        a_ref[0] * x_ref[...] + b_ref[0] * y_ref[...] + c_ref[0] * z_ref[...]
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows",))
+def waxpby(a, x, b, y, c, z, *, block_rows=None):
+    """z' = a*x + b*y + c*z — one pass, reusing z's memory stream."""
+    n = x.shape[0]
+    bs = pick_block_rows(n, block_rows)
+    vec = pl.BlockSpec((bs,), lambda i: (i,))
+    scl = pl.BlockSpec((1,), lambda i: (0,))
+    return pl.pallas_call(
+        _waxpby_kernel,
+        grid=(n // bs,),
+        in_specs=[scl, vec, scl, vec, scl, vec],
+        out_specs=vec,
+        out_shape=jax.ShapeDtypeStruct((n,), x.dtype),
+        interpret=True,
+    )(a, x, b, y, c, z)
+
+
+# --------------------------------------------------------------------------
+# dot: partial scalar product (the local reduction of the paper's ddot;
+# the global MPI_Allreduce happens in the Rust coordinator)
+# --------------------------------------------------------------------------
+
+def _dot_kernel(x_ref, y_ref, o_ref):
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.sum(x_ref[...] * y_ref[...])[None]
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows",))
+def dot(x, y, *, block_rows=None):
+    """Local x·y as a (1,) array; accumulated across grid steps."""
+    n = x.shape[0]
+    bs = pick_block_rows(n, block_rows)
+    return pl.pallas_call(
+        _dot_kernel,
+        grid=(n // bs,),
+        in_specs=[
+            pl.BlockSpec((bs,), lambda i: (i,)),
+            pl.BlockSpec((bs,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((1,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((1,), x.dtype),
+        interpret=True,
+    )(x, y)
+
+
+# --------------------------------------------------------------------------
+# axpby_dot: y' = a*x + b*y ; s = y'·p   (CG-NB Tk 2 fusion)
+# --------------------------------------------------------------------------
+
+def _axpby_dot_kernel(a_ref, x_ref, b_ref, y_ref, p_ref, o_ref, s_ref):
+    yp = a_ref[0] * x_ref[...] + b_ref[0] * y_ref[...]
+    o_ref[...] = yp
+
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        s_ref[...] = jnp.zeros_like(s_ref)
+
+    s_ref[...] += jnp.sum(yp * p_ref[...])[None]
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows",))
+def axpby_dot(a, x, b, y, p, *, block_rows=None):
+    """Fused vector update + partial dot, one memory pass (CG-NB Tk 2)."""
+    n = x.shape[0]
+    bs = pick_block_rows(n, block_rows)
+    vec = pl.BlockSpec((bs,), lambda i: (i,))
+    scl = pl.BlockSpec((1,), lambda i: (0,))
+    return pl.pallas_call(
+        _axpby_dot_kernel,
+        grid=(n // bs,),
+        in_specs=[scl, vec, scl, vec, vec],
+        out_specs=[vec, scl],
+        out_shape=[
+            jax.ShapeDtypeStruct((n,), x.dtype),
+            jax.ShapeDtypeStruct((1,), x.dtype),
+        ],
+        interpret=True,
+    )(a, x, b, y, p)

@@ -1,0 +1,69 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the correctness references: every Pallas kernel in this package
+must match its oracle to float64 tolerance under pytest/hypothesis sweeps
+(python/tests/test_kernel.py). They are also used directly by model.py
+when ``use_pallas=False`` so the AOT pipeline can A/B the two lowerings.
+
+All kernels operate on the ELL sparse layout: a stencil matrix with a
+fixed number of nonzeros per row ``w`` (7 or 27 in the paper) is stored as
+``vals: (n, w)`` and ``cols: (n, w) int32``, with ``cols`` indexing into an
+*extended* vector ``x_ext`` of length ``n + n_halo + 1`` — the trailing
+slot is a zero pad that absorbs fill entries of boundary rows.
+"""
+
+import jax.numpy as jnp
+
+
+def spmv_ref(vals, cols, x_ext):
+    """y[i] = sum_j vals[i, j] * x_ext[cols[i, j]] — ELL SpMV oracle."""
+    return jnp.sum(vals * x_ext[cols], axis=1)
+
+
+def dot_ref(x, y):
+    """Scalar product reduced to a (1,)-shaped array (matches kernel ABI)."""
+    return jnp.sum(x * y).reshape((1,))
+
+
+def axpby_ref(a, x, b, y):
+    """y' = a*x + b*y (paper's daxpby)."""
+    return a * x + b * y
+
+
+def waxpby_ref(a, x, b, y, c, z):
+    """z' = a*x + b*y + c*z — the paper's ad-hoc memory-reusing kernel
+    (Section 3.1) that optimises the extra vector update of CG-NB."""
+    return a * x + b * y + c * z
+
+
+def axpby_dot_ref(a, x, b, y, p):
+    """Fused update-and-reduce used by CG-NB Tk 2: y' = a*x + b*y followed
+    by the partial dot y'·p, returned together to save one memory pass."""
+    yp = a * x + b * y
+    return yp, jnp.sum(yp * p).reshape((1,))
+
+
+def jacobi_ref(vals, cols, diag, b, x_ext):
+    """One Jacobi sweep: x' = (b - (A·x - D·x)) / D, plus the local
+    residual partial ||b - A·x||² needed for the convergence check."""
+    ax = spmv_ref(vals, cols, x_ext)
+    n = b.shape[0]
+    x_own = x_ext[:n]
+    x_new = (b - (ax - diag * x_own)) / diag
+    r = b - ax
+    return x_new, jnp.sum(r * r).reshape((1,))
+
+
+def gs_color_sweep_ref(vals, cols, diag, b, x_ext, mask):
+    """Coloured Gauss-Seidel half-sweep: update only rows where mask==1
+    (red or black set), reading the *current* x for all neighbours. Two
+    consecutive calls (red then black) form one bicoloured GS sweep.
+    Also returns the masked pre-update residual partial (the paper's rTL
+    reduction, Code 4)."""
+    ax = spmv_ref(vals, cols, x_ext)
+    n = b.shape[0]
+    x_own = x_ext[:n]
+    r = b - ax
+    x_upd = x_own + r / diag
+    res = jnp.sum(jnp.where(mask > 0, r * r, 0.0)).reshape((1,))
+    return jnp.where(mask > 0, x_upd, x_own), res

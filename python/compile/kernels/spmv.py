@@ -1,0 +1,85 @@
+"""L1 Pallas kernel: ELL sparse matrix-vector product (the paper's SpMV).
+
+The paper's hot-spot kernel (Code 3) is a CSR row loop vectorised with
+512-bit SIMD over fixed-width stencil rows. On a structured hexahedral
+mesh every row has exactly ``w`` entries (7- or 27-point stencil), so the
+natural TPU adaptation is an ELL layout: dense ``(n, w)`` value/column
+planes that tile cleanly into VMEM blocks of ``(block_rows, w)`` — the
+BlockSpec below plays the role the paper's ``split()`` subroutine plays
+for SIMD alignment (Section 3.3, Code 3).
+
+The gathered source vector ``x_ext`` (own rows + received halo + one zero
+pad slot) is mapped whole into every grid step: SpMV's irregular access
+pattern (the paper's "multidata dependency" on ``r``) means each row block
+may read any part of it. For the paper's 1-D (z) decomposition the reach
+is bounded by one xy-plane, which a production TPU kernel would exploit
+with a sliding window; keeping the full vector resident is the honest
+equivalent for the grid sizes AOT-compiled here and keeps the kernel
+correct for any permutation of rows.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, so Pallas runs through the interpreter and lowers to plain
+HLO (see DESIGN.md §5 for the VMEM/roofline estimate on real hardware).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+DEFAULT_BLOCK_ROWS = 1024
+
+
+def _spmv_kernel(vals_ref, cols_ref, x_ref, o_ref):
+    """One (block_rows, w) tile: gather + row reduction."""
+    v = vals_ref[...]
+    c = cols_ref[...]
+    x = x_ref[...]
+    # Gather is (block_rows, w); the row reduction maps onto the VPU's
+    # lane-wise multiply + cross-lane add (w is 7 or 27, unrolled).
+    o_ref[...] = jnp.sum(v * x[c], axis=1)
+
+
+def pick_block_rows(n, requested=None):
+    """Largest divisor of n that is <= requested block size.
+
+    AOT shapes are fixed, so we simply snap the block to a divisor: the
+    paper's ``split()`` does the same alignment dance for SIMD lanes.
+    """
+    target = requested or DEFAULT_BLOCK_ROWS
+    if n <= target:
+        return n
+    for b in range(min(target, n), 0, -1):
+        if n % b == 0:
+            return b
+    return n
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows",))
+def spmv(vals, cols, x_ext, *, block_rows=None):
+    """ELL SpMV: y[i] = sum_j vals[i,j] * x_ext[cols[i,j]].
+
+    Args:
+      vals:  (n, w) float — stencil coefficients (fill rows padded with 0).
+      cols:  (n, w) int32 — indices into x_ext; fill entries point at the
+             trailing zero pad slot of x_ext.
+      x_ext: (n + n_halo + 1,) float — own + halo + zero pad.
+      block_rows: VMEM tile height; snapped to a divisor of n.
+    """
+    n, w = vals.shape
+    bs = pick_block_rows(n, block_rows)
+    grid = (n // bs,)
+    return pl.pallas_call(
+        _spmv_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bs, w), lambda i: (i, 0)),
+            pl.BlockSpec((bs, w), lambda i: (i, 0)),
+            pl.BlockSpec(x_ext.shape, lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bs,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), vals.dtype),
+        interpret=True,
+    )(vals, cols, x_ext)

@@ -1,0 +1,229 @@
+"""L2: solver iteration steps as JAX compute graphs (build-time only).
+
+Each public ``*_step``/``*_tk*`` function below is one *segment* of a
+solver iteration between two communication points (halo exchange or
+allreduce). The Rust coordinator (L3) owns the loop, the MPI-level data
+movement and the convergence logic; it invokes these segments through the
+AOT-compiled HLO artifacts produced by aot.py. The segmentation follows
+the task decomposition of the paper's Algorithms 1-2 (the ``Tk`` comments)
+so that one artifact corresponds to one (fused) task body.
+
+Everything is float64 (the paper uses double precision throughout) and
+scalars travel as (1,)-shaped arrays so the artifacts are reusable across
+iterations without recompilation.
+
+Set ``use_pallas=False`` to route through the pure-jnp oracles instead of
+the Pallas kernels — the A/B used by python/tests/test_model.py to verify
+both lowerings produce identical HLO-level numerics.
+"""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp  # noqa: E402
+
+from .kernels import fused, ref  # noqa: E402
+from .kernels.spmv import spmv as _pallas_spmv  # noqa: E402
+
+_USE_PALLAS = True
+
+
+def _spmv(vals, cols, x_ext):
+    if _USE_PALLAS:
+        return _pallas_spmv(vals, cols, x_ext)
+    return ref.spmv_ref(vals, cols, x_ext)
+
+
+def _dot(x, y):
+    if _USE_PALLAS:
+        return fused.dot(x, y)
+    return ref.dot_ref(x, y)
+
+
+def _axpby(a, x, b, y):
+    if _USE_PALLAS:
+        return fused.axpby(a, x, b, y)
+    return ref.axpby_ref(a, x, b, y)
+
+
+def _waxpby(a, x, b, y, c, z):
+    if _USE_PALLAS:
+        return fused.waxpby(a, x, b, y, c, z)
+    return ref.waxpby_ref(a, x, b, y, c, z)
+
+
+def _axpby_dot(a, x, b, y, p):
+    if _USE_PALLAS:
+        return fused.axpby_dot(a, x, b, y, p)
+    return ref.axpby_dot_ref(a, x, b, y, p)
+
+
+def _one():
+    return jnp.ones((1,), jnp.float64)
+
+
+# ---------------------------------------------------------------------------
+# Generic kernels (exported 1:1 so Rust can compose arbitrary methods)
+# ---------------------------------------------------------------------------
+
+def spmv(vals, cols, x_ext):
+    """y = A·x (ELL)."""
+    return (_spmv(vals, cols, x_ext),)
+
+
+def dot(x, y):
+    """Local partial of x·y (global allreduce happens in Rust)."""
+    return (_dot(x, y),)
+
+
+def axpby(a, x, b, y):
+    """y' = a·x + b·y."""
+    return (_axpby(a, x, b, y),)
+
+
+def waxpby(a, x, b, y, c, z):
+    """z' = a·x + b·y + c·z (paper §3.1 ad-hoc kernel)."""
+    return (_waxpby(a, x, b, y, c, z),)
+
+
+def spmv_dot(vals, cols, x_ext, wvec):
+    """y = A·x ; s = y·w. Classic CG line ``alpha_d = (A·p)·p`` (w = p's
+    own part) and BiCGStab line 3 ``alpha_d = (A·p)·r'`` (w = r')."""
+    y = _spmv(vals, cols, x_ext)
+    return y, _dot(y, wvec)
+
+
+# ---------------------------------------------------------------------------
+# Classic CG segments
+# ---------------------------------------------------------------------------
+
+def cg_update(x, r, p, ap, alpha):
+    """x' = x + α·p ; r' = r − α·Ap ; rr = r'·r'."""
+    xn = _axpby(alpha, p, _one(), x)
+    rn = _axpby(-alpha, ap, _one(), r)
+    rr = _dot(rn, rn)
+    return xn, rn, rr
+
+
+def cg_pupdate(r, p, beta):
+    """p' = r + β·p."""
+    return (_axpby(_one(), r, beta, p),)
+
+
+# ---------------------------------------------------------------------------
+# CG-NB segments (Algorithm 1 task bodies)
+# ---------------------------------------------------------------------------
+
+def cg_nb_tk0(r, ap, alpha):
+    """Tk 0: r' = r − α·Ap ; αn = r'·r' (line 4-5 of Algorithm 1)."""
+    rn = _axpby(-alpha, ap, _one(), r)
+    return rn, _dot(rn, rn)
+
+
+def cg_nb_tk12(vals, cols, r_ext, p, ap, beta):
+    """Tk 1 & 2 (Code 1): Ar = A·r ; Ap' = Ar + β·Ap ; p' = r + β·p ;
+    αd = Ap'·p'. The SpMV on r overlaps the αn allreduce in L3."""
+    n = p.shape[0]
+    ar = _spmv(vals, cols, r_ext)
+    pn = _axpby(_one(), r_ext[:n], beta, p)
+    apn, ad = _axpby_dot(_one(), ar, beta, ap, pn)
+    return ar, apn, pn, ad
+
+
+def cg_nb_tk3(x, p, r, coeff):
+    """Tk 3: x' = x + coeff·(p − r) with coeff = αn,j−1²/(αd,j−1·αn,j)
+    (line 9 of Algorithm 1; since p_j − r_j = β_j·p_{j−1} this equals the
+    classic x' = x + α_{j−1}·p_{j−1}). Single pass via the ad-hoc waxpby
+    kernel — the 3r extra touched elements the paper accounts for."""
+    return (_waxpby(coeff, p, -coeff, r, _one(), x),)
+
+
+# ---------------------------------------------------------------------------
+# BiCGStab segments (Algorithm 2 task bodies; also serve the classic method)
+# ---------------------------------------------------------------------------
+
+def bicg_omega(vals, cols, s_ext):
+    """Tk 2: As = A·s ; num = As·s ; den = As·As (line 5 numerator and
+    denominator, overlappable with the x_{j+1/2} update)."""
+    n_ext = s_ext.shape[0]
+    asv = _spmv(vals, cols, s_ext)
+    n = asv.shape[0]
+    del n_ext
+    num = _dot(asv, s_ext[:n])
+    den = _dot(asv, asv)
+    return asv, num, den
+
+
+def bicg_tk4(xh, s, asv, rprime, omega):
+    """Tk 4 (lines 8-11): x1 = x_{1/2} + ω·s ; r1 = s − ω·As ;
+    αn = r1·r' ; β = r1·r1."""
+    x1 = _axpby(omega, s, _one(), xh)
+    r1 = _axpby(-omega, asv, _one(), s)
+    an = _dot(r1, rprime)
+    bt = _dot(r1, r1)
+    return x1, r1, an, bt
+
+
+# ---------------------------------------------------------------------------
+# Jacobi / Gauss-Seidel segments
+# ---------------------------------------------------------------------------
+
+def jacobi_step(vals, cols, diag, b, x_ext):
+    """One Jacobi sweep + local residual partial ||b − A·x||²."""
+    ax = _spmv(vals, cols, x_ext)
+    n = b.shape[0]
+    x_own = x_ext[:n]
+    xn = (b - (ax - diag * x_own)) / diag
+    r = b - ax
+    return xn, _dot(r, r)
+
+
+def gs_color_sweep(vals, cols, diag, b, x_ext, mask):
+    """Red-black GS half-sweep: rows with mask>0 updated Jacobi-style from
+    the current x (the bicoloured task strategy of §3.4). Returns the new
+    own part plus the masked pre-update residual partial (rTL, Code 4)."""
+    ax = _spmv(vals, cols, x_ext)
+    n = b.shape[0]
+    x_own = x_ext[:n]
+    r = b - ax
+    x_upd = x_own + r / diag
+    res = _dot(jnp.where(mask > 0.0, r, 0.0), r)
+    return jnp.where(mask > 0.0, x_upd, x_own), res
+
+
+# ---------------------------------------------------------------------------
+# AOT entry-point registry: name -> (fn, abstract-arg builder)
+# ---------------------------------------------------------------------------
+
+def _f64(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float64)
+
+
+def _i32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def entry_specs(n, w, n_ext):
+    """Abstract argument shapes for every AOT entry point.
+
+    n: local (own) rows; w: stencil width (7 or 27); n_ext: n + halo + 1.
+    """
+    mat = [_f64(n, w), _i32(n, w)]
+    v, s, xe = _f64(n), _f64(1), _f64(n_ext)
+    return {
+        "spmv": (spmv, mat + [xe]),
+        "dot": (dot, [v, v]),
+        "axpby": (axpby, [s, v, s, v]),
+        "waxpby": (waxpby, [s, v, s, v, s, v]),
+        "spmv_dot": (spmv_dot, mat + [xe, v]),
+        "cg_update": (cg_update, [v, v, v, v, s]),
+        "cg_pupdate": (cg_pupdate, [v, v, s]),
+        "cg_nb_tk0": (cg_nb_tk0, [v, v, s]),
+        "cg_nb_tk12": (cg_nb_tk12, mat + [xe, v, v, s]),
+        "cg_nb_tk3": (cg_nb_tk3, [v, v, v, s]),
+        "bicg_omega": (bicg_omega, mat + [xe]),
+        "bicg_tk4": (bicg_tk4, [v, v, v, v, s]),
+        "jacobi_step": (jacobi_step, mat + [v, v, xe]),
+        "gs_color_sweep": (gs_color_sweep, mat + [v, v, xe, v]),
+    }

@@ -1,0 +1,57 @@
+"""Tiny HPCG-style stencil system generator for the python tests.
+
+Mirror of rust/src/sparse/generator.rs (the authoritative implementation):
+a 3-D structured hexahedral mesh with a 7- or 27-point centred stencil,
+constant diagonal ``diag`` (HPCCG convention: 27.0 for both stencils),
+off-diagonals -1, and b := A·1 so the exact solution is x* = 1 — the
+setup of the paper's §4.1 (HPCG benchmark system).
+"""
+
+import numpy as np
+
+
+def stencil_offsets(w):
+    if w == 7:
+        return [(0, 0, 0), (-1, 0, 0), (1, 0, 0), (0, -1, 0), (0, 1, 0),
+                (0, 0, -1), (0, 0, 1)]
+    if w == 27:
+        offs = [(dx, dy, dz) for dz in (-1, 0, 1) for dy in (-1, 0, 1)
+                for dx in (-1, 0, 1)]
+        offs.remove((0, 0, 0))
+        return [(0, 0, 0)] + offs
+    raise ValueError(w)
+
+
+def build_ell(nx, ny, nz, w, diag=None):
+    """Return (vals, cols, diag_vec, b, n). cols index into x_ext of length
+    n+1 (no halo in the single-rank python tests; last slot is the pad)."""
+    n = nx * ny * nz
+    diag = float(diag if diag is not None else 27.0)
+    offs = stencil_offsets(w)
+    vals = np.zeros((n, w))
+    cols = np.full((n, w), n, np.int32)  # pad slot
+    for k in range(nz):
+        for j in range(ny):
+            for i in range(nx):
+                row = (k * ny + j) * nx + i
+                for e, (dx, dy, dz) in enumerate(offs):
+                    x, y, z = i + dx, j + dy, k + dz
+                    if 0 <= x < nx and 0 <= y < ny and 0 <= z < nz:
+                        col = (z * ny + y) * nx + x
+                        vals[row, e] = diag if e == 0 else -1.0
+                        cols[row, e] = col
+    diag_vec = vals[:, 0].copy()
+    x_ones = np.ones(n + 1)
+    x_ones[-1] = 0.0
+    b = np.sum(vals * x_ones[cols], axis=1)
+    return vals, cols, diag_vec, b, n
+
+
+def dense_from_ell(vals, cols, n):
+    a = np.zeros((n, n))
+    for i in range(vals.shape[0]):
+        for j in range(vals.shape[1]):
+            c = int(cols[i, j])
+            if c < n:
+                a[i, c] += vals[i, j]
+    return a

@@ -1,0 +1,239 @@
+"""L2 correctness: solver segments compose into converging methods.
+
+Two layers of checks:
+ 1. Pallas path vs oracle path (model._USE_PALLAS A/B) for every entry.
+ 2. Full algorithms driven exactly the way the Rust coordinator drives the
+    artifacts (same segment boundaries, scalars as (1,) arrays) converge
+    on a real HPCG-style stencil system to the numpy direct solution.
+"""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from numpy.testing import assert_allclose
+
+from compile import model
+from .stencil import build_ell, dense_from_ell
+
+GRID = (4, 4, 6)
+
+
+def _sys(w, diag=None):
+    vals, cols, diag_v, b, n = build_ell(*GRID, w, diag)
+    return (
+        jnp.asarray(vals),
+        jnp.asarray(cols),
+        jnp.asarray(diag_v),
+        jnp.asarray(b),
+        n,
+    )
+
+
+def _ext(v, n):
+    """Own part -> extended vector with the zero pad slot (no halo here)."""
+    return jnp.concatenate([v, jnp.zeros((1,), v.dtype)])
+
+
+def _s(x):
+    return jnp.asarray([float(x)])
+
+
+@pytest.fixture(params=[7, 27])
+def system(request):
+    return request.param, _sys(request.param)
+
+
+# ---------------------------------------------------------------------------
+# Pallas vs oracle A/B on every entry
+# ---------------------------------------------------------------------------
+
+def test_entries_pallas_vs_ref(system, monkeypatch):
+    w, (vals, cols, diag, b, n) = system
+    rng = np.random.default_rng(5)
+    v1 = jnp.asarray(rng.standard_normal(n))
+    v2 = jnp.asarray(rng.standard_normal(n))
+    xe = _ext(jnp.asarray(rng.standard_normal(n)), n)
+    mask = jnp.asarray((np.arange(n) % 2 == 0).astype(np.float64))
+    args = {
+        "spmv": (vals, cols, xe),
+        "dot": (v1, v2),
+        "axpby": (_s(1.5), v1, _s(-0.5), v2),
+        "waxpby": (_s(1.5), v1, _s(-0.5), v2, _s(2.0), xe[:n]),
+        "spmv_dot": (vals, cols, xe, v1),
+        "cg_update": (v1, v2, xe[:n], v1, _s(0.3)),
+        "cg_pupdate": (v1, v2, _s(0.3)),
+        "cg_nb_tk0": (v1, v2, _s(0.3)),
+        "cg_nb_tk12": (vals, cols, xe, v1, v2, _s(0.3)),
+        "cg_nb_tk3": (v1, v2, xe[:n], _s(0.3)),
+        "bicg_omega": (vals, cols, xe),
+        "bicg_tk4": (v1, v2, xe[:n], v1, _s(0.3)),
+        "jacobi_step": (vals, cols, diag, b, xe),
+        "gs_color_sweep": (vals, cols, diag, b, xe, mask),
+    }
+    specs = model.entry_specs(n, w, n + 1)
+    assert set(args) == set(specs)
+    for name, (fn, _) in specs.items():
+        monkeypatch.setattr(model, "_USE_PALLAS", True)
+        got = fn(*args[name])
+        monkeypatch.setattr(model, "_USE_PALLAS", False)
+        want = fn(*args[name])
+        assert len(got) == len(want), name
+        for g, wv in zip(got, want):
+            assert_allclose(
+                np.asarray(g), np.asarray(wv), rtol=1e-11, atol=1e-11,
+                err_msg=name,
+            )
+
+
+# ---------------------------------------------------------------------------
+# Full algorithms via the segments (driven like the Rust coordinator)
+# ---------------------------------------------------------------------------
+
+def _direct(vals, cols, b, n):
+    a = dense_from_ell(np.asarray(vals), np.asarray(cols), n)
+    return np.linalg.solve(a, np.asarray(b))
+
+
+def test_cg_classic_converges(system):
+    w, (vals, cols, diag, b, n) = system
+    x = jnp.zeros(n)
+    r = b
+    p = r
+    rr = float(model.dot(r, r)[0][0])
+    rr0 = rr
+    for _ in range(200):
+        if np.sqrt(rr / rr0) < 1e-10:
+            break
+        ap, pap = model.spmv_dot(vals, cols, _ext(p, n), p)
+        alpha = rr / float(pap[0])
+        x, r, rr_new = model.cg_update(x, r, p, ap, _s(alpha))
+        rr_new = float(rr_new[0])
+        beta = rr_new / rr
+        (p,) = model.cg_pupdate(r, p, _s(beta))
+        rr = rr_new
+    assert_allclose(np.asarray(x), _direct(vals, cols, b, n), rtol=1e-7, atol=1e-8)
+
+
+def test_cg_nb_converges(system):
+    """Algorithm 1 exactly as segmented for the coordinator."""
+    w, (vals, cols, diag, b, n) = system
+    x = jnp.zeros(n)
+    r = b  # r0 = b - A·x0, x0 = 0
+    p = r
+    ap, apd = model.spmv_dot(vals, cols, _ext(p, n), p)
+    an = float(model.dot(r, r)[0][0])
+    ad = float(apd[0])
+    alpha = an / ad
+    an0 = an
+    for _ in range(300):
+        if np.sqrt(an / an0) < 1e-10:
+            break
+        r, an_new = model.cg_nb_tk0(r, ap, _s(alpha))
+        an_new = float(an_new[0])
+        beta = an_new / an
+        ar, ap, p, ad_new = model.cg_nb_tk12(vals, cols, _ext(r, n), p, ap, _s(beta))
+        ad_new = float(ad_new[0])
+        coeff = an * an / (ad * an_new)  # = alpha_{j-1}/beta_j
+        (x,) = model.cg_nb_tk3(x, p, r, _s(coeff))
+        an, ad = an_new, ad_new
+        alpha = an / ad
+    assert_allclose(np.asarray(x), _direct(vals, cols, b, n), rtol=1e-6, atol=1e-7)
+
+
+def test_bicgstab_b1_converges(system):
+    """Algorithm 2 (BiCGStab-B1) with the restart procedure."""
+    w, (vals, cols, diag, b, n) = system
+    x = jnp.zeros(n)
+    r = b
+    p = r
+    beta = float(model.dot(r, r)[0][0])
+    rprime = r / jnp.sqrt(beta)
+    an = float(model.dot(r, rprime)[0][0])
+    beta0 = beta
+    for _ in range(300):
+        ap, adp = model.spmv_dot(vals, cols, _ext(p, n), rprime)
+        ad = float(adp[0])
+        alpha = an / ad
+        (s,) = model.axpby(_s(-alpha), ap, _s(1.0), r)
+        asv, num, den = model.bicg_omega(vals, cols, _ext(s, n))
+        omega = float(num[0]) / float(den[0])
+        (xh,) = model.axpby(_s(alpha), p, _s(1.0), x)
+        if np.sqrt(beta / beta0) < 1e-11:
+            # line 18: x = x_l + omega_l * s_l
+            (x,) = model.axpby(_s(omega), s, _s(1.0), xh)
+            break
+        x, r, an_new, beta_new = model.bicg_tk4(xh, s, asv, rprime, _s(omega))
+        an_new, beta = float(an_new[0]), float(beta_new[0])
+        (ph,) = model.axpby(_s(-omega), ap, _s(1.0), p)
+        if np.sqrt(abs(an_new)) < 1e-5 * np.sqrt(beta0):
+            # restart (lines 13-15)
+            p = r
+            rprime = r / jnp.sqrt(beta)
+            an = float(model.dot(r, rprime)[0][0])
+        else:
+            coeff = an_new / (ad * omega)  # line 17
+            (p,) = model.axpby(_s(1.0), r, _s(coeff), ph)
+            an = an_new
+    assert_allclose(np.asarray(x), _direct(vals, cols, b, n), rtol=1e-6, atol=1e-7)
+
+
+def test_jacobi_converges():
+    # Jacobi needs strict diagonal dominance; diag = w gives row-sum margin
+    # 1 on boundary rows only, so use a modest grid and many iterations.
+    vals, cols, diag, b, n = _sys(7)
+    x = jnp.zeros(n)
+    for _ in range(800):
+        x_new, res = model.jacobi_step(vals, cols, diag, b, _ext(x, n))
+        x = x_new
+        if float(res[0]) < 1e-22:
+            break
+    assert_allclose(np.asarray(x), np.ones(n), rtol=1e-8, atol=1e-8)
+
+
+def test_gs_red_black_converges():
+    vals, cols, diag, b, n = _sys(7)
+    nx, ny, nz = GRID
+    idx = np.arange(n)
+    i = idx % nx
+    j = (idx // nx) % ny
+    k = idx // (nx * ny)
+    red = jnp.asarray(((i + j + k) % 2 == 0).astype(np.float64))
+    black = 1.0 - red
+    x = jnp.zeros(n)
+    for _ in range(400):
+        x, _ = model.gs_color_sweep(vals, cols, diag, b, _ext(x, n), red)
+        x, _ = model.gs_color_sweep(vals, cols, diag, b, _ext(x, n), black)
+        # symmetric: backward = black then red
+        x, _ = model.gs_color_sweep(vals, cols, diag, b, _ext(x, n), black)
+        x, _ = model.gs_color_sweep(vals, cols, diag, b, _ext(x, n), red)
+        r = np.asarray(b) - np.asarray(model.spmv(vals, cols, _ext(x, n))[0])
+        if np.dot(r, r) < 1e-24:
+            break
+    assert_allclose(np.asarray(x), np.ones(n), rtol=1e-9, atol=1e-9)
+
+
+def test_gs_faster_than_jacobi():
+    """GS corrects with current-iteration values -> fewer sweeps (paper §1)."""
+    vals, cols, diag, b, n = _sys(7)
+
+    def resid(x):
+        r = np.asarray(b) - np.asarray(model.spmv(vals, cols, _ext(x, n))[0])
+        return float(np.dot(r, r))
+
+    nx, ny, nz = GRID
+    idx = np.arange(n)
+    red = jnp.asarray((((idx % nx) + ((idx // nx) % ny) + idx // (nx * ny)) % 2 == 0)
+                      .astype(np.float64))
+    black = 1.0 - red
+
+    xj = jnp.zeros(n)
+    xg = jnp.zeros(n)
+    for _ in range(20):
+        xj, _ = model.jacobi_step(vals, cols, diag, b, _ext(xj, n))
+        xg, _ = model.gs_color_sweep(vals, cols, diag, b, _ext(xg, n), red)
+        xg, _ = model.gs_color_sweep(vals, cols, diag, b, _ext(xg, n), black)
+    assert resid(xg) < resid(xj)

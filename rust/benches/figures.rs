@@ -1,0 +1,59 @@
+//! End-to-end figure benchmarks: one bench per paper table/figure. Each
+//! regenerates its experiment (reduced repetitions) and prints the same
+//! rows/series the paper reports, so `cargo bench` doubles as a compact
+//! reproduction report.
+//!
+//!     cargo bench --bench figures
+
+use hlam::harness::{self, HarnessOpts};
+use hlam::util::bench::bench;
+
+fn main() {
+    let out = std::env::temp_dir().join("hlam_bench_figures");
+    let opts = HarnessOpts {
+        reps: 5,
+        quick: true,
+        ..Default::default()
+    };
+    println!("== figure regeneration benchmarks (quick mode, 5 reps) ==\n");
+
+    let r = bench("table §4.1 iteration counts", || {
+        harness::iteration_table(&out, true).len()
+    });
+    println!("{}", r.report());
+
+    let r = bench("fig 1 traces", || harness::fig1(&out).len());
+    println!("{}", r.report());
+
+    let r = bench("fig 2 boxes", || harness::fig2(&out, &opts).len());
+    println!("{}", r.report());
+
+    let r = bench("fig 3 weak KSM", || harness::fig3(&out, &opts).len());
+    println!("{}", r.report());
+
+    let r = bench("fig 4 weak Jacobi/GS", || harness::fig4(&out, &opts).len());
+    println!("{}", r.report());
+
+    let r = bench("fig 5 strong 7-pt", || harness::fig56(5, &out, &opts).len());
+    println!("{}", r.report());
+
+    let r = bench("fig 6 strong 27-pt", || harness::fig56(6, &out, &opts).len());
+    println!("{}", r.report());
+
+    let r = bench("§4.2 granularity sweep", || {
+        harness::granularity_sweep(&out, &opts).len()
+    });
+    println!("{}", r.report());
+
+    let r = bench("§4.2 latency table", || harness::latency_table(&out).len());
+    println!("{}", r.report());
+
+    let r = bench("§4.3 GS iteration counts", || {
+        harness::gs_iteration_table(&out, true).len()
+    });
+    println!("{}", r.report());
+
+    println!("\n== the reproduction report itself ==\n");
+    println!("{}", harness::headline(&out, &opts));
+    println!("{}", harness::iteration_table(&out, true));
+}

@@ -1,0 +1,106 @@
+//! L3 kernel micro-benchmarks: the native Rust twins of the Pallas
+//! kernels, plus the XLA-executed artifacts for dispatch-cost comparison.
+//! This is the profiling baseline of the §Perf pass (EXPERIMENTS.md).
+//!
+//!     cargo bench --bench kernels
+
+use hlam::kernels;
+use hlam::mesh::Grid3;
+use hlam::sparse::{CsrMatrix, LocalSystem, StencilKind};
+use hlam::util::bench::{bench, gbps};
+use hlam::util::Rng;
+
+fn main() {
+    println!("== kernel micro-benchmarks (native Rust) ==\n");
+    for kind in [StencilKind::P7, StencilKind::P27] {
+        let sys = LocalSystem::build(Grid3::new(64, 64, 32), kind, 0, 1);
+        let n = sys.n();
+        let w = kind.width();
+        let mut rng = Rng::new(7);
+        let mut x = sys.new_ext();
+        for v in x.iter_mut().take(n) {
+            *v = rng.normal();
+        }
+        let mut y = vec![0.0; n];
+        let p: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let csr = CsrMatrix::from_ell(&sys.a);
+
+        // SpMV: touches vals (8B) + cols (4B) per entry + x gather + y write
+        let spmv_bytes = (n * w) as f64 * 12.0 + (n as f64) * 16.0;
+        let r = bench(&format!("spmv_ell n={n} w={w}"), || {
+            kernels::spmv_ell(&sys.a, &x, &mut y, 0, n);
+            y[0]
+        });
+        println!("{}  {:.2} GB/s", r.report(), gbps(spmv_bytes, r.median_ns));
+
+        let r = bench(&format!("spmv_csr n={n} w={w}"), || {
+            kernels::spmv_csr(&csr, &x, &mut y, 0, n);
+            y[0]
+        });
+        println!("{}  {:.2} GB/s", r.report(), gbps(spmv_bytes, r.median_ns));
+
+        let r = bench(&format!("dot n={n}"), || kernels::dot(&x, &p, 0, n));
+        println!("{}  {:.2} GB/s", r.report(), gbps(16.0 * n as f64, r.median_ns));
+
+        let mut z = p.clone();
+        let r = bench(&format!("axpby n={n}"), || {
+            kernels::axpby(1.1, &x, 0.9, &mut z, 0, n);
+            z[0]
+        });
+        println!("{}  {:.2} GB/s", r.report(), gbps(24.0 * n as f64, r.median_ns));
+
+        let mut zz = p.clone();
+        let r = bench(&format!("waxpby n={n}"), || {
+            kernels::waxpby(1.1, &x, 0.9, &p, 0.5, &mut zz, 0, n);
+            zz[0]
+        });
+        println!("{}  {:.2} GB/s", r.report(), gbps(32.0 * n as f64, r.median_ns));
+
+        let mut zf = p.clone();
+        let r = bench(&format!("axpby_dot (fused, Tk2) n={n}"), || {
+            kernels::axpby_dot(1.1, &x, 0.9, &mut zf, &p, 0, n)
+        });
+        println!("{}  {:.2} GB/s", r.report(), gbps(32.0 * n as f64, r.median_ns));
+
+        let mut xg = x.clone();
+        let r = bench(&format!("gs_sweep fwd n={n} w={w}"), || {
+            kernels::gs_sweep(&sys.a, &sys.b, &mut xg, 0..n)
+        });
+        println!("{}  {:.2} GB/s", r.report(), gbps(spmv_bytes, r.median_ns));
+
+        let mut xj = x.clone();
+        let mut xn = vec![0.0; n];
+        let r = bench(&format!("jacobi_sweep n={n} w={w}"), || {
+            kernels::jacobi_sweep(&sys.a, &sys.b, &xj, &mut xn, 0, n)
+        });
+        let _ = &mut xj;
+        println!("{}  {:.2} GB/s", r.report(), gbps(spmv_bytes, r.median_ns));
+        println!();
+    }
+
+    // XLA dispatch cost comparison (artifact-backed kernels)
+    if let Ok(rt) = hlam::runtime::Runtime::load("artifacts") {
+        use hlam::solvers::Compute;
+        println!("== XLA artifact execution (PJRT dispatch + kernel) ==\n");
+        let rt = std::rc::Rc::new(rt);
+        let sys = LocalSystem::build(Grid3::new(8, 8, 8), StencilKind::P7, 0, 1);
+        let n = sys.n();
+        let mut xc =
+            hlam::runtime::XlaCompute::new(rt, n, 7, sys.part.n_ext()).expect("test artifacts");
+        let mut rng = Rng::new(9);
+        let mut x = sys.new_ext();
+        for v in x.iter_mut().take(n) {
+            *v = rng.normal();
+        }
+        let mut y = vec![0.0; n];
+        let r = bench(&format!("xla spmv n={n} w=7"), || {
+            xc.spmv(&sys.a, &x, &mut y);
+            y[0]
+        });
+        println!("{}", r.report());
+        let r = bench(&format!("xla dot n={n}"), || xc.dot(&x[..n], &y));
+        println!("{}", r.report());
+    } else {
+        println!("(artifacts missing — XLA benches skipped; run `make artifacts`)");
+    }
+}

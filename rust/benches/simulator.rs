@@ -1,0 +1,67 @@
+//! Simulator/runtime throughput benchmarks: the discrete-event engine,
+//! the task-graph scheduler and the simulated-MPI numerics substrate —
+//! the components whose cost bounds how fast the figure harness runs.
+//!
+//!     cargo bench --bench simulator
+
+use hlam::harness::{weak_config, HarnessOpts};
+use hlam::mesh::Grid3;
+use hlam::simulator::{simulate_run, ExecModel};
+use hlam::solvers::{Method, Native, Problem, SolveOpts};
+use hlam::sparse::StencilKind;
+use hlam::taskrt::{list_schedule, Region, TaskGraph, TaskSpec};
+use hlam::util::bench::bench;
+
+fn main() {
+    println!("== simulator / runtime benchmarks ==\n");
+    let o = HarnessOpts::default();
+
+    // discrete-event engine at the largest figure configuration
+    for (label, model, method) in [
+        ("DES weak-64 MPI-only cg", ExecModel::MpiOnly, "cg"),
+        ("DES weak-64 OSS_t cg-nb", ExecModel::MpiOssTask, "cg-nb"),
+        ("DES weak-64 MPI-only jacobi-27pt", ExecModel::MpiOnly, "jacobi"),
+    ] {
+        let kind = if method == "jacobi" {
+            StencilKind::P27
+        } else {
+            StencilKind::P7
+        };
+        let cfg = weak_config(model, method, kind, 64, &o);
+        let r = bench(label, || simulate_run(&cfg).total_time);
+        println!("{}", r.report());
+    }
+    println!();
+
+    // task-graph construction + scheduling (Fig 1 path)
+    let r = bench("taskrt build+schedule 800 tasks / 24 cores", || {
+        let mut g = TaskGraph::new();
+        for i in 0..800u64 {
+            g.submit(
+                TaskSpec::compute(format!("t{i}"), 1e-5)
+                    .inout(Region::new(0, i * 64, (i + 1) * 64))
+                    .reduction(1),
+            );
+        }
+        list_schedule(&g, 24).makespan
+    });
+    println!("{}", r.report());
+
+    // full real-numerics distributed solve (simmpi + kernels)
+    let r = bench("real numerics: cg 16x16x32 / 4 ranks", || {
+        let mut pb = Problem::build(Grid3::new(16, 16, 32), StencilKind::P7, 4);
+        pb.solve(Method::parse("cg").unwrap(), &SolveOpts::default(), &mut Native)
+            .iterations
+    });
+    println!("{}", r.report());
+
+    let r = bench("real numerics: gs-relaxed 16x16x32 / 4 ranks", || {
+        let mut opts = SolveOpts::default();
+        opts.ntasks = 16;
+        opts.task_order_seed = 3;
+        let mut pb = Problem::build(Grid3::new(16, 16, 32), StencilKind::P7, 4);
+        pb.solve(Method::parse("gs-relaxed").unwrap(), &opts, &mut Native)
+            .iterations
+    });
+    println!("{}", r.report());
+}

@@ -1,0 +1,552 @@
+//! Native Rust compute kernels — the L3-side twins of the Pallas kernels.
+//!
+//! Every kernel operates on a row range `[r0, r1)` so the task runtime can
+//! execute one *subdomain* (the paper's HDOT tasks, Code 1) at a time and
+//! reductions can accumulate in genuine task-completion order — which is
+//! how the paper's floating-point-reordering effects (§3.3) are
+//! reproduced rather than faked.
+//!
+//! The Rust path is used (a) at large scale where re-dispatching PJRT per
+//! task block would dominate, and (b) as an independent cross-check of the
+//! XLA artifacts (tests/integration_xla.rs asserts both agree).
+
+use crate::sparse::{CsrMatrix, EllMatrix};
+
+/// y[r0..r1] = A[r0..r1, :] · x_ext  (ELL layout).
+///
+/// §Perf: the row loop is monomorphised per stencil width (7/27 are the
+/// only widths the paper uses) so the gather+FMA chain fully unrolls —
+/// the Rust twin of the paper's `#pragma omp simd simdlen` annotation
+/// (Code 3). Generic fallback for other widths.
+pub fn spmv_ell(a: &EllMatrix, x_ext: &[f64], y: &mut [f64], r0: usize, r1: usize) {
+    debug_assert_eq!(x_ext.len(), a.n_ext);
+    match a.w {
+        7 => spmv_ell_w::<7>(a, x_ext, y, r0, r1),
+        27 => spmv_ell_w::<27>(a, x_ext, y, r0, r1),
+        _ => spmv_ell_generic(a, x_ext, y, r0, r1),
+    }
+}
+
+#[inline(always)]
+fn spmv_ell_w<const W: usize>(a: &EllMatrix, x_ext: &[f64], y: &mut [f64], r0: usize, r1: usize) {
+    let vals = &a.vals[r0 * W..r1 * W];
+    let cols = &a.cols[r0 * W..r1 * W];
+    for (i, (vrow, crow)) in vals
+        .chunks_exact(W)
+        .zip(cols.chunks_exact(W))
+        .enumerate()
+    {
+        let mut acc = 0.0;
+        for j in 0..W {
+            // cols of fill entries point at the zero pad slot, so no branch
+            acc += vrow[j] * x_ext[crow[j] as usize];
+        }
+        y[r0 + i] = acc;
+    }
+}
+
+fn spmv_ell_generic(a: &EllMatrix, x_ext: &[f64], y: &mut [f64], r0: usize, r1: usize) {
+    let w = a.w;
+    for i in r0..r1 {
+        let vals = &a.vals[i * w..(i + 1) * w];
+        let cols = &a.cols[i * w..(i + 1) * w];
+        let mut acc = 0.0;
+        for j in 0..w {
+            acc += vals[j] * x_ext[cols[j] as usize];
+        }
+        y[i] = acc;
+    }
+}
+
+/// y[r0..r1] = A[r0..r1, :] · x_ext  (CSR layout, HPCCG-faithful loop).
+pub fn spmv_csr(a: &CsrMatrix, x_ext: &[f64], y: &mut [f64], r0: usize, r1: usize) {
+    for i in r0..r1 {
+        let (cols, vals) = a.row(i);
+        let mut acc = 0.0;
+        for (c, v) in cols.iter().zip(vals) {
+            acc += v * x_ext[*c as usize];
+        }
+        y[i] = acc;
+    }
+}
+
+/// Partial dot product over [r0, r1).
+///
+/// §Perf: four independent accumulators break the dependent FP-add chain.
+/// The merge order is fixed, so results stay deterministic for a given
+/// block decomposition — the paper's task-order reduction effects happen
+/// one level up, across blocks.
+pub fn dot(x: &[f64], y: &[f64], r0: usize, r1: usize) -> f64 {
+    let xs = &x[r0..r1];
+    let ys = &y[r0..r1];
+    let mut a0 = 0.0f64;
+    let mut a1 = 0.0f64;
+    let mut a2 = 0.0f64;
+    let mut a3 = 0.0f64;
+    let cx = xs.chunks_exact(4);
+    let cy = ys.chunks_exact(4);
+    let (rx, ry) = (cx.remainder(), cy.remainder());
+    for (p, q) in cx.zip(cy) {
+        a0 += p[0] * q[0];
+        a1 += p[1] * q[1];
+        a2 += p[2] * q[2];
+        a3 += p[3] * q[3];
+    }
+    let mut tail = 0.0;
+    for (p, q) in rx.iter().zip(ry) {
+        tail += p * q;
+    }
+    (a0 + a1) + (a2 + a3) + tail
+}
+
+/// y[i] = a*x[i] + b*y[i] over [r0, r1)  (paper's daxpby).
+pub fn axpby(a: f64, x: &[f64], b: f64, y: &mut [f64], r0: usize, r1: usize) {
+    for i in r0..r1 {
+        y[i] = a * x[i] + b * y[i];
+    }
+}
+
+/// z[i] = a*x[i] + b*y[i] + c*z[i] over [r0, r1)  (§3.1 ad-hoc kernel).
+pub fn waxpby(a: f64, x: &[f64], b: f64, y: &[f64], c: f64, z: &mut [f64], r0: usize, r1: usize) {
+    for i in r0..r1 {
+        z[i] = a * x[i] + b * y[i] + c * z[i];
+    }
+}
+
+/// Fused y[i] = a*x[i] + b*y[i]; returns partial y'·p  (CG-NB Tk 2).
+///
+/// §Perf: paired accumulators + slice windows (bounds checks hoisted).
+pub fn axpby_dot(
+    a: f64,
+    x: &[f64],
+    b: f64,
+    y: &mut [f64],
+    p: &[f64],
+    r0: usize,
+    r1: usize,
+) -> f64 {
+    let xs = &x[r0..r1];
+    let ys = &mut y[r0..r1];
+    let ps = &p[r0..r1];
+    let mut a0 = 0.0f64;
+    let mut a1 = 0.0f64;
+    let n = xs.len();
+    let pairs = n / 2 * 2;
+    let mut i = 0;
+    while i < pairs {
+        let v0 = a * xs[i] + b * ys[i];
+        let v1 = a * xs[i + 1] + b * ys[i + 1];
+        ys[i] = v0;
+        ys[i + 1] = v1;
+        a0 += v0 * ps[i];
+        a1 += v1 * ps[i + 1];
+        i += 2;
+    }
+    if pairs < n {
+        let v = a * xs[pairs] + b * ys[pairs];
+        ys[pairs] = v;
+        a0 += v * ps[pairs];
+    }
+    a0 + a1
+}
+
+/// One Jacobi sweep over [r0, r1): x_new = (b - (A·x - D·x)) / D.
+/// Returns the partial squared residual ||b - A·x||² over the range.
+pub fn jacobi_sweep(
+    a: &EllMatrix,
+    b: &[f64],
+    x_ext: &[f64],
+    x_new: &mut [f64],
+    r0: usize,
+    r1: usize,
+) -> f64 {
+    match a.w {
+        7 => jacobi_sweep_w::<7>(a, b, x_ext, x_new, r0, r1),
+        27 => jacobi_sweep_w::<27>(a, b, x_ext, x_new, r0, r1),
+        _ => jacobi_sweep_generic(a, b, x_ext, x_new, r0, r1),
+    }
+}
+
+#[inline(always)]
+fn jacobi_sweep_w<const W: usize>(
+    a: &EllMatrix,
+    b: &[f64],
+    x_ext: &[f64],
+    x_new: &mut [f64],
+    r0: usize,
+    r1: usize,
+) -> f64 {
+    let vals = &a.vals[r0 * W..r1 * W];
+    let cols = &a.cols[r0 * W..r1 * W];
+    let mut res = 0.0;
+    for (i, (vrow, crow)) in vals
+        .chunks_exact(W)
+        .zip(cols.chunks_exact(W))
+        .enumerate()
+    {
+        let row = r0 + i;
+        let mut ax = 0.0;
+        for j in 0..W {
+            ax += vrow[j] * x_ext[crow[j] as usize];
+        }
+        let r = b[row] - ax;
+        res += r * r;
+        x_new[row] = x_ext[row] + r / a.diag[row];
+    }
+    res
+}
+
+fn jacobi_sweep_generic(
+    a: &EllMatrix,
+    b: &[f64],
+    x_ext: &[f64],
+    x_new: &mut [f64],
+    r0: usize,
+    r1: usize,
+) -> f64 {
+    let w = a.w;
+    let mut res = 0.0;
+    for i in r0..r1 {
+        let vals = &a.vals[i * w..(i + 1) * w];
+        let cols = &a.cols[i * w..(i + 1) * w];
+        let mut ax = 0.0;
+        for j in 0..w {
+            ax += vals[j] * x_ext[cols[j] as usize];
+        }
+        let r = b[i] - ax;
+        res += r * r;
+        x_new[i] = x_ext[i] + r / a.diag[i];
+    }
+    res
+}
+
+/// In-place Gauss-Seidel sweep over rows `order` (ascending = forward,
+/// descending = backward), reading the *live* x_ext — the sequential
+/// semantics the relaxed task implementation intentionally races (§3.4).
+/// Returns the partial squared residual measured *before* each update
+/// (HPCCG convention: residual of the incoming iterate).
+pub fn gs_sweep<I: Iterator<Item = usize>>(
+    a: &EllMatrix,
+    b: &[f64],
+    x_ext: &mut [f64],
+    order: I,
+) -> f64 {
+    // §Perf: monomorphised row body per stencil width (unrolled gather);
+    // the sweep itself stays strictly sequential — that *is* Gauss-Seidel.
+    match a.w {
+        7 => gs_sweep_w::<7, _>(a, b, x_ext, order),
+        27 => gs_sweep_w::<27, _>(a, b, x_ext, order),
+        _ => gs_sweep_generic(a, b, x_ext, order),
+    }
+}
+
+#[inline(always)]
+fn gs_sweep_w<const W: usize, I: Iterator<Item = usize>>(
+    a: &EllMatrix,
+    b: &[f64],
+    x_ext: &mut [f64],
+    order: I,
+) -> f64 {
+    let mut res = 0.0;
+    for i in order {
+        let vals = &a.vals[i * W..(i + 1) * W];
+        let cols = &a.cols[i * W..(i + 1) * W];
+        let mut ax = 0.0;
+        for j in 0..W {
+            ax += vals[j] * x_ext[cols[j] as usize];
+        }
+        let r = b[i] - ax;
+        res += r * r;
+        x_ext[i] += r / a.diag[i];
+    }
+    res
+}
+
+fn gs_sweep_generic<I: Iterator<Item = usize>>(
+    a: &EllMatrix,
+    b: &[f64],
+    x_ext: &mut [f64],
+    order: I,
+) -> f64 {
+    let w = a.w;
+    let mut res = 0.0;
+    for i in order {
+        let vals = &a.vals[i * w..(i + 1) * w];
+        let cols = &a.cols[i * w..(i + 1) * w];
+        let mut ax = 0.0;
+        for j in 0..w {
+            ax += vals[j] * x_ext[cols[j] as usize];
+        }
+        let r = b[i] - ax;
+        res += r * r;
+        x_ext[i] += r / a.diag[i];
+    }
+    res
+}
+
+/// Coloured GS half-sweep over [r0, r1): update rows whose mask matches
+/// `colour`, Jacobi-style from the current x (red-black strategy, §3.4).
+pub fn gs_colour_sweep(
+    a: &EllMatrix,
+    b: &[f64],
+    mask: &[bool],
+    colour: bool,
+    x_ext: &mut [f64],
+    r0: usize,
+    r1: usize,
+) -> f64 {
+    let w = a.w;
+    let mut res = 0.0;
+    for i in r0..r1 {
+        if mask[i] != colour {
+            continue;
+        }
+        let vals = &a.vals[i * w..(i + 1) * w];
+        let cols = &a.cols[i * w..(i + 1) * w];
+        let mut ax = 0.0;
+        for j in 0..w {
+            ax += vals[j] * x_ext[cols[j] as usize];
+        }
+        let r = b[i] - ax;
+        res += r * r;
+        x_ext[i] += r / a.diag[i];
+    }
+    res
+}
+
+/// Coloured GS half-sweep with *task-parallel* semantics: rows of this
+/// block `[r0, r1)` read live values for columns inside the block (a task
+/// is sequential) but the pre-sweep snapshot `x_old` for columns in other
+/// blocks (concurrent tasks of the same colour haven't published yet).
+/// This is what makes the bicoloured iteration count depend on task
+/// granularity, as the paper observes in §4.3 ("one can reduce this
+/// number of iterations of the coloured version by simply coarsening the
+/// task granularity").
+#[allow(clippy::too_many_arguments)]
+pub fn gs_colour_sweep_blocked(
+    a: &EllMatrix,
+    b: &[f64],
+    mask: &[bool],
+    colour: bool,
+    x_ext: &mut [f64],
+    x_old: &[f64],
+    r0: usize,
+    r1: usize,
+) -> f64 {
+    let w = a.w;
+    let n = a.n;
+    let mut res = 0.0;
+    for i in r0..r1 {
+        if mask[i] != colour {
+            continue;
+        }
+        let vals = &a.vals[i * w..(i + 1) * w];
+        let cols = &a.cols[i * w..(i + 1) * w];
+        let mut ax = 0.0;
+        for j in 0..w {
+            let c = cols[j] as usize;
+            // own block or halo/pad region: live; other own blocks: snapshot
+            let xv = if (c >= r0 && c < r1) || c >= n {
+                x_ext[c]
+            } else {
+                x_old[c]
+            };
+            ax += vals[j] * xv;
+        }
+        let r = b[i] - ax;
+        res += r * r;
+        x_ext[i] += r / a.diag[i];
+    }
+    res
+}
+
+/// Residual r = b - A·x over the whole local range; returns ||r||² partial.
+pub fn residual(a: &EllMatrix, b: &[f64], x_ext: &[f64], r: &mut [f64]) -> f64 {
+    let mut acc = 0.0;
+    spmv_ell(a, x_ext, r, 0, a.n);
+    for i in 0..a.n {
+        r[i] = b[i] - r[i];
+        acc += r[i] * r[i];
+    }
+    acc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mesh::Grid3;
+    use crate::sparse::{LocalSystem, StencilKind};
+    use crate::util::proptest::forall;
+    use crate::util::Rng;
+
+    fn test_system() -> LocalSystem {
+        LocalSystem::build(Grid3::new(4, 3, 5), StencilKind::P7, 0, 1)
+    }
+
+    #[test]
+    fn spmv_ell_on_ones_gives_b() {
+        let sys = test_system();
+        let mut x = sys.new_ext();
+        for v in x.iter_mut().take(sys.n()) {
+            *v = 1.0;
+        }
+        let mut y = vec![0.0; sys.n()];
+        spmv_ell(&sys.a, &x, &mut y, 0, sys.n());
+        for i in 0..sys.n() {
+            assert!((y[i] - sys.b[i]).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn spmv_csr_matches_ell() {
+        let sys = test_system();
+        let csr = CsrMatrix::from_ell(&sys.a);
+        let mut rng = Rng::new(3);
+        let mut x = sys.new_ext();
+        for v in x.iter_mut().take(sys.n()) {
+            *v = rng.normal();
+        }
+        let (mut y1, mut y2) = (vec![0.0; sys.n()], vec![0.0; sys.n()]);
+        spmv_ell(&sys.a, &x, &mut y1, 0, sys.n());
+        spmv_csr(&csr, &x, &mut y2, 0, sys.n());
+        for i in 0..sys.n() {
+            assert!((y1[i] - y2[i]).abs() < 1e-13);
+        }
+    }
+
+    #[test]
+    fn blocked_spmv_equals_full() {
+        let sys = test_system();
+        let mut rng = Rng::new(5);
+        let mut x = sys.new_ext();
+        for v in x.iter_mut().take(sys.n()) {
+            *v = rng.normal();
+        }
+        let mut whole = vec![0.0; sys.n()];
+        spmv_ell(&sys.a, &x, &mut whole, 0, sys.n());
+        let mut blocked = vec![0.0; sys.n()];
+        let bs = 7;
+        let mut r0 = 0;
+        while r0 < sys.n() {
+            let r1 = (r0 + bs).min(sys.n());
+            spmv_ell(&sys.a, &x, &mut blocked, r0, r1);
+            r0 = r1;
+        }
+        assert_eq!(whole, blocked);
+    }
+
+    #[test]
+    fn dot_partials_sum_to_whole() {
+        forall(
+            71,
+            100,
+            |r, s| {
+                let n = 1 + r.below(16 * s.0.max(1));
+                let x: Vec<f64> = (0..n).map(|_| r.normal()).collect();
+                let y: Vec<f64> = (0..n).map(|_| r.normal()).collect();
+                let split = r.below(n + 1);
+                (x, y, split)
+            },
+            |(x, y, split)| {
+                let whole = dot(x, y, 0, x.len());
+                let parts = dot(x, y, 0, *split) + dot(x, y, *split, x.len());
+                (whole - parts).abs() < 1e-9 * (1.0 + whole.abs())
+            },
+        );
+    }
+
+    #[test]
+    fn axpby_dot_fusion_consistent() {
+        let mut rng = Rng::new(9);
+        let n = 100;
+        let x: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let y0: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let p: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let (a, b) = (1.3, -0.4);
+        let mut y1 = y0.clone();
+        let s_fused = axpby_dot(a, &x, b, &mut y1, &p, 0, n);
+        let mut y2 = y0.clone();
+        axpby(a, &x, b, &mut y2, 0, n);
+        let s_two = dot(&y2, &p, 0, n);
+        assert_eq!(y1, y2);
+        assert!((s_fused - s_two).abs() < 1e-10);
+    }
+
+    #[test]
+    fn jacobi_reduces_residual() {
+        let sys = test_system();
+        let mut x = sys.new_ext();
+        let mut xn = vec![0.0; sys.n()];
+        let mut r = vec![0.0; sys.n()];
+        let res0 = residual(&sys.a, &sys.b, &x, &mut r);
+        for _ in 0..10 {
+            jacobi_sweep(&sys.a, &sys.b, &x, &mut xn, 0, sys.n());
+            x[..sys.n()].copy_from_slice(&xn);
+        }
+        let res1 = residual(&sys.a, &sys.b, &x, &mut r);
+        assert!(res1 < 0.1 * res0, "res {res0} -> {res1}");
+    }
+
+    #[test]
+    fn gs_sweep_beats_jacobi_sweep() {
+        let sys = test_system();
+        // Jacobi
+        let mut xj = sys.new_ext();
+        let mut xn = vec![0.0; sys.n()];
+        for _ in 0..5 {
+            jacobi_sweep(&sys.a, &sys.b, &xj, &mut xn, 0, sys.n());
+            xj[..sys.n()].copy_from_slice(&xn);
+        }
+        // symmetric GS (forward+backward per iteration)
+        let mut xg = sys.new_ext();
+        for _ in 0..5 {
+            gs_sweep(&sys.a, &sys.b, &mut xg, 0..sys.n());
+            gs_sweep(&sys.a, &sys.b, &mut xg, (0..sys.n()).rev());
+        }
+        let mut r = vec![0.0; sys.n()];
+        let rj = residual(&sys.a, &sys.b, &xj, &mut r);
+        let rg = residual(&sys.a, &sys.b, &xg, &mut r);
+        assert!(rg < rj, "gs {rg} vs jacobi {rj}");
+    }
+
+    #[test]
+    fn colour_sweeps_cover_all_rows() {
+        let sys = test_system();
+        let mut x = sys.new_ext();
+        // one red + one black half-sweep must touch every row once:
+        // after them, x != 0 everywhere b != 0
+        gs_colour_sweep(&sys.a, &sys.b, &sys.red_mask, true, &mut x, 0, sys.n());
+        gs_colour_sweep(&sys.a, &sys.b, &sys.red_mask, false, &mut x, 0, sys.n());
+        for i in 0..sys.n() {
+            assert!(x[i] != 0.0, "row {i} untouched");
+        }
+    }
+
+    #[test]
+    fn red_black_converges_to_ones() {
+        let sys = test_system();
+        let mut x = sys.new_ext();
+        for _ in 0..200 {
+            gs_colour_sweep(&sys.a, &sys.b, &sys.red_mask, true, &mut x, 0, sys.n());
+            gs_colour_sweep(&sys.a, &sys.b, &sys.red_mask, false, &mut x, 0, sys.n());
+        }
+        for i in 0..sys.n() {
+            assert!((x[i] - 1.0).abs() < 1e-8, "x[{i}]={}", x[i]);
+        }
+    }
+
+    #[test]
+    fn waxpby_matches_composition() {
+        let mut rng = Rng::new(13);
+        let n = 64;
+        let x: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let y: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let z0: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let mut z1 = z0.clone();
+        waxpby(2.0, &x, -1.0, &y, 0.5, &mut z1, 0, n);
+        for i in 0..n {
+            let want = 2.0 * x[i] - y[i] + 0.5 * z0[i];
+            assert!((z1[i] - want).abs() < 1e-14);
+        }
+    }
+}

@@ -1,0 +1,333 @@
+//! Machine performance model — the MareNostrum 4 substitute (DESIGN.md §2).
+//!
+//! All solver kernels are memory-bound (§4.1 of the paper verifies the
+//! working set is an order of magnitude beyond L3), so kernel cost is
+//! bytes-touched / effective-bandwidth with three regimes:
+//!
+//!   * working set ≥ L3: sustained memory bandwidth, shared by the cores
+//!     of a socket (bandwidth saturates with ~8 cores — adding cores past
+//!     that mostly doesn't help, which is exactly why 48 MPI ranks/node
+//!     and 24 threads/socket reach the same compute throughput);
+//!   * working set < L3: the strong-scaling regime of Figs. 5-6 — data
+//!     lives in cache and bandwidth multiplies; task-based execution
+//!     loses part of this benefit because tasks migrate between cores
+//!     (the paper: "the computational advantage of tasks vanishes due to
+//!     data locality issues");
+//!   * per-core issue floor: very small blocks are latency-bound.
+//!
+//! Communication: point-to-point is latency + bytes/bandwidth; the
+//! allreduce is a log2(P) latency tree. System noise is the mechanism the
+//! paper blames for MPI-only degradation (§4.2: synthetic allreduce
+//! ~1e-5 s vs ~1e-3 s measured in-app): every rank accumulates a random
+//! skew per compute segment, and synchronising collectives pay the *max*
+//! over ranks. Hybrid runs have 24x fewer ranks per collective and tasks
+//! additionally overlap the wait — both effects emerge from this model.
+
+use crate::util::Rng;
+
+/// Bytes per f64.
+pub const F64: f64 = 8.0;
+
+#[derive(Debug, Clone)]
+pub struct MachineModel {
+    pub name: String,
+    // --- node ---
+    pub sockets_per_node: usize,
+    pub cores_per_socket: usize,
+    /// Sustained DRAM bandwidth per socket (B/s), all cores combined.
+    pub mem_bw_socket: f64,
+    /// Cores needed to saturate the socket's DRAM bandwidth.
+    pub bw_saturation_cores: f64,
+    /// L3 capacity per socket (bytes).
+    pub l3_bytes: f64,
+    /// Bandwidth multiplier when the working set fits in L3.
+    pub l3_bw_mult: f64,
+    /// Fraction of the L3 benefit retained by task-based execution
+    /// (tasks migrate across cores; <1.0 models the locality loss).
+    pub task_l3_retention: f64,
+    /// Fixed per-kernel-launch overhead (s) — loop/dispatch cost.
+    pub kernel_overhead: f64,
+    /// Fork-join: implicit barrier + thread wake cost per parallel region.
+    pub forkjoin_barrier: f64,
+    /// Task runtime: per-task scheduling overhead (s).
+    pub task_overhead: f64,
+    // --- network ---
+    /// Per-hop latency of the allreduce tree (s).
+    pub allreduce_hop_latency: f64,
+    /// Point-to-point latency, inter-node (s).
+    pub p2p_latency: f64,
+    /// Point-to-point latency, intra-node (s).
+    pub p2p_latency_intra: f64,
+    /// Link bandwidth per node (B/s).
+    pub net_bw: f64,
+    // --- noise ---
+    /// Multiplicative compute jitter sigma (lognormal of mean ~1).
+    pub jitter_sigma: f64,
+    /// OS-noise spikes: arrival rate per rank (events per second of
+    /// compute) and lognormal magnitude parameters (s).
+    pub spike_rate: f64,
+    pub spike_mu: f64,
+    pub spike_sigma: f64,
+}
+
+impl MachineModel {
+    /// MareNostrum 4 (paper §4.1): 2x Xeon Platinum 8160, 24 cores @
+    /// 2.1 GHz, 33 MiB L3, Omni-Path 100 Gb/s, Intel MPI 2018.4.
+    pub fn marenostrum4() -> Self {
+        MachineModel {
+            name: "MareNostrum4".into(),
+            sockets_per_node: 2,
+            cores_per_socket: 24,
+            mem_bw_socket: 64e9, // sustained stream-like per socket
+            bw_saturation_cores: 8.0,
+            l3_bytes: 33.0 * 1024.0 * 1024.0,
+            l3_bw_mult: 3.5,
+            task_l3_retention: 0.35,
+            kernel_overhead: 2.0e-7,
+            forkjoin_barrier: 5.0e-6,
+            task_overhead: 1.2e-6,
+            allreduce_hop_latency: 1.3e-6,
+            p2p_latency: 1.6e-6,
+            p2p_latency_intra: 0.6e-6,
+            net_bw: 12.5e9,
+            jitter_sigma: 0.015,
+            spike_rate: 0.05,
+            spike_mu: -8.0, // exp(-8) ~ 0.33 ms spikes
+            spike_sigma: 0.7,
+        }
+    }
+
+    pub fn cores_per_node(&self) -> usize {
+        self.sockets_per_node * self.cores_per_socket
+    }
+
+    /// Effective bandwidth (B/s) seen by `cores` cores of one socket
+    /// working on a combined working set of `ws_bytes`, under execution
+    /// model locality `l3_retention` (1.0 = perfect reuse).
+    pub fn effective_bw(&self, cores: f64, ws_bytes: f64, l3_retention: f64) -> f64 {
+        let sat = (cores / self.bw_saturation_cores).min(1.0);
+        let dram = self.mem_bw_socket * sat.max(1.0 / self.bw_saturation_cores);
+        if ws_bytes <= self.l3_bytes {
+            let mult = 1.0 + (self.l3_bw_mult - 1.0) * l3_retention;
+            dram * mult
+        } else if ws_bytes <= 2.0 * self.l3_bytes {
+            // smooth transition region: linear blend
+            let t = (ws_bytes - self.l3_bytes) / self.l3_bytes;
+            let mult = 1.0 + (self.l3_bw_mult - 1.0) * l3_retention * (1.0 - t);
+            dram * mult
+        } else {
+            dram
+        }
+    }
+
+    /// Time for a memory-bound kernel touching `bytes` with `cores` cores
+    /// on one socket (working set `ws_bytes` decides the cache regime).
+    pub fn kernel_time(&self, bytes: f64, cores: f64, ws_bytes: f64, l3_retention: f64) -> f64 {
+        self.kernel_overhead + bytes / self.effective_bw(cores, ws_bytes, l3_retention)
+    }
+
+    /// Latency-only allreduce cost for `p` participants (synthetic
+    /// benchmark number — §4.2 quotes ~1e-5 s for small messages).
+    pub fn allreduce_base(&self, p: usize) -> f64 {
+        if p <= 1 {
+            return 0.0;
+        }
+        let hops = (p as f64).log2().ceil();
+        2.0 * hops * self.allreduce_hop_latency
+    }
+
+    /// Point-to-point transfer time.
+    pub fn p2p_time(&self, bytes: f64, intra_node: bool) -> f64 {
+        let lat = if intra_node {
+            self.p2p_latency_intra
+        } else {
+            self.p2p_latency
+        };
+        lat + bytes / self.net_bw
+    }
+
+    /// Draw one compute-segment noise factor (multiplicative ≥ ~1) plus
+    /// an additive OS spike (usually 0). `duration` is the segment's base
+    /// time: spike arrival is a Poisson process in compute time, so long
+    /// segments absorb proportionally more OS noise. Returns
+    /// (factor, additive_s).
+    pub fn draw_noise(&self, rng: &mut Rng, duration: f64) -> (f64, f64) {
+        let factor = (rng.normal() * self.jitter_sigma).exp();
+        let prob = (self.spike_rate * duration).min(0.5);
+        let spike = if rng.f64() < prob {
+            rng.lognormal(self.spike_mu, self.spike_sigma)
+        } else {
+            0.0
+        };
+        (factor, spike)
+    }
+
+    /// Expected max-of-p multiplicative jitter (used by the statistical
+    /// scaling path to avoid drawing p samples when p is huge). Gumbel
+    /// approximation of the max of p lognormals.
+    pub fn max_jitter_quantile(&self, p: usize, u: f64) -> f64 {
+        if p <= 1 {
+            return 1.0;
+        }
+        // max of p iid lognormal(0, sigma): quantile via inverse CDF at
+        // u^(1/p)
+        let q = u.powf(1.0 / p as f64);
+        (self.jitter_sigma * inverse_normal_cdf(q)).exp()
+    }
+}
+
+/// Acklam's rational approximation of the standard normal inverse CDF
+/// (max abs error ~1.15e-9 — plenty for a noise model).
+pub fn inverse_normal_cdf(p: f64) -> f64 {
+    debug_assert!(p > 0.0 && p < 1.0);
+    const A: [f64; 6] = [
+        -3.969683028665376e+01,
+        2.209460984245205e+02,
+        -2.759285104469687e+02,
+        1.383577518672690e+02,
+        -3.066479806614716e+01,
+        2.506628277459239e+00,
+    ];
+    const B: [f64; 5] = [
+        -5.447609879822406e+01,
+        1.615858368580409e+02,
+        -1.556989798598866e+02,
+        6.680131188771972e+01,
+        -1.328068155288572e+01,
+    ];
+    const C: [f64; 6] = [
+        -7.784894002430293e-03,
+        -3.223964580411365e-01,
+        -2.400758277161838e+00,
+        -2.549732539343734e+00,
+        4.374664141464968e+00,
+        2.938163982698783e+00,
+    ];
+    const D: [f64; 4] = [
+        7.784695709041462e-03,
+        3.224671290700398e-01,
+        2.445134137142996e+00,
+        3.754408661907416e+00,
+    ];
+    let plow = 0.02425;
+    if p < plow {
+        let q = (-2.0 * p.ln()).sqrt();
+        (((((C[0] * q + C[1]) * q + C[2]) * q + C[3]) * q + C[4]) * q + C[5])
+            / ((((D[0] * q + D[1]) * q + D[2]) * q + D[3]) * q + 1.0)
+    } else if p <= 1.0 - plow {
+        let q = p - 0.5;
+        let r = q * q;
+        (((((A[0] * r + A[1]) * r + A[2]) * r + A[3]) * r + A[4]) * r + A[5]) * q
+            / (((((B[0] * r + B[1]) * r + B[2]) * r + B[3]) * r + B[4]) * r + 1.0)
+    } else {
+        -inverse_normal_cdf(1.0 - p)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn m() -> MachineModel {
+        MachineModel::marenostrum4()
+    }
+
+    #[test]
+    fn preset_shape() {
+        let m = m();
+        assert_eq!(m.cores_per_node(), 48);
+        assert!(m.l3_bytes > 3.0e7);
+    }
+
+    #[test]
+    fn allreduce_base_matches_synthetic_order() {
+        // §4.2: synthetic MPI_Allreduce ~1e-5 s for small messages.
+        let t = m().allreduce_base(384);
+        assert!(t > 2e-6 && t < 5e-5, "t={t}");
+    }
+
+    #[test]
+    fn allreduce_grows_with_ranks() {
+        let m = m();
+        assert!(m.allreduce_base(48) < m.allreduce_base(3072));
+        assert_eq!(m.allreduce_base(1), 0.0);
+    }
+
+    #[test]
+    fn dram_regime_bandwidth() {
+        let m = m();
+        // big working set: sustained DRAM bw at full socket
+        let bw = m.effective_bw(24.0, 1e9, 1.0);
+        assert!((bw - m.mem_bw_socket).abs() < 1e-6 * m.mem_bw_socket);
+        // one core can't saturate
+        assert!(m.effective_bw(1.0, 1e9, 1.0) < 0.2 * m.mem_bw_socket * 1.01);
+    }
+
+    #[test]
+    fn l3_regime_speedup_and_task_penalty() {
+        let m = m();
+        let small = 1e6; // 1 MB << L3
+        let full = m.effective_bw(24.0, small, 1.0);
+        let task = m.effective_bw(24.0, small, m.task_l3_retention);
+        let dram = m.effective_bw(24.0, 1e9, 1.0);
+        assert!(full > 3.0 * dram);
+        assert!(task < full && task > dram);
+    }
+
+    #[test]
+    fn kernel_time_scales_with_bytes() {
+        let m = m();
+        let t1 = m.kernel_time(1e8, 24.0, 1e9, 1.0);
+        let t2 = m.kernel_time(2e8, 24.0, 1e9, 1.0);
+        assert!((t2 / t1 - 2.0).abs() < 0.01);
+    }
+
+    #[test]
+    fn weak_scaling_reference_time_ballpark() {
+        // Sanity vs the paper: CG 7-pt on one node, 48 ranks x 128^3 rows,
+        // 12 iterations, (12+7)r touched elements -> should land within a
+        // factor ~2 of the reported 1.52 s median reference.
+        let m = m();
+        let r = 128.0 * 128.0 * 128.0;
+        let bytes_per_rank_iter = (12.0 + 7.0) * r * F64;
+        let node_bytes = 48.0 * bytes_per_rank_iter;
+        let socket_bytes = node_bytes / 2.0;
+        let t_iter = socket_bytes / m.mem_bw_socket;
+        let t = 12.0 * t_iter;
+        assert!(t > 0.7 && t < 3.0, "t={t}");
+    }
+
+    #[test]
+    fn noise_is_nonnegative_and_usually_small() {
+        let m = m();
+        let mut rng = crate::util::Rng::new(1);
+        let mut spikes = 0;
+        for _ in 0..10_000 {
+            let (f, s) = m.draw_noise(&mut rng, 0.01);
+            assert!(f > 0.5 && f < 2.0);
+            assert!(s >= 0.0);
+            if s > 0.0 {
+                spikes += 1;
+            }
+        }
+        // 10k segments x 10ms x 0.05/s ~ 5 expected spikes
+        assert!(spikes >= 1 && spikes < 50, "spikes={spikes}");
+    }
+
+    #[test]
+    fn inverse_normal_cdf_sane() {
+        assert!((inverse_normal_cdf(0.5)).abs() < 1e-8);
+        assert!((inverse_normal_cdf(0.9772) - 2.0).abs() < 0.01);
+        assert!((inverse_normal_cdf(0.0228) + 2.0).abs() < 0.01);
+    }
+
+    #[test]
+    fn max_jitter_grows_with_p() {
+        let m = m();
+        let q48 = m.max_jitter_quantile(48, 0.5);
+        let q3072 = m.max_jitter_quantile(3072, 0.5);
+        assert!(q3072 > q48);
+        assert!(q48 > 1.0);
+        assert_eq!(m.max_jitter_quantile(1, 0.5), 1.0);
+    }
+}

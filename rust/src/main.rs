@@ -1,0 +1,198 @@
+//! `hlam` — the L3 coordinator binary.
+//!
+//! Subcommands:
+//!   solve     run one solver with real numerics (native or XLA backend)
+//!   figures   regenerate the paper's tables/figures into --out
+//!   trace     emit Fig-1-style task traces for chosen methods
+//!   sweep     task-granularity sweep (§4.2)
+//!   sizes     list AOT artifact sizes available in artifacts/
+//!
+//! Examples:
+//!   hlam solve --method cg --grid 16x16x32 --stencil 7 --ranks 2
+//!   hlam solve --method cg --backend xla --grid 8x8x8 --stencil 7
+//!   hlam figures --all --out results
+//!   hlam figures --fig 3 --quick
+//!   hlam trace --methods cg,cg-nb
+//!   hlam sweep --granularity
+
+use std::path::PathBuf;
+use std::rc::Rc;
+
+use hlam::harness::{self, HarnessOpts};
+use hlam::mesh::Grid3;
+use hlam::runtime::{Runtime, XlaCompute};
+use hlam::solvers::{Method, Native, Problem, SolveOpts};
+use hlam::sparse::StencilKind;
+use hlam::util::Args;
+
+fn main() {
+    let raw: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::parse(raw, &["all", "quick", "verbose", "granularity", "xla"]);
+    let cmd = args.positional.first().map(String::as_str).unwrap_or("help");
+    match cmd {
+        "solve" => cmd_solve(&args),
+        "figures" => cmd_figures(&args),
+        "trace" => cmd_trace(&args),
+        "sweep" => cmd_sweep(&args),
+        "sizes" => cmd_sizes(&args),
+        _ => usage(),
+    }
+}
+
+fn usage() {
+    println!(
+        "hlam — hybrid linear algebra methods (JPDC 2023 reproduction)\n\
+         \n\
+         usage: hlam <solve|figures|trace|sweep|sizes> [options]\n\
+         \n\
+         solve   --method cg|cg-nb|bicgstab|bicgstab-b1|jacobi|gs|gs-rb|gs-relaxed\n\
+        \x20        --grid NXxNYxNZ --stencil 7|27 --ranks N --backend native|xla\n\
+        \x20        --eps 1e-6 --ntasks N --task-seed S --artifacts DIR\n\
+         figures --all | --fig 1|2|3|4|5|6|iters|gs-iters|granularity|latency|headline\n\
+        \x20        --out DIR --reps N --quick\n\
+         trace   --methods cg,cg-nb --out DIR\n\
+         sweep   --granularity [--out DIR]\n\
+         sizes   [--artifacts DIR]"
+    );
+}
+
+fn parse_grid(s: &str) -> Grid3 {
+    let dims: Vec<usize> = s
+        .split('x')
+        .map(|d| d.parse().unwrap_or_else(|_| panic!("bad grid '{s}'")))
+        .collect();
+    assert_eq!(dims.len(), 3, "grid must be NXxNYxNZ");
+    Grid3::new(dims[0], dims[1], dims[2])
+}
+
+fn cmd_solve(args: &Args) {
+    let method = Method::parse(&args.str_or("method", "cg"))
+        .unwrap_or_else(|| panic!("unknown method"));
+    let grid = parse_grid(&args.str_or("grid", "16x16x32"));
+    let kind = StencilKind::parse(&args.str_or("stencil", "7")).expect("stencil 7 or 27");
+    let nranks = args.usize_or("ranks", 1);
+    let mut opts = SolveOpts {
+        eps: args.f64_or("eps", 1e-6),
+        eps_absolute: args.str_or("eps-mode", "absolute") == "absolute",
+        ntasks: args.usize_or("ntasks", 0),
+        task_order_seed: args.u64_or("task-seed", 0),
+        ..SolveOpts::default()
+    };
+    opts.max_iters = args.usize_or("max-iters", 10_000);
+
+    let mut pb = Problem::build(grid, kind, nranks);
+    let backend_name = args.str_or("backend", "native");
+    let stats = match backend_name.as_str() {
+        "native" => pb.solve(method, &opts, &mut Native),
+        "xla" => {
+            let rt = Rc::new(
+                Runtime::load(args.str_or("artifacts", "artifacts"))
+                    .expect("load artifacts"),
+            );
+            let st = &pb.ranks[0];
+            let (n, w, n_ext) = (st.n(), kind.width(), st.sys.part.n_ext());
+            let mut xc = XlaCompute::new(rt, n, w, n_ext)
+                .expect("artifacts for this size (see `hlam sizes`)");
+            let stats = pb.solve(method, &opts, &mut xc);
+            println!("xla executions: {}", xc.calls.borrow());
+            stats
+        }
+        other => panic!("unknown backend '{other}'"),
+    };
+    println!(
+        "method={} backend={} grid={}x{}x{} w={} ranks={}",
+        stats.method, backend_name, grid.nx, grid.ny, grid.nz,
+        kind.width(), nranks
+    );
+    println!(
+        "iterations={} converged={} rel_residual={:.3e} x_error={:.3e} restarts={}",
+        stats.iterations, stats.converged, stats.rel_residual, stats.x_error, stats.restarts
+    );
+    println!(
+        "p2p_msgs={} p2p_bytes={} allreduces={}",
+        pb.world.stats.p2p_messages, pb.world.stats.p2p_bytes, pb.world.stats.allreduces
+    );
+}
+
+fn cmd_figures(args: &Args) {
+    let out = PathBuf::from(args.str_or("out", "results"));
+    let opts = HarnessOpts {
+        reps: args.usize_or("reps", 10),
+        quick: args.flag("quick"),
+        seed: args.u64_or("seed", HarnessOpts::default().seed),
+        ..Default::default()
+    };
+    let which = if args.flag("all") {
+        vec![
+            "iters".to_string(),
+            "1".to_string(),
+            "2".to_string(),
+            "3".to_string(),
+            "4".to_string(),
+            "5".to_string(),
+            "6".to_string(),
+            "gs-iters".to_string(),
+            "granularity".to_string(),
+            "latency".to_string(),
+            "headline".to_string(),
+        ]
+    } else {
+        args.list_or("fig", &["headline"])
+    };
+    for fig in which {
+        let text = match fig.as_str() {
+            "iters" => harness::iteration_table(&out, opts.quick),
+            "1" => harness::fig1(&out),
+            "2" => harness::fig2(&out, &opts),
+            "3" => harness::fig3(&out, &opts),
+            "4" => harness::fig4(&out, &opts),
+            "5" => harness::fig56(5, &out, &opts),
+            "6" => harness::fig56(6, &out, &opts),
+            "gs-iters" => harness::gs_iteration_table(&out, opts.quick),
+            "granularity" => harness::granularity_sweep(&out, &opts),
+            "latency" => harness::latency_table(&out),
+            "headline" => harness::headline(&out, &opts),
+            other => {
+                eprintln!("unknown figure '{other}'");
+                continue;
+            }
+        };
+        println!("{text}");
+    }
+    println!("CSV outputs in {}", out.display());
+}
+
+fn cmd_trace(args: &Args) {
+    let out = PathBuf::from(args.str_or("out", "results"));
+    std::fs::create_dir_all(&out).expect("create out dir");
+    let m = hlam::machine::MachineModel::marenostrum4();
+    for method in args.list_or("methods", &["cg", "cg-nb"]) {
+        let tr = hlam::trace::build_trace(
+            &m,
+            &method,
+            args.f64_or("nbar", 7.0),
+            args.f64_or("rows", 128.0 * 128.0 * 384.0),
+            args.usize_or("nblocks", 32),
+            args.usize_or("cores", 8),
+            args.usize_or("iterations", 2),
+            args.f64_or("allreduce-cost", 1.2e-3),
+        );
+        std::fs::write(out.join(format!("trace_{method}.csv")), tr.to_csv())
+            .expect("write trace");
+        println!("{}", tr.to_ascii(100));
+    }
+}
+
+fn cmd_sweep(args: &Args) {
+    let out = PathBuf::from(args.str_or("out", "results"));
+    let opts = HarnessOpts::default();
+    println!("{}", harness::granularity_sweep(&out, &opts));
+}
+
+fn cmd_sizes(args: &Args) {
+    let rt = Runtime::load(args.str_or("artifacts", "artifacts")).expect("load artifacts");
+    println!("available AOT sizes (n, w, n_ext):");
+    for (n, w, n_ext) in rt.sizes() {
+        println!("  n={n:>7} w={w:>2} n_ext={n_ext:>7}  (halo {})", n_ext - n - 1);
+    }
+}

@@ -1,0 +1,342 @@
+//! 3-D structured hexahedral mesh and its MPI-style domain decomposition.
+//!
+//! Mirrors HPCCG/HLAM: the global grid `nx × ny × nz` is distributed by
+//! blocks **along the last dimension only** (the paper: "HPCCG, and thus
+//! HLAM, only distribute points along the last dimension"). Each rank owns
+//! `nz_local` consecutive xy-planes; the halo consists of at most one
+//! plane from the previous neighbour and one from the next (7-point), and
+//! exactly the same planes carry the corner/edge couplings of the 27-point
+//! stencil, so the communication pattern is identical for both sparsities.
+//!
+//! Local index layout (the ELL `cols` convention shared with the Python
+//! oracle and the AOT artifacts):
+//!   [0, n)                     own rows, lexicographic (x fastest)
+//!   [n, n + halo_prev)         plane received from rank-1
+//!   [n + halo_prev, n + halo)  plane received from rank+1
+//!   n + halo                   zero-pad slot for fill entries
+
+use crate::util::Rng;
+
+/// Global structured grid.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Grid3 {
+    pub nx: usize,
+    pub ny: usize,
+    pub nz: usize,
+}
+
+impl Grid3 {
+    pub fn new(nx: usize, ny: usize, nz: usize) -> Self {
+        assert!(nx > 0 && ny > 0 && nz > 0, "degenerate grid");
+        Grid3 { nx, ny, nz }
+    }
+
+    pub fn cube(n: usize) -> Self {
+        Self::new(n, n, n)
+    }
+
+    pub fn n(&self) -> usize {
+        self.nx * self.ny * self.nz
+    }
+
+    pub fn plane(&self) -> usize {
+        self.nx * self.ny
+    }
+
+    /// Global row index of (x, y, z), x fastest.
+    pub fn idx(&self, x: usize, y: usize, z: usize) -> usize {
+        (z * self.ny + y) * self.nx + x
+    }
+
+    /// Inverse of `idx`.
+    pub fn coords(&self, row: usize) -> (usize, usize, usize) {
+        let x = row % self.nx;
+        let y = (row / self.nx) % self.ny;
+        let z = row / (self.nx * self.ny);
+        (x, y, z)
+    }
+}
+
+/// One rank's slice of the 1-D (z) block decomposition.
+#[derive(Debug, Clone)]
+pub struct Partition {
+    pub grid: Grid3,
+    pub rank: usize,
+    pub nranks: usize,
+    /// First owned z-plane (inclusive).
+    pub z0: usize,
+    /// Last owned z-plane (exclusive).
+    pub z1: usize,
+}
+
+impl Partition {
+    /// Block decomposition of `grid.nz` planes over `nranks`, remainder
+    /// spread over the first ranks (HPCCG convention).
+    pub fn new(grid: Grid3, rank: usize, nranks: usize) -> Self {
+        assert!(nranks > 0 && rank < nranks);
+        assert!(
+            grid.nz >= nranks,
+            "fewer z-planes ({}) than ranks ({nranks})",
+            grid.nz
+        );
+        let base = grid.nz / nranks;
+        let rem = grid.nz % nranks;
+        let z0 = rank * base + rank.min(rem);
+        let z1 = z0 + base + usize::from(rank < rem);
+        Partition {
+            grid,
+            rank,
+            nranks,
+            z0,
+            z1,
+        }
+    }
+
+    pub fn nz_local(&self) -> usize {
+        self.z1 - self.z0
+    }
+
+    /// Owned rows.
+    pub fn n_local(&self) -> usize {
+        self.nz_local() * self.grid.plane()
+    }
+
+    pub fn has_prev(&self) -> bool {
+        self.rank > 0
+    }
+
+    pub fn has_next(&self) -> bool {
+        self.rank + 1 < self.nranks
+    }
+
+    /// Total halo length (received rows).
+    pub fn n_halo(&self) -> usize {
+        self.grid.plane() * (usize::from(self.has_prev()) + usize::from(self.has_next()))
+    }
+
+    /// Extended local vector length: own + halo + 1 pad slot.
+    pub fn n_ext(&self) -> usize {
+        self.n_local() + self.n_halo() + 1
+    }
+
+    /// Index of the zero-pad slot.
+    pub fn pad_slot(&self) -> usize {
+        self.n_local() + self.n_halo()
+    }
+
+    /// Map a *global* row to its local extended index, if visible here.
+    pub fn local_of_global(&self, grow: usize) -> Option<usize> {
+        let (x, y, z) = self.grid.coords(grow);
+        let plane = self.grid.plane();
+        let n = self.n_local();
+        if z >= self.z0 && z < self.z1 {
+            Some((z - self.z0) * plane + y * self.nx() + x)
+        } else if self.has_prev() && z + 1 == self.z0 {
+            Some(n + y * self.nx() + x)
+        } else if self.has_next() && z == self.z1 {
+            let off = if self.has_prev() { plane } else { 0 };
+            Some(n + off + y * self.nx() + x)
+        } else {
+            None
+        }
+    }
+
+    /// Global row of a local *owned* index.
+    pub fn global_of_local(&self, lrow: usize) -> usize {
+        debug_assert!(lrow < self.n_local());
+        let plane = self.grid.plane();
+        let z = self.z0 + lrow / plane;
+        let rem = lrow % plane;
+        self.grid.idx(rem % self.nx(), rem / self.nx(), z)
+    }
+
+    fn nx(&self) -> usize {
+        self.grid.nx
+    }
+
+    /// Halo exchange map for this rank. Send regions are owned local
+    /// indices; each neighbour receives one full xy-plane.
+    pub fn halo_map(&self) -> HaloMap {
+        let plane = self.grid.plane();
+        let n = self.n_local();
+        let mut neighbours = Vec::new();
+        if self.has_prev() {
+            // send own first plane; receive their last plane into [n, n+plane)
+            neighbours.push(Neighbour {
+                rank: self.rank - 1,
+                send: (0..plane).collect(),
+                recv_offset: n,
+                recv_len: plane,
+            });
+        }
+        if self.has_next() {
+            let off = if self.has_prev() { plane } else { 0 };
+            neighbours.push(Neighbour {
+                rank: self.rank + 1,
+                send: ((self.nz_local() - 1) * plane..self.nz_local() * plane).collect(),
+                recv_offset: n + off,
+                recv_len: plane,
+            });
+        }
+        HaloMap { neighbours }
+    }
+}
+
+/// One neighbour's send/recv description (paper Code 2's
+/// `elements_to_send` / receive regions "close to the end of buffer x").
+#[derive(Debug, Clone)]
+pub struct Neighbour {
+    pub rank: usize,
+    /// Owned local indices to copy into the send buffer.
+    pub send: Vec<usize>,
+    /// Where this neighbour's data lands in the extended vector.
+    pub recv_offset: usize,
+    pub recv_len: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct HaloMap {
+    pub neighbours: Vec<Neighbour>,
+}
+
+impl HaloMap {
+    pub fn total_send(&self) -> usize {
+        self.neighbours.iter().map(|n| n.send.len()).sum()
+    }
+
+    pub fn total_recv(&self) -> usize {
+        self.neighbours.iter().map(|n| n.recv_len).sum()
+    }
+}
+
+/// Deterministic random partition point generator used by tests.
+pub fn random_grid(rng: &mut Rng, max_dim: usize) -> Grid3 {
+    let d = |r: &mut Rng| 1 + r.below(max_dim.max(1));
+    Grid3::new(d(rng), d(rng), d(rng))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::forall;
+
+    #[test]
+    fn idx_coords_roundtrip() {
+        let g = Grid3::new(4, 5, 6);
+        for row in 0..g.n() {
+            let (x, y, z) = g.coords(row);
+            assert_eq!(g.idx(x, y, z), row);
+        }
+    }
+
+    #[test]
+    fn partitions_cover_grid_exactly() {
+        forall(
+            101,
+            300,
+            |r, s| {
+                let nz = 1 + r.below(8 * s.0.max(1));
+                let nranks = 1 + r.below(nz.min(32));
+                (nz, nranks)
+            },
+            |&(nz, nranks)| {
+                let g = Grid3::new(3, 2, nz);
+                let mut total = 0;
+                let mut prev_end = 0;
+                for rank in 0..nranks {
+                    let p = Partition::new(g, rank, nranks);
+                    if p.z0 != prev_end {
+                        return false;
+                    }
+                    prev_end = p.z1;
+                    total += p.n_local();
+                    if p.nz_local() == 0 {
+                        return false;
+                    }
+                }
+                prev_end == nz && total == g.n()
+            },
+        );
+    }
+
+    #[test]
+    fn halo_sizes() {
+        let g = Grid3::new(4, 4, 12);
+        let p0 = Partition::new(g, 0, 3);
+        let p1 = Partition::new(g, 1, 3);
+        let p2 = Partition::new(g, 2, 3);
+        assert_eq!(p0.n_halo(), 16);
+        assert_eq!(p1.n_halo(), 32);
+        assert_eq!(p2.n_halo(), 16);
+        assert_eq!(p1.halo_map().neighbours.len(), 2);
+        assert_eq!(p1.halo_map().total_send(), 32);
+    }
+
+    #[test]
+    fn single_rank_has_no_halo() {
+        let g = Grid3::cube(4);
+        let p = Partition::new(g, 0, 1);
+        assert_eq!(p.n_halo(), 0);
+        assert_eq!(p.n_ext(), g.n() + 1);
+        assert!(p.halo_map().neighbours.is_empty());
+    }
+
+    #[test]
+    fn local_global_roundtrip_owned() {
+        let g = Grid3::new(3, 4, 10);
+        for nranks in [1, 2, 3, 5] {
+            for rank in 0..nranks {
+                let p = Partition::new(g, rank, nranks);
+                for l in 0..p.n_local() {
+                    let grow = p.global_of_local(l);
+                    assert_eq!(p.local_of_global(grow), Some(l));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn halo_rows_map_into_recv_regions() {
+        let g = Grid3::new(3, 3, 9);
+        let p = Partition::new(g, 1, 3);
+        // a row in rank 0's last plane (z = z0 - 1 = 2)
+        let grow = g.idx(1, 2, p.z0 - 1);
+        let l = p.local_of_global(grow).unwrap();
+        assert!(l >= p.n_local() && l < p.n_local() + g.plane());
+        // a row in rank 2's first plane (z = z1)
+        let grow = g.idx(0, 1, p.z1);
+        let l = p.local_of_global(grow).unwrap();
+        assert!(l >= p.n_local() + g.plane() && l < p.pad_slot());
+        // a row two planes away is not visible
+        assert_eq!(p.local_of_global(g.idx(0, 0, p.z1 + 1)), None);
+    }
+
+    #[test]
+    fn neighbour_send_regions_are_boundary_planes() {
+        let g = Grid3::new(2, 2, 8);
+        let p = Partition::new(g, 1, 4);
+        let hm = p.halo_map();
+        let prev = &hm.neighbours[0];
+        let next = &hm.neighbours[1];
+        assert_eq!(prev.rank, 0);
+        assert_eq!(next.rank, 2);
+        assert!(prev.send.iter().all(|&i| i < g.plane()));
+        assert!(next
+            .send
+            .iter()
+            .all(|&i| i >= p.n_local() - g.plane() && i < p.n_local()));
+    }
+
+    #[test]
+    fn remainder_goes_to_first_ranks() {
+        let g = Grid3::new(1, 1, 10);
+        let sizes: Vec<usize> = (0..4).map(|r| Partition::new(g, r, 4).nz_local()).collect();
+        assert_eq!(sizes, vec![3, 3, 2, 2]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn too_many_ranks_panics() {
+        let _ = Partition::new(Grid3::new(2, 2, 3), 0, 4);
+    }
+}

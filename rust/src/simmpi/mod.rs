@@ -1,0 +1,431 @@
+//! Simulated MPI — the distributed-memory substrate (numerics side).
+//!
+//! The image has one core and no MPI, so rank-parallel execution is
+//! simulated: a [`World`] holds all ranks' state in one address space and
+//! executes them in lockstep *per communication phase*. This is a genuine
+//! message-passing model, not a shortcut: sends and receives go through
+//! per-destination mailboxes keyed by (src, dst, tag, communicator), and
+//! the paper's deadlock-avoidance idiom — the `ISODD(k)` odd/even
+//! communicator split of Code 1 that keeps two consecutive iterations'
+//! collectives apart — is reproduced and property-tested.
+//!
+//! *Timing* is not modelled here (that is `simulator`); `simmpi` provides
+//! bit-accurate multi-rank numerics: halo exchanges move real vector
+//! planes, allreduces combine real partial sums, so multi-rank solver
+//! convergence (including reduction-order effects) is real.
+
+use std::collections::BTreeMap;
+
+use crate::mesh::HaloMap;
+
+/// Communicator id. The paper uses two (`MPIcommD[ISODD(k)]`) to overlap
+/// collectives of consecutive iterations without tag collisions.
+pub type Comm = usize;
+
+/// Message tag (the paper's `MPItag + ISODD(k)`).
+pub type Tag = u64;
+
+#[derive(Debug, Clone, PartialEq)]
+struct Message {
+    src: usize,
+    data: Vec<f64>,
+}
+
+/// Nonblocking request handle (mirrors MPI_Request + TAMPI_Iwait: the
+/// request resolves when the matching message is consumed).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Request {
+    dst: usize,
+    key: MsgKey,
+    seq: u64,
+}
+
+type MsgKey = (usize, usize, Tag, Comm); // (src, dst, tag, comm)
+
+/// All ranks' mailboxes. Ranks interact only through this structure.
+#[derive(Debug, Default)]
+pub struct World {
+    nranks: usize,
+    mailboxes: BTreeMap<MsgKey, Vec<Message>>,
+    seq: u64,
+    /// pending allreduce contributions per (comm, tag): rank -> value
+    reductions: BTreeMap<(Comm, Tag), BTreeMap<usize, Vec<f64>>>,
+    pub stats: WorldStats,
+}
+
+#[derive(Debug, Default, Clone)]
+pub struct WorldStats {
+    pub p2p_messages: u64,
+    pub p2p_bytes: u64,
+    pub allreduces: u64,
+}
+
+impl World {
+    pub fn new(nranks: usize) -> Self {
+        World {
+            nranks,
+            ..Default::default()
+        }
+    }
+
+    pub fn nranks(&self) -> usize {
+        self.nranks
+    }
+
+    /// Nonblocking send (MPI_Isend): the payload is buffered immediately
+    /// (eager protocol — matches small halo planes).
+    pub fn isend(&mut self, src: usize, dst: usize, tag: Tag, comm: Comm, data: Vec<f64>) -> Request {
+        assert!(src < self.nranks && dst < self.nranks, "bad rank");
+        let key = (src, dst, tag, comm);
+        self.stats.p2p_messages += 1;
+        self.stats.p2p_bytes += (data.len() * 8) as u64;
+        self.mailboxes.entry(key).or_default().push(Message { src, data });
+        self.seq += 1;
+        Request {
+            dst,
+            key,
+            seq: self.seq,
+        }
+    }
+
+    /// Blocking receive (MPI_Recv after TAMPI_Iwait): pops the oldest
+    /// matching message. Returns None if nothing is pending — callers in
+    /// lockstep phases treat that as a deadlock bug, and tests assert it.
+    pub fn recv(&mut self, src: usize, dst: usize, tag: Tag, comm: Comm) -> Option<Vec<f64>> {
+        let key = (src, dst, tag, comm);
+        let q = self.mailboxes.get_mut(&key)?;
+        if q.is_empty() {
+            return None;
+        }
+        Some(q.remove(0).data)
+    }
+
+    /// Number of undelivered messages (a clean phase ends at 0).
+    pub fn in_flight(&self) -> usize {
+        self.mailboxes.values().map(|q| q.len()).sum()
+    }
+
+    /// Contribute a local partial to an allreduce(SUM) on `comm`. When all
+    /// ranks have contributed, returns the reduced vector to every caller
+    /// via `try_complete_allreduce`.
+    pub fn allreduce_contribute(&mut self, rank: usize, comm: Comm, tag: Tag, partial: Vec<f64>) {
+        self.reductions
+            .entry((comm, tag))
+            .or_default()
+            .insert(rank, partial);
+    }
+
+    /// Complete the allreduce if every rank contributed. The reduction
+    /// order is deterministic (by rank) — matching MPI's fixed-topology
+    /// reduction trees; *task-order* nondeterminism lives in taskrt where
+    /// the paper locates it (§3.3), not here.
+    pub fn try_complete_allreduce(&mut self, comm: Comm, tag: Tag) -> Option<Vec<f64>> {
+        let parts = self.reductions.get(&(comm, tag))?;
+        if parts.len() != self.nranks {
+            return None;
+        }
+        let parts = self.reductions.remove(&(comm, tag)).unwrap();
+        let len = parts.values().next().map(|v| v.len()).unwrap_or(0);
+        let mut acc = vec![0.0; len];
+        for (_rank, v) in parts {
+            assert_eq!(v.len(), len, "ragged allreduce");
+            for (a, x) in acc.iter_mut().zip(&v) {
+                *a += x;
+            }
+        }
+        self.stats.allreduces += 1;
+        Some(acc)
+    }
+
+    /// Convenience synchronous allreduce for lockstep drivers: all ranks'
+    /// partials in, reduced vector out.
+    pub fn allreduce_sum(&mut self, comm: Comm, tag: Tag, partials: Vec<Vec<f64>>) -> Vec<f64> {
+        assert_eq!(partials.len(), self.nranks);
+        for (rank, p) in partials.into_iter().enumerate() {
+            self.allreduce_contribute(rank, comm, tag, p);
+        }
+        self.try_complete_allreduce(comm, tag)
+            .expect("all ranks contributed")
+    }
+}
+
+/// One rank's halo exchange: post all receives conceptually, send all
+/// planes, then deliver. The lockstep driver calls `post_sends` for every
+/// rank first, then `complete_recvs` for every rank — the simulated
+/// equivalent of Code 2's Irecv/Isend + TAMPI_Iwait tasks.
+pub struct HaloExchange;
+
+impl HaloExchange {
+    /// Copy this rank's boundary planes into the mailboxes.
+    pub fn post_sends(
+        world: &mut World,
+        rank: usize,
+        halo: &HaloMap,
+        x: &[f64],
+        tag: Tag,
+        comm: Comm,
+    ) {
+        for nb in &halo.neighbours {
+            // paper Code 2: gather `elements_to_send` into a contiguous
+            // buffer inside the send task
+            let buf: Vec<f64> = nb.send.iter().map(|&i| x[i]).collect();
+            world.isend(rank, nb.rank, tag, comm, buf);
+        }
+    }
+
+    /// Receive every neighbour's plane into the extended vector.
+    /// Returns false on missing message (deadlock — tests assert true).
+    pub fn complete_recvs(
+        world: &mut World,
+        rank: usize,
+        halo: &HaloMap,
+        x_ext: &mut [f64],
+        tag: Tag,
+        comm: Comm,
+    ) -> bool {
+        for nb in &halo.neighbours {
+            match world.recv(nb.rank, rank, tag, comm) {
+                Some(data) => {
+                    assert_eq!(data.len(), nb.recv_len);
+                    x_ext[nb.recv_offset..nb.recv_offset + nb.recv_len].copy_from_slice(&data);
+                }
+                None => return false,
+            }
+        }
+        true
+    }
+}
+
+/// The paper's ISODD macro: alternate communicators/tags per iteration to
+/// decouple consecutive iterations' communications.
+#[inline]
+pub fn isodd(k: usize) -> usize {
+    k & 1
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mesh::{Grid3, Partition};
+    use crate::util::proptest::forall;
+    use crate::util::Rng;
+
+    #[test]
+    fn p2p_fifo_per_key() {
+        let mut w = World::new(2);
+        w.isend(0, 1, 5, 0, vec![1.0]);
+        w.isend(0, 1, 5, 0, vec![2.0]);
+        assert_eq!(w.recv(0, 1, 5, 0), Some(vec![1.0]));
+        assert_eq!(w.recv(0, 1, 5, 0), Some(vec![2.0]));
+        assert_eq!(w.recv(0, 1, 5, 0), None);
+    }
+
+    #[test]
+    fn tags_and_comms_isolate() {
+        let mut w = World::new(2);
+        w.isend(0, 1, 1, 0, vec![1.0]);
+        w.isend(0, 1, 2, 0, vec![2.0]);
+        w.isend(0, 1, 1, 1, vec![3.0]);
+        assert_eq!(w.recv(0, 1, 2, 0), Some(vec![2.0]));
+        assert_eq!(w.recv(0, 1, 1, 1), Some(vec![3.0]));
+        assert_eq!(w.recv(0, 1, 1, 0), Some(vec![1.0]));
+        assert_eq!(w.in_flight(), 0);
+    }
+
+    #[test]
+    fn allreduce_sums_over_ranks() {
+        let mut w = World::new(4);
+        let parts: Vec<Vec<f64>> = (0..4).map(|r| vec![r as f64, 1.0]).collect();
+        let total = w.allreduce_sum(0, 0, parts);
+        assert_eq!(total, vec![6.0, 4.0]);
+        assert_eq!(w.stats.allreduces, 1);
+    }
+
+    #[test]
+    fn allreduce_incomplete_returns_none() {
+        let mut w = World::new(3);
+        w.allreduce_contribute(0, 0, 7, vec![1.0]);
+        w.allreduce_contribute(2, 0, 7, vec![1.0]);
+        assert_eq!(w.try_complete_allreduce(0, 7), None);
+        w.allreduce_contribute(1, 0, 7, vec![1.0]);
+        assert_eq!(w.try_complete_allreduce(0, 7), Some(vec![3.0]));
+    }
+
+    #[test]
+    fn halo_exchange_moves_boundary_planes() {
+        let g = Grid3::new(2, 2, 9);
+        let nranks = 3;
+        let parts: Vec<Partition> = (0..nranks).map(|r| Partition::new(g, r, nranks)).collect();
+        let mut w = World::new(nranks);
+        // each rank's x = its rank id everywhere
+        let xs: Vec<Vec<f64>> = parts
+            .iter()
+            .map(|p| {
+                let mut v = vec![0.0; p.n_ext()];
+                for e in v.iter_mut().take(p.n_local()) {
+                    *e = p.rank as f64 + 1.0;
+                }
+                v
+            })
+            .collect();
+        let mut xs = xs;
+        for p in &parts {
+            HaloExchange::post_sends(&mut w, p.rank, &p.halo_map(), &xs[p.rank], 0, 0);
+        }
+        for p in &parts {
+            let hm = p.halo_map();
+            let ok = HaloExchange::complete_recvs(&mut w, p.rank, &hm, &mut xs[p.rank], 0, 0);
+            assert!(ok, "deadlock at rank {}", p.rank);
+        }
+        assert_eq!(w.in_flight(), 0);
+        // rank 1 received rank 0's plane (value 1.0) then rank 2's (3.0)
+        let p1 = &parts[1];
+        let n = p1.n_local();
+        let plane = g.plane();
+        assert!(xs[1][n..n + plane].iter().all(|&v| v == 1.0));
+        assert!(xs[1][n + plane..n + 2 * plane].iter().all(|&v| v == 3.0));
+        // pad slot untouched
+        assert_eq!(xs[1][p1.pad_slot()], 0.0);
+    }
+
+    #[test]
+    fn isodd_communicators_prevent_cross_iteration_mixup() {
+        // Two iterations' halo payloads in flight simultaneously: the
+        // odd/even tag split must keep them separable in any recv order.
+        let g = Grid3::new(2, 2, 4);
+        let parts: Vec<Partition> = (0..2).map(|r| Partition::new(g, r, 2)).collect();
+        let mut w = World::new(2);
+        let mk = |val: f64, p: &Partition| {
+            let mut v = vec![0.0; p.n_ext()];
+            for e in v.iter_mut().take(p.n_local()) {
+                *e = val;
+            }
+            v
+        };
+        // iteration k=0 sends (tag base+0), iteration k=1 sends (tag base+1)
+        for (k, val) in [(0usize, 10.0), (1usize, 20.0)] {
+            for p in &parts {
+                let x = mk(val + p.rank as f64, p);
+                HaloExchange::post_sends(&mut w, p.rank, &p.halo_map(), &x, isodd(k) as Tag, isodd(k));
+            }
+        }
+        // receive iteration 1 first, then iteration 0 — no mixup
+        for k in [1usize, 0] {
+            for p in &parts {
+                let mut x = mk(0.0, p);
+                let ok =
+                    HaloExchange::complete_recvs(&mut w, p.rank, &p.halo_map(), &mut x, isodd(k) as Tag, isodd(k));
+                assert!(ok);
+                let other = 1 - p.rank;
+                let want = [10.0, 20.0][k] + other as f64;
+                let n = p.n_local();
+                assert!(x[n..n + g.plane()].iter().all(|&v| v == want), "k={k}");
+            }
+        }
+    }
+
+    #[test]
+    fn property_allreduce_order_independent() {
+        // Global sum must not depend on contribution order (MPI semantics:
+        // fixed reduction tree) — we reduce by rank order internally.
+        forall(
+            404,
+            100,
+            |r, s| {
+                let nranks = 2 + r.below(6);
+                let len = 1 + r.below(4 * s.0.max(1));
+                let vals: Vec<Vec<f64>> = (0..nranks)
+                    .map(|_| (0..len).map(|_| r.normal()).collect())
+                    .collect();
+                let mut order: Vec<usize> = (0..nranks).collect();
+                r.shuffle(&mut order);
+                (vals, order)
+            },
+            |(vals, order)| {
+                let nranks = vals.len();
+                let mut w1 = World::new(nranks);
+                for rank in 0..nranks {
+                    w1.allreduce_contribute(rank, 0, 0, vals[rank].clone());
+                }
+                let a = w1.try_complete_allreduce(0, 0).unwrap();
+                let mut w2 = World::new(nranks);
+                for &rank in order {
+                    w2.allreduce_contribute(rank, 0, 0, vals[rank].clone());
+                }
+                let b = w2.try_complete_allreduce(0, 0).unwrap();
+                a == b
+            },
+        );
+    }
+
+    #[test]
+    fn property_halo_roundtrip_any_world() {
+        // For any grid/rank-count, a full exchange delivers every plane to
+        // the right region and leaves nothing in flight.
+        forall(
+            505,
+            60,
+            |r, _| {
+                let nz = 3 + r.below(12);
+                let nranks = 1 + r.below(nz.min(5));
+                let nx = 1 + r.below(4);
+                let ny = 1 + r.below(4);
+                (nx, ny, nz, nranks, Rng::new(r.next_u64()))
+            },
+            |&(nx, ny, nz, nranks, ref rng)| {
+                let g = Grid3::new(nx, ny, nz);
+                let parts: Vec<Partition> =
+                    (0..nranks).map(|r| Partition::new(g, r, nranks)).collect();
+                let mut rng = rng.clone();
+                let mut w = World::new(nranks);
+                let mut xs: Vec<Vec<f64>> = parts
+                    .iter()
+                    .map(|p| {
+                        let mut v = vec![0.0; p.n_ext()];
+                        for e in v.iter_mut().take(p.n_local()) {
+                            *e = rng.normal();
+                        }
+                        v
+                    })
+                    .collect();
+                let globals: Vec<Vec<f64>> = xs.iter().map(|x| x.clone()).collect();
+                for p in &parts {
+                    HaloExchange::post_sends(&mut w, p.rank, &p.halo_map(), &xs[p.rank], 3, 0);
+                }
+                for p in &parts {
+                    let hm = p.halo_map();
+                    if !HaloExchange::complete_recvs(&mut w, p.rank, &hm, &mut xs[p.rank], 3, 0) {
+                        return false;
+                    }
+                }
+                if w.in_flight() != 0 {
+                    return false;
+                }
+                // verify via global indexing: each halo slot equals the
+                // owner's value
+                for p in &parts {
+                    for grow in 0..g.n() {
+                        if let Some(l) = p.local_of_global(grow) {
+                            if l >= p.n_local() && l < p.pad_slot() {
+                                // find owner rank + its local index
+                                let owner = parts
+                                    .iter()
+                                    .find(|q| {
+                                        q.local_of_global(grow)
+                                            .map(|ol| ol < q.n_local())
+                                            .unwrap_or(false)
+                                    })
+                                    .unwrap();
+                                let ol = owner.local_of_global(grow).unwrap();
+                                if xs[p.rank][l] != globals[owner.rank][ol] {
+                                    return false;
+                                }
+                            }
+                        }
+                    }
+                }
+                true
+            },
+        );
+    }
+}

@@ -1,0 +1,251 @@
+//! Per-iteration operation specs: what one solver iteration does, with
+//! the paper's own memory-traffic accounting (§3.1).
+//!
+//! "Let r and n̄ represent the number of rows and the average number of
+//! nonzeros per row ... A rough estimate of the total number of accessed
+//! elements per iteration of the CG-NB algorithm is given by (15+n̄)r,
+//! which is slightly larger than the (12+n̄)r corresponding to CG.
+//! ... the exact same difference of 3r elements between the BiCGStab
+//! algorithm, (21+2n̄)r, and the variant proposed here, (24+2n̄)r."
+//!
+//! Collectives are expressed as Start/Wait pairs: a blocking model
+//! synchronises at Start; a task model records the contribution at Start,
+//! keeps executing the segments in between, and synchronises at Wait —
+//! which is exactly the TAMPI overlap of Fig. 1(b). A Wait appearing
+//! *before* its Start refers to the previous iteration's collective
+//! (Jacobi/GS defer the residual check by one iteration in the task
+//! version).
+
+/// One step of an iteration.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Op {
+    /// Memory-bound kernel touching `elems` elements per matrix row.
+    Compute { name: &'static str, elems: f64 },
+    /// Nearest-neighbour halo exchange of one vector (one xy-plane per
+    /// neighbour).
+    Halo,
+    /// Contribute to allreduce `id`.
+    ArStart(u8),
+    /// Consume allreduce `id`'s result.
+    ArWait(u8),
+}
+
+/// A solver's per-iteration op sequence. `nbar` is n̄ (7 or 27).
+#[derive(Debug, Clone)]
+pub struct IterationSpec {
+    pub method: &'static str,
+    pub ops: Vec<Op>,
+}
+
+impl IterationSpec {
+    pub fn total_elems(&self) -> f64 {
+        self.ops
+            .iter()
+            .map(|op| match op {
+                Op::Compute { elems, .. } => *elems,
+                _ => 0.0,
+            })
+            .sum()
+    }
+
+    pub fn collectives(&self) -> usize {
+        self.ops
+            .iter()
+            .filter(|op| matches!(op, Op::ArStart(_)))
+            .count()
+    }
+
+    pub fn halos(&self) -> usize {
+        self.ops.iter().filter(|op| matches!(op, Op::Halo)).count()
+    }
+
+    /// Build the spec for a method name ("cg", "cg-nb", "bicgstab",
+    /// "bicgstab-b1", "jacobi", "gs", "gs-rb", "gs-relaxed").
+    pub fn for_method(method: &str, nbar: f64) -> IterationSpec {
+        use Op::*;
+        let n = nbar;
+        let ops = match method {
+            // classic CG: two blocking allreduces (paper Fig. 1(a))
+            "cg" => vec![
+                Halo,
+                Compute { name: "spmv+pap", elems: n + 3.0 },
+                ArStart(0),
+                ArWait(0),
+                Compute { name: "x,r update + rr", elems: 6.0 },
+                ArStart(1),
+                ArWait(1),
+                Compute { name: "p update", elems: 3.0 },
+            ],
+            // CG-NB (Algorithm 1): rr allreduce overlaps the SpMV on r;
+            // pAp allreduce overlaps Tk 3 and is consumed next iteration
+            "cg-nb" => vec![
+                ArWait(1), // previous iteration's alpha_d
+                Compute { name: "Tk0 r update + rr", elems: 3.0 },
+                ArStart(0),
+                Halo,
+                Compute { name: "Tk1 spmv(Ar)", elems: n + 2.0 },
+                ArWait(0),
+                Compute { name: "Tk2 Ap,p update + ad", elems: 7.0 },
+                ArStart(1),
+                Compute { name: "Tk3 x update", elems: 3.0 },
+            ],
+            // classic BiCGStab: three blocking allreduces
+            "bicgstab" => vec![
+                Halo,
+                Compute { name: "spmv(Ap) + ad", elems: n + 3.0 },
+                ArStart(0),
+                ArWait(0),
+                Compute { name: "s update", elems: 3.0 },
+                Halo,
+                Compute { name: "spmv(As) + omega dots", elems: n + 3.0 },
+                ArStart(1),
+                ArWait(1),
+                Compute { name: "x,r update + an,beta", elems: 7.0 },
+                ArStart(2),
+                ArWait(2),
+                Compute { name: "p update", elems: 5.0 },
+            ],
+            // BiCGStab-B1 (Algorithm 2): barrier 0 unavoidable; omega pair
+            // overlaps x_{1/2}; (an, beta) pair overlaps p_{1/2}
+            "bicgstab-b1" => vec![
+                Halo,
+                Compute { name: "spmv(Ap) + ad", elems: n + 3.0 },
+                ArStart(0),
+                ArWait(0), // the one blocking barrier (line 3)
+                Compute { name: "Tk1 s update", elems: 3.0 },
+                Halo,
+                Compute { name: "Tk2 spmv(As) + omega", elems: n + 3.0 },
+                ArStart(1),
+                Compute { name: "Tk3 x half", elems: 3.0 },
+                ArWait(1),
+                Compute { name: "Tk4 x,r + an,beta", elems: 7.0 },
+                ArStart(2),
+                Compute { name: "Tk5 p half", elems: 3.0 },
+                ArWait(2),
+                Compute { name: "Tk7 p update", elems: 2.0 },
+            ],
+            // Jacobi: one fused kernel; residual allreduce deferred one
+            // iteration in the task model
+            "jacobi" => vec![
+                ArWait(0),
+                Halo,
+                Compute { name: "sweep + res", elems: n + 3.0 },
+                ArStart(0),
+            ],
+            // symmetric GS (processor-local or relaxed): fwd + bwd sweeps
+            "gs" | "gs-relaxed" => vec![
+                ArWait(0),
+                Halo,
+                Compute { name: "fwd sweep", elems: n + 3.0 },
+                Halo,
+                Compute { name: "bwd sweep", elems: n + 3.0 },
+                ArStart(0),
+            ],
+            // red-black GS: four half sweeps, halo before each colour
+            "gs-rb" => vec![
+                ArWait(0),
+                Halo,
+                Compute { name: "fwd red sweep", elems: (n + 3.0) / 2.0 },
+                Halo,
+                Compute { name: "fwd black sweep", elems: (n + 3.0) / 2.0 },
+                Halo,
+                Compute { name: "bwd black sweep", elems: (n + 3.0) / 2.0 },
+                Halo,
+                Compute { name: "bwd red sweep", elems: (n + 3.0) / 2.0 },
+                ArStart(0),
+            ],
+            other => panic!("no iteration spec for method '{other}'"),
+        };
+        IterationSpec {
+            method: Box::leak(method.to_string().into_boxed_str()),
+            ops,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_element_accounting() {
+        // §3.1: CG (12+n̄)r, CG-NB (15+n̄)r, BiCGStab (21+2n̄)r, B1 (24+2n̄)r
+        for nbar in [7.0, 27.0] {
+            let cg = IterationSpec::for_method("cg", nbar);
+            assert!((cg.total_elems() - (12.0 + nbar)).abs() < 1e-9);
+            let nb = IterationSpec::for_method("cg-nb", nbar);
+            assert!((nb.total_elems() - (15.0 + nbar)).abs() < 1e-9);
+            let bi = IterationSpec::for_method("bicgstab", nbar);
+            assert!((bi.total_elems() - (21.0 + 2.0 * nbar)).abs() < 1e-9);
+            let b1 = IterationSpec::for_method("bicgstab-b1", nbar);
+            assert!((b1.total_elems() - (24.0 + 2.0 * nbar)).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn relative_extra_cost_matches_paper() {
+        // "maximum relative increase ... 3/(12+n̄) ≈ 15.8% for CG-NB and
+        // 3/(21+2n̄) ≈ 8.6% for BiCGStab-B1" (with n̄=7)
+        let cg = IterationSpec::for_method("cg", 7.0).total_elems();
+        let nb = IterationSpec::for_method("cg-nb", 7.0).total_elems();
+        assert!(((nb - cg) / cg - 0.158).abs() < 0.01);
+        let bi = IterationSpec::for_method("bicgstab", 7.0).total_elems();
+        let b1 = IterationSpec::for_method("bicgstab-b1", 7.0).total_elems();
+        assert!(((b1 - bi) / bi - 0.086).abs() < 0.01);
+    }
+
+    #[test]
+    fn collective_counts() {
+        assert_eq!(IterationSpec::for_method("cg", 7.0).collectives(), 2);
+        assert_eq!(IterationSpec::for_method("cg-nb", 7.0).collectives(), 2);
+        assert_eq!(IterationSpec::for_method("bicgstab", 7.0).collectives(), 3);
+        assert_eq!(IterationSpec::for_method("bicgstab-b1", 7.0).collectives(), 3);
+        assert_eq!(IterationSpec::for_method("jacobi", 7.0).collectives(), 1);
+        assert_eq!(IterationSpec::for_method("gs", 7.0).collectives(), 1);
+    }
+
+    #[test]
+    fn start_wait_pairing() {
+        for m in ["cg", "cg-nb", "bicgstab", "bicgstab-b1", "jacobi", "gs", "gs-rb", "gs-relaxed"] {
+            let spec = IterationSpec::for_method(m, 7.0);
+            let starts: Vec<u8> = spec
+                .ops
+                .iter()
+                .filter_map(|op| match op {
+                    Op::ArStart(id) => Some(*id),
+                    _ => None,
+                })
+                .collect();
+            let waits: Vec<u8> = spec
+                .ops
+                .iter()
+                .filter_map(|op| match op {
+                    Op::ArWait(id) => Some(*id),
+                    _ => None,
+                })
+                .collect();
+            let mut s = starts.clone();
+            let mut w = waits.clone();
+            s.sort();
+            w.sort();
+            assert_eq!(s, w, "method {m}: every collective started is waited");
+        }
+    }
+
+    #[test]
+    fn blocking_barriers_per_method() {
+        // Count Waits that appear immediately after their Start (no
+        // overlap window): CG has 2, CG-NB 0 (both deferred), B1 exactly 1.
+        let blocking = |m: &str| {
+            let spec = IterationSpec::for_method(m, 7.0);
+            spec.ops
+                .windows(2)
+                .filter(|w| matches!((w[0], w[1]), (Op::ArStart(a), Op::ArWait(b)) if a == b))
+                .count()
+        };
+        assert_eq!(blocking("cg"), 2);
+        assert_eq!(blocking("cg-nb"), 0);
+        assert_eq!(blocking("bicgstab"), 3);
+        assert_eq!(blocking("bicgstab-b1"), 1);
+    }
+}

@@ -1,0 +1,80 @@
+//! Compute backend abstraction: the solvers are written against this
+//! trait so the same algorithm can run on the native Rust kernels or on
+//! the AOT-compiled XLA executables (runtime::XlaCompute). Python never
+//! appears on this path — the XLA backend executes pre-lowered HLO.
+
+use crate::kernels;
+use crate::sparse::EllMatrix;
+
+pub trait Compute {
+    /// y = A·x_ext.
+    fn spmv(&mut self, a: &EllMatrix, x_ext: &[f64], y: &mut [f64]);
+
+    /// Local partial of x·y.
+    fn dot(&mut self, x: &[f64], y: &[f64]) -> f64;
+
+    /// y = a·x + b·y.
+    fn axpby(&mut self, a: f64, x: &[f64], b: f64, y: &mut [f64]);
+
+    /// z = a·x + b·y + c·z (paper §3.1 ad-hoc kernel).
+    fn waxpby(&mut self, a: f64, x: &[f64], b: f64, y: &[f64], c: f64, z: &mut [f64]);
+
+    /// One Jacobi sweep; returns local ||b - A·x||² of the incoming x.
+    fn jacobi_step(&mut self, a: &EllMatrix, b: &[f64], x_ext: &[f64], x_new: &mut [f64]) -> f64;
+
+    /// Coloured GS half-sweep (in place); returns local residual partial.
+    fn gs_colour_sweep(
+        &mut self,
+        a: &EllMatrix,
+        b: &[f64],
+        mask: &[bool],
+        colour: bool,
+        x_ext: &mut [f64],
+    ) -> f64;
+
+    /// Backend identity for logs.
+    fn name(&self) -> &'static str;
+}
+
+/// Native Rust kernels (rust/src/kernels).
+#[derive(Debug, Default, Clone)]
+pub struct Native;
+
+impl Compute for Native {
+    fn spmv(&mut self, a: &EllMatrix, x_ext: &[f64], y: &mut [f64]) {
+        kernels::spmv_ell(a, x_ext, y, 0, a.n);
+    }
+
+    fn dot(&mut self, x: &[f64], y: &[f64]) -> f64 {
+        kernels::dot(x, y, 0, x.len().min(y.len()))
+    }
+
+    fn axpby(&mut self, a: f64, x: &[f64], b: f64, y: &mut [f64]) {
+        let n = x.len().min(y.len());
+        kernels::axpby(a, x, b, y, 0, n);
+    }
+
+    fn waxpby(&mut self, a: f64, x: &[f64], b: f64, y: &[f64], c: f64, z: &mut [f64]) {
+        let n = x.len().min(z.len());
+        kernels::waxpby(a, x, b, y, c, z, 0, n);
+    }
+
+    fn jacobi_step(&mut self, a: &EllMatrix, b: &[f64], x_ext: &[f64], x_new: &mut [f64]) -> f64 {
+        kernels::jacobi_sweep(a, b, x_ext, x_new, 0, a.n)
+    }
+
+    fn gs_colour_sweep(
+        &mut self,
+        a: &EllMatrix,
+        b: &[f64],
+        mask: &[bool],
+        colour: bool,
+        x_ext: &mut [f64],
+    ) -> f64 {
+        kernels::gs_colour_sweep(a, b, mask, colour, x_ext, 0, a.n)
+    }
+
+    fn name(&self) -> &'static str {
+        "native"
+    }
+}

@@ -1,0 +1,413 @@
+//! BiCGStab: classic (three blocking allreduces per iteration) and the
+//! paper's BiCGStab-B1 (Algorithm 2 — operations permuted so that two of
+//! the three barriers can be overlapped; one blocking allreduce remains
+//! at line 3).
+//!
+//! The restart procedure (lines 13-15) is the paper's defence against the
+//! near-breakdown that task-reordered reductions aggravate (§3.3): when
+//! the r'-residual correlation αn drops below the restart threshold, the
+//! shadow residual r' is re-seeded from the current residual. Restarts
+//! are counted in the stats (ablation D4 disables them).
+
+use super::{allreduce_pair, allreduce_scalar, completion_order, exchange_all, task_blocks};
+use super::{Compute, Problem, RankState, SolveOpts, SolveStats};
+use crate::kernels;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BiVariant {
+    Classic,
+    B1,
+}
+
+fn dot_ordered(
+    backend: &mut dyn Compute,
+    x: &[f64],
+    y: &[f64],
+    n: usize,
+    opts: &SolveOpts,
+    k: usize,
+    salt: usize,
+) -> f64 {
+    if opts.ntasks == 0 {
+        return backend.dot(&x[..n], &y[..n]);
+    }
+    let blocks = task_blocks(n, opts.ntasks);
+    let order = completion_order(blocks.len(), opts.task_order_seed, 8 * k + salt);
+    let mut acc = 0.0;
+    for &bi in &order {
+        let (r0, r1) = blocks[bi];
+        acc += kernels::dot(x, y, r0, r1);
+    }
+    acc
+}
+
+pub fn solve(
+    pb: &mut Problem,
+    variant: BiVariant,
+    opts: &SolveOpts,
+    backend: &mut dyn Compute,
+) -> SolveStats {
+    match variant {
+        BiVariant::Classic => classic(pb, opts, backend),
+        BiVariant::B1 => b1(pb, opts, backend),
+    }
+}
+
+fn classic(pb: &mut Problem, opts: &SolveOpts, backend: &mut dyn Compute) -> SolveStats {
+    let nranks = pb.nranks();
+    // r = b; r' = r; p = r; rho = (r', r)
+    for st in &mut pb.ranks {
+        let n = st.n();
+        st.r_ext[..n].copy_from_slice(&st.sys.b);
+        st.p_ext[..n].copy_from_slice(&st.sys.b);
+        st.rprime[..n].copy_from_slice(&st.sys.b);
+    }
+    let parts: Vec<f64> = pb
+        .ranks
+        .iter_mut()
+        .map(|st| {
+            let n = st.n();
+            backend.dot(&st.rprime[..n], &st.r_ext[..n])
+        })
+        .collect();
+    let mut rho = allreduce_scalar(&mut pb.world, 0, 30, parts);
+    let rr0 = rho.max(f64::MIN_POSITIVE); // (r,r) == (r',r) at start
+    let mut rr = rho;
+
+    let mut history = Vec::new();
+    let mut iterations = 0;
+    let mut converged = false;
+
+    for k in 0..opts.max_iters {
+        if (rr / rr0).sqrt() <= opts.eps_rel(rr0) {
+            converged = true;
+            break;
+        }
+        // Ap = A·p ; ad = (r', Ap)                       BARRIER 1
+        exchange_all(&mut pb.world, &mut pb.ranks, |st| &mut st.p_ext, 2 * k);
+        let mut parts = Vec::with_capacity(nranks);
+        for st in &mut pb.ranks {
+            let n = st.n();
+            backend.spmv(&st.sys.a, &st.p_ext, &mut st.ap);
+            parts.push(dot_ordered(backend, &st.ap, &st.rprime, n, opts, k, 0));
+        }
+        let ad = allreduce_scalar(&mut pb.world, k, 31, parts);
+        let alpha = rho / ad;
+
+        // s = r − alpha·Ap ; As = A·s ; ω = (As,s)/(As,As)   BARRIER 2
+        for st in &mut pb.ranks {
+            let n = st.n();
+            let RankState { r_ext, s_ext, ap, .. } = st;
+            s_ext[..n].copy_from_slice(&r_ext[..n]);
+            backend.axpby(-alpha, &ap[..n], 1.0, &mut s_ext[..n]);
+        }
+        exchange_all(&mut pb.world, &mut pb.ranks, |st| &mut st.s_ext, 2 * k + 1);
+        let mut parts = Vec::with_capacity(nranks);
+        for st in &mut pb.ranks {
+            let n = st.n();
+            backend.spmv(&st.sys.a, &st.s_ext, &mut st.as_);
+            let num = dot_ordered(backend, &st.as_, &st.s_ext, n, opts, k, 1);
+            let den = dot_ordered(backend, &st.as_, &st.as_, n, opts, k, 2);
+            parts.push((num, den));
+        }
+        let (num, den) = allreduce_pair(&mut pb.world, k, 32, parts);
+        let omega = num / den;
+
+        // x += alpha·p + omega·s ; r = s − omega·As ;
+        // rho' = (r', r) ; rr = (r, r)                       BARRIER 3
+        let mut parts = Vec::with_capacity(nranks);
+        for st in &mut pb.ranks {
+            let n = st.n();
+            let RankState {
+                x_ext,
+                r_ext,
+                s_ext,
+                p_ext,
+                as_,
+                rprime,
+                ..
+            } = st;
+            kernels::waxpby(alpha, p_ext, omega, s_ext, 1.0, x_ext, 0, n);
+            r_ext[..n].copy_from_slice(&s_ext[..n]);
+            backend.axpby(-omega, &as_[..n], 1.0, &mut r_ext[..n]);
+            let rho_p = dot_ordered(backend, rprime, r_ext, n, opts, k, 3);
+            let rr_p = dot_ordered(backend, r_ext, r_ext, n, opts, k, 4);
+            parts.push((rho_p, rr_p));
+        }
+        let (rho_new, rr_new) = allreduce_pair(&mut pb.world, k, 33, parts);
+
+        // p = r + beta (p − omega·Ap)
+        let beta = (rho_new / rho) * (alpha / omega);
+        for st in &mut pb.ranks {
+            let n = st.n();
+            let RankState { r_ext, p_ext, ap, .. } = st;
+            backend.axpby(-omega, &ap[..n], 1.0, &mut p_ext[..n]);
+            // p = r + beta * p
+            for i in 0..n {
+                p_ext[i] = r_ext[i] + beta * p_ext[i];
+            }
+        }
+        rho = rho_new;
+        rr = rr_new;
+        iterations = k + 1;
+        history.push((rr / rr0).sqrt());
+    }
+
+    SolveStats {
+        method: "bicgstab",
+        iterations,
+        converged,
+        rel_residual: (rr / rr0).sqrt(),
+        x_error: pb.x_error(),
+        history,
+        restarts: 0,
+    }
+}
+
+/// BiCGStab-B1 (Algorithm 2): one blocking barrier (αd, line 3); the ω
+/// pair overlaps the x_{j+1/2} update and the (αn, β) pair overlaps the
+/// p_{j+1/2} update. Restart per lines 13-15.
+fn b1(pb: &mut Problem, opts: &SolveOpts, backend: &mut dyn Compute) -> SolveStats {
+    let nranks = pb.nranks();
+    // line 1: r = b ; p = r ; beta = (r,r) ; r' = r/sqrt(beta) ; an = (r,r')
+    for st in &mut pb.ranks {
+        let n = st.n();
+        st.r_ext[..n].copy_from_slice(&st.sys.b);
+        st.p_ext[..n].copy_from_slice(&st.sys.b);
+    }
+    let parts: Vec<f64> = pb
+        .ranks
+        .iter_mut()
+        .map(|st| {
+            let n = st.n();
+            backend.dot(&st.r_ext[..n], &st.r_ext[..n])
+        })
+        .collect();
+    let mut beta = allreduce_scalar(&mut pb.world, 0, 40, parts);
+    let beta0 = beta.max(f64::MIN_POSITIVE);
+    let inv = 1.0 / beta.sqrt();
+    for st in &mut pb.ranks {
+        let n = st.n();
+        for i in 0..n {
+            st.rprime[i] = st.r_ext[i] * inv;
+        }
+    }
+    let parts: Vec<f64> = pb
+        .ranks
+        .iter_mut()
+        .map(|st| {
+            let n = st.n();
+            backend.dot(&st.r_ext[..n], &st.rprime[..n])
+        })
+        .collect();
+    let mut an = allreduce_scalar(&mut pb.world, 0, 41, parts);
+
+    let mut history = Vec::new();
+    let mut iterations = 0;
+    let mut converged = false;
+    let mut restarts = 0;
+
+    for k in 0..opts.max_iters {
+        // line 3: ad = (A·p)·r'                    BARRIER (the one kept)
+        exchange_all(&mut pb.world, &mut pb.ranks, |st| &mut st.p_ext, 2 * k);
+        let mut parts = Vec::with_capacity(nranks);
+        for st in &mut pb.ranks {
+            let n = st.n();
+            backend.spmv(&st.sys.a, &st.p_ext, &mut st.ap);
+            parts.push(dot_ordered(backend, &st.ap, &st.rprime, n, opts, k, 0));
+        }
+        let ad = allreduce_scalar(&mut pb.world, k, 42, parts);
+        let alpha = an / ad;
+
+        // line 4 (Tk 1): s = r − alpha·Ap
+        for st in &mut pb.ranks {
+            let n = st.n();
+            let RankState { r_ext, s_ext, ap, .. } = st;
+            s_ext[..n].copy_from_slice(&r_ext[..n]);
+            backend.axpby(-alpha, &ap[..n], 1.0, &mut s_ext[..n]);
+        }
+        // line 5 (Tk 2): ω = (A·s)·s / ((A·s)·(A·s)) — overlapped with
+        // line 6 (Tk 3): x_{1/2} = x + alpha·p
+        exchange_all(&mut pb.world, &mut pb.ranks, |st| &mut st.s_ext, 2 * k + 1);
+        let mut parts = Vec::with_capacity(nranks);
+        for st in &mut pb.ranks {
+            let n = st.n();
+            backend.spmv(&st.sys.a, &st.s_ext, &mut st.as_);
+            let num = dot_ordered(backend, &st.as_, &st.s_ext, n, opts, k, 1);
+            let den = dot_ordered(backend, &st.as_, &st.as_, n, opts, k, 2);
+            parts.push((num, den));
+        }
+        for st in &mut pb.ranks {
+            let n = st.n();
+            let RankState { x_ext, p_ext, .. } = st;
+            backend.axpby(alpha, &p_ext[..n], 1.0, &mut x_ext[..n]);
+        }
+        let (num, den) = allreduce_pair(&mut pb.world, k, 43, parts);
+        let omega = num / den;
+
+        // line 7: exit check on beta (previous iteration's (r,r))
+        if (beta / beta0).sqrt() <= opts.eps_rel(beta0) {
+            // line 18: x = x_{1/2} + omega·s
+            for st in &mut pb.ranks {
+                let n = st.n();
+                let RankState { x_ext, s_ext, .. } = st;
+                backend.axpby(omega, &s_ext[..n], 1.0, &mut x_ext[..n]);
+            }
+            converged = true;
+            break;
+        }
+
+        // lines 8-11 (Tk 4): x += omega·s ; r = s − omega·As ;
+        // an' = (r, r') ; beta' = (r, r)
+        let mut parts = Vec::with_capacity(nranks);
+        for st in &mut pb.ranks {
+            let n = st.n();
+            let RankState {
+                x_ext,
+                r_ext,
+                s_ext,
+                as_,
+                rprime,
+                ..
+            } = st;
+            backend.axpby(omega, &s_ext[..n], 1.0, &mut x_ext[..n]);
+            r_ext[..n].copy_from_slice(&s_ext[..n]);
+            backend.axpby(-omega, &as_[..n], 1.0, &mut r_ext[..n]);
+            let an_p = dot_ordered(backend, r_ext, rprime, n, opts, k, 3);
+            let bt_p = dot_ordered(backend, r_ext, r_ext, n, opts, k, 4);
+            parts.push((an_p, bt_p));
+        }
+        // overlapped with line 12 (Tk 5): p_{1/2} = p − omega·Ap
+        for st in &mut pb.ranks {
+            let n = st.n();
+            let RankState { p_ext, ap, .. } = st;
+            backend.axpby(-omega, &ap[..n], 1.0, &mut p_ext[..n]);
+        }
+        let (an_new, beta_new) = allreduce_pair(&mut pb.world, k, 44, parts);
+        beta = beta_new;
+
+        if (an_new.abs() / beta0).sqrt() < opts.restart_rel(beta0) {
+            // lines 13-15 (Tk 6): restart — p = r ; r' = r/sqrt(beta)
+            restarts += 1;
+            let inv = 1.0 / beta.sqrt();
+            for st in &mut pb.ranks {
+                let n = st.n();
+                let RankState {
+                    r_ext, p_ext, rprime, ..
+                } = st;
+                p_ext[..n].copy_from_slice(&r_ext[..n]);
+                for i in 0..n {
+                    rprime[i] = r_ext[i] * inv;
+                }
+            }
+            let parts: Vec<f64> = pb
+                .ranks
+                .iter_mut()
+                .map(|st| {
+                    let n = st.n();
+                    backend.dot(&st.r_ext[..n], &st.rprime[..n])
+                })
+                .collect();
+            an = allreduce_scalar(&mut pb.world, k, 45, parts);
+        } else {
+            // line 17 (Tk 7): p = r + (an'/(ad·omega))·p_{1/2}
+            let coeff = an_new / (ad * omega);
+            for st in &mut pb.ranks {
+                let n = st.n();
+                let RankState { r_ext, p_ext, .. } = st;
+                for i in 0..n {
+                    p_ext[i] = r_ext[i] + coeff * p_ext[i];
+                }
+            }
+            an = an_new;
+        }
+        iterations = k + 1;
+        history.push((beta / beta0).sqrt());
+    }
+
+    SolveStats {
+        method: "bicgstab-b1",
+        iterations,
+        converged,
+        rel_residual: (beta / beta0).sqrt(),
+        x_error: pb.x_error(),
+        history,
+        restarts,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{Method, Native, Problem, SolveOpts};
+    use super::*;
+    use crate::mesh::Grid3;
+    use crate::sparse::StencilKind;
+
+    fn run(
+        method: Method,
+        kind: StencilKind,
+        nranks: usize,
+        opts: &SolveOpts,
+    ) -> super::super::SolveStats {
+        let mut pb = Problem::build(Grid3::new(4, 4, 8), kind, nranks);
+        pb.solve(method, opts, &mut Native)
+    }
+
+    #[test]
+    fn classic_converges() {
+        for kind in [StencilKind::P7, StencilKind::P27] {
+            let s = run(Method::BiCgStab(BiVariant::Classic), kind, 1, &SolveOpts::default());
+            assert!(s.converged, "{kind:?}");
+            assert!(s.x_error < 1e-4, "{kind:?} x_err={}", s.x_error);
+        }
+    }
+
+    #[test]
+    fn classic_multirank_converges() {
+        let s = run(Method::BiCgStab(BiVariant::Classic), StencilKind::P7, 4, &SolveOpts::default());
+        assert!(s.converged);
+        assert!(s.x_error < 1e-4);
+    }
+
+    #[test]
+    fn b1_converges() {
+        for kind in [StencilKind::P7, StencilKind::P27] {
+            let s = run(Method::BiCgStab(BiVariant::B1), kind, 2, &SolveOpts::default());
+            assert!(s.converged, "{kind:?} rel={}", s.rel_residual);
+            assert!(s.x_error < 1e-4, "{kind:?} x_err={}", s.x_error);
+        }
+    }
+
+    #[test]
+    fn b1_iterations_comparable_to_classic() {
+        let opts = SolveOpts::default();
+        let c = run(Method::BiCgStab(BiVariant::Classic), StencilKind::P7, 2, &opts);
+        let v = run(Method::BiCgStab(BiVariant::B1), StencilKind::P7, 2, &opts);
+        let diff = (c.iterations as i64 - v.iterations as i64).abs();
+        assert!(diff <= 3, "classic {} vs b1 {}", c.iterations, v.iterations);
+    }
+
+    #[test]
+    fn task_order_converges_with_restart_guard() {
+        let mut opts = SolveOpts::default();
+        opts.ntasks = 16;
+        opts.task_order_seed = 7;
+        let s = run(Method::BiCgStab(BiVariant::B1), StencilKind::P7, 2, &opts);
+        assert!(s.converged);
+        assert!(s.x_error < 1e-4);
+    }
+
+    #[test]
+    fn bicgstab_faster_than_cg_iterations() {
+        // paper §4.1: 8 (BiCGStab) vs 12 (CG) iterations on 7-pt
+        let opts = SolveOpts::default();
+        let bi = run(Method::BiCgStab(BiVariant::Classic), StencilKind::P7, 1, &opts);
+        let cg = run(Method::Cg(super::super::CgVariant::Classic), StencilKind::P7, 1, &opts);
+        assert!(
+            bi.iterations <= cg.iterations,
+            "bicgstab {} vs cg {}",
+            bi.iterations,
+            cg.iterations
+        );
+    }
+}

@@ -1,0 +1,321 @@
+//! Conjugate gradient: classic (two blocking allreduces per iteration)
+//! and the paper's nonblocking CG-NB (Algorithm 1, zero blocking barriers
+//! under the task model).
+//!
+//! Numerics here are exact mirrors of the L2 JAX segments in
+//! python/compile/model.py — same segmentation, same update formulas —
+//! so a run through the XLA backend and a run through the native kernels
+//! are step-for-step comparable.
+//!
+//! Task-ordered reductions: with `opts.ntasks > 0` every local dot is
+//! computed block-wise and accumulated in shuffled completion order
+//! (§3.3: "the task execution order is not guaranteed ... floating-point
+//! rounding errors can accumulate"). CG tolerates this (paper: "this
+//! does not constitute an issue for the CG methods").
+
+use super::{allreduce_scalar, completion_order, exchange_all, task_blocks};
+use super::{Compute, Problem, RankState, SolveOpts, SolveStats};
+use crate::kernels;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CgVariant {
+    Classic,
+    NonBlocking,
+}
+
+/// Block-ordered local dot product (reduction in task completion order).
+fn dot_ordered(
+    backend: &mut dyn Compute,
+    x: &[f64],
+    y: &[f64],
+    n: usize,
+    opts: &SolveOpts,
+    k: usize,
+) -> f64 {
+    if opts.ntasks == 0 {
+        return backend.dot(&x[..n], &y[..n]);
+    }
+    let blocks = task_blocks(n, opts.ntasks);
+    let order = completion_order(blocks.len(), opts.task_order_seed, k);
+    let mut acc = 0.0;
+    for &bi in &order {
+        let (r0, r1) = blocks[bi];
+        acc += kernels::dot(x, y, r0, r1);
+    }
+    acc
+}
+
+pub fn solve(
+    pb: &mut Problem,
+    variant: CgVariant,
+    opts: &SolveOpts,
+    backend: &mut dyn Compute,
+) -> SolveStats {
+    match variant {
+        CgVariant::Classic => classic(pb, opts, backend),
+        CgVariant::NonBlocking => nonblocking(pb, opts, backend),
+    }
+}
+
+fn classic(pb: &mut Problem, opts: &SolveOpts, backend: &mut dyn Compute) -> SolveStats {
+    let nranks = pb.nranks();
+    // init: r = b; p = r
+    for st in &mut pb.ranks {
+        let n = st.n();
+        st.r_ext[..n].copy_from_slice(&st.sys.b);
+        st.p_ext[..n].copy_from_slice(&st.sys.b);
+    }
+    let partials: Vec<f64> = pb
+        .ranks
+        .iter_mut()
+        .map(|st| {
+            let n = st.n();
+            backend.dot(&st.r_ext[..n], &st.r_ext[..n])
+        })
+        .collect();
+    let mut rr = allreduce_scalar(&mut pb.world, 0, 10, partials);
+    let rr0 = rr.max(f64::MIN_POSITIVE);
+
+    let mut history = Vec::new();
+    let mut iterations = 0;
+    let mut converged = false;
+
+    for k in 0..opts.max_iters {
+        let rel = (rr / rr0).sqrt();
+        if rel <= opts.eps_rel(rr0) {
+            converged = true;
+            break;
+        }
+        // halo exchange of p, SpMV, local pAp
+        exchange_all(&mut pb.world, &mut pb.ranks, |st| &mut st.p_ext, k);
+        let mut partials = Vec::with_capacity(nranks);
+        for st in &mut pb.ranks {
+            let n = st.n();
+            let (p_ext, ap) = (&st.p_ext, &mut st.ap);
+            backend.spmv(&st.sys.a, p_ext, ap);
+            partials.push(dot_ordered(backend, &st.ap, &st.p_ext, n, opts, k));
+        }
+        let pap = allreduce_scalar(&mut pb.world, k, 11, partials); // BARRIER 1
+        let alpha = rr / pap;
+
+        // x += alpha p ; r -= alpha Ap ; rr' = (r,r)
+        let mut partials = Vec::with_capacity(nranks);
+        for st in &mut pb.ranks {
+            let n = st.n();
+            let RankState {
+                x_ext, r_ext, p_ext, ap, ..
+            } = st;
+            backend.axpby(alpha, &p_ext[..n], 1.0, &mut x_ext[..n]);
+            backend.axpby(-alpha, &ap[..n], 1.0, &mut r_ext[..n]);
+            partials.push(dot_ordered(backend, r_ext, r_ext, n, opts, k));
+        }
+        let rr_new = allreduce_scalar(&mut pb.world, k, 12, partials); // BARRIER 2
+        let beta = rr_new / rr;
+
+        // p = r + beta p
+        for st in &mut pb.ranks {
+            let n = st.n();
+            let RankState { r_ext, p_ext, .. } = st;
+            backend.axpby(1.0, &r_ext[..n], beta, &mut p_ext[..n]);
+        }
+        rr = rr_new;
+        iterations = k + 1;
+        history.push((rr / rr0).sqrt());
+    }
+
+    SolveStats {
+        method: "cg",
+        iterations,
+        converged,
+        rel_residual: (rr / rr0).sqrt(),
+        x_error: pb.x_error(),
+        history,
+        restarts: 0,
+    }
+}
+
+/// CG-NB (Algorithm 1). The SpMV is applied to r, so A·p is maintained as
+/// a vector update — removing both blocking barriers: the rr allreduce
+/// overlaps with the SpMV on r (Tk 1) and the pAp allreduce overlaps with
+/// the x update (Tk 3).
+fn nonblocking(pb: &mut Problem, opts: &SolveOpts, backend: &mut dyn Compute) -> SolveStats {
+    let nranks = pb.nranks();
+    // init: r = b; p = r; Ap = A·p; an = (r,r); ad = (Ap,p)
+    for st in &mut pb.ranks {
+        let n = st.n();
+        st.r_ext[..n].copy_from_slice(&st.sys.b);
+        st.p_ext[..n].copy_from_slice(&st.sys.b);
+    }
+    exchange_all(&mut pb.world, &mut pb.ranks, |st| &mut st.p_ext, 0);
+    let mut an_parts = Vec::with_capacity(nranks);
+    let mut ad_parts = Vec::with_capacity(nranks);
+    for st in &mut pb.ranks {
+        let n = st.n();
+        backend.spmv(&st.sys.a, &st.p_ext, &mut st.ap);
+        an_parts.push(backend.dot(&st.r_ext[..n], &st.r_ext[..n]));
+        ad_parts.push(backend.dot(&st.ap[..n], &st.p_ext[..n]));
+    }
+    let mut an = allreduce_scalar(&mut pb.world, 0, 20, an_parts);
+    let mut ad = allreduce_scalar(&mut pb.world, 0, 21, ad_parts);
+    let an0 = an.max(f64::MIN_POSITIVE);
+    let mut alpha = an / ad;
+
+    let mut history = Vec::new();
+    let mut iterations = 0;
+    let mut converged = false;
+
+    for k in 1..=opts.max_iters {
+        if (an / an0).sqrt() <= opts.eps_rel(an0) {
+            converged = true;
+            break;
+        }
+        // Tk 0: r -= alpha·Ap ; an' = (r,r)   [line 4-5]
+        let mut partials = Vec::with_capacity(nranks);
+        for st in &mut pb.ranks {
+            let n = st.n();
+            let RankState { r_ext, ap, .. } = st;
+            backend.axpby(-alpha, &ap[..n], 1.0, &mut r_ext[..n]);
+            partials.push(dot_ordered(backend, r_ext, r_ext, n, opts, k));
+        }
+        // allreduce(an') — overlapped with the SpMV on r in the task model
+        let an_new = allreduce_scalar(&mut pb.world, k, 20, partials);
+        let beta = an_new / an;
+
+        // Tk 1&2: Ar = A·r ; Ap = Ar + beta·Ap ; p = r + beta·p ;
+        // ad' = (Ap, p)   [lines 6-8]
+        exchange_all(&mut pb.world, &mut pb.ranks, |st| &mut st.r_ext, k);
+        let mut partials = Vec::with_capacity(nranks);
+        for st in &mut pb.ranks {
+            let n = st.n();
+            backend.spmv(&st.sys.a, &st.r_ext, &mut st.ar);
+            let RankState {
+                r_ext, p_ext, ap, ar, ..
+            } = st;
+            backend.axpby(1.0, &r_ext[..n], beta, &mut p_ext[..n]);
+            // fused axpby+dot in blocks, task order (CG-NB Tk 2)
+            if opts.ntasks == 0 {
+                backend.axpby(1.0, &ar[..n], beta, &mut ap[..n]);
+                partials.push(backend.dot(&ap[..n], &p_ext[..n]));
+            } else {
+                let blocks = task_blocks(n, opts.ntasks);
+                let order = completion_order(blocks.len(), opts.task_order_seed, k);
+                let mut acc = 0.0;
+                for &bi in &order {
+                    let (r0, r1) = blocks[bi];
+                    acc += kernels::axpby_dot(1.0, ar, beta, ap, p_ext, r0, r1);
+                }
+                partials.push(acc);
+            }
+        }
+        // allreduce(ad') — overlapped with Tk 3 in the task model
+        let ad_new = allreduce_scalar(&mut pb.world, k, 21, partials);
+
+        // Tk 3: x += (an²/(ad·an'))·(p − r)   [line 9]
+        let coeff = an * an / (ad * an_new);
+        for st in &mut pb.ranks {
+            let n = st.n();
+            let RankState {
+                x_ext, r_ext, p_ext, ..
+            } = st;
+            backend.waxpby(coeff, &p_ext[..n], -coeff, &r_ext[..n], 1.0, &mut x_ext[..n]);
+        }
+
+        an = an_new;
+        ad = ad_new;
+        alpha = an / ad;
+        iterations = k;
+        history.push((an / an0).sqrt());
+    }
+
+    SolveStats {
+        method: "cg-nb",
+        iterations,
+        converged,
+        rel_residual: (an / an0).sqrt(),
+        x_error: pb.x_error(),
+        history,
+        restarts: 0,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{Method, Native, Problem, SolveOpts};
+    use super::*;
+    use crate::mesh::Grid3;
+    use crate::sparse::StencilKind;
+
+    fn run(
+        method: Method,
+        kind: StencilKind,
+        nranks: usize,
+        opts: &SolveOpts,
+    ) -> super::super::SolveStats {
+        let mut pb = Problem::build(Grid3::new(4, 4, 8), kind, nranks);
+        pb.solve(method, opts, &mut Native)
+    }
+
+    #[test]
+    fn classic_converges_7pt() {
+        let s = run(Method::Cg(CgVariant::Classic), StencilKind::P7, 1, &SolveOpts::default());
+        assert!(s.converged);
+        assert!(s.x_error < 1e-5, "x_err={}", s.x_error);
+    }
+
+    #[test]
+    fn classic_converges_27pt_multirank() {
+        let s = run(Method::Cg(CgVariant::Classic), StencilKind::P27, 4, &SolveOpts::default());
+        assert!(s.converged);
+        assert!(s.x_error < 1e-5);
+    }
+
+    #[test]
+    fn nonblocking_converges_both_stencils() {
+        for kind in [StencilKind::P7, StencilKind::P27] {
+            let s = run(Method::Cg(CgVariant::NonBlocking), kind, 2, &SolveOpts::default());
+            assert!(s.converged, "{kind:?}");
+            assert!(s.x_error < 1e-5, "{kind:?} x_err={}", s.x_error);
+        }
+    }
+
+    #[test]
+    fn nb_iteration_count_close_to_classic() {
+        // "arithmetically equivalent to the classical one, it might
+        // converge slightly different" (§3.1)
+        let opts = SolveOpts::default();
+        let c = run(Method::Cg(CgVariant::Classic), StencilKind::P7, 2, &opts);
+        let nb = run(Method::Cg(CgVariant::NonBlocking), StencilKind::P7, 2, &opts);
+        let diff = (c.iterations as i64 - nb.iterations as i64).abs();
+        assert!(diff <= 2, "classic {} vs nb {}", c.iterations, nb.iterations);
+    }
+
+    #[test]
+    fn task_order_perturbs_but_converges() {
+        let mut opts = SolveOpts::default();
+        opts.ntasks = 16;
+        opts.task_order_seed = 99;
+        let s = run(Method::Cg(CgVariant::Classic), StencilKind::P7, 2, &opts);
+        assert!(s.converged);
+        assert!(s.x_error < 1e-5);
+        let s = run(Method::Cg(CgVariant::NonBlocking), StencilKind::P7, 2, &opts);
+        assert!(s.converged);
+        assert!(s.x_error < 1e-5);
+    }
+
+    #[test]
+    fn rank_count_does_not_change_solution() {
+        let opts = SolveOpts::default();
+        let s1 = run(Method::Cg(CgVariant::Classic), StencilKind::P7, 1, &opts);
+        let s4 = run(Method::Cg(CgVariant::Classic), StencilKind::P7, 4, &opts);
+        assert_eq!(s1.iterations, s4.iterations);
+        assert!((s1.rel_residual - s4.rel_residual).abs() < 1e-12);
+    }
+
+    #[test]
+    fn residual_history_is_decreasing_overall() {
+        let s = run(Method::Cg(CgVariant::Classic), StencilKind::P7, 1, &SolveOpts::default());
+        assert!(s.history.last().unwrap() < &1e-6);
+        // loosely monotone: last < first
+        assert!(s.history.last().unwrap() < s.history.first().unwrap());
+    }
+}

@@ -1,0 +1,359 @@
+//! The four iterative methods (+ paper variants) over the distributed
+//! substrate: real numerics, lockstep multi-rank execution through
+//! `simmpi`, pluggable compute backend (native kernels or XLA artifacts).
+//!
+//! Method inventory (paper §3.1):
+//!   * Jacobi
+//!   * symmetric Gauss-Seidel — MPI processor-localised, red-black
+//!     bicoloured (task strategy) and *relaxed* (task strategy, §3.4)
+//!   * CG — classic and CG-NB (Algorithm 1)
+//!   * BiCGStab — classic and BiCGStab-B1 (Algorithm 2, with restart)
+
+mod backend;
+mod bicgstab;
+mod cg;
+mod gauss_seidel;
+mod jacobi;
+
+pub use backend::{Compute, Native};
+pub use bicgstab::BiVariant;
+pub use cg::CgVariant;
+pub use gauss_seidel::GsVariant;
+
+use crate::mesh::Grid3;
+use crate::simmpi::World;
+use crate::sparse::{LocalSystem, StencilKind};
+use crate::util::Rng;
+
+/// Which algorithm to run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Method {
+    Jacobi,
+    GaussSeidel(GsVariant),
+    Cg(CgVariant),
+    BiCgStab(BiVariant),
+}
+
+impl Method {
+    pub fn parse(s: &str) -> Option<Method> {
+        Some(match s {
+            "jacobi" => Method::Jacobi,
+            "gs" | "gauss-seidel" => Method::GaussSeidel(GsVariant::ProcessorLocal),
+            "gs-rb" | "gs-coloured" => Method::GaussSeidel(GsVariant::RedBlack),
+            "gs-relaxed" => Method::GaussSeidel(GsVariant::Relaxed),
+            "cg" => Method::Cg(CgVariant::Classic),
+            "cg-nb" => Method::Cg(CgVariant::NonBlocking),
+            "bicgstab" => Method::BiCgStab(BiVariant::Classic),
+            "bicgstab-b1" => Method::BiCgStab(BiVariant::B1),
+            _ => return None,
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Method::Jacobi => "jacobi",
+            Method::GaussSeidel(GsVariant::ProcessorLocal) => "gs",
+            Method::GaussSeidel(GsVariant::RedBlack) => "gs-rb",
+            Method::GaussSeidel(GsVariant::Relaxed) => "gs-relaxed",
+            Method::Cg(CgVariant::Classic) => "cg",
+            Method::Cg(CgVariant::NonBlocking) => "cg-nb",
+            Method::BiCgStab(BiVariant::Classic) => "bicgstab",
+            Method::BiCgStab(BiVariant::B1) => "bicgstab-b1",
+        }
+    }
+}
+
+/// Solve options (paper §4.1 defaults).
+#[derive(Debug, Clone)]
+pub struct SolveOpts {
+    /// Convergence threshold on sqrt(||r||²); interpreted as relative to
+    /// the initial residual unless `eps_absolute` (the paper's §4.1 uses
+    /// absolute 1e-6 with x0 = 0 on the HPCG system).
+    pub eps: f64,
+    /// Use absolute residual convergence (HPCCG convention).
+    pub eps_absolute: bool,
+    /// BiCGStab restart threshold (§3.3; same absolute/relative switch).
+    pub restart_eps: f64,
+    pub max_iters: usize,
+    /// Subdomain (task) count per rank for task-ordered execution; 0 =
+    /// sequential deterministic order.
+    pub ntasks: usize,
+    /// Seed for task-completion-order shuffling (emulates the
+    /// nondeterministic task execution order of a real runtime, §3.3).
+    pub task_order_seed: u64,
+}
+
+impl SolveOpts {
+    /// Effective *relative* threshold given the initial ||r||² — maps the
+    /// absolute mode onto the relative convergence tests in the solvers.
+    pub fn eps_rel(&self, rr0: f64) -> f64 {
+        if self.eps_absolute {
+            self.eps / rr0.max(f64::MIN_POSITIVE).sqrt()
+        } else {
+            self.eps
+        }
+    }
+
+    /// Effective relative restart threshold (BiCGStab).
+    pub fn restart_rel(&self, rr0: f64) -> f64 {
+        if self.eps_absolute {
+            self.restart_eps / rr0.max(f64::MIN_POSITIVE).sqrt()
+        } else {
+            self.restart_eps
+        }
+    }
+}
+
+impl Default for SolveOpts {
+    fn default() -> Self {
+        SolveOpts {
+            eps: 1e-6,
+            eps_absolute: false,
+            restart_eps: 1e-5,
+            max_iters: 10_000,
+            ntasks: 0,
+            task_order_seed: 0,
+        }
+    }
+}
+
+/// Solve outcome + convergence history.
+#[derive(Debug, Clone)]
+pub struct SolveStats {
+    pub method: &'static str,
+    pub iterations: usize,
+    pub converged: bool,
+    /// sqrt(global ||r||²) / sqrt(initial) at exit.
+    pub rel_residual: f64,
+    /// max_i |x_i - 1| over all ranks (exact solution is ones).
+    pub x_error: f64,
+    /// Relative residual after each iteration.
+    pub history: Vec<f64>,
+    pub restarts: usize,
+}
+
+/// Per-rank solver state: the local system plus every work vector any of
+/// the methods needs (extended where the vector is SpMV input).
+pub struct RankState {
+    pub sys: LocalSystem,
+    pub x_ext: Vec<f64>,
+    pub r_ext: Vec<f64>,
+    pub p_ext: Vec<f64>,
+    pub s_ext: Vec<f64>,
+    pub ap: Vec<f64>,
+    pub ar: Vec<f64>,
+    pub as_: Vec<f64>,
+    pub rprime: Vec<f64>,
+    pub tmp: Vec<f64>,
+}
+
+impl RankState {
+    pub fn new(sys: LocalSystem) -> Self {
+        let n_ext = sys.part.n_ext();
+        let n = sys.n();
+        RankState {
+            x_ext: vec![0.0; n_ext],
+            r_ext: vec![0.0; n_ext],
+            p_ext: vec![0.0; n_ext],
+            s_ext: vec![0.0; n_ext],
+            ap: vec![0.0; n],
+            ar: vec![0.0; n],
+            as_: vec![0.0; n],
+            rprime: vec![0.0; n],
+            tmp: vec![0.0; n],
+            sys,
+        }
+    }
+
+    pub fn n(&self) -> usize {
+        self.sys.n()
+    }
+}
+
+/// Distributed problem: all ranks' states + the message-passing world.
+pub struct Problem {
+    pub world: World,
+    pub ranks: Vec<RankState>,
+    pub grid: Grid3,
+    pub kind: StencilKind,
+}
+
+impl Problem {
+    /// Assemble the global system split over `nranks` ranks.
+    pub fn build(grid: Grid3, kind: StencilKind, nranks: usize) -> Self {
+        let ranks: Vec<RankState> = (0..nranks)
+            .map(|r| RankState::new(LocalSystem::build(grid, kind, r, nranks)))
+            .collect();
+        Problem {
+            world: World::new(nranks),
+            ranks,
+            grid,
+            kind,
+        }
+    }
+
+    pub fn nranks(&self) -> usize {
+        self.ranks.len()
+    }
+
+    /// Max |x - 1| across all ranks (exact solution of the HPCG system).
+    pub fn x_error(&self) -> f64 {
+        self.ranks
+            .iter()
+            .map(|st| {
+                st.x_ext[..st.n()]
+                    .iter()
+                    .map(|&v| (v - 1.0).abs())
+                    .fold(0.0, f64::max)
+            })
+            .fold(0.0, f64::max)
+    }
+
+    /// Run `method` to convergence with the given backend.
+    pub fn solve(
+        &mut self,
+        method: Method,
+        opts: &SolveOpts,
+        backend: &mut dyn Compute,
+    ) -> SolveStats {
+        // reset state
+        for st in &mut self.ranks {
+            st.x_ext.iter_mut().for_each(|v| *v = 0.0);
+        }
+        match method {
+            Method::Jacobi => jacobi::solve(self, opts, backend),
+            Method::GaussSeidel(v) => gauss_seidel::solve(self, v, opts, backend),
+            Method::Cg(v) => cg::solve(self, v, opts, backend),
+            Method::BiCgStab(v) => bicgstab::solve(self, v, opts, backend),
+        }
+    }
+}
+
+/// Lockstep halo exchange of a given extended vector on every rank.
+/// `k` is the iteration number (ISODD tag/communicator split).
+pub(crate) fn exchange_all(
+    world: &mut World,
+    ranks: &mut [RankState],
+    which: fn(&mut RankState) -> &mut Vec<f64>,
+    k: usize,
+) {
+    use crate::simmpi::{isodd, HaloExchange};
+    let comm = isodd(k);
+    let tag = k as u64;
+    for st in ranks.iter_mut() {
+        let rank = st.sys.part.rank;
+        let halo = st.sys.halo.clone();
+        let x = which(st);
+        HaloExchange::post_sends(world, rank, &halo, x, tag, comm);
+    }
+    for st in ranks.iter_mut() {
+        let rank = st.sys.part.rank;
+        let halo = st.sys.halo.clone();
+        let x = which(st);
+        let ok = HaloExchange::complete_recvs(world, rank, &halo, x, tag, comm);
+        assert!(ok, "halo deadlock at rank {rank} iteration {k}");
+    }
+}
+
+/// Global sum of one local partial per rank.
+pub(crate) fn allreduce_scalar(world: &mut World, k: usize, tag: u64, partials: Vec<f64>) -> f64 {
+    use crate::simmpi::isodd;
+    let v = world.allreduce_sum(isodd(k), tag, partials.into_iter().map(|p| vec![p]).collect());
+    v[0]
+}
+
+/// Global sum of a pair (fused collectives: ω's numerator/denominator,
+/// or αn together with β — paper lines 10-11 of Algorithm 2).
+pub(crate) fn allreduce_pair(
+    world: &mut World,
+    k: usize,
+    tag: u64,
+    partials: Vec<(f64, f64)>,
+) -> (f64, f64) {
+    use crate::simmpi::isodd;
+    let v = world.allreduce_sum(
+        isodd(k),
+        tag,
+        partials.into_iter().map(|(a, b)| vec![a, b]).collect(),
+    );
+    (v[0], v[1])
+}
+
+/// Block boundaries for `ntasks` subdomains over n rows (the paper's
+/// rowBs split, Code 1 line 7).
+pub(crate) fn task_blocks(n: usize, ntasks: usize) -> Vec<(usize, usize)> {
+    let nt = ntasks.max(1).min(n.max(1));
+    let bs = n.div_ceil(nt);
+    let mut out = Vec::new();
+    let mut r0 = 0;
+    while r0 < n {
+        let r1 = (r0 + bs).min(n);
+        out.push((r0, r1));
+        r0 = r1;
+    }
+    out
+}
+
+/// A pseudo-random task completion order for one iteration — stands in
+/// for the real runtime's nondeterministic scheduling (§3.3). Seed 0 =>
+/// deterministic program order (MPI-only / fork-join semantics).
+pub(crate) fn completion_order(nblocks: usize, seed: u64, k: usize) -> Vec<usize> {
+    let mut order: Vec<usize> = (0..nblocks).collect();
+    if seed != 0 {
+        let mut rng = Rng::new(seed).substream(k as u64);
+        rng.shuffle(&mut order);
+    }
+    order
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn task_blocks_cover() {
+        for n in [1usize, 7, 100, 101] {
+            for nt in [1usize, 3, 8, 200] {
+                let blocks = task_blocks(n, nt);
+                assert_eq!(blocks[0].0, 0);
+                assert_eq!(blocks.last().unwrap().1, n);
+                for w in blocks.windows(2) {
+                    assert_eq!(w[0].1, w[1].0);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn completion_order_seed0_is_identity() {
+        assert_eq!(completion_order(5, 0, 3), vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn completion_order_is_permutation_and_varies_by_iteration() {
+        let a = completion_order(16, 9, 0);
+        let b = completion_order(16, 9, 1);
+        let mut sa = a.clone();
+        sa.sort();
+        assert_eq!(sa, (0..16).collect::<Vec<_>>());
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn method_parse_roundtrip() {
+        for name in [
+            "jacobi",
+            "gs",
+            "gs-rb",
+            "gs-relaxed",
+            "cg",
+            "cg-nb",
+            "bicgstab",
+            "bicgstab-b1",
+        ] {
+            let m = Method::parse(name).unwrap();
+            assert_eq!(m.name(), name);
+        }
+        assert!(Method::parse("nope").is_none());
+    }
+}

@@ -1,0 +1,86 @@
+//! CSR storage — the HPCCG-faithful layout (paper §3.2: "a sparse system
+//! encoded in the popular compressed sparse row matrix format").
+//!
+//! The native Rust solve path can run on either layout; CSR is kept both
+//! for fidelity to the reference miniapp and as the D1 ablation partner
+//! of the ELL kernel (see DESIGN.md §6).
+
+use super::EllMatrix;
+
+#[derive(Debug, Clone)]
+pub struct CsrMatrix {
+    pub n: usize,
+    pub n_ext: usize,
+    /// Row pointers, length n + 1.
+    pub row_ptr: Vec<usize>,
+    pub col_idx: Vec<i32>,
+    pub vals: Vec<f64>,
+    pub diag: Vec<f64>,
+}
+
+impl CsrMatrix {
+    /// Convert from ELL, dropping fill entries.
+    pub fn from_ell(ell: &EllMatrix) -> Self {
+        let pad = (ell.n_ext - 1) as i32;
+        let mut row_ptr = Vec::with_capacity(ell.n + 1);
+        let mut col_idx = Vec::new();
+        let mut vals = Vec::new();
+        row_ptr.push(0);
+        for i in 0..ell.n {
+            for j in 0..ell.w {
+                let c = ell.cols[i * ell.w + j];
+                if c != pad {
+                    col_idx.push(c);
+                    vals.push(ell.vals[i * ell.w + j]);
+                }
+            }
+            row_ptr.push(col_idx.len());
+        }
+        CsrMatrix {
+            n: ell.n,
+            n_ext: ell.n_ext,
+            row_ptr,
+            col_idx,
+            vals,
+            diag: ell.diag.clone(),
+        }
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.vals.len()
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> (&[i32], &[f64]) {
+        let (a, b) = (self.row_ptr[i], self.row_ptr[i + 1]);
+        (&self.col_idx[a..b], &self.vals[a..b])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_ell() -> EllMatrix {
+        let mut m = EllMatrix::new(3, 3, 4);
+        m.set(0, 0, 0, 2.0);
+        m.set(0, 1, 1, -1.0);
+        m.set(1, 0, 0, -1.0);
+        m.set(1, 1, 1, 2.0);
+        m.set(1, 2, 2, -1.0);
+        m.set(2, 0, 1, -1.0);
+        m.set(2, 1, 2, 2.0);
+        m
+    }
+
+    #[test]
+    fn from_ell_drops_fill() {
+        let csr = CsrMatrix::from_ell(&small_ell());
+        assert_eq!(csr.nnz(), 7);
+        assert_eq!(csr.row_ptr, vec![0, 2, 5, 7]);
+        let (cols, vals) = csr.row(1);
+        assert_eq!(cols, &[0, 1, 2]);
+        assert_eq!(vals, &[-1.0, 2.0, -1.0]);
+        assert_eq!(csr.diag, vec![2.0, 2.0, 2.0]);
+    }
+}

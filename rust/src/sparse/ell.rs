@@ -1,0 +1,104 @@
+//! ELL (ELLPACK) storage: fixed-width rows, the natural layout for
+//! structured-mesh stencil matrices (every row has exactly `w` slots,
+//! fill entries point at the zero-pad slot of the extended vector).
+//!
+//! This is the layout shared bit-for-bit with the Pallas kernel and the
+//! AOT artifacts: `vals` row-major `(n, w)`, `cols` `(n, w)` as i32.
+
+#[derive(Debug, Clone)]
+pub struct EllMatrix {
+    /// Owned rows.
+    pub n: usize,
+    /// Stencil width (7 or 27 in the paper).
+    pub w: usize,
+    /// Extended vector length this matrix gathers from (n + halo + 1).
+    pub n_ext: usize,
+    /// Row-major (n, w) coefficients; fill slots are 0.0.
+    pub vals: Vec<f64>,
+    /// Row-major (n, w) gather indices into the extended vector; fill
+    /// slots point at `n_ext - 1` (the zero pad).
+    pub cols: Vec<i32>,
+    /// Diagonal (a_ii) per row, extracted for Jacobi/GS sweeps.
+    pub diag: Vec<f64>,
+}
+
+impl EllMatrix {
+    pub fn new(n: usize, w: usize, n_ext: usize) -> Self {
+        EllMatrix {
+            n,
+            w,
+            n_ext,
+            vals: vec![0.0; n * w],
+            cols: vec![(n_ext - 1) as i32; n * w],
+            diag: vec![0.0; n],
+        }
+    }
+
+    #[inline]
+    pub fn row_vals(&self, i: usize) -> &[f64] {
+        &self.vals[i * self.w..(i + 1) * self.w]
+    }
+
+    #[inline]
+    pub fn row_cols(&self, i: usize) -> &[i32] {
+        &self.cols[i * self.w..(i + 1) * self.w]
+    }
+
+    /// Set entry j of row i.
+    pub fn set(&mut self, i: usize, j: usize, col: usize, val: f64) {
+        debug_assert!(col < self.n_ext);
+        self.vals[i * self.w + j] = val;
+        self.cols[i * self.w + j] = col as i32;
+        if col == i {
+            self.diag[i] = val;
+        }
+    }
+
+    /// Number of structurally-present (non-fill) entries.
+    pub fn nnz(&self) -> usize {
+        let pad = (self.n_ext - 1) as i32;
+        self.cols.iter().filter(|&&c| c != pad).count()
+    }
+
+    /// Average nonzeros per row (the paper's n̄).
+    pub fn nbar(&self) -> f64 {
+        self.nnz() as f64 / self.n as f64
+    }
+
+    /// Dense reconstruction (tests only; owned columns only).
+    pub fn to_dense_local(&self) -> Vec<Vec<f64>> {
+        let mut a = vec![vec![0.0; self.n]; self.n];
+        for i in 0..self.n {
+            for j in 0..self.w {
+                let c = self.cols[i * self.w + j] as usize;
+                if c < self.n {
+                    a[i][c] += self.vals[i * self.w + j];
+                }
+            }
+        }
+        a
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fill_points_at_pad() {
+        let m = EllMatrix::new(4, 7, 10);
+        assert!(m.cols.iter().all(|&c| c == 9));
+        assert_eq!(m.nnz(), 0);
+    }
+
+    #[test]
+    fn set_tracks_diag() {
+        let mut m = EllMatrix::new(3, 3, 4);
+        m.set(0, 0, 0, 5.0);
+        m.set(0, 1, 1, -1.0);
+        m.set(1, 0, 1, 6.0);
+        assert_eq!(m.diag, vec![5.0, 6.0, 0.0]);
+        assert_eq!(m.nnz(), 3);
+        assert_eq!(m.row_vals(0), &[5.0, -1.0, 0.0]);
+    }
+}

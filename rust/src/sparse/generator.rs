@@ -1,0 +1,260 @@
+//! HPCG-style stencil system generator (paper §4.1).
+//!
+//! "The sparse linear system to be solved is the standard one proposed by
+//! the HPCG benchmark and arises from the finite discretisation of a
+//! centred stencil on a three-dimensional hexahedral mesh. The r.h.s.
+//! vector b is defined analytically for the exact solution x = 1."
+//!
+//! Off-diagonals are -1 and the diagonal is the HPCCG constant **27.0
+//! for both stencils** (the Mantevo miniapp's generator writes 27.0 on
+//! the diagonal regardless of how many of the 26 neighbours exist). This
+//! is what produces the paper's very different convergence regimes: the
+//! 7-point system is strongly dominant (27 vs 6 — CG converges in 12
+//! iterations) while the 27-point one keeps a margin of just 1 on
+//! interior rows (27 vs 26 — Jacobi needs 515 iterations; ρ ≈ 26/27).
+//! `diag_shift` perturbs the dominance margin for the convergence
+//! ablations (D4).
+//!
+//! The generator is *local*: each rank builds only its own partition,
+//! referencing halo planes through the extended-vector index map, and the
+//! r.h.s. is computed analytically from the global stencil (so b == A·1
+//! holds across rank boundaries without communication).
+
+use crate::mesh::{Grid3, HaloMap, Partition};
+use crate::sparse::EllMatrix;
+
+/// Stencil pattern selector (the two sparsity levels of the paper).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StencilKind {
+    /// 7-point centred stencil — "typical of an OpenFOAM application".
+    P7,
+    /// 27-point centred stencil — "actively used by the HPCG benchmark".
+    P27,
+}
+
+impl StencilKind {
+    pub fn width(self) -> usize {
+        match self {
+            StencilKind::P7 => 7,
+            StencilKind::P27 => 27,
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "7" | "p7" | "7pt" => Some(StencilKind::P7),
+            "27" | "p27" | "27pt" => Some(StencilKind::P27),
+            _ => None,
+        }
+    }
+}
+
+/// Neighbour offsets, diagonal first (matches python/tests/stencil.py).
+pub fn stencil_offsets(kind: StencilKind) -> Vec<(i64, i64, i64)> {
+    match kind {
+        StencilKind::P7 => vec![
+            (0, 0, 0),
+            (-1, 0, 0),
+            (1, 0, 0),
+            (0, -1, 0),
+            (0, 1, 0),
+            (0, 0, -1),
+            (0, 0, 1),
+        ],
+        StencilKind::P27 => {
+            let mut offs = vec![(0, 0, 0)];
+            for dz in -1..=1i64 {
+                for dy in -1..=1i64 {
+                    for dx in -1..=1i64 {
+                        if (dx, dy, dz) != (0, 0, 0) {
+                            offs.push((dx, dy, dz));
+                        }
+                    }
+                }
+            }
+            offs
+        }
+    }
+}
+
+/// One rank's assembled system: matrix, rhs, halo map and metadata.
+#[derive(Debug, Clone)]
+pub struct LocalSystem {
+    pub part: Partition,
+    pub kind: StencilKind,
+    pub a: EllMatrix,
+    /// Local rhs (b = A·1 globally).
+    pub b: Vec<f64>,
+    pub halo: HaloMap,
+    /// Red/black mask per owned row ((x+y+z) parity of *global* coords,
+    /// so colouring is consistent across ranks).
+    pub red_mask: Vec<bool>,
+}
+
+impl LocalSystem {
+    /// Assemble the local partition of the global stencil system.
+    pub fn build(grid: Grid3, kind: StencilKind, rank: usize, nranks: usize) -> Self {
+        Self::build_shifted(grid, kind, rank, nranks, 0.0)
+    }
+
+    /// `diag_shift` adds to the diagonal (ablation D4; 0.0 = paper setup).
+    pub fn build_shifted(
+        grid: Grid3,
+        kind: StencilKind,
+        rank: usize,
+        nranks: usize,
+        diag_shift: f64,
+    ) -> Self {
+        let part = Partition::new(grid, rank, nranks);
+        let offs = stencil_offsets(kind);
+        let w = kind.width();
+        let n = part.n_local();
+        let mut a = EllMatrix::new(n, w, part.n_ext());
+        let mut b = vec![0.0; n];
+        let mut red_mask = vec![false; n];
+        // HPCCG convention: constant 27.0 diagonal for every stencil
+        let diag_val = 27.0 + diag_shift;
+
+        for lrow in 0..n {
+            let grow = part.global_of_local(lrow);
+            let (x, y, z) = grid.coords(grow);
+            red_mask[lrow] = (x + y + z) % 2 == 0;
+            let mut bsum = 0.0;
+            for (e, &(dx, dy, dz)) in offs.iter().enumerate() {
+                let (gx, gy, gz) = (x as i64 + dx, y as i64 + dy, z as i64 + dz);
+                let inside = gx >= 0
+                    && gy >= 0
+                    && gz >= 0
+                    && (gx as usize) < grid.nx
+                    && (gy as usize) < grid.ny
+                    && (gz as usize) < grid.nz;
+                if !inside {
+                    continue;
+                }
+                let gcol = grid.idx(gx as usize, gy as usize, gz as usize);
+                let val = if e == 0 { diag_val } else { -1.0 };
+                bsum += val; // b = A·1: every structural entry contributes
+                // Columns outside this rank's visibility can only be
+                // fill-adjacent if the decomposition is wrong — assert.
+                let lcol = part
+                    .local_of_global(gcol)
+                    .unwrap_or_else(|| panic!("column {gcol} not visible from rank {rank}"));
+                a.set(lrow, e, lcol, val);
+            }
+            b[lrow] = bsum;
+        }
+        let halo = part.halo_map();
+        LocalSystem {
+            part,
+            kind,
+            a,
+            b,
+            halo,
+            red_mask,
+        }
+    }
+
+    pub fn n(&self) -> usize {
+        self.a.n
+    }
+
+    /// Allocate an extended vector (own + halo + pad), zero-filled.
+    pub fn new_ext(&self) -> Vec<f64> {
+        vec![0.0; self.part.n_ext()]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn offsets_counts() {
+        assert_eq!(stencil_offsets(StencilKind::P7).len(), 7);
+        assert_eq!(stencil_offsets(StencilKind::P27).len(), 27);
+        assert_eq!(stencil_offsets(StencilKind::P27)[0], (0, 0, 0));
+    }
+
+    #[test]
+    fn interior_row_full_stencil() {
+        let sys = LocalSystem::build(Grid3::cube(5), StencilKind::P7, 0, 1);
+        let g = sys.part.grid;
+        let row = g.idx(2, 2, 2);
+        let vals = sys.a.row_vals(row);
+        assert_eq!(vals[0], 27.0);
+        assert_eq!(vals.iter().filter(|&&v| v == -1.0).count(), 6);
+        // interior b = 27 - 6 = 21
+        assert_eq!(sys.b[row], 21.0);
+    }
+
+    #[test]
+    fn corner_row_truncated() {
+        let sys = LocalSystem::build(Grid3::cube(4), StencilKind::P27, 0, 1);
+        // corner (0,0,0): 2x2x2 neighbourhood = 8 entries present
+        let vals = sys.a.row_vals(0);
+        let present = vals.iter().filter(|&&v| v != 0.0).count();
+        assert_eq!(present, 8);
+        assert_eq!(sys.b[0], 27.0 - 7.0);
+    }
+
+    #[test]
+    fn b_equals_a_times_ones_single_rank() {
+        let sys = LocalSystem::build(Grid3::new(3, 4, 5), StencilKind::P27, 0, 1);
+        let mut ones = sys.new_ext();
+        for v in ones.iter_mut().take(sys.n()) {
+            *v = 1.0;
+        }
+        // pad slot stays 0
+        for i in 0..sys.n() {
+            let y: f64 = sys
+                .a
+                .row_vals(i)
+                .iter()
+                .zip(sys.a.row_cols(i))
+                .map(|(&v, &c)| v * ones[c as usize])
+                .sum();
+            assert!((y - sys.b[i]).abs() < 1e-12, "row {i}: {y} != {}", sys.b[i]);
+        }
+    }
+
+    #[test]
+    fn distributed_matches_single_rank() {
+        // Assemble on 1 rank and on 3 ranks; rows must agree.
+        let g = Grid3::new(3, 3, 9);
+        let whole = LocalSystem::build(g, StencilKind::P7, 0, 1);
+        for nranks in [2, 3] {
+            for rank in 0..nranks {
+                let part_sys = LocalSystem::build(g, StencilKind::P7, rank, nranks);
+                for l in 0..part_sys.n() {
+                    let grow = part_sys.part.global_of_local(l);
+                    assert_eq!(part_sys.b[l], whole.b[grow], "rhs row {grow}");
+                    // diagonal value matches
+                    assert_eq!(part_sys.a.diag[l], whole.a.diag[grow]);
+                    // same number of structural entries
+                    let c1 = part_sys.a.row_vals(l).iter().filter(|&&v| v != 0.0).count();
+                    let c2 = whole.a.row_vals(grow).iter().filter(|&&v| v != 0.0).count();
+                    assert_eq!(c1, c2, "row {grow}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn red_mask_uses_global_parity() {
+        let g = Grid3::new(2, 2, 6);
+        let s0 = LocalSystem::build(g, StencilKind::P7, 0, 3);
+        let s1 = LocalSystem::build(g, StencilKind::P7, 1, 3);
+        // first row of rank 1 is (0,0,z0): parity = z0 % 2
+        assert_eq!(s1.red_mask[0], s1.part.z0 % 2 == 0);
+        assert!(s0.red_mask[0]); // (0,0,0)
+    }
+
+    #[test]
+    fn nbar_matches_paper_sparsities() {
+        // Paper: n̄=7 and n̄=27 for interior-dominated grids.
+        let sys = LocalSystem::build(Grid3::cube(12), StencilKind::P7, 0, 1);
+        assert!((sys.a.nbar() - 7.0).abs() < 0.6);
+        let sys = LocalSystem::build(Grid3::cube(12), StencilKind::P27, 0, 1);
+        assert!((sys.a.nbar() - 27.0).abs() < 6.0);
+    }
+}

@@ -1,0 +1,10 @@
+//! Sparse matrix substrates: ELL and CSR storage + the HPCG-style stencil
+//! system generator of the paper's evaluation (§4.1).
+
+mod csr;
+mod ell;
+mod generator;
+
+pub use csr::CsrMatrix;
+pub use ell::EllMatrix;
+pub use generator::{stencil_offsets, LocalSystem, StencilKind};

@@ -1,0 +1,142 @@
+//! Statistics for the benchmark harness: box-and-whisker summaries
+//! (Fig. 2) and relative parallel efficiencies (Figs. 3-6).
+
+/// Standard five-number box summary (Tukey whiskers).
+#[derive(Debug, Clone, PartialEq)]
+pub struct BoxStats {
+    pub min: f64,
+    pub q1: f64,
+    pub median: f64,
+    pub q3: f64,
+    pub max: f64,
+    /// whisker ends (1.5 IQR rule)
+    pub lo_whisker: f64,
+    pub hi_whisker: f64,
+    pub outliers: Vec<f64>,
+    pub n: usize,
+}
+
+/// Linear-interpolated quantile of a sorted slice.
+pub fn quantile_sorted(sorted: &[f64], q: f64) -> f64 {
+    assert!(!sorted.is_empty());
+    if sorted.len() == 1 {
+        return sorted[0];
+    }
+    let pos = q.clamp(0.0, 1.0) * (sorted.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    let frac = pos - lo as f64;
+    sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+}
+
+pub fn median(values: &[f64]) -> f64 {
+    let mut v = values.to_vec();
+    v.sort_by(f64::total_cmp);
+    quantile_sorted(&v, 0.5)
+}
+
+impl BoxStats {
+    pub fn from(values: &[f64]) -> BoxStats {
+        assert!(!values.is_empty(), "no samples");
+        let mut v = values.to_vec();
+        v.sort_by(f64::total_cmp);
+        let q1 = quantile_sorted(&v, 0.25);
+        let q3 = quantile_sorted(&v, 0.75);
+        let iqr = q3 - q1;
+        let lo_fence = q1 - 1.5 * iqr;
+        let hi_fence = q3 + 1.5 * iqr;
+        let lo_whisker = v
+            .iter()
+            .copied()
+            .find(|&x| x >= lo_fence)
+            .unwrap_or(v[0]);
+        let hi_whisker = v
+            .iter()
+            .rev()
+            .copied()
+            .find(|&x| x <= hi_fence)
+            .unwrap_or(*v.last().unwrap());
+        let outliers = v
+            .iter()
+            .copied()
+            .filter(|&x| x < lo_fence || x > hi_fence)
+            .collect();
+        BoxStats {
+            min: v[0],
+            q1,
+            median: quantile_sorted(&v, 0.5),
+            q3,
+            max: *v.last().unwrap(),
+            lo_whisker,
+            hi_whisker,
+            outliers,
+            n: v.len(),
+        }
+    }
+
+    pub fn iqr(&self) -> f64 {
+        self.q3 - self.q1
+    }
+}
+
+/// Relative parallel efficiency, the paper's nondimensionalisation:
+/// "times will always be normalised by the MPI-only, classical version of
+/// each algorithm executed on one compute node".
+///
+/// Weak scaling: eff = T_ref / T (work per rank constant).
+pub fn weak_efficiency(t_ref: f64, t: f64) -> f64 {
+    t_ref / t
+}
+
+/// Strong scaling: eff = T_ref / (nodes · T) with the same global problem
+/// the reference solved on one node's worth of resources.
+pub fn strong_efficiency(t_ref: f64, t: f64, nodes: usize) -> f64 {
+    t_ref / (nodes as f64 * t)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn box_of_known_values() {
+        let v = [1.0, 2.0, 3.0, 4.0, 5.0];
+        let b = BoxStats::from(&v);
+        assert_eq!(b.median, 3.0);
+        assert_eq!(b.q1, 2.0);
+        assert_eq!(b.q3, 4.0);
+        assert_eq!(b.min, 1.0);
+        assert_eq!(b.max, 5.0);
+        assert!(b.outliers.is_empty());
+        assert_eq!(b.n, 5);
+    }
+
+    #[test]
+    fn outlier_detected() {
+        let v = [1.0, 1.1, 1.05, 0.95, 1.0, 9.0];
+        let b = BoxStats::from(&v);
+        assert_eq!(b.outliers, vec![9.0]);
+        assert!(b.hi_whisker < 9.0);
+    }
+
+    #[test]
+    fn quantile_interpolates() {
+        let v = [0.0, 10.0];
+        assert_eq!(quantile_sorted(&v, 0.5), 5.0);
+        assert_eq!(quantile_sorted(&v, 0.0), 0.0);
+        assert_eq!(quantile_sorted(&v, 1.0), 10.0);
+    }
+
+    #[test]
+    fn median_unsorted() {
+        assert_eq!(median(&[3.0, 1.0, 2.0]), 2.0);
+    }
+
+    #[test]
+    fn efficiencies() {
+        assert_eq!(weak_efficiency(1.5, 2.0), 0.75);
+        assert_eq!(strong_efficiency(1.5, 0.75, 2), 1.0);
+        // superscalability > 1
+        assert!(strong_efficiency(1.5, 0.02, 64) > 1.0);
+    }
+}

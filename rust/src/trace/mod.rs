@@ -1,0 +1,297 @@
+//! Paraver-like execution traces (paper Fig. 1): per-core timelines of
+//! one rank executing classic CG vs CG-NB under the task model, showing
+//! the two blocking barriers of the classic method and their suppression
+//! by the nonblocking variant.
+//!
+//! The trace is produced by the *real* task runtime: the per-iteration
+//! task graph (subdomain tasks + TAMPI communication tasks, exactly the
+//! dependency structure of Code 1) is scheduled by `taskrt::list_schedule`
+//! and the resulting placements are rendered as CSV and as an ASCII
+//! Gantt chart.
+
+use crate::machine::MachineModel;
+use crate::simulator::spec::{IterationSpec, Op};
+use crate::taskrt::{list_schedule, Region, Schedule, TaskGraph, TaskSpec, Var};
+
+/// Variable ids for the trace graphs.
+const V_SCRATCH: Var = 100;
+
+/// One rendered trace.
+#[derive(Debug, Clone)]
+pub struct Trace {
+    pub method: String,
+    pub ncores: usize,
+    pub graph_labels: Vec<String>,
+    pub schedule: Schedule,
+}
+
+/// Build the task graph of `iterations` iterations of `method` on one
+/// rank with `nblocks` subdomain tasks per kernel, using the iteration
+/// spec's segment costs under the machine model (hybrid rank: one
+/// socket). Communication tasks model the halo (p2p) and the allreduce
+/// (latency + skew) — blocking methods make every later task depend on
+/// the allreduce result; overlapped methods only the true consumers.
+pub fn build_trace(
+    m: &MachineModel,
+    method: &str,
+    nbar: f64,
+    rows: f64,
+    nblocks: usize,
+    ncores: usize,
+    iterations: usize,
+    allreduce_cost: f64,
+) -> Trace {
+    let spec = IterationSpec::for_method(method, nbar);
+    let bw = m.mem_bw_socket;
+    let mut g = TaskGraph::new();
+    let mut labels = Vec::new();
+
+    // region helper: variable per (op index) so kernels chain by blocks
+    let blk = rows as u64 / nblocks as u64;
+
+    for it in 0..iterations {
+        // variables are re-used across iterations: the dependency chain
+        // per block comes from inout on the block's region of a shared
+        // "state" variable per op slot
+        let mut pending_ar: Option<(u8, Var)> = None;
+        // per-op "epoch" variable: compute blocks write disjoint slots of
+        // it, so a following allreduce can depend on the whole preceding
+        // kernel without creating write-after-read hazards on the state
+        let mut last_epoch: Option<Var> = None;
+        for (oi, op) in spec.ops.iter().enumerate() {
+            match *op {
+                Op::Compute { name, elems } => {
+                    let seg_bytes = elems * rows * 8.0;
+                    let block_cost = seg_bytes / bw / nblocks as f64;
+                    let epoch: Var = 1000 + (it * spec.ops.len() + oi) as Var;
+                    for b in 0..nblocks {
+                        let mut t = TaskSpec::compute(
+                            format!("it{it} {name} [{b}]"),
+                            block_cost,
+                        )
+                        // chain on the block's state: each kernel reads and
+                        // writes its subdomain (serialises per block across
+                        // ops, parallel across blocks — HDOT)
+                        .inout(Region::new(V_SCRATCH, b as u64 * blk, (b as u64 + 1) * blk))
+                        .writes(Region::new(epoch, b as u64, b as u64 + 1));
+                        // consumers of a pending allreduce: in the classic
+                        // methods every op after ArWait reads the result
+                        if let Some((_, var)) = pending_ar {
+                            if consumes(&spec, oi) {
+                                t = t.reads(Region::whole(var));
+                            }
+                        }
+                        labels.push(format!("it{it} {name}"));
+                        g.submit(t);
+                    }
+                    last_epoch = Some(epoch);
+                }
+                Op::Halo => {
+                    // one comm task per neighbour (2): reads boundary
+                    // blocks, writes the halo variable
+                    let halo_var: Var = 200 + (it * spec.ops.len() + oi) as Var;
+                    for nb in 0..2u64 {
+                        let t = TaskSpec::comm(format!("it{it} halo[{nb}]"), 15e-6)
+                            .reads(Region::new(
+                                V_SCRATCH,
+                                if nb == 0 { 0 } else { (nblocks as u64 - 1) * blk },
+                                if nb == 0 { blk } else { nblocks as u64 * blk },
+                            ))
+                            .writes(Region::new(halo_var, nb, nb + 1));
+                        labels.push(format!("it{it} halo"));
+                        g.submit(t);
+                    }
+                }
+                Op::ArStart(id) => {
+                    let result_var: Var = 300 + (it * 8 + id as usize) as Var;
+                    // the allreduce comm task consumes the preceding
+                    // kernel's epoch (all blocks' partials) and publishes
+                    // the result variable
+                    let mut t = TaskSpec::comm(format!("it{it} allreduce[{id}]"), allreduce_cost)
+                        .writes(Region::whole(result_var));
+                    if let Some(epoch) = last_epoch {
+                        t = t.reads(Region::new(epoch, 0, nblocks as u64));
+                    }
+                    labels.push(format!("it{it} allreduce"));
+                    g.submit(t);
+                    pending_ar = Some((id, result_var));
+                }
+                Op::ArWait(_) => {
+                    // consumption is expressed by the reads added to the
+                    // compute tasks that follow (see `consumes`)
+                }
+            }
+        }
+    }
+
+    let schedule = list_schedule(&g, ncores);
+    let graph_labels = (0..g.len()).map(|i| g.label(i).to_string()).collect();
+    Trace {
+        method: method.to_string(),
+        ncores,
+        graph_labels,
+        schedule,
+    }
+}
+
+/// Does the op at `oi` execute after the pending allreduce's Wait (i.e.
+/// must it consume the result)? In blocking methods Wait follows Start
+/// immediately, making everything after depend on it; in the nonblocking
+/// variants the ops between Start and Wait stay independent.
+fn consumes(spec: &IterationSpec, oi: usize) -> bool {
+    // find the most recent ArStart before oi and check whether its Wait
+    // also precedes oi
+    let mut last_start: Option<(usize, u8)> = None;
+    for (i, op) in spec.ops.iter().enumerate().take(oi) {
+        if let Op::ArStart(id) = op {
+            last_start = Some((i, *id));
+        }
+    }
+    match last_start {
+        None => false,
+        Some((si, id)) => spec
+            .ops
+            .iter()
+            .enumerate()
+            .skip(si)
+            .take(oi - si)
+            .any(|(_, op)| matches!(op, Op::ArWait(x) if *x == id)),
+    }
+}
+
+impl Trace {
+    /// Total idle core-time inside the schedule's makespan (the visual
+    /// "blocking barrier" area of Fig. 1(a)).
+    pub fn idle_fraction(&self) -> f64 {
+        let mut busy = 0.0;
+        for (i, p) in self.schedule.placements.iter().enumerate() {
+            let _ = i;
+            if p.core != usize::MAX {
+                busy += p.end - p.start;
+            }
+        }
+        let cap = self.schedule.makespan * self.ncores as f64;
+        1.0 - busy / cap
+    }
+
+    /// CSV rows: task,label,core,start,end (comm tasks: core=NIC).
+    pub fn to_csv(&self) -> String {
+        let mut out = String::from("task,label,core,start,end\n");
+        for (i, p) in self.schedule.placements.iter().enumerate() {
+            let core = if p.core == usize::MAX {
+                "NIC".to_string()
+            } else {
+                p.core.to_string()
+            };
+            out.push_str(&format!(
+                "{i},{},{core},{:.9},{:.9}\n",
+                self.graph_labels[i].replace(',', ";"),
+                p.start,
+                p.end
+            ));
+        }
+        out
+    }
+
+    /// ASCII Gantt: one row per core, `width` time bins; '#' busy,
+    /// '.' idle, '~' the NIC row.
+    pub fn to_ascii(&self, width: usize) -> String {
+        let t_end = self.schedule.makespan;
+        let mut rows = vec![vec!['.'; width]; self.ncores];
+        let mut nic = vec!['.'; width];
+        for p in &self.schedule.placements {
+            let b0 = ((p.start / t_end) * width as f64) as usize;
+            let b1 = (((p.end / t_end) * width as f64).ceil() as usize).min(width);
+            if p.core == usize::MAX {
+                for c in nic.iter_mut().take(b1).skip(b0) {
+                    *c = '~';
+                }
+            } else {
+                for c in rows[p.core].iter_mut().take(b1).skip(b0) {
+                    *c = '#';
+                }
+            }
+        }
+        let mut out = String::new();
+        out.push_str(&format!(
+            "{} | makespan {:.3} ms | idle {:.1}%\n",
+            self.method,
+            t_end * 1e3,
+            self.idle_fraction() * 100.0
+        ));
+        for (c, row) in rows.iter().enumerate() {
+            out.push_str(&format!("core{c:2} |{}|\n", row.iter().collect::<String>()));
+        }
+        out.push_str(&format!("NIC    |{}|\n", nic.iter().collect::<String>()));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk(method: &str) -> Trace {
+        let m = MachineModel::marenostrum4();
+        build_trace(&m, method, 7.0, 128.0 * 128.0 * 512.0, 32, 8, 2, 8e-4)
+    }
+
+    #[test]
+    fn cg_classic_has_blocking_idle() {
+        let classic = mk("cg");
+        let nb = mk("cg-nb");
+        // Fig 1: the nonblocking variant suppresses the two barriers, so
+        // its idle fraction must be clearly lower
+        assert!(
+            nb.idle_fraction() < classic.idle_fraction(),
+            "nb {} vs classic {}",
+            nb.idle_fraction(),
+            classic.idle_fraction()
+        );
+    }
+
+    #[test]
+    fn nb_makespan_not_worse_despite_extra_work() {
+        let classic = mk("cg");
+        let nb = mk("cg-nb");
+        // CG-NB touches (15+7)/(12+7) more elements but hides 2 barriers
+        assert!(
+            nb.schedule.makespan < classic.schedule.makespan * 1.05,
+            "nb {} vs classic {}",
+            nb.schedule.makespan,
+            classic.schedule.makespan
+        );
+    }
+
+    #[test]
+    fn csv_well_formed() {
+        let t = mk("cg");
+        let csv = t.to_csv();
+        let lines: Vec<&str> = csv.lines().collect();
+        assert_eq!(lines[0], "task,label,core,start,end");
+        assert_eq!(lines.len() - 1, t.graph_labels.len());
+        for l in &lines[1..] {
+            assert_eq!(l.split(',').count(), 5);
+        }
+    }
+
+    #[test]
+    fn ascii_has_core_rows() {
+        let t = mk("cg-nb");
+        let art = t.to_ascii(80);
+        assert_eq!(art.lines().count(), 1 + 8 + 1);
+        assert!(art.contains("core 0"));
+        assert!(art.contains("NIC"));
+        assert!(art.contains('#'));
+    }
+
+    #[test]
+    fn comm_tasks_on_nic_only() {
+        let t = mk("cg");
+        for (i, p) in t.schedule.placements.iter().enumerate() {
+            let is_comm = t.graph_labels[i].contains("halo")
+                || t.graph_labels[i].contains("allreduce");
+            assert_eq!(p.core == usize::MAX, is_comm, "task {i}");
+        }
+    }
+}

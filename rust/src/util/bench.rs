@@ -1,0 +1,97 @@
+//! Micro-benchmark harness (criterion is not in the offline crate set).
+//!
+//! `bench(name, iters_hint, f)` warms up, runs enough repetitions to fill
+//! ~0.3 s, and reports median/min per-iteration time. Used by the
+//! `cargo bench` targets (harness = false).
+
+use std::time::Instant;
+
+pub struct BenchResult {
+    pub name: String,
+    pub median_ns: f64,
+    pub min_ns: f64,
+    pub reps: usize,
+}
+
+impl BenchResult {
+    pub fn report(&self) -> String {
+        let (v, unit) = humanize(self.median_ns);
+        let (vmin, unit2) = humanize(self.min_ns);
+        format!(
+            "{:<44} median {:>9.3} {:<2} min {:>9.3} {:<2} ({} reps)",
+            self.name, v, unit, vmin, unit2, self.reps
+        )
+    }
+}
+
+fn humanize(ns: f64) -> (f64, &'static str) {
+    if ns < 1e3 {
+        (ns, "ns")
+    } else if ns < 1e6 {
+        (ns / 1e3, "µs")
+    } else if ns < 1e9 {
+        (ns / 1e6, "ms")
+    } else {
+        (ns / 1e9, "s")
+    }
+}
+
+/// Run `f` repeatedly; returns per-call stats. `f` should return a value
+/// that is consumed (black-box) to defeat dead-code elimination.
+pub fn bench<T>(name: &str, mut f: impl FnMut() -> T) -> BenchResult {
+    // warmup ~3 calls, then time batches until >= 0.3 s total
+    for _ in 0..3 {
+        std::hint::black_box(f());
+    }
+    let mut samples = Vec::new();
+    let budget = std::time::Duration::from_millis(300);
+    let t0 = Instant::now();
+    while t0.elapsed() < budget || samples.len() < 5 {
+        let s = Instant::now();
+        std::hint::black_box(f());
+        samples.push(s.elapsed().as_nanos() as f64);
+        if samples.len() >= 10_000 {
+            break;
+        }
+    }
+    samples.sort_by(f64::total_cmp);
+    BenchResult {
+        name: name.to_string(),
+        median_ns: samples[samples.len() / 2],
+        min_ns: samples[0],
+        reps: samples.len(),
+    }
+}
+
+/// Memory-bandwidth style report: GB/s given bytes touched per call.
+pub fn gbps(bytes: f64, ns: f64) -> f64 {
+    bytes / ns
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_reports_sane_numbers() {
+        let r = bench("spin", || {
+            let mut acc = 0u64;
+            for i in 0..1000u64 {
+                acc = acc.wrapping_add(i * i);
+            }
+            acc
+        });
+        assert!(r.median_ns > 0.0);
+        assert!(r.min_ns <= r.median_ns);
+        assert!(r.reps >= 5);
+        assert!(r.report().contains("spin"));
+    }
+
+    #[test]
+    fn humanize_units() {
+        assert_eq!(humanize(500.0).1, "ns");
+        assert_eq!(humanize(5e4).1, "µs");
+        assert_eq!(humanize(5e7).1, "ms");
+        assert_eq!(humanize(5e9).1, "s");
+    }
+}

@@ -1,0 +1,143 @@
+//! Tiny CLI argument parser (clap is not in the offline crate set).
+//!
+//! Supports `--flag`, `--key value`, `--key=value` and positional args.
+//! Each subcommand of the `hlam` binary builds an `Args` from `env::args`
+//! and pulls typed values with defaults.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw arguments (not including argv[0]).
+    /// `known_flags` lists boolean options that never take a value.
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I, known_flags: &[&str]) -> Args {
+        let mut args = Args::default();
+        let mut it = raw.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(body) = a.strip_prefix("--") {
+                if let Some((k, v)) = body.split_once('=') {
+                    args.options.insert(k.to_string(), v.to_string());
+                } else if known_flags.contains(&body) {
+                    args.flags.push(body.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    args.options.insert(body.to_string(), v);
+                } else {
+                    args.flags.push(body.to_string());
+                }
+            } else {
+                args.positional.push(a);
+            }
+        }
+        args
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> usize {
+        self.get(name)
+            .map(|v| {
+                v.parse()
+                    .unwrap_or_else(|_| panic!("--{name} expects an integer, got '{v}'"))
+            })
+            .unwrap_or(default)
+    }
+
+    pub fn u64_or(&self, name: &str, default: u64) -> u64 {
+        self.get(name)
+            .map(|v| {
+                v.parse()
+                    .unwrap_or_else(|_| panic!("--{name} expects an integer, got '{v}'"))
+            })
+            .unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, name: &str, default: f64) -> f64 {
+        self.get(name)
+            .map(|v| {
+                v.parse()
+                    .unwrap_or_else(|_| panic!("--{name} expects a number, got '{v}'"))
+            })
+            .unwrap_or(default)
+    }
+
+    /// Comma-separated list option: `--solvers cg,jacobi`.
+    pub fn list_or(&self, name: &str, default: &[&str]) -> Vec<String> {
+        match self.get(name) {
+            Some(v) => v.split(',').map(|s| s.trim().to_string()).collect(),
+            None => default.iter().map(|s| s.to_string()).collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk(args: &[&str], flags: &[&str]) -> Args {
+        Args::parse(args.iter().map(|s| s.to_string()), flags)
+    }
+
+    #[test]
+    fn key_value_pairs() {
+        let a = mk(&["--n", "128", "--solver=cg"], &[]);
+        assert_eq!(a.usize_or("n", 0), 128);
+        assert_eq!(a.str_or("solver", ""), "cg");
+    }
+
+    #[test]
+    fn flags_and_positional() {
+        let a = mk(&["solve", "--verbose", "--n", "4"], &["verbose"]);
+        assert_eq!(a.positional, vec!["solve"]);
+        assert!(a.flag("verbose"));
+        assert_eq!(a.usize_or("n", 0), 4);
+    }
+
+    #[test]
+    fn trailing_unknown_option_is_flag() {
+        let a = mk(&["--quiet"], &[]);
+        assert!(a.flag("quiet"));
+    }
+
+    #[test]
+    fn defaults() {
+        let a = mk(&[], &[]);
+        assert_eq!(a.usize_or("nodes", 64), 64);
+        assert_eq!(a.f64_or("eps", 1e-6), 1e-6);
+        assert_eq!(a.str_or("model", "mpi"), "mpi");
+        assert!(!a.flag("verbose"));
+    }
+
+    #[test]
+    fn list_option() {
+        let a = mk(&["--solvers", "cg, bicgstab,jacobi"], &[]);
+        assert_eq!(a.list_or("solvers", &[]), vec!["cg", "bicgstab", "jacobi"]);
+        assert_eq!(a.list_or("models", &["mpi"]), vec!["mpi"]);
+    }
+
+    #[test]
+    fn negative_number_value() {
+        let a = mk(&["--shift", "-0.5"], &[]);
+        assert_eq!(a.f64_or("shift", 0.0), -0.5);
+    }
+}

@@ -1,0 +1,13 @@
+//! Self-contained utilities replacing unavailable third-party crates
+//! (offline build): PRNG, JSON, CLI parsing and a micro property-test
+//! harness used across the coordinator test suites.
+
+pub mod cli;
+pub mod json;
+pub mod bench;
+pub mod proptest;
+pub mod rng;
+
+pub use cli::Args;
+pub use json::Json;
+pub use rng::Rng;

@@ -1,0 +1,68 @@
+//! Micro property-testing harness (proptest is not in the offline set).
+//!
+//! `forall(seed, cases, gen, prop)` runs `prop` on `cases` random inputs
+//! drawn by `gen`; on failure it retries with progressively simpler cases
+//! (halving the size hint) to report a small counterexample. Coordinator
+//! invariants (task-graph safety, halo-map partitioning, allreduce
+//! consistency) use this in their unit tests.
+
+use super::rng::Rng;
+
+/// Size hint passed to generators; shrunk on failure for readability.
+#[derive(Debug, Clone, Copy)]
+pub struct Size(pub usize);
+
+/// Run a property over `cases` random inputs. Panics with the failing
+/// input's debug representation (and the case seed for replay).
+pub fn forall<T, G, P>(seed: u64, cases: usize, mut gen: G, mut prop: P)
+where
+    T: std::fmt::Debug,
+    G: FnMut(&mut Rng, Size) -> T,
+    P: FnMut(&T) -> bool,
+{
+    let master = Rng::new(seed);
+    for case in 0..cases {
+        let mut rng = master.substream(case as u64);
+        // ramp the size hint up over the run: small cases first
+        let size = Size(1 + case * 64 / cases.max(1));
+        let input = gen(&mut rng, size);
+        if !prop(&input) {
+            // try to find a smaller failing case from the same stream
+            let mut smallest = format!("{input:?}");
+            for shrink in 0..8 {
+                let mut r2 = master.substream((case as u64) << 8 | shrink);
+                let s2 = Size((size.0 / (2 << shrink)).max(1));
+                let cand = gen(&mut r2, s2);
+                if !prop(&cand) {
+                    smallest = format!("{cand:?}");
+                    break;
+                }
+            }
+            panic!(
+                "property failed (seed={seed}, case={case}, size={}):\n{}",
+                size.0, smallest
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        forall(
+            1,
+            200,
+            |r, s| (0..s.0.max(1)).map(|_| r.f64()).collect::<Vec<_>>(),
+            |v| v.iter().all(|x| (0.0..1.0).contains(x)),
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_reports() {
+        forall(2, 50, |r, _| r.below(100), |&x| x < 90);
+    }
+}

@@ -1,0 +1,184 @@
+//! Integration: the figure harness produces well-formed outputs whose
+//! *shape* matches the paper's findings (who wins, roughly by how much,
+//! where crossovers fall).
+
+use hlam::harness::{self, weak_config, HarnessOpts};
+use hlam::simulator::{repeat_runs, ExecModel};
+use hlam::sparse::StencilKind;
+use hlam::stats::median;
+
+fn opts() -> HarnessOpts {
+    HarnessOpts {
+        reps: 5,
+        quick: true,
+        ..Default::default()
+    }
+}
+
+fn tmp(name: &str) -> std::path::PathBuf {
+    let d = std::env::temp_dir().join(format!("hlam_it_{name}"));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+#[test]
+fn fig3_weak_scaling_shape() {
+    let dir = tmp("fig3");
+    let out = harness::fig3(&dir, &opts());
+    assert!(out.contains("panel 3a"));
+    let csv = std::fs::read_to_string(dir.join("fig3_weak_ksm.csv")).unwrap();
+    // collect efficiencies: (panel, method, model, nodes) -> eff
+    let mut eff = std::collections::BTreeMap::new();
+    for line in csv.lines().skip(1) {
+        let f: Vec<&str> = line.split(',').collect();
+        eff.insert(
+            (
+                f[0].to_string(),
+                f[1].to_string(),
+                f[2].to_string(),
+                f[3].parse::<usize>().unwrap(),
+            ),
+            f[5].parse::<f64>().unwrap(),
+        );
+    }
+    // paper: task-based CG-NB ~1.2x over MPI-only classic at 64 nodes
+    let oss = eff[&("3a".into(), "cg-nb".into(), "MPI-OSS_t".into(), 64)];
+    let mpi = eff[&("3a".into(), "cg".into(), "MPI-only".into(), 64)];
+    assert!(
+        oss / mpi > 1.08 && oss / mpi < 1.6,
+        "3a 64-node OSS/MPI = {:.3} (paper 1.197)",
+        oss / mpi
+    );
+    // MPI-only efficiency decays with node count
+    let mpi1 = eff[&("3a".into(), "cg".into(), "MPI-only".into(), 1)];
+    assert!(mpi < mpi1, "MPI-only should degrade: {mpi} vs {mpi1}");
+    // 27-pt stencil: task advantage at least as large (paper: 25%)
+    let oss27 = eff[&("3b".into(), "cg-nb".into(), "MPI-OSS_t".into(), 64)];
+    let mpi27 = eff[&("3b".into(), "cg".into(), "MPI-only".into(), 64)];
+    assert!(oss27 / mpi27 > 1.08, "3b ratio {:.3}", oss27 / mpi27);
+}
+
+#[test]
+fn fig4_jacobi_gs_shape() {
+    let dir = tmp("fig4");
+    let _ = harness::fig4(&dir, &opts());
+    let csv = std::fs::read_to_string(dir.join("fig4_weak_jacobi_gs.csv")).unwrap();
+    let mut eff = std::collections::BTreeMap::new();
+    for line in csv.lines().skip(1) {
+        let f: Vec<&str> = line.split(',').collect();
+        eff.insert(
+            (f[0].to_string(), f[1].to_string(), f[2].to_string(), f[3].parse::<usize>().unwrap()),
+            f[5].parse::<f64>().unwrap(),
+        );
+    }
+    // paper: Jacobi OSS_t 14.4% over MPI-only at 64 nodes (7-pt)
+    let oss = eff[&("4a".into(), "jacobi".into(), "MPI-OSS_t".into(), 64)];
+    let mpi = eff[&("4a".into(), "jacobi".into(), "MPI-only".into(), 64)];
+    assert!(oss / mpi > 1.05, "4a ratio {:.3} (paper 1.144)", oss / mpi);
+}
+
+#[test]
+fn fig5_strong_scaling_shape() {
+    let dir = tmp("fig5");
+    let _ = harness::fig56(5, &dir, &opts());
+    let csv = std::fs::read_to_string(dir.join("fig5_strong.csv")).unwrap();
+    let mut eff = std::collections::BTreeMap::new();
+    for line in csv.lines().skip(1) {
+        let f: Vec<&str> = line.split(',').collect();
+        eff.insert(
+            (f[0].to_string(), f[1].to_string(), f[2].to_string(), f[3].parse::<usize>().unwrap()),
+            f[5].parse::<f64>().unwrap(),
+        );
+    }
+    // §4.4: "the task-based versions start with a competitive advantage
+    // that cancels out progressively" — at 64 nodes strong scaling the
+    // remaining gap is modest, and much smaller than the weak-scaling
+    // advantage at the same node count (Fig 3a: ~1.20x).
+    let ratio64 = eff[&("5a".into(), "cg-nb".into(), "MPI-OSS_t".into(), 64)]
+        / eff[&("5a".into(), "cg".into(), "MPI-only".into(), 64)];
+    assert!(
+        ratio64 < 1.20,
+        "strong-scaling task advantage at 64 nodes should be modest: {ratio64:.3}"
+    );
+    // Jacobi OSS_t stays efficient (superscalability regime)
+    let oss16 = eff[&("5c".into(), "jacobi".into(), "MPI-OSS_t".into(), 16)];
+    assert!(oss16 > 0.9, "5c OSS at 16 nodes = {oss16}");
+}
+
+#[test]
+fn fig2_variability_ordering() {
+    // Fig 2's headline: OmpSs-2 reduces execution-time variability.
+    let o = opts();
+    let mk = |model| weak_config(model, "cg", StencilKind::P7, 16, &o);
+    let iqr = |v: &[f64]| {
+        let mut s = v.to_vec();
+        s.sort_by(f64::total_cmp);
+        s[(3 * s.len()) / 4] - s[s.len() / 4]
+    };
+    let mpi = repeat_runs(&mk(ExecModel::MpiOnly), 10);
+    let oss = repeat_runs(&mk(ExecModel::MpiOssTask), 10);
+    assert!(iqr(&oss) < iqr(&mpi));
+    // and the median ordering matches Fig 2(a): OSS_t fastest
+    assert!(median(&oss) < median(&mpi));
+}
+
+#[test]
+fn granularity_optimum_in_paper_range() {
+    let dir = tmp("gran");
+    let out = harness::granularity_sweep(&dir, &HarnessOpts::default());
+    assert!(out.contains("optimum"));
+    let csv = std::fs::read_to_string(dir.join("granularity.csv")).unwrap();
+    // find the best ntasks for w=7: paper says ~800 with a fair interval;
+    // accept anything in [96, 6000] but NOT the extremes of the sweep
+    let mut best = (0usize, f64::MAX);
+    for line in csv.lines().skip(1) {
+        let f: Vec<&str> = line.split(',').collect();
+        if f[0] == "7" {
+            let nt: usize = f[1].parse().unwrap();
+            let t: f64 = f[2].parse().unwrap();
+            if t < best.1 {
+                best = (nt, t);
+            }
+        }
+    }
+    assert!(
+        best.0 >= 96 && best.0 <= 6000,
+        "optimum {} outside the paper's plausible interval",
+        best.0
+    );
+}
+
+#[test]
+fn latency_table_two_orders() {
+    let dir = tmp("lat");
+    let out = harness::latency_table(&dir);
+    assert!(out.contains("synthetic"));
+    let csv = std::fs::read_to_string(dir.join("latency.csv")).unwrap();
+    for line in csv.lines().skip(1) {
+        let f: Vec<&str> = line.split(',').collect();
+        let ranks: usize = f[0].parse().unwrap();
+        let synth: f64 = f[1].parse().unwrap();
+        let inapp: f64 = f[2].parse().unwrap();
+        if ranks >= 384 {
+            assert!(
+                inapp / synth > 10.0,
+                "{ranks} ranks: in-app {inapp} vs synthetic {synth}"
+            );
+        }
+    }
+}
+
+#[test]
+fn headline_csv_written() {
+    let dir = tmp("headline");
+    let out = harness::headline(&dir, &opts());
+    assert!(out.contains("cg-nb"));
+    let csv = std::fs::read_to_string(dir.join("headline.csv")).unwrap();
+    assert_eq!(csv.lines().count(), 9); // header + 8 rows
+    // every measured speedup is positive (tasks win everywhere at 64 nodes)
+    for line in csv.lines().skip(1) {
+        let f: Vec<&str> = line.split(',').collect();
+        let measured: f64 = f[3].parse().unwrap();
+        assert!(measured > 0.0, "{line}");
+    }
+}

@@ -1,0 +1,178 @@
+//! Cross-module integration: distributed solvers over simmpi on larger
+//! grids, convergence orderings between methods (the paper's qualitative
+//! structure), restart ablation (D4), and decomposition invariance.
+
+use hlam::mesh::Grid3;
+use hlam::solvers::{Method, Native, Problem, SolveOpts};
+use hlam::sparse::StencilKind;
+use hlam::util::proptest::forall;
+
+fn solve(method: &str, grid: Grid3, kind: StencilKind, nranks: usize, opts: &SolveOpts) -> hlam::solvers::SolveStats {
+    let mut pb = Problem::build(grid, kind, nranks);
+    pb.solve(Method::parse(method).unwrap(), opts, &mut Native)
+}
+
+fn abs_opts() -> SolveOpts {
+    SolveOpts {
+        eps_absolute: true,
+        ..SolveOpts::default()
+    }
+}
+
+#[test]
+fn paper_iteration_ordering_7pt() {
+    // §4.1 one-node counts: BiCGStab 8 < GS 9 < CG 12 < Jacobi 18.
+    let g = Grid3::new(16, 16, 32);
+    let opts = abs_opts();
+    let bi = solve("bicgstab", g, StencilKind::P7, 2, &opts).iterations;
+    let gs = solve("gs", g, StencilKind::P7, 2, &opts).iterations;
+    let cg = solve("cg", g, StencilKind::P7, 2, &opts).iterations;
+    let ja = solve("jacobi", g, StencilKind::P7, 2, &opts).iterations;
+    assert!(bi <= gs && gs <= cg && cg <= ja, "bi={bi} gs={gs} cg={cg} jacobi={ja}");
+    // and the magnitudes are in the paper's neighbourhood
+    // reduced grid => smaller ||b|| => slightly fewer absolute-eps orders
+    assert!((4..=12).contains(&bi), "bicgstab {bi} (paper 8)");
+    assert!((8..=16).contains(&cg), "cg {cg} (paper 12)");
+    assert!((12..=24).contains(&ja), "jacobi {ja} (paper 18)");
+}
+
+#[test]
+fn paper_iteration_regime_27pt() {
+    // §4.1: the 27-pt system is weakly dominant — dramatically slower.
+    let g = Grid3::new(12, 12, 24);
+    let opts = abs_opts();
+    let ja7 = solve("jacobi", g, StencilKind::P7, 2, &opts).iterations;
+    let ja27 = solve("jacobi", g, StencilKind::P27, 2, &opts).iterations;
+    assert!(ja27 > 8 * ja7, "27pt {ja27} vs 7pt {ja7}");
+    let cg27 = solve("cg", g, StencilKind::P27, 2, &opts).iterations;
+    let cg7 = solve("cg", g, StencilKind::P7, 2, &opts).iterations;
+    assert!(cg27 > 2 * cg7, "27pt {cg27} vs 7pt {cg7}");
+}
+
+#[test]
+fn decomposition_invariance_krylov() {
+    // CG/BiCGStab iterates are decomposition-independent (same reduction
+    // tree in simmpi): identical counts for 1..5 ranks.
+    let g = Grid3::new(8, 8, 20);
+    let opts = SolveOpts::default();
+    let base = solve("cg", g, StencilKind::P7, 1, &opts).iterations;
+    for nranks in [2, 4, 5] {
+        let it = solve("cg", g, StencilKind::P7, nranks, &opts).iterations;
+        assert_eq!(it, base, "nranks={nranks}");
+    }
+}
+
+#[test]
+fn gs_processor_local_depends_weakly_on_ranks() {
+    // processor-localised GS uses stale boundary values: more ranks may
+    // shift the count slightly but must stay close and converge.
+    let g = Grid3::new(8, 8, 24);
+    let opts = abs_opts();
+    let i1 = solve("gs", g, StencilKind::P7, 1, &opts);
+    let i4 = solve("gs", g, StencilKind::P7, 4, &opts);
+    assert!(i1.converged && i4.converged);
+    assert!(
+        (i1.iterations as i64 - i4.iterations as i64).abs() <= 3,
+        "1 rank {} vs 4 ranks {}",
+        i1.iterations,
+        i4.iterations
+    );
+}
+
+#[test]
+fn bicgstab_restart_ablation_d4() {
+    // D4: with restart disabled (threshold 0) and adversarial task
+    // ordering, B1 may need more iterations or fail to converge as
+    // fast; with the paper's restart it stays robust.
+    let g = Grid3::new(8, 8, 16);
+    let mut with = abs_opts();
+    with.ntasks = 32;
+    with.task_order_seed = 5;
+    let mut without = with.clone();
+    without.restart_eps = 0.0;
+    without.max_iters = 400;
+    let s_with = solve("bicgstab-b1", g, StencilKind::P27, 2, &with);
+    let s_without = solve("bicgstab-b1", g, StencilKind::P27, 2, &without);
+    assert!(s_with.converged);
+    // restart never hurts: iterations(with) <= iterations(without) + 2
+    assert!(
+        s_with.iterations <= s_without.iterations + 2,
+        "with {} vs without {}",
+        s_with.iterations,
+        s_without.iterations
+    );
+}
+
+#[test]
+fn task_order_seeds_perturb_bicgstab_count() {
+    // §3.3: task execution order perturbs reductions; BiCGStab counts may
+    // move by a few iterations across seeds, but every seed converges.
+    let g = Grid3::new(8, 8, 16);
+    let mut counts = Vec::new();
+    for seed in [1u64, 2, 3, 4] {
+        let mut opts = abs_opts();
+        opts.ntasks = 32;
+        opts.task_order_seed = seed;
+        let s = solve("bicgstab-b1", g, StencilKind::P27, 2, &opts);
+        assert!(s.converged, "seed {seed}");
+        assert!(s.x_error < 1e-4);
+        counts.push(s.iterations);
+    }
+    let spread = counts.iter().max().unwrap() - counts.iter().min().unwrap();
+    assert!(spread <= 6, "counts {counts:?}");
+}
+
+#[test]
+fn property_every_method_converges_on_random_grids() {
+    forall(
+        31415,
+        12,
+        |r, _| {
+            let nx = 3 + r.below(6);
+            let ny = 3 + r.below(6);
+            let nz = 6 + r.below(12);
+            let nranks = 1 + r.below(3.min(nz / 2));
+            let method = ["cg", "cg-nb", "bicgstab", "bicgstab-b1", "jacobi", "gs", "gs-relaxed"]
+                [r.below(7)];
+            (nx, ny, nz, nranks, method)
+        },
+        |&(nx, ny, nz, nranks, method)| {
+            let mut opts = SolveOpts::default();
+            if method.starts_with("gs-") {
+                opts.ntasks = 4;
+                opts.task_order_seed = 3;
+            }
+            let s = solve(method, Grid3::new(nx, ny, nz), StencilKind::P7, nranks, &opts);
+            s.converged && s.x_error < 1e-3
+        },
+    );
+}
+
+#[test]
+fn residual_histories_monotone_for_stationary_methods() {
+    // Jacobi/GS on a dominant system contract monotonically.
+    let g = Grid3::new(8, 8, 16);
+    for method in ["jacobi", "gs"] {
+        let s = solve(method, g, StencilKind::P7, 2, &SolveOpts::default());
+        for w in s.history.windows(2) {
+            assert!(w[1] <= w[0] * 1.0001, "{method}: {} -> {}", w[0], w[1]);
+        }
+    }
+}
+
+#[test]
+fn x_error_tracks_epsilon() {
+    // tighter eps -> smaller solution error
+    let g = Grid3::new(8, 8, 16);
+    let loose = SolveOpts {
+        eps: 1e-4,
+        ..SolveOpts::default()
+    };
+    let tight = SolveOpts {
+        eps: 1e-10,
+        ..SolveOpts::default()
+    };
+    let sl = solve("cg", g, StencilKind::P7, 1, &loose);
+    let st = solve("cg", g, StencilKind::P7, 1, &tight);
+    assert!(st.x_error < sl.x_error);
+}
