@@ -18,7 +18,7 @@ fn main() {
     println!("== figure regeneration benchmarks (quick mode, 5 reps) ==\n");
 
     let r = bench("table §4.1 iteration counts", || {
-        harness::iteration_table(&out, true).len()
+        harness::iteration_table(&out, &opts).len()
     });
     println!("{}", r.report());
 
@@ -49,11 +49,11 @@ fn main() {
     println!("{}", r.report());
 
     let r = bench("§4.3 GS iteration counts", || {
-        harness::gs_iteration_table(&out, true).len()
+        harness::gs_iteration_table(&out, &opts).len()
     });
     println!("{}", r.report());
 
     println!("\n== the reproduction report itself ==\n");
     println!("{}", harness::headline(&out, &opts));
-    println!("{}", harness::iteration_table(&out, true));
+    println!("{}", harness::iteration_table(&out, &opts));
 }

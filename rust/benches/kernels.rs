@@ -1,9 +1,14 @@
 //! L3 kernel micro-benchmarks: the native Rust twins of the Pallas
-//! kernels, plus the XLA-executed artifacts for dispatch-cost comparison.
-//! This is the profiling baseline of the §Perf pass (EXPERIMENTS.md).
+//! kernels, the shared-memory executor's thread scaling on them, plus the
+//! XLA-executed artifacts for dispatch-cost comparison. This is the
+//! profiling baseline of the §Perf pass (EXPERIMENTS.md).
 //!
 //!     cargo bench --bench kernels
+//!
+//! The executor section uses a 128³ system (the paper's per-rank weak
+//! scaling size) — set HLAM_BENCH_SMALL=1 to shrink it for quick runs.
 
+use hlam::exec::{ExecStrategy, Executor, Reduction, SharedRows};
 use hlam::kernels;
 use hlam::mesh::Grid3;
 use hlam::sparse::{CsrMatrix, LocalSystem, StencilKind};
@@ -78,6 +83,68 @@ fn main() {
         println!();
     }
 
+    // Shared-memory executor thread scaling on the production-size system.
+    // Acceptance target of the exec refactor: measurable multi-thread
+    // speedup on spmv at n >= 128³.
+    let grid = if std::env::var("HLAM_BENCH_SMALL").is_ok() {
+        Grid3::new(64, 64, 32)
+    } else {
+        Grid3::new(128, 128, 128)
+    };
+    let sys = LocalSystem::build(grid, StencilKind::P7, 0, 1);
+    let n = sys.n();
+    println!("== shared-memory executor scaling (n={n}, 7-pt) ==\n");
+    let mut rng = Rng::new(21);
+    let mut x = sys.new_ext();
+    for v in x.iter_mut().take(n) {
+        *v = rng.normal();
+    }
+    let p: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+    let mut y = vec![0.0; n];
+    let configs = [
+        (ExecStrategy::Seq, 1),
+        (ExecStrategy::ForkJoin, 2),
+        (ExecStrategy::ForkJoin, 4),
+        (ExecStrategy::TaskPool, 2),
+        (ExecStrategy::TaskPool, 4),
+    ];
+    let mut spmv_seq_ns = 0.0;
+    for (strategy, threads) in configs {
+        let exec = Executor::new(strategy, threads);
+        let blocks = exec.blocks(n, usize::MAX);
+        let label = format!("spmv exec={:<9} threads={threads}", strategy.name());
+        let r = bench(&label, || {
+            let rows = SharedRows::new(&mut y);
+            exec.for_each(&blocks, |_, r0, r1| {
+                // SAFETY: chunks write disjoint row ranges of y.
+                let y = unsafe { rows.full() };
+                kernels::spmv_ell(&sys.a, &x, y, r0, r1);
+            });
+            y[0]
+        });
+        if strategy == ExecStrategy::Seq {
+            spmv_seq_ns = r.median_ns;
+        }
+        println!("{}  speedup x{:.2}", r.report(), spmv_seq_ns / r.median_ns);
+    }
+    println!();
+    let mut dot_seq_ns = 0.0;
+    for (strategy, threads) in configs {
+        let exec = Executor::new(strategy, threads);
+        let blocks = exec.blocks(n, usize::MAX);
+        let label = format!("dot  exec={:<9} threads={threads}", strategy.name());
+        let r = bench(&label, || {
+            exec.reduce(&blocks, &Reduction::Tree, |_, r0, r1| {
+                kernels::dot(&x, &p, r0, r1)
+            })
+        });
+        if strategy == ExecStrategy::Seq {
+            dot_seq_ns = r.median_ns;
+        }
+        println!("{}  speedup x{:.2}", r.report(), dot_seq_ns / r.median_ns);
+    }
+    println!();
+
     // XLA dispatch cost comparison (artifact-backed kernels)
     if let Ok(rt) = hlam::runtime::Runtime::load("artifacts") {
         use hlam::solvers::Compute;
@@ -94,11 +161,11 @@ fn main() {
         }
         let mut y = vec![0.0; n];
         let r = bench(&format!("xla spmv n={n} w=7"), || {
-            xc.spmv(&sys.a, &x, &mut y);
+            xc.spmv(&sys.a, &x, &mut y, 0, n);
             y[0]
         });
         println!("{}", r.report());
-        let r = bench(&format!("xla dot n={n}"), || xc.dot(&x[..n], &y));
+        let r = bench(&format!("xla dot n={n}"), || xc.dot(&x, &y, 0, n));
         println!("{}", r.report());
     } else {
         println!("(artifacts missing — XLA benches skipped; run `make artifacts`)");

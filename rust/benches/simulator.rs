@@ -4,6 +4,7 @@
 //!
 //!     cargo bench --bench simulator
 
+use hlam::exec::{ExecStrategy, Executor};
 use hlam::harness::{weak_config, HarnessOpts};
 use hlam::mesh::Grid3;
 use hlam::simulator::{simulate_run, ExecModel};
@@ -47,6 +48,15 @@ fn main() {
     });
     println!("{}", r.report());
 
+    // DES with a measured thread count feeding the machine model
+    let mut cfg = weak_config(ExecModel::MpiOssTask, "cg-nb", StencilKind::P7, 16, &o);
+    cfg.threads = Some(4);
+    let r = bench("DES weak-16 OSS_t cg-nb (measured 4 threads)", || {
+        simulate_run(&cfg).total_time
+    });
+    println!("{}", r.report());
+    println!();
+
     // full real-numerics distributed solve (simmpi + kernels)
     let r = bench("real numerics: cg 16x16x32 / 4 ranks", || {
         let mut pb = Problem::build(Grid3::new(16, 16, 32), StencilKind::P7, 4);
@@ -54,6 +64,23 @@ fn main() {
             .iterations
     });
     println!("{}", r.report());
+
+    // the same solve under the real shared-memory executors
+    for (strategy, threads) in [(ExecStrategy::ForkJoin, 4), (ExecStrategy::TaskPool, 4)] {
+        let exec = Executor::new(strategy, threads).with_chunk_rows(256);
+        let label = format!("real numerics: cg / 4 ranks / {} x{threads}", strategy.name());
+        let r = bench(&label, || {
+            let mut pb = Problem::build(Grid3::new(16, 16, 32), StencilKind::P7, 4);
+            pb.solve_with(
+                Method::parse("cg").unwrap(),
+                &SolveOpts::default(),
+                &mut Native,
+                &exec,
+            )
+            .iterations
+        });
+        println!("{}", r.report());
+    }
 
     let r = bench("real numerics: gs-relaxed 16x16x32 / 4 ranks", || {
         let mut opts = SolveOpts::default();

@@ -1,0 +1,669 @@
+//! Real shared-memory execution layer — the threads that the rest of the
+//! crate previously only *simulated*.
+//!
+//! Every compute kernel in this repo operates on a row range `[r0, r1)`;
+//! the [`Executor`] is what actually fans those ranges out over threads,
+//! in one of the paper's three shared-memory styles:
+//!
+//!  * [`ExecStrategy::Seq`] — one thread, chunks executed in index order
+//!    (the MPI-only baseline: parallelism comes from ranks alone);
+//!  * [`ExecStrategy::ForkJoin`] — scoped threads with a static chunk →
+//!    thread assignment and an implicit barrier at the end of every
+//!    kernel (the `#pragma omp parallel for` model);
+//!  * [`ExecStrategy::TaskPool`] — a persistent worker pool consuming
+//!    dependency-aware chunk tasks ([`pool::DagTask`], mirroring the
+//!    `taskrt::TaskGraph` programming model), so consecutive kernels
+//!    pipeline per chunk with no barrier between them.
+//!
+//! **Determinism contract.** The chunk decomposition depends only on the
+//! row count (never on the strategy or thread count), every chunk is
+//! computed by the same scalar kernel regardless of who runs it, and
+//! reduction partials are folded in a fixed order ([`Reduction`]) after
+//! all of them exist. Consequence: `seq`, `fork-join` and `task` produce
+//! *bitwise identical* results for vector kernels and identical folds for
+//! reductions — convergence histories cannot depend on `--threads`. The
+//! §3.3 task-completion-order nondeterminism the paper studies is opted
+//! into explicitly via [`Reduction::Ordered`] (driven by
+//! `SolveOpts::{ntasks, task_order_seed}`), not smuggled in by the
+//! scheduler.
+
+pub mod pool;
+
+pub use pool::DagTask;
+use pool::WorkerPool;
+
+/// Shared-memory execution strategy (paper §3.2).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ExecStrategy {
+    Seq,
+    ForkJoin,
+    TaskPool,
+}
+
+impl ExecStrategy {
+    pub fn parse(s: &str) -> Option<Self> {
+        Some(match s {
+            "seq" | "sequential" => ExecStrategy::Seq,
+            "fork-join" | "forkjoin" | "fj" => ExecStrategy::ForkJoin,
+            "task" | "tasks" | "task-pool" => ExecStrategy::TaskPool,
+            _ => return None,
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ExecStrategy::Seq => "seq",
+            ExecStrategy::ForkJoin => "fork-join",
+            ExecStrategy::TaskPool => "task",
+        }
+    }
+}
+
+/// How chunk partials fold into one scalar.
+#[derive(Debug, Clone)]
+pub enum Reduction {
+    /// Fixed pairwise tree over chunk-index order (deterministic and
+    /// strategy-independent; the MPI reduction-tree analogue).
+    Tree,
+    /// Linear accumulation in the given chunk order — the simulated task
+    /// completion order of §3.3 (seeded shuffle), reproducing the
+    /// floating-point reordering the paper studies.
+    Ordered(Vec<usize>),
+}
+
+/// Fold per-chunk partials according to the reduction plan.
+pub fn fold(partials: &[f64], red: &Reduction) -> f64 {
+    match red {
+        Reduction::Tree => tree_reduce(partials),
+        Reduction::Ordered(order) => {
+            debug_assert_eq!(order.len(), partials.len());
+            order.iter().fold(0.0, |acc, &bi| acc + partials[bi])
+        }
+    }
+}
+
+/// Deterministic pairwise tree reduction: adjacent pairs are combined
+/// until one value remains. For a single partial this is the identity, so
+/// a 1-chunk reduce is bitwise equal to the plain whole-range kernel.
+pub fn tree_reduce(vals: &[f64]) -> f64 {
+    match vals.len() {
+        0 => 0.0,
+        1 => vals[0],
+        _ => {
+            let mut level: Vec<f64> = vals.to_vec();
+            while level.len() > 1 {
+                let mut next = Vec::with_capacity(level.len().div_ceil(2));
+                for pair in level.chunks(2) {
+                    next.push(if pair.len() == 2 {
+                        pair[0] + pair[1]
+                    } else {
+                        pair[0]
+                    });
+                }
+                level = next;
+            }
+            level[0]
+        }
+    }
+}
+
+/// Contiguous block boundaries for `parts` blocks over `n` rows — the
+/// paper's `rowBs` split (Code 1 line 7). Every row is covered exactly
+/// once; blocks are maximal-uniform (ceil(n/parts) rows each).
+pub fn split_rows(n: usize, parts: usize) -> Vec<(usize, usize)> {
+    let parts = parts.max(1).min(n.max(1));
+    let bs = n.div_ceil(parts);
+    let mut out = Vec::new();
+    let mut r0 = 0;
+    while r0 < n {
+        let r1 = (r0 + bs).min(n);
+        out.push((r0, r1));
+        r0 = r1;
+    }
+    out
+}
+
+/// Shared mutable row buffer handed to concurrent chunk kernels.
+///
+/// The kernels in `crate::kernels` take the full backing slice plus an
+/// absolute row range and only ever write rows inside that range. Chunk
+/// ranges come from [`split_rows`] and are pairwise disjoint, so
+/// concurrent writers never touch the same element; reads outside the
+/// chunk (e.g. halo columns in the colour sweeps) target rows no chunk
+/// writes during the call. That disjoint-write discipline is the safety
+/// contract of [`SharedRows::full`].
+pub struct SharedRows {
+    ptr: *mut f64,
+    len: usize,
+}
+
+unsafe impl Send for SharedRows {}
+unsafe impl Sync for SharedRows {}
+
+impl SharedRows {
+    pub fn new(v: &mut [f64]) -> Self {
+        SharedRows {
+            ptr: v.as_mut_ptr(),
+            len: v.len(),
+        }
+    }
+
+    /// Reconstruct the full backing slice.
+    ///
+    /// # Safety
+    /// Callers must uphold the disjoint-write discipline documented on
+    /// the type: within one executor call, each concurrent user writes
+    /// only its own chunk's rows and reads only rows no other chunk
+    /// writes.
+    ///
+    /// Caveat: concurrent callers hold overlapping `&mut` views, which
+    /// the strict aliasing model (Miri/Stacked Borrows) rejects even
+    /// with disjoint writes. The kernels index rows absolutely, so a
+    /// fully sound per-chunk subslice API would require relative-offset
+    /// kernel variants — tracked as a follow-up; on today's compilers
+    /// the disjoint-write discipline is what matters in practice.
+    #[allow(clippy::mut_from_ref)]
+    pub unsafe fn full(&self) -> &mut [f64] {
+        std::slice::from_raw_parts_mut(self.ptr, self.len)
+    }
+}
+
+/// Default rows per chunk. Chosen so that the toy grids of the test suite
+/// collapse to a single chunk (bitwise-identical to the pre-executor
+/// whole-range kernels) while production sizes (≥ 128³ rows) split into
+/// hundreds of chunks.
+pub const DEFAULT_CHUNK_ROWS: usize = 4096;
+
+/// Upper bound on chunks per kernel call (keeps scheduling overhead and
+/// partial-vector size bounded at very large n).
+pub const MAX_CHUNKS: usize = 512;
+
+/// The shared-memory executor. Construct once and reuse: the `task`
+/// strategy owns a persistent worker pool.
+pub struct Executor {
+    strategy: ExecStrategy,
+    threads: usize,
+    chunk_rows: usize,
+    pool: Option<WorkerPool>,
+}
+
+impl Executor {
+    /// Single-threaded sequential executor (the default everywhere an
+    /// explicit one is not passed).
+    pub fn seq() -> Self {
+        Executor::new(ExecStrategy::Seq, 1)
+    }
+
+    pub fn new(strategy: ExecStrategy, threads: usize) -> Self {
+        let threads = threads.max(1);
+        // the calling thread always participates, so the pool only needs
+        // threads - 1 workers
+        let pool = match strategy {
+            ExecStrategy::TaskPool if threads > 1 => Some(WorkerPool::new(threads - 1)),
+            _ => None,
+        };
+        Executor {
+            strategy,
+            threads,
+            chunk_rows: DEFAULT_CHUNK_ROWS,
+            pool,
+        }
+    }
+
+    /// Override the chunk granularity (rows per chunk). Tests use this to
+    /// force multi-chunk execution on small systems; benches use it to
+    /// sweep granularity. Equivalence across strategies requires giving
+    /// every compared executor the same value.
+    pub fn with_chunk_rows(mut self, rows: usize) -> Self {
+        self.chunk_rows = rows.max(1);
+        self
+    }
+
+    pub fn strategy(&self) -> ExecStrategy {
+        self.strategy
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Chunk decomposition for `n` rows, honouring a backend's chunk
+    /// limit (whole-range-only backends pass 1). Strategy- and
+    /// thread-independent by design — see the determinism contract above.
+    pub fn blocks(&self, n: usize, max_chunks: usize) -> Vec<(usize, usize)> {
+        let nchunks = (n / self.chunk_rows)
+            .clamp(1, MAX_CHUNKS)
+            .min(max_chunks.max(1));
+        split_rows(n, nchunks)
+    }
+
+    /// Whether `nblocks` chunks would actually execute concurrently.
+    pub fn parallel(&self, nblocks: usize) -> bool {
+        self.threads > 1 && nblocks > 1 && self.strategy != ExecStrategy::Seq
+    }
+
+    /// Run `f(bi, r0, r1)` for every chunk; returns when all chunks are
+    /// done (fork-join: scope join; task: batch drain; seq: loop end).
+    pub fn for_each<F>(&self, blocks: &[(usize, usize)], f: F)
+    where
+        F: Fn(usize, usize, usize) + Sync,
+    {
+        if !self.parallel(blocks.len()) {
+            for (bi, &(r0, r1)) in blocks.iter().enumerate() {
+                f(bi, r0, r1);
+            }
+            return;
+        }
+        match self.strategy {
+            ExecStrategy::ForkJoin => self.fork_join(blocks, |bi, r0, r1| {
+                f(bi, r0, r1);
+            }),
+            ExecStrategy::TaskPool => {
+                let pool = self.pool.as_ref().expect("task pool present");
+                let f = &f;
+                pool.run_dag(
+                    blocks
+                        .iter()
+                        .enumerate()
+                        .map(|(bi, &(r0, r1))| DagTask::new(move || f(bi, r0, r1)))
+                        .collect(),
+                );
+            }
+            ExecStrategy::Seq => unreachable!(),
+        }
+    }
+
+    /// Run `f` over every chunk and fold the per-chunk partials with
+    /// `red`. The fold happens after all partials exist, in a fixed
+    /// order, so the result is independent of scheduling.
+    pub fn reduce<F>(&self, blocks: &[(usize, usize)], red: &Reduction, f: F) -> f64
+    where
+        F: Fn(usize, usize, usize) -> f64 + Sync,
+    {
+        let partials = self.collect(blocks, &f);
+        fold(&partials, red)
+    }
+
+    /// Two dependent chunk stages, pipelined per chunk: stage 2 of chunk
+    /// i needs only stage 1 of chunk i. Under the task strategy this is a
+    /// real dependency edge (no barrier between the kernels); under
+    /// fork-join it is two barriered parallel regions; sequentially the
+    /// stages interleave per chunk. All three produce identical partials.
+    pub fn pipeline2<F1, F2>(
+        &self,
+        blocks: &[(usize, usize)],
+        red: &Reduction,
+        f1: F1,
+        f2: F2,
+    ) -> f64
+    where
+        F1: Fn(usize, usize, usize) + Sync,
+        F2: Fn(usize, usize, usize) -> f64 + Sync,
+    {
+        let n = blocks.len();
+        if !self.parallel(n) {
+            let mut partials = vec![0.0; n];
+            for (bi, &(r0, r1)) in blocks.iter().enumerate() {
+                f1(bi, r0, r1);
+                partials[bi] = f2(bi, r0, r1);
+            }
+            return fold(&partials, red);
+        }
+        match self.strategy {
+            ExecStrategy::ForkJoin => {
+                // fork-join pays the inter-kernel barrier the paper
+                // attributes to `omp parallel for`
+                self.for_each(blocks, &f1);
+                self.reduce(blocks, red, &f2)
+            }
+            ExecStrategy::TaskPool => {
+                let pool = self.pool.as_ref().expect("task pool present");
+                let sink = std::sync::Mutex::new(vec![0.0; n]);
+                let mut tasks: Vec<DagTask> = Vec::with_capacity(2 * n);
+                for (bi, &(r0, r1)) in blocks.iter().enumerate() {
+                    let f1 = &f1;
+                    tasks.push(DagTask::new(move || f1(bi, r0, r1)));
+                }
+                for (bi, &(r0, r1)) in blocks.iter().enumerate() {
+                    let f2 = &f2;
+                    let sink = &sink;
+                    tasks.push(DagTask::after(vec![bi], move || {
+                        let v = f2(bi, r0, r1);
+                        sink.lock().unwrap()[bi] = v;
+                    }));
+                }
+                pool.run_dag(tasks);
+                let partials = sink.into_inner().unwrap();
+                fold(&partials, red)
+            }
+            ExecStrategy::Seq => unreachable!(),
+        }
+    }
+
+    /// Per-chunk partials in chunk-index order, executed per strategy.
+    fn collect<F>(&self, blocks: &[(usize, usize)], f: &F) -> Vec<f64>
+    where
+        F: Fn(usize, usize, usize) -> f64 + Sync,
+    {
+        let n = blocks.len();
+        if !self.parallel(n) {
+            return blocks
+                .iter()
+                .enumerate()
+                .map(|(bi, &(r0, r1))| f(bi, r0, r1))
+                .collect();
+        }
+        let mut partials = vec![0.0; n];
+        match self.strategy {
+            ExecStrategy::ForkJoin => {
+                let got = self.fork_join_collect(blocks, f);
+                for (bi, v) in got {
+                    partials[bi] = v;
+                }
+            }
+            ExecStrategy::TaskPool => {
+                let pool = self.pool.as_ref().expect("task pool present");
+                let sink = std::sync::Mutex::new(Vec::with_capacity(n));
+                pool.run_dag(
+                    blocks
+                        .iter()
+                        .enumerate()
+                        .map(|(bi, &(r0, r1))| {
+                            let sink = &sink;
+                            DagTask::new(move || {
+                                let v = f(bi, r0, r1);
+                                sink.lock().unwrap().push((bi, v));
+                            })
+                        })
+                        .collect(),
+                );
+                for (bi, v) in sink.into_inner().unwrap() {
+                    partials[bi] = v;
+                }
+            }
+            ExecStrategy::Seq => unreachable!(),
+        }
+        partials
+    }
+
+    /// Static round-robin chunk→thread assignment + scope join (the
+    /// fork-join barrier).
+    fn fork_join<F>(&self, blocks: &[(usize, usize)], f: F)
+    where
+        F: Fn(usize, usize, usize) + Sync,
+    {
+        let nthreads = self.threads.min(blocks.len());
+        std::thread::scope(|s| {
+            for t in 1..nthreads {
+                let f = &f;
+                s.spawn(move || {
+                    for bi in (t..blocks.len()).step_by(nthreads) {
+                        let (r0, r1) = blocks[bi];
+                        f(bi, r0, r1);
+                    }
+                });
+            }
+            for bi in (0..blocks.len()).step_by(nthreads) {
+                let (r0, r1) = blocks[bi];
+                f(bi, r0, r1);
+            }
+        });
+    }
+
+    fn fork_join_collect<F>(&self, blocks: &[(usize, usize)], f: &F) -> Vec<(usize, f64)>
+    where
+        F: Fn(usize, usize, usize) -> f64 + Sync,
+    {
+        let nthreads = self.threads.min(blocks.len());
+        std::thread::scope(|s| {
+            let handles: Vec<_> = (1..nthreads)
+                .map(|t| {
+                    s.spawn(move || {
+                        let mut out = Vec::new();
+                        for bi in (t..blocks.len()).step_by(nthreads) {
+                            let (r0, r1) = blocks[bi];
+                            out.push((bi, f(bi, r0, r1)));
+                        }
+                        out
+                    })
+                })
+                .collect();
+            let mut all: Vec<(usize, f64)> = (0..blocks.len())
+                .step_by(nthreads)
+                .map(|bi| {
+                    let (r0, r1) = blocks[bi];
+                    (bi, f(bi, r0, r1))
+                })
+                .collect();
+            for h in handles {
+                all.extend(h.join().expect("fork-join worker panicked"));
+            }
+            all
+        })
+    }
+
+    /// Run a caller-built dependency graph on the task pool (fork-join
+    /// and seq executors run it inline in submission order, which is a
+    /// valid topological order because `DagTask` deps point backwards).
+    ///
+    /// This is the public entry point for multi-kernel DAGs beyond the
+    /// built-in [`Executor::pipeline2`] shape — internal dispatch does
+    /// not use it yet, but it is the intended surface for future fused
+    /// iteration graphs (e.g. whole CG iterations as one task graph).
+    pub fn run_dag(&self, tasks: Vec<DagTask<'_>>) {
+        match (&self.pool, self.parallel(tasks.len())) {
+            (Some(pool), true) => pool.run_dag(tasks),
+            _ => {
+                for t in tasks {
+                    (t.run)();
+                }
+            }
+        }
+    }
+}
+
+impl std::fmt::Debug for Executor {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Executor")
+            .field("strategy", &self.strategy.name())
+            .field("threads", &self.threads)
+            .field("chunk_rows", &self.chunk_rows)
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn executors(chunk_rows: usize) -> Vec<Executor> {
+        vec![
+            Executor::new(ExecStrategy::Seq, 1).with_chunk_rows(chunk_rows),
+            Executor::new(ExecStrategy::ForkJoin, 1).with_chunk_rows(chunk_rows),
+            Executor::new(ExecStrategy::ForkJoin, 2).with_chunk_rows(chunk_rows),
+            Executor::new(ExecStrategy::ForkJoin, 4).with_chunk_rows(chunk_rows),
+            Executor::new(ExecStrategy::TaskPool, 2).with_chunk_rows(chunk_rows),
+            Executor::new(ExecStrategy::TaskPool, 4).with_chunk_rows(chunk_rows),
+        ]
+    }
+
+    #[test]
+    fn split_rows_covers_everything() {
+        for n in [1usize, 7, 100, 101, 4096] {
+            for parts in [1usize, 3, 8, 200] {
+                let blocks = split_rows(n, parts);
+                assert_eq!(blocks[0].0, 0);
+                assert_eq!(blocks.last().unwrap().1, n);
+                for w in blocks.windows(2) {
+                    assert_eq!(w[0].1, w[1].0);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn blocks_ignore_strategy_and_threads() {
+        let n = 100_000;
+        let reference = executors(4096)[0].blocks(n, usize::MAX);
+        for ex in executors(4096) {
+            assert_eq!(ex.blocks(n, usize::MAX), reference);
+        }
+        // backend chunk limits are honoured
+        assert_eq!(executors(4096)[0].blocks(n, 1).len(), 1);
+    }
+
+    #[test]
+    fn tree_reduce_matches_sum() {
+        let mut rng = Rng::new(11);
+        let vals: Vec<f64> = (0..37).map(|_| rng.normal()).collect();
+        let sum: f64 = vals.iter().sum();
+        let tree = tree_reduce(&vals);
+        assert!((tree - sum).abs() < 1e-12 * (1.0 + sum.abs()));
+        // determinism
+        assert_eq!(tree_reduce(&vals).to_bits(), tree.to_bits());
+        assert_eq!(tree_reduce(&[]), 0.0);
+        assert_eq!(tree_reduce(&[3.25]), 3.25);
+    }
+
+    #[test]
+    fn for_each_writes_disjoint_chunks_identically() {
+        let n = 1000;
+        let src: Vec<f64> = (0..n).map(|i| i as f64 * 0.5).collect();
+        let mut want = vec![0.0; n];
+        for i in 0..n {
+            want[i] = 2.0 * src[i] + 1.0;
+        }
+        for ex in executors(64) {
+            let blocks = ex.blocks(n, usize::MAX);
+            assert!(blocks.len() > 1);
+            let mut out = vec![0.0; n];
+            let rows = SharedRows::new(&mut out);
+            ex.for_each(&blocks, |_, r0, r1| {
+                // SAFETY: chunks write disjoint row ranges.
+                let out = unsafe { rows.full() };
+                for i in r0..r1 {
+                    out[i] = 2.0 * src[i] + 1.0;
+                }
+            });
+            assert_eq!(out, want, "{ex:?}");
+        }
+    }
+
+    #[test]
+    fn reduce_identical_across_strategies() {
+        let n = 5000;
+        let mut rng = Rng::new(5);
+        let x: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let seq = executors(64).remove(0);
+        let blocks = seq.blocks(n, usize::MAX);
+        let reference = seq.reduce(&blocks, &Reduction::Tree, |_, r0, r1| {
+            x[r0..r1].iter().sum()
+        });
+        for ex in executors(64) {
+            let got = ex.reduce(&ex.blocks(n, usize::MAX), &Reduction::Tree, |_, r0, r1| {
+                x[r0..r1].iter().sum()
+            });
+            assert_eq!(got.to_bits(), reference.to_bits(), "{ex:?}");
+        }
+    }
+
+    #[test]
+    fn ordered_fold_follows_given_order() {
+        let partials = vec![1e16, 1.0, -1e16];
+        // (1e16 + 1) - 1e16 = 0 in f64; (1e16 - 1e16) + 1 = 1
+        let a = fold(&partials, &Reduction::Ordered(vec![0, 1, 2]));
+        let b = fold(&partials, &Reduction::Ordered(vec![0, 2, 1]));
+        assert_eq!(a, 0.0);
+        assert_eq!(b, 1.0);
+    }
+
+    #[test]
+    fn pipeline2_matches_inline_composition() {
+        let n = 3000;
+        let mut rng = Rng::new(9);
+        let x: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        // reference: seq pipeline
+        let seq = Executor::seq().with_chunk_rows(128);
+        let blocks = seq.blocks(n, usize::MAX);
+        let mut buf = vec![0.0; n];
+        let reference = {
+            let rows = SharedRows::new(&mut buf);
+            seq.pipeline2(
+                &blocks,
+                &Reduction::Tree,
+                |_, r0, r1| {
+                    let b = unsafe { rows.full() };
+                    for i in r0..r1 {
+                        b[i] = x[i] * 3.0;
+                    }
+                },
+                |_, r0, r1| {
+                    let b = unsafe { rows.full() };
+                    b[r0..r1].iter().map(|v| v * v).sum()
+                },
+            )
+        };
+        for ex in executors(128) {
+            let mut buf2 = vec![0.0; n];
+            let rows = SharedRows::new(&mut buf2);
+            let got = ex.pipeline2(
+                &ex.blocks(n, usize::MAX),
+                &Reduction::Tree,
+                |_, r0, r1| {
+                    let b = unsafe { rows.full() };
+                    for i in r0..r1 {
+                        b[i] = x[i] * 3.0;
+                    }
+                },
+                |_, r0, r1| {
+                    let b = unsafe { rows.full() };
+                    b[r0..r1].iter().map(|v| v * v).sum()
+                },
+            );
+            assert_eq!(got.to_bits(), reference.to_bits(), "{ex:?}");
+            assert_eq!(buf2, buf, "{ex:?}");
+        }
+    }
+
+    #[test]
+    fn run_dag_works_on_every_strategy() {
+        // the task strategy routes through the pool; seq and fork-join
+        // fall back to inline submission-order execution (a valid
+        // topological order because deps point backwards)
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        for ex in executors(64) {
+            let stage1 = AtomicUsize::new(0);
+            let violations = AtomicUsize::new(0);
+            let tasks: Vec<DagTask> = (0..8)
+                .map(|i| {
+                    if i < 4 {
+                        DagTask::new(|| {
+                            stage1.fetch_add(1, Ordering::SeqCst);
+                        })
+                    } else {
+                        // depends on its stage-1 partner
+                        DagTask::after(vec![i - 4], || {
+                            if stage1.load(Ordering::SeqCst) == 0 {
+                                violations.fetch_add(1, Ordering::SeqCst);
+                            }
+                        })
+                    }
+                })
+                .collect();
+            ex.run_dag(tasks);
+            assert_eq!(stage1.load(Ordering::SeqCst), 4, "{ex:?}");
+            assert_eq!(violations.load(Ordering::SeqCst), 0, "{ex:?}");
+        }
+    }
+
+    #[test]
+    fn strategy_parse_roundtrip() {
+        for name in ["seq", "fork-join", "task"] {
+            assert_eq!(ExecStrategy::parse(name).unwrap().name(), name);
+        }
+        assert!(ExecStrategy::parse("gpu").is_none());
+        assert_eq!(ExecStrategy::parse("fj"), Some(ExecStrategy::ForkJoin));
+        assert_eq!(ExecStrategy::parse("tasks"), Some(ExecStrategy::TaskPool));
+    }
+}

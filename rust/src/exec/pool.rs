@@ -1,0 +1,349 @@
+//! Persistent worker pool with dependency-aware chunk-task scheduling —
+//! the shared-memory half of the paper's MPI-OSS_t / MPI-OMP_t models.
+//!
+//! Unlike the fork-join strategy (which spawns scoped threads and pays an
+//! implicit barrier per kernel), the pool's workers live for the lifetime
+//! of the [`crate::exec::Executor`] and consume *task graphs*: each
+//! [`DagTask`] names the batch-local indices of the tasks it depends on,
+//! and becomes runnable the moment its last predecessor finishes — no
+//! global barrier between kernels, which is exactly the mechanism that
+//! lets a chunk's `dot` start while another chunk's `spmv` is still in
+//! flight (the paper's Code 1 dependency chains).
+//!
+//! Scheduling is FIFO over ready tasks (the OmpSs-2 default); the numeric
+//! results never depend on the schedule because reductions are folded in
+//! a fixed order *after* all partials exist (see `exec::Reduction`).
+
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+/// One work item of a batch. `deps` are indices into the same batch that
+/// must complete before this task may start (forward references are not
+/// allowed: a task may only depend on lower indices).
+pub struct DagTask<'a> {
+    pub deps: Vec<usize>,
+    pub run: Box<dyn FnOnce() + Send + 'a>,
+}
+
+impl<'a> DagTask<'a> {
+    /// An independent task (no predecessors).
+    pub fn new(run: impl FnOnce() + Send + 'a) -> Self {
+        DagTask {
+            deps: Vec::new(),
+            run: Box::new(run),
+        }
+    }
+
+    /// A task that starts only after every task in `deps` completed.
+    pub fn after(deps: Vec<usize>, run: impl FnOnce() + Send + 'a) -> Self {
+        DagTask {
+            deps,
+            run: Box::new(run),
+        }
+    }
+}
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// Scheduling state of one in-flight `run_dag` batch.
+struct Batch {
+    /// Pending job bodies; `None` once taken by a worker (or cancelled).
+    jobs: Vec<Option<Job>>,
+    indeg: Vec<usize>,
+    succs: Vec<Vec<usize>>,
+    ready: VecDeque<usize>,
+    /// Tasks not yet finished. The batch is complete at 0.
+    remaining: usize,
+    panicked: bool,
+}
+
+impl Batch {
+    /// A task finished (or panicked): release successors / cancel rest.
+    fn task_done(&mut self, id: usize, panicked: bool) {
+        self.remaining -= 1;
+        if panicked {
+            self.panicked = true;
+            // Cancel everything not yet picked up so `remaining` can
+            // still reach zero and `run_dag` can propagate the panic.
+            for slot in self.jobs.iter_mut() {
+                if slot.take().is_some() {
+                    self.remaining -= 1;
+                }
+            }
+            self.ready.clear();
+            return;
+        }
+        for i in 0..self.succs[id].len() {
+            let s = self.succs[id][i];
+            self.indeg[s] -= 1;
+            if self.indeg[s] == 0 {
+                self.ready.push_back(s);
+            }
+        }
+    }
+
+    /// Pop the next runnable job, if any.
+    fn next_job(&mut self) -> Option<(usize, Job)> {
+        while let Some(id) = self.ready.pop_front() {
+            if let Some(job) = self.jobs[id].take() {
+                return Some((id, job));
+            }
+        }
+        None
+    }
+}
+
+struct Shared {
+    state: Mutex<PoolState>,
+    /// Single condvar for all transitions (task ready, batch done,
+    /// shutdown); spurious wakeups are cheap at this granularity.
+    cv: Condvar,
+}
+
+struct PoolState {
+    batch: Option<Batch>,
+    shutdown: bool,
+}
+
+/// The persistent pool. Dropping it shuts the workers down.
+pub struct WorkerPool {
+    shared: Arc<Shared>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl WorkerPool {
+    /// Spawn `workers` threads. Zero workers is legal: `run_dag` always
+    /// executes on the calling thread too, so the pool still makes
+    /// progress (it just isn't parallel).
+    pub fn new(workers: usize) -> Self {
+        let shared = Arc::new(Shared {
+            state: Mutex::new(PoolState {
+                batch: None,
+                shutdown: false,
+            }),
+            cv: Condvar::new(),
+        });
+        let handles = (0..workers)
+            .map(|_| {
+                let sh = shared.clone();
+                std::thread::spawn(move || worker_loop(&sh))
+            })
+            .collect();
+        WorkerPool { shared, handles }
+    }
+
+    pub fn workers(&self) -> usize {
+        self.handles.len()
+    }
+
+    /// Execute one dependency graph of tasks and return when every task
+    /// has run. The calling thread participates in execution, so borrows
+    /// captured by the tasks stay alive for exactly as long as they are
+    /// used. Panics in any task are re-raised here after the batch
+    /// drains.
+    pub fn run_dag(&self, tasks: Vec<DagTask<'_>>) {
+        if tasks.is_empty() {
+            return;
+        }
+        let n = tasks.len();
+        let mut jobs: Vec<Option<Job>> = Vec::with_capacity(n);
+        let mut indeg = vec![0usize; n];
+        let mut succs: Vec<Vec<usize>> = vec![Vec::new(); n];
+        for (id, t) in tasks.into_iter().enumerate() {
+            for &d in &t.deps {
+                assert!(d < id, "task {id} depends on non-earlier task {d}");
+                succs[d].push(id);
+                indeg[id] += 1;
+            }
+            // SAFETY: the job boxes only outlive their true lifetime on
+            // paper — `run_dag` does not return until every job has been
+            // executed or dropped (remaining == 0), so every borrow the
+            // closures capture is still live whenever they run.
+            let job: Job = unsafe {
+                std::mem::transmute::<Box<dyn FnOnce() + Send + '_>, Job>(t.run)
+            };
+            jobs.push(Some(job));
+        }
+        let ready: VecDeque<usize> = (0..n).filter(|&i| indeg[i] == 0).collect();
+        let batch = Batch {
+            jobs,
+            indeg,
+            succs,
+            ready,
+            remaining: n,
+            panicked: false,
+        };
+
+        let mut st = self.shared.state.lock().unwrap();
+        assert!(st.batch.is_none(), "nested run_dag on the same pool");
+        st.batch = Some(batch);
+        self.shared.cv.notify_all();
+
+        // The caller drains the batch alongside the workers.
+        let panicked = loop {
+            let b = st.batch.as_mut().expect("batch vanished mid-run");
+            if b.remaining == 0 {
+                let b = st.batch.take().unwrap();
+                break b.panicked;
+            }
+            if let Some((id, job)) = b.next_job() {
+                drop(st);
+                let ok = catch_unwind(AssertUnwindSafe(job)).is_ok();
+                st = self.shared.state.lock().unwrap();
+                if let Some(b) = st.batch.as_mut() {
+                    b.task_done(id, !ok);
+                    // unconditional: successors this task readied must
+                    // wake parked workers, not just batch completion
+                    self.shared.cv.notify_all();
+                }
+            } else {
+                st = self.shared.cv.wait(st).unwrap();
+            }
+        };
+        drop(st);
+        if panicked {
+            panic!("a worker-pool task panicked");
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.shutdown = true;
+        }
+        self.shared.cv.notify_all();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(shared: &Shared) {
+    let mut st = shared.state.lock().unwrap();
+    loop {
+        if st.shutdown {
+            return;
+        }
+        let job = st.batch.as_mut().and_then(Batch::next_job);
+        match job {
+            Some((id, job)) => {
+                drop(st);
+                let ok = catch_unwind(AssertUnwindSafe(job)).is_ok();
+                st = shared.state.lock().unwrap();
+                if let Some(b) = st.batch.as_mut() {
+                    b.task_done(id, !ok);
+                    // Wake the caller (batch may be done) and siblings
+                    // (successors may have become ready).
+                    shared.cv.notify_all();
+                }
+            }
+            None => {
+                st = shared.cv.wait(st).unwrap();
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn runs_independent_tasks() {
+        let pool = WorkerPool::new(3);
+        let counter = AtomicUsize::new(0);
+        let tasks: Vec<DagTask> = (0..64)
+            .map(|_| {
+                DagTask::new(|| {
+                    counter.fetch_add(1, Ordering::Relaxed);
+                })
+            })
+            .collect();
+        pool.run_dag(tasks);
+        assert_eq!(counter.load(Ordering::Relaxed), 64);
+    }
+
+    #[test]
+    fn zero_worker_pool_still_completes() {
+        let pool = WorkerPool::new(0);
+        let counter = AtomicUsize::new(0);
+        pool.run_dag(
+            (0..8)
+                .map(|_| {
+                    DagTask::new(|| {
+                        counter.fetch_add(1, Ordering::Relaxed);
+                    })
+                })
+                .collect(),
+        );
+        assert_eq!(counter.load(Ordering::Relaxed), 8);
+    }
+
+    #[test]
+    fn dependencies_are_respected() {
+        // chain 0 -> 1 -> 2 plus a diamond onto 5: any interleaving that
+        // violated deps would record an out-of-order sequence number.
+        let pool = WorkerPool::new(4);
+        for _ in 0..20 {
+            let order = Mutex::new(Vec::new());
+            let push = |i: usize| {
+                order.lock().unwrap().push(i);
+            };
+            pool.run_dag(vec![
+                DagTask::new(|| push(0)),
+                DagTask::after(vec![0], || push(1)),
+                DagTask::after(vec![1], || push(2)),
+                DagTask::after(vec![0], || push(3)),
+                DagTask::after(vec![0], || push(4)),
+                DagTask::after(vec![3, 4], || push(5)),
+            ]);
+            let seq = order.into_inner().unwrap();
+            let pos = |i: usize| seq.iter().position(|&x| x == i).unwrap();
+            assert!(pos(0) < pos(1) && pos(1) < pos(2));
+            assert!(pos(3) < pos(5) && pos(4) < pos(5));
+            assert_eq!(seq.len(), 6);
+        }
+    }
+
+    #[test]
+    fn batches_are_reusable() {
+        let pool = WorkerPool::new(2);
+        let counter = AtomicUsize::new(0);
+        for _ in 0..50 {
+            pool.run_dag(
+                (0..4)
+                    .map(|_| {
+                        DagTask::new(|| {
+                            counter.fetch_add(1, Ordering::Relaxed);
+                        })
+                    })
+                    .collect(),
+            );
+        }
+        assert_eq!(counter.load(Ordering::Relaxed), 200);
+    }
+
+    #[test]
+    fn task_panic_propagates_and_pool_survives() {
+        let pool = WorkerPool::new(2);
+        let res = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            pool.run_dag(vec![
+                DagTask::new(|| {}),
+                DagTask::new(|| panic!("boom")),
+                DagTask::after(vec![1], || {}),
+            ]);
+        }));
+        assert!(res.is_err(), "panic must propagate to the caller");
+        // the pool is still usable afterwards
+        let counter = AtomicUsize::new(0);
+        pool.run_dag(vec![DagTask::new(|| {
+            counter.fetch_add(1, Ordering::Relaxed);
+        })]);
+        assert_eq!(counter.load(Ordering::Relaxed), 1);
+    }
+}

@@ -9,6 +9,7 @@
 use std::fmt::Write as _;
 use std::path::Path;
 
+use crate::exec::{ExecStrategy, Executor};
 use crate::machine::MachineModel;
 use crate::mesh::Grid3;
 use crate::simulator::{repeat_runs, simulate_run, ExecModel, RunConfig};
@@ -63,6 +64,11 @@ pub struct HarnessOpts {
     /// Task granularity per stencil (paper §4.2: ~800 / ~1500).
     pub ntasks_p7: usize,
     pub ntasks_p27: usize,
+    /// Real shared-memory strategy for the real-numerics tables.
+    pub exec: ExecStrategy,
+    /// Measured thread count: drives the real-numerics executor and, when
+    /// non-zero, overrides cores-per-rank in the simulated timing runs.
+    pub threads: usize,
 }
 
 impl Default for HarnessOpts {
@@ -73,6 +79,8 @@ impl Default for HarnessOpts {
             quick: false,
             ntasks_p7: 800,
             ntasks_p27: 1500,
+            exec: ExecStrategy::Seq,
+            threads: 0,
         }
     }
 }
@@ -91,6 +99,15 @@ impl HarnessOpts {
             StencilKind::P7 => self.ntasks_p7,
             StencilKind::P27 => self.ntasks_p27,
         }
+    }
+
+    /// Shared-memory executor for the real-numerics experiments.
+    pub fn executor(&self) -> Executor {
+        Executor::new(self.exec, self.threads.max(1))
+    }
+
+    fn measured_threads(&self) -> Option<usize> {
+        (self.threads > 0).then_some(self.threads)
     }
 }
 
@@ -137,6 +154,14 @@ pub fn weak_config(
         ntasks: opts.ntasks(kind),
         seed: opts.seed,
         noise: true,
+        // measured thread counts only make sense for the hybrid models;
+        // the MPI-only baseline is 1 core per rank by definition and
+        // must not inherit the override
+        threads: if model == ExecModel::MpiOnly {
+            None
+        } else {
+            opts.measured_threads()
+        },
     }
 }
 
@@ -166,8 +191,13 @@ fn write_file(out_dir: &Path, name: &str, content: &str) {
 /// Run every method on a reduced HPCG system with real numerics and
 /// report measured iteration counts next to the paper's. Reduced scale
 /// lowers ||b|| and hence the absolute-ε iteration counts slightly; the
-/// orderings and regime gap (7-pt fast / 27-pt slow) must match.
-pub fn iteration_table(out_dir: &Path, quick: bool) -> String {
+/// orderings and regime gap (7-pt fast / 27-pt slow) must match. Runs
+/// under `hopts`'s shared-memory executor — counts are identical for
+/// every `--exec`/`--threads` combination (executor determinism
+/// contract), which `tests/integration_exec.rs` asserts.
+pub fn iteration_table(out_dir: &Path, hopts: &HarnessOpts) -> String {
+    let quick = hopts.quick;
+    let exec = hopts.executor();
     let grid = if quick {
         Grid3::new(16, 16, 32)
     } else {
@@ -181,7 +211,17 @@ pub fn iteration_table(out_dir: &Path, quick: bool) -> String {
         grid.nx, grid.ny, grid.nz, nranks, "method", "w", "measured", "paper"
     );
     for kind in [StencilKind::P7, StencilKind::P27] {
-        for method in ["cg", "cg-nb", "bicgstab", "bicgstab-b1", "gs", "gs-rb", "gs-relaxed", "jacobi"] {
+        let methods = [
+            "cg",
+            "cg-nb",
+            "bicgstab",
+            "bicgstab-b1",
+            "gs",
+            "gs-rb",
+            "gs-relaxed",
+            "jacobi",
+        ];
+        for method in methods {
             let mut opts = SolveOpts {
                 eps_absolute: true,
                 ..SolveOpts::default()
@@ -191,7 +231,7 @@ pub fn iteration_table(out_dir: &Path, quick: bool) -> String {
                 opts.task_order_seed = 11;
             }
             let mut pb = Problem::build(grid, kind, nranks);
-            let stats = pb.solve(Method::parse(method).unwrap(), &opts, &mut Native);
+            let stats = pb.solve_with(Method::parse(method).unwrap(), &opts, &mut Native, &exec);
             let paper = paper_iterations(method, kind);
             let _ = writeln!(
                 csv,
@@ -601,7 +641,9 @@ pub fn latency_table(out_dir: &Path) -> String {
 }
 
 /// §4.3 GS iteration counts by implementation (27-pt, real numerics).
-pub fn gs_iteration_table(out_dir: &Path, quick: bool) -> String {
+pub fn gs_iteration_table(out_dir: &Path, hopts: &HarnessOpts) -> String {
+    let quick = hopts.quick;
+    let exec = hopts.executor();
     let grid = if quick {
         Grid3::new(12, 12, 24)
     } else {
@@ -627,7 +669,7 @@ pub fn gs_iteration_table(out_dir: &Path, quick: bool) -> String {
         opts.ntasks = ntasks;
         opts.task_order_seed = seed;
         let mut pb = Problem::build(grid, StencilKind::P27, 2);
-        let stats = pb.solve(Method::parse(method).unwrap(), &opts, &mut Native);
+        let stats = pb.solve_with(Method::parse(method).unwrap(), &opts, &mut Native, &exec);
         let _ = writeln!(csv, "{label},{},{paper}", stats.iterations);
         let _ = writeln!(
             out,
@@ -744,7 +786,7 @@ mod tests {
     }
 
     #[test]
-    fn fig2_box_output_parses(){
+    fn fig2_box_output_parses() {
         let dir = std::env::temp_dir().join("hlam_test_fig2");
         let out = fig2(&dir, &quick_opts());
         assert!(out.contains("median"));
@@ -755,7 +797,7 @@ mod tests {
     #[test]
     fn iteration_table_matches_paper_shape() {
         let dir = std::env::temp_dir().join("hlam_test_iters");
-        let table = iteration_table(&dir, true);
+        let table = iteration_table(&dir, &quick_opts());
         assert!(table.contains("jacobi"));
         let csv = std::fs::read_to_string(dir.join("table_iterations.csv")).unwrap();
         // parse measured counts: cg < jacobi per stencil, 27pt > 7pt

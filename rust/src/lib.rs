@@ -4,21 +4,25 @@
 //! iterative methods via hybrid parallelism"* (Martinez-Ferrer, Arslan,
 //! Beltran — JPDC 2023) as a three-layer Rust + JAX + Pallas system.
 //!
-//! Layer 3 (this crate) is the coordinator: solvers, simulated parallel
-//! runtimes (MPI / fork-join / task-dataflow), the MareNostrum 4 machine
-//! model, the discrete-event simulator that regenerates the paper's
-//! figures, and the PJRT runtime that executes the AOT-compiled JAX/Pallas
-//! artifacts. Python (layers 1-2) runs only at build time — see DESIGN.md.
+//! Layer 3 (this crate) is the coordinator: solvers, the *real*
+//! shared-memory executor (`exec` — fork-join scoped threads or a
+//! dependency-aware task pool), simulated distributed runtimes (MPI /
+//! fork-join / task-dataflow), the MareNostrum 4 machine model, the
+//! discrete-event simulator that regenerates the paper's figures, and
+//! the PJRT runtime that executes the AOT-compiled JAX/Pallas artifacts.
+//! Python (layers 1-2) runs only at build time — see DESIGN.md at the
+//! repo root.
 
+pub mod exec;
 pub mod harness;
 pub mod kernels;
 pub mod machine;
 pub mod mesh;
 pub mod runtime;
-pub mod sparse;
 pub mod simmpi;
 pub mod simulator;
 pub mod solvers;
+pub mod sparse;
 pub mod stats;
 pub mod taskrt;
 pub mod trace;

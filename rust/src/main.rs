@@ -18,6 +18,7 @@
 use std::path::PathBuf;
 use std::rc::Rc;
 
+use hlam::exec::{ExecStrategy, Executor};
 use hlam::harness::{self, HarnessOpts};
 use hlam::mesh::Grid3;
 use hlam::runtime::{Runtime, XlaCompute};
@@ -47,6 +48,7 @@ fn usage() {
          \n\
          solve   --method cg|cg-nb|bicgstab|bicgstab-b1|jacobi|gs|gs-rb|gs-relaxed\n\
         \x20        --grid NXxNYxNZ --stencil 7|27 --ranks N --backend native|xla\n\
+        \x20        --exec seq|fork-join|task --threads N\n\
         \x20        --eps 1e-6 --ntasks N --task-seed S --artifacts DIR\n\
          figures --all | --fig 1|2|3|4|5|6|iters|gs-iters|granularity|latency|headline\n\
         \x20        --out DIR --reps N --quick\n\
@@ -80,10 +82,16 @@ fn cmd_solve(args: &Args) {
     };
     opts.max_iters = args.usize_or("max-iters", 10_000);
 
+    // real shared-memory execution: --exec seq|fork-join|task --threads N
+    let strategy = ExecStrategy::parse(&args.str_or("exec", "seq"))
+        .unwrap_or_else(|| panic!("--exec expects seq|fork-join|task"));
+    let threads = args.usize_or("threads", 1);
+    let exec = Executor::new(strategy, threads);
+
     let mut pb = Problem::build(grid, kind, nranks);
     let backend_name = args.str_or("backend", "native");
     let stats = match backend_name.as_str() {
-        "native" => pb.solve(method, &opts, &mut Native),
+        "native" => pb.solve_with(method, &opts, &mut Native, &exec),
         "xla" => {
             let rt = Rc::new(
                 Runtime::load(args.str_or("artifacts", "artifacts"))
@@ -93,16 +101,16 @@ fn cmd_solve(args: &Args) {
             let (n, w, n_ext) = (st.n(), kind.width(), st.sys.part.n_ext());
             let mut xc = XlaCompute::new(rt, n, w, n_ext)
                 .expect("artifacts for this size (see `hlam sizes`)");
-            let stats = pb.solve(method, &opts, &mut xc);
+            let stats = pb.solve_with(method, &opts, &mut xc, &exec);
             println!("xla executions: {}", xc.calls.borrow());
             stats
         }
         other => panic!("unknown backend '{other}'"),
     };
     println!(
-        "method={} backend={} grid={}x{}x{} w={} ranks={}",
+        "method={} backend={} grid={}x{}x{} w={} ranks={} exec={} threads={}",
         stats.method, backend_name, grid.nx, grid.ny, grid.nz,
-        kind.width(), nranks
+        kind.width(), nranks, strategy.name(), exec.threads()
     );
     println!(
         "iterations={} converged={} rel_residual={:.3e} x_error={:.3e} restarts={}",
@@ -112,6 +120,30 @@ fn cmd_solve(args: &Args) {
         "p2p_msgs={} p2p_bytes={} allreduces={}",
         pb.world.stats.p2p_messages, pb.world.stats.p2p_bytes, pb.world.stats.allreduces
     );
+
+    // project the measured configuration onto the machine model: the
+    // strategy maps to its paper execution model and the measured thread
+    // count overrides the nominal cores-per-rank (DESIGN.md §2-§3)
+    let model = hlam::simulator::ExecModel::from_strategy(strategy);
+    let mut hopts = HarnessOpts {
+        threads,
+        ..Default::default()
+    };
+    if opts.ntasks > 0 {
+        // carry the measured task granularity (and its seed) into the
+        // projection instead of the paper defaults
+        hopts.ntasks_p7 = opts.ntasks;
+        hopts.ntasks_p27 = opts.ntasks;
+        hopts.seed = opts.task_order_seed.max(1);
+    }
+    let cfg = harness::weak_config(model, stats.method, kind, 1, &hopts);
+    let proj = hlam::simulator::simulate_run(&cfg);
+    println!(
+        "machine-model projection ({}, 1 node, {} iters): {:.3}s",
+        model.name(),
+        cfg.iterations,
+        proj.total_time
+    );
 }
 
 fn cmd_figures(args: &Args) {
@@ -120,6 +152,9 @@ fn cmd_figures(args: &Args) {
         reps: args.usize_or("reps", 10),
         quick: args.flag("quick"),
         seed: args.u64_or("seed", HarnessOpts::default().seed),
+        exec: ExecStrategy::parse(&args.str_or("exec", "seq"))
+            .unwrap_or_else(|| panic!("--exec expects seq|fork-join|task")),
+        threads: args.usize_or("threads", 0),
         ..Default::default()
     };
     let which = if args.flag("all") {
@@ -141,14 +176,14 @@ fn cmd_figures(args: &Args) {
     };
     for fig in which {
         let text = match fig.as_str() {
-            "iters" => harness::iteration_table(&out, opts.quick),
+            "iters" => harness::iteration_table(&out, &opts),
             "1" => harness::fig1(&out),
             "2" => harness::fig2(&out, &opts),
             "3" => harness::fig3(&out, &opts),
             "4" => harness::fig4(&out, &opts),
             "5" => harness::fig56(5, &out, &opts),
             "6" => harness::fig56(6, &out, &opts),
-            "gs-iters" => harness::gs_iteration_table(&out, opts.quick),
+            "gs-iters" => harness::gs_iteration_table(&out, &opts),
             "granularity" => harness::granularity_sweep(&out, &opts),
             "latency" => harness::latency_table(&out),
             "headline" => harness::headline(&out, &opts),

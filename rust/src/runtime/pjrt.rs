@@ -1,0 +1,399 @@
+//! The real PJRT runtime (cargo feature `xla`): loads the AOT-compiled
+//! HLO artifacts and executes them on the PJRT CPU client. See the
+//! module docs in `runtime/mod.rs`.
+//!
+//! Chunking: the artifacts are compiled for whole local vectors, so
+//! `XlaCompute::max_chunks()` is 1 and the executor always hands it the
+//! full row range. The explicitly-blocked §3.3 task paths (partial
+//! ranges) fall back to the native kernels — exactly what the
+//! pre-executor solvers did for task-ordered reductions.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::kernels;
+use crate::solvers::Compute;
+use crate::sparse::EllMatrix;
+use crate::util::Json;
+
+/// Loaded artifact set: manifest + lazily compiled executables.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    manifest: Json,
+    exes: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl Runtime {
+    /// Open `artifacts/` (manifest.json + *.hlo.txt).
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path).with_context(|| {
+            format!(
+                "cannot read {} — run `make artifacts` first",
+                manifest_path.display()
+            )
+        })?;
+        let manifest = Json::parse(&text).map_err(|e| anyhow!("manifest.json: {e}"))?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Runtime {
+            client,
+            dir,
+            manifest,
+            exes: RefCell::new(HashMap::new()),
+        })
+    }
+
+    /// Artifact key for an entry at a problem size + halo layout.
+    pub fn key(entry: &str, n: usize, w: usize, n_ext: usize) -> String {
+        format!("{entry}_n{n}_w{w}_e{n_ext}")
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.manifest.get(key).is_some()
+    }
+
+    /// Problem sizes (n, w, n_ext) present in the manifest.
+    pub fn sizes(&self) -> Vec<(usize, usize, usize)> {
+        let mut out = Vec::new();
+        if let Some(m) = self.manifest.as_obj() {
+            for meta in m.values() {
+                let t = (
+                    meta.get("n").and_then(Json::as_usize).unwrap_or(0),
+                    meta.get("w").and_then(Json::as_usize).unwrap_or(0),
+                    meta.get("n_ext").and_then(Json::as_usize).unwrap_or(0),
+                );
+                if !out.contains(&t) {
+                    out.push(t);
+                }
+            }
+        }
+        out.sort();
+        out
+    }
+
+    /// Compile (or fetch the cached) executable for `key`.
+    pub fn exe(&self, key: &str) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(e) = self.exes.borrow().get(key) {
+            return Ok(e.clone());
+        }
+        let meta = self
+            .manifest
+            .get(key)
+            .ok_or_else(|| anyhow!("artifact '{key}' not in manifest — rebuild artifacts"))?;
+        let file = meta
+            .get("file")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("manifest entry '{key}' missing file"))?;
+        let path = self.dir.join(file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = Rc::new(self.client.compile(&comp)?);
+        self.exes.borrow_mut().insert(key.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Execute an entry with borrowed literal inputs (no operand copies);
+    /// returns the un-tupled outputs.
+    pub fn run(&self, key: &str, inputs: &[&xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let exe = self.exe(key)?;
+        let result = exe.execute::<&xla::Literal>(inputs)?[0][0].to_literal_sync()?;
+        Ok(result.to_tuple()?)
+    }
+}
+
+fn lit_f64(v: &[f64]) -> xla::Literal {
+    xla::Literal::vec1(v)
+}
+
+fn lit_scalar(v: f64) -> xla::Literal {
+    xla::Literal::vec1(&[v])
+}
+
+fn lit_mat_f64(v: &[f64], n: usize, w: usize) -> Result<xla::Literal> {
+    Ok(xla::Literal::vec1(v).reshape(&[n as i64, w as i64])?)
+}
+
+fn lit_mat_i32(v: &[i32], n: usize, w: usize) -> Result<xla::Literal> {
+    Ok(xla::Literal::vec1(v).reshape(&[n as i64, w as i64])?)
+}
+
+fn copy_out(lit: &xla::Literal, dst: &mut [f64]) -> Result<()> {
+    lit.copy_raw_to(dst)?;
+    Ok(())
+}
+
+fn scalar_out(lit: &xla::Literal) -> Result<f64> {
+    let mut buf = [0.0f64];
+    lit.copy_raw_to(&mut buf)?;
+    Ok(buf[0])
+}
+
+/// Cached device form of one ELL matrix (vals, cols, diag literals).
+struct MatrixCache {
+    key: (usize, usize, usize), // (vals ptr, n, w) — identity of the EllMatrix
+    vals: xla::Literal,
+    cols: xla::Literal,
+    diag: xla::Literal,
+}
+
+/// XLA-backed implementation of the solver compute trait for one local
+/// problem size (n, w, n_ext).
+pub struct XlaCompute {
+    rt: Rc<Runtime>,
+    n: usize,
+    w: usize,
+    n_ext: usize,
+    mat: RefCell<Option<MatrixCache>>,
+    /// Executions performed (for tests/metrics).
+    pub calls: RefCell<u64>,
+}
+
+impl XlaCompute {
+    /// Validate that all kernel entries for this size exist.
+    pub fn new(rt: Rc<Runtime>, n: usize, w: usize, n_ext: usize) -> Result<Self> {
+        for entry in [
+            "spmv",
+            "dot",
+            "axpby",
+            "waxpby",
+            "jacobi_step",
+            "gs_color_sweep",
+        ] {
+            let key = Runtime::key(entry, n, w, n_ext);
+            if !rt.has(&key) {
+                bail!(
+                    "artifact '{key}' missing — this halo layout was not \
+                     AOT-compiled (rebuild with `python -m compile.aot --n {n} \
+                     --w {w} --halo {}`, or see `hlam sizes`)",
+                    n_ext - n - 1
+                );
+            }
+        }
+        Ok(XlaCompute {
+            rt,
+            n,
+            w,
+            n_ext,
+            mat: RefCell::new(None),
+            calls: RefCell::new(0),
+        })
+    }
+
+    fn key(&self, entry: &str) -> String {
+        Runtime::key(entry, self.n, self.w, self.n_ext)
+    }
+
+    fn run(&self, entry: &str, inputs: &[&xla::Literal]) -> Vec<xla::Literal> {
+        *self.calls.borrow_mut() += 1;
+        self.rt
+            .run(&self.key(entry), inputs)
+            .unwrap_or_else(|e| panic!("XLA execution of '{entry}' failed: {e}"))
+    }
+
+    /// Whole-range call? Partial ranges fall back to native kernels.
+    fn whole(&self, r0: usize, r1: usize) -> bool {
+        r0 == 0 && r1 == self.n
+    }
+
+    /// Build or reuse the literal form of the matrix operands.
+    fn with_matrix<R>(
+        &self,
+        a: &EllMatrix,
+        f: impl FnOnce(&xla::Literal, &xla::Literal, &xla::Literal) -> R,
+    ) -> R {
+        assert_eq!(a.n, self.n, "matrix size != artifact size");
+        assert_eq!(a.w, self.w);
+        assert_eq!(a.n_ext, self.n_ext);
+        let id = (a.vals.as_ptr() as usize, a.n, a.w);
+        let mut slot = self.mat.borrow_mut();
+        let stale = slot.as_ref().map(|m| m.key != id).unwrap_or(true);
+        if stale {
+            *slot = Some(MatrixCache {
+                key: id,
+                vals: lit_mat_f64(&a.vals, a.n, a.w).expect("vals literal"),
+                cols: lit_mat_i32(&a.cols, a.n, a.w).expect("cols literal"),
+                diag: lit_f64(&a.diag),
+            });
+        }
+        let m = slot.as_ref().unwrap();
+        f(&m.vals, &m.cols, &m.diag)
+    }
+}
+
+impl Compute for XlaCompute {
+    fn spmv(&mut self, a: &EllMatrix, x_ext: &[f64], y: &mut [f64], r0: usize, r1: usize) {
+        if !self.whole(r0, r1) {
+            return kernels::spmv_ell(a, x_ext, y, r0, r1);
+        }
+        let x = lit_f64(x_ext);
+        let out = self.with_matrix(a, |vals, cols, _| self.run("spmv", &[vals, cols, &x]));
+        copy_out(&out[0], &mut y[..self.n]).expect("spmv output");
+    }
+
+    fn dot(&mut self, x: &[f64], y: &[f64], r0: usize, r1: usize) -> f64 {
+        if !self.whole(r0, r1) {
+            return kernels::dot(x, y, r0, r1);
+        }
+        let (lx, ly) = (lit_f64(&x[..self.n]), lit_f64(&y[..self.n]));
+        let out = self.run("dot", &[&lx, &ly]);
+        scalar_out(&out[0]).expect("dot output")
+    }
+
+    fn axpby(&mut self, a: f64, x: &[f64], b: f64, y: &mut [f64], r0: usize, r1: usize) {
+        if !self.whole(r0, r1) {
+            return kernels::axpby(a, x, b, y, r0, r1);
+        }
+        let (la, lx, lb, ly) = (
+            lit_scalar(a),
+            lit_f64(&x[..self.n]),
+            lit_scalar(b),
+            lit_f64(&y[..self.n]),
+        );
+        let out = self.run("axpby", &[&la, &lx, &lb, &ly]);
+        copy_out(&out[0], &mut y[..self.n]).expect("axpby output");
+    }
+
+    fn waxpby(
+        &mut self,
+        a: f64,
+        x: &[f64],
+        b: f64,
+        y: &[f64],
+        c: f64,
+        z: &mut [f64],
+        r0: usize,
+        r1: usize,
+    ) {
+        if !self.whole(r0, r1) {
+            return kernels::waxpby(a, x, b, y, c, z, r0, r1);
+        }
+        let (la, lx, lb, ly, lc, lz) = (
+            lit_scalar(a),
+            lit_f64(&x[..self.n]),
+            lit_scalar(b),
+            lit_f64(&y[..self.n]),
+            lit_scalar(c),
+            lit_f64(&z[..self.n]),
+        );
+        let out = self.run("waxpby", &[&la, &lx, &lb, &ly, &lc, &lz]);
+        copy_out(&out[0], &mut z[..self.n]).expect("waxpby output");
+    }
+
+    fn axpby_dot(
+        &mut self,
+        a: f64,
+        x: &[f64],
+        b: f64,
+        y: &mut [f64],
+        p: &[f64],
+        r0: usize,
+        r1: usize,
+    ) -> f64 {
+        // No fused artifact: whole-range calls decompose into the axpby
+        // and dot artifacts; partial ranges use the native fused kernel
+        // (the §3.3 task-block path).
+        if !self.whole(r0, r1) {
+            return kernels::axpby_dot(a, x, b, y, p, r0, r1);
+        }
+        self.axpby(a, x, b, y, r0, r1);
+        self.dot(y, p, r0, r1)
+    }
+
+    fn jacobi_step(
+        &mut self,
+        a: &EllMatrix,
+        b: &[f64],
+        x_ext: &[f64],
+        x_new: &mut [f64],
+        r0: usize,
+        r1: usize,
+    ) -> f64 {
+        if !self.whole(r0, r1) {
+            return kernels::jacobi_sweep(a, b, x_ext, x_new, r0, r1);
+        }
+        let (lb, lx) = (lit_f64(b), lit_f64(x_ext));
+        let out = self.with_matrix(a, |vals, cols, diag| {
+            self.run("jacobi_step", &[vals, cols, diag, &lb, &lx])
+        });
+        copy_out(&out[0], &mut x_new[..self.n]).expect("jacobi x output");
+        scalar_out(&out[1]).expect("jacobi res output")
+    }
+
+    fn gs_colour_sweep(
+        &mut self,
+        a: &EllMatrix,
+        b: &[f64],
+        mask: &[bool],
+        colour: bool,
+        x_ext: &mut [f64],
+        r0: usize,
+        r1: usize,
+    ) -> f64 {
+        if !self.whole(r0, r1) {
+            return kernels::gs_colour_sweep(a, b, mask, colour, x_ext, r0, r1);
+        }
+        let maskv: Vec<f64> = mask
+            .iter()
+            .map(|&m| if m == colour { 1.0 } else { 0.0 })
+            .collect();
+        let (lb, lx, lm) = (lit_f64(b), lit_f64(x_ext), lit_f64(&maskv));
+        let out = self.with_matrix(a, |vals, cols, diag| {
+            self.run("gs_color_sweep", &[vals, cols, diag, &lb, &lx, &lm])
+        });
+        copy_out(&out[0], &mut x_ext[..self.n]).expect("gs x output");
+        scalar_out(&out[1]).expect("gs res output")
+    }
+
+    fn gs_colour_sweep_blocked(
+        &mut self,
+        a: &EllMatrix,
+        b: &[f64],
+        mask: &[bool],
+        colour: bool,
+        x_ext: &mut [f64],
+        x_old: &[f64],
+        r0: usize,
+        r1: usize,
+    ) -> f64 {
+        // snapshot-blocked sweeps exist only on the task-block path —
+        // no artifact, always native
+        kernels::gs_colour_sweep_blocked(a, b, mask, colour, x_ext, x_old, r0, r1)
+    }
+
+    /// The artifacts are compiled for whole local vectors.
+    fn max_chunks(&self) -> usize {
+        1
+    }
+
+    fn name(&self) -> &'static str {
+        "xla"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn key_format() {
+        assert_eq!(Runtime::key("spmv", 512, 7, 577), "spmv_n512_w7_e577");
+    }
+
+    #[test]
+    fn load_missing_dir_gives_guidance() {
+        let err = match Runtime::load("/nonexistent/artifacts") {
+            Err(e) => e,
+            Ok(_) => panic!("load of missing dir must fail"),
+        };
+        let msg = format!("{err:#}");
+        assert!(msg.contains("make artifacts"), "{msg}");
+    }
+}

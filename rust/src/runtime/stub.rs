@@ -1,0 +1,200 @@
+//! Stub runtime for builds without the `xla` feature: same public
+//! surface as the PJRT implementation, but `Runtime::load` always fails
+//! with guidance. Keeps the CLI, examples and integration tests
+//! compiling (and gracefully skipping the XLA path) in the offline
+//! image, where the `xla`/`anyhow` crates and libxla do not exist.
+
+use std::cell::RefCell;
+use std::path::Path;
+use std::rc::Rc;
+
+use crate::solvers::Compute;
+use crate::sparse::EllMatrix;
+
+/// Load/execution error of the stub runtime. Displays the same guidance
+/// the real runtime gives for a missing artifact directory.
+pub struct RuntimeError(String);
+
+impl std::fmt::Display for RuntimeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::fmt::Debug for RuntimeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for RuntimeError {}
+
+/// Stub artifact set — cannot be constructed.
+pub struct Runtime {
+    _private: (),
+}
+
+impl Runtime {
+    /// Always fails: the crate was built without the `xla` feature.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self, RuntimeError> {
+        Err(RuntimeError(format!(
+            "cannot load XLA artifacts from {}: this build has no PJRT \
+             runtime (crate feature `xla` disabled). Rebuild with \
+             `cargo build --features xla` after `make artifacts`.",
+            dir.as_ref().display()
+        )))
+    }
+
+    /// Artifact key for an entry at a problem size + halo layout (same
+    /// format as the real runtime, kept for tooling parity).
+    pub fn key(entry: &str, n: usize, w: usize, n_ext: usize) -> String {
+        format!("{entry}_n{n}_w{w}_e{n_ext}")
+    }
+
+    pub fn has(&self, _key: &str) -> bool {
+        false
+    }
+
+    /// Problem sizes present in the manifest (none, in the stub).
+    pub fn sizes(&self) -> Vec<(usize, usize, usize)> {
+        Vec::new()
+    }
+}
+
+/// Stub XLA compute backend — `new` always fails, so the `Compute`
+/// methods are unreachable; they exist only to satisfy the trait.
+pub struct XlaCompute {
+    /// Executions performed (for tests/metrics; parity with the real
+    /// backend's public field).
+    pub calls: RefCell<u64>,
+}
+
+impl XlaCompute {
+    pub fn new(
+        _rt: Rc<Runtime>,
+        _n: usize,
+        _w: usize,
+        _n_ext: usize,
+    ) -> Result<Self, RuntimeError> {
+        Err(RuntimeError(
+            "XlaCompute unavailable: crate feature `xla` disabled".into(),
+        ))
+    }
+}
+
+impl Compute for XlaCompute {
+    fn spmv(&mut self, _a: &EllMatrix, _x_ext: &[f64], _y: &mut [f64], _r0: usize, _r1: usize) {
+        unreachable!("stub XlaCompute cannot be constructed")
+    }
+
+    fn dot(&mut self, _x: &[f64], _y: &[f64], _r0: usize, _r1: usize) -> f64 {
+        unreachable!("stub XlaCompute cannot be constructed")
+    }
+
+    fn axpby(&mut self, _a: f64, _x: &[f64], _b: f64, _y: &mut [f64], _r0: usize, _r1: usize) {
+        unreachable!("stub XlaCompute cannot be constructed")
+    }
+
+    fn waxpby(
+        &mut self,
+        _a: f64,
+        _x: &[f64],
+        _b: f64,
+        _y: &[f64],
+        _c: f64,
+        _z: &mut [f64],
+        _r0: usize,
+        _r1: usize,
+    ) {
+        unreachable!("stub XlaCompute cannot be constructed")
+    }
+
+    fn axpby_dot(
+        &mut self,
+        _a: f64,
+        _x: &[f64],
+        _b: f64,
+        _y: &mut [f64],
+        _p: &[f64],
+        _r0: usize,
+        _r1: usize,
+    ) -> f64 {
+        unreachable!("stub XlaCompute cannot be constructed")
+    }
+
+    fn jacobi_step(
+        &mut self,
+        _a: &EllMatrix,
+        _b: &[f64],
+        _x_ext: &[f64],
+        _x_new: &mut [f64],
+        _r0: usize,
+        _r1: usize,
+    ) -> f64 {
+        unreachable!("stub XlaCompute cannot be constructed")
+    }
+
+    fn gs_colour_sweep(
+        &mut self,
+        _a: &EllMatrix,
+        _b: &[f64],
+        _mask: &[bool],
+        _colour: bool,
+        _x_ext: &mut [f64],
+        _r0: usize,
+        _r1: usize,
+    ) -> f64 {
+        unreachable!("stub XlaCompute cannot be constructed")
+    }
+
+    fn gs_colour_sweep_blocked(
+        &mut self,
+        _a: &EllMatrix,
+        _b: &[f64],
+        _mask: &[bool],
+        _colour: bool,
+        _x_ext: &mut [f64],
+        _x_old: &[f64],
+        _r0: usize,
+        _r1: usize,
+    ) -> f64 {
+        unreachable!("stub XlaCompute cannot be constructed")
+    }
+
+    fn max_chunks(&self) -> usize {
+        1
+    }
+
+    fn name(&self) -> &'static str {
+        "xla-stub"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn key_format() {
+        assert_eq!(Runtime::key("spmv", 512, 7, 577), "spmv_n512_w7_e577");
+    }
+
+    #[test]
+    fn load_fails_with_guidance() {
+        let err = match Runtime::load("/nonexistent/artifacts") {
+            Err(e) => e,
+            Ok(_) => panic!("stub load must fail"),
+        };
+        let msg = format!("{err:#}");
+        assert!(msg.contains("make artifacts"), "{msg}");
+        assert!(msg.contains("xla"), "{msg}");
+    }
+
+    #[test]
+    fn xla_compute_unconstructible() {
+        // there is no Runtime value to pass, so only the error text of
+        // `new` is testable through a fabricated Rc — which cannot exist.
+        // Assert the key invariant instead: `has` and `sizes` are inert.
+        assert!(Runtime::load("artifacts").is_err());
+    }
+}

@@ -23,6 +23,7 @@
 
 pub mod spec;
 
+use crate::exec::ExecStrategy;
 use crate::machine::{MachineModel, F64};
 use crate::util::Rng;
 use spec::{IterationSpec, Op};
@@ -62,6 +63,18 @@ impl ExecModel {
 
     pub fn is_task(&self) -> bool {
         matches!(self, ExecModel::MpiOmpTask | ExecModel::MpiOssTask)
+    }
+
+    /// Machine-model counterpart of a real shared-memory strategy, so
+    /// measured `--exec`/`--threads` configurations can be projected to
+    /// paper scale (the task pool maps to the OmpSs-2 flavour, whose
+    /// per-task overheads our pool resembles far more than OpenMP's).
+    pub fn from_strategy(s: ExecStrategy) -> ExecModel {
+        match s {
+            ExecStrategy::Seq => ExecModel::MpiOnly,
+            ExecStrategy::ForkJoin => ExecModel::MpiOmpFork,
+            ExecStrategy::TaskPool => ExecModel::MpiOssTask,
+        }
     }
 
     /// Ranks per node under this model.
@@ -120,11 +133,23 @@ pub struct RunConfig {
     pub seed: u64,
     /// Disable the noise model (ablation D3).
     pub noise: bool,
+    /// Measured thread count from a real `exec::Executor` run; overrides
+    /// the model's cores-per-rank so hardware measurements feed the
+    /// machine model. `None` = the model's nominal socket width.
+    pub threads: Option<usize>,
 }
 
 impl RunConfig {
     pub fn nranks(&self) -> usize {
         self.model.ranks_per_node(&self.machine) * self.nodes
+    }
+
+    /// Cores one rank computes with: the measured thread count when set,
+    /// otherwise the execution model's nominal value.
+    pub fn cores_per_rank(&self) -> usize {
+        self.threads
+            .unwrap_or_else(|| self.model.cores_per_rank(&self.machine))
+            .max(1)
     }
 
     pub fn rows_per_rank(&self) -> f64 {
@@ -158,7 +183,7 @@ pub fn simulate_run(cfg: &RunConfig) -> RunResult {
     let mut rng = Rng::new(cfg.seed);
 
     let rows = cfg.rows_per_rank();
-    let cores = cfg.model.cores_per_rank(m) as f64;
+    let cores = cfg.cores_per_rank() as f64;
     // Hot working set per *socket*: the actively-reused solver vectors
     // (~5 per kernel window, 8 B each). The matrix itself always streams
     // from DRAM — it is touched once per sweep and far exceeds L3.
@@ -248,7 +273,8 @@ pub fn simulate_run(cfg: &RunConfig) -> RunResult {
 
     // Rank clocks + per-collective pending completions.
     let mut t = vec![0.0f64; p];
-    let mut pending: Vec<Vec<Option<(f64, f64)>>> = vec![vec![None; 4]; 1]; // [_][id] = (max_contrib, base)
+    // [_][id] = (max_contrib, base)
+    let mut pending: Vec<Vec<Option<(f64, f64)>>> = vec![vec![None; 4]; 1];
     let mut pending_global: Vec<Option<f64>> = vec![None; 4]; // completion time per id
     let _ = &mut pending;
 
@@ -404,6 +430,7 @@ mod tests {
             ntasks: 800,
             seed: 42,
             noise: true,
+            threads: None,
         }
         .tap(|c| {
             let _ = rpn;
@@ -575,6 +602,35 @@ mod tests {
         let t_fj = simulate_run(&fj).total_time;
         let t_oss = simulate_run(&oss).total_time;
         assert!(t_oss <= t_fj * 1.01, "oss {t_oss} vs fj {t_fj}");
+    }
+
+    #[test]
+    fn measured_threads_override_feeds_model() {
+        // A real `--exec task --threads 4` run has 4 cores per rank, not
+        // the model's nominal 24: per-task overhead stops amortising and
+        // skew absorption weakens, so simulated time must grow.
+        let mut c = base_cfg(ExecModel::MpiOssTask, "cg");
+        c.noise = false;
+        let full = simulate_run(&c).total_time;
+        assert_eq!(c.cores_per_rank(), 24);
+        c.threads = Some(4);
+        assert_eq!(c.cores_per_rank(), 4);
+        let narrow = simulate_run(&c).total_time;
+        assert!(narrow > full, "narrow {narrow} vs full {full}");
+    }
+
+    #[test]
+    fn strategy_maps_to_model() {
+        use crate::exec::ExecStrategy;
+        assert_eq!(ExecModel::from_strategy(ExecStrategy::Seq), ExecModel::MpiOnly);
+        assert_eq!(
+            ExecModel::from_strategy(ExecStrategy::ForkJoin),
+            ExecModel::MpiOmpFork
+        );
+        assert_eq!(
+            ExecModel::from_strategy(ExecStrategy::TaskPool),
+            ExecModel::MpiOssTask
+        );
     }
 
     #[test]

@@ -2,27 +2,78 @@
 //! trait so the same algorithm can run on the native Rust kernels or on
 //! the AOT-compiled XLA executables (runtime::XlaCompute). Python never
 //! appears on this path — the XLA backend executes pre-lowered HLO.
+//!
+//! Since the exec refactor every operation is *chunk-aware*: it takes an
+//! absolute row range `[r0, r1)` so the shared-memory executor
+//! (`crate::exec`) can fan chunks out over threads. Backends advertise
+//! their chunking capabilities:
+//!
+//!  * [`Compute::max_chunks`] — how finely a call may be split. The XLA
+//!    backend compiles whole-vector artifacts, so it returns 1 and the
+//!    executor hands it the full range in one call (falling back to the
+//!    native kernels only for the explicitly-blocked §3.3 task paths);
+//!  * [`Compute::thread_safe`] — whether chunks may execute concurrently.
+//!    A backend may only return `true` if its operations are *exactly*
+//!    the free functions in [`crate::kernels`] (pure functions of their
+//!    row range), because the executor's parallel path dispatches those
+//!    directly from worker threads rather than through `&mut dyn
+//!    Compute`.
 
 use crate::kernels;
 use crate::sparse::EllMatrix;
 
 pub trait Compute {
-    /// y = A·x_ext.
-    fn spmv(&mut self, a: &EllMatrix, x_ext: &[f64], y: &mut [f64]);
+    /// y[r0..r1) = A[r0..r1) · x_ext.
+    fn spmv(&mut self, a: &EllMatrix, x_ext: &[f64], y: &mut [f64], r0: usize, r1: usize);
 
-    /// Local partial of x·y.
-    fn dot(&mut self, x: &[f64], y: &[f64]) -> f64;
+    /// Partial of x·y over [r0, r1).
+    fn dot(&mut self, x: &[f64], y: &[f64], r0: usize, r1: usize) -> f64;
 
-    /// y = a·x + b·y.
-    fn axpby(&mut self, a: f64, x: &[f64], b: f64, y: &mut [f64]);
+    /// y = a·x + b·y over [r0, r1).
+    fn axpby(&mut self, a: f64, x: &[f64], b: f64, y: &mut [f64], r0: usize, r1: usize);
 
-    /// z = a·x + b·y + c·z (paper §3.1 ad-hoc kernel).
-    fn waxpby(&mut self, a: f64, x: &[f64], b: f64, y: &[f64], c: f64, z: &mut [f64]);
+    /// z = a·x + b·y + c·z over [r0, r1)  (paper §3.1 ad-hoc kernel).
+    #[allow(clippy::too_many_arguments)]
+    fn waxpby(
+        &mut self,
+        a: f64,
+        x: &[f64],
+        b: f64,
+        y: &[f64],
+        c: f64,
+        z: &mut [f64],
+        r0: usize,
+        r1: usize,
+    );
 
-    /// One Jacobi sweep; returns local ||b - A·x||² of the incoming x.
-    fn jacobi_step(&mut self, a: &EllMatrix, b: &[f64], x_ext: &[f64], x_new: &mut [f64]) -> f64;
+    /// Fused y = a·x + b·y returning the partial y'·p (CG-NB Tk 2).
+    #[allow(clippy::too_many_arguments)]
+    fn axpby_dot(
+        &mut self,
+        a: f64,
+        x: &[f64],
+        b: f64,
+        y: &mut [f64],
+        p: &[f64],
+        r0: usize,
+        r1: usize,
+    ) -> f64;
 
-    /// Coloured GS half-sweep (in place); returns local residual partial.
+    /// One Jacobi sweep over [r0, r1); returns the partial ||b - A·x||²
+    /// of the incoming x.
+    fn jacobi_step(
+        &mut self,
+        a: &EllMatrix,
+        b: &[f64],
+        x_ext: &[f64],
+        x_new: &mut [f64],
+        r0: usize,
+        r1: usize,
+    ) -> f64;
+
+    /// Coloured GS half-sweep (in place, live reads within the range);
+    /// returns the local residual partial.
+    #[allow(clippy::too_many_arguments)]
     fn gs_colour_sweep(
         &mut self,
         a: &EllMatrix,
@@ -30,37 +81,98 @@ pub trait Compute {
         mask: &[bool],
         colour: bool,
         x_ext: &mut [f64],
+        r0: usize,
+        r1: usize,
     ) -> f64;
+
+    /// Coloured GS half-sweep with task-parallel snapshot semantics:
+    /// live values inside [r0, r1), the pre-sweep snapshot `x_old`
+    /// elsewhere (see `kernels::gs_colour_sweep_blocked`).
+    #[allow(clippy::too_many_arguments)]
+    fn gs_colour_sweep_blocked(
+        &mut self,
+        a: &EllMatrix,
+        b: &[f64],
+        mask: &[bool],
+        colour: bool,
+        x_ext: &mut [f64],
+        x_old: &[f64],
+        r0: usize,
+        r1: usize,
+    ) -> f64;
+
+    /// Largest chunk count one logical operation may be split into.
+    /// Whole-range-only backends (AOT artifacts) return 1.
+    fn max_chunks(&self) -> usize {
+        usize::MAX
+    }
+
+    /// True iff chunks of this backend may execute concurrently — the
+    /// operations must be exactly the `crate::kernels` free functions.
+    fn thread_safe(&self) -> bool {
+        false
+    }
 
     /// Backend identity for logs.
     fn name(&self) -> &'static str;
 }
 
-/// Native Rust kernels (rust/src/kernels).
-#[derive(Debug, Default, Clone)]
+/// Native Rust kernels (rust/src/kernels). A unit type: worker threads
+/// may freely materialise their own copies, which is what makes the
+/// executor's parallel path sound.
+#[derive(Debug, Default, Clone, Copy)]
 pub struct Native;
 
 impl Compute for Native {
-    fn spmv(&mut self, a: &EllMatrix, x_ext: &[f64], y: &mut [f64]) {
-        kernels::spmv_ell(a, x_ext, y, 0, a.n);
+    fn spmv(&mut self, a: &EllMatrix, x_ext: &[f64], y: &mut [f64], r0: usize, r1: usize) {
+        kernels::spmv_ell(a, x_ext, y, r0, r1);
     }
 
-    fn dot(&mut self, x: &[f64], y: &[f64]) -> f64 {
-        kernels::dot(x, y, 0, x.len().min(y.len()))
+    fn dot(&mut self, x: &[f64], y: &[f64], r0: usize, r1: usize) -> f64 {
+        kernels::dot(x, y, r0, r1)
     }
 
-    fn axpby(&mut self, a: f64, x: &[f64], b: f64, y: &mut [f64]) {
-        let n = x.len().min(y.len());
-        kernels::axpby(a, x, b, y, 0, n);
+    fn axpby(&mut self, a: f64, x: &[f64], b: f64, y: &mut [f64], r0: usize, r1: usize) {
+        kernels::axpby(a, x, b, y, r0, r1);
     }
 
-    fn waxpby(&mut self, a: f64, x: &[f64], b: f64, y: &[f64], c: f64, z: &mut [f64]) {
-        let n = x.len().min(z.len());
-        kernels::waxpby(a, x, b, y, c, z, 0, n);
+    fn waxpby(
+        &mut self,
+        a: f64,
+        x: &[f64],
+        b: f64,
+        y: &[f64],
+        c: f64,
+        z: &mut [f64],
+        r0: usize,
+        r1: usize,
+    ) {
+        kernels::waxpby(a, x, b, y, c, z, r0, r1);
     }
 
-    fn jacobi_step(&mut self, a: &EllMatrix, b: &[f64], x_ext: &[f64], x_new: &mut [f64]) -> f64 {
-        kernels::jacobi_sweep(a, b, x_ext, x_new, 0, a.n)
+    fn axpby_dot(
+        &mut self,
+        a: f64,
+        x: &[f64],
+        b: f64,
+        y: &mut [f64],
+        p: &[f64],
+        r0: usize,
+        r1: usize,
+    ) -> f64 {
+        kernels::axpby_dot(a, x, b, y, p, r0, r1)
+    }
+
+    fn jacobi_step(
+        &mut self,
+        a: &EllMatrix,
+        b: &[f64],
+        x_ext: &[f64],
+        x_new: &mut [f64],
+        r0: usize,
+        r1: usize,
+    ) -> f64 {
+        kernels::jacobi_sweep(a, b, x_ext, x_new, r0, r1)
     }
 
     fn gs_colour_sweep(
@@ -70,8 +182,28 @@ impl Compute for Native {
         mask: &[bool],
         colour: bool,
         x_ext: &mut [f64],
+        r0: usize,
+        r1: usize,
     ) -> f64 {
-        kernels::gs_colour_sweep(a, b, mask, colour, x_ext, 0, a.n)
+        kernels::gs_colour_sweep(a, b, mask, colour, x_ext, r0, r1)
+    }
+
+    fn gs_colour_sweep_blocked(
+        &mut self,
+        a: &EllMatrix,
+        b: &[f64],
+        mask: &[bool],
+        colour: bool,
+        x_ext: &mut [f64],
+        x_old: &[f64],
+        r0: usize,
+        r1: usize,
+    ) -> f64 {
+        kernels::gs_colour_sweep_blocked(a, b, mask, colour, x_ext, x_old, r0, r1)
+    }
+
+    fn thread_safe(&self) -> bool {
+        true
     }
 
     fn name(&self) -> &'static str {

@@ -8,10 +8,14 @@
 //! the r'-residual correlation αn drops below the restart threshold, the
 //! shadow residual r' is re-seeded from the current residual. Restarts
 //! are counted in the stats (ablation D4 disables them).
+//!
+//! All kernels dispatch through the executor-backed [`Ops`] context; the
+//! five per-iteration dots keep their distinct §3.3 shuffle keys
+//! (`8k + salt`) so seeded task-order runs reproduce pre-refactor
+//! histories bit for bit.
 
-use super::{allreduce_pair, allreduce_scalar, completion_order, exchange_all, task_blocks};
-use super::{Compute, Problem, RankState, SolveOpts, SolveStats};
-use crate::kernels;
+use super::{Compute, Problem, RankState, SolveOpts, SolveStats, SolverDriver};
+use crate::exec::Executor;
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum BiVariant {
@@ -19,26 +23,9 @@ pub enum BiVariant {
     B1,
 }
 
-fn dot_ordered(
-    backend: &mut dyn Compute,
-    x: &[f64],
-    y: &[f64],
-    n: usize,
-    opts: &SolveOpts,
-    k: usize,
-    salt: usize,
-) -> f64 {
-    if opts.ntasks == 0 {
-        return backend.dot(&x[..n], &y[..n]);
-    }
-    let blocks = task_blocks(n, opts.ntasks);
-    let order = completion_order(blocks.len(), opts.task_order_seed, 8 * k + salt);
-    let mut acc = 0.0;
-    for &bi in &order {
-        let (r0, r1) = blocks[bi];
-        acc += kernels::dot(x, y, r0, r1);
-    }
-    acc
+/// §3.3 shuffle key for the `salt`-th dot of iteration `k`.
+fn key(k: usize, salt: usize) -> usize {
+    8 * k + salt
 }
 
 pub fn solve(
@@ -46,78 +33,70 @@ pub fn solve(
     variant: BiVariant,
     opts: &SolveOpts,
     backend: &mut dyn Compute,
+    exec: &Executor,
 ) -> SolveStats {
     match variant {
-        BiVariant::Classic => classic(pb, opts, backend),
-        BiVariant::B1 => b1(pb, opts, backend),
+        BiVariant::Classic => classic(pb, opts, backend, exec),
+        BiVariant::B1 => b1(pb, opts, backend, exec),
     }
 }
 
-fn classic(pb: &mut Problem, opts: &SolveOpts, backend: &mut dyn Compute) -> SolveStats {
-    let nranks = pb.nranks();
+fn classic(
+    pb: &mut Problem,
+    opts: &SolveOpts,
+    backend: &mut dyn Compute,
+    exec: &Executor,
+) -> SolveStats {
+    let mut drv = SolverDriver::new(exec, opts);
+
     // r = b; r' = r; p = r; rho = (r', r)
-    for st in &mut pb.ranks {
-        let n = st.n();
+    let parts = drv.rank_map(pb, backend, |ops, st| {
+        let n = st.sys.n();
         st.r_ext[..n].copy_from_slice(&st.sys.b);
         st.p_ext[..n].copy_from_slice(&st.sys.b);
         st.rprime[..n].copy_from_slice(&st.sys.b);
-    }
-    let parts: Vec<f64> = pb
-        .ranks
-        .iter_mut()
-        .map(|st| {
-            let n = st.n();
-            backend.dot(&st.rprime[..n], &st.r_ext[..n])
-        })
-        .collect();
-    let mut rho = allreduce_scalar(&mut pb.world, 0, 30, parts);
-    let rr0 = rho.max(f64::MIN_POSITIVE); // (r,r) == (r',r) at start
+        ops.dot(&st.rprime[..n], &st.r_ext[..n], n)
+    });
+    let mut rho = drv.allreduce(pb, 0, 30, parts);
+    drv.conv.set_reference(rho); // (r,r) == (r',r) at start
     let mut rr = rho;
 
-    let mut history = Vec::new();
-    let mut iterations = 0;
-    let mut converged = false;
-
     for k in 0..opts.max_iters {
-        if (rr / rr0).sqrt() <= opts.eps_rel(rr0) {
-            converged = true;
+        if drv.conv.pre_check(rr, opts) {
             break;
         }
         // Ap = A·p ; ad = (r', Ap)                       BARRIER 1
-        exchange_all(&mut pb.world, &mut pb.ranks, |st| &mut st.p_ext, 2 * k);
-        let mut parts = Vec::with_capacity(nranks);
-        for st in &mut pb.ranks {
-            let n = st.n();
-            backend.spmv(&st.sys.a, &st.p_ext, &mut st.ap);
-            parts.push(dot_ordered(backend, &st.ap, &st.rprime, n, opts, k, 0));
-        }
-        let ad = allreduce_scalar(&mut pb.world, k, 31, parts);
+        drv.exchange(pb, |st| &mut st.p_ext, 2 * k);
+        let parts = drv.rank_map(pb, backend, |ops, st| {
+            let RankState { sys, p_ext, ap, rprime, .. } = st;
+            ops.spmv_dot_ordered(&sys.a, p_ext, ap, rprime, key(k, 0))
+        });
+        let ad = drv.allreduce(pb, k, 31, parts);
         let alpha = rho / ad;
 
         // s = r − alpha·Ap ; As = A·s ; ω = (As,s)/(As,As)   BARRIER 2
-        for st in &mut pb.ranks {
-            let n = st.n();
+        drv.rank_map(pb, backend, |ops, st| {
+            let n = st.sys.n();
             let RankState { r_ext, s_ext, ap, .. } = st;
             s_ext[..n].copy_from_slice(&r_ext[..n]);
-            backend.axpby(-alpha, &ap[..n], 1.0, &mut s_ext[..n]);
-        }
-        exchange_all(&mut pb.world, &mut pb.ranks, |st| &mut st.s_ext, 2 * k + 1);
-        let mut parts = Vec::with_capacity(nranks);
-        for st in &mut pb.ranks {
-            let n = st.n();
-            backend.spmv(&st.sys.a, &st.s_ext, &mut st.as_);
-            let num = dot_ordered(backend, &st.as_, &st.s_ext, n, opts, k, 1);
-            let den = dot_ordered(backend, &st.as_, &st.as_, n, opts, k, 2);
-            parts.push((num, den));
-        }
-        let (num, den) = allreduce_pair(&mut pb.world, k, 32, parts);
+            ops.axpby(-alpha, &ap[..n], 1.0, &mut s_ext[..n], n);
+        });
+        drv.exchange(pb, |st| &mut st.s_ext, 2 * k + 1);
+        let parts = drv.rank_map(pb, backend, |ops, st| {
+            let n = st.sys.n();
+            let RankState { sys, s_ext, as_, .. } = st;
+            ops.spmv(&sys.a, s_ext, as_);
+            let num = ops.dot_ordered(&as_[..n], &s_ext[..n], n, key(k, 1));
+            let den = ops.dot_ordered(&as_[..n], &as_[..n], n, key(k, 2));
+            (num, den)
+        });
+        let (num, den) = drv.allreduce_pair(pb, k, 32, parts);
         let omega = num / den;
 
         // x += alpha·p + omega·s ; r = s − omega·As ;
         // rho' = (r', r) ; rr = (r, r)                       BARRIER 3
-        let mut parts = Vec::with_capacity(nranks);
-        for st in &mut pb.ranks {
-            let n = st.n();
+        let parts = drv.rank_map(pb, backend, |ops, st| {
+            let n = st.sys.n();
             let RankState {
                 x_ext,
                 r_ext,
@@ -127,141 +106,126 @@ fn classic(pb: &mut Problem, opts: &SolveOpts, backend: &mut dyn Compute) -> Sol
                 rprime,
                 ..
             } = st;
-            kernels::waxpby(alpha, p_ext, omega, s_ext, 1.0, x_ext, 0, n);
+            ops.waxpby(
+                alpha,
+                &p_ext[..n],
+                omega,
+                &s_ext[..n],
+                1.0,
+                &mut x_ext[..n],
+                n,
+            );
             r_ext[..n].copy_from_slice(&s_ext[..n]);
-            backend.axpby(-omega, &as_[..n], 1.0, &mut r_ext[..n]);
-            let rho_p = dot_ordered(backend, rprime, r_ext, n, opts, k, 3);
-            let rr_p = dot_ordered(backend, r_ext, r_ext, n, opts, k, 4);
-            parts.push((rho_p, rr_p));
-        }
-        let (rho_new, rr_new) = allreduce_pair(&mut pb.world, k, 33, parts);
+            ops.axpby(-omega, &as_[..n], 1.0, &mut r_ext[..n], n);
+            let rho_p = ops.dot_ordered(&rprime[..n], &r_ext[..n], n, key(k, 3));
+            let rr_p = ops.dot_ordered(&r_ext[..n], &r_ext[..n], n, key(k, 4));
+            (rho_p, rr_p)
+        });
+        let (rho_new, rr_new) = drv.allreduce_pair(pb, k, 33, parts);
 
         // p = r + beta (p − omega·Ap)
         let beta = (rho_new / rho) * (alpha / omega);
-        for st in &mut pb.ranks {
-            let n = st.n();
+        drv.rank_map(pb, backend, |ops, st| {
+            let n = st.sys.n();
             let RankState { r_ext, p_ext, ap, .. } = st;
-            backend.axpby(-omega, &ap[..n], 1.0, &mut p_ext[..n]);
-            // p = r + beta * p
-            for i in 0..n {
-                p_ext[i] = r_ext[i] + beta * p_ext[i];
-            }
-        }
+            ops.axpby(-omega, &ap[..n], 1.0, &mut p_ext[..n], n);
+            // p = r + beta * p (1.0*x is bitwise x, so this is the same
+            // triad as the old manual loop — but chunk-parallel)
+            ops.axpby(1.0, &r_ext[..n], beta, &mut p_ext[..n], n);
+        });
         rho = rho_new;
         rr = rr_new;
-        iterations = k + 1;
-        history.push((rr / rr0).sqrt());
+        drv.conv.record(k + 1, rr, opts);
     }
 
-    SolveStats {
-        method: "bicgstab",
-        iterations,
-        converged,
-        rel_residual: (rr / rr0).sqrt(),
-        x_error: pb.x_error(),
-        history,
-        restarts: 0,
-    }
+    drv.finish("bicgstab", pb, 0)
 }
 
 /// BiCGStab-B1 (Algorithm 2): one blocking barrier (αd, line 3); the ω
 /// pair overlaps the x_{j+1/2} update and the (αn, β) pair overlaps the
 /// p_{j+1/2} update. Restart per lines 13-15.
-fn b1(pb: &mut Problem, opts: &SolveOpts, backend: &mut dyn Compute) -> SolveStats {
-    let nranks = pb.nranks();
+fn b1(
+    pb: &mut Problem,
+    opts: &SolveOpts,
+    backend: &mut dyn Compute,
+    exec: &Executor,
+) -> SolveStats {
+    let mut drv = SolverDriver::new(exec, opts);
+
     // line 1: r = b ; p = r ; beta = (r,r) ; r' = r/sqrt(beta) ; an = (r,r')
-    for st in &mut pb.ranks {
-        let n = st.n();
+    let parts = drv.rank_map(pb, backend, |ops, st| {
+        let n = st.sys.n();
         st.r_ext[..n].copy_from_slice(&st.sys.b);
         st.p_ext[..n].copy_from_slice(&st.sys.b);
-    }
-    let parts: Vec<f64> = pb
-        .ranks
-        .iter_mut()
-        .map(|st| {
-            let n = st.n();
-            backend.dot(&st.r_ext[..n], &st.r_ext[..n])
-        })
-        .collect();
-    let mut beta = allreduce_scalar(&mut pb.world, 0, 40, parts);
-    let beta0 = beta.max(f64::MIN_POSITIVE);
+        ops.dot(&st.r_ext[..n], &st.r_ext[..n], n)
+    });
+    let mut beta = drv.allreduce(pb, 0, 40, parts);
+    drv.conv.set_reference(beta);
+    let beta0 = drv.conv.reference();
     let inv = 1.0 / beta.sqrt();
-    for st in &mut pb.ranks {
-        let n = st.n();
+    let parts = drv.rank_map(pb, backend, |ops, st| {
+        let n = st.sys.n();
+        let RankState { r_ext, rprime, .. } = st;
         for i in 0..n {
-            st.rprime[i] = st.r_ext[i] * inv;
+            rprime[i] = r_ext[i] * inv;
         }
-    }
-    let parts: Vec<f64> = pb
-        .ranks
-        .iter_mut()
-        .map(|st| {
-            let n = st.n();
-            backend.dot(&st.r_ext[..n], &st.rprime[..n])
-        })
-        .collect();
-    let mut an = allreduce_scalar(&mut pb.world, 0, 41, parts);
+        ops.dot(&r_ext[..n], &rprime[..n], n)
+    });
+    let mut an = drv.allreduce(pb, 0, 41, parts);
 
-    let mut history = Vec::new();
-    let mut iterations = 0;
-    let mut converged = false;
     let mut restarts = 0;
 
     for k in 0..opts.max_iters {
         // line 3: ad = (A·p)·r'                    BARRIER (the one kept)
-        exchange_all(&mut pb.world, &mut pb.ranks, |st| &mut st.p_ext, 2 * k);
-        let mut parts = Vec::with_capacity(nranks);
-        for st in &mut pb.ranks {
-            let n = st.n();
-            backend.spmv(&st.sys.a, &st.p_ext, &mut st.ap);
-            parts.push(dot_ordered(backend, &st.ap, &st.rprime, n, opts, k, 0));
-        }
-        let ad = allreduce_scalar(&mut pb.world, k, 42, parts);
+        drv.exchange(pb, |st| &mut st.p_ext, 2 * k);
+        let parts = drv.rank_map(pb, backend, |ops, st| {
+            let RankState { sys, p_ext, ap, rprime, .. } = st;
+            ops.spmv_dot_ordered(&sys.a, p_ext, ap, rprime, key(k, 0))
+        });
+        let ad = drv.allreduce(pb, k, 42, parts);
         let alpha = an / ad;
 
         // line 4 (Tk 1): s = r − alpha·Ap
-        for st in &mut pb.ranks {
-            let n = st.n();
+        drv.rank_map(pb, backend, |ops, st| {
+            let n = st.sys.n();
             let RankState { r_ext, s_ext, ap, .. } = st;
             s_ext[..n].copy_from_slice(&r_ext[..n]);
-            backend.axpby(-alpha, &ap[..n], 1.0, &mut s_ext[..n]);
-        }
+            ops.axpby(-alpha, &ap[..n], 1.0, &mut s_ext[..n], n);
+        });
         // line 5 (Tk 2): ω = (A·s)·s / ((A·s)·(A·s)) — overlapped with
         // line 6 (Tk 3): x_{1/2} = x + alpha·p
-        exchange_all(&mut pb.world, &mut pb.ranks, |st| &mut st.s_ext, 2 * k + 1);
-        let mut parts = Vec::with_capacity(nranks);
-        for st in &mut pb.ranks {
-            let n = st.n();
-            backend.spmv(&st.sys.a, &st.s_ext, &mut st.as_);
-            let num = dot_ordered(backend, &st.as_, &st.s_ext, n, opts, k, 1);
-            let den = dot_ordered(backend, &st.as_, &st.as_, n, opts, k, 2);
-            parts.push((num, den));
-        }
-        for st in &mut pb.ranks {
-            let n = st.n();
+        drv.exchange(pb, |st| &mut st.s_ext, 2 * k + 1);
+        let parts = drv.rank_map(pb, backend, |ops, st| {
+            let n = st.sys.n();
+            let RankState { sys, s_ext, as_, .. } = st;
+            ops.spmv(&sys.a, s_ext, as_);
+            let num = ops.dot_ordered(&as_[..n], &s_ext[..n], n, key(k, 1));
+            let den = ops.dot_ordered(&as_[..n], &as_[..n], n, key(k, 2));
+            (num, den)
+        });
+        drv.rank_map(pb, backend, |ops, st| {
+            let n = st.sys.n();
             let RankState { x_ext, p_ext, .. } = st;
-            backend.axpby(alpha, &p_ext[..n], 1.0, &mut x_ext[..n]);
-        }
-        let (num, den) = allreduce_pair(&mut pb.world, k, 43, parts);
+            ops.axpby(alpha, &p_ext[..n], 1.0, &mut x_ext[..n], n);
+        });
+        let (num, den) = drv.allreduce_pair(pb, k, 43, parts);
         let omega = num / den;
 
         // line 7: exit check on beta (previous iteration's (r,r))
-        if (beta / beta0).sqrt() <= opts.eps_rel(beta0) {
+        if drv.conv.pre_check(beta, opts) {
             // line 18: x = x_{1/2} + omega·s
-            for st in &mut pb.ranks {
-                let n = st.n();
+            drv.rank_map(pb, backend, |ops, st| {
+                let n = st.sys.n();
                 let RankState { x_ext, s_ext, .. } = st;
-                backend.axpby(omega, &s_ext[..n], 1.0, &mut x_ext[..n]);
-            }
-            converged = true;
+                ops.axpby(omega, &s_ext[..n], 1.0, &mut x_ext[..n], n);
+            });
             break;
         }
 
         // lines 8-11 (Tk 4): x += omega·s ; r = s − omega·As ;
         // an' = (r, r') ; beta' = (r, r)
-        let mut parts = Vec::with_capacity(nranks);
-        for st in &mut pb.ranks {
-            let n = st.n();
+        let parts = drv.rank_map(pb, backend, |ops, st| {
+            let n = st.sys.n();
             let RankState {
                 x_ext,
                 r_ext,
@@ -270,28 +234,28 @@ fn b1(pb: &mut Problem, opts: &SolveOpts, backend: &mut dyn Compute) -> SolveSta
                 rprime,
                 ..
             } = st;
-            backend.axpby(omega, &s_ext[..n], 1.0, &mut x_ext[..n]);
+            ops.axpby(omega, &s_ext[..n], 1.0, &mut x_ext[..n], n);
             r_ext[..n].copy_from_slice(&s_ext[..n]);
-            backend.axpby(-omega, &as_[..n], 1.0, &mut r_ext[..n]);
-            let an_p = dot_ordered(backend, r_ext, rprime, n, opts, k, 3);
-            let bt_p = dot_ordered(backend, r_ext, r_ext, n, opts, k, 4);
-            parts.push((an_p, bt_p));
-        }
+            ops.axpby(-omega, &as_[..n], 1.0, &mut r_ext[..n], n);
+            let an_p = ops.dot_ordered(&r_ext[..n], &rprime[..n], n, key(k, 3));
+            let bt_p = ops.dot_ordered(&r_ext[..n], &r_ext[..n], n, key(k, 4));
+            (an_p, bt_p)
+        });
         // overlapped with line 12 (Tk 5): p_{1/2} = p − omega·Ap
-        for st in &mut pb.ranks {
-            let n = st.n();
+        drv.rank_map(pb, backend, |ops, st| {
+            let n = st.sys.n();
             let RankState { p_ext, ap, .. } = st;
-            backend.axpby(-omega, &ap[..n], 1.0, &mut p_ext[..n]);
-        }
-        let (an_new, beta_new) = allreduce_pair(&mut pb.world, k, 44, parts);
+            ops.axpby(-omega, &ap[..n], 1.0, &mut p_ext[..n], n);
+        });
+        let (an_new, beta_new) = drv.allreduce_pair(pb, k, 44, parts);
         beta = beta_new;
 
         if (an_new.abs() / beta0).sqrt() < opts.restart_rel(beta0) {
             // lines 13-15 (Tk 6): restart — p = r ; r' = r/sqrt(beta)
             restarts += 1;
             let inv = 1.0 / beta.sqrt();
-            for st in &mut pb.ranks {
-                let n = st.n();
+            let parts = drv.rank_map(pb, backend, |ops, st| {
+                let n = st.sys.n();
                 let RankState {
                     r_ext, p_ext, rprime, ..
                 } = st;
@@ -299,41 +263,23 @@ fn b1(pb: &mut Problem, opts: &SolveOpts, backend: &mut dyn Compute) -> SolveSta
                 for i in 0..n {
                     rprime[i] = r_ext[i] * inv;
                 }
-            }
-            let parts: Vec<f64> = pb
-                .ranks
-                .iter_mut()
-                .map(|st| {
-                    let n = st.n();
-                    backend.dot(&st.r_ext[..n], &st.rprime[..n])
-                })
-                .collect();
-            an = allreduce_scalar(&mut pb.world, k, 45, parts);
+                ops.dot(&r_ext[..n], &rprime[..n], n)
+            });
+            an = drv.allreduce(pb, k, 45, parts);
         } else {
             // line 17 (Tk 7): p = r + (an'/(ad·omega))·p_{1/2}
             let coeff = an_new / (ad * omega);
-            for st in &mut pb.ranks {
-                let n = st.n();
+            drv.rank_map(pb, backend, |ops, st| {
+                let n = st.sys.n();
                 let RankState { r_ext, p_ext, .. } = st;
-                for i in 0..n {
-                    p_ext[i] = r_ext[i] + coeff * p_ext[i];
-                }
-            }
+                ops.axpby(1.0, &r_ext[..n], coeff, &mut p_ext[..n], n);
+            });
             an = an_new;
         }
-        iterations = k + 1;
-        history.push((beta / beta0).sqrt());
+        drv.conv.record(k + 1, beta, opts);
     }
 
-    SolveStats {
-        method: "bicgstab-b1",
-        iterations,
-        converged,
-        rel_residual: (beta / beta0).sqrt(),
-        x_error: pb.x_error(),
-        history,
-        restarts,
-    }
+    drv.finish("bicgstab-b1", pb, restarts)
 }
 
 #[cfg(test)]
@@ -356,7 +302,12 @@ mod tests {
     #[test]
     fn classic_converges() {
         for kind in [StencilKind::P7, StencilKind::P27] {
-            let s = run(Method::BiCgStab(BiVariant::Classic), kind, 1, &SolveOpts::default());
+            let s = run(
+                Method::BiCgStab(BiVariant::Classic),
+                kind,
+                1,
+                &SolveOpts::default(),
+            );
             assert!(s.converged, "{kind:?}");
             assert!(s.x_error < 1e-4, "{kind:?} x_err={}", s.x_error);
         }
@@ -364,7 +315,12 @@ mod tests {
 
     #[test]
     fn classic_multirank_converges() {
-        let s = run(Method::BiCgStab(BiVariant::Classic), StencilKind::P7, 4, &SolveOpts::default());
+        let s = run(
+            Method::BiCgStab(BiVariant::Classic),
+            StencilKind::P7,
+            4,
+            &SolveOpts::default(),
+        );
         assert!(s.converged);
         assert!(s.x_error < 1e-4);
     }
@@ -402,7 +358,12 @@ mod tests {
         // paper §4.1: 8 (BiCGStab) vs 12 (CG) iterations on 7-pt
         let opts = SolveOpts::default();
         let bi = run(Method::BiCgStab(BiVariant::Classic), StencilKind::P7, 1, &opts);
-        let cg = run(Method::Cg(super::super::CgVariant::Classic), StencilKind::P7, 1, &opts);
+        let cg = run(
+            Method::Cg(super::super::CgVariant::Classic),
+            StencilKind::P7,
+            1,
+            &opts,
+        );
         assert!(
             bi.iterations <= cg.iterations,
             "bicgstab {} vs cg {}",

@@ -7,15 +7,17 @@
 //! so a run through the XLA backend and a run through the native kernels
 //! are step-for-step comparable.
 //!
-//! Task-ordered reductions: with `opts.ntasks > 0` every local dot is
-//! computed block-wise and accumulated in shuffled completion order
-//! (§3.3: "the task execution order is not guaranteed ... floating-point
-//! rounding errors can accumulate"). CG tolerates this (paper: "this
-//! does not constitute an issue for the CG methods").
+//! Kernel execution goes through the shared-memory executor: the SpMV and
+//! its dependent dot are submitted as per-chunk dependency chains
+//! (`Ops::spmv_dot_ordered`), so under the task strategy a chunk's dot
+//! starts while other chunks are still multiplying. With `opts.ntasks >
+//! 0` every local dot additionally accumulates in shuffled completion
+//! order (§3.3: "the task execution order is not guaranteed ...
+//! floating-point rounding errors can accumulate"). CG tolerates this
+//! (paper: "this does not constitute an issue for the CG methods").
 
-use super::{allreduce_scalar, completion_order, exchange_all, task_blocks};
-use super::{Compute, Problem, RankState, SolveOpts, SolveStats};
-use crate::kernels;
+use super::{Compute, Problem, RankState, SolveOpts, SolveStats, SolverDriver};
+use crate::exec::Executor;
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum CgVariant {
@@ -23,219 +25,168 @@ pub enum CgVariant {
     NonBlocking,
 }
 
-/// Block-ordered local dot product (reduction in task completion order).
-fn dot_ordered(
-    backend: &mut dyn Compute,
-    x: &[f64],
-    y: &[f64],
-    n: usize,
-    opts: &SolveOpts,
-    k: usize,
-) -> f64 {
-    if opts.ntasks == 0 {
-        return backend.dot(&x[..n], &y[..n]);
-    }
-    let blocks = task_blocks(n, opts.ntasks);
-    let order = completion_order(blocks.len(), opts.task_order_seed, k);
-    let mut acc = 0.0;
-    for &bi in &order {
-        let (r0, r1) = blocks[bi];
-        acc += kernels::dot(x, y, r0, r1);
-    }
-    acc
-}
-
 pub fn solve(
     pb: &mut Problem,
     variant: CgVariant,
     opts: &SolveOpts,
     backend: &mut dyn Compute,
+    exec: &Executor,
 ) -> SolveStats {
     match variant {
-        CgVariant::Classic => classic(pb, opts, backend),
-        CgVariant::NonBlocking => nonblocking(pb, opts, backend),
+        CgVariant::Classic => classic(pb, opts, backend, exec),
+        CgVariant::NonBlocking => nonblocking(pb, opts, backend, exec),
     }
 }
 
-fn classic(pb: &mut Problem, opts: &SolveOpts, backend: &mut dyn Compute) -> SolveStats {
-    let nranks = pb.nranks();
-    // init: r = b; p = r
-    for st in &mut pb.ranks {
-        let n = st.n();
+fn classic(
+    pb: &mut Problem,
+    opts: &SolveOpts,
+    backend: &mut dyn Compute,
+    exec: &Executor,
+) -> SolveStats {
+    let mut drv = SolverDriver::new(exec, opts);
+
+    // init: r = b; p = r; rr = (r, r)
+    let partials = drv.rank_map(pb, backend, |ops, st| {
+        let n = st.sys.n();
         st.r_ext[..n].copy_from_slice(&st.sys.b);
         st.p_ext[..n].copy_from_slice(&st.sys.b);
-    }
-    let partials: Vec<f64> = pb
-        .ranks
-        .iter_mut()
-        .map(|st| {
-            let n = st.n();
-            backend.dot(&st.r_ext[..n], &st.r_ext[..n])
-        })
-        .collect();
-    let mut rr = allreduce_scalar(&mut pb.world, 0, 10, partials);
-    let rr0 = rr.max(f64::MIN_POSITIVE);
-
-    let mut history = Vec::new();
-    let mut iterations = 0;
-    let mut converged = false;
+        ops.dot(&st.r_ext[..n], &st.r_ext[..n], n)
+    });
+    let mut rr = drv.allreduce(pb, 0, 10, partials);
+    drv.conv.set_reference(rr);
 
     for k in 0..opts.max_iters {
-        let rel = (rr / rr0).sqrt();
-        if rel <= opts.eps_rel(rr0) {
-            converged = true;
+        if drv.conv.pre_check(rr, opts) {
             break;
         }
-        // halo exchange of p, SpMV, local pAp
-        exchange_all(&mut pb.world, &mut pb.ranks, |st| &mut st.p_ext, k);
-        let mut partials = Vec::with_capacity(nranks);
-        for st in &mut pb.ranks {
-            let n = st.n();
-            let (p_ext, ap) = (&st.p_ext, &mut st.ap);
-            backend.spmv(&st.sys.a, p_ext, ap);
-            partials.push(dot_ordered(backend, &st.ap, &st.p_ext, n, opts, k));
-        }
-        let pap = allreduce_scalar(&mut pb.world, k, 11, partials); // BARRIER 1
+        // halo exchange of p, SpMV, local pAp (per-chunk dependency
+        // chain: dot_i waits only on spmv_i)
+        drv.exchange(pb, |st| &mut st.p_ext, k);
+        let partials = drv.rank_map(pb, backend, |ops, st| {
+            let RankState { sys, p_ext, ap, .. } = st;
+            ops.spmv_dot_ordered(&sys.a, p_ext, ap, p_ext, k)
+        });
+        let pap = drv.allreduce(pb, k, 11, partials); // BARRIER 1
         let alpha = rr / pap;
 
         // x += alpha p ; r -= alpha Ap ; rr' = (r,r)
-        let mut partials = Vec::with_capacity(nranks);
-        for st in &mut pb.ranks {
-            let n = st.n();
+        let partials = drv.rank_map(pb, backend, |ops, st| {
+            let n = st.sys.n();
             let RankState {
                 x_ext, r_ext, p_ext, ap, ..
             } = st;
-            backend.axpby(alpha, &p_ext[..n], 1.0, &mut x_ext[..n]);
-            backend.axpby(-alpha, &ap[..n], 1.0, &mut r_ext[..n]);
-            partials.push(dot_ordered(backend, r_ext, r_ext, n, opts, k));
-        }
-        let rr_new = allreduce_scalar(&mut pb.world, k, 12, partials); // BARRIER 2
+            ops.axpby(alpha, &p_ext[..n], 1.0, &mut x_ext[..n], n);
+            ops.axpby(-alpha, &ap[..n], 1.0, &mut r_ext[..n], n);
+            ops.dot_ordered(&r_ext[..n], &r_ext[..n], n, k)
+        });
+        let rr_new = drv.allreduce(pb, k, 12, partials); // BARRIER 2
         let beta = rr_new / rr;
 
         // p = r + beta p
-        for st in &mut pb.ranks {
-            let n = st.n();
+        drv.rank_map(pb, backend, |ops, st| {
+            let n = st.sys.n();
             let RankState { r_ext, p_ext, .. } = st;
-            backend.axpby(1.0, &r_ext[..n], beta, &mut p_ext[..n]);
-        }
+            ops.axpby(1.0, &r_ext[..n], beta, &mut p_ext[..n], n);
+        });
         rr = rr_new;
-        iterations = k + 1;
-        history.push((rr / rr0).sqrt());
+        drv.conv.record(k + 1, rr, opts);
     }
 
-    SolveStats {
-        method: "cg",
-        iterations,
-        converged,
-        rel_residual: (rr / rr0).sqrt(),
-        x_error: pb.x_error(),
-        history,
-        restarts: 0,
-    }
+    drv.finish("cg", pb, 0)
 }
 
 /// CG-NB (Algorithm 1). The SpMV is applied to r, so A·p is maintained as
 /// a vector update — removing both blocking barriers: the rr allreduce
 /// overlaps with the SpMV on r (Tk 1) and the pAp allreduce overlaps with
 /// the x update (Tk 3).
-fn nonblocking(pb: &mut Problem, opts: &SolveOpts, backend: &mut dyn Compute) -> SolveStats {
-    let nranks = pb.nranks();
+fn nonblocking(
+    pb: &mut Problem,
+    opts: &SolveOpts,
+    backend: &mut dyn Compute,
+    exec: &Executor,
+) -> SolveStats {
+    let mut drv = SolverDriver::new(exec, opts);
+
     // init: r = b; p = r; Ap = A·p; an = (r,r); ad = (Ap,p)
     for st in &mut pb.ranks {
         let n = st.n();
         st.r_ext[..n].copy_from_slice(&st.sys.b);
         st.p_ext[..n].copy_from_slice(&st.sys.b);
     }
-    exchange_all(&mut pb.world, &mut pb.ranks, |st| &mut st.p_ext, 0);
-    let mut an_parts = Vec::with_capacity(nranks);
-    let mut ad_parts = Vec::with_capacity(nranks);
-    for st in &mut pb.ranks {
-        let n = st.n();
-        backend.spmv(&st.sys.a, &st.p_ext, &mut st.ap);
-        an_parts.push(backend.dot(&st.r_ext[..n], &st.r_ext[..n]));
-        ad_parts.push(backend.dot(&st.ap[..n], &st.p_ext[..n]));
-    }
-    let mut an = allreduce_scalar(&mut pb.world, 0, 20, an_parts);
-    let mut ad = allreduce_scalar(&mut pb.world, 0, 21, ad_parts);
-    let an0 = an.max(f64::MIN_POSITIVE);
+    drv.exchange(pb, |st| &mut st.p_ext, 0);
+    let parts = drv.rank_map(pb, backend, |ops, st| {
+        let n = st.sys.n();
+        let RankState {
+            sys, r_ext, p_ext, ap, ..
+        } = st;
+        ops.spmv(&sys.a, p_ext, ap);
+        let an = ops.dot(&r_ext[..n], &r_ext[..n], n);
+        let ad = ops.dot(&ap[..n], &p_ext[..n], n);
+        (an, ad)
+    });
+    let (an_parts, ad_parts): (Vec<f64>, Vec<f64>) = parts.into_iter().unzip();
+    let mut an = drv.allreduce(pb, 0, 20, an_parts);
+    let mut ad = drv.allreduce(pb, 0, 21, ad_parts);
+    drv.conv.set_reference(an);
     let mut alpha = an / ad;
 
-    let mut history = Vec::new();
-    let mut iterations = 0;
-    let mut converged = false;
-
     for k in 1..=opts.max_iters {
-        if (an / an0).sqrt() <= opts.eps_rel(an0) {
-            converged = true;
+        if drv.conv.pre_check(an, opts) {
             break;
         }
         // Tk 0: r -= alpha·Ap ; an' = (r,r)   [line 4-5]
-        let mut partials = Vec::with_capacity(nranks);
-        for st in &mut pb.ranks {
-            let n = st.n();
+        let partials = drv.rank_map(pb, backend, |ops, st| {
+            let n = st.sys.n();
             let RankState { r_ext, ap, .. } = st;
-            backend.axpby(-alpha, &ap[..n], 1.0, &mut r_ext[..n]);
-            partials.push(dot_ordered(backend, r_ext, r_ext, n, opts, k));
-        }
+            ops.axpby(-alpha, &ap[..n], 1.0, &mut r_ext[..n], n);
+            ops.dot_ordered(&r_ext[..n], &r_ext[..n], n, k)
+        });
         // allreduce(an') — overlapped with the SpMV on r in the task model
-        let an_new = allreduce_scalar(&mut pb.world, k, 20, partials);
+        let an_new = drv.allreduce(pb, k, 20, partials);
         let beta = an_new / an;
 
         // Tk 1&2: Ar = A·r ; Ap = Ar + beta·Ap ; p = r + beta·p ;
         // ad' = (Ap, p)   [lines 6-8]
-        exchange_all(&mut pb.world, &mut pb.ranks, |st| &mut st.r_ext, k);
-        let mut partials = Vec::with_capacity(nranks);
-        for st in &mut pb.ranks {
-            let n = st.n();
-            backend.spmv(&st.sys.a, &st.r_ext, &mut st.ar);
+        drv.exchange(pb, |st| &mut st.r_ext, k);
+        let partials = drv.rank_map(pb, backend, |ops, st| {
+            let n = st.sys.n();
             let RankState {
-                r_ext, p_ext, ap, ar, ..
+                sys, r_ext, p_ext, ap, ar, ..
             } = st;
-            backend.axpby(1.0, &r_ext[..n], beta, &mut p_ext[..n]);
-            // fused axpby+dot in blocks, task order (CG-NB Tk 2)
-            if opts.ntasks == 0 {
-                backend.axpby(1.0, &ar[..n], beta, &mut ap[..n]);
-                partials.push(backend.dot(&ap[..n], &p_ext[..n]));
-            } else {
-                let blocks = task_blocks(n, opts.ntasks);
-                let order = completion_order(blocks.len(), opts.task_order_seed, k);
-                let mut acc = 0.0;
-                for &bi in &order {
-                    let (r0, r1) = blocks[bi];
-                    acc += kernels::axpby_dot(1.0, ar, beta, ap, p_ext, r0, r1);
-                }
-                partials.push(acc);
-            }
-        }
+            ops.spmv(&sys.a, r_ext, ar);
+            ops.axpby(1.0, &r_ext[..n], beta, &mut p_ext[..n], n);
+            // fused axpby+dot (CG-NB Tk 2); §3.3-blocked when ntasks > 0
+            ops.axpby_dot_ordered(1.0, &ar[..n], beta, &mut ap[..n], &p_ext[..n], n, k)
+        });
         // allreduce(ad') — overlapped with Tk 3 in the task model
-        let ad_new = allreduce_scalar(&mut pb.world, k, 21, partials);
+        let ad_new = drv.allreduce(pb, k, 21, partials);
 
         // Tk 3: x += (an²/(ad·an'))·(p − r)   [line 9]
         let coeff = an * an / (ad * an_new);
-        for st in &mut pb.ranks {
-            let n = st.n();
+        drv.rank_map(pb, backend, |ops, st| {
+            let n = st.sys.n();
             let RankState {
                 x_ext, r_ext, p_ext, ..
             } = st;
-            backend.waxpby(coeff, &p_ext[..n], -coeff, &r_ext[..n], 1.0, &mut x_ext[..n]);
-        }
+            ops.waxpby(
+                coeff,
+                &p_ext[..n],
+                -coeff,
+                &r_ext[..n],
+                1.0,
+                &mut x_ext[..n],
+                n,
+            );
+        });
 
         an = an_new;
         ad = ad_new;
         alpha = an / ad;
-        iterations = k;
-        history.push((an / an0).sqrt());
+        drv.conv.record(k, an, opts);
     }
 
-    SolveStats {
-        method: "cg-nb",
-        iterations,
-        converged,
-        rel_residual: (an / an0).sqrt(),
-        x_error: pb.x_error(),
-        history,
-        restarts: 0,
-    }
+    drv.finish("cg-nb", pb, 0)
 }
 
 #[cfg(test)]
@@ -257,14 +208,24 @@ mod tests {
 
     #[test]
     fn classic_converges_7pt() {
-        let s = run(Method::Cg(CgVariant::Classic), StencilKind::P7, 1, &SolveOpts::default());
+        let s = run(
+            Method::Cg(CgVariant::Classic),
+            StencilKind::P7,
+            1,
+            &SolveOpts::default(),
+        );
         assert!(s.converged);
         assert!(s.x_error < 1e-5, "x_err={}", s.x_error);
     }
 
     #[test]
     fn classic_converges_27pt_multirank() {
-        let s = run(Method::Cg(CgVariant::Classic), StencilKind::P27, 4, &SolveOpts::default());
+        let s = run(
+            Method::Cg(CgVariant::Classic),
+            StencilKind::P27,
+            4,
+            &SolveOpts::default(),
+        );
         assert!(s.converged);
         assert!(s.x_error < 1e-5);
     }
@@ -313,7 +274,12 @@ mod tests {
 
     #[test]
     fn residual_history_is_decreasing_overall() {
-        let s = run(Method::Cg(CgVariant::Classic), StencilKind::P7, 1, &SolveOpts::default());
+        let s = run(
+            Method::Cg(CgVariant::Classic),
+            StencilKind::P7,
+            1,
+            &SolveOpts::default(),
+        );
         assert!(s.history.last().unwrap() < &1e-6);
         // loosely monotone: last < first
         assert!(s.history.last().unwrap() < s.history.first().unwrap());

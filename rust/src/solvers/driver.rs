@@ -1,0 +1,627 @@
+//! Shared solver driver: the per-iteration plumbing that used to be
+//! copy-pasted across jacobi/gauss_seidel/cg/bicgstab — halo exchange
+//! (post + complete through `simmpi::HaloExchange` with the ISODD
+//! communicator split), allreduce of per-rank partials, convergence
+//! tracking / history accounting, and final `SolveStats` assembly. Each
+//! method file now contains only its kernel sequence, parameterising the
+//! driver with it.
+//!
+//! [`Ops`] is the executor-backed kernel dispatch for one rank: every
+//! operation is chunked by the shared-memory [`Executor`] and folded
+//! deterministically (see the determinism contract in `crate::exec`).
+//! The `_ordered` flavours additionally honour `SolveOpts::ntasks` — the
+//! simulated §3.3 task-completion-order reductions: same blocks, same
+//! seeded order, same linear accumulation per operation as before the
+//! refactor. (One last-ulp regrouping exists: the red-black GS sweep now
+//! folds each colour's partials separately and sums the two colour
+//! totals, where the old loop chained one accumulator across both
+//! colours — see `gauss_seidel.rs`.)
+
+use crate::exec::{fold, Executor, Reduction, SharedRows};
+use crate::kernels;
+use crate::simmpi::{isodd, HaloExchange};
+use crate::sparse::EllMatrix;
+
+use super::{completion_order, task_blocks, Compute, Problem, RankState, SolveOpts, SolveStats};
+
+// ---------------------------------------------------------------------
+// Convergence tracking
+// ---------------------------------------------------------------------
+
+/// Residual bookkeeping shared by all methods: reference residual,
+/// relative-residual history, iteration count, convergence flag.
+#[derive(Debug, Default)]
+pub struct ConvergenceTracker {
+    res0: f64,
+    rel: f64,
+    history: Vec<f64>,
+    iterations: usize,
+    converged: bool,
+}
+
+impl ConvergenceTracker {
+    pub fn new() -> Self {
+        ConvergenceTracker {
+            res0: 0.0,
+            rel: 1.0,
+            ..Default::default()
+        }
+    }
+
+    /// Fix the reference squared residual (Krylov methods compute it
+    /// before the loop; stationary methods let `record` capture it on
+    /// the first iteration).
+    pub fn set_reference(&mut self, res2: f64) {
+        self.res0 = res2.max(f64::MIN_POSITIVE);
+    }
+
+    pub fn reference(&self) -> f64 {
+        self.res0
+    }
+
+    /// Top-of-loop convergence test against the current squared residual
+    /// (no history entry). Returns true once converged.
+    pub fn pre_check(&mut self, res2: f64, opts: &SolveOpts) -> bool {
+        self.rel = (res2 / self.res0).sqrt();
+        if self.rel <= opts.eps_rel(self.res0) {
+            self.converged = true;
+        }
+        self.converged
+    }
+
+    /// End-of-iteration record: first call fixes the reference
+    /// (stationary convention), pushes the relative residual into the
+    /// history and updates the completed-iteration count. Returns true
+    /// once converged.
+    pub fn record(&mut self, completed: usize, res2: f64, opts: &SolveOpts) -> bool {
+        if self.res0 == 0.0 {
+            self.set_reference(res2);
+        }
+        self.rel = (res2 / self.res0).sqrt();
+        self.history.push(self.rel);
+        self.iterations = completed;
+        if self.rel <= opts.eps_rel(self.res0) {
+            self.converged = true;
+        }
+        self.converged
+    }
+
+    pub fn converged(&self) -> bool {
+        self.converged
+    }
+}
+
+// ---------------------------------------------------------------------
+// The driver
+// ---------------------------------------------------------------------
+
+/// Per-solve driver owning the cross-method plumbing. Borrow it the
+/// executor and options once; pass the problem and backend per call (the
+/// solver keeps mutating both between driver calls).
+pub struct SolverDriver<'a> {
+    pub exec: &'a Executor,
+    pub opts: &'a SolveOpts,
+    pub conv: ConvergenceTracker,
+}
+
+impl<'a> SolverDriver<'a> {
+    pub fn new(exec: &'a Executor, opts: &'a SolveOpts) -> Self {
+        SolverDriver {
+            exec,
+            opts,
+            conv: ConvergenceTracker::new(),
+        }
+    }
+
+    /// Lockstep halo exchange of one extended vector on every rank.
+    /// `phase` selects the ISODD tag/communicator split (Code 1's
+    /// deadlock-avoidance idiom).
+    pub fn exchange(
+        &self,
+        pb: &mut Problem,
+        which: fn(&mut RankState) -> &mut Vec<f64>,
+        phase: usize,
+    ) {
+        let comm = isodd(phase);
+        let tag = phase as u64;
+        let world = &mut pb.world;
+        for st in pb.ranks.iter_mut() {
+            let rank = st.sys.part.rank;
+            let halo = st.sys.halo.clone();
+            let x = which(st);
+            HaloExchange::post_sends(world, rank, &halo, x, tag, comm);
+        }
+        for st in pb.ranks.iter_mut() {
+            let rank = st.sys.part.rank;
+            let halo = st.sys.halo.clone();
+            let x = which(st);
+            let ok = HaloExchange::complete_recvs(world, rank, &halo, x, tag, comm);
+            assert!(ok, "halo deadlock at rank {rank} phase {phase}");
+        }
+    }
+
+    /// Run `f` once per rank with an executor-backed [`Ops`] context,
+    /// collecting one value per rank (usually an allreduce contribution).
+    pub fn rank_map<T>(
+        &self,
+        pb: &mut Problem,
+        backend: &mut dyn Compute,
+        mut f: impl FnMut(&mut Ops, &mut RankState) -> T,
+    ) -> Vec<T> {
+        let mut ops = Ops {
+            exec: self.exec,
+            opts: self.opts,
+            backend,
+        };
+        pb.ranks.iter_mut().map(|st| f(&mut ops, st)).collect()
+    }
+
+    /// Global sum of one scalar partial per rank.
+    pub fn allreduce(&self, pb: &mut Problem, k: usize, tag: u64, partials: Vec<f64>) -> f64 {
+        let v = pb.world.allreduce_sum(
+            isodd(k),
+            tag,
+            partials.into_iter().map(|p| vec![p]).collect(),
+        );
+        v[0]
+    }
+
+    /// Global sum of a pair per rank (fused collectives: ω's numerator /
+    /// denominator, or αn together with β — Algorithm 2 lines 10-11).
+    pub fn allreduce_pair(
+        &self,
+        pb: &mut Problem,
+        k: usize,
+        tag: u64,
+        partials: Vec<(f64, f64)>,
+    ) -> (f64, f64) {
+        let v = pb.world.allreduce_sum(
+            isodd(k),
+            tag,
+            partials.into_iter().map(|(a, b)| vec![a, b]).collect(),
+        );
+        (v[0], v[1])
+    }
+
+    /// Final stats assembly.
+    pub fn finish(self, method: &'static str, pb: &Problem, restarts: usize) -> SolveStats {
+        SolveStats {
+            method,
+            iterations: self.conv.iterations,
+            converged: self.conv.converged,
+            rel_residual: self.conv.rel,
+            x_error: pb.x_error(),
+            history: self.conv.history,
+            restarts,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Executor-backed kernel dispatch for one rank
+// ---------------------------------------------------------------------
+
+/// Chunked kernel operations over one rank's vectors. Each op splits its
+/// row range into chunks (executor policy, or `opts.ntasks` blocks for
+/// the `_ordered` flavours), executes them under the executor strategy
+/// and folds reduction partials deterministically.
+///
+/// When the backend is not thread-safe (XLA) or reports `max_chunks() ==
+/// 1`, chunks run sequentially through the backend on the calling thread
+/// — same decomposition, same fold, identical numerics.
+pub struct Ops<'a> {
+    pub exec: &'a Executor,
+    pub opts: &'a SolveOpts,
+    pub backend: &'a mut dyn Compute,
+}
+
+impl Ops<'_> {
+    /// Chunk plan for a plain (non-§3.3) operation.
+    fn blocks(&self, n: usize) -> Vec<(usize, usize)> {
+        self.exec.blocks(n, self.backend.max_chunks())
+    }
+
+    /// Chunk plan + fold order for a §3.3-ordered reduction: with
+    /// `ntasks > 0` the operation runs over the seeded task blocks and
+    /// accumulates linearly in completion order; otherwise it behaves
+    /// like a plain tree-folded operation.
+    fn ordered_plan(&self, n: usize, key: usize) -> (Vec<(usize, usize)>, Reduction) {
+        if self.opts.ntasks > 0 {
+            let blocks = task_blocks(n, self.opts.ntasks);
+            let order = completion_order(blocks.len(), self.opts.task_order_seed, key);
+            (blocks, Reduction::Ordered(order))
+        } else {
+            (self.blocks(n), Reduction::Tree)
+        }
+    }
+
+    fn parallel_native(&self, nblocks: usize) -> bool {
+        self.exec.parallel(nblocks) && self.backend.thread_safe()
+    }
+
+    /// y[0..n) = A·x_ext.
+    pub fn spmv(&mut self, a: &EllMatrix, x_ext: &[f64], y: &mut [f64]) {
+        let blocks = self.blocks(a.n);
+        let rows = SharedRows::new(y);
+        self.for_each_op(
+            &blocks,
+            |r0, r1| {
+                // SAFETY: chunks write disjoint row ranges of y.
+                let y = unsafe { rows.full() };
+                kernels::spmv_ell(a, x_ext, y, r0, r1);
+            },
+            |b, r0, r1| b.spmv(a, x_ext, y, r0, r1),
+        );
+    }
+
+    /// Plain chunked dot over [0, n) with tree fold.
+    pub fn dot(&mut self, x: &[f64], y: &[f64], n: usize) -> f64 {
+        let blocks = self.blocks(n);
+        self.reduce(
+            &blocks,
+            &Reduction::Tree,
+            |r0, r1| kernels::dot(x, y, r0, r1),
+            |b, r0, r1| b.dot(x, y, r0, r1),
+        )
+    }
+
+    /// §3.3-ordered dot (task blocks + completion-order accumulation when
+    /// `ntasks > 0`). `key` seeds the per-call shuffle stream.
+    pub fn dot_ordered(&mut self, x: &[f64], y: &[f64], n: usize, key: usize) -> f64 {
+        let (blocks, red) = self.ordered_plan(n, key);
+        self.reduce(
+            &blocks,
+            &red,
+            |r0, r1| kernels::dot(x, y, r0, r1),
+            |b, r0, r1| b.dot(x, y, r0, r1),
+        )
+    }
+
+    /// y = a·x + b·y over [0, n).
+    pub fn axpby(&mut self, a: f64, x: &[f64], b: f64, y: &mut [f64], n: usize) {
+        let blocks = self.blocks(n);
+        let rows = SharedRows::new(y);
+        self.for_each_op(
+            &blocks,
+            |r0, r1| {
+                // SAFETY: chunks write disjoint row ranges of y.
+                let y = unsafe { rows.full() };
+                kernels::axpby(a, x, b, y, r0, r1);
+            },
+            |be, r0, r1| be.axpby(a, x, b, y, r0, r1),
+        );
+    }
+
+    /// z = a·x + b·y + c·z over [0, n).
+    #[allow(clippy::too_many_arguments)]
+    pub fn waxpby(
+        &mut self,
+        a: f64,
+        x: &[f64],
+        b: f64,
+        y: &[f64],
+        c: f64,
+        z: &mut [f64],
+        n: usize,
+    ) {
+        let blocks = self.blocks(n);
+        let rows = SharedRows::new(z);
+        self.for_each_op(
+            &blocks,
+            |r0, r1| {
+                // SAFETY: chunks write disjoint row ranges of z.
+                let z = unsafe { rows.full() };
+                kernels::waxpby(a, x, b, y, c, z, r0, r1);
+            },
+            |be, r0, r1| be.waxpby(a, x, b, y, c, z, r0, r1),
+        );
+    }
+
+    /// Fused SpMV + dot: y = A·x_ext, returns Σ y·p. Under the task
+    /// strategy each chunk's dot depends only on that chunk's SpMV — a
+    /// real dependency edge instead of an inter-kernel barrier.
+    pub fn spmv_dot_ordered(
+        &mut self,
+        a: &EllMatrix,
+        x_ext: &[f64],
+        y: &mut [f64],
+        p: &[f64],
+        key: usize,
+    ) -> f64 {
+        let (blocks, red) = self.ordered_plan(a.n, key);
+        if self.parallel_native(blocks.len()) {
+            let rows = SharedRows::new(y);
+            self.exec.pipeline2(
+                &blocks,
+                &red,
+                |_, r0, r1| {
+                    // SAFETY: chunks write disjoint row ranges of y.
+                    let y = unsafe { rows.full() };
+                    kernels::spmv_ell(a, x_ext, y, r0, r1);
+                },
+                |_, r0, r1| {
+                    // SAFETY: reads this chunk's rows, written by its own
+                    // stage-1 predecessor.
+                    let y = unsafe { rows.full() };
+                    kernels::dot(y, p, r0, r1)
+                },
+            )
+        } else {
+            // the SpMV honours the backend's chunk capability (one
+            // whole-range artifact call for XLA); only the dot follows
+            // the §3.3 task blocks — exactly the pre-refactor split
+            for &(r0, r1) in &self.blocks(a.n) {
+                self.backend.spmv(a, x_ext, y, r0, r1);
+            }
+            let partials: Vec<f64> = blocks
+                .iter()
+                .map(|&(r0, r1)| self.backend.dot(y, p, r0, r1))
+                .collect();
+            fold(&partials, &red)
+        }
+    }
+
+    /// CG-NB Tk 2: y = a·x + b·y fused with the partial y'·p. With
+    /// `ntasks == 0` this decomposes into the separate axpby + dot the
+    /// classic path used (the 4-accumulator dot), preserving pre-refactor
+    /// numerics exactly; the fused `kernels::axpby_dot` runs only on the
+    /// §3.3 task-block path, as before.
+    #[allow(clippy::too_many_arguments)]
+    pub fn axpby_dot_ordered(
+        &mut self,
+        a: f64,
+        x: &[f64],
+        b: f64,
+        y: &mut [f64],
+        p: &[f64],
+        n: usize,
+        key: usize,
+    ) -> f64 {
+        if self.opts.ntasks == 0 {
+            let blocks = self.blocks(n);
+            if self.parallel_native(blocks.len()) {
+                let rows = SharedRows::new(y);
+                return self.exec.pipeline2(
+                    &blocks,
+                    &Reduction::Tree,
+                    |_, r0, r1| {
+                        // SAFETY: chunks write disjoint row ranges of y.
+                        let y = unsafe { rows.full() };
+                        kernels::axpby(a, x, b, y, r0, r1);
+                    },
+                    |_, r0, r1| {
+                        // SAFETY: reads this chunk's rows only.
+                        let y = unsafe { rows.full() };
+                        kernels::dot(y, p, r0, r1)
+                    },
+                );
+            }
+            let mut partials = vec![0.0; blocks.len()];
+            for (bi, &(r0, r1)) in blocks.iter().enumerate() {
+                self.backend.axpby(a, x, b, y, r0, r1);
+                partials[bi] = self.backend.dot(y, p, r0, r1);
+            }
+            return fold(&partials, &Reduction::Tree);
+        }
+        let (blocks, red) = self.ordered_plan(n, key);
+        if self.parallel_native(blocks.len()) {
+            let rows = SharedRows::new(y);
+            self.exec.reduce(&blocks, &red, |_, r0, r1| {
+                // SAFETY: chunks write disjoint row ranges of y.
+                let y = unsafe { rows.full() };
+                kernels::axpby_dot(a, x, b, y, p, r0, r1)
+            })
+        } else {
+            let mut partials = vec![0.0; blocks.len()];
+            for (bi, &(r0, r1)) in blocks.iter().enumerate() {
+                partials[bi] = self.backend.axpby_dot(a, x, b, y, p, r0, r1);
+            }
+            fold(&partials, &red)
+        }
+    }
+
+    /// One Jacobi sweep (fused with the residual partial), §3.3-ordered.
+    pub fn jacobi_step_ordered(
+        &mut self,
+        a: &EllMatrix,
+        b: &[f64],
+        x_ext: &[f64],
+        x_new: &mut [f64],
+        key: usize,
+    ) -> f64 {
+        let (blocks, red) = self.ordered_plan(a.n, key);
+        if self.parallel_native(blocks.len()) {
+            let rows = SharedRows::new(x_new);
+            self.exec.reduce(&blocks, &red, |_, r0, r1| {
+                // SAFETY: chunks write disjoint row ranges of x_new.
+                let x_new = unsafe { rows.full() };
+                kernels::jacobi_sweep(a, b, x_ext, x_new, r0, r1)
+            })
+        } else {
+            let mut partials = vec![0.0; blocks.len()];
+            for (bi, &(r0, r1)) in blocks.iter().enumerate() {
+                partials[bi] = self.backend.jacobi_step(a, b, x_ext, x_new, r0, r1);
+            }
+            fold(&partials, &red)
+        }
+    }
+
+    /// Whole-range coloured half-sweep (red-black with `ntasks <= 1`):
+    /// live sequential semantics — not chunkable, single backend call.
+    pub fn gs_colour_whole(
+        &mut self,
+        a: &EllMatrix,
+        b: &[f64],
+        mask: &[bool],
+        colour: bool,
+        x_ext: &mut [f64],
+    ) -> f64 {
+        self.backend.gs_colour_sweep(a, b, mask, colour, x_ext, 0, a.n)
+    }
+
+    /// Blocked coloured half-sweep (red-black task strategy): same-colour
+    /// chunks are independent given the snapshot `x_old`, so they run
+    /// concurrently; residual partials fold in completion order.
+    #[allow(clippy::too_many_arguments)]
+    pub fn gs_colour_blocked_ordered(
+        &mut self,
+        a: &EllMatrix,
+        b: &[f64],
+        mask: &[bool],
+        colour: bool,
+        x_ext: &mut [f64],
+        x_old: &[f64],
+        key: usize,
+    ) -> f64 {
+        let (blocks, red) = self.ordered_plan(a.n, key);
+        if self.parallel_native(blocks.len()) {
+            let rows = SharedRows::new(x_ext);
+            self.exec.reduce(&blocks, &red, |_, r0, r1| {
+                // SAFETY: each chunk writes only its own rows of x_ext;
+                // cross-chunk couplings read the snapshot x_old, and the
+                // halo region (rows >= n) is read-only during the sweep.
+                let x_ext = unsafe { rows.full() };
+                kernels::gs_colour_sweep_blocked(a, b, mask, colour, x_ext, x_old, r0, r1)
+            })
+        } else {
+            let mut partials = vec![0.0; blocks.len()];
+            for (bi, &(r0, r1)) in blocks.iter().enumerate() {
+                partials[bi] = self
+                    .backend
+                    .gs_colour_sweep_blocked(a, b, mask, colour, x_ext, x_old, r0, r1);
+            }
+            fold(&partials, &red)
+        }
+    }
+
+    /// Shared dispatch for non-reducing vector ops: parallel native path
+    /// vs sequential backend path, same blocks either way.
+    fn for_each_op(
+        &mut self,
+        blocks: &[(usize, usize)],
+        par: impl Fn(usize, usize) + Sync,
+        mut seq: impl FnMut(&mut dyn Compute, usize, usize),
+    ) {
+        if self.parallel_native(blocks.len()) {
+            self.exec.for_each(blocks, |_, r0, r1| par(r0, r1));
+        } else {
+            for &(r0, r1) in blocks {
+                seq(self.backend, r0, r1);
+            }
+        }
+    }
+
+    /// Shared reduce helper: parallel native path vs sequential backend
+    /// path, same blocks, same fold.
+    fn reduce(
+        &mut self,
+        blocks: &[(usize, usize)],
+        red: &Reduction,
+        par: impl Fn(usize, usize) -> f64 + Sync,
+        mut seq: impl FnMut(&mut dyn Compute, usize, usize) -> f64,
+    ) -> f64 {
+        if self.parallel_native(blocks.len()) {
+            self.exec.reduce(blocks, red, |_, r0, r1| par(r0, r1))
+        } else {
+            let partials: Vec<f64> = blocks
+                .iter()
+                .map(|&(r0, r1)| seq(self.backend, r0, r1))
+                .collect();
+            fold(&partials, red)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::Native;
+    use super::*;
+    use crate::exec::ExecStrategy;
+
+    #[test]
+    fn tracker_stationary_flow() {
+        let opts = SolveOpts::default();
+        let mut t = ConvergenceTracker::new();
+        assert!(!t.record(1, 4.0, &opts)); // sets reference 4.0
+        assert_eq!(t.reference(), 4.0);
+        assert!(!t.record(2, 1.0, &opts)); // rel = 0.5
+        assert_eq!(t.history, vec![1.0, 0.5]);
+        assert!(t.record(3, 4.0e-14, &opts)); // rel = 1e-7 <= 1e-6
+        assert!(t.converged());
+    }
+
+    #[test]
+    fn tracker_krylov_flow() {
+        let opts = SolveOpts::default();
+        let mut t = ConvergenceTracker::new();
+        t.set_reference(100.0);
+        assert!(!t.pre_check(100.0, &opts));
+        assert!(!t.record(1, 25.0, &opts));
+        assert!(t.pre_check(100.0 * 1e-14, &opts));
+        assert_eq!(t.history.len(), 1);
+    }
+
+    #[test]
+    fn ops_ordered_plan_matches_legacy_blocks() {
+        let exec = Executor::seq();
+        let mut opts = SolveOpts::default();
+        opts.ntasks = 7;
+        opts.task_order_seed = 3;
+        let mut backend = Native;
+        let ops = Ops {
+            exec: &exec,
+            opts: &opts,
+            backend: &mut backend,
+        };
+        let (blocks, red) = ops.ordered_plan(100, 5);
+        assert_eq!(blocks, task_blocks(100, 7));
+        match red {
+            Reduction::Ordered(o) => assert_eq!(o, completion_order(blocks.len(), 3, 5)),
+            Reduction::Tree => panic!("expected ordered reduction"),
+        }
+    }
+
+    #[test]
+    fn ops_dot_matches_plain_kernel_when_single_chunk() {
+        let exec = Executor::seq(); // default chunk_rows ≫ n ⇒ one chunk
+        let opts = SolveOpts::default();
+        let mut backend = Native;
+        let mut ops = Ops {
+            exec: &exec,
+            opts: &opts,
+            backend: &mut backend,
+        };
+        let x: Vec<f64> = (0..300).map(|i| (i as f64).sin()).collect();
+        let y: Vec<f64> = (0..300).map(|i| (i as f64).cos()).collect();
+        let got = ops.dot(&x, &y, 300);
+        let want = kernels::dot(&x, &y, 0, 300);
+        assert_eq!(got.to_bits(), want.to_bits());
+    }
+
+    #[test]
+    fn ops_parallel_spmv_equals_seq() {
+        use crate::mesh::Grid3;
+        use crate::sparse::{LocalSystem, StencilKind};
+        let sys = LocalSystem::build(Grid3::new(6, 6, 10), StencilKind::P7, 0, 1);
+        let n = sys.n();
+        let mut x = sys.new_ext();
+        for (i, v) in x.iter_mut().enumerate().take(n) {
+            *v = (i as f64 * 0.37).sin();
+        }
+        let opts = SolveOpts::default();
+        let mut want = vec![0.0; n];
+        kernels::spmv_ell(&sys.a, &x, &mut want, 0, n);
+        for strategy in [ExecStrategy::Seq, ExecStrategy::ForkJoin, ExecStrategy::TaskPool] {
+            let exec = Executor::new(strategy, 4).with_chunk_rows(16);
+            let mut backend = Native;
+            let mut ops = Ops {
+                exec: &exec,
+                opts: &opts,
+                backend: &mut backend,
+            };
+            let mut y = vec![0.0; n];
+            ops.spmv(&sys.a, &x, &mut y);
+            assert_eq!(y, want, "{strategy:?}");
+        }
+    }
+}

@@ -5,21 +5,28 @@
 //!   each rank runs the true sequential sweep over its own rows, using
 //!   last-exchanged halo values at partition boundaries ("processor- and
 //!   thread-localised GS methods are often employed instead of a true GS
-//!   parallel method", §2).
+//!   parallel method", §2). Inherently sequential per rank: the executor
+//!   never chunks it.
 //! * [`GsVariant::RedBlack`] — the standard task strategy (§3.4): two
 //!   colours by global (x+y+z) parity; same-colour tasks run concurrently
-//!   so cross-block same-colour couplings read the pre-sweep snapshot.
+//!   (really concurrently, under the threaded executor) because
+//!   cross-block same-colour couplings read the pre-sweep snapshot.
 //!   For the 27-point stencil red-black is *not* a valid colouring, which
 //!   is exactly why the paper sees it lose badly there (Fig. 4(d)).
 //! * [`GsVariant::Relaxed`] — the paper's relaxed tasking (§3.4, Code 4):
-//!   plain forward/backward subdomain tasks with only block-local `out`
-//!   dependencies; the data races "mimic the Gauss-Seidel behaviour in
-//!   which previously calculated data are being continuously reused".
-//!   Emulated by executing blocks on the live vector in task-completion
-//!   order (forward) and reversed order (backward).
+//!   plain forward/backward subdomain tasks whose data races "mimic the
+//!   Gauss-Seidel behaviour in which previously calculated data are being
+//!   continuously reused". Emulated by executing blocks on the live
+//!   vector in task-completion order — kept on the calling thread even
+//!   under the threaded executor, because a genuinely racy f64 sweep is
+//!   undefined behaviour in Rust and would also break the cross-strategy
+//!   reproducibility contract (`--exec` must not change histories).
 
-use super::{allreduce_scalar, completion_order, exchange_all, task_blocks};
-use super::{Compute, Problem, SolveOpts, SolveStats};
+use super::{
+    completion_order, task_blocks, Compute, Ops, Problem, RankState, SolveOpts, SolveStats,
+    SolverDriver,
+};
+use crate::exec::Executor;
 use crate::kernels;
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -34,72 +41,52 @@ pub fn solve(
     variant: GsVariant,
     opts: &SolveOpts,
     backend: &mut dyn Compute,
+    exec: &Executor,
 ) -> SolveStats {
-    let nranks = pb.nranks();
-    let mut history = Vec::new();
-    let mut res0 = 0.0;
-    let mut rel = 1.0;
-    let mut iterations = 0;
-    let mut converged = false;
+    let mut drv = SolverDriver::new(exec, opts);
     // distinct tag spaces per phase to keep halo messages separable
     const T_FWD: usize = 0;
     const T_BWD: usize = 1;
 
     for k in 0..opts.max_iters {
-        let mut partials = Vec::with_capacity(nranks);
         // ---- forward sweep ----
-        exchange_all(&mut pb.world, &mut pb.ranks, |st| &mut st.x_ext, 2 * k + T_FWD);
-        for st in &mut pb.ranks {
-            let res = sweep(st, variant, opts, backend, k, true);
-            partials.push(res);
-        }
+        drv.exchange(pb, |st| &mut st.x_ext, 2 * k + T_FWD);
+        let partials = drv.rank_map(pb, backend, |ops, st| {
+            sweep(ops, st, variant, opts, k, true)
+        });
         // ---- backward sweep ----
-        exchange_all(&mut pb.world, &mut pb.ranks, |st| &mut st.x_ext, 2 * k + T_BWD);
-        for st in &mut pb.ranks {
-            sweep(st, variant, opts, backend, k, false);
-        }
+        drv.exchange(pb, |st| &mut st.x_ext, 2 * k + T_BWD);
+        drv.rank_map(pb, backend, |ops, st| {
+            sweep(ops, st, variant, opts, k, false)
+        });
 
         // residual of the iterate entering this iteration (forward pass
         // partials), allreduced — the paper's rTL reduction (Code 4)
-        let res = allreduce_scalar(&mut pb.world, k, 2_000_000, partials);
-        if k == 0 {
-            res0 = res.max(f64::MIN_POSITIVE);
-        }
-        rel = (res / res0).sqrt();
-        history.push(rel);
-        iterations = k + 1;
-        if rel <= opts.eps_rel(res0) {
-            converged = true;
+        let res = drv.allreduce(pb, k, 2_000_000, partials);
+        if drv.conv.record(k + 1, res, opts) {
             break;
         }
     }
 
-    SolveStats {
-        method: match variant {
-            GsVariant::ProcessorLocal => "gs",
-            GsVariant::RedBlack => "gs-rb",
-            GsVariant::Relaxed => "gs-relaxed",
-        },
-        iterations,
-        converged,
-        rel_residual: rel,
-        x_error: pb.x_error(),
-        history,
-        restarts: 0,
-    }
+    let name = match variant {
+        GsVariant::ProcessorLocal => "gs",
+        GsVariant::RedBlack => "gs-rb",
+        GsVariant::Relaxed => "gs-relaxed",
+    };
+    drv.finish(name, pb, 0)
 }
 
 /// One directional sweep on one rank; returns the local residual partial
 /// (squared, measured against pre-update values).
 fn sweep(
-    st: &mut super::RankState,
+    ops: &mut Ops,
+    st: &mut RankState,
     variant: GsVariant,
     opts: &SolveOpts,
-    backend: &mut dyn Compute,
     k: usize,
     forward: bool,
 ) -> f64 {
-    let n = st.n();
+    let n = st.sys.n();
     match variant {
         GsVariant::ProcessorLocal => {
             // true sequential GS over the local rows
@@ -114,35 +101,30 @@ fn sweep(
             let colours: [bool; 2] = if forward { [true, false] } else { [false, true] };
             let mut res = 0.0;
             for colour in colours {
+                let RankState { sys, x_ext, s_ext, .. } = st;
                 if opts.ntasks <= 1 {
                     // single task: sequential within the colour — delegate
                     // to the backend (snapshot semantics for parity with
                     // the XLA artifact when ntasks==0)
-                    res += backend.gs_colour_sweep(
-                        &st.sys.a,
-                        &st.sys.b,
-                        &st.sys.red_mask,
-                        colour,
-                        &mut st.x_ext,
-                    );
+                    res += ops.gs_colour_whole(&sys.a, &sys.b, &sys.red_mask, colour, x_ext);
                 } else {
-                    let blocks = task_blocks(n, opts.ntasks);
-                    let order = completion_order(blocks.len(), opts.task_order_seed, k);
-                    // same-colour tasks are concurrent: snapshot first
-                    st.s_ext.copy_from_slice(&st.x_ext);
-                    for &bi in &order {
-                        let (r0, r1) = blocks[bi];
-                        res += kernels::gs_colour_sweep_blocked(
-                            &st.sys.a,
-                            &st.sys.b,
-                            &st.sys.red_mask,
-                            colour,
-                            &mut st.x_ext,
-                            &st.s_ext,
-                            r0,
-                            r1,
-                        );
-                    }
+                    // same-colour tasks are concurrent: snapshot first,
+                    // then chunk-parallel blocked half-sweeps. Each
+                    // colour folds its own residual partials and the two
+                    // totals are summed — a last-ulp regrouping of the
+                    // pre-refactor single accumulator chain, kept
+                    // because it is what allows the colours to fold
+                    // independently of executor scheduling.
+                    s_ext.copy_from_slice(x_ext);
+                    res += ops.gs_colour_blocked_ordered(
+                        &sys.a,
+                        &sys.b,
+                        &sys.red_mask,
+                        colour,
+                        x_ext,
+                        s_ext,
+                        k,
+                    );
                 }
             }
             res * 0.5 // two half-sweeps each measured half the rows
@@ -151,7 +133,11 @@ fn sweep(
             // forward/backward subdomain tasks racing on x (Code 4):
             // executed on the live vector in completion order
             let blocks = task_blocks(n, opts.ntasks.max(1));
-            let mut order = completion_order(blocks.len(), opts.task_order_seed, 2 * k + usize::from(!forward));
+            let mut order = completion_order(
+                blocks.len(),
+                opts.task_order_seed,
+                2 * k + usize::from(!forward),
+            );
             if !forward {
                 order.reverse();
             }
@@ -183,14 +169,22 @@ mod tests {
 
     #[test]
     fn processor_local_converges() {
-        let s = run(Method::GaussSeidel(GsVariant::ProcessorLocal), 1, &SolveOpts::default());
+        let s = run(
+            Method::GaussSeidel(GsVariant::ProcessorLocal),
+            1,
+            &SolveOpts::default(),
+        );
         assert!(s.converged);
         assert!(s.x_error < 1e-5, "x_err={}", s.x_error);
     }
 
     #[test]
     fn processor_local_multirank_converges() {
-        let s = run(Method::GaussSeidel(GsVariant::ProcessorLocal), 4, &SolveOpts::default());
+        let s = run(
+            Method::GaussSeidel(GsVariant::ProcessorLocal),
+            4,
+            &SolveOpts::default(),
+        );
         assert!(s.converged);
         assert!(s.x_error < 1e-5);
     }

@@ -2,72 +2,43 @@
 //! kernel" (§4.3). Per iteration: halo exchange of x, one fused
 //! sweep+residual kernel, one allreduce of the residual.
 //!
-//! When `opts.ntasks > 0` the sweep executes as per-subdomain blocks in a
-//! shuffled completion order with the residual reduction accumulating in
-//! that order — the task-execution-order nondeterminism of §3.3 (harmless
-//! for Jacobi: blocks are independent, only the reduction reorders).
+//! The sweep runs chunk-parallel under the shared-memory executor (blocks
+//! are independent, so any strategy gives bitwise-identical iterates).
+//! With `opts.ntasks > 0` the residual reduction additionally accumulates
+//! in the seeded task-completion order — the §3.3 nondeterminism
+//! emulation (harmless for Jacobi: only the reduction reorders).
 
-use super::{allreduce_scalar, completion_order, exchange_all, task_blocks};
-use super::{Compute, Problem, SolveOpts, SolveStats};
-use crate::kernels;
+use super::{Compute, Problem, RankState, SolveOpts, SolveStats, SolverDriver};
+use crate::exec::Executor;
 
-pub fn solve(pb: &mut Problem, opts: &SolveOpts, backend: &mut dyn Compute) -> SolveStats {
-    let nranks = pb.nranks();
-    let mut history = Vec::new();
-    let mut res0 = 0.0;
-    let mut rel = 1.0;
-    let mut iterations = 0;
-    let mut converged = false;
+pub fn solve(
+    pb: &mut Problem,
+    opts: &SolveOpts,
+    backend: &mut dyn Compute,
+    exec: &Executor,
+) -> SolveStats {
+    let mut drv = SolverDriver::new(exec, opts);
 
     for k in 0..opts.max_iters {
         // halo exchange of the current iterate
-        exchange_all(&mut pb.world, &mut pb.ranks, |st| &mut st.x_ext, k);
+        drv.exchange(pb, |st| &mut st.x_ext, k);
 
         // fused sweep + local residual, per rank
-        let mut partials = Vec::with_capacity(nranks);
-        for st in &mut pb.ranks {
-            let n = st.n();
-            let res_local = if opts.ntasks == 0 {
-                let r = backend.jacobi_step(&st.sys.a, &st.sys.b, &st.x_ext, &mut st.tmp[..n]);
-                r
-            } else {
-                // task-blocked execution in completion order
-                let blocks = task_blocks(n, opts.ntasks);
-                let order = completion_order(blocks.len(), opts.task_order_seed, k);
-                let mut acc = 0.0;
-                for &bi in &order {
-                    let (r0, r1) = blocks[bi];
-                    acc +=
-                        kernels::jacobi_sweep(&st.sys.a, &st.sys.b, &st.x_ext, &mut st.tmp, r0, r1);
-                }
-                acc
-            };
-            st.x_ext[..n].copy_from_slice(&st.tmp[..n]);
-            partials.push(res_local);
-        }
+        let partials = drv.rank_map(pb, backend, |ops, st| {
+            let n = st.sys.n();
+            let RankState { sys, x_ext, tmp, .. } = st;
+            let res = ops.jacobi_step_ordered(&sys.a, &sys.b, x_ext, tmp, k);
+            x_ext[..n].copy_from_slice(&tmp[..n]);
+            res
+        });
 
-        let res = allreduce_scalar(&mut pb.world, k, 1_000_000, partials);
-        if k == 0 {
-            res0 = res.max(f64::MIN_POSITIVE);
-        }
-        rel = (res / res0).sqrt();
-        history.push(rel);
-        iterations = k + 1;
-        if rel <= opts.eps_rel(res0) {
-            converged = true;
+        let res = drv.allreduce(pb, k, 1_000_000, partials);
+        if drv.conv.record(k + 1, res, opts) {
             break;
         }
     }
 
-    SolveStats {
-        method: "jacobi",
-        iterations,
-        converged,
-        rel_residual: rel,
-        x_error: pb.x_error(),
-        history,
-        restarts: 0,
-    }
+    drv.finish("jacobi", pb, 0)
 }
 
 #[cfg(test)]

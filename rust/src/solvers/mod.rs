@@ -12,14 +12,17 @@
 mod backend;
 mod bicgstab;
 mod cg;
+mod driver;
 mod gauss_seidel;
 mod jacobi;
 
 pub use backend::{Compute, Native};
 pub use bicgstab::BiVariant;
 pub use cg::CgVariant;
+pub use driver::{ConvergenceTracker, Ops, SolverDriver};
 pub use gauss_seidel::GsVariant;
 
+use crate::exec::Executor;
 use crate::mesh::Grid3;
 use crate::simmpi::World;
 use crate::sparse::{LocalSystem, StencilKind};
@@ -209,89 +212,46 @@ impl Problem {
             .fold(0.0, f64::max)
     }
 
-    /// Run `method` to convergence with the given backend.
+    /// Run `method` to convergence with the given backend on the default
+    /// sequential executor.
     pub fn solve(
         &mut self,
         method: Method,
         opts: &SolveOpts,
         backend: &mut dyn Compute,
     ) -> SolveStats {
+        self.solve_with(method, opts, backend, &Executor::seq())
+    }
+
+    /// Run `method` to convergence with the given backend under an
+    /// explicit shared-memory executor (`--threads` / `--exec`). The
+    /// executor changes *who* computes each chunk, never the numbers:
+    /// convergence histories are identical across strategies (see the
+    /// determinism contract in `crate::exec`).
+    pub fn solve_with(
+        &mut self,
+        method: Method,
+        opts: &SolveOpts,
+        backend: &mut dyn Compute,
+        exec: &Executor,
+    ) -> SolveStats {
         // reset state
         for st in &mut self.ranks {
             st.x_ext.iter_mut().for_each(|v| *v = 0.0);
         }
         match method {
-            Method::Jacobi => jacobi::solve(self, opts, backend),
-            Method::GaussSeidel(v) => gauss_seidel::solve(self, v, opts, backend),
-            Method::Cg(v) => cg::solve(self, v, opts, backend),
-            Method::BiCgStab(v) => bicgstab::solve(self, v, opts, backend),
+            Method::Jacobi => jacobi::solve(self, opts, backend, exec),
+            Method::GaussSeidel(v) => gauss_seidel::solve(self, v, opts, backend, exec),
+            Method::Cg(v) => cg::solve(self, v, opts, backend, exec),
+            Method::BiCgStab(v) => bicgstab::solve(self, v, opts, backend, exec),
         }
     }
 }
 
-/// Lockstep halo exchange of a given extended vector on every rank.
-/// `k` is the iteration number (ISODD tag/communicator split).
-pub(crate) fn exchange_all(
-    world: &mut World,
-    ranks: &mut [RankState],
-    which: fn(&mut RankState) -> &mut Vec<f64>,
-    k: usize,
-) {
-    use crate::simmpi::{isodd, HaloExchange};
-    let comm = isodd(k);
-    let tag = k as u64;
-    for st in ranks.iter_mut() {
-        let rank = st.sys.part.rank;
-        let halo = st.sys.halo.clone();
-        let x = which(st);
-        HaloExchange::post_sends(world, rank, &halo, x, tag, comm);
-    }
-    for st in ranks.iter_mut() {
-        let rank = st.sys.part.rank;
-        let halo = st.sys.halo.clone();
-        let x = which(st);
-        let ok = HaloExchange::complete_recvs(world, rank, &halo, x, tag, comm);
-        assert!(ok, "halo deadlock at rank {rank} iteration {k}");
-    }
-}
-
-/// Global sum of one local partial per rank.
-pub(crate) fn allreduce_scalar(world: &mut World, k: usize, tag: u64, partials: Vec<f64>) -> f64 {
-    use crate::simmpi::isodd;
-    let v = world.allreduce_sum(isodd(k), tag, partials.into_iter().map(|p| vec![p]).collect());
-    v[0]
-}
-
-/// Global sum of a pair (fused collectives: ω's numerator/denominator,
-/// or αn together with β — paper lines 10-11 of Algorithm 2).
-pub(crate) fn allreduce_pair(
-    world: &mut World,
-    k: usize,
-    tag: u64,
-    partials: Vec<(f64, f64)>,
-) -> (f64, f64) {
-    use crate::simmpi::isodd;
-    let v = world.allreduce_sum(
-        isodd(k),
-        tag,
-        partials.into_iter().map(|(a, b)| vec![a, b]).collect(),
-    );
-    (v[0], v[1])
-}
-
 /// Block boundaries for `ntasks` subdomains over n rows (the paper's
-/// rowBs split, Code 1 line 7).
+/// rowBs split, Code 1 line 7) — shared with the executor's chunking.
 pub(crate) fn task_blocks(n: usize, ntasks: usize) -> Vec<(usize, usize)> {
-    let nt = ntasks.max(1).min(n.max(1));
-    let bs = n.div_ceil(nt);
-    let mut out = Vec::new();
-    let mut r0 = 0;
-    while r0 < n {
-        let r1 = (r0 + bs).min(n);
-        out.push((r0, r1));
-        r0 = r1;
-    }
-    out
+    crate::exec::split_rows(n, ntasks)
 }
 
 /// A pseudo-random task completion order for one iteration — stands in

@@ -1,0 +1,361 @@
+//! Executor equivalence — the acceptance contract of the exec refactor:
+//! for each kernel and each method, `seq`, `fork-join` and `task` agree
+//! across 1/2/4 threads. Vector kernels must agree *bitwise* (same chunk
+//! decomposition, same scalar kernel per chunk); reductions must agree to
+//! 1e-12 (they are in fact bitwise too, since the fold order is fixed,
+//! but the looser bound is the documented guarantee).
+//!
+//! Chunk granularity is forced small (`with_chunk_rows`) so even the toy
+//! test systems split into many chunks and the parallel paths genuinely
+//! execute — with the default granularity these grids would collapse to
+//! one chunk and the test would prove nothing.
+
+use hlam::exec::{ExecStrategy, Executor};
+use hlam::kernels;
+use hlam::mesh::Grid3;
+use hlam::solvers::{Method, Native, Ops, Problem, SolveOpts, SolveStats};
+use hlam::sparse::{LocalSystem, StencilKind};
+use hlam::util::proptest::forall;
+use hlam::util::Rng;
+
+/// Every (strategy, threads) combination under test. The first entry is
+/// the reference.
+fn executors(chunk_rows: usize) -> Vec<(Executor, String)> {
+    let mut out = Vec::new();
+    for (strategy, threads) in [
+        (ExecStrategy::Seq, 1),
+        (ExecStrategy::ForkJoin, 1),
+        (ExecStrategy::ForkJoin, 2),
+        (ExecStrategy::ForkJoin, 4),
+        (ExecStrategy::TaskPool, 1),
+        (ExecStrategy::TaskPool, 2),
+        (ExecStrategy::TaskPool, 4),
+    ] {
+        out.push((
+            Executor::new(strategy, threads).with_chunk_rows(chunk_rows),
+            format!("{}x{threads}", strategy.name()),
+        ));
+    }
+    out
+}
+
+fn ops<'a>(exec: &'a Executor, opts: &'a SolveOpts, backend: &'a mut Native) -> Ops<'a> {
+    Ops {
+        exec,
+        opts,
+        backend,
+    }
+}
+
+// ---------------------------------------------------------------------
+// kernel-level equivalence
+// ---------------------------------------------------------------------
+
+#[test]
+fn kernel_dot_equivalent_across_executors() {
+    forall(
+        1711,
+        40,
+        |r, s| {
+            let n = 64 + r.below(400 * s.0.max(1));
+            let x: Vec<f64> = (0..n).map(|_| r.normal()).collect();
+            let y: Vec<f64> = (0..n).map(|_| r.normal()).collect();
+            let ntasks = [0usize, 5, 16][r.below(3)];
+            (x, y, ntasks, r.next_u64())
+        },
+        |(x, y, ntasks, seed)| {
+            let n = x.len();
+            let opts = SolveOpts {
+                ntasks: *ntasks,
+                task_order_seed: *seed,
+                ..SolveOpts::default()
+            };
+            let mut reference = None;
+            for (exec, name) in executors(32) {
+                let mut backend = Native;
+                let mut o = ops(&exec, &opts, &mut backend);
+                let plain = o.dot(x, y, n);
+                let ordered = o.dot_ordered(x, y, n, 3);
+                match &reference {
+                    None => reference = Some((plain, ordered)),
+                    Some((p, q)) => {
+                        if (plain - p).abs() > 1e-12 * (1.0 + p.abs()) {
+                            eprintln!("dot mismatch under {name}");
+                            return false;
+                        }
+                        if (ordered - q).abs() > 1e-12 * (1.0 + q.abs()) {
+                            eprintln!("ordered dot mismatch under {name}");
+                            return false;
+                        }
+                    }
+                }
+            }
+            true
+        },
+    );
+}
+
+#[test]
+fn kernel_axpby_bitwise_across_executors() {
+    forall(
+        2711,
+        40,
+        |r, s| {
+            let n = 64 + r.below(300 * s.0.max(1));
+            let x: Vec<f64> = (0..n).map(|_| r.normal()).collect();
+            let y: Vec<f64> = (0..n).map(|_| r.normal()).collect();
+            (x, y, r.normal(), r.normal())
+        },
+        |(x, y0, a, b)| {
+            let n = x.len();
+            let opts = SolveOpts::default();
+            let mut reference: Option<Vec<f64>> = None;
+            for (exec, name) in executors(32) {
+                let mut backend = Native;
+                let mut o = ops(&exec, &opts, &mut backend);
+                let mut y = y0.clone();
+                o.axpby(*a, x, *b, &mut y, n);
+                match &reference {
+                    None => reference = Some(y),
+                    Some(want) => {
+                        if &y != want {
+                            eprintln!("axpby mismatch under {name}");
+                            return false;
+                        }
+                    }
+                }
+            }
+            true
+        },
+    );
+}
+
+#[test]
+fn kernel_spmv_and_jacobi_bitwise_across_executors() {
+    let sys = LocalSystem::build(Grid3::new(8, 8, 14), StencilKind::P7, 0, 1);
+    let n = sys.n();
+    let mut rng = Rng::new(77);
+    let mut x = sys.new_ext();
+    for v in x.iter_mut().take(n) {
+        *v = rng.normal();
+    }
+    let opts = SolveOpts::default();
+
+    let mut want_y = vec![0.0; n];
+    kernels::spmv_ell(&sys.a, &x, &mut want_y, 0, n);
+    let mut want_xn = vec![0.0; n];
+    let want_res = kernels::jacobi_sweep(&sys.a, &sys.b, &x, &mut want_xn, 0, n);
+
+    for (exec, name) in executors(64) {
+        let mut backend = Native;
+        let mut o = ops(&exec, &opts, &mut backend);
+        let mut y = vec![0.0; n];
+        o.spmv(&sys.a, &x, &mut y);
+        assert_eq!(y, want_y, "spmv mismatch under {name}");
+
+        let mut xn = vec![0.0; n];
+        let res = o.jacobi_step_ordered(&sys.a, &sys.b, &x, &mut xn, 0);
+        assert_eq!(xn, want_xn, "jacobi iterate mismatch under {name}");
+        assert!(
+            (res - want_res).abs() <= 1e-12 * (1.0 + want_res.abs()),
+            "jacobi residual mismatch under {name}: {res} vs {want_res}"
+        );
+    }
+}
+
+#[test]
+fn kernel_spmv_dot_fusion_equivalent_across_executors() {
+    let sys = LocalSystem::build(Grid3::new(8, 8, 12), StencilKind::P27, 0, 1);
+    let n = sys.n();
+    let mut rng = Rng::new(13);
+    let mut x = sys.new_ext();
+    for v in x.iter_mut().take(n) {
+        *v = rng.normal();
+    }
+    let p: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+    for ntasks in [0usize, 12] {
+        let opts = SolveOpts {
+            ntasks,
+            task_order_seed: 5,
+            ..SolveOpts::default()
+        };
+        let mut reference: Option<(Vec<f64>, f64)> = None;
+        for (exec, name) in executors(48) {
+            let mut backend = Native;
+            let mut o = ops(&exec, &opts, &mut backend);
+            let mut y = vec![0.0; n];
+            let d = o.spmv_dot_ordered(&sys.a, &x, &mut y, &p, 4);
+            match &reference {
+                None => reference = Some((y, d)),
+                Some((wy, wd)) => {
+                    assert_eq!(&y, wy, "fused spmv vector mismatch under {name}");
+                    assert!(
+                        (d - wd).abs() <= 1e-12 * (1.0 + wd.abs()),
+                        "fused dot mismatch under {name} (ntasks={ntasks})"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn kernel_gs_colour_blocked_bitwise_across_executors() {
+    let sys = LocalSystem::build(Grid3::new(6, 6, 12), StencilKind::P7, 0, 1);
+    let n = sys.n();
+    let mut rng = Rng::new(31);
+    let mut x0 = sys.new_ext();
+    for v in x0.iter_mut().take(n) {
+        *v = rng.normal();
+    }
+    let opts = SolveOpts {
+        ntasks: 9,
+        task_order_seed: 17,
+        ..SolveOpts::default()
+    };
+    let mut reference: Option<(Vec<f64>, f64)> = None;
+    for (exec, name) in executors(32) {
+        let mut backend = Native;
+        let mut o = ops(&exec, &opts, &mut backend);
+        let mut x = x0.clone();
+        let snapshot = x.clone();
+        let res = o.gs_colour_blocked_ordered(
+            &sys.a,
+            &sys.b,
+            &sys.red_mask,
+            true,
+            &mut x,
+            &snapshot,
+            2,
+        );
+        match &reference {
+            None => reference = Some((x, res)),
+            Some((wx, wres)) => {
+                assert_eq!(&x, wx, "gs blocked iterate mismatch under {name}");
+                assert!(
+                    (res - wres).abs() <= 1e-12 * (1.0 + wres.abs()),
+                    "gs blocked residual mismatch under {name}"
+                );
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// method-level equivalence: identical convergence histories
+// ---------------------------------------------------------------------
+
+const ALL_METHODS: [&str; 8] = [
+    "jacobi",
+    "gs",
+    "gs-rb",
+    "gs-relaxed",
+    "cg",
+    "cg-nb",
+    "bicgstab",
+    "bicgstab-b1",
+];
+
+fn run_with(method: &str, opts: &SolveOpts, exec: &Executor) -> SolveStats {
+    let mut pb = Problem::build(Grid3::new(6, 6, 12), StencilKind::P7, 2);
+    pb.solve_with(Method::parse(method).unwrap(), opts, &mut Native, exec)
+}
+
+fn assert_identical(a: &SolveStats, b: &SolveStats, ctx: &str) {
+    assert_eq!(a.iterations, b.iterations, "{ctx}: iteration count");
+    assert_eq!(a.converged, b.converged, "{ctx}: convergence flag");
+    assert_eq!(a.restarts, b.restarts, "{ctx}: restart count");
+    assert_eq!(
+        a.rel_residual.to_bits(),
+        b.rel_residual.to_bits(),
+        "{ctx}: final residual"
+    );
+    assert_eq!(a.x_error.to_bits(), b.x_error.to_bits(), "{ctx}: x error");
+    assert_eq!(a.history.len(), b.history.len(), "{ctx}: history length");
+    for (i, (ha, hb)) in a.history.iter().zip(&b.history).enumerate() {
+        assert_eq!(
+            ha.to_bits(),
+            hb.to_bits(),
+            "{ctx}: history[{i}] {ha} vs {hb}"
+        );
+    }
+}
+
+#[test]
+fn all_methods_identical_histories_across_executors() {
+    for method in ALL_METHODS {
+        let mut opts = SolveOpts::default();
+        if method.starts_with("gs-") {
+            opts.ntasks = 6;
+            opts.task_order_seed = 3;
+        }
+        let reference = run_with(method, &opts, &Executor::seq().with_chunk_rows(24));
+        assert!(reference.converged, "{method}: reference did not converge");
+        for (exec, name) in executors(24) {
+            let got = run_with(method, &opts, &exec);
+            assert_identical(&reference, &got, &format!("{method} under {name}"));
+        }
+    }
+}
+
+#[test]
+fn all_methods_identical_histories_with_task_order_seeds() {
+    // §3.3 seeded task-order runs must also be executor-independent: the
+    // shuffle is part of the *plan* (fold order), not of the schedule.
+    for method in ALL_METHODS {
+        let mut opts = SolveOpts::default();
+        opts.ntasks = 8;
+        opts.task_order_seed = 42;
+        let reference = run_with(method, &opts, &Executor::seq().with_chunk_rows(24));
+        for (exec, name) in executors(24) {
+            let got = run_with(method, &opts, &exec);
+            assert_identical(
+                &reference,
+                &got,
+                &format!("{method} (seeded) under {name}"),
+            );
+        }
+    }
+}
+
+#[test]
+fn default_executor_unchanged_from_plain_solve() {
+    // Problem::solve (no executor argument) must behave exactly like an
+    // explicit sequential executor — the API refactor is behaviourally
+    // invisible to existing callers.
+    for method in ["cg", "bicgstab-b1", "jacobi"] {
+        let opts = SolveOpts::default();
+        let mut p1 = Problem::build(Grid3::new(6, 6, 12), StencilKind::P7, 2);
+        let s1 = p1.solve(Method::parse(method).unwrap(), &opts, &mut Native);
+        let s2 = run_with(method, &opts, &Executor::seq());
+        // run_with uses the same grid/ranks; chunk_rows default in both
+        assert_identical(&s1, &s2, method);
+    }
+}
+
+#[test]
+fn executor_threads_scale_spmv_correctly_not_just_fast() {
+    // sanity on a larger grid: many chunks, all strategies still bitwise
+    // equal (this is the shape the benches measure for speedup).
+    let sys = LocalSystem::build(Grid3::new(16, 16, 32), StencilKind::P7, 0, 1);
+    let n = sys.n();
+    let mut rng = Rng::new(3);
+    let mut x = sys.new_ext();
+    for v in x.iter_mut().take(n) {
+        *v = rng.normal();
+    }
+    let mut want = vec![0.0; n];
+    kernels::spmv_ell(&sys.a, &x, &mut want, 0, n);
+    let opts = SolveOpts::default();
+    for (exec, name) in executors(256) {
+        assert!(
+            exec.blocks(n, usize::MAX).len() > 8,
+            "{name}: expected many chunks"
+        );
+        let mut backend = Native;
+        let mut o = ops(&exec, &opts, &mut backend);
+        let mut y = vec![0.0; n];
+        o.spmv(&sys.a, &x, &mut y);
+        assert_eq!(y, want, "{name}");
+    }
+}

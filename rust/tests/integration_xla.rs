@@ -122,39 +122,45 @@ fn xla_primitives_match_native() {
     // spmv
     let mut y1 = vec![0.0; n];
     let mut y2 = vec![0.0; n];
-    nat.spmv(&sys.a, &x_ext, &mut y1);
-    xc.spmv(&sys.a, &x_ext, &mut y2);
+    nat.spmv(&sys.a, &x_ext, &mut y1, 0, n);
+    xc.spmv(&sys.a, &x_ext, &mut y2, 0, n);
     for i in 0..n {
         assert!((y1[i] - y2[i]).abs() < 1e-11, "spmv row {i}");
     }
     // dot
-    let d1 = nat.dot(&x_ext[..n], &y);
-    let d2 = xc.dot(&x_ext[..n], &y);
+    let d1 = nat.dot(&x_ext[..n], &y, 0, n);
+    let d2 = xc.dot(&x_ext[..n], &y, 0, n);
     assert!((d1 - d2).abs() < 1e-9 * (1.0 + d1.abs()));
     // axpby
     let mut a1 = y.clone();
     let mut a2 = y.clone();
-    nat.axpby(1.5, &x_ext[..n], -0.25, &mut a1);
-    xc.axpby(1.5, &x_ext[..n], -0.25, &mut a2);
+    nat.axpby(1.5, &x_ext[..n], -0.25, &mut a1, 0, n);
+    xc.axpby(1.5, &x_ext[..n], -0.25, &mut a2, 0, n);
     for i in 0..n {
         assert!((a1[i] - a2[i]).abs() < 1e-12, "axpby {i}");
     }
     // waxpby
     let mut z1 = y.clone();
     let mut z2 = y.clone();
-    nat.waxpby(0.5, &x_ext[..n], 2.0, &y1, -1.0, &mut z1);
-    xc.waxpby(0.5, &x_ext[..n], 2.0, &y1, -1.0, &mut z2);
+    nat.waxpby(0.5, &x_ext[..n], 2.0, &y1, -1.0, &mut z1, 0, n);
+    xc.waxpby(0.5, &x_ext[..n], 2.0, &y1, -1.0, &mut z2, 0, n);
     for i in 0..n {
         assert!((z1[i] - z2[i]).abs() < 1e-11, "waxpby {i}");
     }
     // jacobi step
     let mut j1 = vec![0.0; n];
     let mut j2 = vec![0.0; n];
-    let r1 = nat.jacobi_step(&sys.a, &sys.b, &x_ext, &mut j1);
-    let r2 = xc.jacobi_step(&sys.a, &sys.b, &x_ext, &mut j2);
+    let r1 = nat.jacobi_step(&sys.a, &sys.b, &x_ext, &mut j1, 0, n);
+    let r2 = xc.jacobi_step(&sys.a, &sys.b, &x_ext, &mut j2, 0, n);
     assert!((r1 - r2).abs() < 1e-8 * (1.0 + r1.abs()));
     for i in 0..n {
         assert!((j1[i] - j2[i]).abs() < 1e-11, "jacobi {i}");
+    }
+    // partial-range calls fall back to the native kernels
+    let mut y3 = vec![0.0; n];
+    xc.spmv(&sys.a, &x_ext, &mut y3, 0, n / 2);
+    for i in 0..n / 2 {
+        assert!((y3[i] - y1[i]).abs() < 1e-11, "partial spmv row {i}");
     }
 }
 
