@@ -22,6 +22,21 @@ fn main() {
     });
     println!("{}", r.report());
 
+    // the same real-numerics table over the ranks × threads hybrid path:
+    // genuinely concurrent rank threads, task-pool executor per rank —
+    // identical counts (transport determinism contract), real overlap
+    let hybrid = HarnessOpts {
+        ranks: 2,
+        transport: hlam::simmpi::TransportKind::Threaded,
+        exec: hlam::exec::ExecStrategy::TaskPool,
+        threads: 2,
+        ..opts.clone()
+    };
+    let r = bench("table §4.1 (2 ranks × 2 threads, threaded)", || {
+        harness::iteration_table(&out, &hybrid).len()
+    });
+    println!("{}", r.report());
+
     let r = bench("fig 1 traces", || harness::fig1(&out).len());
     println!("{}", r.report());
 

@@ -8,9 +8,11 @@
 //! The executor section uses a 128³ system (the paper's per-rank weak
 //! scaling size) — set HLAM_BENCH_SMALL=1 to shrink it for quick runs.
 
-use hlam::exec::{ExecStrategy, Executor, Reduction, SharedRows};
+use hlam::exec::{ExecSpec, ExecStrategy, Executor, Reduction, SharedRows};
 use hlam::kernels;
 use hlam::mesh::Grid3;
+use hlam::simmpi::TransportKind;
+use hlam::solvers::{Method, Problem, SolveOpts};
 use hlam::sparse::{CsrMatrix, LocalSystem, StencilKind};
 use hlam::util::bench::{bench, gbps};
 use hlam::util::Rng;
@@ -145,6 +147,13 @@ fn main() {
     }
     println!();
 
+    // Hybrid ranks × threads grid on the production-size system: real
+    // concurrent ranks (ThreadedTransport) × real threads (task pool) —
+    // the repo's first genuinely hybrid strong/weak scaling numbers.
+    // Fixed iteration count (eps = 0 never converges) so every
+    // configuration does identical work; single timed run per cell.
+    hybrid_grid(std::env::var("HLAM_BENCH_SMALL").is_ok());
+
     // XLA dispatch cost comparison (artifact-backed kernels)
     if let Ok(rt) = hlam::runtime::Runtime::load("artifacts") {
         use hlam::solvers::Compute;
@@ -170,4 +179,72 @@ fn main() {
     } else {
         println!("(artifacts missing — XLA benches skipped; run `make artifacts`)");
     }
+}
+
+/// Strong + weak hybrid scaling over a ranks × threads grid, CG with a
+/// fixed iteration count under the threaded transport.
+fn hybrid_grid(small: bool) {
+    use std::time::Instant;
+    let (nx, ny, nz) = if small { (32, 32, 32) } else { (128, 128, 128) };
+    let iters = 4;
+    let opts = SolveOpts {
+        eps: 0.0, // never converges: exactly `iters` iterations of work
+        max_iters: iters,
+        ..SolveOpts::default()
+    };
+    let method = Method::parse("cg").unwrap();
+    let ranks_list = [1usize, 2, 4];
+    let threads_list = [1usize, 2, 4];
+
+    println!(
+        "== hybrid ranks × threads scaling (CG, {iters} fixed iters, 7-pt, threaded transport) ==\n"
+    );
+    // strong scaling: fixed {nx}x{ny}x{nz} global system
+    let strong = Grid3::new(nx, ny, nz);
+    let mut t_base = 0.0;
+    for &ranks in &ranks_list {
+        for &threads in &threads_list {
+            let spec = ExecSpec::new(ExecStrategy::TaskPool, threads);
+            let mut pb = Problem::build(strong, StencilKind::P7, ranks);
+            let t0 = Instant::now();
+            let s = pb.solve_hybrid(method, &opts, &spec, TransportKind::Threaded);
+            let dt = t0.elapsed().as_secs_f64();
+            std::hint::black_box(s.rel_residual);
+            if ranks == 1 && threads == 1 {
+                t_base = dt;
+            }
+            println!(
+                "strong {nx}x{ny}x{nz}  ranks={ranks} threads={threads}: {:>8.3}s  \
+                 speedup x{:.2}  (concurrent ranks {})",
+                dt,
+                t_base / dt,
+                pb.stats.max_concurrent_ranks
+            );
+        }
+    }
+    println!();
+    // weak scaling: constant z-extent per rank, threads fixed
+    let threads = 2;
+    let nz_per_rank = nz / 4;
+    let mut t_one = 0.0;
+    for &ranks in &ranks_list {
+        let grid = Grid3::new(nx, ny, nz_per_rank * ranks);
+        let spec = ExecSpec::new(ExecStrategy::TaskPool, threads);
+        let mut pb = Problem::build(grid, StencilKind::P7, ranks);
+        let t0 = Instant::now();
+        let s = pb.solve_hybrid(method, &opts, &spec, TransportKind::Threaded);
+        let dt = t0.elapsed().as_secs_f64();
+        std::hint::black_box(s.rel_residual);
+        if ranks == 1 {
+            t_one = dt;
+        }
+        println!(
+            "weak   {nx}x{ny}x{}  ranks={ranks} threads={threads}: {:>8.3}s  \
+             efficiency {:.2}",
+            nz_per_rank * ranks,
+            dt,
+            t_one / dt
+        );
+    }
+    println!();
 }

@@ -174,6 +174,46 @@ impl SharedRows {
 /// hundreds of chunks.
 pub const DEFAULT_CHUNK_ROWS: usize = 4096;
 
+/// Buildable description of an [`Executor`] — what the transport layer
+/// hands to every rank thread so each rank can own its *own* executor
+/// (worker pools must not be shared across concurrently-running ranks).
+/// Because the chunk decomposition depends only on `chunk_rows` (never on
+/// strategy or thread count), two executors built from the same spec — or
+/// even from specs differing only in strategy/threads — produce identical
+/// numerics (the determinism contract above).
+#[derive(Debug, Clone)]
+pub struct ExecSpec {
+    pub strategy: ExecStrategy,
+    pub threads: usize,
+    /// Chunk-granularity override (`None` = [`DEFAULT_CHUNK_ROWS`]).
+    pub chunk_rows: Option<usize>,
+}
+
+impl ExecSpec {
+    pub fn new(strategy: ExecStrategy, threads: usize) -> Self {
+        ExecSpec {
+            strategy,
+            threads,
+            chunk_rows: None,
+        }
+    }
+
+    pub fn with_chunk_rows(mut self, rows: usize) -> Self {
+        self.chunk_rows = Some(rows);
+        self
+    }
+
+    /// Materialise an executor (spawns the worker pool for the task
+    /// strategy — build once per rank, not per kernel call).
+    pub fn build(&self) -> Executor {
+        let exec = Executor::new(self.strategy, self.threads);
+        match self.chunk_rows {
+            Some(rows) => exec.with_chunk_rows(rows),
+            None => exec,
+        }
+    }
+}
+
 /// Upper bound on chunks per kernel call (keeps scheduling overhead and
 /// partial-vector size bounded at very large n).
 pub const MAX_CHUNKS: usize = 512;

@@ -9,11 +9,12 @@
 use std::fmt::Write as _;
 use std::path::Path;
 
-use crate::exec::{ExecStrategy, Executor};
+use crate::exec::{ExecSpec, ExecStrategy};
 use crate::machine::MachineModel;
 use crate::mesh::Grid3;
+use crate::simmpi::TransportKind;
 use crate::simulator::{repeat_runs, simulate_run, ExecModel, RunConfig};
-use crate::solvers::{Method, Native, Problem, SolveOpts};
+use crate::solvers::{Method, Problem, SolveOpts};
 use crate::sparse::StencilKind;
 use crate::stats::{median, strong_efficiency, weak_efficiency, BoxStats};
 use crate::trace::build_trace;
@@ -69,6 +70,15 @@ pub struct HarnessOpts {
     /// Measured thread count: drives the real-numerics executor and, when
     /// non-zero, overrides cores-per-rank in the simulated timing runs.
     pub threads: usize,
+    /// Measured rank count: when non-zero, drives the real-numerics rank
+    /// dimension and overrides ranks-per-node for the hybrid execution
+    /// models in the simulated timing runs (the measured rank concurrency
+    /// feeding the machine model). 0 = per-table defaults.
+    pub ranks: usize,
+    /// Transport discipline for the real-numerics experiments: the
+    /// lockstep oracle or genuinely concurrent rank threads. Histories
+    /// are bitwise identical either way (transport determinism contract).
+    pub transport: TransportKind,
 }
 
 impl Default for HarnessOpts {
@@ -81,6 +91,8 @@ impl Default for HarnessOpts {
             ntasks_p27: 1500,
             exec: ExecStrategy::Seq,
             threads: 0,
+            ranks: 0,
+            transport: TransportKind::Lockstep,
         }
     }
 }
@@ -101,13 +113,27 @@ impl HarnessOpts {
         }
     }
 
-    /// Shared-memory executor for the real-numerics experiments.
-    pub fn executor(&self) -> Executor {
-        Executor::new(self.exec, self.threads.max(1))
+    /// Per-rank shared-memory executor spec for the real-numerics
+    /// experiments (each rank builds its own executor from this).
+    pub fn exec_spec(&self) -> ExecSpec {
+        ExecSpec::new(self.exec, self.threads.max(1))
+    }
+
+    /// Rank count for a real-numerics table, defaulting per table.
+    fn table_ranks(&self, default: usize) -> usize {
+        if self.ranks > 0 {
+            self.ranks
+        } else {
+            default
+        }
     }
 
     fn measured_threads(&self) -> Option<usize> {
         (self.threads > 0).then_some(self.threads)
+    }
+
+    fn measured_ranks(&self) -> Option<usize> {
+        (self.ranks > 0).then_some(self.ranks)
     }
 }
 
@@ -154,13 +180,18 @@ pub fn weak_config(
         ntasks: opts.ntasks(kind),
         seed: opts.seed,
         noise: true,
-        // measured thread counts only make sense for the hybrid models;
-        // the MPI-only baseline is 1 core per rank by definition and
-        // must not inherit the override
+        // measured thread/rank counts only make sense for the hybrid
+        // models; the MPI-only baseline is 1 core per rank (48 ranks per
+        // node) by definition and must not inherit the overrides
         threads: if model == ExecModel::MpiOnly {
             None
         } else {
             opts.measured_threads()
+        },
+        ranks: if model == ExecModel::MpiOnly {
+            None
+        } else {
+            opts.measured_ranks()
         },
     }
 }
@@ -192,18 +223,21 @@ fn write_file(out_dir: &Path, name: &str, content: &str) {
 /// report measured iteration counts next to the paper's. Reduced scale
 /// lowers ||b|| and hence the absolute-ε iteration counts slightly; the
 /// orderings and regime gap (7-pt fast / 27-pt slow) must match. Runs
-/// under `hopts`'s shared-memory executor — counts are identical for
-/// every `--exec`/`--threads` combination (executor determinism
-/// contract), which `tests/integration_exec.rs` asserts.
+/// under `hopts`'s transport × executor configuration — at a fixed rank
+/// count the measured counts are identical for every
+/// `--transport`/`--exec`/`--threads` combination (transport + executor
+/// determinism contracts, asserted by `tests/integration_exec.rs`);
+/// changing `--ranks` changes the partition and the cross-rank
+/// reduction grouping, so counts may legitimately shift by a little.
 pub fn iteration_table(out_dir: &Path, hopts: &HarnessOpts) -> String {
     let quick = hopts.quick;
-    let exec = hopts.executor();
+    let spec = hopts.exec_spec();
     let grid = if quick {
         Grid3::new(16, 16, 32)
     } else {
         Grid3::new(32, 32, 64)
     };
-    let nranks = 4;
+    let nranks = hopts.table_ranks(4);
     let mut csv = String::from("method,stencil,measured_iters,paper_iters,converged,x_error\n");
     let mut table = format!(
         "§4.1 iteration counts (grid {}x{}x{} / {} ranks, absolute eps=1e-6; paper at 128³/rank)\n\
@@ -231,7 +265,8 @@ pub fn iteration_table(out_dir: &Path, hopts: &HarnessOpts) -> String {
                 opts.task_order_seed = 11;
             }
             let mut pb = Problem::build(grid, kind, nranks);
-            let stats = pb.solve_with(Method::parse(method).unwrap(), &opts, &mut Native, &exec);
+            let stats =
+                pb.solve_hybrid(Method::parse(method).unwrap(), &opts, &spec, hopts.transport);
             let paper = paper_iterations(method, kind);
             let _ = writeln!(
                 csv,
@@ -643,7 +678,8 @@ pub fn latency_table(out_dir: &Path) -> String {
 /// §4.3 GS iteration counts by implementation (27-pt, real numerics).
 pub fn gs_iteration_table(out_dir: &Path, hopts: &HarnessOpts) -> String {
     let quick = hopts.quick;
-    let exec = hopts.executor();
+    let spec = hopts.exec_spec();
+    let nranks = hopts.table_ranks(2);
     let grid = if quick {
         Grid3::new(12, 12, 24)
     } else {
@@ -668,8 +704,9 @@ pub fn gs_iteration_table(out_dir: &Path, hopts: &HarnessOpts) -> String {
         };
         opts.ntasks = ntasks;
         opts.task_order_seed = seed;
-        let mut pb = Problem::build(grid, StencilKind::P27, 2);
-        let stats = pb.solve_with(Method::parse(method).unwrap(), &opts, &mut Native, &exec);
+        let mut pb = Problem::build(grid, StencilKind::P27, nranks);
+        let stats =
+            pb.solve_hybrid(Method::parse(method).unwrap(), &opts, &spec, hopts.transport);
         let _ = writeln!(csv, "{label},{},{paper}", stats.iterations);
         let _ = writeln!(
             out,

@@ -4,14 +4,15 @@
 //! iterative methods via hybrid parallelism"* (Martinez-Ferrer, Arslan,
 //! Beltran — JPDC 2023) as a three-layer Rust + JAX + Pallas system.
 //!
-//! Layer 3 (this crate) is the coordinator: solvers, the *real*
+//! Layer 3 (this crate) is the coordinator: solvers with per-rank
+//! iteration loops over a pluggable transport (`simmpi::Transport` —
+//! lockstep oracle or genuinely concurrent rank threads), the *real*
 //! shared-memory executor (`exec` — fork-join scoped threads or a
-//! dependency-aware task pool), simulated distributed runtimes (MPI /
-//! fork-join / task-dataflow), the MareNostrum 4 machine model, the
-//! discrete-event simulator that regenerates the paper's figures, and
-//! the PJRT runtime that executes the AOT-compiled JAX/Pallas artifacts.
-//! Python (layers 1-2) runs only at build time — see DESIGN.md at the
-//! repo root.
+//! dependency-aware task pool) giving true hybrid ranks × threads
+//! execution, the MareNostrum 4 machine model, the discrete-event
+//! simulator that regenerates the paper's figures, and the PJRT runtime
+//! that executes the AOT-compiled JAX/Pallas artifacts. Python (layers
+//! 1-2) runs only at build time — see DESIGN.md at the repo root.
 
 pub mod exec;
 pub mod harness;

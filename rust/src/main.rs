@@ -9,6 +9,8 @@
 //!
 //! Examples:
 //!   hlam solve --method cg --grid 16x16x32 --stencil 7 --ranks 2
+//!   hlam solve --method cg --grid 32x32x64 --ranks 4 --transport threaded \
+//!              --exec task --threads 4
 //!   hlam solve --method cg --backend xla --grid 8x8x8 --stencil 7
 //!   hlam figures --all --out results
 //!   hlam figures --fig 3 --quick
@@ -18,11 +20,12 @@
 use std::path::PathBuf;
 use std::rc::Rc;
 
-use hlam::exec::{ExecStrategy, Executor};
+use hlam::exec::{ExecSpec, ExecStrategy, Executor};
 use hlam::harness::{self, HarnessOpts};
 use hlam::mesh::Grid3;
 use hlam::runtime::{Runtime, XlaCompute};
-use hlam::solvers::{Method, Native, Problem, SolveOpts};
+use hlam::simmpi::TransportKind;
+use hlam::solvers::{Method, Problem, SolveOpts};
 use hlam::sparse::StencilKind;
 use hlam::util::Args;
 
@@ -48,10 +51,10 @@ fn usage() {
          \n\
          solve   --method cg|cg-nb|bicgstab|bicgstab-b1|jacobi|gs|gs-rb|gs-relaxed\n\
         \x20        --grid NXxNYxNZ --stencil 7|27 --ranks N --backend native|xla\n\
-        \x20        --exec seq|fork-join|task --threads N\n\
+        \x20        --transport lockstep|threaded --exec seq|fork-join|task --threads N\n\
         \x20        --eps 1e-6 --ntasks N --task-seed S --artifacts DIR\n\
          figures --all | --fig 1|2|3|4|5|6|iters|gs-iters|granularity|latency|headline\n\
-        \x20        --out DIR --reps N --quick\n\
+        \x20        --out DIR --reps N --quick --ranks N --transport lockstep|threaded\n\
          trace   --methods cg,cg-nb --out DIR\n\
          sweep   --granularity [--out DIR]\n\
          sizes   [--artifacts DIR]"
@@ -65,6 +68,11 @@ fn parse_grid(s: &str) -> Grid3 {
         .collect();
     assert_eq!(dims.len(), 3, "grid must be NXxNYxNZ");
     Grid3::new(dims[0], dims[1], dims[2])
+}
+
+fn parse_transport(args: &Args) -> TransportKind {
+    TransportKind::parse(&args.str_or("transport", "lockstep"))
+        .unwrap_or_else(|| panic!("--transport expects lockstep|threaded"))
 }
 
 fn cmd_solve(args: &Args) {
@@ -82,17 +90,26 @@ fn cmd_solve(args: &Args) {
     };
     opts.max_iters = args.usize_or("max-iters", 10_000);
 
-    // real shared-memory execution: --exec seq|fork-join|task --threads N
+    // real hybrid execution: ranks (--transport) × threads (--exec)
     let strategy = ExecStrategy::parse(&args.str_or("exec", "seq"))
         .unwrap_or_else(|| panic!("--exec expects seq|fork-join|task"));
     let threads = args.usize_or("threads", 1);
-    let exec = Executor::new(strategy, threads);
+    let transport = parse_transport(args);
+    let spec = ExecSpec::new(strategy, threads);
 
     let mut pb = Problem::build(grid, kind, nranks);
     let backend_name = args.str_or("backend", "native");
     let stats = match backend_name.as_str() {
-        "native" => pb.solve_with(method, &opts, &mut Native, &exec),
+        "native" => pb.solve_hybrid(method, &opts, &spec, transport),
         "xla" => {
+            // The XLA backend executes whole-vector artifacts through one
+            // PJRT client; it is not thread-safe, so the serialised
+            // lockstep transport is the only one that may share it.
+            assert!(
+                transport == TransportKind::Lockstep,
+                "--backend xla supports --transport lockstep only \
+                 (the PJRT client is shared across ranks)"
+            );
             let rt = Rc::new(
                 Runtime::load(args.str_or("artifacts", "artifacts"))
                     .expect("load artifacts"),
@@ -101,6 +118,7 @@ fn cmd_solve(args: &Args) {
             let (n, w, n_ext) = (st.n(), kind.width(), st.sys.part.n_ext());
             let mut xc = XlaCompute::new(rt, n, w, n_ext)
                 .expect("artifacts for this size (see `hlam sizes`)");
+            let exec = Executor::new(strategy, threads);
             let stats = pb.solve_with(method, &opts, &mut xc, &exec);
             println!("xla executions: {}", xc.calls.borrow());
             stats
@@ -108,27 +126,38 @@ fn cmd_solve(args: &Args) {
         other => panic!("unknown backend '{other}'"),
     };
     println!(
-        "method={} backend={} grid={}x{}x{} w={} ranks={} exec={} threads={}",
+        "method={} backend={} grid={}x{}x{} w={} ranks={} transport={} exec={} threads={}",
         stats.method, backend_name, grid.nx, grid.ny, grid.nz,
-        kind.width(), nranks, strategy.name(), exec.threads()
+        kind.width(), nranks, transport.name(), strategy.name(), threads
     );
     println!(
         "iterations={} converged={} rel_residual={:.3e} x_error={:.3e} restarts={}",
         stats.iterations, stats.converged, stats.rel_residual, stats.x_error, stats.restarts
     );
     println!(
-        "p2p_msgs={} p2p_bytes={} allreduces={}",
-        pb.world.stats.p2p_messages, pb.world.stats.p2p_bytes, pb.world.stats.allreduces
+        "p2p_msgs={} p2p_bytes={} allreduces={} rank_threads={} max_concurrent_ranks={}",
+        pb.stats.p2p_messages,
+        pb.stats.p2p_bytes,
+        pb.stats.allreduces,
+        pb.stats.rank_threads,
+        pb.stats.max_concurrent_ranks
     );
 
     // project the measured configuration onto the machine model: the
-    // strategy maps to its paper execution model and the measured thread
-    // count overrides the nominal cores-per-rank (DESIGN.md §2-§3)
+    // strategy maps to its paper execution model, the measured thread
+    // count overrides the nominal cores-per-rank, and — for genuinely
+    // concurrent transports — the measured rank concurrency overrides
+    // the nominal ranks-per-node (DESIGN.md §2-§3-§5)
     let model = hlam::simulator::ExecModel::from_strategy(strategy);
     let mut hopts = HarnessOpts {
         threads,
         ..Default::default()
     };
+    if transport == TransportKind::Threaded {
+        // rank_threads is the measured count of concurrently-alive rank
+        // threads (deterministic thread-id accounting)
+        hopts.ranks = pb.stats.rank_threads.max(1);
+    }
     if opts.ntasks > 0 {
         // carry the measured task granularity (and its seed) into the
         // projection instead of the paper defaults
@@ -139,8 +168,9 @@ fn cmd_solve(args: &Args) {
     let cfg = harness::weak_config(model, stats.method, kind, 1, &hopts);
     let proj = hlam::simulator::simulate_run(&cfg);
     println!(
-        "machine-model projection ({}, 1 node, {} iters): {:.3}s",
+        "machine-model projection ({}, 1 node, {} ranks/node, {} iters): {:.3}s",
         model.name(),
+        cfg.nranks(),
         cfg.iterations,
         proj.total_time
     );
@@ -155,6 +185,8 @@ fn cmd_figures(args: &Args) {
         exec: ExecStrategy::parse(&args.str_or("exec", "seq"))
             .unwrap_or_else(|| panic!("--exec expects seq|fork-join|task")),
         threads: args.usize_or("threads", 0),
+        ranks: args.usize_or("ranks", 0),
+        transport: parse_transport(args),
         ..Default::default()
     };
     let which = if args.flag("all") {

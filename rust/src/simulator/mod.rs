@@ -137,11 +137,19 @@ pub struct RunConfig {
     /// the model's cores-per-rank so hardware measurements feed the
     /// machine model. `None` = the model's nominal socket width.
     pub threads: Option<usize>,
+    /// Measured rank concurrency from a real `simmpi` threaded-transport
+    /// run (ranks per node); overrides the model's nominal
+    /// ranks-per-node so hardware measurements feed the machine model.
+    /// `None` = the model's nominal layout.
+    pub ranks: Option<usize>,
 }
 
 impl RunConfig {
     pub fn nranks(&self) -> usize {
-        self.model.ranks_per_node(&self.machine) * self.nodes
+        self.ranks
+            .unwrap_or_else(|| self.model.ranks_per_node(&self.machine))
+            .max(1)
+            * self.nodes
     }
 
     /// Cores one rank computes with: the measured thread count when set,
@@ -431,6 +439,7 @@ mod tests {
             seed: 42,
             noise: true,
             threads: None,
+            ranks: None,
         }
         .tap(|c| {
             let _ = rpn;
@@ -445,6 +454,22 @@ mod tests {
         }
     }
     impl<T> Tap for T {}
+
+    #[test]
+    fn measured_ranks_override_feeds_nranks() {
+        // the measured rank concurrency of a real threaded-transport run
+        // replaces the model's nominal ranks-per-node
+        let mut cfg = base_cfg(ExecModel::MpiOssTask, "cg");
+        let nominal = cfg.nranks();
+        assert_eq!(
+            nominal,
+            cfg.model.ranks_per_node(&cfg.machine) * cfg.nodes
+        );
+        cfg.ranks = Some(4);
+        assert_eq!(cfg.nranks(), 4 * cfg.nodes);
+        // rows per rank shrink accordingly (weak-scaling accounting)
+        assert!(cfg.rows_per_rank() > 0.0);
+    }
 
     #[test]
     fn reference_time_magnitude() {

@@ -3,6 +3,14 @@
 //! the three barriers can be overlapped; one blocking allreduce remains
 //! at line 3).
 //!
+//! Both loops run *per rank* against a [`Transport`] handle. In B1 the
+//! two overlappable collectives are genuinely nonblocking: the ω pair is
+//! posted before the Tk 3 x_{j+1/2} update and the (αn, β) pair before
+//! the Tk 5 p_{j+1/2} update, so under the threaded transport the
+//! updates really run while the contributions are in flight (per-rank
+//! arithmetic order is unchanged — histories stay bitwise identical to
+//! the lockstep oracle).
+//!
 //! The restart procedure (lines 13-15) is the paper's defence against the
 //! near-breakdown that task-reordered reductions aggravate (§3.3): when
 //! the r'-residual correlation αn drops below the restart threshold, the
@@ -14,8 +22,9 @@
 //! (`8k + salt`) so seeded task-order runs reproduce pre-refactor
 //! histories bit for bit.
 
-use super::{Compute, Problem, RankState, SolveOpts, SolveStats, SolverDriver};
+use super::{Compute, Ops, RankState, SolveOpts, SolveStats, SolverDriver};
 use crate::exec::Executor;
+use crate::simmpi::Transport;
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum BiVariant {
@@ -28,36 +37,41 @@ fn key(k: usize, salt: usize) -> usize {
     8 * k + salt
 }
 
-pub fn solve(
-    pb: &mut Problem,
+pub fn solve_rank(
+    st: &mut RankState,
+    tp: &mut dyn Transport,
     variant: BiVariant,
     opts: &SolveOpts,
     backend: &mut dyn Compute,
     exec: &Executor,
 ) -> SolveStats {
     match variant {
-        BiVariant::Classic => classic(pb, opts, backend, exec),
-        BiVariant::B1 => b1(pb, opts, backend, exec),
+        BiVariant::Classic => classic(st, tp, opts, backend, exec),
+        BiVariant::B1 => b1(st, tp, opts, backend, exec),
     }
 }
 
 fn classic(
-    pb: &mut Problem,
+    st: &mut RankState,
+    tp: &mut dyn Transport,
     opts: &SolveOpts,
     backend: &mut dyn Compute,
     exec: &Executor,
 ) -> SolveStats {
     let mut drv = SolverDriver::new(exec, opts);
+    let mut ops = Ops {
+        exec,
+        opts,
+        backend,
+    };
+    let n = st.sys.n();
 
     // r = b; r' = r; p = r; rho = (r', r)
-    let parts = drv.rank_map(pb, backend, |ops, st| {
-        let n = st.sys.n();
-        st.r_ext[..n].copy_from_slice(&st.sys.b);
-        st.p_ext[..n].copy_from_slice(&st.sys.b);
-        st.rprime[..n].copy_from_slice(&st.sys.b);
-        ops.dot(&st.rprime[..n], &st.r_ext[..n], n)
-    });
-    let mut rho = drv.allreduce(pb, 0, 30, parts);
+    st.r_ext[..n].copy_from_slice(&st.sys.b);
+    st.p_ext[..n].copy_from_slice(&st.sys.b);
+    st.rprime[..n].copy_from_slice(&st.sys.b);
+    let part = ops.dot(&st.rprime[..n], &st.r_ext[..n], n);
+    let mut rho = drv.allreduce(tp, 0, 30, part);
     drv.conv.set_reference(rho); // (r,r) == (r',r) at start
     let mut rr = rho;
 
@@ -66,37 +80,36 @@ fn classic(
             break;
         }
         // Ap = A·p ; ad = (r', Ap)                       BARRIER 1
-        drv.exchange(pb, |st| &mut st.p_ext, 2 * k);
-        let parts = drv.rank_map(pb, backend, |ops, st| {
-            let RankState { sys, p_ext, ap, rprime, .. } = st;
+        drv.exchange(st, tp, |st| &mut st.p_ext, 2 * k);
+        let part = {
+            let RankState {
+                sys, p_ext, ap, rprime, ..
+            } = st;
             ops.spmv_dot_ordered(&sys.a, p_ext, ap, rprime, key(k, 0))
-        });
-        let ad = drv.allreduce(pb, k, 31, parts);
+        };
+        let ad = drv.allreduce(tp, k, 31, part);
         let alpha = rho / ad;
 
         // s = r − alpha·Ap ; As = A·s ; ω = (As,s)/(As,As)   BARRIER 2
-        drv.rank_map(pb, backend, |ops, st| {
-            let n = st.sys.n();
+        {
             let RankState { r_ext, s_ext, ap, .. } = st;
             s_ext[..n].copy_from_slice(&r_ext[..n]);
             ops.axpby(-alpha, &ap[..n], 1.0, &mut s_ext[..n], n);
-        });
-        drv.exchange(pb, |st| &mut st.s_ext, 2 * k + 1);
-        let parts = drv.rank_map(pb, backend, |ops, st| {
-            let n = st.sys.n();
+        }
+        drv.exchange(st, tp, |st| &mut st.s_ext, 2 * k + 1);
+        let part = {
             let RankState { sys, s_ext, as_, .. } = st;
             ops.spmv(&sys.a, s_ext, as_);
             let num = ops.dot_ordered(&as_[..n], &s_ext[..n], n, key(k, 1));
             let den = ops.dot_ordered(&as_[..n], &as_[..n], n, key(k, 2));
             (num, den)
-        });
-        let (num, den) = drv.allreduce_pair(pb, k, 32, parts);
+        };
+        let (num, den) = drv.allreduce_pair(tp, k, 32, part);
         let omega = num / den;
 
         // x += alpha·p + omega·s ; r = s − omega·As ;
         // rho' = (r', r) ; rr = (r, r)                       BARRIER 3
-        let parts = drv.rank_map(pb, backend, |ops, st| {
-            let n = st.sys.n();
+        let part = {
             let RankState {
                 x_ext,
                 r_ext,
@@ -120,112 +133,110 @@ fn classic(
             let rho_p = ops.dot_ordered(&rprime[..n], &r_ext[..n], n, key(k, 3));
             let rr_p = ops.dot_ordered(&r_ext[..n], &r_ext[..n], n, key(k, 4));
             (rho_p, rr_p)
-        });
-        let (rho_new, rr_new) = drv.allreduce_pair(pb, k, 33, parts);
+        };
+        let (rho_new, rr_new) = drv.allreduce_pair(tp, k, 33, part);
 
         // p = r + beta (p − omega·Ap)
         let beta = (rho_new / rho) * (alpha / omega);
-        drv.rank_map(pb, backend, |ops, st| {
-            let n = st.sys.n();
+        {
             let RankState { r_ext, p_ext, ap, .. } = st;
             ops.axpby(-omega, &ap[..n], 1.0, &mut p_ext[..n], n);
             // p = r + beta * p (1.0*x is bitwise x, so this is the same
             // triad as the old manual loop — but chunk-parallel)
             ops.axpby(1.0, &r_ext[..n], beta, &mut p_ext[..n], n);
-        });
+        }
         rho = rho_new;
         rr = rr_new;
         drv.conv.record(k + 1, rr, opts);
     }
 
-    drv.finish("bicgstab", pb, 0)
+    drv.finish("bicgstab", 0)
 }
 
 /// BiCGStab-B1 (Algorithm 2): one blocking barrier (αd, line 3); the ω
 /// pair overlaps the x_{j+1/2} update and the (αn, β) pair overlaps the
 /// p_{j+1/2} update. Restart per lines 13-15.
 fn b1(
-    pb: &mut Problem,
+    st: &mut RankState,
+    tp: &mut dyn Transport,
     opts: &SolveOpts,
     backend: &mut dyn Compute,
     exec: &Executor,
 ) -> SolveStats {
     let mut drv = SolverDriver::new(exec, opts);
+    let mut ops = Ops {
+        exec,
+        opts,
+        backend,
+    };
+    let n = st.sys.n();
 
     // line 1: r = b ; p = r ; beta = (r,r) ; r' = r/sqrt(beta) ; an = (r,r')
-    let parts = drv.rank_map(pb, backend, |ops, st| {
-        let n = st.sys.n();
-        st.r_ext[..n].copy_from_slice(&st.sys.b);
-        st.p_ext[..n].copy_from_slice(&st.sys.b);
-        ops.dot(&st.r_ext[..n], &st.r_ext[..n], n)
-    });
-    let mut beta = drv.allreduce(pb, 0, 40, parts);
+    st.r_ext[..n].copy_from_slice(&st.sys.b);
+    st.p_ext[..n].copy_from_slice(&st.sys.b);
+    let part = ops.dot(&st.r_ext[..n], &st.r_ext[..n], n);
+    let mut beta = drv.allreduce(tp, 0, 40, part);
     drv.conv.set_reference(beta);
     let beta0 = drv.conv.reference();
     let inv = 1.0 / beta.sqrt();
-    let parts = drv.rank_map(pb, backend, |ops, st| {
-        let n = st.sys.n();
+    let part = {
         let RankState { r_ext, rprime, .. } = st;
         for i in 0..n {
             rprime[i] = r_ext[i] * inv;
         }
         ops.dot(&r_ext[..n], &rprime[..n], n)
-    });
-    let mut an = drv.allreduce(pb, 0, 41, parts);
+    };
+    let mut an = drv.allreduce(tp, 0, 41, part);
 
     let mut restarts = 0;
 
     for k in 0..opts.max_iters {
         // line 3: ad = (A·p)·r'                    BARRIER (the one kept)
-        drv.exchange(pb, |st| &mut st.p_ext, 2 * k);
-        let parts = drv.rank_map(pb, backend, |ops, st| {
-            let RankState { sys, p_ext, ap, rprime, .. } = st;
+        drv.exchange(st, tp, |st| &mut st.p_ext, 2 * k);
+        let part = {
+            let RankState {
+                sys, p_ext, ap, rprime, ..
+            } = st;
             ops.spmv_dot_ordered(&sys.a, p_ext, ap, rprime, key(k, 0))
-        });
-        let ad = drv.allreduce(pb, k, 42, parts);
+        };
+        let ad = drv.allreduce(tp, k, 42, part);
         let alpha = an / ad;
 
         // line 4 (Tk 1): s = r − alpha·Ap
-        drv.rank_map(pb, backend, |ops, st| {
-            let n = st.sys.n();
+        {
             let RankState { r_ext, s_ext, ap, .. } = st;
             s_ext[..n].copy_from_slice(&r_ext[..n]);
             ops.axpby(-alpha, &ap[..n], 1.0, &mut s_ext[..n], n);
-        });
-        // line 5 (Tk 2): ω = (A·s)·s / ((A·s)·(A·s)) — overlapped with
-        // line 6 (Tk 3): x_{1/2} = x + alpha·p
-        drv.exchange(pb, |st| &mut st.s_ext, 2 * k + 1);
-        let parts = drv.rank_map(pb, backend, |ops, st| {
-            let n = st.sys.n();
+        }
+        // line 5 (Tk 2): ω = (A·s)·s / ((A·s)·(A·s)) — posted, then
+        // overlapped with line 6 (Tk 3): x_{1/2} = x + alpha·p
+        drv.exchange(st, tp, |st| &mut st.s_ext, 2 * k + 1);
+        let part = {
             let RankState { sys, s_ext, as_, .. } = st;
             ops.spmv(&sys.a, s_ext, as_);
             let num = ops.dot_ordered(&as_[..n], &s_ext[..n], n, key(k, 1));
             let den = ops.dot_ordered(&as_[..n], &as_[..n], n, key(k, 2));
             (num, den)
-        });
-        drv.rank_map(pb, backend, |ops, st| {
-            let n = st.sys.n();
+        };
+        drv.start_pair(tp, k, 43, part);
+        {
             let RankState { x_ext, p_ext, .. } = st;
             ops.axpby(alpha, &p_ext[..n], 1.0, &mut x_ext[..n], n);
-        });
-        let (num, den) = drv.allreduce_pair(pb, k, 43, parts);
+        }
+        let (num, den) = drv.wait_pair(tp, k, 43);
         let omega = num / den;
 
         // line 7: exit check on beta (previous iteration's (r,r))
         if drv.conv.pre_check(beta, opts) {
             // line 18: x = x_{1/2} + omega·s
-            drv.rank_map(pb, backend, |ops, st| {
-                let n = st.sys.n();
-                let RankState { x_ext, s_ext, .. } = st;
-                ops.axpby(omega, &s_ext[..n], 1.0, &mut x_ext[..n], n);
-            });
+            let RankState { x_ext, s_ext, .. } = st;
+            ops.axpby(omega, &s_ext[..n], 1.0, &mut x_ext[..n], n);
             break;
         }
 
         // lines 8-11 (Tk 4): x += omega·s ; r = s − omega·As ;
         // an' = (r, r') ; beta' = (r, r)
-        let parts = drv.rank_map(pb, backend, |ops, st| {
-            let n = st.sys.n();
+        let part = {
             let RankState {
                 x_ext,
                 r_ext,
@@ -240,22 +251,21 @@ fn b1(
             let an_p = ops.dot_ordered(&r_ext[..n], &rprime[..n], n, key(k, 3));
             let bt_p = ops.dot_ordered(&r_ext[..n], &r_ext[..n], n, key(k, 4));
             (an_p, bt_p)
-        });
-        // overlapped with line 12 (Tk 5): p_{1/2} = p − omega·Ap
-        drv.rank_map(pb, backend, |ops, st| {
-            let n = st.sys.n();
+        };
+        // posted, then overlapped with line 12 (Tk 5): p_{1/2} = p − omega·Ap
+        drv.start_pair(tp, k, 44, part);
+        {
             let RankState { p_ext, ap, .. } = st;
             ops.axpby(-omega, &ap[..n], 1.0, &mut p_ext[..n], n);
-        });
-        let (an_new, beta_new) = drv.allreduce_pair(pb, k, 44, parts);
+        }
+        let (an_new, beta_new) = drv.wait_pair(tp, k, 44);
         beta = beta_new;
 
         if (an_new.abs() / beta0).sqrt() < opts.restart_rel(beta0) {
             // lines 13-15 (Tk 6): restart — p = r ; r' = r/sqrt(beta)
             restarts += 1;
             let inv = 1.0 / beta.sqrt();
-            let parts = drv.rank_map(pb, backend, |ops, st| {
-                let n = st.sys.n();
+            let part = {
                 let RankState {
                     r_ext, p_ext, rprime, ..
                 } = st;
@@ -264,22 +274,19 @@ fn b1(
                     rprime[i] = r_ext[i] * inv;
                 }
                 ops.dot(&r_ext[..n], &rprime[..n], n)
-            });
-            an = drv.allreduce(pb, k, 45, parts);
+            };
+            an = drv.allreduce(tp, k, 45, part);
         } else {
             // line 17 (Tk 7): p = r + (an'/(ad·omega))·p_{1/2}
             let coeff = an_new / (ad * omega);
-            drv.rank_map(pb, backend, |ops, st| {
-                let n = st.sys.n();
-                let RankState { r_ext, p_ext, .. } = st;
-                ops.axpby(1.0, &r_ext[..n], coeff, &mut p_ext[..n], n);
-            });
+            let RankState { r_ext, p_ext, .. } = st;
+            ops.axpby(1.0, &r_ext[..n], coeff, &mut p_ext[..n], n);
             an = an_new;
         }
         drv.conv.record(k + 1, beta, opts);
     }
 
-    drv.finish("bicgstab-b1", pb, restarts)
+    drv.finish("bicgstab-b1", restarts)
 }
 
 #[cfg(test)]
@@ -345,9 +352,11 @@ mod tests {
 
     #[test]
     fn task_order_converges_with_restart_guard() {
-        let mut opts = SolveOpts::default();
-        opts.ntasks = 16;
-        opts.task_order_seed = 7;
+        let opts = SolveOpts {
+            ntasks: 16,
+            task_order_seed: 7,
+            ..SolveOpts::default()
+        };
         let s = run(Method::BiCgStab(BiVariant::B1), StencilKind::P7, 2, &opts);
         assert!(s.converged);
         assert!(s.x_error < 1e-4);

@@ -7,17 +7,26 @@
 //! so a run through the XLA backend and a run through the native kernels
 //! are step-for-step comparable.
 //!
-//! Kernel execution goes through the shared-memory executor: the SpMV and
-//! its dependent dot are submitted as per-chunk dependency chains
+//! Each loop runs *per rank* against a [`Transport`] handle. In CG-NB
+//! the two collectives are genuinely nonblocking now: the (r,r)
+//! allreduce is posted before the halo exchange + SpMV on r and
+//! completed only when β is needed, and the (Ap,p) allreduce overlaps
+//! the Tk 3 x-update — under the threaded transport other ranks really
+//! do compute while a contribution is in flight, exactly Algorithm 1's
+//! TAMPI shape (the arithmetic order per rank is unchanged, so
+//! histories stay bitwise identical to the lockstep oracle).
+//!
+//! Kernel execution goes through the shared-memory executor: the SpMV
+//! and its dependent dot are submitted as per-chunk dependency chains
 //! (`Ops::spmv_dot_ordered`), so under the task strategy a chunk's dot
 //! starts while other chunks are still multiplying. With `opts.ntasks >
 //! 0` every local dot additionally accumulates in shuffled completion
-//! order (§3.3: "the task execution order is not guaranteed ...
-//! floating-point rounding errors can accumulate"). CG tolerates this
-//! (paper: "this does not constitute an issue for the CG methods").
+//! order (§3.3). CG tolerates this (paper: "this does not constitute an
+//! issue for the CG methods").
 
-use super::{Compute, Problem, RankState, SolveOpts, SolveStats, SolverDriver};
+use super::{Compute, Ops, RankState, SolveOpts, SolveStats, SolverDriver};
 use crate::exec::Executor;
+use crate::simmpi::Transport;
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum CgVariant {
@@ -25,35 +34,40 @@ pub enum CgVariant {
     NonBlocking,
 }
 
-pub fn solve(
-    pb: &mut Problem,
+pub fn solve_rank(
+    st: &mut RankState,
+    tp: &mut dyn Transport,
     variant: CgVariant,
     opts: &SolveOpts,
     backend: &mut dyn Compute,
     exec: &Executor,
 ) -> SolveStats {
     match variant {
-        CgVariant::Classic => classic(pb, opts, backend, exec),
-        CgVariant::NonBlocking => nonblocking(pb, opts, backend, exec),
+        CgVariant::Classic => classic(st, tp, opts, backend, exec),
+        CgVariant::NonBlocking => nonblocking(st, tp, opts, backend, exec),
     }
 }
 
 fn classic(
-    pb: &mut Problem,
+    st: &mut RankState,
+    tp: &mut dyn Transport,
     opts: &SolveOpts,
     backend: &mut dyn Compute,
     exec: &Executor,
 ) -> SolveStats {
     let mut drv = SolverDriver::new(exec, opts);
+    let mut ops = Ops {
+        exec,
+        opts,
+        backend,
+    };
+    let n = st.sys.n();
 
     // init: r = b; p = r; rr = (r, r)
-    let partials = drv.rank_map(pb, backend, |ops, st| {
-        let n = st.sys.n();
-        st.r_ext[..n].copy_from_slice(&st.sys.b);
-        st.p_ext[..n].copy_from_slice(&st.sys.b);
-        ops.dot(&st.r_ext[..n], &st.r_ext[..n], n)
-    });
-    let mut rr = drv.allreduce(pb, 0, 10, partials);
+    st.r_ext[..n].copy_from_slice(&st.sys.b);
+    st.p_ext[..n].copy_from_slice(&st.sys.b);
+    let part = ops.dot(&st.r_ext[..n], &st.r_ext[..n], n);
+    let mut rr = drv.allreduce(tp, 0, 10, part);
     drv.conv.set_reference(rr);
 
     for k in 0..opts.max_iters {
@@ -62,61 +76,62 @@ fn classic(
         }
         // halo exchange of p, SpMV, local pAp (per-chunk dependency
         // chain: dot_i waits only on spmv_i)
-        drv.exchange(pb, |st| &mut st.p_ext, k);
-        let partials = drv.rank_map(pb, backend, |ops, st| {
+        drv.exchange(st, tp, |st| &mut st.p_ext, k);
+        let part = {
             let RankState { sys, p_ext, ap, .. } = st;
             ops.spmv_dot_ordered(&sys.a, p_ext, ap, p_ext, k)
-        });
-        let pap = drv.allreduce(pb, k, 11, partials); // BARRIER 1
+        };
+        let pap = drv.allreduce(tp, k, 11, part); // BARRIER 1
         let alpha = rr / pap;
 
         // x += alpha p ; r -= alpha Ap ; rr' = (r,r)
-        let partials = drv.rank_map(pb, backend, |ops, st| {
-            let n = st.sys.n();
+        let part = {
             let RankState {
                 x_ext, r_ext, p_ext, ap, ..
             } = st;
             ops.axpby(alpha, &p_ext[..n], 1.0, &mut x_ext[..n], n);
             ops.axpby(-alpha, &ap[..n], 1.0, &mut r_ext[..n], n);
             ops.dot_ordered(&r_ext[..n], &r_ext[..n], n, k)
-        });
-        let rr_new = drv.allreduce(pb, k, 12, partials); // BARRIER 2
+        };
+        let rr_new = drv.allreduce(tp, k, 12, part); // BARRIER 2
         let beta = rr_new / rr;
 
         // p = r + beta p
-        drv.rank_map(pb, backend, |ops, st| {
-            let n = st.sys.n();
+        {
             let RankState { r_ext, p_ext, .. } = st;
             ops.axpby(1.0, &r_ext[..n], beta, &mut p_ext[..n], n);
-        });
+        }
         rr = rr_new;
         drv.conv.record(k + 1, rr, opts);
     }
 
-    drv.finish("cg", pb, 0)
+    drv.finish("cg", 0)
 }
 
 /// CG-NB (Algorithm 1). The SpMV is applied to r, so A·p is maintained as
 /// a vector update — removing both blocking barriers: the rr allreduce
-/// overlaps with the SpMV on r (Tk 1) and the pAp allreduce overlaps with
-/// the x update (Tk 3).
+/// overlaps with the halo exchange + SpMV on r (Tk 1) and the pAp
+/// allreduce overlaps with the x update (Tk 3).
 fn nonblocking(
-    pb: &mut Problem,
+    st: &mut RankState,
+    tp: &mut dyn Transport,
     opts: &SolveOpts,
     backend: &mut dyn Compute,
     exec: &Executor,
 ) -> SolveStats {
     let mut drv = SolverDriver::new(exec, opts);
+    let mut ops = Ops {
+        exec,
+        opts,
+        backend,
+    };
+    let n = st.sys.n();
 
     // init: r = b; p = r; Ap = A·p; an = (r,r); ad = (Ap,p)
-    for st in &mut pb.ranks {
-        let n = st.n();
-        st.r_ext[..n].copy_from_slice(&st.sys.b);
-        st.p_ext[..n].copy_from_slice(&st.sys.b);
-    }
-    drv.exchange(pb, |st| &mut st.p_ext, 0);
-    let parts = drv.rank_map(pb, backend, |ops, st| {
-        let n = st.sys.n();
+    st.r_ext[..n].copy_from_slice(&st.sys.b);
+    st.p_ext[..n].copy_from_slice(&st.sys.b);
+    drv.exchange(st, tp, |st| &mut st.p_ext, 0);
+    let (an_part, ad_part) = {
         let RankState {
             sys, r_ext, p_ext, ap, ..
         } = st;
@@ -124,10 +139,11 @@ fn nonblocking(
         let an = ops.dot(&r_ext[..n], &r_ext[..n], n);
         let ad = ops.dot(&ap[..n], &p_ext[..n], n);
         (an, ad)
-    });
-    let (an_parts, ad_parts): (Vec<f64>, Vec<f64>) = parts.into_iter().unzip();
-    let mut an = drv.allreduce(pb, 0, 20, an_parts);
-    let mut ad = drv.allreduce(pb, 0, 21, ad_parts);
+    };
+    drv.start_scalar(tp, 0, 20, an_part);
+    drv.start_scalar(tp, 0, 21, ad_part);
+    let mut an = drv.wait_scalar(tp, 0, 20);
+    let mut ad = drv.wait_scalar(tp, 0, 21);
     drv.conv.set_reference(an);
     let mut alpha = an / ad;
 
@@ -135,37 +151,41 @@ fn nonblocking(
         if drv.conv.pre_check(an, opts) {
             break;
         }
-        // Tk 0: r -= alpha·Ap ; an' = (r,r)   [line 4-5]
-        let partials = drv.rank_map(pb, backend, |ops, st| {
-            let n = st.sys.n();
+        // Tk 0: r -= alpha·Ap ; an' = (r,r)   [lines 4-5]
+        let part = {
             let RankState { r_ext, ap, .. } = st;
             ops.axpby(-alpha, &ap[..n], 1.0, &mut r_ext[..n], n);
             ops.dot_ordered(&r_ext[..n], &r_ext[..n], n, k)
-        });
-        // allreduce(an') — overlapped with the SpMV on r in the task model
-        let an_new = drv.allreduce(pb, k, 20, partials);
+        };
+        // post allreduce(an') and overlap it with the SpMV on r — it
+        // completes only when β is actually needed
+        drv.start_scalar(tp, k, 20, part);
+
+        // Tk 1: Ar = A·r (β-independent, runs under the in-flight
+        // collective)
+        drv.exchange(st, tp, |st| &mut st.r_ext, k);
+        {
+            let RankState { sys, r_ext, ar, .. } = st;
+            ops.spmv(&sys.a, r_ext, ar);
+        }
+        let an_new = drv.wait_scalar(tp, k, 20);
         let beta = an_new / an;
 
-        // Tk 1&2: Ar = A·r ; Ap = Ar + beta·Ap ; p = r + beta·p ;
-        // ad' = (Ap, p)   [lines 6-8]
-        drv.exchange(pb, |st| &mut st.r_ext, k);
-        let partials = drv.rank_map(pb, backend, |ops, st| {
-            let n = st.sys.n();
+        // Tk 2: p = r + beta·p ; Ap = Ar + beta·Ap ; ad' = (Ap, p)
+        // [lines 6-8]; the fused axpby+dot is §3.3-blocked when ntasks>0
+        let part = {
             let RankState {
-                sys, r_ext, p_ext, ap, ar, ..
+                r_ext, p_ext, ap, ar, ..
             } = st;
-            ops.spmv(&sys.a, r_ext, ar);
             ops.axpby(1.0, &r_ext[..n], beta, &mut p_ext[..n], n);
-            // fused axpby+dot (CG-NB Tk 2); §3.3-blocked when ntasks > 0
             ops.axpby_dot_ordered(1.0, &ar[..n], beta, &mut ap[..n], &p_ext[..n], n, k)
-        });
-        // allreduce(ad') — overlapped with Tk 3 in the task model
-        let ad_new = drv.allreduce(pb, k, 21, partials);
+        };
+        // post allreduce(ad') — overlapped with Tk 3 below
+        drv.start_scalar(tp, k, 21, part);
 
         // Tk 3: x += (an²/(ad·an'))·(p − r)   [line 9]
         let coeff = an * an / (ad * an_new);
-        drv.rank_map(pb, backend, |ops, st| {
-            let n = st.sys.n();
+        {
             let RankState {
                 x_ext, r_ext, p_ext, ..
             } = st;
@@ -178,7 +198,8 @@ fn nonblocking(
                 &mut x_ext[..n],
                 n,
             );
-        });
+        }
+        let ad_new = drv.wait_scalar(tp, k, 21);
 
         an = an_new;
         ad = ad_new;
@@ -186,7 +207,7 @@ fn nonblocking(
         drv.conv.record(k, an, opts);
     }
 
-    drv.finish("cg-nb", pb, 0)
+    drv.finish("cg-nb", 0)
 }
 
 #[cfg(test)]
@@ -252,9 +273,11 @@ mod tests {
 
     #[test]
     fn task_order_perturbs_but_converges() {
-        let mut opts = SolveOpts::default();
-        opts.ntasks = 16;
-        opts.task_order_seed = 99;
+        let opts = SolveOpts {
+            ntasks: 16,
+            task_order_seed: 99,
+            ..SolveOpts::default()
+        };
         let s = run(Method::Cg(CgVariant::Classic), StencilKind::P7, 2, &opts);
         assert!(s.converged);
         assert!(s.x_error < 1e-5);

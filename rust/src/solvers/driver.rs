@@ -1,10 +1,14 @@
-//! Shared solver driver: the per-iteration plumbing that used to be
-//! copy-pasted across jacobi/gauss_seidel/cg/bicgstab — halo exchange
-//! (post + complete through `simmpi::HaloExchange` with the ISODD
-//! communicator split), allreduce of per-rank partials, convergence
-//! tracking / history accounting, and final `SolveStats` assembly. Each
-//! method file now contains only its kernel sequence, parameterising the
-//! driver with it.
+//! Shared per-rank solver plumbing. Since the transport refactor each
+//! method's iteration loop runs *per rank* against a
+//! [`crate::simmpi::Transport`] handle — the classic SPMD shape of an
+//! MPI program — instead of a central driver stepping all ranks per
+//! communication phase. What stays shared here is everything that used
+//! to be copy-pasted across jacobi/gauss_seidel/cg/bicgstab: the halo
+//! exchange helper (post + complete with the ISODD communicator split),
+//! scalar/pair allreduces (blocking and split into start/wait so the
+//! nonblocking variants can overlap them with compute, exactly like the
+//! paper's TAMPI tasks), convergence tracking / history accounting, and
+//! final `SolveStats` assembly.
 //!
 //! [`Ops`] is the executor-backed kernel dispatch for one rank: every
 //! operation is chunked by the shared-memory [`Executor`] and folded
@@ -12,24 +16,27 @@
 //! The `_ordered` flavours additionally honour `SolveOpts::ntasks` — the
 //! simulated §3.3 task-completion-order reductions: same blocks, same
 //! seeded order, same linear accumulation per operation as before the
-//! refactor. (One last-ulp regrouping exists: the red-black GS sweep now
+//! refactor. (One last-ulp regrouping exists: the red-black GS sweep
 //! folds each colour's partials separately and sums the two colour
-//! totals, where the old loop chained one accumulator across both
-//! colours — see `gauss_seidel.rs`.)
+//! totals, where the pre-exec-refactor loop chained one accumulator
+//! across both colours — see `gauss_seidel.rs`; pinned by a regression
+//! test in `tests/integration_exec.rs`.)
 
 use crate::exec::{fold, Executor, Reduction, SharedRows};
 use crate::kernels;
-use crate::simmpi::{isodd, HaloExchange};
+use crate::simmpi::{isodd, HaloExchange, Transport};
 use crate::sparse::EllMatrix;
 
-use super::{completion_order, task_blocks, Compute, Problem, RankState, SolveOpts, SolveStats};
+use super::{completion_order, task_blocks, Compute, RankState, SolveOpts, SolveStats};
 
 // ---------------------------------------------------------------------
 // Convergence tracking
 // ---------------------------------------------------------------------
 
 /// Residual bookkeeping shared by all methods: reference residual,
-/// relative-residual history, iteration count, convergence flag.
+/// relative-residual history, iteration count, convergence flag. Every
+/// rank runs its own tracker over the *same* allreduced values, so all
+/// ranks take identical decisions and produce identical histories.
 #[derive(Debug, Default)]
 pub struct ConvergenceTracker {
     res0: f64,
@@ -92,12 +99,12 @@ impl ConvergenceTracker {
 }
 
 // ---------------------------------------------------------------------
-// The driver
+// The per-rank driver
 // ---------------------------------------------------------------------
 
-/// Per-solve driver owning the cross-method plumbing. Borrow it the
-/// executor and options once; pass the problem and backend per call (the
-/// solver keeps mutating both between driver calls).
+/// Per-rank solve driver owning the cross-method plumbing. Borrow it the
+/// executor and options once; the transport handle is passed per call
+/// because the method loop also hands it to overlapped start/wait pairs.
 pub struct SolverDriver<'a> {
     pub exec: &'a Executor,
     pub opts: &'a SolveOpts,
@@ -113,84 +120,74 @@ impl<'a> SolverDriver<'a> {
         }
     }
 
-    /// Lockstep halo exchange of one extended vector on every rank.
-    /// `phase` selects the ISODD tag/communicator split (Code 1's
-    /// deadlock-avoidance idiom).
+    /// Halo exchange of one extended vector on this rank. `phase`
+    /// selects the ISODD tag/communicator split (Code 1's
+    /// deadlock-avoidance idiom). Post-then-complete through the
+    /// transport: under the threaded transport neighbours genuinely
+    /// overlap; under lockstep the turn baton reproduces the old
+    /// phase-stepped order.
     pub fn exchange(
         &self,
-        pb: &mut Problem,
+        st: &mut RankState,
+        tp: &mut dyn Transport,
         which: fn(&mut RankState) -> &mut Vec<f64>,
         phase: usize,
     ) {
         let comm = isodd(phase);
         let tag = phase as u64;
-        let world = &mut pb.world;
-        for st in pb.ranks.iter_mut() {
-            let rank = st.sys.part.rank;
-            let halo = st.sys.halo.clone();
-            let x = which(st);
-            HaloExchange::post_sends(world, rank, &halo, x, tag, comm);
-        }
-        for st in pb.ranks.iter_mut() {
-            let rank = st.sys.part.rank;
-            let halo = st.sys.halo.clone();
-            let x = which(st);
-            let ok = HaloExchange::complete_recvs(world, rank, &halo, x, tag, comm);
-            assert!(ok, "halo deadlock at rank {rank} phase {phase}");
-        }
+        let halo = st.sys.halo.clone();
+        let x = which(st);
+        HaloExchange::post_sends(tp, &halo, x, tag, comm);
+        HaloExchange::complete_recvs(tp, &halo, x, tag, comm);
     }
 
-    /// Run `f` once per rank with an executor-backed [`Ops`] context,
-    /// collecting one value per rank (usually an allreduce contribution).
-    pub fn rank_map<T>(
-        &self,
-        pb: &mut Problem,
-        backend: &mut dyn Compute,
-        mut f: impl FnMut(&mut Ops, &mut RankState) -> T,
-    ) -> Vec<T> {
-        let mut ops = Ops {
-            exec: self.exec,
-            opts: self.opts,
-            backend,
-        };
-        pb.ranks.iter_mut().map(|st| f(&mut ops, st)).collect()
+    /// Global sum of one scalar partial (blocking).
+    pub fn allreduce(&self, tp: &mut dyn Transport, k: usize, tag: u64, partial: f64) -> f64 {
+        tp.allreduce(isodd(k), tag, vec![partial])[0]
     }
 
-    /// Global sum of one scalar partial per rank.
-    pub fn allreduce(&self, pb: &mut Problem, k: usize, tag: u64, partials: Vec<f64>) -> f64 {
-        let v = pb.world.allreduce_sum(
-            isodd(k),
-            tag,
-            partials.into_iter().map(|p| vec![p]).collect(),
-        );
-        v[0]
-    }
-
-    /// Global sum of a pair per rank (fused collectives: ω's numerator /
-    /// denominator, or αn together with β — Algorithm 2 lines 10-11).
+    /// Global sum of a fused pair (ω's numerator / denominator, or αn
+    /// together with β — Algorithm 2 lines 10-11), blocking.
     pub fn allreduce_pair(
         &self,
-        pb: &mut Problem,
+        tp: &mut dyn Transport,
         k: usize,
         tag: u64,
-        partials: Vec<(f64, f64)>,
+        partial: (f64, f64),
     ) -> (f64, f64) {
-        let v = pb.world.allreduce_sum(
-            isodd(k),
-            tag,
-            partials.into_iter().map(|(a, b)| vec![a, b]).collect(),
-        );
+        let v = tp.allreduce(isodd(k), tag, vec![partial.0, partial.1]);
         (v[0], v[1])
     }
 
-    /// Final stats assembly.
-    pub fn finish(self, method: &'static str, pb: &Problem, restarts: usize) -> SolveStats {
+    /// Nonblocking scalar allreduce contribution — pair with
+    /// [`SolverDriver::wait_scalar`] after the overlapped compute.
+    pub fn start_scalar(&self, tp: &mut dyn Transport, k: usize, tag: u64, partial: f64) {
+        tp.allreduce_start(isodd(k), tag, vec![partial]);
+    }
+
+    pub fn wait_scalar(&self, tp: &mut dyn Transport, k: usize, tag: u64) -> f64 {
+        tp.allreduce_wait(isodd(k), tag)[0]
+    }
+
+    /// Nonblocking pair allreduce contribution / completion.
+    pub fn start_pair(&self, tp: &mut dyn Transport, k: usize, tag: u64, partial: (f64, f64)) {
+        tp.allreduce_start(isodd(k), tag, vec![partial.0, partial.1]);
+    }
+
+    pub fn wait_pair(&self, tp: &mut dyn Transport, k: usize, tag: u64) -> (f64, f64) {
+        let v = tp.allreduce_wait(isodd(k), tag);
+        (v[0], v[1])
+    }
+
+    /// Final per-rank stats assembly. `x_error` is a cross-rank quantity
+    /// and is filled in by `Problem` once every rank joined.
+    pub fn finish(self, method: &'static str, restarts: usize) -> SolveStats {
         SolveStats {
             method,
             iterations: self.conv.iterations,
             converged: self.conv.converged,
             rel_residual: self.conv.rel,
-            x_error: pb.x_error(),
+            x_error: 0.0,
             history: self.conv.history,
             restarts,
         }
@@ -564,9 +561,11 @@ mod tests {
     #[test]
     fn ops_ordered_plan_matches_legacy_blocks() {
         let exec = Executor::seq();
-        let mut opts = SolveOpts::default();
-        opts.ntasks = 7;
-        opts.task_order_seed = 3;
+        let opts = SolveOpts {
+            ntasks: 7,
+            task_order_seed: 3,
+            ..SolveOpts::default()
+        };
         let mut backend = Native;
         let ops = Ops {
             exec: &exec,

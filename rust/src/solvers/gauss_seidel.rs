@@ -21,13 +21,17 @@
 //!   under the threaded executor, because a genuinely racy f64 sweep is
 //!   undefined behaviour in Rust and would also break the cross-strategy
 //!   reproducibility contract (`--exec` must not change histories).
+//!
+//! The iteration loop runs *per rank* against a [`Transport`] handle;
+//! the rank dimension is therefore as real as the thread dimension under
+//! `--transport threaded`.
 
 use super::{
-    completion_order, task_blocks, Compute, Ops, Problem, RankState, SolveOpts, SolveStats,
-    SolverDriver,
+    completion_order, task_blocks, Compute, Ops, RankState, SolveOpts, SolveStats, SolverDriver,
 };
 use crate::exec::Executor;
 use crate::kernels;
+use crate::simmpi::Transport;
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum GsVariant {
@@ -36,33 +40,35 @@ pub enum GsVariant {
     Relaxed,
 }
 
-pub fn solve(
-    pb: &mut Problem,
+pub fn solve_rank(
+    st: &mut RankState,
+    tp: &mut dyn Transport,
     variant: GsVariant,
     opts: &SolveOpts,
     backend: &mut dyn Compute,
     exec: &Executor,
 ) -> SolveStats {
     let mut drv = SolverDriver::new(exec, opts);
+    let mut ops = Ops {
+        exec,
+        opts,
+        backend,
+    };
     // distinct tag spaces per phase to keep halo messages separable
     const T_FWD: usize = 0;
     const T_BWD: usize = 1;
 
     for k in 0..opts.max_iters {
         // ---- forward sweep ----
-        drv.exchange(pb, |st| &mut st.x_ext, 2 * k + T_FWD);
-        let partials = drv.rank_map(pb, backend, |ops, st| {
-            sweep(ops, st, variant, opts, k, true)
-        });
+        drv.exchange(st, tp, |st| &mut st.x_ext, 2 * k + T_FWD);
+        let part = sweep(&mut ops, st, variant, opts, k, true);
         // ---- backward sweep ----
-        drv.exchange(pb, |st| &mut st.x_ext, 2 * k + T_BWD);
-        drv.rank_map(pb, backend, |ops, st| {
-            sweep(ops, st, variant, opts, k, false)
-        });
+        drv.exchange(st, tp, |st| &mut st.x_ext, 2 * k + T_BWD);
+        sweep(&mut ops, st, variant, opts, k, false);
 
         // residual of the iterate entering this iteration (forward pass
         // partials), allreduced — the paper's rTL reduction (Code 4)
-        let res = drv.allreduce(pb, k, 2_000_000, partials);
+        let res = drv.allreduce(tp, k, 2_000_000, part);
         if drv.conv.record(k + 1, res, opts) {
             break;
         }
@@ -73,7 +79,7 @@ pub fn solve(
         GsVariant::RedBlack => "gs-rb",
         GsVariant::Relaxed => "gs-relaxed",
     };
-    drv.finish(name, pb, 0)
+    drv.finish(name, 0)
 }
 
 /// One directional sweep on one rank; returns the local residual partial
@@ -114,7 +120,8 @@ fn sweep(
                     // totals are summed — a last-ulp regrouping of the
                     // pre-refactor single accumulator chain, kept
                     // because it is what allows the colours to fold
-                    // independently of executor scheduling.
+                    // independently of executor scheduling (pinned by a
+                    // regression test in tests/integration_exec.rs).
                     s_ext.copy_from_slice(x_ext);
                     res += ops.gs_colour_blocked_ordered(
                         &sys.a,
@@ -191,9 +198,11 @@ mod tests {
 
     #[test]
     fn red_black_converges() {
-        let mut opts = SolveOpts::default();
-        opts.ntasks = 4;
-        opts.task_order_seed = 7;
+        let opts = SolveOpts {
+            ntasks: 4,
+            task_order_seed: 7,
+            ..SolveOpts::default()
+        };
         let s = run(Method::GaussSeidel(GsVariant::RedBlack), 2, &opts);
         assert!(s.converged);
         assert!(s.x_error < 1e-5);
@@ -201,9 +210,11 @@ mod tests {
 
     #[test]
     fn relaxed_converges() {
-        let mut opts = SolveOpts::default();
-        opts.ntasks = 6;
-        opts.task_order_seed = 11;
+        let opts = SolveOpts {
+            ntasks: 6,
+            task_order_seed: 11,
+            ..SolveOpts::default()
+        };
         let s = run(Method::GaussSeidel(GsVariant::Relaxed), 2, &opts);
         assert!(s.converged);
         assert!(s.x_error < 1e-5);
@@ -228,9 +239,11 @@ mod tests {
         // -> bicoloured tasks converge slower than the relaxed version
         // (paper: 166 vs 150 iterations).
         let g = Grid3::new(5, 5, 8);
-        let mut opts = SolveOpts::default();
-        opts.ntasks = 8;
-        opts.task_order_seed = 3;
+        let opts = SolveOpts {
+            ntasks: 8,
+            task_order_seed: 3,
+            ..SolveOpts::default()
+        };
         let mut p1 = Problem::build(g, StencilKind::P27, 2);
         let rb = p1.solve(Method::GaussSeidel(GsVariant::RedBlack), &opts, &mut Native);
         let mut p2 = Problem::build(g, StencilKind::P27, 2);
@@ -249,9 +262,11 @@ mod tests {
         // §4.3: coarser tasks -> fewer iterations for the coloured GS.
         let g = Grid3::new(5, 5, 8);
         let mk = |ntasks| {
-            let mut opts = SolveOpts::default();
-            opts.ntasks = ntasks;
-            opts.task_order_seed = 5;
+            let opts = SolveOpts {
+                ntasks,
+                task_order_seed: 5,
+                ..SolveOpts::default()
+            };
             let mut p = Problem::build(g, StencilKind::P27, 1);
             p.solve(Method::GaussSeidel(GsVariant::RedBlack), &opts, &mut Native)
                 .iterations

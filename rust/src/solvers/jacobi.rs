@@ -2,43 +2,52 @@
 //! kernel" (§4.3). Per iteration: halo exchange of x, one fused
 //! sweep+residual kernel, one allreduce of the residual.
 //!
-//! The sweep runs chunk-parallel under the shared-memory executor (blocks
-//! are independent, so any strategy gives bitwise-identical iterates).
-//! With `opts.ntasks > 0` the residual reduction additionally accumulates
-//! in the seeded task-completion order — the §3.3 nondeterminism
-//! emulation (harmless for Jacobi: only the reduction reorders).
+//! The loop runs *per rank* against a [`Transport`] handle (SPMD shape);
+//! the sweep runs chunk-parallel under the shared-memory executor
+//! (blocks are independent, so any strategy gives bitwise-identical
+//! iterates). With `opts.ntasks > 0` the residual reduction additionally
+//! accumulates in the seeded task-completion order — the §3.3
+//! nondeterminism emulation (harmless for Jacobi: only the reduction
+//! reorders).
 
-use super::{Compute, Problem, RankState, SolveOpts, SolveStats, SolverDriver};
+use super::{Compute, Ops, RankState, SolveOpts, SolveStats, SolverDriver};
 use crate::exec::Executor;
+use crate::simmpi::Transport;
 
-pub fn solve(
-    pb: &mut Problem,
+pub fn solve_rank(
+    st: &mut RankState,
+    tp: &mut dyn Transport,
     opts: &SolveOpts,
     backend: &mut dyn Compute,
     exec: &Executor,
 ) -> SolveStats {
     let mut drv = SolverDriver::new(exec, opts);
+    let mut ops = Ops {
+        exec,
+        opts,
+        backend,
+    };
 
     for k in 0..opts.max_iters {
         // halo exchange of the current iterate
-        drv.exchange(pb, |st| &mut st.x_ext, k);
+        drv.exchange(st, tp, |st| &mut st.x_ext, k);
 
-        // fused sweep + local residual, per rank
-        let partials = drv.rank_map(pb, backend, |ops, st| {
-            let n = st.sys.n();
+        // fused sweep + local residual
+        let n = st.sys.n();
+        let part = {
             let RankState { sys, x_ext, tmp, .. } = st;
             let res = ops.jacobi_step_ordered(&sys.a, &sys.b, x_ext, tmp, k);
             x_ext[..n].copy_from_slice(&tmp[..n]);
             res
-        });
+        };
 
-        let res = drv.allreduce(pb, k, 1_000_000, partials);
+        let res = drv.allreduce(tp, k, 1_000_000, part);
         if drv.conv.record(k + 1, res, opts) {
             break;
         }
     }
 
-    drv.finish("jacobi", pb, 0)
+    drv.finish("jacobi", 0)
 }
 
 #[cfg(test)]
@@ -72,11 +81,13 @@ mod tests {
     #[test]
     fn task_order_does_not_change_jacobi_convergence() {
         let g = Grid3::new(4, 4, 8);
-        let mut opts = SolveOpts::default();
         let mut pa = Problem::build(g, StencilKind::P7, 2);
-        let sa = pa.solve(Method::Jacobi, &opts, &mut Native);
-        opts.ntasks = 8;
-        opts.task_order_seed = 1234;
+        let sa = pa.solve(Method::Jacobi, &SolveOpts::default(), &mut Native);
+        let opts = SolveOpts {
+            ntasks: 8,
+            task_order_seed: 1234,
+            ..SolveOpts::default()
+        };
         let mut pbm = Problem::build(g, StencilKind::P7, 2);
         let sb = pbm.solve(Method::Jacobi, &opts, &mut Native);
         // block independence: identical iterate, only reduction rounding

@@ -1,6 +1,8 @@
 //! The four iterative methods (+ paper variants) over the distributed
-//! substrate: real numerics, lockstep multi-rank execution through
-//! `simmpi`, pluggable compute backend (native kernels or XLA artifacts).
+//! substrate: real numerics, per-rank iteration loops over a pluggable
+//! `simmpi::Transport` (lockstep oracle or genuinely concurrent OS
+//! threads), pluggable compute backend (native kernels or XLA
+//! artifacts).
 //!
 //! Method inventory (paper §3.1):
 //!   * Jacobi
@@ -8,6 +10,15 @@
 //!     bicoloured (task strategy) and *relaxed* (task strategy, §3.4)
 //!   * CG — classic and CG-NB (Algorithm 1)
 //!   * BiCGStab — classic and BiCGStab-B1 (Algorithm 2, with restart)
+//!
+//! Entry points on [`Problem`]:
+//!   * [`Problem::solve`] / [`Problem::solve_with`] — any backend,
+//!     lockstep transport (the bit-exact oracle; the single backend is
+//!     shared across ranks exactly as the pre-transport driver shared
+//!     it, made sound by the lockstep serialisation).
+//!   * [`Problem::solve_hybrid`] — native kernels, per-rank executor,
+//!     lockstep *or* threaded transport: the real ranks × threads
+//!     hybrid dimension (`--ranks R --transport threaded --threads T`).
 
 mod backend;
 mod bicgstab;
@@ -22,10 +33,12 @@ pub use cg::CgVariant;
 pub use driver::{ConvergenceTracker, Ops, SolverDriver};
 pub use gauss_seidel::GsVariant;
 
-use crate::exec::Executor;
+use std::sync::Mutex;
+
+use crate::exec::{ExecSpec, Executor};
 use crate::mesh::Grid3;
-use crate::simmpi::World;
-use crate::sparse::{LocalSystem, StencilKind};
+use crate::simmpi::{run_ranks, RankTransport, Transport, TransportKind, WorldStats};
+use crate::sparse::{EllMatrix, LocalSystem, StencilKind};
 use crate::util::Rng;
 
 /// Which algorithm to run.
@@ -173,12 +186,162 @@ impl RankState {
     }
 }
 
-/// Distributed problem: all ranks' states + the message-passing world.
+/// One rank's whole solve: the per-rank iteration loop of the chosen
+/// method against a transport handle. This is the function every rank
+/// thread runs — the inverted (SPMD) form of the old phase-stepping
+/// driver.
+pub fn solve_rank(
+    method: Method,
+    st: &mut RankState,
+    tp: &mut dyn Transport,
+    opts: &SolveOpts,
+    backend: &mut dyn Compute,
+    exec: &Executor,
+) -> SolveStats {
+    match method {
+        Method::Jacobi => jacobi::solve_rank(st, tp, opts, backend, exec),
+        Method::GaussSeidel(v) => gauss_seidel::solve_rank(st, tp, v, opts, backend, exec),
+        Method::Cg(v) => cg::solve_rank(st, tp, v, opts, backend, exec),
+        Method::BiCgStab(v) => bicgstab::solve_rank(st, tp, v, opts, backend, exec),
+    }
+}
+
+/// Pointer to the single backend shared by the lockstep rank bodies.
+///
+/// # Safety
+/// `Send` is asserted although the pointee may hold non-`Send` state
+/// (the XLA backend carries `Rc`s): every access — including any
+/// refcount traffic — happens through [`SharedBackend`], which takes
+/// the surrounding mutex for exactly one kernel call at a time, and the
+/// lockstep turn baton additionally serialises the rank bodies. The
+/// threaded transport never uses this type; it builds a thread-local
+/// `Native` per rank instead.
+struct SharedBackendPtr<'a>(*mut (dyn Compute + 'a));
+
+unsafe impl Send for SharedBackendPtr<'_> {}
+
+/// Per-rank `Compute` adapter over the one shared backend of the
+/// lockstep paths (`solve`/`solve_with`). Each rank body owns its own
+/// adapter; every kernel call locks the mutex and reborrows the
+/// underlying backend for just that call, so no two `&mut` views of the
+/// backend ever coexist — the aliasing rules hold mechanically, not
+/// merely by scheduling. The mutex is never contended (the turn baton
+/// runs one rank at a time); it exists to scope the reborrows.
+struct SharedBackend<'m, 'a> {
+    inner: &'m Mutex<SharedBackendPtr<'a>>,
+}
+
+impl SharedBackend<'_, '_> {
+    fn with<R>(&self, f: impl FnOnce(&mut dyn Compute) -> R) -> R {
+        let guard = self.inner.lock().unwrap();
+        // SAFETY: the guard gives exclusive access to the pointer for
+        // the duration of this call; the reborrow ends before unlock.
+        let backend = unsafe { &mut *guard.0 };
+        f(backend)
+    }
+}
+
+impl Compute for SharedBackend<'_, '_> {
+    fn spmv(&mut self, a: &EllMatrix, x_ext: &[f64], y: &mut [f64], r0: usize, r1: usize) {
+        self.with(|b| b.spmv(a, x_ext, y, r0, r1))
+    }
+
+    fn dot(&mut self, x: &[f64], y: &[f64], r0: usize, r1: usize) -> f64 {
+        self.with(|b| b.dot(x, y, r0, r1))
+    }
+
+    fn axpby(&mut self, a: f64, x: &[f64], b: f64, y: &mut [f64], r0: usize, r1: usize) {
+        self.with(|be| be.axpby(a, x, b, y, r0, r1))
+    }
+
+    fn waxpby(
+        &mut self,
+        a: f64,
+        x: &[f64],
+        b: f64,
+        y: &[f64],
+        c: f64,
+        z: &mut [f64],
+        r0: usize,
+        r1: usize,
+    ) {
+        self.with(|be| be.waxpby(a, x, b, y, c, z, r0, r1))
+    }
+
+    fn axpby_dot(
+        &mut self,
+        a: f64,
+        x: &[f64],
+        b: f64,
+        y: &mut [f64],
+        p: &[f64],
+        r0: usize,
+        r1: usize,
+    ) -> f64 {
+        self.with(|be| be.axpby_dot(a, x, b, y, p, r0, r1))
+    }
+
+    fn jacobi_step(
+        &mut self,
+        a: &EllMatrix,
+        b: &[f64],
+        x_ext: &[f64],
+        x_new: &mut [f64],
+        r0: usize,
+        r1: usize,
+    ) -> f64 {
+        self.with(|be| be.jacobi_step(a, b, x_ext, x_new, r0, r1))
+    }
+
+    fn gs_colour_sweep(
+        &mut self,
+        a: &EllMatrix,
+        b: &[f64],
+        mask: &[bool],
+        colour: bool,
+        x_ext: &mut [f64],
+        r0: usize,
+        r1: usize,
+    ) -> f64 {
+        self.with(|be| be.gs_colour_sweep(a, b, mask, colour, x_ext, r0, r1))
+    }
+
+    fn gs_colour_sweep_blocked(
+        &mut self,
+        a: &EllMatrix,
+        b: &[f64],
+        mask: &[bool],
+        colour: bool,
+        x_ext: &mut [f64],
+        x_old: &[f64],
+        r0: usize,
+        r1: usize,
+    ) -> f64 {
+        self.with(|be| be.gs_colour_sweep_blocked(a, b, mask, colour, x_ext, x_old, r0, r1))
+    }
+
+    fn max_chunks(&self) -> usize {
+        self.with(|b| b.max_chunks())
+    }
+
+    fn thread_safe(&self) -> bool {
+        self.with(|b| b.thread_safe())
+    }
+
+    fn name(&self) -> &'static str {
+        self.with(|b| b.name())
+    }
+}
+
+/// Distributed problem: all ranks' states. The message-passing state
+/// lives in the per-run transport hub; its statistics land in `stats`
+/// after every solve.
 pub struct Problem {
-    pub world: World,
     pub ranks: Vec<RankState>,
     pub grid: Grid3,
     pub kind: StencilKind,
+    /// Communication + concurrency statistics of the last solve.
+    pub stats: WorldStats,
 }
 
 impl Problem {
@@ -188,10 +351,10 @@ impl Problem {
             .map(|r| RankState::new(LocalSystem::build(grid, kind, r, nranks)))
             .collect();
         Problem {
-            world: World::new(nranks),
             ranks,
             grid,
             kind,
+            stats: WorldStats::default(),
         }
     }
 
@@ -212,8 +375,32 @@ impl Problem {
             .fold(0.0, f64::max)
     }
 
+    fn reset(&mut self) {
+        for st in &mut self.ranks {
+            st.x_ext.iter_mut().for_each(|v| *v = 0.0);
+        }
+    }
+
+    /// Fold a finished run's per-rank results into the problem: stash
+    /// the transport stats, fill in the cross-rank x_error, return rank
+    /// 0's stats (all ranks see identical allreduced values, so their
+    /// histories are identical — debug-asserted).
+    fn finish_run(&mut self, run: (Vec<SolveStats>, WorldStats)) -> SolveStats {
+        let (mut per_rank, stats) = run;
+        self.stats = stats;
+        let mut s = per_rank.swap_remove(0);
+        debug_assert!(
+            per_rank.iter().all(|r| {
+                r.iterations == s.iterations && r.history.len() == s.history.len()
+            }),
+            "ranks diverged"
+        );
+        s.x_error = self.x_error();
+        s
+    }
+
     /// Run `method` to convergence with the given backend on the default
-    /// sequential executor.
+    /// sequential executor (lockstep transport).
     pub fn solve(
         &mut self,
         method: Method,
@@ -224,10 +411,14 @@ impl Problem {
     }
 
     /// Run `method` to convergence with the given backend under an
-    /// explicit shared-memory executor (`--threads` / `--exec`). The
-    /// executor changes *who* computes each chunk, never the numbers:
-    /// convergence histories are identical across strategies (see the
-    /// determinism contract in `crate::exec`).
+    /// explicit shared-memory executor (`--threads` / `--exec`), on the
+    /// lockstep transport. The executor changes *who* computes each
+    /// chunk, never the numbers: convergence histories are identical
+    /// across strategies (see the determinism contract in `crate::exec`).
+    ///
+    /// The single backend is shared across the per-rank loops — sound
+    /// because lockstep serialises rank bodies (see [`SharedBackend`]);
+    /// this is what keeps the XLA backend usable unchanged.
     pub fn solve_with(
         &mut self,
         method: Method,
@@ -235,16 +426,56 @@ impl Problem {
         backend: &mut dyn Compute,
         exec: &Executor,
     ) -> SolveStats {
-        // reset state
-        for st in &mut self.ranks {
-            st.x_ext.iter_mut().for_each(|v| *v = 0.0);
-        }
-        match method {
-            Method::Jacobi => jacobi::solve(self, opts, backend, exec),
-            Method::GaussSeidel(v) => gauss_seidel::solve(self, v, opts, backend, exec),
-            Method::Cg(v) => cg::solve(self, v, opts, backend, exec),
-            Method::BiCgStab(v) => bicgstab::solve(self, v, opts, backend, exec),
-        }
+        self.reset();
+        let shared = Mutex::new(SharedBackendPtr(backend as *mut (dyn Compute + '_)));
+        let shared = &shared;
+        let bodies: Vec<Box<dyn FnOnce(&mut RankTransport) -> SolveStats + Send + '_>> = self
+            .ranks
+            .iter_mut()
+            .map(|st| {
+                Box::new(move |tp: &mut RankTransport| {
+                    let mut backend = SharedBackend { inner: shared };
+                    solve_rank(method, st, tp, opts, &mut backend, exec)
+                })
+                    as Box<dyn FnOnce(&mut RankTransport) -> SolveStats + Send + '_>
+            })
+            .collect();
+        let run = run_ranks(TransportKind::Lockstep, bodies);
+        self.finish_run(run)
+    }
+
+    /// Run `method` under the real hybrid dimension: `transport` decides
+    /// whether ranks execute serialised (lockstep oracle) or as
+    /// genuinely concurrent OS threads, and every rank owns its own
+    /// shared-memory executor built from `spec` (ranks × threads). The
+    /// native backend is used — it is the only thread-safe one.
+    ///
+    /// Bitwise guarantee: for any {method, ranks, spec} the convergence
+    /// history is identical across the two transports and identical to
+    /// `solve_with` under the same executor spec (asserted by
+    /// `tests/integration_exec.rs`).
+    pub fn solve_hybrid(
+        &mut self,
+        method: Method,
+        opts: &SolveOpts,
+        spec: &ExecSpec,
+        transport: TransportKind,
+    ) -> SolveStats {
+        self.reset();
+        let bodies: Vec<Box<dyn FnOnce(&mut RankTransport) -> SolveStats + Send + '_>> = self
+            .ranks
+            .iter_mut()
+            .map(|st| {
+                Box::new(move |tp: &mut RankTransport| {
+                    let exec = spec.build();
+                    let mut backend = Native;
+                    solve_rank(method, st, tp, opts, &mut backend, &exec)
+                })
+                    as Box<dyn FnOnce(&mut RankTransport) -> SolveStats + Send + '_>
+            })
+            .collect();
+        let run = run_ranks(transport, bodies);
+        self.finish_run(run)
     }
 }
 
@@ -257,7 +488,8 @@ pub(crate) fn task_blocks(n: usize, ntasks: usize) -> Vec<(usize, usize)> {
 /// A pseudo-random task completion order for one iteration — stands in
 /// for the real runtime's nondeterministic scheduling (§3.3). Seed 0 =>
 /// deterministic program order (MPI-only / fork-join semantics).
-pub(crate) fn completion_order(nblocks: usize, seed: u64, k: usize) -> Vec<usize> {
+/// Public so regression tests can reproduce the exact fold plan.
+pub fn completion_order(nblocks: usize, seed: u64, k: usize) -> Vec<usize> {
     let mut order: Vec<usize> = (0..nblocks).collect();
     if seed != 0 {
         let mut rng = Rng::new(seed).substream(k as u64);
@@ -315,5 +547,30 @@ mod tests {
             assert_eq!(m.name(), name);
         }
         assert!(Method::parse("nope").is_none());
+    }
+
+    #[test]
+    fn solve_populates_transport_stats() {
+        use crate::exec::ExecStrategy;
+        let mut pb = Problem::build(Grid3::new(4, 4, 8), StencilKind::P7, 2);
+        let s = pb.solve(Method::Cg(CgVariant::Classic), &SolveOpts::default(), &mut Native);
+        assert!(s.converged);
+        assert!(pb.stats.p2p_messages > 0);
+        assert!(pb.stats.allreduces as usize >= s.iterations);
+        assert_eq!(pb.stats.max_concurrent_ranks, 1, "lockstep serialises");
+
+        let spec = ExecSpec::new(ExecStrategy::Seq, 1);
+        let t = pb.solve_hybrid(
+            Method::Cg(CgVariant::Classic),
+            &SolveOpts::default(),
+            &spec,
+            TransportKind::Threaded,
+        );
+        assert_eq!(t.iterations, s.iterations);
+        // thread-id accounting: both rank bodies ran on their own
+        // concurrent OS threads; the executing-overlap gauge is an
+        // honest (scheduler-dependent) observation
+        assert_eq!(pb.stats.rank_threads, 2);
+        assert!(pb.stats.max_concurrent_ranks >= 1);
     }
 }
