@@ -25,34 +25,44 @@
 //! Expected: task-based CG-NB ≈ 20%/25% faster (7-/27-pt), BiCGStab
 //! ≈ 10-20%, Jacobi ≈ 14%, GS ≈ 13-16% — the abstract's numbers.
 
-use std::rc::Rc;
+use std::process::ExitCode;
 use std::time::Instant;
 
-use hlam::exec::{ExecSpec, ExecStrategy};
+use hlam::api::{BackendKind, RunSpec, Session, SolveError};
 use hlam::harness::{paper_iterations, weak_config, HarnessOpts};
 use hlam::mesh::Grid3;
-use hlam::runtime::{Runtime, XlaCompute};
 use hlam::simmpi::TransportKind;
 use hlam::simulator::{repeat_runs, ExecModel};
-use hlam::solvers::{Method, Native, Problem, SolveOpts, SolveStats};
+use hlam::solvers::{SolveOpts, SolveStats};
 use hlam::sparse::StencilKind;
 use hlam::stats::median;
 use hlam::util::Args;
 
-fn main() {
+fn main() -> ExitCode {
     let raw: Vec<String> = std::env::args().skip(1).collect();
     let args = Args::parse(raw, &[]);
-    let ranks = args.usize_or("ranks", 2);
-    let transport = TransportKind::parse(&args.str_or("transport", "threaded"))
-        .unwrap_or_else(|| panic!("--transport expects lockstep|threaded"));
-    let strategy = ExecStrategy::parse(&args.str_or("exec", "task"))
-        .unwrap_or_else(|| panic!("--exec expects seq|fork-join|task"));
-    let threads = args.usize_or("threads", 2);
-    let spec = ExecSpec::new(strategy, threads);
+    // the base RunSpec every phase derives from: bad flags print a
+    // structured error (with "did you mean") instead of a panic
+    let base = RunSpec::builder()
+        .method_str("cg")
+        .grid_str(&args.str_or("grid", "32x32x64"))
+        .ranks(args.usize_or("ranks", 2))
+        .transport_str(&args.str_or("transport", "threaded"))
+        .strategy_str(&args.str_or("exec", "task"))
+        .threads(args.usize_or("threads", 2).max(1))
+        .build();
+    let base = match base {
+        Ok(spec) => spec,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return ExitCode::from(2);
+        }
+    };
 
-    phase1_real_numerics(ranks, transport, &spec);
-    phase2_real_weak_scaling(ranks, &spec);
+    phase1_real_numerics(&base);
+    phase2_real_weak_scaling(&base);
     phase3_headline();
+    ExitCode::SUCCESS
 }
 
 fn assert_identical(a: &SolveStats, b: &SolveStats) {
@@ -63,83 +73,95 @@ fn assert_identical(a: &SolveStats, b: &SolveStats) {
     }
 }
 
-fn phase1_real_numerics(ranks: usize, transport: TransportKind, spec: &ExecSpec) {
+fn phase1_real_numerics(base: &RunSpec) {
     println!("=== Phase 1: real hybrid numerics (ranks × threads) ===\n");
-    let grid = Grid3::new(32, 32, 64);
-    let kind = StencilKind::P7;
-    let opts = SolveOpts::default();
-    let method = Method::parse("cg").unwrap();
+    let spec = base.clone();
+    let mut session = Session::new();
+    println!("resolved spec: {}", spec.to_json_string());
 
     // native solve over the requested transport
     let t0 = Instant::now();
-    let mut pb = Problem::build(grid, kind, ranks);
-    let nat = pb.solve_hybrid(method, &opts, spec, transport);
+    let nat = session.run(&spec).expect("phase-1 solve");
     let t_nat = t0.elapsed();
+    let world = session.world_stats().cloned().unwrap_or_default();
     println!(
         "CG native: {} iterations in {:.2?} ({} ranks, transport {}, {} threads/rank)",
         nat.iterations,
         t_nat,
-        ranks,
-        transport.name(),
-        spec.threads
+        spec.ranks,
+        spec.transport.name(),
+        spec.exec.threads
     );
     println!(
         "  |x - 1|_max = {:.2e}, converged = {}, rank_threads = {}, max_concurrent_ranks = {}",
-        nat.x_error, nat.converged, pb.stats.rank_threads, pb.stats.max_concurrent_ranks
+        nat.x_error, nat.converged, world.rank_threads, world.max_concurrent_ranks
     );
     assert!(nat.converged && nat.x_error < 1e-5);
 
-    // bitwise cross-check against the lockstep oracle
-    let mut pb2 = Problem::build(grid, kind, ranks);
-    let oracle = pb2.solve_hybrid(method, &opts, spec, TransportKind::Lockstep);
+    // bitwise cross-check against the lockstep oracle — the session
+    // reuses the cached assembly, only the transport changes
+    let oracle_spec = RunSpec {
+        transport: TransportKind::Lockstep,
+        ..spec.clone()
+    };
+    let oracle = session.run(&oracle_spec).expect("oracle solve");
     assert_identical(&nat, &oracle);
-    assert_eq!(pb2.stats.max_concurrent_ranks, 1);
+    assert_eq!(
+        session.world_stats().map(|w| w.max_concurrent_ranks),
+        Some(1)
+    );
     println!("  lockstep-oracle cross-check: bitwise identical history ✓");
+    // and a spec JSON round-trip replays the identical history
+    let replayed = RunSpec::from_json_str(&spec.to_json_string()).expect("spec round-trip");
+    let rep = session.run(&replayed).expect("replayed solve");
+    assert_identical(&nat, &rep);
+    println!("  spec JSON replay: bitwise identical history ✓");
     println!("  residual curve:");
     for (k, r) in nat.history.iter().enumerate() {
         println!("    iter {:>2}: {:.3e}", k + 1, r);
     }
 
     // optional: the same numerics through the AOT artifacts (PJRT)
-    match Runtime::load("artifacts") {
-        Ok(rt) => {
-            let rt = Rc::new(rt);
-            let mut px = Problem::build(grid, kind, 2);
-            let (n, n_ext) = {
-                let st = &px.ranks[0];
-                (st.n(), st.sys.part.n_ext())
-            };
-            let mut xc = XlaCompute::new(rt, n, kind.width(), n_ext).expect("e2e artifacts");
-            let xla = px.solve(method, &opts, &mut xc);
+    let xla_spec = RunSpec {
+        ranks: 2,
+        backend: BackendKind::Xla,
+        transport: TransportKind::Lockstep,
+        ..spec.clone()
+    };
+    match session.run(&xla_spec) {
+        Ok(xla) => {
             println!(
-                "  XLA artifact run (2 ranks, lockstep): {} iterations, executions {}",
-                xla.iterations,
-                xc.calls.borrow()
+                "  XLA artifact run (2 ranks, lockstep): {} iterations",
+                xla.iterations
             );
             assert!(xla.converged && xla.x_error < 1e-5);
-            let mut pn = Problem::build(grid, kind, 2);
-            let nat2 = pn.solve(method, &opts, &mut Native);
+            let nat_spec = RunSpec {
+                backend: BackendKind::Native,
+                ..xla_spec.clone()
+            };
+            let nat2 = session.run(&nat_spec).expect("native cross-check");
             assert_eq!(nat2.iterations, xla.iterations, "backend mismatch");
             println!("  native cross-check: identical count ✓");
         }
-        Err(e) => {
-            eprintln!("  (skipping XLA sub-phase — {e:#})");
+        Err(SolveError::Backend { reason, .. }) => {
+            eprintln!("  (skipping XLA sub-phase — {reason})");
             eprintln!("  run `make artifacts` to include it.");
         }
+        Err(e) => panic!("unexpected error: {e}"),
     }
     println!();
 }
 
 /// Constant work per rank, growing rank count, measured wall-clock on
 /// genuinely concurrent rank threads.
-fn phase2_real_weak_scaling(max_ranks: usize, spec: &ExecSpec) {
+fn phase2_real_weak_scaling(base: &RunSpec) {
     println!("=== Phase 2: real weak scaling (threaded transport) ===\n");
+    let max_ranks = base.ranks;
     let opts = SolveOpts {
         eps: 0.0, // fixed work: never converges before max_iters
         max_iters: 8,
         ..SolveOpts::default()
     };
-    let method = Method::parse("cg").unwrap();
     let (nx, ny, nz_per_rank) = (32, 32, 16);
     let mut ranks_list = vec![1usize, 2, 4];
     if max_ranks > 4 {
@@ -149,12 +171,20 @@ fn phase2_real_weak_scaling(max_ranks: usize, spec: &ExecSpec) {
         "{:<10} {:>8} {:>10} {:>12} {:>12}",
         "ranks", "rows", "time", "efficiency", "concurrent"
     );
+    let mut session = Session::new();
     let mut t_one = 0.0;
     for &ranks in &ranks_list {
         let grid = Grid3::new(nx, ny, nz_per_rank * ranks);
-        let mut pb = Problem::build(grid, StencilKind::P7, ranks);
+        let spec = RunSpec {
+            grid,
+            ranks,
+            transport: TransportKind::Threaded,
+            opts: opts.clone(),
+            ..base.clone()
+        };
+        session.problem(grid, StencilKind::P7, ranks); // assemble untimed
         let t0 = Instant::now();
-        let s = pb.solve_hybrid(method, &opts, spec, TransportKind::Threaded);
+        let s = session.run(&spec).expect("phase-2 solve");
         let dt = t0.elapsed().as_secs_f64();
         // fixed-work run: exactly max_iters iterations, no convergence
         assert_eq!(s.iterations, opts.max_iters);
@@ -168,7 +198,7 @@ fn phase2_real_weak_scaling(max_ranks: usize, spec: &ExecSpec) {
             grid.n(),
             dt,
             t_one / dt,
-            pb.stats.max_concurrent_ranks
+            session.world_stats().map(|w| w.max_concurrent_ranks).unwrap_or(0)
         );
     }
     println!("(perfect weak scaling = efficiency 1.0; one machine, so expect < 1)\n");

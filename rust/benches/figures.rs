@@ -37,7 +37,7 @@ fn main() {
     });
     println!("{}", r.report());
 
-    let r = bench("fig 1 traces", || harness::fig1(&out).len());
+    let r = bench("fig 1 traces", || harness::fig1(&out, &opts).len());
     println!("{}", r.report());
 
     let r = bench("fig 2 boxes", || harness::fig2(&out, &opts).len());

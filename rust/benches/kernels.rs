@@ -8,11 +8,12 @@
 //! The executor section uses a 128³ system (the paper's per-rank weak
 //! scaling size) — set HLAM_BENCH_SMALL=1 to shrink it for quick runs.
 
+use hlam::api::{RunSpec, Session};
 use hlam::exec::{ExecSpec, ExecStrategy, Executor, Reduction, SharedRows};
 use hlam::kernels;
 use hlam::mesh::Grid3;
 use hlam::simmpi::TransportKind;
-use hlam::solvers::{Method, Problem, SolveOpts};
+use hlam::solvers::{Method, SolveOpts};
 use hlam::sparse::{CsrMatrix, LocalSystem, StencilKind};
 use hlam::util::bench::{bench, gbps};
 use hlam::util::Rng;
@@ -199,15 +200,30 @@ fn hybrid_grid(small: bool) {
     println!(
         "== hybrid ranks × threads scaling (CG, {iters} fixed iters, 7-pt, threaded transport) ==\n"
     );
-    // strong scaling: fixed {nx}x{ny}x{nz} global system
+    // strong scaling: fixed {nx}x{ny}x{nz} global system. One session
+    // for the whole grid: assembly is cached per rank count and
+    // pre-warmed outside the timed region, so the timings measure the
+    // solve alone (as the pre-Session benches did).
     let strong = Grid3::new(nx, ny, nz);
+    let mut session = Session::new();
     let mut t_base = 0.0;
     for &ranks in &ranks_list {
+        // keep peak memory at one assembly: reuse within a rank count,
+        // evict when moving to the next
+        session.clear();
+        session.problem(strong, StencilKind::P7, ranks);
         for &threads in &threads_list {
-            let spec = ExecSpec::new(ExecStrategy::TaskPool, threads);
-            let mut pb = Problem::build(strong, StencilKind::P7, ranks);
+            let spec = RunSpec::builder()
+                .method(method)
+                .grid(strong)
+                .ranks(ranks)
+                .exec(ExecSpec::new(ExecStrategy::TaskPool, threads))
+                .transport(TransportKind::Threaded)
+                .opts(opts.clone())
+                .build()
+                .expect("bench spec");
             let t0 = Instant::now();
-            let s = pb.solve_hybrid(method, &opts, &spec, TransportKind::Threaded);
+            let s = session.run(&spec).expect("bench run");
             let dt = t0.elapsed().as_secs_f64();
             std::hint::black_box(s.rel_residual);
             if ranks == 1 && threads == 1 {
@@ -218,7 +234,7 @@ fn hybrid_grid(small: bool) {
                  speedup x{:.2}  (concurrent ranks {})",
                 dt,
                 t_base / dt,
-                pb.stats.max_concurrent_ranks
+                session.world_stats().map(|w| w.max_concurrent_ranks).unwrap_or(0)
             );
         }
     }
@@ -229,10 +245,19 @@ fn hybrid_grid(small: bool) {
     let mut t_one = 0.0;
     for &ranks in &ranks_list {
         let grid = Grid3::new(nx, ny, nz_per_rank * ranks);
-        let spec = ExecSpec::new(ExecStrategy::TaskPool, threads);
-        let mut pb = Problem::build(grid, StencilKind::P7, ranks);
+        session.clear();
+        session.problem(grid, StencilKind::P7, ranks);
+        let spec = RunSpec::builder()
+            .method(method)
+            .grid(grid)
+            .ranks(ranks)
+            .exec(ExecSpec::new(ExecStrategy::TaskPool, threads))
+            .transport(TransportKind::Threaded)
+            .opts(opts.clone())
+            .build()
+            .expect("bench spec");
         let t0 = Instant::now();
-        let s = pb.solve_hybrid(method, &opts, &spec, TransportKind::Threaded);
+        let s = session.run(&spec).expect("bench run");
         let dt = t0.elapsed().as_secs_f64();
         std::hint::black_box(s.rel_residual);
         if ranks == 1 {

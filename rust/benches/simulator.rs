@@ -4,11 +4,12 @@
 //!
 //!     cargo bench --bench simulator
 
-use hlam::exec::{ExecStrategy, Executor};
+use hlam::api::{RunSpec, Session};
+use hlam::exec::{ExecSpec, ExecStrategy};
 use hlam::harness::{weak_config, HarnessOpts};
 use hlam::mesh::Grid3;
 use hlam::simulator::{simulate_run, ExecModel};
-use hlam::solvers::{Method, Native, Problem, SolveOpts};
+use hlam::solvers::{Method, SolveOpts};
 use hlam::sparse::StencilKind;
 use hlam::taskrt::{list_schedule, Region, TaskGraph, TaskSpec};
 use hlam::util::bench::bench;
@@ -57,38 +58,51 @@ fn main() {
     println!("{}", r.report());
     println!();
 
-    // full real-numerics distributed solve (simmpi + kernels)
+    // full real-numerics distributed solve (simmpi + kernels) through
+    // the Session front-end; one cached assembly across all repetitions,
+    // so the benches time the solve rather than the setup
+    let mut session = Session::new();
+    let cg = RunSpec::builder()
+        .method(Method::parse("cg").unwrap())
+        .grid(Grid3::new(16, 16, 32))
+        .ranks(4)
+        .build()
+        .expect("bench spec");
     let r = bench("real numerics: cg 16x16x32 / 4 ranks", || {
-        let mut pb = Problem::build(Grid3::new(16, 16, 32), StencilKind::P7, 4);
-        pb.solve(Method::parse("cg").unwrap(), &SolveOpts::default(), &mut Native)
-            .iterations
+        session.run(&cg).expect("bench run").iterations
     });
     println!("{}", r.report());
 
     // the same solve under the real shared-memory executors
     for (strategy, threads) in [(ExecStrategy::ForkJoin, 4), (ExecStrategy::TaskPool, 4)] {
-        let exec = Executor::new(strategy, threads).with_chunk_rows(256);
+        let spec = RunSpec::builder()
+            .method(Method::parse("cg").unwrap())
+            .grid(Grid3::new(16, 16, 32))
+            .ranks(4)
+            .exec(ExecSpec::new(strategy, threads).with_chunk_rows(256))
+            .build()
+            .expect("bench spec");
         let label = format!("real numerics: cg / 4 ranks / {} x{threads}", strategy.name());
         let r = bench(&label, || {
-            let mut pb = Problem::build(Grid3::new(16, 16, 32), StencilKind::P7, 4);
-            pb.solve_with(
-                Method::parse("cg").unwrap(),
-                &SolveOpts::default(),
-                &mut Native,
-                &exec,
-            )
-            .iterations
+            session.run(&spec).expect("bench run").iterations
         });
         println!("{}", r.report());
     }
 
-    let r = bench("real numerics: gs-relaxed 16x16x32 / 4 ranks", || {
+    let gs = {
         let mut opts = SolveOpts::default();
         opts.ntasks = 16;
         opts.task_order_seed = 3;
-        let mut pb = Problem::build(Grid3::new(16, 16, 32), StencilKind::P7, 4);
-        pb.solve(Method::parse("gs-relaxed").unwrap(), &opts, &mut Native)
-            .iterations
+        RunSpec::builder()
+            .method(Method::parse("gs-relaxed").unwrap())
+            .grid(Grid3::new(16, 16, 32))
+            .ranks(4)
+            .opts(opts)
+            .build()
+            .expect("bench spec")
+    };
+    let r = bench("real numerics: gs-relaxed 16x16x32 / 4 ranks", || {
+        session.run(&gs).expect("bench run").iterations
     });
     println!("{}", r.report());
 }

@@ -1,0 +1,186 @@
+//! Structured errors for the [`RunSpec`](crate::api::RunSpec) /
+//! [`Session`](crate::api::Session) API.
+//!
+//! Two layers:
+//!
+//!  * [`SpecError`] — a run *description* is malformed: an unknown
+//!    method/strategy/transport/backend name (with a "did you mean"
+//!    suggestion computed by edit distance over the valid names), a bad
+//!    grid string, an out-of-range field, or broken spec JSON. These are
+//!    user-input errors: the CLI prints them with usage and exits
+//!    non-zero instead of panicking.
+//!  * [`SolveError`] — a well-formed spec could not be *executed*: the
+//!    spec failed validation, a backend could not be constructed (e.g.
+//!    missing XLA artifacts), or spec file I/O failed.
+//!
+//! Note that failing to converge is **not** an error — it is reported
+//! through `SolveStats::converged`, exactly as the legacy entry points
+//! did.
+
+use std::fmt;
+
+/// A malformed run description (user input). See the module docs.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum SpecError {
+    /// An enumerated name did not parse. `what` is the field ("method",
+    /// "stencil", ...), `valid` the canonical alternatives, `suggestion`
+    /// the closest valid name when one is within edit distance 2.
+    Unknown {
+        what: &'static str,
+        input: String,
+        valid: &'static str,
+        suggestion: Option<&'static str>,
+    },
+    /// A grid string was not `NXxNYxNZ` with three positive integers.
+    BadGrid { input: String },
+    /// A structurally valid field holds an unusable value.
+    Invalid { field: &'static str, reason: String },
+    /// The spec JSON did not parse or a field had the wrong type.
+    Json { msg: String },
+    /// The spec JSON lacks a required field.
+    MissingField { field: &'static str },
+}
+
+impl fmt::Display for SpecError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            SpecError::Unknown {
+                what,
+                input,
+                valid,
+                suggestion,
+            } => {
+                write!(f, "unknown {what} '{input}' (valid: {valid})")?;
+                if let Some(s) = suggestion {
+                    write!(f, " — did you mean '{s}'?")?;
+                }
+                Ok(())
+            }
+            SpecError::BadGrid { input } => write!(
+                f,
+                "bad grid '{input}': expected NXxNYxNZ (three positive integers, e.g. 16x16x32)"
+            ),
+            SpecError::Invalid { field, reason } => write!(f, "invalid {field}: {reason}"),
+            SpecError::Json { msg } => write!(f, "bad spec JSON: {msg}"),
+            SpecError::MissingField { field } => {
+                write!(f, "spec JSON is missing required field '{field}'")
+            }
+        }
+    }
+}
+
+impl std::error::Error for SpecError {}
+
+/// A well-formed spec that could not be executed. See the module docs.
+#[derive(Debug)]
+pub enum SolveError {
+    /// The spec failed validation (also returned eagerly by builders).
+    Spec(SpecError),
+    /// A compute backend could not be constructed for this spec.
+    Backend { backend: &'static str, reason: String },
+    /// Reading or writing a spec file failed.
+    Io { path: String, reason: String },
+}
+
+impl fmt::Display for SolveError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            SolveError::Spec(e) => write!(f, "{e}"),
+            SolveError::Backend { backend, reason } => {
+                write!(f, "backend '{backend}' unavailable: {reason}")
+            }
+            SolveError::Io { path, reason } => write!(f, "spec file '{path}': {reason}"),
+        }
+    }
+}
+
+impl std::error::Error for SolveError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            SolveError::Spec(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<SpecError> for SolveError {
+    fn from(e: SpecError) -> Self {
+        SolveError::Spec(e)
+    }
+}
+
+/// Closest candidate within edit distance 2 (and strictly closer than
+/// replacing the whole word) — the "did you mean" engine shared by every
+/// `FromStr` in this module's parent.
+pub fn suggest(input: &str, candidates: &[&'static str]) -> Option<&'static str> {
+    let mut best: Option<(usize, &'static str)> = None;
+    for &c in candidates {
+        let d = edit_distance(input, c);
+        let better = match best {
+            Some((bd, _)) => d < bd,
+            None => true,
+        };
+        if better {
+            best = Some((d, c));
+        }
+    }
+    best.and_then(|(d, c)| (d <= 2 && d < c.len()).then_some(c))
+}
+
+/// Levenshtein distance (small inputs only: option names).
+fn edit_distance(a: &str, b: &str) -> usize {
+    let a: Vec<char> = a.chars().collect();
+    let b: Vec<char> = b.chars().collect();
+    let mut prev: Vec<usize> = (0..=b.len()).collect();
+    let mut cur = vec![0usize; b.len() + 1];
+    for (i, &ca) in a.iter().enumerate() {
+        cur[0] = i + 1;
+        for (j, &cb) in b.iter().enumerate() {
+            let sub = prev[j] + usize::from(ca != cb);
+            cur[j + 1] = sub.min(prev[j + 1] + 1).min(cur[j] + 1);
+        }
+        std::mem::swap(&mut prev, &mut cur);
+    }
+    prev[b.len()]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn edit_distance_basics() {
+        assert_eq!(edit_distance("cg", "cg"), 0);
+        assert_eq!(edit_distance("cgg", "cg"), 1);
+        assert_eq!(edit_distance("", "cg"), 2);
+        assert_eq!(edit_distance("lockstep", "lockstp"), 1);
+        assert_eq!(edit_distance("kitten", "sitting"), 3);
+    }
+
+    #[test]
+    fn suggestions_within_two_edits() {
+        let names = ["jacobi", "gs", "cg", "cg-nb", "bicgstab"];
+        assert_eq!(suggest("cgg", &names), Some("cg"));
+        assert_eq!(suggest("jacobl", &names), Some("jacobi"));
+        assert_eq!(suggest("bicgstb", &names), Some("bicgstab"));
+        // hopeless inputs get no suggestion
+        assert_eq!(suggest("multigrid", &names), None);
+        // an empty input must not "suggest" a two-letter name
+        assert_eq!(suggest("", &names), None);
+    }
+
+    #[test]
+    fn display_formats() {
+        let e = SpecError::Unknown {
+            what: "method",
+            input: "cgg".into(),
+            valid: "cg|cg-nb",
+            suggestion: Some("cg"),
+        };
+        let msg = e.to_string();
+        assert!(msg.contains("unknown method 'cgg'"), "{msg}");
+        assert!(msg.contains("did you mean 'cg'"), "{msg}");
+        let s = SolveError::from(SpecError::BadGrid { input: "8x8".into() });
+        assert!(s.to_string().contains("bad grid"), "{s}");
+    }
+}

@@ -1,0 +1,857 @@
+//! The typed public API: one self-describing run description
+//! ([`RunSpec`]) executed by a caching [`Session`].
+//!
+//! The paper's whole point is comparing *one* numerical experiment
+//! across execution models; before this module the codebase spelled
+//! "one experiment" four different ways (`Problem::solve`,
+//! `solve_with`, `solve_hybrid`, plus ad-hoc CLI flag plumbing). A
+//! [`RunSpec`] is the single serialisable description — grid, stencil,
+//! method, ranks, executor spec, transport, backend, solve options —
+//! with a builder, JSON round-tripping for reproducible sweeps
+//! (`hlam solve --spec run.json` replays a saved run byte-identically)
+//! and validation that returns structured [`SpecError`]s ("did you
+//! mean" included) instead of panicking on user input.
+//!
+//! [`Session::run`] executes a spec with bitwise-identical convergence
+//! histories to the legacy `Problem::solve*` paths (asserted across all
+//! 8 method variants × transports × strategies by
+//! `tests/integration_api.rs`), caches problem assembly across runs
+//! that share {grid, stencil, ranks}, and accepts an
+//! [`Observer`](crate::solvers::Observer) for per-iteration residual /
+//! allreduce callbacks.
+//!
+//! ```
+//! use hlam::api::{RunSpec, Session};
+//!
+//! let spec = RunSpec::builder()
+//!     .method_str("cg-nb")
+//!     .grid_str("8x8x16")
+//!     .ranks(2)
+//!     .transport_str("threaded")
+//!     .build()
+//!     .unwrap();
+//! let mut session = Session::new();
+//! let stats = session.run(&spec).unwrap();
+//! assert!(stats.converged);
+//!
+//! // saved specs replay to the same run description
+//! let replay = RunSpec::from_json_str(&spec.to_json_string()).unwrap();
+//! assert_eq!(replay, spec);
+//! ```
+
+mod error;
+mod session;
+
+pub use error::{suggest, SolveError, SpecError};
+pub use session::Session;
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::str::FromStr;
+
+use crate::exec::{ExecSpec, ExecStrategy};
+use crate::mesh::Grid3;
+use crate::simmpi::TransportKind;
+use crate::solvers::{CgVariant, Method, SolveOpts};
+use crate::sparse::StencilKind;
+use crate::util::Json;
+
+// ---------------------------------------------------------------------
+// Error-typed parsing for the CLI-facing names (`FromStr` for every
+// enumerated spec field, with "did you mean" suggestions)
+// ---------------------------------------------------------------------
+
+const METHOD_VALID: &str = "jacobi|gs|gs-rb|gs-relaxed|cg|cg-nb|bicgstab|bicgstab-b1";
+const STENCIL_VALID: &str = "7|27";
+const STRATEGY_VALID: &str = "seq|fork-join|task";
+const TRANSPORT_VALID: &str = "lockstep|threaded";
+const BACKEND_VALID: &str = "native|xla";
+
+fn unknown(
+    what: &'static str,
+    input: &str,
+    valid: &'static str,
+    candidates: &[&'static str],
+) -> SpecError {
+    SpecError::Unknown {
+        what,
+        input: input.to_string(),
+        valid,
+        suggestion: suggest(input, candidates),
+    }
+}
+
+impl FromStr for Method {
+    type Err = SpecError;
+
+    /// ```
+    /// use hlam::solvers::Method;
+    /// let m: Method = "cg-nb".parse().unwrap();
+    /// assert_eq!(m.name(), "cg-nb");
+    /// let err = "cgg".parse::<Method>().unwrap_err();
+    /// assert!(err.to_string().contains("did you mean 'cg'"));
+    /// ```
+    fn from_str(s: &str) -> Result<Self, SpecError> {
+        Method::parse(s).ok_or_else(|| unknown("method", s, METHOD_VALID, &Method::NAMES))
+    }
+}
+
+impl FromStr for StencilKind {
+    type Err = SpecError;
+
+    fn from_str(s: &str) -> Result<Self, SpecError> {
+        StencilKind::parse(s)
+            .ok_or_else(|| unknown("stencil", s, STENCIL_VALID, &["7", "27", "p7", "p27"]))
+    }
+}
+
+impl FromStr for ExecStrategy {
+    type Err = SpecError;
+
+    fn from_str(s: &str) -> Result<Self, SpecError> {
+        ExecStrategy::parse(s).ok_or_else(|| {
+            unknown(
+                "exec strategy",
+                s,
+                STRATEGY_VALID,
+                &["seq", "fork-join", "task"],
+            )
+        })
+    }
+}
+
+impl FromStr for TransportKind {
+    type Err = SpecError;
+
+    fn from_str(s: &str) -> Result<Self, SpecError> {
+        TransportKind::parse(s)
+            .ok_or_else(|| unknown("transport", s, TRANSPORT_VALID, &["lockstep", "threaded"]))
+    }
+}
+
+impl FromStr for Grid3 {
+    type Err = SpecError;
+
+    /// Parse `NXxNYxNZ` without panicking (the CLI's grid syntax).
+    fn from_str(s: &str) -> Result<Self, SpecError> {
+        let bad = || SpecError::BadGrid {
+            input: s.to_string(),
+        };
+        let dims: Vec<usize> = s
+            .split('x')
+            .map(|d| d.trim().parse::<usize>().map_err(|_| bad()))
+            .collect::<Result<_, _>>()?;
+        if dims.len() != 3 || dims.iter().any(|&d| d == 0) {
+            return Err(bad());
+        }
+        Ok(Grid3::new(dims[0], dims[1], dims[2]))
+    }
+}
+
+/// Which compute backend executes the kernels.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BackendKind {
+    /// The native Rust kernels (thread-safe; the only backend the
+    /// threaded transport supports).
+    Native,
+    /// AOT-compiled JAX/Pallas artifacts through PJRT. Requires the
+    /// artifact directory configured on the [`Session`]; lockstep
+    /// transport only (the PJRT client is shared across ranks).
+    Xla,
+}
+
+impl BackendKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            BackendKind::Native => "native",
+            BackendKind::Xla => "xla",
+        }
+    }
+}
+
+impl FromStr for BackendKind {
+    type Err = SpecError;
+
+    fn from_str(s: &str) -> Result<Self, SpecError> {
+        match s {
+            "native" => Ok(BackendKind::Native),
+            "xla" => Ok(BackendKind::Xla),
+            _ => Err(unknown("backend", s, BACKEND_VALID, &["native", "xla"])),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// RunSpec
+// ---------------------------------------------------------------------
+
+/// One complete, serialisable run description — everything `Session`
+/// needs to reproduce a solve, and nothing more. Two equal specs run
+/// bitwise-identically (determinism contracts of `exec` and `simmpi`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct RunSpec {
+    pub grid: Grid3,
+    pub stencil: StencilKind,
+    pub method: Method,
+    /// MPI-style rank count (z-plane block decomposition).
+    pub ranks: usize,
+    /// Per-rank shared-memory executor (strategy × threads).
+    pub exec: ExecSpec,
+    pub transport: TransportKind,
+    pub backend: BackendKind,
+    pub opts: SolveOpts,
+}
+
+impl Default for RunSpec {
+    /// CG, 16x16x32 / 7-pt, 1 rank, sequential lockstep native — the
+    /// CLI's defaults.
+    fn default() -> Self {
+        RunSpec {
+            grid: Grid3::new(16, 16, 32),
+            stencil: StencilKind::P7,
+            method: Method::Cg(CgVariant::Classic),
+            ranks: 1,
+            exec: ExecSpec::new(ExecStrategy::Seq, 1),
+            transport: TransportKind::Lockstep,
+            backend: BackendKind::Native,
+            opts: SolveOpts::default(),
+        }
+    }
+}
+
+impl RunSpec {
+    pub fn builder() -> RunSpecBuilder {
+        RunSpecBuilder {
+            spec: RunSpec::default(),
+            err: None,
+        }
+    }
+
+    /// Check every cross-field constraint. `Session::run` calls this, so
+    /// a hand-constructed spec cannot smuggle a bad configuration past
+    /// the builder.
+    pub fn validate(&self) -> Result<(), SpecError> {
+        let invalid = |field: &'static str, reason: String| SpecError::Invalid { field, reason };
+        if self.ranks == 0 {
+            return Err(invalid("ranks", "must be at least 1".into()));
+        }
+        if self.grid.nz < self.ranks {
+            return Err(invalid(
+                "ranks",
+                format!(
+                    "grid has fewer z-planes ({}) than ranks ({}); the decomposition is \
+                     one block of xy-planes per rank",
+                    self.grid.nz, self.ranks
+                ),
+            ));
+        }
+        if self.exec.threads == 0 {
+            return Err(invalid("threads", "must be at least 1".into()));
+        }
+        if self.exec.chunk_rows == Some(0) {
+            return Err(invalid("chunk_rows", "must be at least 1 when set".into()));
+        }
+        if self.opts.max_iters == 0 {
+            return Err(invalid("max_iters", "must be at least 1".into()));
+        }
+        if self.opts.eps.is_nan() || self.opts.eps < 0.0 {
+            return Err(invalid("eps", "must be a non-negative number".into()));
+        }
+        if self.opts.restart_eps.is_nan() || self.opts.restart_eps < 0.0 {
+            return Err(invalid("restart_eps", "must be a non-negative number".into()));
+        }
+        if self.backend == BackendKind::Xla && self.transport == TransportKind::Threaded {
+            return Err(invalid(
+                "transport",
+                "backend 'xla' supports transport 'lockstep' only (the PJRT client is \
+                 shared across ranks)"
+                    .into(),
+            ));
+        }
+        Ok(())
+    }
+
+    // -- JSON ----------------------------------------------------------
+
+    /// Serialise to the spec JSON (compact, byte-stable for equal specs:
+    /// object keys are sorted).
+    pub fn to_json(&self) -> Json {
+        let mut exec = BTreeMap::new();
+        exec.insert(
+            "strategy".to_string(),
+            Json::Str(self.exec.strategy.name().to_string()),
+        );
+        exec.insert("threads".to_string(), Json::Num(self.exec.threads as f64));
+        if let Some(rows) = self.exec.chunk_rows {
+            exec.insert("chunk_rows".to_string(), Json::Num(rows as f64));
+        }
+
+        let mut opts = BTreeMap::new();
+        opts.insert("eps".to_string(), Json::Num(self.opts.eps));
+        opts.insert("eps_absolute".to_string(), Json::Bool(self.opts.eps_absolute));
+        opts.insert("restart_eps".to_string(), Json::Num(self.opts.restart_eps));
+        opts.insert(
+            "max_iters".to_string(),
+            Json::Num(self.opts.max_iters as f64),
+        );
+        opts.insert("ntasks".to_string(), Json::Num(self.opts.ntasks as f64));
+        let seed = self.opts.task_order_seed;
+        // u64 seeds beyond f64's exact-integer range do not survive a
+        // JSON number; write those as strings so the round-trip stays
+        // exact (the bound mirrors the parser's integer-field guard)
+        opts.insert(
+            "task_order_seed".to_string(),
+            if seed <= 9_000_000_000_000_000 {
+                Json::Num(seed as f64)
+            } else {
+                Json::Str(seed.to_string())
+            },
+        );
+
+        let mut m = BTreeMap::new();
+        m.insert(
+            "grid".to_string(),
+            Json::Str(format!("{}x{}x{}", self.grid.nx, self.grid.ny, self.grid.nz)),
+        );
+        m.insert("stencil".to_string(), Json::Num(self.stencil.width() as f64));
+        m.insert("method".to_string(), Json::Str(self.method.name().to_string()));
+        m.insert("ranks".to_string(), Json::Num(self.ranks as f64));
+        m.insert("exec".to_string(), Json::Obj(exec));
+        m.insert(
+            "transport".to_string(),
+            Json::Str(self.transport.name().to_string()),
+        );
+        m.insert(
+            "backend".to_string(),
+            Json::Str(self.backend.name().to_string()),
+        );
+        m.insert("opts".to_string(), Json::Obj(opts));
+        Json::Obj(m)
+    }
+
+    pub fn to_json_string(&self) -> String {
+        self.to_json().to_string()
+    }
+
+    /// Parse and validate a spec from its JSON value. `method` is
+    /// required; every other field defaults as in `RunSpec::default()`.
+    /// Unrecognised keys are rejected (with a "did you mean"), so a key
+    /// typo cannot silently replay a different run.
+    pub fn from_json(j: &Json) -> Result<RunSpec, SpecError> {
+        if j.as_obj().is_none() {
+            return Err(SpecError::Json {
+                msg: "top level must be an object".into(),
+            });
+        }
+        check_keys(
+            j,
+            &[
+                "grid", "stencil", "method", "ranks", "exec", "transport", "backend", "opts",
+            ],
+            "spec",
+        )?;
+        let mut spec = RunSpec::default();
+        spec.method = req_str(j, "method")?.parse()?;
+        if let Some(g) = opt_str(j, "grid")? {
+            spec.grid = g.parse()?;
+        }
+        if let Some(s) = j.get("stencil") {
+            spec.stencil = match s {
+                Json::Num(_) => int_field(s, "stencil")?.to_string().parse()?,
+                Json::Str(s) => s.parse()?,
+                _ => {
+                    return Err(SpecError::Json {
+                        msg: "field 'stencil' must be 7 or 27".into(),
+                    })
+                }
+            };
+        }
+        if let Some(r) = opt_usize(j, "ranks")? {
+            spec.ranks = r;
+        }
+        if let Some(e) = j.get("exec") {
+            if e.as_obj().is_none() {
+                return Err(SpecError::Json {
+                    msg: "field 'exec' must be an object".into(),
+                });
+            }
+            check_keys(e, &["strategy", "threads", "chunk_rows"], "exec")?;
+            if let Some(s) = opt_str(e, "strategy")? {
+                spec.exec.strategy = s.parse()?;
+            }
+            if let Some(t) = opt_usize(e, "threads")? {
+                spec.exec.threads = t;
+            }
+            spec.exec.chunk_rows = opt_usize(e, "chunk_rows")?;
+        }
+        if let Some(t) = opt_str(j, "transport")? {
+            spec.transport = t.parse()?;
+        }
+        if let Some(b) = opt_str(j, "backend")? {
+            spec.backend = b.parse()?;
+        }
+        if let Some(o) = j.get("opts") {
+            if o.as_obj().is_none() {
+                return Err(SpecError::Json {
+                    msg: "field 'opts' must be an object".into(),
+                });
+            }
+            check_keys(
+                o,
+                &[
+                    "eps",
+                    "eps_absolute",
+                    "restart_eps",
+                    "max_iters",
+                    "ntasks",
+                    "task_order_seed",
+                ],
+                "opts",
+            )?;
+            if let Some(x) = opt_f64(o, "eps")? {
+                spec.opts.eps = x;
+            }
+            if let Some(b) = opt_bool(o, "eps_absolute")? {
+                spec.opts.eps_absolute = b;
+            }
+            if let Some(x) = opt_f64(o, "restart_eps")? {
+                spec.opts.restart_eps = x;
+            }
+            if let Some(x) = opt_usize(o, "max_iters")? {
+                spec.opts.max_iters = x;
+            }
+            if let Some(x) = opt_usize(o, "ntasks")? {
+                spec.opts.ntasks = x;
+            }
+            if let Some(s) = o.get("task_order_seed") {
+                spec.opts.task_order_seed = match s {
+                    Json::Num(_) => int_field(s, "task_order_seed")? as u64,
+                    Json::Str(s) => s.parse::<u64>().map_err(|_| SpecError::Json {
+                        msg: format!("field 'task_order_seed': bad integer '{s}'"),
+                    })?,
+                    _ => {
+                        return Err(SpecError::Json {
+                            msg: "field 'task_order_seed' must be an integer".into(),
+                        })
+                    }
+                };
+            }
+        }
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    pub fn from_json_str(text: &str) -> Result<RunSpec, SpecError> {
+        let j = Json::parse(text).map_err(|e| SpecError::Json { msg: e.to_string() })?;
+        RunSpec::from_json(&j)
+    }
+
+    /// Load a validated spec from a JSON file.
+    pub fn load(path: impl AsRef<Path>) -> Result<RunSpec, SolveError> {
+        let path = path.as_ref();
+        let text = std::fs::read_to_string(path).map_err(|e| SolveError::Io {
+            path: path.display().to_string(),
+            reason: e.to_string(),
+        })?;
+        Ok(RunSpec::from_json_str(&text)?)
+    }
+
+    /// Write the spec JSON to a file (the replay side-channel: a run
+    /// saved here and loaded with [`RunSpec::load`] reproduces the same
+    /// convergence history byte for byte).
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<(), SolveError> {
+        let path = path.as_ref();
+        std::fs::write(path, self.to_json_string() + "\n").map_err(|e| SolveError::Io {
+            path: path.display().to_string(),
+            reason: e.to_string(),
+        })
+    }
+
+    /// One-line human summary (CLI echo).
+    pub fn describe(&self) -> String {
+        format!(
+            "method={} backend={} grid={}x{}x{} w={} ranks={} transport={} exec={} threads={}",
+            self.method.name(),
+            self.backend.name(),
+            self.grid.nx,
+            self.grid.ny,
+            self.grid.nz,
+            self.stencil.width(),
+            self.ranks,
+            self.transport.name(),
+            self.exec.strategy.name(),
+            self.exec.threads
+        )
+    }
+}
+
+// JSON field helpers ---------------------------------------------------
+
+/// Reject unknown object keys so a misspelled field errors (with a
+/// suggestion) instead of silently falling back to a default.
+fn check_keys(j: &Json, allowed: &[&'static str], ctx: &str) -> Result<(), SpecError> {
+    if let Some(m) = j.as_obj() {
+        for k in m.keys() {
+            if !allowed.contains(&k.as_str()) {
+                let msg = match suggest(k, allowed) {
+                    Some(want) => {
+                        format!("unknown {ctx} field '{k}' — did you mean '{want}'?")
+                    }
+                    None => format!(
+                        "unknown {ctx} field '{k}' (valid: {})",
+                        allowed.join(", ")
+                    ),
+                };
+                return Err(SpecError::Json { msg });
+            }
+        }
+    }
+    Ok(())
+}
+
+fn opt_str<'a>(j: &'a Json, field: &'static str) -> Result<Option<&'a str>, SpecError> {
+    match j.get(field) {
+        None => Ok(None),
+        Some(Json::Str(s)) => Ok(Some(s.as_str())),
+        Some(_) => Err(SpecError::Json {
+            msg: format!("field '{field}' must be a string"),
+        }),
+    }
+}
+
+fn req_str<'a>(j: &'a Json, field: &'static str) -> Result<&'a str, SpecError> {
+    opt_str(j, field)?.ok_or(SpecError::MissingField { field })
+}
+
+fn int_field(j: &Json, field: &'static str) -> Result<usize, SpecError> {
+    match j {
+        Json::Num(x) if x.fract() == 0.0 && *x >= 0.0 && *x <= 9.0e15 => Ok(*x as usize),
+        _ => Err(SpecError::Json {
+            msg: format!("field '{field}' must be a non-negative integer"),
+        }),
+    }
+}
+
+fn opt_usize(j: &Json, field: &'static str) -> Result<Option<usize>, SpecError> {
+    match j.get(field) {
+        None => Ok(None),
+        Some(v) => int_field(v, field).map(Some),
+    }
+}
+
+fn opt_f64(j: &Json, field: &'static str) -> Result<Option<f64>, SpecError> {
+    match j.get(field) {
+        None => Ok(None),
+        Some(Json::Num(x)) => Ok(Some(*x)),
+        Some(_) => Err(SpecError::Json {
+            msg: format!("field '{field}' must be a number"),
+        }),
+    }
+}
+
+fn opt_bool(j: &Json, field: &'static str) -> Result<Option<bool>, SpecError> {
+    match j.get(field) {
+        None => Ok(None),
+        Some(Json::Bool(b)) => Ok(Some(*b)),
+        Some(_) => Err(SpecError::Json {
+            msg: format!("field '{field}' must be a boolean"),
+        }),
+    }
+}
+
+// ---------------------------------------------------------------------
+// Builder
+// ---------------------------------------------------------------------
+
+/// Fluent [`RunSpec`] construction. Typed setters set directly; `_str`
+/// setters parse CLI-style names and defer the first failure to
+/// [`RunSpecBuilder::build`], so call chains read naturally:
+///
+/// ```
+/// use hlam::api::RunSpec;
+///
+/// let err = RunSpec::builder().method_str("cgg").build().unwrap_err();
+/// assert!(err.to_string().contains("did you mean 'cg'"), "{err}");
+/// ```
+#[derive(Debug, Clone)]
+pub struct RunSpecBuilder {
+    spec: RunSpec,
+    err: Option<SpecError>,
+}
+
+impl RunSpecBuilder {
+    // typed setters ----------------------------------------------------
+
+    pub fn grid(mut self, grid: Grid3) -> Self {
+        self.spec.grid = grid;
+        self
+    }
+
+    pub fn stencil(mut self, stencil: StencilKind) -> Self {
+        self.spec.stencil = stencil;
+        self
+    }
+
+    pub fn method(mut self, method: Method) -> Self {
+        self.spec.method = method;
+        self
+    }
+
+    pub fn ranks(mut self, ranks: usize) -> Self {
+        self.spec.ranks = ranks;
+        self
+    }
+
+    pub fn exec(mut self, exec: ExecSpec) -> Self {
+        self.spec.exec = exec;
+        self
+    }
+
+    pub fn strategy(mut self, strategy: ExecStrategy) -> Self {
+        self.spec.exec.strategy = strategy;
+        self
+    }
+
+    pub fn threads(mut self, threads: usize) -> Self {
+        self.spec.exec.threads = threads;
+        self
+    }
+
+    pub fn transport(mut self, transport: TransportKind) -> Self {
+        self.spec.transport = transport;
+        self
+    }
+
+    pub fn backend(mut self, backend: BackendKind) -> Self {
+        self.spec.backend = backend;
+        self
+    }
+
+    pub fn opts(mut self, opts: SolveOpts) -> Self {
+        self.spec.opts = opts;
+        self
+    }
+
+    pub fn eps(mut self, eps: f64) -> Self {
+        self.spec.opts.eps = eps;
+        self
+    }
+
+    pub fn max_iters(mut self, max_iters: usize) -> Self {
+        self.spec.opts.max_iters = max_iters;
+        self
+    }
+
+    pub fn ntasks(mut self, ntasks: usize) -> Self {
+        self.spec.opts.ntasks = ntasks;
+        self
+    }
+
+    pub fn task_order_seed(mut self, seed: u64) -> Self {
+        self.spec.opts.task_order_seed = seed;
+        self
+    }
+
+    // parsing setters (CLI names; first failure surfaces at build) -----
+
+    pub fn method_str(self, s: &str) -> Self {
+        let parsed = s.parse::<Method>();
+        self.apply(parsed, |spec, m| spec.method = m)
+    }
+
+    pub fn grid_str(self, s: &str) -> Self {
+        let parsed = s.parse::<Grid3>();
+        self.apply(parsed, |spec, g| spec.grid = g)
+    }
+
+    pub fn stencil_str(self, s: &str) -> Self {
+        let parsed = s.parse::<StencilKind>();
+        self.apply(parsed, |spec, k| spec.stencil = k)
+    }
+
+    pub fn strategy_str(self, s: &str) -> Self {
+        let parsed = s.parse::<ExecStrategy>();
+        self.apply(parsed, |spec, st| spec.exec.strategy = st)
+    }
+
+    pub fn transport_str(self, s: &str) -> Self {
+        let parsed = s.parse::<TransportKind>();
+        self.apply(parsed, |spec, t| spec.transport = t)
+    }
+
+    pub fn backend_str(self, s: &str) -> Self {
+        let parsed = s.parse::<BackendKind>();
+        self.apply(parsed, |spec, b| spec.backend = b)
+    }
+
+    fn apply<T>(mut self, parsed: Result<T, SpecError>, set: impl FnOnce(&mut RunSpec, T)) -> Self {
+        match parsed {
+            Ok(v) => set(&mut self.spec, v),
+            Err(e) => {
+                if self.err.is_none() {
+                    self.err = Some(e);
+                }
+            }
+        }
+        self
+    }
+
+    /// Surface the first parse error, then validate the assembled spec.
+    pub fn build(self) -> Result<RunSpec, SpecError> {
+        if let Some(e) = self.err {
+            return Err(e);
+        }
+        self.spec.validate()?;
+        Ok(self.spec)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_defaults_validate() {
+        let spec = RunSpec::builder().build().unwrap();
+        assert_eq!(spec, RunSpec::default());
+        assert_eq!(spec.method.name(), "cg");
+    }
+
+    #[test]
+    fn builder_parses_cli_names() {
+        let spec = RunSpec::builder()
+            .method_str("gs-rb")
+            .grid_str("4x4x8")
+            .stencil_str("27")
+            .strategy_str("task")
+            .threads(3)
+            .transport_str("threaded")
+            .ranks(2)
+            .build()
+            .unwrap();
+        assert_eq!(spec.method.name(), "gs-rb");
+        assert_eq!(spec.grid, Grid3::new(4, 4, 8));
+        assert_eq!(spec.stencil, StencilKind::P27);
+        assert_eq!(spec.exec.strategy, ExecStrategy::TaskPool);
+        assert_eq!(spec.transport, TransportKind::Threaded);
+    }
+
+    #[test]
+    fn builder_surfaces_first_parse_error() {
+        let err = RunSpec::builder()
+            .method_str("cgg")
+            .transport_str("lockstp")
+            .build()
+            .unwrap_err();
+        match err {
+            SpecError::Unknown {
+                what, suggestion, ..
+            } => {
+                assert_eq!(what, "method");
+                assert_eq!(suggestion, Some("cg"));
+            }
+            other => panic!("expected Unknown, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn validation_rejects_bad_fields() {
+        assert!(matches!(
+            RunSpec::builder().ranks(0).build(),
+            Err(SpecError::Invalid { field: "ranks", .. })
+        ));
+        // more ranks than z-planes
+        assert!(RunSpec::builder().grid_str("4x4x2").ranks(3).build().is_err());
+        assert!(matches!(
+            RunSpec::builder().threads(0).build(),
+            Err(SpecError::Invalid { field: "threads", .. })
+        ));
+        // xla over the threaded transport is a spec-level contradiction
+        let err = RunSpec::builder()
+            .backend_str("xla")
+            .transport_str("threaded")
+            .build()
+            .unwrap_err();
+        assert!(err.to_string().contains("lockstep"), "{err}");
+        // bad grid strings
+        assert!(matches!(
+            RunSpec::builder().grid_str("8x8").build(),
+            Err(SpecError::BadGrid { .. })
+        ));
+        assert!(RunSpec::builder().grid_str("8x0x8").build().is_err());
+        assert!(RunSpec::builder().grid_str("axbxc").build().is_err());
+    }
+
+    #[test]
+    fn json_roundtrip_default_and_custom() {
+        for spec in [
+            RunSpec::default(),
+            RunSpec::builder()
+                .method_str("bicgstab-b1")
+                .grid_str("6x6x12")
+                .stencil_str("27")
+                .ranks(4)
+                .exec(ExecSpec::new(ExecStrategy::TaskPool, 4).with_chunk_rows(32))
+                .transport_str("threaded")
+                .opts(SolveOpts {
+                    eps: 2.5e-9,
+                    eps_absolute: true,
+                    restart_eps: 1e-4,
+                    max_iters: 123,
+                    ntasks: 16,
+                    task_order_seed: 42,
+                    ..SolveOpts::default()
+                })
+                .build()
+                .unwrap(),
+        ] {
+            let text = spec.to_json_string();
+            let back = RunSpec::from_json_str(&text).unwrap();
+            assert_eq!(back, spec, "{text}");
+        }
+    }
+
+    #[test]
+    fn json_roundtrip_large_seed_exact() {
+        let spec = RunSpec::builder()
+            .task_order_seed(u64::MAX - 12345)
+            .build()
+            .unwrap();
+        let back = RunSpec::from_json_str(&spec.to_json_string()).unwrap();
+        assert_eq!(back.opts.task_order_seed, u64::MAX - 12345);
+    }
+
+    #[test]
+    fn json_requires_method() {
+        let err = RunSpec::from_json_str(r#"{"grid":"4x4x8"}"#).unwrap_err();
+        assert!(matches!(err, SpecError::MissingField { field: "method" }));
+        assert!(RunSpec::from_json_str("{not json").is_err());
+        assert!(RunSpec::from_json_str("[1,2]").is_err());
+    }
+
+    #[test]
+    fn json_rejects_unknown_keys_with_suggestion() {
+        let err =
+            RunSpec::from_json_str(r#"{"method":"cg","transprot":"threaded"}"#).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("transprot"), "{msg}");
+        assert!(msg.contains("transport"), "{msg}");
+        // nested objects are strict too
+        let err = RunSpec::from_json_str(r#"{"method":"cg","opts":{"epz":1.0}}"#).unwrap_err();
+        assert!(err.to_string().contains("eps"), "{}", err);
+    }
+
+    #[test]
+    fn json_parse_validates() {
+        // parses structurally but fails validation (ranks > nz)
+        let err =
+            RunSpec::from_json_str(r#"{"method":"cg","grid":"4x4x2","ranks":8}"#).unwrap_err();
+        assert!(matches!(err, SpecError::Invalid { field: "ranks", .. }));
+    }
+
+    #[test]
+    fn describe_mentions_the_key_dimensions() {
+        let d = RunSpec::default().describe();
+        assert!(d.contains("method=cg") && d.contains("ranks=1"), "{d}");
+    }
+}

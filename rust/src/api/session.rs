@@ -1,0 +1,269 @@
+//! [`Session`] — the caching executor of [`RunSpec`]s.
+//!
+//! A session owns problem assembly: the first run of a given
+//! {grid, stencil, ranks} assembles the distributed system, every later
+//! run reuses it (sweeps stop paying assembly per data point). Reuse is
+//! numerically invisible — the solvers reset the iterate and never
+//! mutate the matrix, right-hand side or halo map, so a cached-assembly
+//! run is bitwise identical to a fresh one (asserted by
+//! `tests/integration_api.rs`).
+
+use std::path::PathBuf;
+use std::rc::Rc;
+
+use crate::mesh::Grid3;
+use crate::runtime::{Runtime, XlaCompute};
+use crate::simmpi::{TransportKind, WorldStats};
+use crate::solvers::{NoopObserver, Observer, Problem, SolveStats};
+use crate::sparse::StencilKind;
+
+use super::{BackendKind, RunSpec, SolveError};
+
+struct CacheEntry {
+    grid: Grid3,
+    kind: StencilKind,
+    ranks: usize,
+    problem: Problem,
+}
+
+/// Executes [`RunSpec`]s with assembly caching, structured errors and
+/// observer support. See the module docs and [`crate::api`].
+///
+/// ```
+/// use hlam::api::{RunSpec, Session};
+/// use hlam::solvers::Observer;
+/// use std::sync::Mutex;
+///
+/// struct Progress(Mutex<Vec<f64>>);
+/// impl Observer for Progress {
+///     fn on_iteration(&self, rank: usize, _iteration: usize, rel: f64) {
+///         if rank == 0 {
+///             self.0.lock().unwrap().push(rel);
+///         }
+///     }
+/// }
+///
+/// let spec = RunSpec::builder().grid_str("4x4x8").build().unwrap();
+/// let obs = Progress(Mutex::new(Vec::new()));
+/// let stats = Session::new().run_observed(&spec, &obs).unwrap();
+/// assert_eq!(obs.0.into_inner().unwrap().len(), stats.history.len());
+/// ```
+pub struct Session {
+    artifacts: PathBuf,
+    cache: Vec<CacheEntry>,
+    /// Lazily-loaded PJRT runtime (one load per session, not per run).
+    runtime: Option<Rc<Runtime>>,
+    last_world: Option<WorldStats>,
+}
+
+impl Default for Session {
+    fn default() -> Self {
+        Session::new()
+    }
+}
+
+impl Session {
+    /// A session looking for XLA artifacts in `./artifacts` (only
+    /// relevant to `backend: xla` specs).
+    pub fn new() -> Self {
+        Session::with_artifacts("artifacts")
+    }
+
+    /// A session with an explicit artifact directory for the XLA
+    /// backend (`hlam --artifacts DIR`).
+    pub fn with_artifacts(dir: impl Into<PathBuf>) -> Self {
+        Session {
+            artifacts: dir.into(),
+            cache: Vec::new(),
+            runtime: None,
+            last_world: None,
+        }
+    }
+
+    /// Validate and execute one run description.
+    ///
+    /// Bitwise contract: for any valid spec the convergence history is
+    /// identical to the legacy entry point the spec maps to
+    /// (`Problem::solve_hybrid` for the native backend,
+    /// `Problem::solve_with` for XLA) — `Session` adds caching and
+    /// error structure, never numerics.
+    pub fn run(&mut self, spec: &RunSpec) -> Result<SolveStats, SolveError> {
+        self.run_observed(spec, &NoopObserver)
+    }
+
+    /// [`Session::run`] with per-iteration observer callbacks (see
+    /// [`crate::solvers::Observer`] for the determinism contract).
+    pub fn run_observed(
+        &mut self,
+        spec: &RunSpec,
+        obs: &dyn Observer,
+    ) -> Result<SolveStats, SolveError> {
+        spec.validate()?;
+        let rt = match spec.backend {
+            BackendKind::Xla => Some(self.runtime()?),
+            BackendKind::Native => None,
+        };
+        let pb = self.problem(spec.grid, spec.stencil, spec.ranks);
+        let stats = match spec.backend {
+            BackendKind::Native => {
+                pb.solve_hybrid_observed(spec.method, &spec.opts, &spec.exec, spec.transport, obs)
+            }
+            BackendKind::Xla => {
+                // lockstep-only (validated above): the PJRT client is
+                // shared across the serialised rank bodies
+                debug_assert_eq!(spec.transport, TransportKind::Lockstep);
+                let rt = rt.expect("loaded above for the xla backend");
+                let (n, n_ext) = {
+                    let st = &pb.ranks[0];
+                    (st.n(), st.sys.part.n_ext())
+                };
+                let mut xc = XlaCompute::new(rt, n, spec.stencil.width(), n_ext).map_err(|e| {
+                    SolveError::Backend {
+                        backend: "xla",
+                        reason: format!("{e} (see `hlam sizes` for available artifact sizes)"),
+                    }
+                })?;
+                let exec = spec.exec.build();
+                pb.solve_with_observed(spec.method, &spec.opts, &mut xc, &exec, obs)
+            }
+        };
+        let world = pb.stats.clone();
+        self.last_world = Some(world);
+        Ok(stats)
+    }
+
+    /// The session's PJRT runtime, loaded from the artifact directory on
+    /// first use and reused by every later xla-backend run.
+    fn runtime(&mut self) -> Result<Rc<Runtime>, SolveError> {
+        if let Some(rt) = &self.runtime {
+            return Ok(rt.clone());
+        }
+        let rt = Rc::new(Runtime::load(&self.artifacts).map_err(|e| SolveError::Backend {
+            backend: "xla",
+            reason: e.to_string(),
+        })?);
+        self.runtime = Some(rt.clone());
+        Ok(rt)
+    }
+
+    /// The assembled problem for {grid, stencil, ranks} — cached after
+    /// the first call.
+    pub fn problem(&mut self, grid: Grid3, kind: StencilKind, ranks: usize) -> &mut Problem {
+        if let Some(i) = self
+            .cache
+            .iter()
+            .position(|e| e.grid == grid && e.kind == kind && e.ranks == ranks)
+        {
+            return &mut self.cache[i].problem;
+        }
+        self.cache.push(CacheEntry {
+            grid,
+            kind,
+            ranks,
+            problem: Problem::build(grid, kind, ranks),
+        });
+        let last = self.cache.len() - 1;
+        &mut self.cache[last].problem
+    }
+
+    /// Number of distinct assemblies currently cached.
+    pub fn cached_problems(&self) -> usize {
+        self.cache.len()
+    }
+
+    /// Stable identity of a cached assembly (the address of rank 0's
+    /// matrix values) — `None` if that configuration was never
+    /// assembled. Two runs that reused one assembly report the same
+    /// pointer; tests use this to prove the cache actually reuses.
+    pub fn assembly_ptr(
+        &self,
+        grid: Grid3,
+        kind: StencilKind,
+        ranks: usize,
+    ) -> Option<*const f64> {
+        self.cache
+            .iter()
+            .find(|e| e.grid == grid && e.kind == kind && e.ranks == ranks)
+            .map(|e| e.problem.ranks[0].sys.a.vals.as_ptr())
+    }
+
+    /// Communication/concurrency statistics of the most recent run.
+    pub fn world_stats(&self) -> Option<&WorldStats> {
+        self.last_world.as_ref()
+    }
+
+    /// Drop every cached assembly (memory pressure valve for long
+    /// sweeps over many configurations).
+    pub fn clear(&mut self) {
+        self.cache.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::SpecError;
+
+    #[test]
+    fn run_validates_before_touching_the_cache() {
+        let mut s = Session::new();
+        let bad = RunSpec {
+            ranks: 0,
+            ..RunSpec::default()
+        };
+        match s.run(&bad) {
+            Err(SolveError::Spec(SpecError::Invalid { field, .. })) => {
+                assert_eq!(field, "ranks")
+            }
+            other => panic!("expected spec error, got {other:?}"),
+        }
+        assert_eq!(s.cached_problems(), 0);
+    }
+
+    #[test]
+    fn cache_is_keyed_on_grid_stencil_ranks() {
+        let mut s = Session::new();
+        let a = RunSpec::builder().grid_str("4x4x8").build().unwrap();
+        let b = RunSpec::builder().grid_str("4x4x8").ranks(2).build().unwrap();
+        s.run(&a).unwrap();
+        s.run(&a).unwrap();
+        assert_eq!(s.cached_problems(), 1);
+        s.run(&b).unwrap();
+        assert_eq!(s.cached_problems(), 2);
+        assert!(s
+            .assembly_ptr(a.grid, a.stencil, 1)
+            .is_some_and(|p| !p.is_null()));
+        assert!(s.assembly_ptr(a.grid, a.stencil, 3).is_none());
+        s.clear();
+        assert_eq!(s.cached_problems(), 0);
+    }
+
+    #[test]
+    fn xla_backend_reports_structured_backend_error_without_artifacts() {
+        // the offline build has the stub runtime: loading always fails,
+        // and the failure must surface as SolveError::Backend, not a
+        // panic
+        let mut s = Session::with_artifacts("/nonexistent/artifacts");
+        let spec = RunSpec::builder()
+            .grid_str("4x4x8")
+            .backend_str("xla")
+            .build()
+            .unwrap();
+        match s.run(&spec) {
+            Err(SolveError::Backend { backend, .. }) => assert_eq!(backend, "xla"),
+            Ok(_) => {} // real artifacts present (xla feature build): fine
+            Err(other) => panic!("expected backend error, got {other}"),
+        }
+    }
+
+    #[test]
+    fn world_stats_track_the_last_run() {
+        let mut s = Session::new();
+        let spec = RunSpec::builder().grid_str("4x4x8").ranks(2).build().unwrap();
+        assert!(s.world_stats().is_none());
+        s.run(&spec).unwrap();
+        let w = s.world_stats().unwrap();
+        assert!(w.p2p_messages > 0);
+        assert!(w.allreduces > 0);
+    }
+}

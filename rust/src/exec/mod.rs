@@ -181,7 +181,7 @@ pub const DEFAULT_CHUNK_ROWS: usize = 4096;
 /// strategy or thread count), two executors built from the same spec — or
 /// even from specs differing only in strategy/threads — produce identical
 /// numerics (the determinism contract above).
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct ExecSpec {
     pub strategy: ExecStrategy,
     pub threads: usize,

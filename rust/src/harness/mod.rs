@@ -6,18 +6,21 @@
 //! discrete-event simulator at full paper scale. Each figure is emitted
 //! as CSV into the output directory and as an ASCII rendition on stdout.
 
+use std::collections::BTreeMap;
 use std::fmt::Write as _;
 use std::path::Path;
 
+use crate::api::{BackendKind, RunSpec, Session};
 use crate::exec::{ExecSpec, ExecStrategy};
 use crate::machine::MachineModel;
 use crate::mesh::Grid3;
-use crate::simmpi::TransportKind;
+use crate::simmpi::{TransportKind, WorldStats};
 use crate::simulator::{repeat_runs, simulate_run, ExecModel, RunConfig};
-use crate::solvers::{Method, Problem, SolveOpts};
+use crate::solvers::{Method, SolveOpts, SolveStats};
 use crate::sparse::StencilKind;
 use crate::stats::{median, strong_efficiency, weak_efficiency, BoxStats};
 use crate::trace::build_trace;
+use crate::util::Json;
 
 /// Paper-reported iteration counts (§4.1, one node): canonical inputs to
 /// the timing runs; `iteration_table` cross-checks them against real
@@ -119,6 +122,50 @@ impl HarnessOpts {
         ExecSpec::new(self.exec, self.threads.max(1))
     }
 
+    /// The resolved [`RunSpec`] for one real-numerics run of a harness
+    /// table: harness-level execution knobs (`--exec`, `--threads`,
+    /// `--transport`) combined with the table's per-run parameters.
+    /// Always the native backend — the harness tables measure the
+    /// hybrid dimension, not the artifact path.
+    pub fn run_spec(
+        &self,
+        method: Method,
+        grid: Grid3,
+        kind: StencilKind,
+        ranks: usize,
+        opts: SolveOpts,
+    ) -> RunSpec {
+        RunSpec {
+            grid,
+            stencil: kind,
+            method,
+            ranks,
+            exec: self.exec_spec(),
+            transport: self.transport,
+            backend: BackendKind::Native,
+            opts,
+        }
+    }
+
+    /// JSON rendition of the resolved harness options (for the `.spec.json`
+    /// sidecar every harness CSV gets).
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("reps".to_string(), Json::Num(self.reps as f64));
+        m.insert("seed".to_string(), Json::Num(self.seed as f64));
+        m.insert("quick".to_string(), Json::Bool(self.quick));
+        m.insert("ntasks_p7".to_string(), Json::Num(self.ntasks_p7 as f64));
+        m.insert("ntasks_p27".to_string(), Json::Num(self.ntasks_p27 as f64));
+        m.insert("exec".to_string(), Json::Str(self.exec.name().to_string()));
+        m.insert("threads".to_string(), Json::Num(self.threads as f64));
+        m.insert("ranks".to_string(), Json::Num(self.ranks as f64));
+        m.insert(
+            "transport".to_string(),
+            Json::Str(self.transport.name().to_string()),
+        );
+        Json::Obj(m)
+    }
+
     /// Rank count for a real-numerics table, defaulting per table.
     fn table_ranks(&self, default: usize) -> usize {
         if self.ranks > 0 {
@@ -215,6 +262,50 @@ fn write_file(out_dir: &Path, name: &str, content: &str) {
         .unwrap_or_else(|e| panic!("write {name}: {e}"));
 }
 
+/// Write the `.spec.json` sidecar accompanying one harness CSV: the
+/// resolved harness options plus the exact [`RunSpec`] of every real
+/// solver run behind the table (empty for simulator-only figures).
+/// Feeding one of those specs to `hlam solve --spec` (or `Session::run`)
+/// replays that run byte-identically.
+fn spec_sidecar(out_dir: &Path, csv_name: &str, hopts: &HarnessOpts, runs: &[RunSpec]) {
+    let mut m = BTreeMap::new();
+    m.insert("csv".to_string(), Json::Str(csv_name.to_string()));
+    m.insert("harness".to_string(), hopts.to_json());
+    m.insert(
+        "runs".to_string(),
+        Json::Arr(runs.iter().map(RunSpec::to_json).collect()),
+    );
+    let name = format!("{}.spec.json", csv_name.trim_end_matches(".csv"));
+    write_file(out_dir, &name, &(Json::Obj(m).to_string() + "\n"));
+}
+
+/// Machine-model projection of one real measured run: map the spec's
+/// executor strategy onto its paper execution model, and feed the
+/// *measured* thread/rank concurrency (instead of the nominal machine
+/// layout) into the simulated timing configuration — the `hlam solve`
+/// epilogue that projects a laptop run to MareNostrum 4 scale
+/// (DESIGN.md §2/§3/§5).
+pub fn projection_config(spec: &RunSpec, stats: &SolveStats, world: &WorldStats) -> RunConfig {
+    let model = ExecModel::from_strategy(spec.exec.strategy);
+    let mut hopts = HarnessOpts {
+        threads: spec.exec.threads,
+        ..Default::default()
+    };
+    if spec.transport == TransportKind::Threaded {
+        // rank_threads is the measured count of concurrently-alive rank
+        // threads (deterministic thread-id accounting)
+        hopts.ranks = world.rank_threads.max(1);
+    }
+    if spec.opts.ntasks > 0 {
+        // carry the measured task granularity (and its seed) into the
+        // projection instead of the paper defaults
+        hopts.ntasks_p7 = spec.opts.ntasks;
+        hopts.ntasks_p27 = spec.opts.ntasks;
+        hopts.seed = spec.opts.task_order_seed.max(1);
+    }
+    weak_config(model, stats.method, spec.stencil, 1, &hopts)
+}
+
 // ---------------------------------------------------------------------
 // §4.1 iteration-count table (real numerics, reduced grid)
 // ---------------------------------------------------------------------
@@ -231,7 +322,6 @@ fn write_file(out_dir: &Path, name: &str, content: &str) {
 /// reduction grouping, so counts may legitimately shift by a little.
 pub fn iteration_table(out_dir: &Path, hopts: &HarnessOpts) -> String {
     let quick = hopts.quick;
-    let spec = hopts.exec_spec();
     let grid = if quick {
         Grid3::new(16, 16, 32)
     } else {
@@ -244,6 +334,22 @@ pub fn iteration_table(out_dir: &Path, hopts: &HarnessOpts) -> String {
          {:<14} {:>4} {:>9} {:>7}\n",
         grid.nx, grid.ny, grid.nz, nranks, "method", "w", "measured", "paper"
     );
+    // one session for the whole table: the {grid, stencil, ranks}
+    // assembly is built once per stencil and reused by all 8 methods
+    let mut session = Session::new();
+    let mut runs: Vec<RunSpec> = Vec::new();
+    // user-controlled --ranks can contradict the table grid; surface a
+    // structured message instead of panicking mid-table
+    let probe = hopts.run_spec(
+        Method::parse("cg").unwrap(),
+        grid,
+        StencilKind::P7,
+        nranks,
+        SolveOpts::default(),
+    );
+    if let Err(e) = probe.validate() {
+        return format!("§4.1 iteration table skipped: {e}\n");
+    }
     for kind in [StencilKind::P7, StencilKind::P27] {
         let methods = [
             "cg",
@@ -264,9 +370,11 @@ pub fn iteration_table(out_dir: &Path, hopts: &HarnessOpts) -> String {
                 opts.ntasks = 16;
                 opts.task_order_seed = 11;
             }
-            let mut pb = Problem::build(grid, kind, nranks);
-            let stats =
-                pb.solve_hybrid(Method::parse(method).unwrap(), &opts, &spec, hopts.transport);
+            let spec =
+                hopts.run_spec(Method::parse(method).unwrap(), grid, kind, nranks, opts);
+            // pre-validated above (specs differ only in method/opts)
+            let stats = session.run(&spec).expect("pre-validated spec");
+            runs.push(spec);
             let paper = paper_iterations(method, kind);
             let _ = writeln!(
                 csv,
@@ -287,6 +395,7 @@ pub fn iteration_table(out_dir: &Path, hopts: &HarnessOpts) -> String {
         }
     }
     write_file(out_dir, "table_iterations.csv", &csv);
+    spec_sidecar(out_dir, "table_iterations.csv", hopts, &runs);
     table
 }
 
@@ -294,7 +403,7 @@ pub fn iteration_table(out_dir: &Path, hopts: &HarnessOpts) -> String {
 // Fig. 1: Paraver traces
 // ---------------------------------------------------------------------
 
-pub fn fig1(out_dir: &Path) -> String {
+pub fn fig1(out_dir: &Path, hopts: &HarnessOpts) -> String {
     let m = MachineModel::marenostrum4();
     // paper: 8 MPI ranks × 8 cores per rank, readable time window
     let rows = 128.0 * 128.0 * 384.0;
@@ -302,6 +411,7 @@ pub fn fig1(out_dir: &Path) -> String {
     for method in ["cg", "cg-nb"] {
         let tr = build_trace(&m, method, 7.0, rows, 32, 8, 2, 1.2e-3);
         write_file(out_dir, &format!("fig1_{method}.csv"), &tr.to_csv());
+        spec_sidecar(out_dir, &format!("fig1_{method}.csv"), hopts, &[]);
         out.push_str(&tr.to_ascii(100));
         out.push('\n');
     }
@@ -355,6 +465,7 @@ pub fn fig2(out_dir: &Path, opts: &HarnessOpts) -> String {
         }
     }
     write_file(out_dir, "fig2_boxes.csv", &csv);
+    spec_sidecar(out_dir, "fig2_boxes.csv", opts, &[]);
     out
 }
 
@@ -430,6 +541,7 @@ pub fn fig3(out_dir: &Path, opts: &HarnessOpts) -> String {
     out += &weak_panel("3c", StencilKind::P7, &bi, "bicgstab", opts, &mut csv);
     out += &weak_panel("3d", StencilKind::P27, &bi, "bicgstab", opts, &mut csv);
     write_file(out_dir, "fig3_weak_ksm.csv", &csv);
+    spec_sidecar(out_dir, "fig3_weak_ksm.csv", opts, &[]);
     out
 }
 
@@ -452,6 +564,7 @@ pub fn fig4(out_dir: &Path, opts: &HarnessOpts) -> String {
     out += &weak_panel("4c", StencilKind::P7, &gs, "gs", opts, &mut csv);
     out += &weak_panel("4d", StencilKind::P27, &gs, "gs", opts, &mut csv);
     write_file(out_dir, "fig4_weak_jacobi_gs.csv", &csv);
+    spec_sidecar(out_dir, "fig4_weak_jacobi_gs.csv", opts, &[]);
     out
 }
 
@@ -563,6 +676,7 @@ pub fn fig56(fig: u8, out_dir: &Path, opts: &HarnessOpts) -> String {
         );
     }
     write_file(out_dir, &format!("fig{fig}_strong.csv"), &csv);
+    spec_sidecar(out_dir, &format!("fig{fig}_strong.csv"), opts, &[]);
     out
 }
 
@@ -618,6 +732,7 @@ pub fn headline(out_dir: &Path, opts: &HarnessOpts) -> String {
         );
     }
     write_file(out_dir, "headline.csv", &csv);
+    spec_sidecar(out_dir, "headline.csv", opts, &[]);
     out
 }
 
@@ -650,6 +765,7 @@ pub fn granularity_sweep(out_dir: &Path, opts: &HarnessOpts) -> String {
         );
     }
     write_file(out_dir, "granularity.csv", &csv);
+    spec_sidecar(out_dir, "granularity.csv", opts, &[]);
     out
 }
 
@@ -672,13 +788,13 @@ pub fn latency_table(out_dir: &Path) -> String {
         );
     }
     write_file(out_dir, "latency.csv", &csv);
+    spec_sidecar(out_dir, "latency.csv", &opts, &[]);
     out
 }
 
 /// §4.3 GS iteration counts by implementation (27-pt, real numerics).
 pub fn gs_iteration_table(out_dir: &Path, hopts: &HarnessOpts) -> String {
     let quick = hopts.quick;
-    let spec = hopts.exec_spec();
     let nranks = hopts.table_ranks(2);
     let grid = if quick {
         Grid3::new(12, 12, 24)
@@ -697,6 +813,19 @@ pub fn gs_iteration_table(out_dir: &Path, hopts: &HarnessOpts) -> String {
         ("relaxed tasks", "gs-relaxed", 16, 7, 150),
         ("fork-join", "gs", 0, 0, 152),
     ];
+    // one session: the 4 variants share one assembly
+    let mut session = Session::new();
+    let mut runs: Vec<RunSpec> = Vec::new();
+    let probe = hopts.run_spec(
+        Method::parse("gs").unwrap(),
+        grid,
+        StencilKind::P27,
+        nranks,
+        SolveOpts::default(),
+    );
+    if let Err(e) = probe.validate() {
+        return format!("§4.3 GS iteration table skipped: {e}\n");
+    }
     for (label, method, ntasks, seed, paper) in cases {
         let mut opts = SolveOpts {
             eps_absolute: true,
@@ -704,9 +833,15 @@ pub fn gs_iteration_table(out_dir: &Path, hopts: &HarnessOpts) -> String {
         };
         opts.ntasks = ntasks;
         opts.task_order_seed = seed;
-        let mut pb = Problem::build(grid, StencilKind::P27, nranks);
-        let stats =
-            pb.solve_hybrid(Method::parse(method).unwrap(), &opts, &spec, hopts.transport);
+        let spec = hopts.run_spec(
+            Method::parse(method).unwrap(),
+            grid,
+            StencilKind::P27,
+            nranks,
+            opts,
+        );
+        let stats = session.run(&spec).expect("pre-validated spec");
+        runs.push(spec);
         let _ = writeln!(csv, "{label},{},{paper}", stats.iterations);
         let _ = writeln!(
             out,
@@ -715,6 +850,7 @@ pub fn gs_iteration_table(out_dir: &Path, hopts: &HarnessOpts) -> String {
         );
     }
     write_file(out_dir, "gs_iterations.csv", &csv);
+    spec_sidecar(out_dir, "gs_iterations.csv", hopts, &runs);
     out
 }
 

@@ -13,7 +13,15 @@
 //! simulator that regenerates the paper's figures, and the PJRT runtime
 //! that executes the AOT-compiled JAX/Pallas artifacts. Python (layers
 //! 1-2) runs only at build time — see DESIGN.md at the repo root.
+//!
+//! The front door is [`api`]: a typed [`api::RunSpec`] (serialisable run
+//! description with builder + JSON round-trip) executed by a caching
+//! [`api::Session`] with structured errors and per-iteration
+//! [`solvers::Observer`] callbacks — see DESIGN.md §6. The older
+//! `Problem::solve*` entry points remain as engine-level shims with
+//! bitwise-identical numerics.
 
+pub mod api;
 pub mod exec;
 pub mod harness;
 pub mod kernels;

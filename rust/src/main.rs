@@ -4,42 +4,63 @@
 //!   solve     run one solver with real numerics (native or XLA backend)
 //!   figures   regenerate the paper's tables/figures into --out
 //!   trace     emit Fig-1-style task traces for chosen methods
-//!   sweep     task-granularity sweep (§4.2)
+//!   sweep     task-granularity sweep (§4.2) / RunSpec record & replay
 //!   sizes     list AOT artifact sizes available in artifacts/
+//!
+//! Every run is described by one typed `RunSpec` (see `hlam::api` and
+//! DESIGN.md §6): `--emit-spec [FILE]` saves the resolved spec as JSON,
+//! `--spec FILE` replays a saved spec byte-identically. Bad input never
+//! panics — errors print with usage guidance and a non-zero exit.
 //!
 //! Examples:
 //!   hlam solve --method cg --grid 16x16x32 --stencil 7 --ranks 2
 //!   hlam solve --method cg --grid 32x32x64 --ranks 4 --transport threaded \
 //!              --exec task --threads 4
 //!   hlam solve --method cg --backend xla --grid 8x8x8 --stencil 7
+//!   hlam solve --emit-spec run.json && hlam solve --spec run.json
 //!   hlam figures --all --out results
 //!   hlam figures --fig 3 --quick
 //!   hlam trace --methods cg,cg-nb
 //!   hlam sweep --granularity
+//!   hlam sweep --spec run.json
 
+use std::fmt;
 use std::path::PathBuf;
-use std::rc::Rc;
+use std::process::ExitCode;
+use std::str::FromStr;
 
-use hlam::exec::{ExecSpec, ExecStrategy, Executor};
+use hlam::api::{RunSpec, Session, SolveError, SpecError};
+use hlam::exec::ExecStrategy;
 use hlam::harness::{self, HarnessOpts};
-use hlam::mesh::Grid3;
-use hlam::runtime::{Runtime, XlaCompute};
+use hlam::runtime::Runtime;
 use hlam::simmpi::TransportKind;
-use hlam::solvers::{Method, Problem, SolveOpts};
-use hlam::sparse::StencilKind;
+use hlam::solvers::SolveOpts;
 use hlam::util::Args;
 
-fn main() {
+fn main() -> ExitCode {
     let raw: Vec<String> = std::env::args().skip(1).collect();
     let args = Args::parse(raw, &["all", "quick", "verbose", "granularity", "xla"]);
     let cmd = args.positional.first().map(String::as_str).unwrap_or("help");
-    match cmd {
+    let result = match cmd {
         "solve" => cmd_solve(&args),
         "figures" => cmd_figures(&args),
         "trace" => cmd_trace(&args),
         "sweep" => cmd_sweep(&args),
         "sizes" => cmd_sizes(&args),
-        _ => usage(),
+        "help" | "--help" | "-h" => {
+            usage();
+            Ok(())
+        }
+        other => Err(CliError(format!("unknown command '{other}'"))),
+    };
+    match result {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e}");
+            eprintln!();
+            usage();
+            ExitCode::from(2)
+        }
     }
 }
 
@@ -53,140 +74,145 @@ fn usage() {
         \x20        --grid NXxNYxNZ --stencil 7|27 --ranks N --backend native|xla\n\
         \x20        --transport lockstep|threaded --exec seq|fork-join|task --threads N\n\
         \x20        --eps 1e-6 --ntasks N --task-seed S --artifacts DIR\n\
+        \x20        --spec FILE (replay a saved run) --emit-spec [FILE] (save/print it)\n\
          figures --all | --fig 1|2|3|4|5|6|iters|gs-iters|granularity|latency|headline\n\
         \x20        --out DIR --reps N --quick --ranks N --transport lockstep|threaded\n\
          trace   --methods cg,cg-nb --out DIR\n\
-         sweep   --granularity [--out DIR]\n\
+         sweep   --granularity [--out DIR] | --spec FILE | <solve flags> --emit-spec [FILE]\n\
          sizes   [--artifacts DIR]"
     );
 }
 
-fn parse_grid(s: &str) -> Grid3 {
-    let dims: Vec<usize> = s
-        .split('x')
-        .map(|d| d.parse().unwrap_or_else(|_| panic!("bad grid '{s}'")))
-        .collect();
-    assert_eq!(dims.len(), 3, "grid must be NXxNYxNZ");
-    Grid3::new(dims[0], dims[1], dims[2])
+/// CLI-level error: a spec/solve error or a malformed flag value.
+/// Printed (with usage) and mapped to exit code 2 — never a panic.
+struct CliError(String);
+
+impl fmt::Display for CliError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
 }
 
-fn parse_transport(args: &Args) -> TransportKind {
-    TransportKind::parse(&args.str_or("transport", "lockstep"))
-        .unwrap_or_else(|| panic!("--transport expects lockstep|threaded"))
+impl From<SpecError> for CliError {
+    fn from(e: SpecError) -> Self {
+        CliError(e.to_string())
+    }
 }
 
-fn cmd_solve(args: &Args) {
-    let method = Method::parse(&args.str_or("method", "cg"))
-        .unwrap_or_else(|| panic!("unknown method"));
-    let grid = parse_grid(&args.str_or("grid", "16x16x32"));
-    let kind = StencilKind::parse(&args.str_or("stencil", "7")).expect("stencil 7 or 27");
-    let nranks = args.usize_or("ranks", 1);
-    let mut opts = SolveOpts {
-        eps: args.f64_or("eps", 1e-6),
+impl From<SolveError> for CliError {
+    fn from(e: SolveError) -> Self {
+        CliError(e.to_string())
+    }
+}
+
+/// Numeric flag with default; bad input is a structured error, not a
+/// panic (`Args::usize_or` and friends panic and are not used here).
+fn num<T: FromStr>(args: &Args, name: &str, default: T) -> Result<T, CliError> {
+    match args.get(name) {
+        None => Ok(default),
+        Some(v) => v
+            .parse()
+            .map_err(|_| CliError(format!("--{name} expects a number, got '{v}'"))),
+    }
+}
+
+/// Enumerated flag parsed through the api layer's `FromStr` (unknown
+/// values get "did you mean" suggestions).
+fn parse_arg<T: FromStr<Err = SpecError>>(
+    args: &Args,
+    name: &str,
+    default: &str,
+) -> Result<T, CliError> {
+    args.str_or(name, default).parse::<T>().map_err(CliError::from)
+}
+
+/// The resolved `RunSpec` of this invocation: `--spec FILE` replays a
+/// saved description verbatim; otherwise the solve flags build one.
+fn resolve_spec(args: &Args) -> Result<RunSpec, CliError> {
+    if let Some(path) = args.get("spec") {
+        return Ok(RunSpec::load(path)?);
+    }
+    let opts = SolveOpts {
+        eps: num(args, "eps", 1e-6)?,
         eps_absolute: args.str_or("eps-mode", "absolute") == "absolute",
-        ntasks: args.usize_or("ntasks", 0),
-        task_order_seed: args.u64_or("task-seed", 0),
-        ..SolveOpts::default()
+        restart_eps: num(args, "restart-eps", 1e-5)?,
+        max_iters: num(args, "max-iters", 10_000)?,
+        ntasks: num(args, "ntasks", 0)?,
+        task_order_seed: num(args, "task-seed", 0u64)?,
     };
-    opts.max_iters = args.usize_or("max-iters", 10_000);
+    let spec = RunSpec::builder()
+        .method_str(&args.str_or("method", "cg"))
+        .grid_str(&args.str_or("grid", "16x16x32"))
+        .stencil_str(&args.str_or("stencil", "7"))
+        .ranks(num(args, "ranks", 1)?)
+        .strategy_str(&args.str_or("exec", "seq"))
+        // the CLI has always clamped --threads 0 to 1 (hand-built specs
+        // go through the stricter RunSpec::validate instead)
+        .threads(num(args, "threads", 1)?.max(1))
+        .transport_str(&args.str_or("transport", "lockstep"))
+        .backend_str(&args.str_or("backend", "native"))
+        .opts(opts)
+        .build()?;
+    Ok(spec)
+}
 
-    // real hybrid execution: ranks (--transport) × threads (--exec)
-    let strategy = ExecStrategy::parse(&args.str_or("exec", "seq"))
-        .unwrap_or_else(|| panic!("--exec expects seq|fork-join|task"));
-    let threads = args.usize_or("threads", 1);
-    let transport = parse_transport(args);
-    let spec = ExecSpec::new(strategy, threads);
+/// `--emit-spec FILE` writes the resolved spec JSON; a bare trailing
+/// `--emit-spec` prints it to stdout.
+fn emit_spec_if_requested(args: &Args, spec: &RunSpec) -> Result<(), CliError> {
+    if let Some(path) = args.get("emit-spec") {
+        spec.save(path)?;
+        println!("spec saved to {path} (replay with `hlam solve --spec {path}`)");
+    } else if args.flag("emit-spec") {
+        println!("{}", spec.to_json_string());
+    }
+    Ok(())
+}
 
-    let mut pb = Problem::build(grid, kind, nranks);
-    let backend_name = args.str_or("backend", "native");
-    let stats = match backend_name.as_str() {
-        "native" => pb.solve_hybrid(method, &opts, &spec, transport),
-        "xla" => {
-            // The XLA backend executes whole-vector artifacts through one
-            // PJRT client; it is not thread-safe, so the serialised
-            // lockstep transport is the only one that may share it.
-            assert!(
-                transport == TransportKind::Lockstep,
-                "--backend xla supports --transport lockstep only \
-                 (the PJRT client is shared across ranks)"
-            );
-            let rt = Rc::new(
-                Runtime::load(args.str_or("artifacts", "artifacts"))
-                    .expect("load artifacts"),
-            );
-            let st = &pb.ranks[0];
-            let (n, w, n_ext) = (st.n(), kind.width(), st.sys.part.n_ext());
-            let mut xc = XlaCompute::new(rt, n, w, n_ext)
-                .expect("artifacts for this size (see `hlam sizes`)");
-            let exec = Executor::new(strategy, threads);
-            let stats = pb.solve_with(method, &opts, &mut xc, &exec);
-            println!("xla executions: {}", xc.calls.borrow());
-            stats
-        }
-        other => panic!("unknown backend '{other}'"),
-    };
-    println!(
-        "method={} backend={} grid={}x{}x{} w={} ranks={} transport={} exec={} threads={}",
-        stats.method, backend_name, grid.nx, grid.ny, grid.nz,
-        kind.width(), nranks, transport.name(), strategy.name(), threads
-    );
+fn cmd_solve(args: &Args) -> Result<(), CliError> {
+    let spec = resolve_spec(args)?;
+    emit_spec_if_requested(args, &spec)?;
+    let mut session = Session::with_artifacts(args.str_or("artifacts", "artifacts"));
+    let stats = session.run(&spec)?;
+    println!("{}", spec.describe());
     println!(
         "iterations={} converged={} rel_residual={:.3e} x_error={:.3e} restarts={}",
         stats.iterations, stats.converged, stats.rel_residual, stats.x_error, stats.restarts
     );
+    let world = session.world_stats().cloned().unwrap_or_default();
     println!(
         "p2p_msgs={} p2p_bytes={} allreduces={} rank_threads={} max_concurrent_ranks={}",
-        pb.stats.p2p_messages,
-        pb.stats.p2p_bytes,
-        pb.stats.allreduces,
-        pb.stats.rank_threads,
-        pb.stats.max_concurrent_ranks
+        world.p2p_messages,
+        world.p2p_bytes,
+        world.allreduces,
+        world.rank_threads,
+        world.max_concurrent_ranks
     );
 
-    // project the measured configuration onto the machine model: the
-    // strategy maps to its paper execution model, the measured thread
-    // count overrides the nominal cores-per-rank, and — for genuinely
-    // concurrent transports — the measured rank concurrency overrides
-    // the nominal ranks-per-node (DESIGN.md §2-§3-§5)
-    let model = hlam::simulator::ExecModel::from_strategy(strategy);
-    let mut hopts = HarnessOpts {
-        threads,
-        ..Default::default()
-    };
-    if transport == TransportKind::Threaded {
-        // rank_threads is the measured count of concurrently-alive rank
-        // threads (deterministic thread-id accounting)
-        hopts.ranks = pb.stats.rank_threads.max(1);
-    }
-    if opts.ntasks > 0 {
-        // carry the measured task granularity (and its seed) into the
-        // projection instead of the paper defaults
-        hopts.ntasks_p7 = opts.ntasks;
-        hopts.ntasks_p27 = opts.ntasks;
-        hopts.seed = opts.task_order_seed.max(1);
-    }
-    let cfg = harness::weak_config(model, stats.method, kind, 1, &hopts);
+    // project the measured configuration onto the machine model
+    // (measured threads/ranks/task granularity override the nominal
+    // layout — DESIGN.md §2-§3-§5)
+    let cfg = harness::projection_config(&spec, &stats, &world);
     let proj = hlam::simulator::simulate_run(&cfg);
     println!(
         "machine-model projection ({}, 1 node, {} ranks/node, {} iters): {:.3}s",
-        model.name(),
+        cfg.model.name(),
         cfg.nranks(),
         cfg.iterations,
         proj.total_time
     );
+    Ok(())
 }
 
-fn cmd_figures(args: &Args) {
+fn cmd_figures(args: &Args) -> Result<(), CliError> {
     let out = PathBuf::from(args.str_or("out", "results"));
     let opts = HarnessOpts {
-        reps: args.usize_or("reps", 10),
+        reps: num(args, "reps", 10)?,
         quick: args.flag("quick"),
-        seed: args.u64_or("seed", HarnessOpts::default().seed),
-        exec: ExecStrategy::parse(&args.str_or("exec", "seq"))
-            .unwrap_or_else(|| panic!("--exec expects seq|fork-join|task")),
-        threads: args.usize_or("threads", 0),
-        ranks: args.usize_or("ranks", 0),
-        transport: parse_transport(args),
+        seed: num(args, "seed", HarnessOpts::default().seed)?,
+        exec: parse_arg::<ExecStrategy>(args, "exec", "seq")?,
+        threads: num(args, "threads", 0)?,
+        ranks: num(args, "ranks", 0)?,
+        transport: parse_arg::<TransportKind>(args, "transport", "lockstep")?,
         ..Default::default()
     };
     let which = if args.flag("all") {
@@ -209,7 +235,7 @@ fn cmd_figures(args: &Args) {
     for fig in which {
         let text = match fig.as_str() {
             "iters" => harness::iteration_table(&out, &opts),
-            "1" => harness::fig1(&out),
+            "1" => harness::fig1(&out, &opts),
             "2" => harness::fig2(&out, &opts),
             "3" => harness::fig3(&out, &opts),
             "4" => harness::fig4(&out, &opts),
@@ -220,46 +246,77 @@ fn cmd_figures(args: &Args) {
             "latency" => harness::latency_table(&out),
             "headline" => harness::headline(&out, &opts),
             other => {
-                eprintln!("unknown figure '{other}'");
+                eprintln!(
+                    "unknown figure '{other}' (valid: 1-6, iters, gs-iters, granularity, \
+                     latency, headline)"
+                );
                 continue;
             }
         };
         println!("{text}");
     }
-    println!("CSV outputs in {}", out.display());
+    println!("CSV outputs (with .spec.json sidecars) in {}", out.display());
+    Ok(())
 }
 
-fn cmd_trace(args: &Args) {
+fn cmd_trace(args: &Args) -> Result<(), CliError> {
     let out = PathBuf::from(args.str_or("out", "results"));
-    std::fs::create_dir_all(&out).expect("create out dir");
+    std::fs::create_dir_all(&out)
+        .map_err(|e| CliError(format!("create {}: {e}", out.display())))?;
     let m = hlam::machine::MachineModel::marenostrum4();
     for method in args.list_or("methods", &["cg", "cg-nb"]) {
         let tr = hlam::trace::build_trace(
             &m,
             &method,
-            args.f64_or("nbar", 7.0),
-            args.f64_or("rows", 128.0 * 128.0 * 384.0),
-            args.usize_or("nblocks", 32),
-            args.usize_or("cores", 8),
-            args.usize_or("iterations", 2),
-            args.f64_or("allreduce-cost", 1.2e-3),
+            num(args, "nbar", 7.0)?,
+            num(args, "rows", 128.0 * 128.0 * 384.0)?,
+            num(args, "nblocks", 32)?,
+            num(args, "cores", 8)?,
+            num(args, "iterations", 2)?,
+            num(args, "allreduce-cost", 1.2e-3)?,
         );
-        std::fs::write(out.join(format!("trace_{method}.csv")), tr.to_csv())
-            .expect("write trace");
+        let path = out.join(format!("trace_{method}.csv"));
+        std::fs::write(&path, tr.to_csv())
+            .map_err(|e| CliError(format!("write {}: {e}", path.display())))?;
         println!("{}", tr.to_ascii(100));
     }
+    Ok(())
 }
 
-fn cmd_sweep(args: &Args) {
+fn cmd_sweep(args: &Args) -> Result<(), CliError> {
     let out = PathBuf::from(args.str_or("out", "results"));
+    // record/replay mode: --spec FILE replays a saved run, --emit-spec
+    // saves the resolved flags — either way a single-run RunSpec flow
+    if args.get("spec").is_some() || args.get("emit-spec").is_some() || args.flag("emit-spec") {
+        let spec = resolve_spec(args)?;
+        emit_spec_if_requested(args, &spec)?;
+        let mut session = Session::with_artifacts(args.str_or("artifacts", "artifacts"));
+        let stats = session.run(&spec)?;
+        println!("{}", spec.describe());
+        println!(
+            "iterations={} converged={} rel_residual={:.3e} restarts={}",
+            stats.iterations, stats.converged, stats.rel_residual, stats.restarts
+        );
+        // the convergence history is the replay contract: print a
+        // bit-exact digest so two runs can be diffed from the console
+        let digest = stats
+            .history
+            .iter()
+            .fold(0u64, |acc, r| acc.rotate_left(1) ^ r.to_bits());
+        println!("history_digest={digest:016x} ({} entries)", stats.history.len());
+        return Ok(());
+    }
     let opts = HarnessOpts::default();
     println!("{}", harness::granularity_sweep(&out, &opts));
+    Ok(())
 }
 
-fn cmd_sizes(args: &Args) {
-    let rt = Runtime::load(args.str_or("artifacts", "artifacts")).expect("load artifacts");
+fn cmd_sizes(args: &Args) -> Result<(), CliError> {
+    let dir = args.str_or("artifacts", "artifacts");
+    let rt = Runtime::load(&dir).map_err(|e| CliError(e.to_string()))?;
     println!("available AOT sizes (n, w, n_ext):");
     for (n, w, n_ext) in rt.sizes() {
         println!("  n={n:>7} w={w:>2} n_ext={n_ext:>7}  (halo {})", n_ext - n - 1);
     }
+    Ok(())
 }

@@ -22,7 +22,7 @@
 //! (`8k + salt`) so seeded task-order runs reproduce pre-refactor
 //! histories bit for bit.
 
-use super::{Compute, Ops, RankState, SolveOpts, SolveStats, SolverDriver};
+use super::{Compute, Observer, Ops, RankState, SolveOpts, SolveStats, SolverDriver};
 use crate::exec::Executor;
 use crate::simmpi::Transport;
 
@@ -44,10 +44,11 @@ pub fn solve_rank(
     opts: &SolveOpts,
     backend: &mut dyn Compute,
     exec: &Executor,
+    obs: &dyn Observer,
 ) -> SolveStats {
     match variant {
-        BiVariant::Classic => classic(st, tp, opts, backend, exec),
-        BiVariant::B1 => b1(st, tp, opts, backend, exec),
+        BiVariant::Classic => classic(st, tp, opts, backend, exec, obs),
+        BiVariant::B1 => b1(st, tp, opts, backend, exec, obs),
     }
 }
 
@@ -57,8 +58,9 @@ fn classic(
     opts: &SolveOpts,
     backend: &mut dyn Compute,
     exec: &Executor,
+    obs: &dyn Observer,
 ) -> SolveStats {
-    let mut drv = SolverDriver::new(exec, opts);
+    let mut drv = SolverDriver::new(exec, opts, obs, tp.rank());
     let mut ops = Ops {
         exec,
         opts,
@@ -76,7 +78,7 @@ fn classic(
     let mut rr = rho;
 
     for k in 0..opts.max_iters {
-        if drv.conv.pre_check(rr, opts) {
+        if drv.pre_check(rr) {
             break;
         }
         // Ap = A·p ; ad = (r', Ap)                       BARRIER 1
@@ -147,7 +149,7 @@ fn classic(
         }
         rho = rho_new;
         rr = rr_new;
-        drv.conv.record(k + 1, rr, opts);
+        drv.record(k + 1, rr);
     }
 
     drv.finish("bicgstab", 0)
@@ -162,8 +164,9 @@ fn b1(
     opts: &SolveOpts,
     backend: &mut dyn Compute,
     exec: &Executor,
+    obs: &dyn Observer,
 ) -> SolveStats {
-    let mut drv = SolverDriver::new(exec, opts);
+    let mut drv = SolverDriver::new(exec, opts, obs, tp.rank());
     let mut ops = Ops {
         exec,
         opts,
@@ -227,7 +230,7 @@ fn b1(
         let omega = num / den;
 
         // line 7: exit check on beta (previous iteration's (r,r))
-        if drv.conv.pre_check(beta, opts) {
+        if drv.pre_check(beta) {
             // line 18: x = x_{1/2} + omega·s
             let RankState { x_ext, s_ext, .. } = st;
             ops.axpby(omega, &s_ext[..n], 1.0, &mut x_ext[..n], n);
@@ -283,7 +286,7 @@ fn b1(
             ops.axpby(1.0, &r_ext[..n], coeff, &mut p_ext[..n], n);
             an = an_new;
         }
-        drv.conv.record(k + 1, beta, opts);
+        drv.record(k + 1, beta);
     }
 
     drv.finish("bicgstab-b1", restarts)

@@ -24,7 +24,7 @@
 //! order (§3.3). CG tolerates this (paper: "this does not constitute an
 //! issue for the CG methods").
 
-use super::{Compute, Ops, RankState, SolveOpts, SolveStats, SolverDriver};
+use super::{Compute, Observer, Ops, RankState, SolveOpts, SolveStats, SolverDriver};
 use crate::exec::Executor;
 use crate::simmpi::Transport;
 
@@ -41,10 +41,11 @@ pub fn solve_rank(
     opts: &SolveOpts,
     backend: &mut dyn Compute,
     exec: &Executor,
+    obs: &dyn Observer,
 ) -> SolveStats {
     match variant {
-        CgVariant::Classic => classic(st, tp, opts, backend, exec),
-        CgVariant::NonBlocking => nonblocking(st, tp, opts, backend, exec),
+        CgVariant::Classic => classic(st, tp, opts, backend, exec, obs),
+        CgVariant::NonBlocking => nonblocking(st, tp, opts, backend, exec, obs),
     }
 }
 
@@ -54,8 +55,9 @@ fn classic(
     opts: &SolveOpts,
     backend: &mut dyn Compute,
     exec: &Executor,
+    obs: &dyn Observer,
 ) -> SolveStats {
-    let mut drv = SolverDriver::new(exec, opts);
+    let mut drv = SolverDriver::new(exec, opts, obs, tp.rank());
     let mut ops = Ops {
         exec,
         opts,
@@ -71,7 +73,7 @@ fn classic(
     drv.conv.set_reference(rr);
 
     for k in 0..opts.max_iters {
-        if drv.conv.pre_check(rr, opts) {
+        if drv.pre_check(rr) {
             break;
         }
         // halo exchange of p, SpMV, local pAp (per-chunk dependency
@@ -102,7 +104,7 @@ fn classic(
             ops.axpby(1.0, &r_ext[..n], beta, &mut p_ext[..n], n);
         }
         rr = rr_new;
-        drv.conv.record(k + 1, rr, opts);
+        drv.record(k + 1, rr);
     }
 
     drv.finish("cg", 0)
@@ -118,8 +120,9 @@ fn nonblocking(
     opts: &SolveOpts,
     backend: &mut dyn Compute,
     exec: &Executor,
+    obs: &dyn Observer,
 ) -> SolveStats {
-    let mut drv = SolverDriver::new(exec, opts);
+    let mut drv = SolverDriver::new(exec, opts, obs, tp.rank());
     let mut ops = Ops {
         exec,
         opts,
@@ -148,7 +151,7 @@ fn nonblocking(
     let mut alpha = an / ad;
 
     for k in 1..=opts.max_iters {
-        if drv.conv.pre_check(an, opts) {
+        if drv.pre_check(an) {
             break;
         }
         // Tk 0: r -= alpha·Ap ; an' = (r,r)   [lines 4-5]
@@ -204,7 +207,7 @@ fn nonblocking(
         an = an_new;
         ad = ad_new;
         alpha = an / ad;
-        drv.conv.record(k, an, opts);
+        drv.record(k, an);
     }
 
     drv.finish("cg-nb", 0)

@@ -27,7 +27,7 @@ use crate::kernels;
 use crate::simmpi::{isodd, HaloExchange, Transport};
 use crate::sparse::EllMatrix;
 
-use super::{completion_order, task_blocks, Compute, RankState, SolveOpts, SolveStats};
+use super::{completion_order, task_blocks, Compute, Observer, RankState, SolveOpts, SolveStats};
 
 // ---------------------------------------------------------------------
 // Convergence tracking
@@ -96,6 +96,11 @@ impl ConvergenceTracker {
     pub fn converged(&self) -> bool {
         self.converged
     }
+
+    /// Current relative residual (the last value pushed/checked).
+    pub fn rel(&self) -> f64 {
+        self.rel
+    }
 }
 
 // ---------------------------------------------------------------------
@@ -103,21 +108,57 @@ impl ConvergenceTracker {
 // ---------------------------------------------------------------------
 
 /// Per-rank solve driver owning the cross-method plumbing. Borrow it the
-/// executor and options once; the transport handle is passed per call
-/// because the method loop also hands it to overlapped start/wait pairs.
+/// executor, options and observer once; the transport handle is passed
+/// per call because the method loop also hands it to overlapped
+/// start/wait pairs.
 pub struct SolverDriver<'a> {
     pub exec: &'a Executor,
     pub opts: &'a SolveOpts,
     pub conv: ConvergenceTracker,
+    /// Iteration observer (shared across ranks; see `solvers::Observer`
+    /// for the determinism contract). No-op by default.
+    pub obs: &'a dyn Observer,
+    /// This rank's id, for observer callbacks.
+    pub rank: usize,
+    /// Latched once `obs.stop` fires; surfaces through `pre_check`.
+    stopped: bool,
 }
 
 impl<'a> SolverDriver<'a> {
-    pub fn new(exec: &'a Executor, opts: &'a SolveOpts) -> Self {
+    pub fn new(
+        exec: &'a Executor,
+        opts: &'a SolveOpts,
+        obs: &'a dyn Observer,
+        rank: usize,
+    ) -> Self {
         SolverDriver {
             exec,
             opts,
             conv: ConvergenceTracker::new(),
+            obs,
+            rank,
+            stopped: false,
         }
+    }
+
+    /// Top-of-loop convergence test (no history entry); also reports a
+    /// pending observer early-stop so methods that only break here (the
+    /// Krylov loops) honour it.
+    pub fn pre_check(&mut self, res2: f64) -> bool {
+        self.conv.pre_check(res2, self.opts) || self.stopped
+    }
+
+    /// End-of-iteration record: pushes the history entry, notifies the
+    /// observer, and evaluates its early-stop hook. Returns true when the
+    /// loop should end (converged or stopped).
+    pub fn record(&mut self, completed: usize, res2: f64) -> bool {
+        let done = self.conv.record(completed, res2, self.opts);
+        let rel = self.conv.rel();
+        self.obs.on_iteration(self.rank, completed, rel);
+        if !done && self.obs.stop(completed, rel) {
+            self.stopped = true;
+        }
+        done || self.stopped
     }
 
     /// Halo exchange of one extended vector on this rank. `phase`
@@ -143,7 +184,9 @@ impl<'a> SolverDriver<'a> {
 
     /// Global sum of one scalar partial (blocking).
     pub fn allreduce(&self, tp: &mut dyn Transport, k: usize, tag: u64, partial: f64) -> f64 {
-        tp.allreduce(isodd(k), tag, vec![partial])[0]
+        let v = tp.allreduce(isodd(k), tag, vec![partial]);
+        self.obs.on_allreduce(self.rank, tag, &v);
+        v[0]
     }
 
     /// Global sum of a fused pair (ω's numerator / denominator, or αn
@@ -156,6 +199,7 @@ impl<'a> SolverDriver<'a> {
         partial: (f64, f64),
     ) -> (f64, f64) {
         let v = tp.allreduce(isodd(k), tag, vec![partial.0, partial.1]);
+        self.obs.on_allreduce(self.rank, tag, &v);
         (v[0], v[1])
     }
 
@@ -166,7 +210,9 @@ impl<'a> SolverDriver<'a> {
     }
 
     pub fn wait_scalar(&self, tp: &mut dyn Transport, k: usize, tag: u64) -> f64 {
-        tp.allreduce_wait(isodd(k), tag)[0]
+        let v = tp.allreduce_wait(isodd(k), tag);
+        self.obs.on_allreduce(self.rank, tag, &v);
+        v[0]
     }
 
     /// Nonblocking pair allreduce contribution / completion.
@@ -176,13 +222,14 @@ impl<'a> SolverDriver<'a> {
 
     pub fn wait_pair(&self, tp: &mut dyn Transport, k: usize, tag: u64) -> (f64, f64) {
         let v = tp.allreduce_wait(isodd(k), tag);
+        self.obs.on_allreduce(self.rank, tag, &v);
         (v[0], v[1])
     }
 
     /// Final per-rank stats assembly. `x_error` is a cross-rank quantity
     /// and is filled in by `Problem` once every rank joined.
     pub fn finish(self, method: &'static str, restarts: usize) -> SolveStats {
-        SolveStats {
+        let stats = SolveStats {
             method,
             iterations: self.conv.iterations,
             converged: self.conv.converged,
@@ -190,7 +237,9 @@ impl<'a> SolverDriver<'a> {
             x_error: 0.0,
             history: self.conv.history,
             restarts,
-        }
+        };
+        self.obs.on_finish(self.rank, &stats);
+        stats
     }
 }
 

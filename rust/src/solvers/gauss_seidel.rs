@@ -27,7 +27,8 @@
 //! `--transport threaded`.
 
 use super::{
-    completion_order, task_blocks, Compute, Ops, RankState, SolveOpts, SolveStats, SolverDriver,
+    completion_order, task_blocks, Compute, Observer, Ops, RankState, SolveOpts, SolveStats,
+    SolverDriver,
 };
 use crate::exec::Executor;
 use crate::kernels;
@@ -47,8 +48,9 @@ pub fn solve_rank(
     opts: &SolveOpts,
     backend: &mut dyn Compute,
     exec: &Executor,
+    obs: &dyn Observer,
 ) -> SolveStats {
-    let mut drv = SolverDriver::new(exec, opts);
+    let mut drv = SolverDriver::new(exec, opts, obs, tp.rank());
     let mut ops = Ops {
         exec,
         opts,
@@ -69,7 +71,7 @@ pub fn solve_rank(
         // residual of the iterate entering this iteration (forward pass
         // partials), allreduced — the paper's rTL reduction (Code 4)
         let res = drv.allreduce(tp, k, 2_000_000, part);
-        if drv.conv.record(k + 1, res, opts) {
+        if drv.record(k + 1, res) {
             break;
         }
     }

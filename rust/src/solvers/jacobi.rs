@@ -10,7 +10,7 @@
 //! nondeterminism emulation (harmless for Jacobi: only the reduction
 //! reorders).
 
-use super::{Compute, Ops, RankState, SolveOpts, SolveStats, SolverDriver};
+use super::{Compute, Observer, Ops, RankState, SolveOpts, SolveStats, SolverDriver};
 use crate::exec::Executor;
 use crate::simmpi::Transport;
 
@@ -20,8 +20,9 @@ pub fn solve_rank(
     opts: &SolveOpts,
     backend: &mut dyn Compute,
     exec: &Executor,
+    obs: &dyn Observer,
 ) -> SolveStats {
-    let mut drv = SolverDriver::new(exec, opts);
+    let mut drv = SolverDriver::new(exec, opts, obs, tp.rank());
     let mut ops = Ops {
         exec,
         opts,
@@ -42,7 +43,7 @@ pub fn solve_rank(
         };
 
         let res = drv.allreduce(tp, k, 1_000_000, part);
-        if drv.conv.record(k + 1, res, opts) {
+        if drv.record(k + 1, res) {
             break;
         }
     }

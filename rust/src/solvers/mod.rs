@@ -11,7 +11,11 @@
 //!   * CG — classic and CG-NB (Algorithm 1)
 //!   * BiCGStab — classic and BiCGStab-B1 (Algorithm 2, with restart)
 //!
-//! Entry points on [`Problem`]:
+//! Entry points on [`Problem`] (all three are **soft-deprecated** in
+//! favour of the typed [`crate::api::Session`] /
+//! [`crate::api::RunSpec`] front-end, which validates inputs, caches
+//! assemblies across runs and returns structured errors — see DESIGN.md
+//! §6; they remain as thin engine-level paths with unchanged numerics):
 //!   * [`Problem::solve`] / [`Problem::solve_with`] — any backend,
 //!     lockstep transport (the bit-exact oracle; the single backend is
 //!     shared across ranks exactly as the pre-transport driver shared
@@ -19,6 +23,11 @@
 //!   * [`Problem::solve_hybrid`] — native kernels, per-rank executor,
 //!     lockstep *or* threaded transport: the real ranks × threads
 //!     hybrid dimension (`--ranks R --transport threaded --threads T`).
+//!
+//! Every entry point has an `_observed` twin taking an [`Observer`] —
+//! the per-iteration residual/allreduce callback seam `Session::run`
+//! exposes. Observers are read-only taps: histories with and without
+//! one are bitwise identical.
 
 mod backend;
 mod bicgstab;
@@ -26,12 +35,14 @@ mod cg;
 mod driver;
 mod gauss_seidel;
 mod jacobi;
+mod observer;
 
 pub use backend::{Compute, Native};
 pub use bicgstab::BiVariant;
 pub use cg::CgVariant;
 pub use driver::{ConvergenceTracker, Ops, SolverDriver};
 pub use gauss_seidel::GsVariant;
+pub use observer::{NoopObserver, Observer};
 
 use std::sync::Mutex;
 
@@ -51,6 +62,18 @@ pub enum Method {
 }
 
 impl Method {
+    /// Every canonical method name (the 8 paper variants), CLI order.
+    pub const NAMES: [&'static str; 8] = [
+        "jacobi",
+        "gs",
+        "gs-rb",
+        "gs-relaxed",
+        "cg",
+        "cg-nb",
+        "bicgstab",
+        "bicgstab-b1",
+    ];
+
     pub fn parse(s: &str) -> Option<Method> {
         Some(match s {
             "jacobi" => Method::Jacobi,
@@ -80,7 +103,7 @@ impl Method {
 }
 
 /// Solve options (paper §4.1 defaults).
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct SolveOpts {
     /// Convergence threshold on sqrt(||r||²); interpreted as relative to
     /// the initial residual unless `eps_absolute` (the paper's §4.1 uses
@@ -197,12 +220,13 @@ pub fn solve_rank(
     opts: &SolveOpts,
     backend: &mut dyn Compute,
     exec: &Executor,
+    obs: &dyn Observer,
 ) -> SolveStats {
     match method {
-        Method::Jacobi => jacobi::solve_rank(st, tp, opts, backend, exec),
-        Method::GaussSeidel(v) => gauss_seidel::solve_rank(st, tp, v, opts, backend, exec),
-        Method::Cg(v) => cg::solve_rank(st, tp, v, opts, backend, exec),
-        Method::BiCgStab(v) => bicgstab::solve_rank(st, tp, v, opts, backend, exec),
+        Method::Jacobi => jacobi::solve_rank(st, tp, opts, backend, exec, obs),
+        Method::GaussSeidel(v) => gauss_seidel::solve_rank(st, tp, v, opts, backend, exec, obs),
+        Method::Cg(v) => cg::solve_rank(st, tp, v, opts, backend, exec, obs),
+        Method::BiCgStab(v) => bicgstab::solve_rank(st, tp, v, opts, backend, exec, obs),
     }
 }
 
@@ -401,6 +425,10 @@ impl Problem {
 
     /// Run `method` to convergence with the given backend on the default
     /// sequential executor (lockstep transport).
+    ///
+    /// Soft-deprecated: prefer [`crate::api::Session::run`], which adds
+    /// validation, assembly caching and structured errors on top of the
+    /// same engine (bitwise-identical histories).
     pub fn solve(
         &mut self,
         method: Method,
@@ -417,14 +445,31 @@ impl Problem {
     /// across strategies (see the determinism contract in `crate::exec`).
     ///
     /// The single backend is shared across the per-rank loops — sound
-    /// because lockstep serialises rank bodies (see [`SharedBackend`]);
-    /// this is what keeps the XLA backend usable unchanged.
+    /// because lockstep serialises rank bodies (see the private
+    /// `SharedBackend` adapter below); this is what keeps the XLA
+    /// backend usable unchanged.
+    ///
+    /// Soft-deprecated: prefer [`crate::api::Session::run`].
     pub fn solve_with(
         &mut self,
         method: Method,
         opts: &SolveOpts,
         backend: &mut dyn Compute,
         exec: &Executor,
+    ) -> SolveStats {
+        self.solve_with_observed(method, opts, backend, exec, &NoopObserver)
+    }
+
+    /// [`Problem::solve_with`] plus an iteration [`Observer`] (the seam
+    /// `Session::run` exposes). The observer is a read-only tap: the
+    /// history is bitwise identical with or without one.
+    pub fn solve_with_observed(
+        &mut self,
+        method: Method,
+        opts: &SolveOpts,
+        backend: &mut dyn Compute,
+        exec: &Executor,
+        obs: &dyn Observer,
     ) -> SolveStats {
         self.reset();
         let shared = Mutex::new(SharedBackendPtr(backend as *mut (dyn Compute + '_)));
@@ -435,7 +480,7 @@ impl Problem {
             .map(|st| {
                 Box::new(move |tp: &mut RankTransport| {
                     let mut backend = SharedBackend { inner: shared };
-                    solve_rank(method, st, tp, opts, &mut backend, exec)
+                    solve_rank(method, st, tp, opts, &mut backend, exec, obs)
                 })
                     as Box<dyn FnOnce(&mut RankTransport) -> SolveStats + Send + '_>
             })
@@ -454,12 +499,28 @@ impl Problem {
     /// history is identical across the two transports and identical to
     /// `solve_with` under the same executor spec (asserted by
     /// `tests/integration_exec.rs`).
+    ///
+    /// Soft-deprecated: prefer [`crate::api::Session::run`].
     pub fn solve_hybrid(
         &mut self,
         method: Method,
         opts: &SolveOpts,
         spec: &ExecSpec,
         transport: TransportKind,
+    ) -> SolveStats {
+        self.solve_hybrid_observed(method, opts, spec, transport, &NoopObserver)
+    }
+
+    /// [`Problem::solve_hybrid`] plus an iteration [`Observer`]. Under
+    /// the threaded transport the observer is shared by all rank
+    /// threads (hence `Observer: Sync`).
+    pub fn solve_hybrid_observed(
+        &mut self,
+        method: Method,
+        opts: &SolveOpts,
+        spec: &ExecSpec,
+        transport: TransportKind,
+        obs: &dyn Observer,
     ) -> SolveStats {
         self.reset();
         let bodies: Vec<Box<dyn FnOnce(&mut RankTransport) -> SolveStats + Send + '_>> = self
@@ -469,7 +530,7 @@ impl Problem {
                 Box::new(move |tp: &mut RankTransport| {
                     let exec = spec.build();
                     let mut backend = Native;
-                    solve_rank(method, st, tp, opts, &mut backend, &exec)
+                    solve_rank(method, st, tp, opts, &mut backend, &exec, obs)
                 })
                     as Box<dyn FnOnce(&mut RankTransport) -> SolveStats + Send + '_>
             })

@@ -1,0 +1,86 @@
+//! Iteration observers — the sanctioned seam for trace, progress and
+//! early-stop hooks on a running solve.
+//!
+//! Every method's per-rank loop reports through an [`Observer`]: one
+//! `on_iteration` call per recorded history entry (the same allreduced
+//! relative residual every rank sees), one `on_allreduce` call per
+//! completed collective, and one `on_finish` per rank. The default
+//! implementation of every hook is a no-op, so the observer costs
+//! nothing unless a caller opts in ([`NoopObserver`] is what the legacy
+//! `Problem::solve*` entry points pass).
+//!
+//! **Determinism contract.** Observers are *read-only* taps: they cannot
+//! change any number the solver computes, so convergence histories with
+//! and without an observer are bitwise identical (asserted by
+//! `tests/integration_api.rs`). The one exception is [`Observer::stop`],
+//! which may end the run early — because the loop runs per rank (and
+//! genuinely concurrently under the threaded transport), `stop` MUST be
+//! a pure function of its `(iteration, rel_residual)` arguments: ranks
+//! decide independently on identical allreduced values, and a stateful
+//! or impure decision could make them diverge and deadlock the
+//! transport.
+//!
+//! Hooks take `&self` and implementors must be [`Sync`]: under the
+//! threaded transport all rank threads share one observer. Use interior
+//! mutability (`Mutex`, atomics) to accumulate.
+
+use super::SolveStats;
+
+/// Per-iteration callbacks on a running solve. All hooks default to
+/// no-ops; see the module docs for the determinism contract.
+pub trait Observer: Sync {
+    /// One completed iteration: called exactly once per entry pushed to
+    /// `SolveStats::history`, per rank, with the allreduced relative
+    /// residual (identical across ranks).
+    fn on_iteration(&self, rank: usize, iteration: usize, rel_residual: f64) {
+        let _ = (rank, iteration, rel_residual);
+    }
+
+    /// One completed allreduce on this rank: `values` is the reduced
+    /// result (identical across ranks), `tag` the collective's tag.
+    fn on_allreduce(&self, rank: usize, tag: u64, values: &[f64]) {
+        let _ = (rank, tag, values);
+    }
+
+    /// The rank's loop finished; `stats` is its final per-rank result
+    /// (`x_error` is cross-rank and still zero at this point).
+    fn on_finish(&self, rank: usize, stats: &SolveStats) {
+        let _ = (rank, stats);
+    }
+
+    /// Early-stop test, evaluated after each recorded iteration. Return
+    /// `true` to end the run before convergence. MUST be a pure function
+    /// of the arguments (see the module docs): every rank evaluates it
+    /// independently on identical values and all must agree.
+    fn stop(&self, iteration: usize, rel_residual: f64) -> bool {
+        let _ = (iteration, rel_residual);
+        false
+    }
+}
+
+/// The do-nothing observer (the default on every legacy entry point).
+#[derive(Debug, Default, Clone, Copy)]
+pub struct NoopObserver;
+
+impl Observer for NoopObserver {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn noop_defaults_are_inert() {
+        let obs = NoopObserver;
+        obs.on_iteration(0, 1, 0.5);
+        obs.on_allreduce(0, 7, &[1.0]);
+        assert!(!obs.stop(3, 0.25));
+    }
+
+    #[test]
+    fn observer_objects_are_sync_send_refs() {
+        fn takes_send<T: Send>(_: T) {}
+        let obs = NoopObserver;
+        let r: &dyn Observer = &obs;
+        takes_send(r);
+    }
+}

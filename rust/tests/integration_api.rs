@@ -1,0 +1,363 @@
+//! Acceptance contract of the RunSpec/Session API redesign:
+//!
+//!  * `Session::run` reproduces **bitwise identical** convergence
+//!    histories to the legacy `Problem::solve` / `solve_with` /
+//!    `solve_hybrid` entry points, for all 8 method variants ×
+//!    {lockstep, threaded} transports × {seq, fork-join, task}
+//!    executor strategies;
+//!  * a `RunSpec` JSON emitted by one run replays to the same history;
+//!  * the session's problem cache reuses one assembly across runs that
+//!    share {grid, stencil, ranks} (same matrix pointer) with
+//!    bitwise-identical stats vs a fresh assembly;
+//!  * observers see exactly the history the stats report, for every
+//!    method variant, and never change the numbers.
+
+use std::sync::Mutex;
+
+use hlam::api::{RunSpec, Session, SolveError, SpecError};
+use hlam::exec::{ExecSpec, ExecStrategy, Executor};
+use hlam::mesh::Grid3;
+use hlam::simmpi::TransportKind;
+use hlam::solvers::{Method, Native, Observer, Problem, SolveOpts, SolveStats};
+use hlam::sparse::StencilKind;
+
+const ALL_METHODS: [&str; 8] = [
+    "jacobi",
+    "gs",
+    "gs-rb",
+    "gs-relaxed",
+    "cg",
+    "cg-nb",
+    "bicgstab",
+    "bicgstab-b1",
+];
+
+const GRID: (usize, usize, usize) = (6, 6, 12);
+
+fn grid() -> Grid3 {
+    Grid3::new(GRID.0, GRID.1, GRID.2)
+}
+
+/// Per-method options mirroring `tests/integration_exec.rs` (the task GS
+/// variants need explicit task blocks).
+fn base_opts(method: &str) -> SolveOpts {
+    let mut opts = SolveOpts::default();
+    if method.starts_with("gs-") {
+        opts.ntasks = 6;
+        opts.task_order_seed = 3;
+    }
+    opts
+}
+
+fn spec_for(method: &str, strategy: ExecStrategy, transport: TransportKind) -> RunSpec {
+    RunSpec::builder()
+        .method_str(method)
+        .grid(grid())
+        .ranks(2)
+        .exec(ExecSpec::new(strategy, 2))
+        .transport(transport)
+        .opts(base_opts(method))
+        .build()
+        .unwrap()
+}
+
+fn assert_identical(a: &SolveStats, b: &SolveStats, ctx: &str) {
+    assert_eq!(a.iterations, b.iterations, "{ctx}: iteration count");
+    assert_eq!(a.converged, b.converged, "{ctx}: convergence flag");
+    assert_eq!(a.restarts, b.restarts, "{ctx}: restart count");
+    assert_eq!(
+        a.rel_residual.to_bits(),
+        b.rel_residual.to_bits(),
+        "{ctx}: final residual"
+    );
+    assert_eq!(a.x_error.to_bits(), b.x_error.to_bits(), "{ctx}: x error");
+    assert_eq!(a.history.len(), b.history.len(), "{ctx}: history length");
+    for (i, (ha, hb)) in a.history.iter().zip(&b.history).enumerate() {
+        assert_eq!(ha.to_bits(), hb.to_bits(), "{ctx}: history[{i}] {ha} vs {hb}");
+    }
+}
+
+// ---------------------------------------------------------------------
+// Session vs every legacy entry point, full method × transport × exec
+// sweep (the acceptance criterion)
+// ---------------------------------------------------------------------
+
+#[test]
+fn session_bitwise_matches_legacy_paths_all_methods_transports_execs() {
+    let mut session = Session::new();
+    for method in ALL_METHODS {
+        let m = Method::parse(method).unwrap();
+        let opts = base_opts(method);
+
+        // legacy path 1: Problem::solve (lockstep, shared backend, seq)
+        let mut p1 = Problem::build(grid(), StencilKind::P7, 2);
+        let reference = p1.solve(m, &opts, &mut Native);
+        assert!(reference.converged, "{method}: reference did not converge");
+
+        // legacy path 2: Problem::solve_with under an explicit executor
+        let mut p2 = Problem::build(grid(), StencilKind::P7, 2);
+        let with = p2.solve_with(m, &opts, &mut Native, &Executor::new(ExecStrategy::ForkJoin, 2));
+        assert_identical(&reference, &with, &format!("{method}: solve_with"));
+
+        for strategy in [ExecStrategy::Seq, ExecStrategy::ForkJoin, ExecStrategy::TaskPool] {
+            // legacy path 3: Problem::solve_hybrid
+            let mut p3 = Problem::build(grid(), StencilKind::P7, 2);
+            let hybrid = p3.solve_hybrid(
+                m,
+                &opts,
+                &ExecSpec::new(strategy, 2),
+                TransportKind::Lockstep,
+            );
+            assert_identical(
+                &reference,
+                &hybrid,
+                &format!("{method}: solve_hybrid {}", strategy.name()),
+            );
+
+            // the new API, both transports (one cached assembly for all
+            // 48 runs of this sweep)
+            for transport in [TransportKind::Lockstep, TransportKind::Threaded] {
+                let spec = spec_for(method, strategy, transport);
+                let got = session.run(&spec).unwrap();
+                assert_identical(
+                    &reference,
+                    &got,
+                    &format!(
+                        "{method}: Session {} {}",
+                        strategy.name(),
+                        transport.name()
+                    ),
+                );
+            }
+        }
+    }
+    // the whole sweep shares {grid, stencil, ranks}: one assembly total
+    assert_eq!(session.cached_problems(), 1);
+}
+
+// ---------------------------------------------------------------------
+// Spec JSON replay
+// ---------------------------------------------------------------------
+
+#[test]
+fn emitted_spec_json_replays_to_identical_history() {
+    for method in ["cg-nb", "bicgstab-b1", "gs-relaxed"] {
+        let spec = spec_for(method, ExecStrategy::TaskPool, TransportKind::Threaded);
+        let mut s1 = Session::new();
+        let original = s1.run(&spec).unwrap();
+
+        // serialize → parse → identical spec → identical history in a
+        // completely fresh session
+        let text = spec.to_json_string();
+        let replayed_spec = RunSpec::from_json_str(&text).unwrap();
+        assert_eq!(replayed_spec, spec, "{method}: spec JSON round-trip");
+        let mut s2 = Session::new();
+        let replayed = s2.run(&replayed_spec).unwrap();
+        assert_identical(&original, &replayed, &format!("{method}: JSON replay"));
+    }
+}
+
+#[test]
+fn spec_file_save_load_roundtrip() {
+    let dir = std::env::temp_dir().join("hlam_it_api_spec");
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("run.json");
+    let spec = spec_for("cg", ExecStrategy::Seq, TransportKind::Lockstep);
+    spec.save(&path).unwrap();
+    let loaded = RunSpec::load(&path).unwrap();
+    assert_eq!(loaded, spec);
+    // a missing file is a structured I/O error, not a panic
+    match RunSpec::load(dir.join("missing.json")) {
+        Err(SolveError::Io { .. }) => {}
+        other => panic!("expected Io error, got {other:?}"),
+    }
+}
+
+// ---------------------------------------------------------------------
+// Problem-cache reuse
+// ---------------------------------------------------------------------
+
+#[test]
+fn session_cache_reuses_assembly_with_bitwise_identical_stats() {
+    let spec = spec_for("cg", ExecStrategy::Seq, TransportKind::Lockstep);
+    let mut session = Session::new();
+
+    let first = session.run(&spec).unwrap();
+    let ptr1 = session
+        .assembly_ptr(spec.grid, spec.stencil, spec.ranks)
+        .unwrap();
+    let second = session.run(&spec).unwrap();
+    let ptr2 = session
+        .assembly_ptr(spec.grid, spec.stencil, spec.ranks)
+        .unwrap();
+
+    // same assembly object across runs...
+    assert_eq!(ptr1, ptr2, "assembly was rebuilt between runs");
+    assert_eq!(session.cached_problems(), 1);
+    // ...and reuse is numerically invisible
+    assert_identical(&first, &second, "cached rerun");
+
+    // a different method on the same {grid, stencil, ranks} still reuses
+    let spec_j = spec_for("jacobi", ExecStrategy::Seq, TransportKind::Lockstep);
+    session.run(&spec_j).unwrap();
+    assert_eq!(session.cached_problems(), 1);
+    assert_eq!(
+        session.assembly_ptr(spec.grid, spec.stencil, spec.ranks),
+        Some(ptr1)
+    );
+
+    // a fresh assembly produces the same bits as the cached rerun
+    let mut fresh = Problem::build(spec.grid, spec.stencil, spec.ranks);
+    let from_fresh = fresh.solve_hybrid(spec.method, &spec.opts, &spec.exec, spec.transport);
+    assert_identical(&from_fresh, &second, "fresh vs cached assembly");
+
+    // changing any cache-key dimension assembles anew
+    let spec_r4 = RunSpec::builder()
+        .method_str("cg")
+        .grid(grid())
+        .ranks(4)
+        .build()
+        .unwrap();
+    session.run(&spec_r4).unwrap();
+    assert_eq!(session.cached_problems(), 2);
+}
+
+// ---------------------------------------------------------------------
+// Observer: history equivalence for all 8 variants + early stop
+// ---------------------------------------------------------------------
+
+/// Records rank 0's per-iteration relative residuals.
+struct Recorder {
+    rank0: Mutex<Vec<f64>>,
+    allreduces: Mutex<usize>,
+    finished_ranks: Mutex<Vec<usize>>,
+}
+
+impl Recorder {
+    fn new() -> Self {
+        Recorder {
+            rank0: Mutex::new(Vec::new()),
+            allreduces: Mutex::new(0),
+            finished_ranks: Mutex::new(Vec::new()),
+        }
+    }
+}
+
+impl Observer for Recorder {
+    fn on_iteration(&self, rank: usize, _iteration: usize, rel_residual: f64) {
+        if rank == 0 {
+            self.rank0.lock().unwrap().push(rel_residual);
+        }
+    }
+
+    fn on_allreduce(&self, _rank: usize, _tag: u64, _values: &[f64]) {
+        *self.allreduces.lock().unwrap() += 1;
+    }
+
+    fn on_finish(&self, rank: usize, _stats: &SolveStats) {
+        self.finished_ranks.lock().unwrap().push(rank);
+    }
+}
+
+#[test]
+fn observer_sees_exactly_the_reported_history_all_methods() {
+    for method in ALL_METHODS {
+        for transport in [TransportKind::Lockstep, TransportKind::Threaded] {
+            let spec = spec_for(method, ExecStrategy::Seq, transport);
+            let mut session = Session::new();
+            let obs = Recorder::new();
+            let stats = session.run_observed(&spec, &obs).unwrap();
+            let ctx = format!("{method} / {}", transport.name());
+
+            let seen = obs.rank0.into_inner().unwrap();
+            assert_eq!(seen.len(), stats.history.len(), "{ctx}: callback count");
+            for (i, (a, b)) in seen.iter().zip(&stats.history).enumerate() {
+                assert_eq!(a.to_bits(), b.to_bits(), "{ctx}: entry {i}");
+            }
+            // every rank finished exactly once
+            let mut fins = obs.finished_ranks.into_inner().unwrap();
+            fins.sort_unstable();
+            assert_eq!(fins, vec![0, 1], "{ctx}: finish callbacks");
+            // allreduce taps fired (both ranks, >= one per iteration)
+            let ars = obs.allreduces.into_inner().unwrap();
+            assert!(ars >= 2 * stats.iterations, "{ctx}: {ars} allreduce taps");
+
+            // and observing never changes the numbers
+            let mut plain = Session::new();
+            let unobserved = plain.run(&spec).unwrap();
+            assert_identical(&unobserved, &stats, &format!("{ctx}: observer purity"));
+        }
+    }
+}
+
+/// Stops every run after 3 recorded iterations (a pure function of the
+/// iteration number, as the Observer contract requires).
+struct StopAt3;
+
+impl Observer for StopAt3 {
+    fn stop(&self, iteration: usize, _rel_residual: f64) -> bool {
+        iteration >= 3
+    }
+}
+
+#[test]
+fn observer_early_stop_is_honoured_on_both_transports() {
+    for method in ["cg", "jacobi", "bicgstab-b1"] {
+        for transport in [TransportKind::Lockstep, TransportKind::Threaded] {
+            let mut spec = spec_for(method, ExecStrategy::Seq, transport);
+            spec.opts.eps = 1e-300; // effectively unreachable: the stop hook ends the run
+            let mut session = Session::new();
+            let stats = session.run_observed(&spec, &StopAt3).unwrap();
+            let ctx = format!("{method} / {}", transport.name());
+            assert!(!stats.converged, "{ctx}: must stop before convergence");
+            assert_eq!(stats.history.len(), 3, "{ctx}: history length");
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Structured errors end to end
+// ---------------------------------------------------------------------
+
+#[test]
+fn bad_input_yields_structured_errors_with_suggestions() {
+    // unknown method, close to a valid one -> suggestion
+    let err = RunSpec::builder().method_str("cgg").build().unwrap_err();
+    match &err {
+        SpecError::Unknown {
+            what, suggestion, ..
+        } => {
+            assert_eq!(*what, "method");
+            assert_eq!(*suggestion, Some("cg"));
+        }
+        other => panic!("expected Unknown, got {other:?}"),
+    }
+    assert!(err.to_string().contains("did you mean 'cg'"), "{err}");
+
+    // misspelled transport / strategy / backend / stencil
+    assert!(RunSpec::builder().transport_str("lockstp").build().is_err());
+    assert!(RunSpec::builder().strategy_str("forkjion").build().is_err());
+    assert!(RunSpec::builder().backend_str("navite").build().is_err());
+    assert!(RunSpec::builder().stencil_str("9").build().is_err());
+
+    // malformed grids never panic
+    for bad in ["", "8", "8x8", "8x8x", "ax8x8", "8x0x8", "8x8x8x8"] {
+        assert!(
+            matches!(
+                RunSpec::builder().grid_str(bad).build(),
+                Err(SpecError::BadGrid { .. })
+            ),
+            "grid '{bad}' must be rejected"
+        );
+    }
+
+    // a session rejects invalid hand-built specs before running
+    let mut session = Session::new();
+    let mut spec = RunSpec::builder().build().unwrap();
+    spec.ranks = 10_000; // far more ranks than z-planes
+    match session.run(&spec) {
+        Err(SolveError::Spec(SpecError::Invalid { field, .. })) => assert_eq!(field, "ranks"),
+        other => panic!("expected spec error, got {other:?}"),
+    }
+}

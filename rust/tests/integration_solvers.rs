@@ -1,15 +1,26 @@
 //! Cross-module integration: distributed solvers over simmpi on larger
 //! grids, convergence orderings between methods (the paper's qualitative
 //! structure), restart ablation (D4), and decomposition invariance.
+//! Runs go through the `api::Session` front-end (the `RunSpec` path is
+//! bitwise identical to the legacy `Problem::solve` these tests
+//! originally used — asserted by `tests/integration_api.rs`).
 
+use hlam::api::{RunSpec, Session};
 use hlam::mesh::Grid3;
-use hlam::solvers::{Method, Native, Problem, SolveOpts};
+use hlam::solvers::SolveOpts;
 use hlam::sparse::StencilKind;
 use hlam::util::proptest::forall;
 
 fn solve(method: &str, grid: Grid3, kind: StencilKind, nranks: usize, opts: &SolveOpts) -> hlam::solvers::SolveStats {
-    let mut pb = Problem::build(grid, kind, nranks);
-    pb.solve(Method::parse(method).unwrap(), opts, &mut Native)
+    let spec = RunSpec::builder()
+        .method_str(method)
+        .grid(grid)
+        .stencil(kind)
+        .ranks(nranks)
+        .opts(opts.clone())
+        .build()
+        .expect("test spec is valid");
+    Session::new().run(&spec).expect("native run succeeds")
 }
 
 fn abs_opts() -> SolveOpts {
