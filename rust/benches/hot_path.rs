@@ -1,0 +1,135 @@
+//! Hot-path throughput benchmark: solver iterations/sec for all four
+//! classic methods × {seq, fork-join, task} on one rank — the measured
+//! start of the repo's perf trajectory (`BENCH_hot_path.json` at the
+//! repo root; later PRs are compared against this file's history).
+//!
+//!     cargo bench --bench hot_path            # 64³ grid, full run
+//!     cargo bench --bench hot_path -- --quick # 16³ grid CI smoke run
+//!
+//! Methodology: fixed iteration count (eps = 0 never converges, so every
+//! configuration performs identical work), per-rank executors built once
+//! and reused across repetitions (`solve_hybrid_execs_observed` — the
+//! plan-once / run-many path `api::Session` uses), one warm solve, then
+//! the best of `reps` timed solves. Reported per configuration:
+//! iterations per second and nanoseconds per iteration.
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+use hlam::exec::{ExecSpec, ExecStrategy, Executor};
+use hlam::mesh::Grid3;
+use hlam::simmpi::TransportKind;
+use hlam::solvers::{Method, NoopObserver, Problem, SolveOpts};
+use hlam::sparse::StencilKind;
+use hlam::util::json::Json;
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    // quick: tiny grid so the CI smoke job finishes in seconds while
+    // still exercising multi-chunk parallel paths via chunk_rows
+    let (grid, iters, reps, chunk_rows) = if quick {
+        (Grid3::new(16, 16, 16), 10usize, 2usize, Some(512))
+    } else {
+        (Grid3::new(64, 64, 64), 40, 3, None)
+    };
+    let threads = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(4)
+        .clamp(2, 4);
+    let opts = SolveOpts {
+        eps: 0.0, // never converges: exactly `iters` iterations of work
+        max_iters: iters,
+        ..SolveOpts::default()
+    };
+    let configs = [
+        (ExecStrategy::Seq, 1usize),
+        (ExecStrategy::ForkJoin, threads),
+        (ExecStrategy::TaskPool, threads),
+    ];
+    let n = grid.nx * grid.ny * grid.nz;
+    println!(
+        "== hot-path iterations/sec (grid {}x{}x{} = {n} rows, 7-pt, \
+         {iters} fixed iters, 1 rank) ==\n",
+        grid.nx, grid.ny, grid.nz
+    );
+
+    let mut entries: Vec<Json> = Vec::new();
+    for name in ["jacobi", "gs", "cg", "bicgstab"] {
+        let method = Method::parse(name).expect("known method");
+        let mut pb = Problem::build(grid, StencilKind::P7, 1);
+        for (strategy, t) in configs {
+            let mut spec = ExecSpec::new(strategy, t);
+            if let Some(rows) = chunk_rows {
+                spec = spec.with_chunk_rows(rows);
+            }
+            // plan once: one persistent executor, reused by every solve
+            let execs: Vec<Executor> = vec![spec.build()];
+            let run = |pb: &mut Problem| {
+                let s = pb.solve_hybrid_execs_observed(
+                    method,
+                    &opts,
+                    &execs,
+                    TransportKind::Lockstep,
+                    &NoopObserver,
+                );
+                std::hint::black_box(s.rel_residual);
+                debug_assert_eq!(s.iterations, iters);
+            };
+            run(&mut pb); // warm: plans, buffers, transport keys
+            let mut best = f64::INFINITY;
+            for _ in 0..reps {
+                let t0 = Instant::now();
+                run(&mut pb);
+                best = best.min(t0.elapsed().as_secs_f64());
+            }
+            let iters_per_sec = iters as f64 / best;
+            let ns_per_iter = best * 1e9 / iters as f64;
+            println!(
+                "{name:<9} exec={:<9} threads={t}: {:>10.1} iters/s  {:>12.0} ns/iter",
+                strategy.name(),
+                iters_per_sec,
+                ns_per_iter
+            );
+            let mut e = BTreeMap::new();
+            e.insert("method".to_string(), Json::Str(name.to_string()));
+            e.insert(
+                "strategy".to_string(),
+                Json::Str(strategy.name().to_string()),
+            );
+            e.insert("threads".to_string(), Json::Num(t as f64));
+            e.insert("iters_per_sec".to_string(), Json::Num(iters_per_sec));
+            e.insert("ns_per_iter".to_string(), Json::Num(ns_per_iter));
+            e.insert("seconds_best".to_string(), Json::Num(best));
+            entries.push(Json::Obj(e));
+        }
+        println!();
+    }
+
+    let mut root = BTreeMap::new();
+    root.insert("bench".to_string(), Json::Str("hot_path".to_string()));
+    root.insert(
+        "grid".to_string(),
+        Json::Str(format!("{}x{}x{}", grid.nx, grid.ny, grid.nz)),
+    );
+    root.insert("stencil".to_string(), Json::Str("p7".to_string()));
+    root.insert("ranks".to_string(), Json::Num(1.0));
+    root.insert("iters_per_solve".to_string(), Json::Num(iters as f64));
+    root.insert("reps".to_string(), Json::Num(reps as f64));
+    root.insert("quick".to_string(), Json::Bool(quick));
+    root.insert("entries".to_string(), Json::Arr(entries));
+    let doc = Json::Obj(root);
+
+    // the bench runs with the crate dir as cwd reference; the trajectory
+    // file lives at the repo root (one level up from rust/)
+    let out = format!("{}/../BENCH_hot_path.json", env!("CARGO_MANIFEST_DIR"));
+    std::fs::write(&out, format!("{doc}\n")).expect("write BENCH_hot_path.json");
+    // round-trip: the emitted trajectory point must parse
+    let text = std::fs::read_to_string(&out).expect("read back");
+    let parsed = Json::parse(&text).expect("BENCH_hot_path.json must parse");
+    let n_entries = parsed
+        .get("entries")
+        .and_then(|e| e.as_arr())
+        .map(|a| a.len())
+        .unwrap_or(0);
+    println!("wrote {out} ({n_entries} entries)");
+}

@@ -208,9 +208,10 @@ fn hybrid_grid(small: bool) {
     let mut session = Session::new();
     let mut t_base = 0.0;
     for &ranks in &ranks_list {
-        // keep peak memory at one assembly: reuse within a rank count,
-        // evict when moving to the next
+        // keep peak memory at one assembly and one executor set: reuse
+        // within a rank count, evict both caches when moving to the next
         session.clear();
+        session.clear_executors();
         session.problem(strong, StencilKind::P7, ranks);
         for &threads in &threads_list {
             let spec = RunSpec::builder()
@@ -246,6 +247,7 @@ fn hybrid_grid(small: bool) {
     for &ranks in &ranks_list {
         let grid = Grid3::new(nx, ny, nz_per_rank * ranks);
         session.clear();
+        session.clear_executors();
         session.problem(grid, StencilKind::P7, ranks);
         let spec = RunSpec::builder()
             .method(method)

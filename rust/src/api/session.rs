@@ -2,15 +2,20 @@
 //!
 //! A session owns problem assembly: the first run of a given
 //! {grid, stencil, ranks} assembles the distributed system, every later
-//! run reuses it (sweeps stop paying assembly per data point). Reuse is
-//! numerically invisible — the solvers reset the iterate and never
-//! mutate the matrix, right-hand side or halo map, so a cached-assembly
-//! run is bitwise identical to a fresh one (asserted by
-//! `tests/integration_api.rs`).
+//! run reuses it (sweeps stop paying assembly per data point). Since the
+//! plan-once/run-many refactor (DESIGN.md §7) it also owns the *execution
+//! resources*: the per-rank [`Executor`]s of a native run — worker pools
+//! for the `task` strategy, parked fork-join teams — are built on the
+//! first run of a given {exec spec, ranks} and reused by every later
+//! run, so a sweep spawns its threads once instead of per data point.
+//! Reuse is numerically invisible — the solvers reset the iterate and
+//! never mutate the matrix, right-hand side or halo map, and executors
+//! carry no numeric state (asserted by `tests/integration_api.rs`).
 
 use std::path::PathBuf;
 use std::rc::Rc;
 
+use crate::exec::{ExecSpec, Executor};
 use crate::mesh::Grid3;
 use crate::runtime::{Runtime, XlaCompute};
 use crate::simmpi::{TransportKind, WorldStats};
@@ -24,6 +29,13 @@ struct CacheEntry {
     kind: StencilKind,
     ranks: usize,
     problem: Problem,
+}
+
+struct ExecCacheEntry {
+    spec: ExecSpec,
+    /// One executor per rank (pools must not be shared across
+    /// concurrently running ranks).
+    execs: Vec<Executor>,
 }
 
 /// Executes [`RunSpec`]s with assembly caching, structured errors and
@@ -51,6 +63,8 @@ struct CacheEntry {
 pub struct Session {
     artifacts: PathBuf,
     cache: Vec<CacheEntry>,
+    /// Persistent per-rank executors keyed by {exec spec, ranks}.
+    exec_cache: Vec<ExecCacheEntry>,
     /// Lazily-loaded PJRT runtime (one load per session, not per run).
     runtime: Option<Rc<Runtime>>,
     last_world: Option<WorldStats>,
@@ -75,6 +89,7 @@ impl Session {
         Session {
             artifacts: dir.into(),
             cache: Vec::new(),
+            exec_cache: Vec::new(),
             runtime: None,
             last_world: None,
         }
@@ -103,10 +118,16 @@ impl Session {
             BackendKind::Xla => Some(self.runtime()?),
             BackendKind::Native => None,
         };
-        let pb = self.problem(spec.grid, spec.stencil, spec.ranks);
+        // split borrows: problem assembly and executors live in disjoint
+        // caches, so one run can hold both
+        let Session {
+            cache, exec_cache, ..
+        } = self;
+        let pb = Self::problem_in(cache, spec.grid, spec.stencil, spec.ranks);
         let stats = match spec.backend {
             BackendKind::Native => {
-                pb.solve_hybrid_observed(spec.method, &spec.opts, &spec.exec, spec.transport, obs)
+                let execs = Self::execs_in(exec_cache, &spec.exec, spec.ranks);
+                pb.solve_hybrid_execs_observed(spec.method, &spec.opts, execs, spec.transport, obs)
             }
             BackendKind::Xla => {
                 // lockstep-only (validated above): the PJRT client is
@@ -149,21 +170,58 @@ impl Session {
     /// The assembled problem for {grid, stencil, ranks} — cached after
     /// the first call.
     pub fn problem(&mut self, grid: Grid3, kind: StencilKind, ranks: usize) -> &mut Problem {
-        if let Some(i) = self
-            .cache
+        Self::problem_in(&mut self.cache, grid, kind, ranks)
+    }
+
+    fn problem_in(
+        cache: &mut Vec<CacheEntry>,
+        grid: Grid3,
+        kind: StencilKind,
+        ranks: usize,
+    ) -> &mut Problem {
+        if let Some(i) = cache
             .iter()
             .position(|e| e.grid == grid && e.kind == kind && e.ranks == ranks)
         {
-            return &mut self.cache[i].problem;
+            return &mut cache[i].problem;
         }
-        self.cache.push(CacheEntry {
+        cache.push(CacheEntry {
             grid,
             kind,
             ranks,
             problem: Problem::build(grid, kind, ranks),
         });
-        let last = self.cache.len() - 1;
-        &mut self.cache[last].problem
+        let last = cache.len() - 1;
+        &mut cache[last].problem
+    }
+
+    /// The persistent per-rank executors for {spec, ranks} — built (and
+    /// their pools/teams spawned) on first use, reused by every later
+    /// native run of the session.
+    fn execs_in<'c>(
+        exec_cache: &'c mut Vec<ExecCacheEntry>,
+        spec: &ExecSpec,
+        ranks: usize,
+    ) -> &'c [Executor] {
+        if let Some(i) = exec_cache
+            .iter()
+            .position(|e| e.spec == *spec && e.execs.len() == ranks)
+        {
+            return &exec_cache[i].execs;
+        }
+        let execs: Vec<Executor> = (0..ranks).map(|_| spec.build()).collect();
+        exec_cache.push(ExecCacheEntry {
+            spec: spec.clone(),
+            execs,
+        });
+        let last = exec_cache.len() - 1;
+        &exec_cache[last].execs
+    }
+
+    /// Number of distinct {exec spec, ranks} executor sets currently
+    /// cached (their worker pools and fork-join teams stay warm).
+    pub fn cached_executor_sets(&self) -> usize {
+        self.exec_cache.len()
     }
 
     /// Number of distinct assemblies currently cached.
@@ -193,9 +251,19 @@ impl Session {
     }
 
     /// Drop every cached assembly (memory pressure valve for long
-    /// sweeps over many configurations).
+    /// sweeps over many configurations). Cached executors survive —
+    /// their threads are cheap to keep parked and expensive to respawn;
+    /// use [`Session::clear_executors`] to release those too.
     pub fn clear(&mut self) {
         self.cache.clear();
+    }
+
+    /// Drop every cached executor set, shutting their worker pools and
+    /// fork-join teams down. The thread-pressure valve for sweeps over
+    /// many distinct {exec spec, ranks} combinations — each set keeps
+    /// `ranks × (threads - 1)` OS threads parked while cached.
+    pub fn clear_executors(&mut self) {
+        self.exec_cache.clear();
     }
 }
 
@@ -254,6 +322,37 @@ mod tests {
             Ok(_) => {} // real artifacts present (xla feature build): fine
             Err(other) => panic!("expected backend error, got {other}"),
         }
+    }
+
+    #[test]
+    fn executors_are_reused_across_runs_bitwise() {
+        use crate::exec::ExecStrategy;
+        let mut s = Session::new();
+        let spec = RunSpec::builder().grid_str("4x4x8").ranks(2).build().unwrap();
+        let a = s.run(&spec).unwrap();
+        assert_eq!(s.cached_executor_sets(), 1);
+        let b = s.run(&spec).unwrap();
+        assert_eq!(s.cached_executor_sets(), 1, "same spec must reuse");
+        assert_eq!(a.iterations, b.iterations);
+        for (x, y) in a.history.iter().zip(&b.history) {
+            assert_eq!(x.to_bits(), y.to_bits(), "reused executors changed bits");
+        }
+        // a different exec spec gets its own persistent set
+        let spec2 = RunSpec::builder()
+            .grid_str("4x4x8")
+            .ranks(2)
+            .exec(ExecSpec::new(ExecStrategy::TaskPool, 2))
+            .build()
+            .unwrap();
+        s.run(&spec2).unwrap();
+        assert_eq!(s.cached_executor_sets(), 2);
+        // clearing assemblies keeps the warm executors; the dedicated
+        // valve releases them
+        s.clear();
+        assert_eq!(s.cached_problems(), 0);
+        assert_eq!(s.cached_executor_sets(), 2);
+        s.clear_executors();
+        assert_eq!(s.cached_executor_sets(), 0);
     }
 
     #[test]

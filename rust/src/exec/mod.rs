@@ -7,13 +7,16 @@
 //!
 //!  * [`ExecStrategy::Seq`] — one thread, chunks executed in index order
 //!    (the MPI-only baseline: parallelism comes from ranks alone);
-//!  * [`ExecStrategy::ForkJoin`] — scoped threads with a static chunk →
-//!    thread assignment and an implicit barrier at the end of every
-//!    kernel (the `#pragma omp parallel for` model);
+//!  * [`ExecStrategy::ForkJoin`] — a persistent parked
+//!    [`team::ThreadTeam`] with a static chunk → thread assignment and
+//!    an implicit barrier at the end of every kernel (the
+//!    `#pragma omp parallel for` model, minus the per-region thread
+//!    management — see DESIGN.md §7);
 //!  * [`ExecStrategy::TaskPool`] — a persistent worker pool consuming
-//!    dependency-aware chunk tasks ([`pool::DagTask`], mirroring the
-//!    `taskrt::TaskGraph` programming model), so consecutive kernels
-//!    pipeline per chunk with no barrier between them.
+//!    dependency-aware chunk tasks (reusable shape templates for the
+//!    recurring kernels, [`pool::DagTask`] graphs for everything else),
+//!    so consecutive kernels pipeline per chunk with no barrier between
+//!    them.
 //!
 //! **Determinism contract.** The chunk decomposition depends only on the
 //! row count (never on the strategy or thread count), every chunk is
@@ -28,9 +31,13 @@
 //! scheduler.
 
 pub mod pool;
+pub mod team;
+pub mod workspace;
 
 pub use pool::DagTask;
+pub use workspace::IterationWorkspace;
 use pool::WorkerPool;
+use team::ThreadTeam;
 
 /// Shared-memory execution strategy (paper §3.2).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -82,29 +89,50 @@ pub fn fold(partials: &[f64], red: &Reduction) -> f64 {
     }
 }
 
+/// [`fold`] over a caller-owned scratch buffer: the tree fold combines
+/// in place instead of allocating per level, so steady-state reductions
+/// over a reused partials buffer are allocation-free. The combination
+/// order is identical to [`fold`] bit for bit (the ordered fold only
+/// reads; the scratch contents are consumed either way).
+pub fn fold_mut(partials: &mut [f64], red: &Reduction) -> f64 {
+    match red {
+        Reduction::Tree => tree_reduce_in_place(partials),
+        Reduction::Ordered(order) => {
+            debug_assert_eq!(order.len(), partials.len());
+            order.iter().fold(0.0, |acc, &bi| acc + partials[bi])
+        }
+    }
+}
+
 /// Deterministic pairwise tree reduction: adjacent pairs are combined
 /// until one value remains. For a single partial this is the identity, so
 /// a 1-chunk reduce is bitwise equal to the plain whole-range kernel.
 pub fn tree_reduce(vals: &[f64]) -> f64 {
-    match vals.len() {
-        0 => 0.0,
-        1 => vals[0],
-        _ => {
-            let mut level: Vec<f64> = vals.to_vec();
-            while level.len() > 1 {
-                let mut next = Vec::with_capacity(level.len().div_ceil(2));
-                for pair in level.chunks(2) {
-                    next.push(if pair.len() == 2 {
-                        pair[0] + pair[1]
-                    } else {
-                        pair[0]
-                    });
-                }
-                level = next;
-            }
-            level[0]
+    let mut scratch: Vec<f64> = vals.to_vec();
+    tree_reduce_in_place(&mut scratch)
+}
+
+/// [`tree_reduce`] combining in place (same pairs, same order, same
+/// bits; the slice contents are consumed as scratch).
+fn tree_reduce_in_place(v: &mut [f64]) -> f64 {
+    let mut len = v.len();
+    if len == 0 {
+        return 0.0;
+    }
+    while len > 1 {
+        let half = len / 2;
+        for i in 0..half {
+            v[i] = v[2 * i] + v[2 * i + 1];
+        }
+        if len % 2 == 1 {
+            // odd straggler passes through to the next level
+            v[half] = v[len - 1];
+            len = half + 1;
+        } else {
+            len = half;
         }
     }
+    v[0]
 }
 
 /// Contiguous block boundaries for `parts` blocks over `n` rows — the
@@ -218,13 +246,16 @@ impl ExecSpec {
 /// partial-vector size bounded at very large n).
 pub const MAX_CHUNKS: usize = 512;
 
-/// The shared-memory executor. Construct once and reuse: the `task`
-/// strategy owns a persistent worker pool.
+/// The shared-memory executor. Construct once and reuse: both parallel
+/// strategies own persistent threads — the `task` strategy a worker
+/// pool, the `fork-join` strategy a parked [`ThreadTeam`] — so kernel
+/// calls never spawn OS threads (plan once, run many).
 pub struct Executor {
     strategy: ExecStrategy,
     threads: usize,
     chunk_rows: usize,
     pool: Option<WorkerPool>,
+    team: Option<ThreadTeam>,
 }
 
 impl Executor {
@@ -236,17 +267,19 @@ impl Executor {
 
     pub fn new(strategy: ExecStrategy, threads: usize) -> Self {
         let threads = threads.max(1);
-        // the calling thread always participates, so the pool only needs
-        // threads - 1 workers
-        let pool = match strategy {
-            ExecStrategy::TaskPool if threads > 1 => Some(WorkerPool::new(threads - 1)),
-            _ => None,
+        // the calling thread always participates, so the pool/team only
+        // needs threads - 1 workers
+        let (pool, team) = match strategy {
+            ExecStrategy::TaskPool if threads > 1 => (Some(WorkerPool::new(threads - 1)), None),
+            ExecStrategy::ForkJoin if threads > 1 => (None, Some(ThreadTeam::new(threads - 1))),
+            _ => (None, None),
         };
         Executor {
             strategy,
             threads,
             chunk_rows: DEFAULT_CHUNK_ROWS,
             pool,
+            team,
         }
     }
 
@@ -267,14 +300,22 @@ impl Executor {
         self.threads
     }
 
+    /// Number of chunks the executor would split `n` rows into, given a
+    /// backend's chunk limit. This is the cache key of the
+    /// [`IterationWorkspace`] plan cache.
+    pub fn nchunks(&self, n: usize, max_chunks: usize) -> usize {
+        (n / self.chunk_rows)
+            .clamp(1, MAX_CHUNKS)
+            .min(max_chunks.max(1))
+    }
+
     /// Chunk decomposition for `n` rows, honouring a backend's chunk
     /// limit (whole-range-only backends pass 1). Strategy- and
-    /// thread-independent by design — see the determinism contract above.
+    /// thread-independent by design — see the determinism contract
+    /// above. Allocates; the solver hot path goes through the
+    /// [`IterationWorkspace`] plan cache instead.
     pub fn blocks(&self, n: usize, max_chunks: usize) -> Vec<(usize, usize)> {
-        let nchunks = (n / self.chunk_rows)
-            .clamp(1, MAX_CHUNKS)
-            .min(max_chunks.max(1));
-        split_rows(n, nchunks)
+        split_rows(n, self.nchunks(n, max_chunks))
     }
 
     /// Whether `nblocks` chunks would actually execute concurrently.
@@ -283,7 +324,8 @@ impl Executor {
     }
 
     /// Run `f(bi, r0, r1)` for every chunk; returns when all chunks are
-    /// done (fork-join: scope join; task: batch drain; seq: loop end).
+    /// done (fork-join: team barrier; task: batch drain; seq: loop end).
+    /// Steady state: no spawns, no boxing, no allocation.
     pub fn for_each<F>(&self, blocks: &[(usize, usize)], f: F)
     where
         F: Fn(usize, usize, usize) + Sync,
@@ -295,19 +337,10 @@ impl Executor {
             return;
         }
         match self.strategy {
-            ExecStrategy::ForkJoin => self.fork_join(blocks, |bi, r0, r1| {
-                f(bi, r0, r1);
-            }),
+            ExecStrategy::ForkJoin => self.team_for_each(blocks, &f),
             ExecStrategy::TaskPool => {
                 let pool = self.pool.as_ref().expect("task pool present");
-                let f = &f;
-                pool.run_dag(
-                    blocks
-                        .iter()
-                        .enumerate()
-                        .map(|(bi, &(r0, r1))| DagTask::new(move || f(bi, r0, r1)))
-                        .collect(),
-                );
+                pool.run_for_each(blocks, &f);
             }
             ExecStrategy::Seq => unreachable!(),
         }
@@ -315,13 +348,32 @@ impl Executor {
 
     /// Run `f` over every chunk and fold the per-chunk partials with
     /// `red`. The fold happens after all partials exist, in a fixed
-    /// order, so the result is independent of scheduling.
+    /// order, so the result is independent of scheduling. Allocating
+    /// convenience wrapper over [`Executor::reduce_with`].
     pub fn reduce<F>(&self, blocks: &[(usize, usize)], red: &Reduction, f: F) -> f64
     where
         F: Fn(usize, usize, usize) -> f64 + Sync,
     {
-        let partials = self.collect(blocks, &f);
-        fold(&partials, red)
+        let mut scratch = Vec::new();
+        self.reduce_with(blocks, red, &mut scratch, &f)
+    }
+
+    /// [`Executor::reduce`] over a caller-owned partials buffer (the
+    /// workspace's): each chunk's partial is written into its own slot —
+    /// one writer per slot, no lock — and the fold runs in place. Steady
+    /// state with a warm buffer: allocation-free.
+    pub fn reduce_with<F>(
+        &self,
+        blocks: &[(usize, usize)],
+        red: &Reduction,
+        scratch: &mut Vec<f64>,
+        f: &F,
+    ) -> f64
+    where
+        F: Fn(usize, usize, usize) -> f64 + Sync,
+    {
+        self.fill_partials(blocks, scratch, f);
+        fold_mut(scratch, red)
     }
 
     /// Two dependent chunk stages, pipelined per chunk: stage 2 of chunk
@@ -329,6 +381,7 @@ impl Executor {
     /// real dependency edge (no barrier between the kernels); under
     /// fork-join it is two barriered parallel regions; sequentially the
     /// stages interleave per chunk. All three produce identical partials.
+    /// Allocating convenience wrapper over [`Executor::pipeline2_with`].
     pub fn pipeline2<F1, F2>(
         &self,
         blocks: &[(usize, usize)],
@@ -340,146 +393,105 @@ impl Executor {
         F1: Fn(usize, usize, usize) + Sync,
         F2: Fn(usize, usize, usize) -> f64 + Sync,
     {
+        let mut scratch = Vec::new();
+        self.pipeline2_with(blocks, red, &mut scratch, &f1, &f2)
+    }
+
+    /// [`Executor::pipeline2`] over a caller-owned partials buffer.
+    /// Steady state with a warm buffer: allocation-free.
+    pub fn pipeline2_with<F1, F2>(
+        &self,
+        blocks: &[(usize, usize)],
+        red: &Reduction,
+        scratch: &mut Vec<f64>,
+        f1: &F1,
+        f2: &F2,
+    ) -> f64
+    where
+        F1: Fn(usize, usize, usize) + Sync,
+        F2: Fn(usize, usize, usize) -> f64 + Sync,
+    {
         let n = blocks.len();
         if !self.parallel(n) {
-            let mut partials = vec![0.0; n];
+            scratch.clear();
+            scratch.resize(n, 0.0);
             for (bi, &(r0, r1)) in blocks.iter().enumerate() {
                 f1(bi, r0, r1);
-                partials[bi] = f2(bi, r0, r1);
+                scratch[bi] = f2(bi, r0, r1);
             }
-            return fold(&partials, red);
+            return fold_mut(scratch, red);
         }
         match self.strategy {
             ExecStrategy::ForkJoin => {
                 // fork-join pays the inter-kernel barrier the paper
                 // attributes to `omp parallel for`
-                self.for_each(blocks, &f1);
-                self.reduce(blocks, red, &f2)
+                self.team_for_each(blocks, f1);
+                self.reduce_with(blocks, red, scratch, f2)
             }
             ExecStrategy::TaskPool => {
                 let pool = self.pool.as_ref().expect("task pool present");
-                let sink = std::sync::Mutex::new(vec![0.0; n]);
-                let mut tasks: Vec<DagTask> = Vec::with_capacity(2 * n);
-                for (bi, &(r0, r1)) in blocks.iter().enumerate() {
-                    let f1 = &f1;
-                    tasks.push(DagTask::new(move || f1(bi, r0, r1)));
-                }
-                for (bi, &(r0, r1)) in blocks.iter().enumerate() {
-                    let f2 = &f2;
-                    let sink = &sink;
-                    tasks.push(DagTask::after(vec![bi], move || {
-                        let v = f2(bi, r0, r1);
-                        sink.lock().unwrap()[bi] = v;
-                    }));
-                }
-                pool.run_dag(tasks);
-                let partials = sink.into_inner().unwrap();
-                fold(&partials, red)
+                scratch.clear();
+                scratch.resize(n, 0.0);
+                pool.run_pipeline2(blocks, f1, f2, scratch);
+                fold_mut(scratch, red)
             }
             ExecStrategy::Seq => unreachable!(),
         }
     }
 
-    /// Per-chunk partials in chunk-index order, executed per strategy.
-    fn collect<F>(&self, blocks: &[(usize, usize)], f: &F) -> Vec<f64>
+    /// Per-chunk partials in chunk-index order into `scratch[bi]`
+    /// (cleared and resized to the chunk count), executed per strategy.
+    /// Every slot is written by exactly one chunk's task — the lock-free
+    /// successor of the old push-and-reorder `Mutex<Vec>` sink.
+    fn fill_partials<F>(&self, blocks: &[(usize, usize)], scratch: &mut Vec<f64>, f: &F)
     where
         F: Fn(usize, usize, usize) -> f64 + Sync,
     {
         let n = blocks.len();
+        scratch.clear();
+        scratch.resize(n, 0.0);
         if !self.parallel(n) {
-            return blocks
-                .iter()
-                .enumerate()
-                .map(|(bi, &(r0, r1))| f(bi, r0, r1))
-                .collect();
+            for (bi, &(r0, r1)) in blocks.iter().enumerate() {
+                scratch[bi] = f(bi, r0, r1);
+            }
+            return;
         }
-        let mut partials = vec![0.0; n];
         match self.strategy {
             ExecStrategy::ForkJoin => {
-                let got = self.fork_join_collect(blocks, f);
-                for (bi, v) in got {
-                    partials[bi] = v;
-                }
-            }
-            ExecStrategy::TaskPool => {
-                let pool = self.pool.as_ref().expect("task pool present");
-                let sink = std::sync::Mutex::new(Vec::with_capacity(n));
-                pool.run_dag(
-                    blocks
-                        .iter()
-                        .enumerate()
-                        .map(|(bi, &(r0, r1))| {
-                            let sink = &sink;
-                            DagTask::new(move || {
-                                let v = f(bi, r0, r1);
-                                sink.lock().unwrap().push((bi, v));
-                            })
-                        })
-                        .collect(),
-                );
-                for (bi, v) in sink.into_inner().unwrap() {
-                    partials[bi] = v;
-                }
-            }
-            ExecStrategy::Seq => unreachable!(),
-        }
-        partials
-    }
-
-    /// Static round-robin chunk→thread assignment + scope join (the
-    /// fork-join barrier).
-    fn fork_join<F>(&self, blocks: &[(usize, usize)], f: F)
-    where
-        F: Fn(usize, usize, usize) + Sync,
-    {
-        let nthreads = self.threads.min(blocks.len());
-        std::thread::scope(|s| {
-            for t in 1..nthreads {
-                let f = &f;
-                s.spawn(move || {
-                    for bi in (t..blocks.len()).step_by(nthreads) {
+                let nthreads = self.threads.min(n);
+                let team = self.team.as_ref().expect("fork-join team present");
+                let sink = SharedRows::new(scratch);
+                team.run(nthreads, &|t| {
+                    // SAFETY: each member writes only its own stripe's
+                    // slots (disjoint by the round-robin assignment).
+                    let out = unsafe { sink.full() };
+                    for bi in (t..n).step_by(nthreads) {
                         let (r0, r1) = blocks[bi];
-                        f(bi, r0, r1);
+                        out[bi] = f(bi, r0, r1);
                     }
                 });
             }
-            for bi in (0..blocks.len()).step_by(nthreads) {
+            ExecStrategy::TaskPool => {
+                let pool = self.pool.as_ref().expect("task pool present");
+                pool.run_collect(blocks, f, scratch);
+            }
+            ExecStrategy::Seq => unreachable!(),
+        }
+    }
+
+    /// Static round-robin chunk→thread assignment over the persistent
+    /// team, with the region barrier at the end (the fork-join model's
+    /// per-kernel barrier — now a condvar rendezvous, not a spawn+join).
+    fn team_for_each(&self, blocks: &[(usize, usize)], f: &(dyn Fn(usize, usize, usize) + Sync)) {
+        let n = blocks.len();
+        let nthreads = self.threads.min(n);
+        let team = self.team.as_ref().expect("fork-join team present");
+        team.run(nthreads, &|t| {
+            for bi in (t..n).step_by(nthreads) {
                 let (r0, r1) = blocks[bi];
                 f(bi, r0, r1);
             }
         });
-    }
-
-    fn fork_join_collect<F>(&self, blocks: &[(usize, usize)], f: &F) -> Vec<(usize, f64)>
-    where
-        F: Fn(usize, usize, usize) -> f64 + Sync,
-    {
-        let nthreads = self.threads.min(blocks.len());
-        std::thread::scope(|s| {
-            let handles: Vec<_> = (1..nthreads)
-                .map(|t| {
-                    s.spawn(move || {
-                        let mut out = Vec::new();
-                        for bi in (t..blocks.len()).step_by(nthreads) {
-                            let (r0, r1) = blocks[bi];
-                            out.push((bi, f(bi, r0, r1)));
-                        }
-                        out
-                    })
-                })
-                .collect();
-            let mut all: Vec<(usize, f64)> = (0..blocks.len())
-                .step_by(nthreads)
-                .map(|bi| {
-                    let (r0, r1) = blocks[bi];
-                    (bi, f(bi, r0, r1))
-                })
-                .collect();
-            for h in handles {
-                all.extend(h.join().expect("fork-join worker panicked"));
-            }
-            all
-        })
     }
 
     /// Run a caller-built dependency graph on the task pool (fork-join

@@ -1,27 +1,50 @@
 //! Persistent worker pool with dependency-aware chunk-task scheduling —
 //! the shared-memory half of the paper's MPI-OSS_t / MPI-OMP_t models.
 //!
-//! Unlike the fork-join strategy (which spawns scoped threads and pays an
-//! implicit barrier per kernel), the pool's workers live for the lifetime
-//! of the [`crate::exec::Executor`] and consume *task graphs*: each
-//! [`DagTask`] names the batch-local indices of the tasks it depends on,
-//! and becomes runnable the moment its last predecessor finishes — no
-//! global barrier between kernels, which is exactly the mechanism that
-//! lets a chunk's `dot` start while another chunk's `spmv` is still in
-//! flight (the paper's Code 1 dependency chains).
+//! Unlike the fork-join strategy (which pays an implicit barrier per
+//! kernel), the pool's workers live for the lifetime of the
+//! [`crate::exec::Executor`] and consume *task batches*: a task becomes
+//! runnable the moment its predecessors finished — no global barrier
+//! between kernels, which is exactly the mechanism that lets a chunk's
+//! `dot` start while another chunk's `spmv` is still in flight (the
+//! paper's Code 1 dependency chains).
 //!
-//! Scheduling is FIFO over ready tasks (the OmpSs-2 default); the numeric
-//! results never depend on the schedule because reductions are folded in
-//! a fixed order *after* all partials exist (see `exec::Reduction`).
+//! **Plan-once, run-many.** The recurring batch shapes of the solver hot
+//! loop — `for_each` over N chunks, a chunk reduction (`Collect`), the
+//! two-stage SpMV→dot pipeline — are *templates*, not data: their
+//! dependency structure is implied by the shape and the chunk count. A
+//! steady-state submission is one `ShapeBatch` — a `Copy` descriptor
+//! of erased pointers into the caller's frame — instead of N freshly
+//! boxed closures, and scheduling is a single shared atomic claim
+//! cursor: each participant (workers and the submitting thread alike)
+//! takes the pool lock once to attach to the batch, then claims chunk
+//! tasks with one `fetch_add` each until the cursor drains. `Pipeline2`
+//! exploits the per-chunk dependency directly: the claimant of chunk `i`
+//! runs stage 1 and then immediately stage 2 of the same chunk — a valid
+//! schedule of the same task graph (stage 2 of `i` depends only on stage
+//! 1 of `i`) with the best possible cache locality, and no inter-kernel
+//! barrier anywhere. Reduction partials are written into per-slot
+//! positions of a caller-owned buffer (exactly one writer per slot — no
+//! `Mutex<Vec>` sink), and a steady-state submission allocates nothing.
+//!
+//! Caller-built DAGs beyond those shapes go through the generic boxed
+//! [`DagTask`] path ([`run_dag`]), which keeps FIFO scheduling over a
+//! pool-owned ready queue. The numeric results never depend on the
+//! schedule either way, because reductions are folded in a fixed order
+//! *after* all partials exist (see `exec::Reduction`).
+//!
+//! [`run_dag`]: WorkerPool::run_dag
 
 use std::collections::VecDeque;
 use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 
-/// One work item of a batch. `deps` are indices into the same batch that
-/// must complete before this task may start (forward references are not
-/// allowed: a task may only depend on lower indices).
+/// One work item of a caller-built batch (the generic DAG path). `deps`
+/// are indices into the same batch that must complete before this task
+/// may start (forward references are not allowed: a task may only depend
+/// on lower indices).
 pub struct DagTask<'a> {
     pub deps: Vec<usize>,
     pub run: Box<dyn FnOnce() + Send + 'a>,
@@ -47,63 +70,194 @@ impl<'a> DagTask<'a> {
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
 
-/// Scheduling state of one in-flight `run_dag` batch.
+/// Stage-1 kernel signature: `(chunk index, r0, r1)`.
+type Stage1 = dyn Fn(usize, usize, usize) + Sync;
+/// Reducing kernel signature: `(chunk index, r0, r1) -> partial`.
+type Stage2 = dyn Fn(usize, usize, usize) -> f64 + Sync;
+
+/// The recurring batch templates of the solver hot loop.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+enum Shape {
+    /// Chunk `i` runs `f1(i, r0_i, r1_i)`.
+    ForEach,
+    /// Chunk `i` writes `partials[i] = f2(i, r0_i, r1_i)`.
+    Collect,
+    /// Chunk `i` runs `f1(i, ..)` then `partials[i] = f2(i, ..)` on the
+    /// claiming thread — the per-chunk SpMV→dot dependency chain with
+    /// the chunk's rows still hot in cache.
+    Pipeline2,
+}
+
+/// One template batch: the shape plus erased pointers into the caller's
+/// frame. All pointers stay valid for the whole batch: the submitting
+/// call blocks until every claimed chunk ran *and* every attached worker
+/// detached (the same lifetime argument as the boxed-job transmute of
+/// the DAG path, plus the attach/detach accounting below).
+#[derive(Clone, Copy)]
+struct ShapeBatch {
+    shape: Shape,
+    nblocks: usize,
+    blocks: &'static [(usize, usize)],
+    f1: Option<&'static Stage1>,
+    f2: Option<&'static Stage2>,
+    /// Per-slot partials sink (`Collect` / `Pipeline2`); null for
+    /// `ForEach`. Slot `i` is written by exactly one claimant.
+    partials: *mut f64,
+}
+
+// SAFETY: the raw pointers reference the submitting caller's frame,
+// which outlives the batch (the caller blocks until `remaining == 0 &&
+// active == 0`), the closures behind them are `Sync`, and the partials
+// slots are written disjointly (one claimant per chunk).
+unsafe impl Send for ShapeBatch {}
+
+impl ShapeBatch {
+    /// Execute chunk `bi` of this batch (called without the pool lock).
+    fn run_chunk(&self, bi: usize) {
+        let (r0, r1) = self.blocks[bi];
+        match self.shape {
+            Shape::ForEach => {
+                (self.f1.expect("for_each kernel"))(bi, r0, r1);
+            }
+            Shape::Collect => {
+                let v = (self.f2.expect("collect kernel"))(bi, r0, r1);
+                // SAFETY: slot `bi` is this claimant's exclusive slot.
+                unsafe { *self.partials.add(bi) = v };
+            }
+            Shape::Pipeline2 => {
+                (self.f1.expect("pipeline stage 1"))(bi, r0, r1);
+                let v = (self.f2.expect("pipeline stage 2"))(bi, r0, r1);
+                // SAFETY: slot `bi` is this claimant's exclusive slot.
+                unsafe { *self.partials.add(bi) = v };
+            }
+        }
+    }
+}
+
+/// Claim chunks off the shared cursor and run them until the batch
+/// drains. Returns (chunks claimed, all ran without panicking). After a
+/// panic the claimant keeps claiming but stops executing: its claim
+/// loop races through the remaining cursor at `fetch_add` speed, so
+/// other participants (who claim one chunk at a time between kernel
+/// executions) pick up at most a chunk or two more before the cursor is
+/// dry — an approximate cancel, and what lets `remaining` reach zero so
+/// the panic can propagate.
+fn claim_chunks(cursor: &AtomicUsize, sb: &ShapeBatch) -> (usize, bool) {
+    let mut claimed = 0;
+    let mut ok = true;
+    loop {
+        let bi = cursor.fetch_add(1, Ordering::Relaxed);
+        if bi >= sb.nblocks {
+            break;
+        }
+        claimed += 1;
+        if ok {
+            ok = catch_unwind(AssertUnwindSafe(|| sb.run_chunk(bi))).is_ok();
+        }
+    }
+    (claimed, ok)
+}
+
+enum BatchKind {
+    /// Caller-built boxed DAG (generic path; allocates per submission).
+    Dag {
+        jobs: Vec<Option<Job>>,
+        succs: Vec<Vec<usize>>,
+        indeg: Vec<usize>,
+    },
+    /// Template batch (steady-state path; allocation-free).
+    Shape(ShapeBatch),
+}
+
+/// Scheduling state of one in-flight batch.
 struct Batch {
-    /// Pending job bodies; `None` once taken by a worker (or cancelled).
-    jobs: Vec<Option<Job>>,
-    indeg: Vec<usize>,
-    succs: Vec<Vec<usize>>,
-    ready: VecDeque<usize>,
-    /// Tasks not yet finished. The batch is complete at 0.
+    kind: BatchKind,
+    /// Work units not yet finished (DAG tasks, or shape chunks). The
+    /// batch is complete at 0.
     remaining: usize,
+    /// DAG tasks currently executing (taken but not finished) — the
+    /// panic-cancellation accounting.
+    running: usize,
+    /// Shape claimants currently attached (holding a copy of the batch
+    /// descriptor). The submitter must not retire the batch while any
+    /// claimant could still dereference the erased pointers.
+    active: usize,
     panicked: bool,
 }
 
 impl Batch {
-    /// A task finished (or panicked): release successors / cancel rest.
-    fn task_done(&mut self, id: usize, panicked: bool) {
+    /// A DAG task finished (or panicked): release successors / cancel
+    /// the rest. `ready` is the pool's shared ready queue.
+    fn task_done(&mut self, id: usize, panicked: bool, ready: &mut VecDeque<usize>) {
         self.remaining -= 1;
+        self.running -= 1;
         if panicked {
             self.panicked = true;
-            // Cancel everything not yet picked up so `remaining` can
-            // still reach zero and `run_dag` can propagate the panic.
-            for slot in self.jobs.iter_mut() {
-                if slot.take().is_some() {
-                    self.remaining -= 1;
+        }
+        if self.panicked {
+            // Cancel everything not yet started so `remaining` can still
+            // reach zero and the submitter can propagate the panic: only
+            // tasks already running still count.
+            ready.clear();
+            if let BatchKind::Dag { jobs, .. } = &mut self.kind {
+                for slot in jobs.iter_mut() {
+                    *slot = None;
                 }
             }
-            self.ready.clear();
+            self.remaining = self.running;
             return;
         }
-        for i in 0..self.succs[id].len() {
-            let s = self.succs[id][i];
-            self.indeg[s] -= 1;
-            if self.indeg[s] == 0 {
-                self.ready.push_back(s);
+        if let BatchKind::Dag { succs, indeg, .. } = &mut self.kind {
+            for i in 0..succs[id].len() {
+                let s = succs[id][i];
+                indeg[s] -= 1;
+                if indeg[s] == 0 {
+                    ready.push_back(s);
+                }
             }
         }
     }
 
-    /// Pop the next runnable job, if any.
-    fn next_job(&mut self) -> Option<(usize, Job)> {
-        while let Some(id) = self.ready.pop_front() {
-            if let Some(job) = self.jobs[id].take() {
-                return Some((id, job));
+    /// Pop the next runnable DAG job, if any (shape batches schedule
+    /// through the claim cursor instead).
+    fn next_job(&mut self, ready: &mut VecDeque<usize>) -> Option<(usize, Job)> {
+        match &mut self.kind {
+            BatchKind::Dag { jobs, .. } => {
+                while let Some(id) = ready.pop_front() {
+                    if let Some(job) = jobs[id].take() {
+                        self.running += 1;
+                        return Some((id, job));
+                    }
+                    // cancelled slot: keep draining
+                }
+                None
             }
+            BatchKind::Shape(_) => None,
         }
-        None
     }
 }
 
 struct Shared {
     state: Mutex<PoolState>,
-    /// Single condvar for all transitions (task ready, batch done,
+    /// Single condvar for all transitions (work available, batch done,
     /// shutdown); spurious wakeups are cheap at this granularity.
     cv: Condvar,
+    /// Lock-free chunk claim cursor for the current shape batch. Reset
+    /// under the state lock before the batch is published; claimants
+    /// only touch it while attached, so no stale claims can race a new
+    /// batch.
+    cursor: AtomicUsize,
 }
 
 struct PoolState {
     batch: Option<Batch>,
+    /// Ready-task queue for DAG batches, owned by the pool and reused
+    /// across batches.
+    ready: VecDeque<usize>,
+    /// Bumped once per batch submission: lets a worker that drained the
+    /// cursor park until a *new* batch arrives instead of re-attaching
+    /// to the one it just exhausted.
+    generation: u64,
     shutdown: bool,
 }
 
@@ -114,16 +268,19 @@ pub struct WorkerPool {
 }
 
 impl WorkerPool {
-    /// Spawn `workers` threads. Zero workers is legal: `run_dag` always
+    /// Spawn `workers` threads. Zero workers is legal: every submission
     /// executes on the calling thread too, so the pool still makes
     /// progress (it just isn't parallel).
     pub fn new(workers: usize) -> Self {
         let shared = Arc::new(Shared {
             state: Mutex::new(PoolState {
                 batch: None,
+                ready: VecDeque::new(),
+                generation: 0,
                 shutdown: false,
             }),
             cv: Condvar::new(),
+            cursor: AtomicUsize::new(0),
         });
         let handles = (0..workers)
             .map(|_| {
@@ -138,11 +295,117 @@ impl WorkerPool {
         self.handles.len()
     }
 
-    /// Execute one dependency graph of tasks and return when every task
-    /// has run. The calling thread participates in execution, so borrows
-    /// captured by the tasks stay alive for exactly as long as they are
-    /// used. Panics in any task are re-raised here after the batch
-    /// drains.
+    /// Run `f(bi, r0, r1)` for every chunk as independent pool tasks;
+    /// returns when all chunks are done. Steady state: allocation-free.
+    pub fn run_for_each(&self, blocks: &[(usize, usize)], f: &Stage1) {
+        if blocks.is_empty() {
+            return;
+        }
+        // SAFETY: see `erase_*` — the batch cannot outlive this call.
+        let sb = ShapeBatch {
+            shape: Shape::ForEach,
+            nblocks: blocks.len(),
+            blocks: unsafe { erase_blocks(blocks) },
+            f1: Some(unsafe { erase_stage1(f) }),
+            f2: None,
+            partials: std::ptr::null_mut(),
+        };
+        self.run_shape(sb);
+    }
+
+    /// Run `f` over every chunk, writing `partials[bi]` per slot.
+    /// Steady state: allocation-free.
+    pub fn run_collect(&self, blocks: &[(usize, usize)], f: &Stage2, partials: &mut [f64]) {
+        assert_eq!(blocks.len(), partials.len());
+        if blocks.is_empty() {
+            return;
+        }
+        let sb = ShapeBatch {
+            shape: Shape::Collect,
+            nblocks: blocks.len(),
+            blocks: unsafe { erase_blocks(blocks) },
+            f1: None,
+            f2: Some(unsafe { erase_stage2(f) }),
+            partials: partials.as_mut_ptr(),
+        };
+        self.run_shape(sb);
+    }
+
+    /// Two dependent chunk stages, pipelined per chunk: stage 2 of chunk
+    /// `i` depends only on stage 1 of chunk `i`, and the claimant runs
+    /// both back to back (no inter-kernel barrier, chunk data hot in
+    /// cache); stage-2 partials land in `partials[i]`. Steady state:
+    /// allocation-free.
+    pub fn run_pipeline2(
+        &self,
+        blocks: &[(usize, usize)],
+        f1: &Stage1,
+        f2: &Stage2,
+        partials: &mut [f64],
+    ) {
+        assert_eq!(blocks.len(), partials.len());
+        if blocks.is_empty() {
+            return;
+        }
+        let sb = ShapeBatch {
+            shape: Shape::Pipeline2,
+            nblocks: blocks.len(),
+            blocks: unsafe { erase_blocks(blocks) },
+            f1: Some(unsafe { erase_stage1(f1) }),
+            f2: Some(unsafe { erase_stage2(f2) }),
+            partials: partials.as_mut_ptr(),
+        };
+        self.run_shape(sb);
+    }
+
+    /// Submit one template batch and drain it: publish the descriptor
+    /// under the lock (cursor reset, generation bump, worker wakeup),
+    /// claim chunks alongside the workers, then wait until every chunk
+    /// ran and every attached worker detached.
+    fn run_shape(&self, sb: ShapeBatch) {
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            assert!(st.batch.is_none(), "nested batch on the same pool");
+            self.shared.cursor.store(0, Ordering::Relaxed);
+            st.generation = st.generation.wrapping_add(1);
+            st.batch = Some(Batch {
+                kind: BatchKind::Shape(sb),
+                remaining: sb.nblocks,
+                running: 0,
+                active: 0,
+                panicked: false,
+            });
+            self.shared.cv.notify_all();
+        }
+        // the submitter participates without attach/detach bookkeeping:
+        // its claims are recorded before it checks for completion
+        let (claimed, ok) = claim_chunks(&self.shared.cursor, &sb);
+        let mut st = self.shared.state.lock().unwrap();
+        {
+            let b = st.batch.as_mut().expect("batch vanished mid-run");
+            b.remaining -= claimed;
+            if !ok {
+                b.panicked = true;
+            }
+        }
+        let panicked = loop {
+            let b = st.batch.as_mut().expect("batch vanished mid-run");
+            if b.remaining == 0 && b.active == 0 {
+                break st.batch.take().unwrap().panicked;
+            }
+            st = self.shared.cv.wait(st).unwrap();
+        };
+        drop(st);
+        if panicked {
+            panic!("a worker-pool task panicked");
+        }
+    }
+
+    /// Execute one caller-built dependency graph of tasks and return
+    /// when every task has run. The generic (boxed) path: graph
+    /// structures are rebuilt per call — the recurring solver shapes use
+    /// the template submissions above instead. Panics in any task are
+    /// re-raised here after the batch drains.
     pub fn run_dag(&self, tasks: Vec<DagTask<'_>>) {
         if tasks.is_empty() {
             return;
@@ -158,42 +421,44 @@ impl WorkerPool {
                 indeg[id] += 1;
             }
             // SAFETY: the job boxes only outlive their true lifetime on
-            // paper — `run_dag` does not return until every job has been
-            // executed or dropped (remaining == 0), so every borrow the
-            // closures capture is still live whenever they run.
-            let job: Job = unsafe {
-                std::mem::transmute::<Box<dyn FnOnce() + Send + '_>, Job>(t.run)
-            };
+            // paper — the batch does not complete until every job has
+            // been executed or dropped (remaining == 0), so every borrow
+            // the closures capture is still live whenever they run.
+            let job: Job =
+                unsafe { std::mem::transmute::<Box<dyn FnOnce() + Send + '_>, Job>(t.run) };
             jobs.push(Some(job));
         }
-        let ready: VecDeque<usize> = (0..n).filter(|&i| indeg[i] == 0).collect();
-        let batch = Batch {
-            jobs,
-            indeg,
-            succs,
-            ready,
-            remaining: n,
-            panicked: false,
-        };
+        let roots: Vec<usize> = (0..n).filter(|&i| indeg[i] == 0).collect();
 
         let mut st = self.shared.state.lock().unwrap();
-        assert!(st.batch.is_none(), "nested run_dag on the same pool");
-        st.batch = Some(batch);
+        assert!(st.batch.is_none(), "nested batch on the same pool");
+        st.ready.clear();
+        st.ready.extend(roots);
+        st.generation = st.generation.wrapping_add(1);
+        st.batch = Some(Batch {
+            kind: BatchKind::Dag { jobs, succs, indeg },
+            remaining: n,
+            running: 0,
+            active: 0,
+            panicked: false,
+        });
         self.shared.cv.notify_all();
 
         // The caller drains the batch alongside the workers.
         let panicked = loop {
-            let b = st.batch.as_mut().expect("batch vanished mid-run");
+            let PoolState { batch, ready, .. } = &mut *st;
+            let b = batch.as_mut().expect("batch vanished mid-run");
             if b.remaining == 0 {
-                let b = st.batch.take().unwrap();
+                let b = batch.take().unwrap();
                 break b.panicked;
             }
-            if let Some((id, job)) = b.next_job() {
+            if let Some((id, job)) = b.next_job(ready) {
                 drop(st);
                 let ok = catch_unwind(AssertUnwindSafe(job)).is_ok();
                 st = self.shared.state.lock().unwrap();
-                if let Some(b) = st.batch.as_mut() {
-                    b.task_done(id, !ok);
+                let PoolState { batch, ready, .. } = &mut *st;
+                if let Some(b) = batch.as_mut() {
+                    b.task_done(id, !ok, ready);
                     // unconditional: successors this task readied must
                     // wake parked workers, not just batch completion
                     self.shared.cv.notify_all();
@@ -207,6 +472,22 @@ impl WorkerPool {
             panic!("a worker-pool task panicked");
         }
     }
+}
+
+// Lifetime erasure for the template batches. All three are sound for the
+// same reason as the boxed-job transmute in `run_dag`: the submitting
+// call blocks until the batch fully drains, so the erased borrows never
+// outlive the caller's frame in time, only in type.
+unsafe fn erase_blocks(b: &[(usize, usize)]) -> &'static [(usize, usize)] {
+    std::mem::transmute::<&[(usize, usize)], &'static [(usize, usize)]>(b)
+}
+
+unsafe fn erase_stage1(f: &Stage1) -> &'static Stage1 {
+    std::mem::transmute::<&Stage1, &'static Stage1>(f)
+}
+
+unsafe fn erase_stage2(f: &Stage2) -> &'static Stage2 {
+    std::mem::transmute::<&Stage2, &'static Stage2>(f)
 }
 
 impl Drop for WorkerPool {
@@ -224,18 +505,59 @@ impl Drop for WorkerPool {
 
 fn worker_loop(shared: &Shared) {
     let mut st = shared.state.lock().unwrap();
+    // generation whose cursor this worker has already drained (0 is
+    // never a live generation: submissions bump it first)
+    let mut exhausted_gen: u64 = 0;
     loop {
         if st.shutdown {
             return;
         }
-        let job = st.batch.as_mut().and_then(Batch::next_job);
-        match job {
+        // template batches: attach under the lock, then claim chunks
+        // lock-free off the shared cursor
+        let shape = match &st.batch {
+            Some(b) => match &b.kind {
+                BatchKind::Shape(sb) if st.generation != exhausted_gen => {
+                    Some((st.generation, *sb))
+                }
+                _ => None,
+            },
+            None => None,
+        };
+        if let Some((gen, sb)) = shape {
+            st.batch.as_mut().expect("batch just observed").active += 1;
+            drop(st);
+            let (claimed, ok) = claim_chunks(&shared.cursor, &sb);
+            st = shared.state.lock().unwrap();
+            if claimed == 0 {
+                // cursor already drained: park until the next submission
+                exhausted_gen = gen;
+            }
+            // the batch cannot have been retired: our attach keeps it
+            // alive until this detach
+            let b = st.batch.as_mut().expect("attached batch retired early");
+            b.active -= 1;
+            b.remaining -= claimed;
+            if !ok {
+                b.panicked = true;
+            }
+            if b.remaining == 0 && b.active == 0 {
+                shared.cv.notify_all();
+            }
+            continue;
+        }
+        // DAG batches: FIFO queue pickup
+        let work = {
+            let PoolState { batch, ready, .. } = &mut *st;
+            batch.as_mut().and_then(|b| b.next_job(ready))
+        };
+        match work {
             Some((id, job)) => {
                 drop(st);
                 let ok = catch_unwind(AssertUnwindSafe(job)).is_ok();
                 st = shared.state.lock().unwrap();
-                if let Some(b) = st.batch.as_mut() {
-                    b.task_done(id, !ok);
+                let PoolState { batch, ready, .. } = &mut *st;
+                if let Some(b) = batch.as_mut() {
+                    b.task_done(id, !ok, ready);
                     // Wake the caller (batch may be done) and siblings
                     // (successors may have become ready).
                     shared.cv.notify_all();
@@ -251,7 +573,6 @@ fn worker_loop(shared: &Shared) {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use std::sync::atomic::{AtomicUsize, Ordering};
 
     #[test]
     fn runs_independent_tasks() {
@@ -282,6 +603,11 @@ mod tests {
                 .collect(),
         );
         assert_eq!(counter.load(Ordering::Relaxed), 8);
+        // the template shapes drain on the caller too
+        let blocks = [(0usize, 4usize), (4, 8)];
+        let mut partials = [0.0; 2];
+        pool.run_collect(&blocks, &|bi, r0, r1| (bi + r1 - r0) as f64, &mut partials);
+        assert_eq!(partials, [4.0, 5.0]);
     }
 
     #[test]
@@ -329,6 +655,82 @@ mod tests {
     }
 
     #[test]
+    fn template_for_each_covers_every_chunk() {
+        let pool = WorkerPool::new(3);
+        let blocks: Vec<(usize, usize)> = (0..16).map(|i| (i * 4, i * 4 + 4)).collect();
+        let hit: Vec<AtomicUsize> = (0..16).map(|_| AtomicUsize::new(0)).collect();
+        for _ in 0..30 {
+            pool.run_for_each(&blocks, &|bi, r0, r1| {
+                assert_eq!((r0, r1), blocks[bi]);
+                hit[bi].fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        for h in &hit {
+            assert_eq!(h.load(Ordering::Relaxed), 30);
+        }
+    }
+
+    #[test]
+    fn template_collect_writes_per_slot() {
+        let pool = WorkerPool::new(4);
+        let blocks: Vec<(usize, usize)> = (0..32).map(|i| (i, i + 1)).collect();
+        let mut partials = vec![0.0; 32];
+        pool.run_collect(&blocks, &|bi, _, _| bi as f64 + 0.5, &mut partials);
+        for (bi, v) in partials.iter().enumerate() {
+            assert_eq!(*v, bi as f64 + 0.5);
+        }
+    }
+
+    #[test]
+    fn template_pipeline2_orders_stages_per_chunk() {
+        let pool = WorkerPool::new(4);
+        let n = 24;
+        let blocks: Vec<(usize, usize)> = (0..n).map(|i| (i, i + 1)).collect();
+        for _ in 0..20 {
+            let stage1: Vec<AtomicUsize> = (0..n).map(|_| AtomicUsize::new(0)).collect();
+            let mut partials = vec![0.0; n];
+            pool.run_pipeline2(
+                &blocks,
+                &|bi, _, _| {
+                    stage1[bi].store(bi + 1, Ordering::SeqCst);
+                },
+                &|bi, _, _| {
+                    // stage 2 of chunk bi must see its own stage 1
+                    stage1[bi].load(Ordering::SeqCst) as f64
+                },
+                &mut partials,
+            );
+            for (bi, v) in partials.iter().enumerate() {
+                assert_eq!(*v, (bi + 1) as f64, "stage 2 ran before stage 1");
+            }
+        }
+    }
+
+    #[test]
+    fn mixed_shape_and_dag_batches_interleave() {
+        // shape and DAG submissions alternate on one pool: the workers
+        // must switch between cursor claiming and queue pickup cleanly
+        let pool = WorkerPool::new(2);
+        let blocks: Vec<(usize, usize)> = (0..8).map(|i| (i, i + 1)).collect();
+        for round in 0..10 {
+            let mut partials = vec![0.0; 8];
+            pool.run_collect(&blocks, &|bi, _, _| (bi + round) as f64, &mut partials);
+            assert_eq!(partials[3], (3 + round) as f64);
+            let counter = AtomicUsize::new(0);
+            pool.run_dag(
+                (0..4)
+                    .map(|_| {
+                        DagTask::new(|| {
+                            counter.fetch_add(1, Ordering::Relaxed);
+                        })
+                    })
+                    .collect(),
+            );
+            assert_eq!(counter.load(Ordering::Relaxed), 4);
+        }
+    }
+
+    #[test]
     fn task_panic_propagates_and_pool_survives() {
         let pool = WorkerPool::new(2);
         let res = std::panic::catch_unwind(AssertUnwindSafe(|| {
@@ -345,5 +747,22 @@ mod tests {
             counter.fetch_add(1, Ordering::Relaxed);
         })]);
         assert_eq!(counter.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn shape_panic_propagates_and_pool_survives() {
+        let pool = WorkerPool::new(2);
+        let blocks: Vec<(usize, usize)> = (0..8).map(|i| (i, i + 1)).collect();
+        let res = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            pool.run_for_each(&blocks, &|bi, _, _| {
+                if bi == 3 {
+                    panic!("boom");
+                }
+            });
+        }));
+        assert!(res.is_err(), "panic must propagate to the caller");
+        let mut partials = vec![0.0; 8];
+        pool.run_collect(&blocks, &|bi, _, _| bi as f64, &mut partials);
+        assert_eq!(partials[7], 7.0);
     }
 }

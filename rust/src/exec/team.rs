@@ -1,0 +1,252 @@
+//! Persistent fork-join thread team — the `#pragma omp parallel for`
+//! model without the per-region thread management cost.
+//!
+//! Before this module the fork-join strategy spawned scoped OS threads
+//! for every kernel call; Lange et al. (arXiv:1303.5275) attribute most
+//! fork-join losses in hybrid PETSc runs to exactly that per-region
+//! thread management. A [`ThreadTeam`] instead spawns its members once
+//! (at `Executor::new`), parks them on a condvar between parallel
+//! regions, and reuses one epoch-counted barrier per region: entering a
+//! region is a mutex hand-off and a wakeup, not a `clone(2)`.
+//!
+//! A region is one `&dyn Fn(usize)` — member `t` of the team runs
+//! `job(t)`, the caller participates as member 0, and [`ThreadTeam::run`]
+//! returns only when every participating member finished (the implicit
+//! barrier of the fork-join model). Nothing is boxed and nothing is
+//! allocated per region: the job pointer is copied into the shared slot
+//! and erased to `'static` only for the duration of the region (the
+//! caller's blocking wait keeps the borrow alive — the same argument the
+//! task pool's batches rely on).
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+/// One parallel region: members `0..nthreads` each run `job(t)` once.
+#[derive(Clone, Copy)]
+struct Region {
+    /// Erased borrow of the caller's closure — valid until the region's
+    /// barrier completes (see the module docs).
+    job: &'static (dyn Fn(usize) + Sync),
+    /// Participating members including the caller (member 0). Workers
+    /// with a higher index acknowledge the epoch and keep waiting.
+    nthreads: usize,
+}
+
+struct TeamState {
+    region: Option<Region>,
+    /// Bumped once per region so parked workers can tell a new region
+    /// from the one they just finished.
+    epoch: u64,
+    /// Participating members still inside the current region.
+    working: usize,
+    /// Members whose job panicked this region.
+    panicked: usize,
+    shutdown: bool,
+}
+
+struct Shared {
+    state: Mutex<TeamState>,
+    cv: Condvar,
+}
+
+/// The persistent team. Dropping it shuts the workers down.
+pub struct ThreadTeam {
+    shared: Arc<Shared>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl ThreadTeam {
+    /// Spawn `workers` parked member threads. The caller of [`run`]
+    /// always participates as member 0, so a team with `workers`
+    /// threads executes regions of up to `workers + 1` members.
+    ///
+    /// [`run`]: ThreadTeam::run
+    pub fn new(workers: usize) -> Self {
+        let shared = Arc::new(Shared {
+            state: Mutex::new(TeamState {
+                region: None,
+                epoch: 0,
+                working: 0,
+                panicked: 0,
+                shutdown: false,
+            }),
+            cv: Condvar::new(),
+        });
+        let handles = (0..workers)
+            .map(|i| {
+                let sh = shared.clone();
+                // member indices 1..=workers (0 is the caller)
+                std::thread::spawn(move || member_loop(&sh, i + 1))
+            })
+            .collect();
+        ThreadTeam { shared, handles }
+    }
+
+    pub fn workers(&self) -> usize {
+        self.handles.len()
+    }
+
+    /// Execute one parallel region: members `0..nthreads` each run
+    /// `job(t)`, and `run` returns when all of them finished (the
+    /// fork-join barrier). `nthreads` is clamped to the team size; the
+    /// calling thread runs member 0. Panics in any member are re-raised
+    /// here after the barrier, leaving the team reusable.
+    pub fn run(&self, nthreads: usize, job: &(dyn Fn(usize) + Sync)) {
+        let nthreads = nthreads.clamp(1, self.handles.len() + 1);
+        // SAFETY: the erased borrow is dereferenced only by members of
+        // this region, and `run` does not return until `working == 0` —
+        // every dereference happens while the caller's frame (and thus
+        // the true borrow) is alive.
+        let job: &'static (dyn Fn(usize) + Sync) = unsafe {
+            std::mem::transmute::<&(dyn Fn(usize) + Sync), &'static (dyn Fn(usize) + Sync)>(job)
+        };
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            assert!(st.region.is_none(), "nested parallel region on one team");
+            st.epoch += 1;
+            st.working = nthreads;
+            st.panicked = 0;
+            st.region = Some(Region { job, nthreads });
+            self.shared.cv.notify_all();
+        }
+        // the caller is member 0
+        let ok = catch_unwind(AssertUnwindSafe(|| job(0))).is_ok();
+        let mut st = self.shared.state.lock().unwrap();
+        if !ok {
+            st.panicked += 1;
+        }
+        st.working -= 1;
+        while st.working != 0 {
+            st = self.shared.cv.wait(st).unwrap();
+        }
+        st.region = None;
+        let panicked = st.panicked;
+        drop(st);
+        if panicked > 0 {
+            panic!("a fork-join team member panicked");
+        }
+    }
+}
+
+impl Drop for ThreadTeam {
+    fn drop(&mut self) {
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.shutdown = true;
+        }
+        self.shared.cv.notify_all();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn member_loop(shared: &Shared, t: usize) {
+    let mut seen_epoch = 0u64;
+    let mut st = shared.state.lock().unwrap();
+    loop {
+        if st.shutdown {
+            return;
+        }
+        match st.region {
+            Some(r) if st.epoch != seen_epoch => {
+                seen_epoch = st.epoch;
+                if t < r.nthreads {
+                    let job = r.job;
+                    drop(st);
+                    let ok = catch_unwind(AssertUnwindSafe(|| job(t))).is_ok();
+                    st = shared.state.lock().unwrap();
+                    if !ok {
+                        st.panicked += 1;
+                    }
+                    st.working -= 1;
+                    if st.working == 0 {
+                        shared.cv.notify_all();
+                    }
+                }
+                // non-participants only acknowledge the epoch
+            }
+            _ => {
+                st = shared.cv.wait(st).unwrap();
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn all_members_run_once_per_region() {
+        let team = ThreadTeam::new(3);
+        for _ in 0..50 {
+            let hits: [AtomicUsize; 4] = std::array::from_fn(|_| AtomicUsize::new(0));
+            team.run(4, &|t| {
+                hits[t].fetch_add(1, Ordering::SeqCst);
+            });
+            for (t, h) in hits.iter().enumerate() {
+                assert_eq!(h.load(Ordering::SeqCst), 1, "member {t}");
+            }
+        }
+    }
+
+    #[test]
+    fn clamps_participants_to_team_size() {
+        let team = ThreadTeam::new(1);
+        let count = AtomicUsize::new(0);
+        team.run(8, &|_| {
+            count.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(count.load(Ordering::SeqCst), 2, "caller + 1 worker");
+    }
+
+    #[test]
+    fn narrow_regions_leave_spare_members_parked() {
+        let team = ThreadTeam::new(3);
+        let count = AtomicUsize::new(0);
+        // alternate wide and narrow regions: spare members must neither
+        // run narrow regions nor miss later wide ones
+        for round in 0..20 {
+            let n = if round % 2 == 0 { 2 } else { 4 };
+            count.store(0, Ordering::SeqCst);
+            team.run(n, &|_| {
+                count.fetch_add(1, Ordering::SeqCst);
+            });
+            assert_eq!(count.load(Ordering::SeqCst), n);
+        }
+    }
+
+    #[test]
+    fn member_panic_propagates_and_team_survives() {
+        let team = ThreadTeam::new(2);
+        let res = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            team.run(3, &|t| {
+                if t == 1 {
+                    panic!("boom");
+                }
+            });
+        }));
+        assert!(res.is_err(), "panic must propagate to the caller");
+        // the team is still usable afterwards
+        let count = AtomicUsize::new(0);
+        team.run(3, &|_| {
+            count.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(count.load(Ordering::SeqCst), 3);
+    }
+
+    #[test]
+    fn zero_worker_team_degenerates_to_caller_only() {
+        let team = ThreadTeam::new(0);
+        let count = AtomicUsize::new(0);
+        team.run(1, &|t| {
+            assert_eq!(t, 0);
+            count.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(count.load(Ordering::SeqCst), 1);
+        assert_eq!(team.workers(), 0);
+    }
+}

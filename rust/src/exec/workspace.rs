@@ -1,0 +1,96 @@
+//! Per-solve reusable scratch — the "plan once, run many" state that
+//! turns the solver iteration loop into a zero-allocation steady state
+//! (DESIGN.md §7).
+//!
+//! Three things used to be allocated afresh on every kernel call or
+//! iteration:
+//!
+//!  * the chunk decomposition (`Vec<(r0, r1)>`) — recomputed per
+//!    operation although it depends only on the row count and chunk
+//!    policy, both fixed for a whole solve;
+//!  * the reduction partials vector — one fresh `Vec<f64>` per dot /
+//!    fused reduce;
+//!  * the halo gather buffer — one fresh `Vec<f64>` per neighbour per
+//!    exchange.
+//!
+//! An [`IterationWorkspace`] owns all three. Chunk plans are cached as
+//! `Rc<[(usize, usize)]>` keyed by `(rows, parts)`: the first operation
+//! on a given shape computes and stores the plan, every later call hands
+//! out a reference-counted view (an `Rc` clone is a counter bump, not an
+//! allocation — and the `Rc` lets the caller hold the plan while the
+//! workspace is re-borrowed mutably for the partials buffer). The
+//! partials and halo buffers are capacity-retaining vectors reused by
+//! every operation of the owning rank's solve.
+//!
+//! The workspace never changes a number: the plans are exactly what
+//! [`crate::exec::Executor::blocks`] would return, and the buffers only
+//! carry values that previously lived in per-call vectors.
+
+use std::rc::Rc;
+
+/// Reusable per-solve scratch state. One per rank per solve — it is not
+/// `Sync` (the `Rc` plans) and never crosses the rank thread boundary.
+#[derive(Default)]
+pub struct IterationWorkspace {
+    /// Cached chunk plans keyed by `(rows, parts)`. A solve touches a
+    /// handful of shapes (one per operand length × chunk-limit
+    /// combination), so a linear scan beats any map.
+    plans: Vec<((usize, usize), Rc<[(usize, usize)]>)>,
+    /// Reduction partials scratch (operations never nest reductions).
+    pub partials: Vec<f64>,
+    /// Halo gather staging: one neighbour plane at a time.
+    pub halo_stage: Vec<f64>,
+}
+
+impl IterationWorkspace {
+    pub fn new() -> Self {
+        IterationWorkspace::default()
+    }
+
+    /// The cached chunk decomposition of `n` rows into `parts` blocks
+    /// (computed via [`crate::exec::split_rows`] on first use —
+    /// identical to the executor's uncached plan by construction).
+    pub fn plan(&mut self, n: usize, parts: usize) -> Rc<[(usize, usize)]> {
+        if let Some((_, p)) = self.plans.iter().find(|((pn, pp), _)| *pn == n && *pp == parts) {
+            return p.clone();
+        }
+        let plan: Rc<[(usize, usize)]> = super::split_rows(n, parts).into();
+        self.plans.push(((n, parts), plan.clone()));
+        plan
+    }
+
+    /// Number of distinct chunk plans currently cached.
+    pub fn cached_plans(&self) -> usize {
+        self.plans.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exec::split_rows;
+
+    #[test]
+    fn plan_matches_split_rows_and_caches() {
+        let mut ws = IterationWorkspace::new();
+        let a = ws.plan(1000, 7);
+        assert_eq!(&a[..], &split_rows(1000, 7)[..]);
+        assert_eq!(ws.cached_plans(), 1);
+        let b = ws.plan(1000, 7);
+        assert!(Rc::ptr_eq(&a, &b), "second lookup must reuse the plan");
+        assert_eq!(ws.cached_plans(), 1);
+        let c = ws.plan(1000, 3);
+        assert_eq!(&c[..], &split_rows(1000, 3)[..]);
+        assert_eq!(ws.cached_plans(), 2);
+    }
+
+    #[test]
+    fn buffers_retain_capacity() {
+        let mut ws = IterationWorkspace::new();
+        ws.partials.resize(64, 0.0);
+        let cap = ws.partials.capacity();
+        ws.partials.clear();
+        ws.partials.resize(64, 1.0);
+        assert_eq!(ws.partials.capacity(), cap);
+    }
+}

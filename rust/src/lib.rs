@@ -7,9 +7,11 @@
 //! Layer 3 (this crate) is the coordinator: solvers with per-rank
 //! iteration loops over a pluggable transport (`simmpi::Transport` —
 //! lockstep oracle or genuinely concurrent rank threads), the *real*
-//! shared-memory executor (`exec` — fork-join scoped threads or a
-//! dependency-aware task pool) giving true hybrid ranks × threads
-//! execution, the MareNostrum 4 machine model, the discrete-event
+//! shared-memory executor (`exec` — a persistent parked fork-join team
+//! or a dependency-aware task pool with reusable graph templates, both
+//! allocation-free in steady state; DESIGN.md §7) giving true hybrid
+//! ranks × threads execution, the MareNostrum 4 machine model, the
+//! discrete-event
 //! simulator that regenerates the paper's figures, and the PJRT runtime
 //! that executes the AOT-compiled JAX/Pallas artifacts. Python (layers
 //! 1-2) runs only at build time — see DESIGN.md at the repo root.

@@ -31,35 +31,50 @@ use std::sync::{Arc, Condvar, Mutex};
 use std::thread::ThreadId;
 use std::time::Duration;
 
-use super::{rank_fold, Comm, MsgKey, Tag, Transport, TransportKind, WorldStats};
+use super::{rank_fold_iter, Comm, MsgKey, Payload, Tag, Transport, TransportKind, WorldStats};
 
 /// One in-flight allreduce round on a (comm, tag) key. Rounds exist
 /// because the ISODD split reuses keys every second iteration while a
 /// fast rank may already be two allreduces ahead of a slow one.
+/// Contributions and results are inline [`Payload`]s and finished rounds
+/// return to `HubState::spare_rounds`, so the steady state recycles one
+/// small struct per collective instead of allocating fresh vectors.
+#[derive(Default)]
 struct Round {
-    parts: Vec<Option<Vec<f64>>>,
+    parts: Vec<Option<Payload>>,
     nparts: usize,
-    result: Option<Vec<f64>>,
+    result: Option<Payload>,
     taken: Vec<bool>,
     ntaken: usize,
 }
 
 impl Round {
-    fn new(nranks: usize) -> Self {
-        Round {
-            parts: (0..nranks).map(|_| None).collect(),
-            nparts: 0,
-            result: None,
-            taken: vec![false; nranks],
-            ntaken: 0,
-        }
+    /// Prepare a (possibly recycled) round for `nranks` contributions.
+    fn reset(&mut self, nranks: usize) {
+        self.parts.clear();
+        self.parts.resize(nranks, None);
+        self.nparts = 0;
+        self.result = None;
+        self.taken.clear();
+        self.taken.resize(nranks, false);
+        self.ntaken = 0;
     }
 }
 
+/// Key of one in-flight reduction: (comm, tag, round index).
+type ReduceKey = (Comm, Tag, u64);
+
 struct HubState {
     mailboxes: BTreeMap<MsgKey, VecDeque<Vec<f64>>>,
-    /// (comm, tag, round) -> in-flight reduction.
-    reductions: BTreeMap<(Comm, Tag, u64), Round>,
+    /// In-flight reductions. A linear scan: at most a couple of rounds
+    /// are ever open at once (the ISODD window), and the Vec keeps its
+    /// capacity across rounds where a tree would churn nodes.
+    reductions: Vec<(ReduceKey, Round)>,
+    /// Recycled message payload buffers (capacity-preserving): `send`
+    /// pops one, `recv_into` pushes the consumed buffer back.
+    spare_bufs: Vec<Vec<f64>>,
+    /// Recycled reduction rounds.
+    spare_rounds: Vec<Round>,
     stats: WorldStats,
     thread_ids: HashSet<ThreadId>,
     /// Lockstep: the rank currently allowed to execute.
@@ -93,7 +108,9 @@ impl Hub {
         Hub {
             state: Mutex::new(HubState {
                 mailboxes: BTreeMap::new(),
-                reductions: BTreeMap::new(),
+                reductions: Vec::new(),
+                spare_bufs: Vec::new(),
+                spare_rounds: Vec::new(),
                 stats: WorldStats::default(),
                 thread_ids: HashSet::new(),
                 turn: 0,
@@ -290,7 +307,7 @@ impl Transport for RankTransport {
         self.hub.nranks
     }
 
-    fn send(&mut self, dst: usize, tag: Tag, comm: Comm, data: Vec<f64>) {
+    fn send(&mut self, dst: usize, tag: Tag, comm: Comm, data: &[f64]) {
         let hub = &*self.hub;
         assert!(dst < hub.nranks, "bad rank");
         let mut st = hub.state.lock().unwrap();
@@ -300,10 +317,15 @@ impl Transport for RankTransport {
         );
         st.stats.p2p_messages += 1;
         st.stats.p2p_bytes += (data.len() * 8) as u64;
+        // copy into a recycled buffer: after warmup the pool holds a
+        // buffer of matching capacity for every in-flight plane
+        let mut buf = st.spare_bufs.pop().unwrap_or_default();
+        buf.clear();
+        buf.extend_from_slice(data);
         st.mailboxes
             .entry((self.rank, dst, tag, comm))
             .or_default()
-            .push_back(data);
+            .push_back(buf);
         st.idle = 0;
         hub.cv.notify_all();
     }
@@ -315,7 +337,36 @@ impl Transport for RankTransport {
         })
     }
 
-    fn allreduce_start(&mut self, comm: Comm, tag: Tag, partial: Vec<f64>) {
+    fn recv_into(&mut self, src: usize, tag: Tag, comm: Comm, out: &mut [f64]) {
+        let key = (src, self.rank, tag, comm);
+        // a wrong-length message is reported *outside* the state lock:
+        // panicking with the guard held would poison the mutex and kill
+        // the peers with opaque PoisonErrors instead of the designed
+        // "a peer rank failed" path (run_ranks poisons the hub for us)
+        let mut bad_len = None;
+        self.wait_for("recv", |st| {
+            let q = st.mailboxes.get_mut(&key)?;
+            let front_len = q.front()?.len();
+            if front_len != out.len() {
+                bad_len = Some(front_len);
+                return Some(());
+            }
+            let buf = q.pop_front().expect("peeked message present");
+            out.copy_from_slice(&buf);
+            st.spare_bufs.push(buf);
+            Some(())
+        });
+        if let Some(got) = bad_len {
+            panic!(
+                "rank {}: recv_into length mismatch on (src {src}, tag {tag}): \
+                 got {got}, want {}",
+                self.rank,
+                out.len()
+            );
+        }
+    }
+
+    fn allreduce_start(&mut self, comm: Comm, tag: Tag, partial: Payload) {
         let round = {
             let c = self.ar_next.entry((comm, tag)).or_insert(0);
             let r = *c;
@@ -326,6 +377,7 @@ impl Transport for RankTransport {
             .entry((comm, tag))
             .or_default()
             .push_back(round);
+        let key: ReduceKey = (comm, tag, round);
         let hub = &*self.hub;
         let n = hub.nranks;
         let mut st = hub.state.lock().unwrap();
@@ -333,66 +385,59 @@ impl Transport for RankTransport {
             hub.kind == TransportKind::Threaded || st.turn == self.rank,
             "lockstep op outside of turn"
         );
-        let completed = {
-            let slot = st
-                .reductions
-                .entry((comm, tag, round))
-                .or_insert_with(|| Round::new(n));
-            debug_assert!(
-                slot.parts[self.rank].is_none(),
-                "double allreduce contribution"
-            );
-            slot.parts[self.rank] = Some(partial);
-            slot.nparts += 1;
-            if slot.nparts == n {
-                // every contribution is in: fold in the fixed rank order
-                let parts: Vec<Vec<f64>> =
-                    slot.parts.iter_mut().map(|p| p.take().unwrap()).collect();
-                slot.result = Some(rank_fold(parts));
-                true
-            } else {
-                false
+        let idx = match st.reductions.iter().position(|(k, _)| *k == key) {
+            Some(i) => i,
+            None => {
+                let mut r = st.spare_rounds.pop().unwrap_or_default();
+                r.reset(n);
+                st.reductions.push((key, r));
+                st.reductions.len() - 1
             }
         };
+        let slot = &mut st.reductions[idx].1;
+        debug_assert!(
+            slot.parts[self.rank].is_none(),
+            "double allreduce contribution"
+        );
+        slot.parts[self.rank] = Some(partial);
+        slot.nparts += 1;
+        let completed = slot.nparts == n;
         if completed {
+            // every contribution is in: fold in the fixed rank order —
+            // rank_fold is the one authority for the schedule, fed
+            // straight from the slots (no per-round vector of parts)
+            slot.result = Some(rank_fold_iter(
+                slot.parts
+                    .iter()
+                    .map(|p| p.expect("counted contribution present")),
+            ));
             st.stats.allreduces += 1;
         }
         st.idle = 0;
         hub.cv.notify_all();
     }
 
-    fn allreduce_wait(&mut self, comm: Comm, tag: Tag) -> Vec<f64> {
+    fn allreduce_wait(&mut self, comm: Comm, tag: Tag) -> Payload {
         let round = self
             .ar_pending
             .get_mut(&(comm, tag))
             .and_then(|q| q.pop_front())
             .expect("allreduce_wait without a matching allreduce_start");
-        let key = (comm, tag, round);
+        let key: ReduceKey = (comm, tag, round);
         let me = self.rank;
         let n = self.hub.nranks;
         self.wait_for("allreduce", move |st| {
-            let taken = match st.reductions.get_mut(&key) {
-                Some(slot) => match &slot.result {
-                    Some(result) => {
-                        debug_assert!(!slot.taken[me], "double allreduce_wait");
-                        let v = result.clone();
-                        slot.taken[me] = true;
-                        slot.ntaken += 1;
-                        Some((v, slot.ntaken == n))
-                    }
-                    None => None,
-                },
-                None => None,
-            };
-            match taken {
-                Some((v, all_taken)) => {
-                    if all_taken {
-                        st.reductions.remove(&key);
-                    }
-                    Some(v)
-                }
-                None => None,
+            let idx = st.reductions.iter().position(|(k, _)| *k == key)?;
+            let slot = &mut st.reductions[idx].1;
+            let result = slot.result?;
+            debug_assert!(!slot.taken[me], "double allreduce_wait");
+            slot.taken[me] = true;
+            slot.ntaken += 1;
+            if slot.ntaken == n {
+                let (_, round) = st.reductions.swap_remove(idx);
+                st.spare_rounds.push(round);
             }
+            Some(result)
         })
     }
 }
@@ -485,9 +530,9 @@ mod tests {
             let bodies: Vec<Box<dyn FnOnce(&mut RankTransport) -> f64 + Send>> =
                 vec![Box::new(|tp: &mut RankTransport| {
                     // self-send is legal (a rank may message itself)
-                    tp.send(0, 1, 0, vec![2.5]);
+                    tp.send(0, 1, 0, &[2.5]);
                     let v = tp.recv(0, 1, 0);
-                    let s = tp.allreduce(0, 0, vec![v[0]]);
+                    let s = tp.allreduce(0, 0, Payload::scalar(v[0]));
                     s[0]
                 })];
             let (got, stats) = run_ranks(kind, bodies);

@@ -77,6 +77,89 @@ impl TransportKind {
     }
 }
 
+/// Widest allreduce payload any solver posts: every collective in the
+/// method loops is a scalar or a fused pair (ω's numerator/denominator,
+/// αn with β), so payloads fit inline — no heap traffic per collective.
+pub const MAX_REDUCE_LEN: usize = 2;
+
+/// Inline allreduce payload (at most [`MAX_REDUCE_LEN`] lanes). `Copy`,
+/// so posting a contribution and taking a result moves a couple of
+/// machine words instead of allocating a `Vec<f64>` per collective —
+/// part of the zero-allocation steady state (DESIGN.md §7).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Payload {
+    vals: [f64; MAX_REDUCE_LEN],
+    len: usize,
+}
+
+impl Payload {
+    /// One-lane payload (scalar allreduce).
+    pub fn scalar(v: f64) -> Self {
+        Payload {
+            vals: [v, 0.0],
+            len: 1,
+        }
+    }
+
+    /// Two-lane payload (fused pair allreduce).
+    pub fn pair(a: f64, b: f64) -> Self {
+        Payload {
+            vals: [a, b],
+            len: 2,
+        }
+    }
+
+    /// Payload from a slice of at most [`MAX_REDUCE_LEN`] lanes.
+    pub fn from_slice(s: &[f64]) -> Self {
+        assert!(
+            s.len() <= MAX_REDUCE_LEN,
+            "allreduce payload wider than MAX_REDUCE_LEN"
+        );
+        let mut vals = [0.0; MAX_REDUCE_LEN];
+        vals[..s.len()].copy_from_slice(s);
+        Payload { vals, len: s.len() }
+    }
+
+    /// All-zero payload of `len` lanes — the fold identity
+    /// [`rank_fold`] accumulates onto.
+    pub fn zeros(len: usize) -> Self {
+        assert!(len <= MAX_REDUCE_LEN, "allreduce payload too wide");
+        Payload {
+            vals: [0.0; MAX_REDUCE_LEN],
+            len,
+        }
+    }
+
+    /// Element-wise `self += p` — one step of the [`rank_fold`]
+    /// accumulation schedule.
+    pub fn accumulate(&mut self, p: &Payload) {
+        assert_eq!(p.len(), self.len, "ragged allreduce");
+        for i in 0..self.len {
+            self.vals[i] += p.vals[i];
+        }
+    }
+
+    pub fn as_slice(&self) -> &[f64] {
+        &self.vals[..self.len]
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+}
+
+impl std::ops::Index<usize> for Payload {
+    type Output = f64;
+
+    fn index(&self, i: usize) -> &f64 {
+        &self.as_slice()[i]
+    }
+}
+
 /// Per-rank communication handle. Solver iteration loops run *per rank*
 /// against this trait; the hub behind it decides scheduling (lockstep
 /// oracle vs concurrent threads) without ever changing the numbers.
@@ -86,27 +169,36 @@ pub trait Transport {
     fn nranks(&self) -> usize;
 
     /// Nonblocking eager send (MPI_Isend): the payload is buffered
-    /// immediately — matches small halo planes.
-    fn send(&mut self, dst: usize, tag: Tag, comm: Comm, data: Vec<f64>);
+    /// immediately — matches small halo planes. The transport copies
+    /// `data` into its own (recycled) buffer, so the caller's staging
+    /// buffer can be reused for the next neighbour right away.
+    fn send(&mut self, dst: usize, tag: Tag, comm: Comm, data: &[f64]);
 
     /// Blocking receive (MPI_Recv after TAMPI_Iwait): pops the oldest
     /// matching message, waiting for it if necessary. A cyclic wait is a
     /// deadlock bug and panics (lockstep detects the cycle, threaded
-    /// times out).
+    /// times out). Allocates the returned vector — tests and diagnostics
+    /// use this; the solver hot path uses [`Transport::recv_into`].
     fn recv(&mut self, src: usize, tag: Tag, comm: Comm) -> Vec<f64>;
+
+    /// Blocking receive straight into a caller buffer (the halo region
+    /// of an extended vector). The message length must equal `out.len()`
+    /// — a mismatch is a protocol bug and panics. The hub recycles the
+    /// message buffer, so the steady state allocates nothing.
+    fn recv_into(&mut self, src: usize, tag: Tag, comm: Comm, out: &mut [f64]);
 
     /// Nonblocking allreduce(SUM) contribution (MPI_Iallreduce post).
     /// Repeated use of the same (comm, tag) opens a new round each time;
     /// rounds complete in contribution order per rank.
-    fn allreduce_start(&mut self, comm: Comm, tag: Tag, partial: Vec<f64>);
+    fn allreduce_start(&mut self, comm: Comm, tag: Tag, partial: Payload);
 
     /// Complete the oldest pending allreduce on (comm, tag) started by
     /// this rank, blocking until every rank contributed. The reduction
     /// order is [`rank_fold`] — fixed, rank-count-deterministic.
-    fn allreduce_wait(&mut self, comm: Comm, tag: Tag) -> Vec<f64>;
+    fn allreduce_wait(&mut self, comm: Comm, tag: Tag) -> Payload;
 
     /// Blocking allreduce(SUM) — contribution + wait.
-    fn allreduce(&mut self, comm: Comm, tag: Tag, partial: Vec<f64>) -> Vec<f64> {
+    fn allreduce(&mut self, comm: Comm, tag: Tag, partial: Payload) -> Payload {
         self.allreduce_start(comm, tag, partial);
         self.allreduce_wait(comm, tag)
     }
@@ -139,15 +231,23 @@ pub struct WorldStats {
 /// linear topology, and bit-for-bit the fold the pre-refactor lockstep
 /// `World` used). Rank-count-deterministic and schedule-independent:
 /// this one function is why `--transport lockstep` and `--transport
-/// threaded` produce bitwise identical convergence histories.
-pub fn rank_fold(parts: Vec<Vec<f64>>) -> Vec<f64> {
-    let len = parts.first().map(|v| v.len()).unwrap_or(0);
-    let mut acc = vec![0.0; len];
-    for v in parts {
-        assert_eq!(v.len(), len, "ragged allreduce");
-        for (a, x) in acc.iter_mut().zip(&v) {
-            *a += x;
-        }
+/// threaded` produce bitwise identical convergence histories. Operates
+/// on inline payloads, so folding never allocates.
+pub fn rank_fold(parts: &[Payload]) -> Payload {
+    rank_fold_iter(parts.iter().copied())
+}
+
+/// [`rank_fold`] over any payload iterator in iteration order — the
+/// form the hub uses to fold contributions straight out of their
+/// `Option` slots without materialising a slice. This is the single
+/// authority for the fold schedule: same `0.0` identity, same
+/// element-wise accumulation order, bit-for-bit.
+pub fn rank_fold_iter(parts: impl Iterator<Item = Payload>) -> Payload {
+    let mut parts = parts.peekable();
+    let len = parts.peek().map(|p| p.len()).unwrap_or(0);
+    let mut acc = Payload::zeros(len);
+    for p in parts {
+        acc.accumulate(&p);
     }
     acc
 }
@@ -160,15 +260,27 @@ pub struct HaloExchange;
 
 impl HaloExchange {
     /// Copy this rank's boundary planes into the neighbours' mailboxes.
-    pub fn post_sends(tp: &mut dyn Transport, halo: &HaloMap, x: &[f64], tag: Tag, comm: Comm) {
+    /// `stage` is the caller's reusable gather buffer (one plane at a
+    /// time) — the transport copies it into a recycled hub buffer, so
+    /// the steady state allocates nothing on either side.
+    pub fn post_sends(
+        tp: &mut dyn Transport,
+        halo: &HaloMap,
+        x: &[f64],
+        tag: Tag,
+        comm: Comm,
+        stage: &mut Vec<f64>,
+    ) {
         for nb in &halo.neighbours {
-            let buf: Vec<f64> = nb.send.iter().map(|&i| x[i]).collect();
-            tp.send(nb.rank, tag, comm, buf);
+            stage.clear();
+            stage.extend(nb.send.iter().map(|&i| x[i]));
+            tp.send(nb.rank, tag, comm, stage);
         }
     }
 
-    /// Receive every neighbour's plane into the extended vector
-    /// (blocking; a missing message is a deadlock and panics in the hub).
+    /// Receive every neighbour's plane straight into the extended vector
+    /// (blocking; a missing message is a deadlock and panics in the hub;
+    /// a length mismatch panics in `recv_into`).
     pub fn complete_recvs(
         tp: &mut dyn Transport,
         halo: &HaloMap,
@@ -177,9 +289,12 @@ impl HaloExchange {
         comm: Comm,
     ) {
         for nb in &halo.neighbours {
-            let data = tp.recv(nb.rank, tag, comm);
-            assert_eq!(data.len(), nb.recv_len);
-            x_ext[nb.recv_offset..nb.recv_offset + nb.recv_len].copy_from_slice(&data);
+            tp.recv_into(
+                nb.rank,
+                tag,
+                comm,
+                &mut x_ext[nb.recv_offset..nb.recv_offset + nb.recv_len],
+            );
         }
     }
 }
@@ -224,8 +339,8 @@ mod tests {
         for kind in both_kinds() {
             let (got, stats) = per_rank(kind, 2, |tp| {
                 if tp.rank() == 0 {
-                    tp.send(1, 5, 0, vec![1.0]);
-                    tp.send(1, 5, 0, vec![2.0]);
+                    tp.send(1, 5, 0, &[1.0]);
+                    tp.send(1, 5, 0, &[2.0]);
                     Vec::new()
                 } else {
                     vec![tp.recv(0, 5, 0), tp.recv(0, 5, 0)]
@@ -242,9 +357,9 @@ mod tests {
         for kind in both_kinds() {
             let (got, _) = per_rank(kind, 2, |tp| {
                 if tp.rank() == 0 {
-                    tp.send(1, 1, 0, vec![1.0]);
-                    tp.send(1, 2, 0, vec![2.0]);
-                    tp.send(1, 1, 1, vec![3.0]);
+                    tp.send(1, 1, 0, &[1.0]);
+                    tp.send(1, 2, 0, &[2.0]);
+                    tp.send(1, 1, 1, &[3.0]);
                     Vec::new()
                 } else {
                     // receive in a different order than sent
@@ -259,10 +374,10 @@ mod tests {
     fn allreduce_sums_over_ranks() {
         for kind in both_kinds() {
             let (got, stats) = per_rank(kind, 4, |tp| {
-                tp.allreduce(0, 0, vec![tp.rank() as f64, 1.0])
+                tp.allreduce(0, 0, Payload::pair(tp.rank() as f64, 1.0))
             });
             for v in got {
-                assert_eq!(v, vec![6.0, 4.0], "{kind:?}");
+                assert_eq!(v.as_slice(), &[6.0, 4.0], "{kind:?}");
             }
             assert_eq!(stats.allreduces, 1);
         }
@@ -275,13 +390,13 @@ mod tests {
         for kind in both_kinds() {
             let (got, stats) = per_rank(kind, 3, |tp| {
                 let r = tp.rank() as f64;
-                let a = tp.allreduce(0, 7, vec![r]);
-                let b = tp.allreduce(0, 7, vec![10.0 * (r + 1.0)]);
+                let a = tp.allreduce(0, 7, Payload::scalar(r));
+                let b = tp.allreduce(0, 7, Payload::scalar(10.0 * (r + 1.0)));
                 (a, b)
             });
             for (a, b) in got {
-                assert_eq!(a, vec![3.0], "{kind:?}");
-                assert_eq!(b, vec![60.0], "{kind:?}");
+                assert_eq!(a.as_slice(), &[3.0], "{kind:?}");
+                assert_eq!(b.as_slice(), &[60.0], "{kind:?}");
             }
             assert_eq!(stats.allreduces, 2);
         }
@@ -292,40 +407,51 @@ mod tests {
         for kind in both_kinds() {
             let (got, _) = per_rank(kind, 2, |tp| {
                 let me = tp.rank();
-                tp.allreduce_start(1, 9, vec![1.0 + me as f64]);
+                tp.allreduce_start(1, 9, Payload::scalar(1.0 + me as f64));
                 // p2p traffic between the contribution and the wait
-                tp.send(1 - me, 0, 0, vec![me as f64]);
-                let msg = tp.recv(1 - me, 0, 0);
+                tp.send(1 - me, 0, 0, &[me as f64]);
+                let mut msg = [0.0];
+                tp.recv_into(1 - me, 0, 0, &mut msg);
                 let sum = tp.allreduce_wait(1, 9);
-                (msg, sum)
+                (msg[0], sum)
             });
             for (rank, (msg, sum)) in got.into_iter().enumerate() {
-                assert_eq!(msg, vec![(1 - rank) as f64], "{kind:?}");
-                assert_eq!(sum, vec![3.0], "{kind:?}");
+                assert_eq!(msg, (1 - rank) as f64, "{kind:?}");
+                assert_eq!(sum.as_slice(), &[3.0], "{kind:?}");
             }
         }
     }
 
     #[test]
     fn rank_fold_is_fixed_and_matches_sum() {
-        let parts: Vec<Vec<f64>> = (0..5).map(|r| vec![r as f64 * 0.5, 1.0]).collect();
-        let a = rank_fold(parts.clone());
-        assert_eq!(a, vec![5.0, 5.0]);
+        let parts: Vec<Payload> = (0..5).map(|r| Payload::pair(r as f64 * 0.5, 1.0)).collect();
+        let a = rank_fold(&parts);
+        assert_eq!(a.as_slice(), &[5.0, 5.0]);
         // determinism: same input, same bits
-        let b = rank_fold(parts);
+        let b = rank_fold(&parts);
         assert_eq!(a[0].to_bits(), b[0].to_bits());
-        assert!(rank_fold(Vec::new()).is_empty());
+        assert!(rank_fold(&[]).is_empty());
+    }
+
+    #[test]
+    fn payload_shapes_roundtrip() {
+        assert_eq!(Payload::scalar(2.5).as_slice(), &[2.5]);
+        assert_eq!(Payload::pair(1.0, -2.0).as_slice(), &[1.0, -2.0]);
+        let p = Payload::from_slice(&[4.0]);
+        assert_eq!(p.len(), 1);
+        assert!(!p.is_empty());
+        assert_eq!(p[0], 4.0);
     }
 
     #[test]
     fn lockstep_serialises_threaded_runs_concurrent_threads() {
         let (_, s) = per_rank(TransportKind::Lockstep, 4, |tp| {
-            tp.allreduce(0, 0, vec![1.0])
+            tp.allreduce(0, 0, Payload::scalar(1.0))
         });
         assert_eq!(s.max_concurrent_ranks, 1, "lockstep must serialise");
         assert_eq!(s.rank_threads, 4);
         let (_, s) = per_rank(TransportKind::Threaded, 4, |tp| {
-            tp.allreduce(0, 0, vec![1.0])
+            tp.allreduce(0, 0, Payload::scalar(1.0))
         });
         // thread-id accounting: four distinct OS threads ran bodies, all
         // alive concurrently (startup barrier); the executing-overlap
@@ -357,7 +483,8 @@ mod tests {
                     *e = p.rank as f64 + 1.0;
                 }
                 let hm = p.halo_map();
-                HaloExchange::post_sends(tp, &hm, &x, 0, 0);
+                let mut stage = Vec::new();
+                HaloExchange::post_sends(tp, &hm, &x, 0, 0, &mut stage);
                 HaloExchange::complete_recvs(tp, &hm, &mut x, 0, 0);
                 x
             });
@@ -391,9 +518,17 @@ mod tests {
                     v
                 };
                 // iteration k=0 sends (tag base+0), k=1 sends (tag base+1)
+                let mut stage = Vec::new();
                 for (k, val) in [(0usize, 10.0), (1usize, 20.0)] {
                     let x = mk(val + p.rank as f64);
-                    HaloExchange::post_sends(tp, &p.halo_map(), &x, isodd(k) as Tag, isodd(k));
+                    HaloExchange::post_sends(
+                        tp,
+                        &p.halo_map(),
+                        &x,
+                        isodd(k) as Tag,
+                        isodd(k),
+                        &mut stage,
+                    );
                 }
                 // receive iteration 1 first, then iteration 0 — no mixup
                 let mut good = true;
@@ -425,25 +560,30 @@ mod tests {
         forall(
             404,
             40,
-            |r, s| {
+            |r, _| {
                 let nranks = 2 + r.below(6);
-                let len = 1 + r.below(4 * s.0.max(1));
-                let vals: Vec<Vec<f64>> = (0..nranks)
-                    .map(|_| (0..len).map(|_| r.normal()).collect())
+                let len = 1 + r.below(MAX_REDUCE_LEN);
+                let vals: Vec<Payload> = (0..nranks)
+                    .map(|_| {
+                        let lanes: Vec<f64> = (0..len).map(|_| r.normal()).collect();
+                        Payload::from_slice(&lanes)
+                    })
                     .collect();
                 vals
             },
             |vals| {
                 let nranks = vals.len();
-                let direct = rank_fold(vals.clone());
+                let direct = rank_fold(vals);
                 for kind in both_kinds() {
-                    let vals = vals.clone();
                     let vals = &vals;
-                    let (got, _) = per_rank(kind, nranks, move |tp| {
-                        tp.allreduce(0, 0, vals[tp.rank()].clone())
-                    });
+                    let (got, _) =
+                        per_rank(kind, nranks, move |tp| tp.allreduce(0, 0, vals[tp.rank()]));
                     for v in got {
-                        if v.iter().zip(&direct).any(|(a, b)| a.to_bits() != b.to_bits()) {
+                        if v.as_slice()
+                            .iter()
+                            .zip(direct.as_slice())
+                            .any(|(a, b)| a.to_bits() != b.to_bits())
+                        {
                             return false;
                         }
                     }
@@ -488,7 +628,8 @@ mod tests {
                         let p = &parts[tp.rank()];
                         let mut x = fill(tp.rank());
                         let hm = p.halo_map();
-                        HaloExchange::post_sends(tp, &hm, &x, 3, 0);
+                        let mut stage = Vec::new();
+                        HaloExchange::post_sends(tp, &hm, &x, 3, 0, &mut stage);
                         HaloExchange::complete_recvs(tp, &hm, &mut x, 3, 0);
                         x
                     });

@@ -22,7 +22,7 @@
 //! (`8k + salt`) so seeded task-order runs reproduce pre-refactor
 //! histories bit for bit.
 
-use super::{Compute, Observer, Ops, RankState, SolveOpts, SolveStats, SolverDriver};
+use super::{Compute, HaloVec, Observer, Ops, RankState, SolveOpts, SolveStats, SolverDriver};
 use crate::exec::Executor;
 use crate::simmpi::Transport;
 
@@ -61,11 +61,7 @@ fn classic(
     obs: &dyn Observer,
 ) -> SolveStats {
     let mut drv = SolverDriver::new(exec, opts, obs, tp.rank());
-    let mut ops = Ops {
-        exec,
-        opts,
-        backend,
-    };
+    let mut ops = Ops::new(exec, opts, backend);
     let n = st.sys.n();
 
     // r = b; r' = r; p = r; rho = (r', r)
@@ -82,7 +78,7 @@ fn classic(
             break;
         }
         // Ap = A·p ; ad = (r', Ap)                       BARRIER 1
-        drv.exchange(st, tp, |st| &mut st.p_ext, 2 * k);
+        ops.exchange(st, tp, HaloVec::P, 2 * k);
         let part = {
             let RankState {
                 sys, p_ext, ap, rprime, ..
@@ -98,7 +94,7 @@ fn classic(
             s_ext[..n].copy_from_slice(&r_ext[..n]);
             ops.axpby(-alpha, &ap[..n], 1.0, &mut s_ext[..n], n);
         }
-        drv.exchange(st, tp, |st| &mut st.s_ext, 2 * k + 1);
+        ops.exchange(st, tp, HaloVec::S, 2 * k + 1);
         let part = {
             let RankState { sys, s_ext, as_, .. } = st;
             ops.spmv(&sys.a, s_ext, as_);
@@ -167,11 +163,7 @@ fn b1(
     obs: &dyn Observer,
 ) -> SolveStats {
     let mut drv = SolverDriver::new(exec, opts, obs, tp.rank());
-    let mut ops = Ops {
-        exec,
-        opts,
-        backend,
-    };
+    let mut ops = Ops::new(exec, opts, backend);
     let n = st.sys.n();
 
     // line 1: r = b ; p = r ; beta = (r,r) ; r' = r/sqrt(beta) ; an = (r,r')
@@ -195,7 +187,7 @@ fn b1(
 
     for k in 0..opts.max_iters {
         // line 3: ad = (A·p)·r'                    BARRIER (the one kept)
-        drv.exchange(st, tp, |st| &mut st.p_ext, 2 * k);
+        ops.exchange(st, tp, HaloVec::P, 2 * k);
         let part = {
             let RankState {
                 sys, p_ext, ap, rprime, ..
@@ -213,7 +205,7 @@ fn b1(
         }
         // line 5 (Tk 2): ω = (A·s)·s / ((A·s)·(A·s)) — posted, then
         // overlapped with line 6 (Tk 3): x_{1/2} = x + alpha·p
-        drv.exchange(st, tp, |st| &mut st.s_ext, 2 * k + 1);
+        ops.exchange(st, tp, HaloVec::S, 2 * k + 1);
         let part = {
             let RankState { sys, s_ext, as_, .. } = st;
             ops.spmv(&sys.a, s_ext, as_);

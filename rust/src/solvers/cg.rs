@@ -24,7 +24,7 @@
 //! order (§3.3). CG tolerates this (paper: "this does not constitute an
 //! issue for the CG methods").
 
-use super::{Compute, Observer, Ops, RankState, SolveOpts, SolveStats, SolverDriver};
+use super::{Compute, HaloVec, Observer, Ops, RankState, SolveOpts, SolveStats, SolverDriver};
 use crate::exec::Executor;
 use crate::simmpi::Transport;
 
@@ -58,11 +58,7 @@ fn classic(
     obs: &dyn Observer,
 ) -> SolveStats {
     let mut drv = SolverDriver::new(exec, opts, obs, tp.rank());
-    let mut ops = Ops {
-        exec,
-        opts,
-        backend,
-    };
+    let mut ops = Ops::new(exec, opts, backend);
     let n = st.sys.n();
 
     // init: r = b; p = r; rr = (r, r)
@@ -78,7 +74,7 @@ fn classic(
         }
         // halo exchange of p, SpMV, local pAp (per-chunk dependency
         // chain: dot_i waits only on spmv_i)
-        drv.exchange(st, tp, |st| &mut st.p_ext, k);
+        ops.exchange(st, tp, HaloVec::P, k);
         let part = {
             let RankState { sys, p_ext, ap, .. } = st;
             ops.spmv_dot_ordered(&sys.a, p_ext, ap, p_ext, k)
@@ -123,17 +119,13 @@ fn nonblocking(
     obs: &dyn Observer,
 ) -> SolveStats {
     let mut drv = SolverDriver::new(exec, opts, obs, tp.rank());
-    let mut ops = Ops {
-        exec,
-        opts,
-        backend,
-    };
+    let mut ops = Ops::new(exec, opts, backend);
     let n = st.sys.n();
 
     // init: r = b; p = r; Ap = A·p; an = (r,r); ad = (Ap,p)
     st.r_ext[..n].copy_from_slice(&st.sys.b);
     st.p_ext[..n].copy_from_slice(&st.sys.b);
-    drv.exchange(st, tp, |st| &mut st.p_ext, 0);
+    ops.exchange(st, tp, HaloVec::P, 0);
     let (an_part, ad_part) = {
         let RankState {
             sys, r_ext, p_ext, ap, ..
@@ -166,7 +158,7 @@ fn nonblocking(
 
         // Tk 1: Ar = A·r (β-independent, runs under the in-flight
         // collective)
-        drv.exchange(st, tp, |st| &mut st.r_ext, k);
+        ops.exchange(st, tp, HaloVec::R, k);
         {
             let RankState { sys, r_ext, ar, .. } = st;
             ops.spmv(&sys.a, r_ext, ar);

@@ -21,13 +21,24 @@
 //! totals, where the pre-exec-refactor loop chained one accumulator
 //! across both colours — see `gauss_seidel.rs`; pinned by a regression
 //! test in `tests/integration_exec.rs`.)
+//!
+//! **Zero-allocation steady state** (DESIGN.md §7). `Ops` owns a
+//! per-solve [`IterationWorkspace`]: chunk plans are computed once per
+//! shape and handed out as `Rc` views, reduction partials live in one
+//! reused buffer, and the halo exchange gathers through a reused staging
+//! buffer into the transport's recycled message pool. Allreduce payloads
+//! are inline [`Payload`]s ([f64; 2]-capable — every collective is a
+//! scalar or a fused pair). Consequence: once warm, an iteration of any
+//! method performs no heap allocation on the `seq` strategy (asserted by
+//! `tests/integration_alloc.rs`) and none beyond scheduler noise on the
+//! parallel strategies.
 
-use crate::exec::{fold, Executor, Reduction, SharedRows};
+use crate::exec::{fold_mut, Executor, IterationWorkspace, Reduction, SharedRows};
 use crate::kernels;
-use crate::simmpi::{isodd, HaloExchange, Transport};
+use crate::simmpi::{isodd, HaloExchange, Payload, Tag, Transport};
 use crate::sparse::EllMatrix;
 
-use super::{completion_order, task_blocks, Compute, Observer, RankState, SolveOpts, SolveStats};
+use super::{completion_order, Compute, HaloVec, Observer, RankState, SolveOpts, SolveStats};
 
 // ---------------------------------------------------------------------
 // Convergence tracking
@@ -46,6 +57,12 @@ pub struct ConvergenceTracker {
     converged: bool,
 }
 
+/// Cap on the history capacity reserved up front (8k iterations ≈ 64 KiB
+/// per rank). Solves within the cap push into reserved space — no
+/// reallocation inside the iteration loop (part of the zero-allocation
+/// steady state); longer runs fall back to amortised growth.
+const HISTORY_RESERVE_CAP: usize = 8192;
+
 impl ConvergenceTracker {
     pub fn new() -> Self {
         ConvergenceTracker {
@@ -53,6 +70,14 @@ impl ConvergenceTracker {
             rel: 1.0,
             ..Default::default()
         }
+    }
+
+    /// Tracker with the history buffer pre-reserved for `max_iters`
+    /// entries (clamped to [`HISTORY_RESERVE_CAP`]).
+    pub fn with_capacity(max_iters: usize) -> Self {
+        let mut t = ConvergenceTracker::new();
+        t.history.reserve(max_iters.min(HISTORY_RESERVE_CAP));
+        t
     }
 
     /// Fix the reference squared residual (Krylov methods compute it
@@ -134,7 +159,8 @@ impl<'a> SolverDriver<'a> {
         SolverDriver {
             exec,
             opts,
-            conv: ConvergenceTracker::new(),
+            // reserve the history so steady-state records never grow it
+            conv: ConvergenceTracker::with_capacity(opts.max_iters),
             obs,
             rank,
             stopped: false,
@@ -161,31 +187,12 @@ impl<'a> SolverDriver<'a> {
         done || self.stopped
     }
 
-    /// Halo exchange of one extended vector on this rank. `phase`
-    /// selects the ISODD tag/communicator split (Code 1's
-    /// deadlock-avoidance idiom). Post-then-complete through the
-    /// transport: under the threaded transport neighbours genuinely
-    /// overlap; under lockstep the turn baton reproduces the old
-    /// phase-stepped order.
-    pub fn exchange(
-        &self,
-        st: &mut RankState,
-        tp: &mut dyn Transport,
-        which: fn(&mut RankState) -> &mut Vec<f64>,
-        phase: usize,
-    ) {
-        let comm = isodd(phase);
-        let tag = phase as u64;
-        let halo = st.sys.halo.clone();
-        let x = which(st);
-        HaloExchange::post_sends(tp, &halo, x, tag, comm);
-        HaloExchange::complete_recvs(tp, &halo, x, tag, comm);
-    }
-
-    /// Global sum of one scalar partial (blocking).
+    /// Global sum of one scalar partial (blocking). The contribution and
+    /// the result travel as inline [`Payload`]s — no per-collective
+    /// vector allocation.
     pub fn allreduce(&self, tp: &mut dyn Transport, k: usize, tag: u64, partial: f64) -> f64 {
-        let v = tp.allreduce(isodd(k), tag, vec![partial]);
-        self.obs.on_allreduce(self.rank, tag, &v);
+        let v = tp.allreduce(isodd(k), tag, Payload::scalar(partial));
+        self.obs.on_allreduce(self.rank, tag, v.as_slice());
         v[0]
     }
 
@@ -198,31 +205,31 @@ impl<'a> SolverDriver<'a> {
         tag: u64,
         partial: (f64, f64),
     ) -> (f64, f64) {
-        let v = tp.allreduce(isodd(k), tag, vec![partial.0, partial.1]);
-        self.obs.on_allreduce(self.rank, tag, &v);
+        let v = tp.allreduce(isodd(k), tag, Payload::pair(partial.0, partial.1));
+        self.obs.on_allreduce(self.rank, tag, v.as_slice());
         (v[0], v[1])
     }
 
     /// Nonblocking scalar allreduce contribution — pair with
     /// [`SolverDriver::wait_scalar`] after the overlapped compute.
     pub fn start_scalar(&self, tp: &mut dyn Transport, k: usize, tag: u64, partial: f64) {
-        tp.allreduce_start(isodd(k), tag, vec![partial]);
+        tp.allreduce_start(isodd(k), tag, Payload::scalar(partial));
     }
 
     pub fn wait_scalar(&self, tp: &mut dyn Transport, k: usize, tag: u64) -> f64 {
         let v = tp.allreduce_wait(isodd(k), tag);
-        self.obs.on_allreduce(self.rank, tag, &v);
+        self.obs.on_allreduce(self.rank, tag, v.as_slice());
         v[0]
     }
 
     /// Nonblocking pair allreduce contribution / completion.
     pub fn start_pair(&self, tp: &mut dyn Transport, k: usize, tag: u64, partial: (f64, f64)) {
-        tp.allreduce_start(isodd(k), tag, vec![partial.0, partial.1]);
+        tp.allreduce_start(isodd(k), tag, Payload::pair(partial.0, partial.1));
     }
 
     pub fn wait_pair(&self, tp: &mut dyn Transport, k: usize, tag: u64) -> (f64, f64) {
         let v = tp.allreduce_wait(isodd(k), tag);
-        self.obs.on_allreduce(self.rank, tag, &v);
+        self.obs.on_allreduce(self.rank, tag, v.as_slice());
         (v[0], v[1])
     }
 
@@ -255,25 +262,45 @@ impl<'a> SolverDriver<'a> {
 /// When the backend is not thread-safe (XLA) or reports `max_chunks() ==
 /// 1`, chunks run sequentially through the backend on the calling thread
 /// — same decomposition, same fold, identical numerics.
+///
+/// `Ops` owns the solve's [`IterationWorkspace`]: construct one per rank
+/// per solve ([`Ops::new`]) and reuse it across the whole iteration loop
+/// so chunk plans, partials buffers and halo staging warm up once.
 pub struct Ops<'a> {
     pub exec: &'a Executor,
     pub opts: &'a SolveOpts,
     pub backend: &'a mut dyn Compute,
+    ws: IterationWorkspace,
+}
+
+impl<'a> Ops<'a> {
+    pub fn new(exec: &'a Executor, opts: &'a SolveOpts, backend: &'a mut dyn Compute) -> Ops<'a> {
+        Ops {
+            exec,
+            opts,
+            backend,
+            ws: IterationWorkspace::new(),
+        }
+    }
 }
 
 impl Ops<'_> {
-    /// Chunk plan for a plain (non-§3.3) operation.
-    fn blocks(&self, n: usize) -> Vec<(usize, usize)> {
-        self.exec.blocks(n, self.backend.max_chunks())
+    /// Chunk plan for a plain (non-§3.3) operation — cached in the
+    /// workspace after the first call per shape.
+    fn blocks(&mut self, n: usize) -> std::rc::Rc<[(usize, usize)]> {
+        let parts = self.exec.nchunks(n, self.backend.max_chunks());
+        self.ws.plan(n, parts)
     }
 
     /// Chunk plan + fold order for a §3.3-ordered reduction: with
     /// `ntasks > 0` the operation runs over the seeded task blocks and
     /// accumulates linearly in completion order; otherwise it behaves
-    /// like a plain tree-folded operation.
-    fn ordered_plan(&self, n: usize, key: usize) -> (Vec<(usize, usize)>, Reduction) {
+    /// like a plain tree-folded operation. (The seeded order is a fresh
+    /// permutation per call by design — §3.3 simulation is the one
+    /// opt-in path that still allocates.)
+    fn ordered_plan(&mut self, n: usize, key: usize) -> (std::rc::Rc<[(usize, usize)]>, Reduction) {
         if self.opts.ntasks > 0 {
-            let blocks = task_blocks(n, self.opts.ntasks);
+            let blocks = self.ws.plan(n, self.opts.ntasks);
             let order = completion_order(blocks.len(), self.opts.task_order_seed, key);
             (blocks, Reduction::Ordered(order))
         } else {
@@ -283,6 +310,30 @@ impl Ops<'_> {
 
     fn parallel_native(&self, nblocks: usize) -> bool {
         self.exec.parallel(nblocks) && self.backend.thread_safe()
+    }
+
+    /// Halo exchange of one extended vector on this rank. `phase`
+    /// selects the ISODD tag/communicator split (Code 1's
+    /// deadlock-avoidance idiom — the wire tag is `ISODD(phase)`, so the
+    /// per-channel mailbox set stays bounded and buffer recycling works;
+    /// FIFO order per channel keeps same-parity phases separable).
+    /// Post-then-complete through the transport: under the threaded
+    /// transport neighbours genuinely overlap; under lockstep the turn
+    /// baton reproduces the old phase-stepped order. The halo plan is
+    /// borrowed from the rank state — not cloned — and the gather runs
+    /// through the workspace staging buffer.
+    pub fn exchange(
+        &mut self,
+        st: &mut RankState,
+        tp: &mut dyn Transport,
+        which: HaloVec,
+        phase: usize,
+    ) {
+        let comm = isodd(phase);
+        let tag = isodd(phase) as Tag;
+        let (halo, x) = st.halo_and(which);
+        HaloExchange::post_sends(tp, halo, x, tag, comm, &mut self.ws.halo_stage);
+        HaloExchange::complete_recvs(tp, halo, x, tag, comm);
     }
 
     /// y[0..n) = A·x_ext.
@@ -377,15 +428,16 @@ impl Ops<'_> {
         let (blocks, red) = self.ordered_plan(a.n, key);
         if self.parallel_native(blocks.len()) {
             let rows = SharedRows::new(y);
-            self.exec.pipeline2(
+            self.exec.pipeline2_with(
                 &blocks,
                 &red,
-                |_, r0, r1| {
+                &mut self.ws.partials,
+                &|_, r0, r1| {
                     // SAFETY: chunks write disjoint row ranges of y.
                     let y = unsafe { rows.full() };
                     kernels::spmv_ell(a, x_ext, y, r0, r1);
                 },
-                |_, r0, r1| {
+                &|_, r0, r1| {
                     // SAFETY: reads this chunk's rows, written by its own
                     // stage-1 predecessor.
                     let y = unsafe { rows.full() };
@@ -396,14 +448,16 @@ impl Ops<'_> {
             // the SpMV honours the backend's chunk capability (one
             // whole-range artifact call for XLA); only the dot follows
             // the §3.3 task blocks — exactly the pre-refactor split
-            for &(r0, r1) in &self.blocks(a.n) {
+            let spmv_blocks = self.blocks(a.n);
+            for &(r0, r1) in spmv_blocks.iter() {
                 self.backend.spmv(a, x_ext, y, r0, r1);
             }
-            let partials: Vec<f64> = blocks
-                .iter()
-                .map(|&(r0, r1)| self.backend.dot(y, p, r0, r1))
-                .collect();
-            fold(&partials, &red)
+            self.reduce(
+                &blocks,
+                &red,
+                |r0, r1| kernels::dot(y, p, r0, r1),
+                |b, r0, r1| b.dot(y, p, r0, r1),
+            )
         }
     }
 
@@ -427,42 +481,50 @@ impl Ops<'_> {
             let blocks = self.blocks(n);
             if self.parallel_native(blocks.len()) {
                 let rows = SharedRows::new(y);
-                return self.exec.pipeline2(
+                return self.exec.pipeline2_with(
                     &blocks,
                     &Reduction::Tree,
-                    |_, r0, r1| {
+                    &mut self.ws.partials,
+                    &|_, r0, r1| {
                         // SAFETY: chunks write disjoint row ranges of y.
                         let y = unsafe { rows.full() };
                         kernels::axpby(a, x, b, y, r0, r1);
                     },
-                    |_, r0, r1| {
+                    &|_, r0, r1| {
                         // SAFETY: reads this chunk's rows only.
                         let y = unsafe { rows.full() };
                         kernels::dot(y, p, r0, r1)
                     },
                 );
             }
-            let mut partials = vec![0.0; blocks.len()];
-            for (bi, &(r0, r1)) in blocks.iter().enumerate() {
-                self.backend.axpby(a, x, b, y, r0, r1);
-                partials[bi] = self.backend.dot(y, p, r0, r1);
+            let Ops { ws, backend, .. } = self;
+            let partials = &mut ws.partials;
+            partials.clear();
+            for &(r0, r1) in blocks.iter() {
+                backend.axpby(a, x, b, y, r0, r1);
+                partials.push(backend.dot(y, p, r0, r1));
             }
-            return fold(&partials, &Reduction::Tree);
+            return fold_mut(partials, &Reduction::Tree);
         }
         let (blocks, red) = self.ordered_plan(n, key);
         if self.parallel_native(blocks.len()) {
             let rows = SharedRows::new(y);
-            self.exec.reduce(&blocks, &red, |_, r0, r1| {
-                // SAFETY: chunks write disjoint row ranges of y.
-                let y = unsafe { rows.full() };
-                kernels::axpby_dot(a, x, b, y, p, r0, r1)
-            })
+            self.exec
+                .reduce_with(&blocks, &red, &mut self.ws.partials, &|_, r0, r1| {
+                    // SAFETY: chunks write disjoint row ranges of y.
+                    let y = unsafe { rows.full() };
+                    kernels::axpby_dot(a, x, b, y, p, r0, r1)
+                })
         } else {
-            let mut partials = vec![0.0; blocks.len()];
-            for (bi, &(r0, r1)) in blocks.iter().enumerate() {
-                partials[bi] = self.backend.axpby_dot(a, x, b, y, p, r0, r1);
-            }
-            fold(&partials, &red)
+            let Ops { ws, backend, .. } = self;
+            let partials = &mut ws.partials;
+            partials.clear();
+            partials.extend(
+                blocks
+                    .iter()
+                    .map(|&(r0, r1)| backend.axpby_dot(a, x, b, y, p, r0, r1)),
+            );
+            fold_mut(partials, &red)
         }
     }
 
@@ -476,20 +538,17 @@ impl Ops<'_> {
         key: usize,
     ) -> f64 {
         let (blocks, red) = self.ordered_plan(a.n, key);
-        if self.parallel_native(blocks.len()) {
-            let rows = SharedRows::new(x_new);
-            self.exec.reduce(&blocks, &red, |_, r0, r1| {
+        let rows = SharedRows::new(x_new);
+        self.reduce(
+            &blocks,
+            &red,
+            |r0, r1| {
                 // SAFETY: chunks write disjoint row ranges of x_new.
                 let x_new = unsafe { rows.full() };
                 kernels::jacobi_sweep(a, b, x_ext, x_new, r0, r1)
-            })
-        } else {
-            let mut partials = vec![0.0; blocks.len()];
-            for (bi, &(r0, r1)) in blocks.iter().enumerate() {
-                partials[bi] = self.backend.jacobi_step(a, b, x_ext, x_new, r0, r1);
-            }
-            fold(&partials, &red)
-        }
+            },
+            |be, r0, r1| be.jacobi_step(a, b, x_ext, x_new, r0, r1),
+        )
     }
 
     /// Whole-range coloured half-sweep (red-black with `ntasks <= 1`):
@@ -520,24 +579,19 @@ impl Ops<'_> {
         key: usize,
     ) -> f64 {
         let (blocks, red) = self.ordered_plan(a.n, key);
-        if self.parallel_native(blocks.len()) {
-            let rows = SharedRows::new(x_ext);
-            self.exec.reduce(&blocks, &red, |_, r0, r1| {
+        let rows = SharedRows::new(x_ext);
+        self.reduce(
+            &blocks,
+            &red,
+            |r0, r1| {
                 // SAFETY: each chunk writes only its own rows of x_ext;
                 // cross-chunk couplings read the snapshot x_old, and the
                 // halo region (rows >= n) is read-only during the sweep.
                 let x_ext = unsafe { rows.full() };
                 kernels::gs_colour_sweep_blocked(a, b, mask, colour, x_ext, x_old, r0, r1)
-            })
-        } else {
-            let mut partials = vec![0.0; blocks.len()];
-            for (bi, &(r0, r1)) in blocks.iter().enumerate() {
-                partials[bi] = self
-                    .backend
-                    .gs_colour_sweep_blocked(a, b, mask, colour, x_ext, x_old, r0, r1);
-            }
-            fold(&partials, &red)
-        }
+            },
+            |be, r0, r1| be.gs_colour_sweep_blocked(a, b, mask, colour, x_ext, x_old, r0, r1),
+        )
     }
 
     /// Shared dispatch for non-reducing vector ops: parallel native path
@@ -558,7 +612,8 @@ impl Ops<'_> {
     }
 
     /// Shared reduce helper: parallel native path vs sequential backend
-    /// path, same blocks, same fold.
+    /// path, same blocks, same fold — partials always land in the
+    /// workspace buffer.
     fn reduce(
         &mut self,
         blocks: &[(usize, usize)],
@@ -567,13 +622,14 @@ impl Ops<'_> {
         mut seq: impl FnMut(&mut dyn Compute, usize, usize) -> f64,
     ) -> f64 {
         if self.parallel_native(blocks.len()) {
-            self.exec.reduce(blocks, red, |_, r0, r1| par(r0, r1))
+            self.exec
+                .reduce_with(blocks, red, &mut self.ws.partials, &|_, r0, r1| par(r0, r1))
         } else {
-            let partials: Vec<f64> = blocks
-                .iter()
-                .map(|&(r0, r1)| seq(self.backend, r0, r1))
-                .collect();
-            fold(&partials, red)
+            let Ops { ws, backend, .. } = self;
+            let partials = &mut ws.partials;
+            partials.clear();
+            partials.extend(blocks.iter().map(|&(r0, r1)| seq(&mut **backend, r0, r1)));
+            fold_mut(partials, red)
         }
     }
 }
@@ -616,17 +672,16 @@ mod tests {
             ..SolveOpts::default()
         };
         let mut backend = Native;
-        let ops = Ops {
-            exec: &exec,
-            opts: &opts,
-            backend: &mut backend,
-        };
+        let mut ops = Ops::new(&exec, &opts, &mut backend);
         let (blocks, red) = ops.ordered_plan(100, 5);
-        assert_eq!(blocks, task_blocks(100, 7));
+        assert_eq!(&blocks[..], &super::super::task_blocks(100, 7)[..]);
         match red {
             Reduction::Ordered(o) => assert_eq!(o, completion_order(blocks.len(), 3, 5)),
             Reduction::Tree => panic!("expected ordered reduction"),
         }
+        // the plan is cached: a second call reuses the same allocation
+        let (blocks2, _) = ops.ordered_plan(100, 6);
+        assert!(std::rc::Rc::ptr_eq(&blocks, &blocks2));
     }
 
     #[test]
@@ -634,11 +689,7 @@ mod tests {
         let exec = Executor::seq(); // default chunk_rows ≫ n ⇒ one chunk
         let opts = SolveOpts::default();
         let mut backend = Native;
-        let mut ops = Ops {
-            exec: &exec,
-            opts: &opts,
-            backend: &mut backend,
-        };
+        let mut ops = Ops::new(&exec, &opts, &mut backend);
         let x: Vec<f64> = (0..300).map(|i| (i as f64).sin()).collect();
         let y: Vec<f64> = (0..300).map(|i| (i as f64).cos()).collect();
         let got = ops.dot(&x, &y, 300);
@@ -662,11 +713,7 @@ mod tests {
         for strategy in [ExecStrategy::Seq, ExecStrategy::ForkJoin, ExecStrategy::TaskPool] {
             let exec = Executor::new(strategy, 4).with_chunk_rows(16);
             let mut backend = Native;
-            let mut ops = Ops {
-                exec: &exec,
-                opts: &opts,
-                backend: &mut backend,
-            };
+            let mut ops = Ops::new(&exec, &opts, &mut backend);
             let mut y = vec![0.0; n];
             ops.spmv(&sys.a, &x, &mut y);
             assert_eq!(y, want, "{strategy:?}");

@@ -27,8 +27,8 @@
 //! `--transport threaded`.
 
 use super::{
-    completion_order, task_blocks, Compute, Observer, Ops, RankState, SolveOpts, SolveStats,
-    SolverDriver,
+    completion_order, task_blocks, Compute, HaloVec, Observer, Ops, RankState, SolveOpts,
+    SolveStats, SolverDriver,
 };
 use crate::exec::Executor;
 use crate::kernels;
@@ -51,21 +51,18 @@ pub fn solve_rank(
     obs: &dyn Observer,
 ) -> SolveStats {
     let mut drv = SolverDriver::new(exec, opts, obs, tp.rank());
-    let mut ops = Ops {
-        exec,
-        opts,
-        backend,
-    };
-    // distinct tag spaces per phase to keep halo messages separable
+    let mut ops = Ops::new(exec, opts, backend);
+    // distinct phase parities for the two sweeps keep their halo
+    // messages separable (ISODD split)
     const T_FWD: usize = 0;
     const T_BWD: usize = 1;
 
     for k in 0..opts.max_iters {
         // ---- forward sweep ----
-        drv.exchange(st, tp, |st| &mut st.x_ext, 2 * k + T_FWD);
+        ops.exchange(st, tp, HaloVec::X, 2 * k + T_FWD);
         let part = sweep(&mut ops, st, variant, opts, k, true);
         // ---- backward sweep ----
-        drv.exchange(st, tp, |st| &mut st.x_ext, 2 * k + T_BWD);
+        ops.exchange(st, tp, HaloVec::X, 2 * k + T_BWD);
         sweep(&mut ops, st, variant, opts, k, false);
 
         // residual of the iterate entering this iteration (forward pass

@@ -10,7 +10,7 @@
 //! nondeterminism emulation (harmless for Jacobi: only the reduction
 //! reorders).
 
-use super::{Compute, Observer, Ops, RankState, SolveOpts, SolveStats, SolverDriver};
+use super::{Compute, HaloVec, Observer, Ops, RankState, SolveOpts, SolveStats, SolverDriver};
 use crate::exec::Executor;
 use crate::simmpi::Transport;
 
@@ -23,15 +23,11 @@ pub fn solve_rank(
     obs: &dyn Observer,
 ) -> SolveStats {
     let mut drv = SolverDriver::new(exec, opts, obs, tp.rank());
-    let mut ops = Ops {
-        exec,
-        opts,
-        backend,
-    };
+    let mut ops = Ops::new(exec, opts, backend);
 
     for k in 0..opts.max_iters {
         // halo exchange of the current iterate
-        drv.exchange(st, tp, |st| &mut st.x_ext, k);
+        ops.exchange(st, tp, HaloVec::X, k);
 
         // fused sweep + local residual
         let n = st.sys.n();

@@ -186,6 +186,22 @@ pub struct RankState {
     pub tmp: Vec<f64>,
 }
 
+/// Which extended vector a halo exchange moves. Naming the vector (vs
+/// handing the driver a projection closure) lets `Ops::exchange` borrow
+/// the halo plan and the vector *disjointly* out of the rank state — no
+/// per-exchange `HaloMap` clone.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum HaloVec {
+    /// The iterate `x_ext` (Jacobi, Gauss-Seidel, CG-NB's r is separate).
+    X,
+    /// The residual `r_ext` (CG-NB Tk 1).
+    R,
+    /// The search direction `p_ext` (CG / BiCGStab).
+    P,
+    /// The intermediate `s_ext` (BiCGStab).
+    S,
+}
+
 impl RankState {
     pub fn new(sys: LocalSystem) -> Self {
         let n_ext = sys.part.n_ext();
@@ -206,6 +222,26 @@ impl RankState {
 
     pub fn n(&self) -> usize {
         self.sys.n()
+    }
+
+    /// Borrow the halo plan and one extended vector at the same time
+    /// (disjoint fields — the reason [`HaloVec`] exists).
+    pub fn halo_and(&mut self, which: HaloVec) -> (&crate::mesh::HaloMap, &mut Vec<f64>) {
+        let RankState {
+            sys,
+            x_ext,
+            r_ext,
+            p_ext,
+            s_ext,
+            ..
+        } = self;
+        let v = match which {
+            HaloVec::X => x_ext,
+            HaloVec::R => r_ext,
+            HaloVec::P => p_ext,
+            HaloVec::S => s_ext,
+        };
+        (&sys.halo, v)
     }
 }
 
@@ -513,7 +549,11 @@ impl Problem {
 
     /// [`Problem::solve_hybrid`] plus an iteration [`Observer`]. Under
     /// the threaded transport the observer is shared by all rank
-    /// threads (hence `Observer: Sync`).
+    /// threads (hence `Observer: Sync`). Builds one executor per rank
+    /// for this solve; callers running many solves should build the
+    /// executors once and use [`Problem::solve_hybrid_execs_observed`]
+    /// (what `api::Session` does) so worker pools and fork-join teams
+    /// persist across runs.
     pub fn solve_hybrid_observed(
         &mut self,
         method: Method,
@@ -522,15 +562,39 @@ impl Problem {
         transport: TransportKind,
         obs: &dyn Observer,
     ) -> SolveStats {
+        let execs: Vec<Executor> = (0..self.ranks.len()).map(|_| spec.build()).collect();
+        self.solve_hybrid_execs_observed(method, opts, &execs, transport, obs)
+    }
+
+    /// The plan-once / run-many entry point: run `method` with one
+    /// *caller-owned* executor per rank — persistent worker pools and
+    /// fork-join teams are reused across every solve that passes the
+    /// same executors (no thread spawn per run). Numerics are identical
+    /// to [`Problem::solve_hybrid`] by the executor determinism
+    /// contract; worker pools must not be shared across concurrently
+    /// running ranks, hence one executor per rank.
+    pub fn solve_hybrid_execs_observed(
+        &mut self,
+        method: Method,
+        opts: &SolveOpts,
+        execs: &[Executor],
+        transport: TransportKind,
+        obs: &dyn Observer,
+    ) -> SolveStats {
+        assert_eq!(
+            execs.len(),
+            self.ranks.len(),
+            "one executor per rank required"
+        );
         self.reset();
         let bodies: Vec<Box<dyn FnOnce(&mut RankTransport) -> SolveStats + Send + '_>> = self
             .ranks
             .iter_mut()
-            .map(|st| {
+            .zip(execs.iter())
+            .map(|(st, exec)| {
                 Box::new(move |tp: &mut RankTransport| {
-                    let exec = spec.build();
                     let mut backend = Native;
-                    solve_rank(method, st, tp, opts, &mut backend, &exec, obs)
+                    solve_rank(method, st, tp, opts, &mut backend, exec, obs)
                 })
                     as Box<dyn FnOnce(&mut RankTransport) -> SolveStats + Send + '_>
             })

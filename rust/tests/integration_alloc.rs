@@ -1,0 +1,137 @@
+//! Steady-state allocation accounting — the enforcement arm of the
+//! plan-once / run-many refactor (DESIGN.md §7).
+//!
+//! A counting `#[global_allocator]` wraps the system allocator; an
+//! observer snapshots the allocation counter at the end of every solver
+//! iteration. After a warm-up window (plan caches filling, buffer
+//! capacities settling, ISODD mailbox/reduction keys appearing — all
+//! done within the first few iterations), the delta between consecutive
+//! iterations must be **zero** on the `seq` strategy and within a small
+//! fixed bound on `fork-join` / `task` (their kernels and scheduling are
+//! allocation-free too; the bound only absorbs OS-level lazy
+//! initialisation noise).
+//!
+//! Everything lives in ONE `#[test]` so no concurrent test case can
+//! perturb the process-wide counter mid-measurement.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use hlam::exec::{ExecSpec, ExecStrategy};
+use hlam::mesh::Grid3;
+use hlam::simmpi::TransportKind;
+use hlam::solvers::{Method, Observer, Problem, SolveOpts};
+use hlam::sparse::StencilKind;
+
+/// System allocator with a process-wide allocation counter (`alloc` and
+/// `realloc` count; frees don't — growth is what steady state forbids).
+struct CountingAlloc;
+
+static ALLOCS: AtomicUsize = AtomicUsize::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+const ITERS: usize = 10;
+/// Iterations 1..=WARMUP may allocate (plan caches, buffer capacities,
+/// first-use transport keys); everything after must be steady.
+const WARMUP: usize = 4;
+
+/// Snapshots the allocation counter at the end of each iteration.
+struct AllocProbe {
+    at_iteration: [AtomicUsize; ITERS + 1],
+}
+
+impl Default for AllocProbe {
+    fn default() -> Self {
+        AllocProbe::new()
+    }
+}
+
+impl AllocProbe {
+    fn new() -> Self {
+        AllocProbe {
+            at_iteration: std::array::from_fn(|_| AtomicUsize::new(0)),
+        }
+    }
+
+    /// Allocations during steady-state iteration `i` (WARMUP < i <= ITERS).
+    fn delta(&self, i: usize) -> usize {
+        self.at_iteration[i].load(Ordering::SeqCst)
+            - self.at_iteration[i - 1].load(Ordering::SeqCst)
+    }
+}
+
+impl Observer for AllocProbe {
+    fn on_iteration(&self, rank: usize, iteration: usize, _rel: f64) {
+        if rank == 0 && iteration <= ITERS {
+            self.at_iteration[iteration].store(ALLOCS.load(Ordering::SeqCst), Ordering::SeqCst);
+        }
+    }
+}
+
+#[test]
+fn steady_state_iterations_do_not_allocate() {
+    // 32³ rows split into 8 chunks of DEFAULT_CHUNK_ROWS — the parallel
+    // strategies genuinely engage. eps = 0 never converges, so the run
+    // performs exactly ITERS full iterations. The 2-rank case exercises
+    // the transport steady state too (halo staging gather, message
+    // buffer recycling, allreduce round pooling), with a tiny slack
+    // because the counter is process-wide and both rank threads land in
+    // it.
+    let grid = Grid3::new(32, 32, 32);
+    let opts = SolveOpts {
+        eps: 0.0,
+        max_iters: ITERS,
+        ..SolveOpts::default()
+    };
+    for (strategy, threads, ranks, bound) in [
+        (ExecStrategy::Seq, 1usize, 1usize, 0usize),
+        (ExecStrategy::Seq, 1, 2, 2),
+        (ExecStrategy::ForkJoin, 4, 1, 8),
+        (ExecStrategy::TaskPool, 4, 1, 8),
+    ] {
+        let mut pb = Problem::build(grid, StencilKind::P7, ranks);
+        let probe = AllocProbe::new();
+        let spec = ExecSpec::new(strategy, threads);
+        let stats = pb.solve_hybrid_observed(
+            Method::parse("cg").unwrap(),
+            &opts,
+            &spec,
+            TransportKind::Lockstep,
+            &probe,
+        );
+        assert_eq!(stats.iterations, ITERS, "{strategy:?}: must run all iters");
+        for i in (WARMUP + 1)..=ITERS {
+            let d = probe.delta(i);
+            assert!(
+                d <= bound,
+                "{} threads={threads} ranks={ranks}: iteration {i} performed \
+                 {d} heap allocations (allowed {bound}) — the zero-allocation \
+                 steady state regressed",
+                strategy.name(),
+            );
+        }
+    }
+}

@@ -41,11 +41,7 @@ fn executors(chunk_rows: usize) -> Vec<(Executor, String)> {
 }
 
 fn ops<'a>(exec: &'a Executor, opts: &'a SolveOpts, backend: &'a mut Native) -> Ops<'a> {
-    Ops {
-        exec,
-        opts,
-        backend,
-    }
+    Ops::new(exec, opts, backend)
 }
 
 // ---------------------------------------------------------------------
