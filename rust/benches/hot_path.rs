@@ -1,17 +1,22 @@
-//! Hot-path throughput benchmark: solver iterations/sec for all four
-//! classic methods × {seq, fork-join, task} on one rank — the measured
-//! start of the repo's perf trajectory (`BENCH_hot_path.json` at the
-//! repo root; later PRs are compared against this file's history).
+//! Hot-path throughput benchmark: solver iterations/sec for the four
+//! classic methods × {seq, fork-join, task} on a multi-rank *threaded*
+//! transport, with halo overlap off vs on — the measured perf
+//! trajectory of the repo (`BENCH_hot_path.json` at the repo root;
+//! later PRs are compared against this file's history).
 //!
 //!     cargo bench --bench hot_path            # 64³ grid, full run
 //!     cargo bench --bench hot_path -- --quick # 16³ grid CI smoke run
 //!
 //! Methodology: fixed iteration count (eps = 0 never converges, so every
-//! configuration performs identical work), per-rank executors built once
-//! and reused across repetitions (`solve_hybrid_execs_observed` — the
-//! plan-once / run-many path `api::Session` uses), one warm solve, then
-//! the best of `reps` timed solves. Reported per configuration:
-//! iterations per second and nanoseconds per iteration.
+//! configuration performs identical work), genuinely concurrent rank
+//! threads (`TransportKind::Threaded`, 2 ranks), per-rank executors
+//! built once and reused across repetitions
+//! (`solve_hybrid_execs_observed` — the plan-once / run-many path
+//! `api::Session` uses), one warm solve, then the best of `reps` timed
+//! solves. Reported per configuration: iterations per second and
+//! nanoseconds per iteration, with `overlap: off` and `overlap: on`
+//! side by side (same chunk plans and folds — histories are bitwise
+//! identical, so the delta is pure schedule).
 
 use std::collections::BTreeMap;
 use std::time::Instant;
@@ -22,6 +27,8 @@ use hlam::simmpi::TransportKind;
 use hlam::solvers::{Method, NoopObserver, Problem, SolveOpts};
 use hlam::sparse::StencilKind;
 use hlam::util::json::Json;
+
+const RANKS: usize = 2;
 
 fn main() {
     let quick = std::env::args().any(|a| a == "--quick");
@@ -49,58 +56,70 @@ fn main() {
     let n = grid.nx * grid.ny * grid.nz;
     println!(
         "== hot-path iterations/sec (grid {}x{}x{} = {n} rows, 7-pt, \
-         {iters} fixed iters, 1 rank) ==\n",
+         {iters} fixed iters, {RANKS} ranks, threaded transport, \
+         overlap off vs on) ==\n",
         grid.nx, grid.ny, grid.nz
     );
 
     let mut entries: Vec<Json> = Vec::new();
     for name in ["jacobi", "gs", "cg", "bicgstab"] {
         let method = Method::parse(name).expect("known method");
-        let mut pb = Problem::build(grid, StencilKind::P7, 1);
+        let mut pb = Problem::build(grid, StencilKind::P7, RANKS);
         for (strategy, t) in configs {
-            let mut spec = ExecSpec::new(strategy, t);
-            if let Some(rows) = chunk_rows {
-                spec = spec.with_chunk_rows(rows);
-            }
-            // plan once: one persistent executor, reused by every solve
-            let execs: Vec<Executor> = vec![spec.build()];
-            let run = |pb: &mut Problem| {
-                let s = pb.solve_hybrid_execs_observed(
-                    method,
-                    &opts,
-                    &execs,
-                    TransportKind::Lockstep,
-                    &NoopObserver,
+            for overlap in [false, true] {
+                let mut spec = ExecSpec::new(strategy, t).with_overlap(overlap);
+                if let Some(rows) = chunk_rows {
+                    spec = spec.with_chunk_rows(rows);
+                }
+                // plan once: persistent per-rank executors, reused by
+                // every solve of this configuration
+                let execs: Vec<Executor> = (0..RANKS).map(|_| spec.build()).collect();
+                let run = |pb: &mut Problem| {
+                    let s = pb.solve_hybrid_execs_observed(
+                        method,
+                        &opts,
+                        &execs,
+                        TransportKind::Threaded,
+                        &NoopObserver,
+                    );
+                    std::hint::black_box(s.rel_residual);
+                    debug_assert_eq!(s.iterations, iters);
+                };
+                run(&mut pb); // warm: plans, buffers, transport keys
+                let mut best = f64::INFINITY;
+                for _ in 0..reps {
+                    let t0 = Instant::now();
+                    run(&mut pb);
+                    best = best.min(t0.elapsed().as_secs_f64());
+                }
+                let iters_per_sec = iters as f64 / best;
+                let ns_per_iter = best * 1e9 / iters as f64;
+                let overlapped_rows = pb.stats.overlapped_rows;
+                println!(
+                    "{name:<9} exec={:<9} threads={t} overlap={:<3}: {:>10.1} iters/s \
+                     {:>12.0} ns/iter  (overlapped_rows={overlapped_rows})",
+                    strategy.name(),
+                    if overlap { "on" } else { "off" },
+                    iters_per_sec,
+                    ns_per_iter
                 );
-                std::hint::black_box(s.rel_residual);
-                debug_assert_eq!(s.iterations, iters);
-            };
-            run(&mut pb); // warm: plans, buffers, transport keys
-            let mut best = f64::INFINITY;
-            for _ in 0..reps {
-                let t0 = Instant::now();
-                run(&mut pb);
-                best = best.min(t0.elapsed().as_secs_f64());
+                let mut e = BTreeMap::new();
+                e.insert("method".to_string(), Json::Str(name.to_string()));
+                e.insert(
+                    "strategy".to_string(),
+                    Json::Str(strategy.name().to_string()),
+                );
+                e.insert("threads".to_string(), Json::Num(t as f64));
+                e.insert("overlap".to_string(), Json::Bool(overlap));
+                e.insert(
+                    "overlapped_rows".to_string(),
+                    Json::Num(overlapped_rows as f64),
+                );
+                e.insert("iters_per_sec".to_string(), Json::Num(iters_per_sec));
+                e.insert("ns_per_iter".to_string(), Json::Num(ns_per_iter));
+                e.insert("seconds_best".to_string(), Json::Num(best));
+                entries.push(Json::Obj(e));
             }
-            let iters_per_sec = iters as f64 / best;
-            let ns_per_iter = best * 1e9 / iters as f64;
-            println!(
-                "{name:<9} exec={:<9} threads={t}: {:>10.1} iters/s  {:>12.0} ns/iter",
-                strategy.name(),
-                iters_per_sec,
-                ns_per_iter
-            );
-            let mut e = BTreeMap::new();
-            e.insert("method".to_string(), Json::Str(name.to_string()));
-            e.insert(
-                "strategy".to_string(),
-                Json::Str(strategy.name().to_string()),
-            );
-            e.insert("threads".to_string(), Json::Num(t as f64));
-            e.insert("iters_per_sec".to_string(), Json::Num(iters_per_sec));
-            e.insert("ns_per_iter".to_string(), Json::Num(ns_per_iter));
-            e.insert("seconds_best".to_string(), Json::Num(best));
-            entries.push(Json::Obj(e));
         }
         println!();
     }
@@ -112,7 +131,11 @@ fn main() {
         Json::Str(format!("{}x{}x{}", grid.nx, grid.ny, grid.nz)),
     );
     root.insert("stencil".to_string(), Json::Str("p7".to_string()));
-    root.insert("ranks".to_string(), Json::Num(1.0));
+    root.insert("ranks".to_string(), Json::Num(RANKS as f64));
+    root.insert(
+        "transport".to_string(),
+        Json::Str(TransportKind::Threaded.name().to_string()),
+    );
     root.insert("iters_per_solve".to_string(), Json::Num(iters as f64));
     root.insert("reps".to_string(), Json::Num(reps as f64));
     root.insert("quick".to_string(), Json::Bool(quick));
@@ -123,13 +146,19 @@ fn main() {
     // file lives at the repo root (one level up from rust/)
     let out = format!("{}/../BENCH_hot_path.json", env!("CARGO_MANIFEST_DIR"));
     std::fs::write(&out, format!("{doc}\n")).expect("write BENCH_hot_path.json");
-    // round-trip: the emitted trajectory point must parse
+    // round-trip: the emitted trajectory point must parse and contain
+    // both overlap modes for every (method, strategy) pair
     let text = std::fs::read_to_string(&out).expect("read back");
     let parsed = Json::parse(&text).expect("BENCH_hot_path.json must parse");
-    let n_entries = parsed
+    let entries = parsed
         .get("entries")
         .and_then(|e| e.as_arr())
-        .map(|a| a.len())
-        .unwrap_or(0);
-    println!("wrote {out} ({n_entries} entries)");
+        .expect("entries array");
+    assert_eq!(entries.len(), 4 * 3 * 2, "4 methods x 3 strategies x 2 modes");
+    let on = entries
+        .iter()
+        .filter(|e| matches!(e.get("overlap"), Some(Json::Bool(true))))
+        .count();
+    assert_eq!(on, entries.len() / 2, "both overlap modes present");
+    println!("wrote {out} ({} entries)", entries.len());
 }

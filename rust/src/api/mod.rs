@@ -285,6 +285,7 @@ impl RunSpec {
         if let Some(rows) = self.exec.chunk_rows {
             exec.insert("chunk_rows".to_string(), Json::Num(rows as f64));
         }
+        exec.insert("overlap".to_string(), Json::Bool(self.exec.overlap));
 
         let mut opts = BTreeMap::new();
         opts.insert("eps".to_string(), Json::Num(self.opts.eps));
@@ -375,7 +376,7 @@ impl RunSpec {
                     msg: "field 'exec' must be an object".into(),
                 });
             }
-            check_keys(e, &["strategy", "threads", "chunk_rows"], "exec")?;
+            check_keys(e, &["strategy", "threads", "chunk_rows", "overlap"], "exec")?;
             if let Some(s) = opt_str(e, "strategy")? {
                 spec.exec.strategy = s.parse()?;
             }
@@ -383,6 +384,9 @@ impl RunSpec {
                 spec.exec.threads = t;
             }
             spec.exec.chunk_rows = opt_usize(e, "chunk_rows")?;
+            if let Some(b) = opt_bool(e, "overlap")? {
+                spec.exec.overlap = b;
+            }
         }
         if let Some(t) = opt_str(j, "transport")? {
             spec.transport = t.parse()?;
@@ -470,7 +474,8 @@ impl RunSpec {
     /// One-line human summary (CLI echo).
     pub fn describe(&self) -> String {
         format!(
-            "method={} backend={} grid={}x{}x{} w={} ranks={} transport={} exec={} threads={}",
+            "method={} backend={} grid={}x{}x{} w={} ranks={} transport={} exec={} threads={} \
+             overlap={}",
             self.method.name(),
             self.backend.name(),
             self.grid.nx,
@@ -480,7 +485,8 @@ impl RunSpec {
             self.ranks,
             self.transport.name(),
             self.exec.strategy.name(),
-            self.exec.threads
+            self.exec.threads,
+            if self.exec.overlap { "on" } else { "off" }
         )
     }
 }
@@ -614,6 +620,12 @@ impl RunSpecBuilder {
 
     pub fn threads(mut self, threads: usize) -> Self {
         self.spec.exec.threads = threads;
+        self
+    }
+
+    /// Overlap halo communication with interior compute (`--overlap`).
+    pub fn overlap(mut self, on: bool) -> Self {
+        self.spec.exec.overlap = on;
         self
     }
 
@@ -791,7 +803,11 @@ mod tests {
                 .grid_str("6x6x12")
                 .stencil_str("27")
                 .ranks(4)
-                .exec(ExecSpec::new(ExecStrategy::TaskPool, 4).with_chunk_rows(32))
+                .exec(
+                    ExecSpec::new(ExecStrategy::TaskPool, 4)
+                        .with_chunk_rows(32)
+                        .with_overlap(true),
+                )
                 .transport_str("threaded")
                 .opts(SolveOpts {
                     eps: 2.5e-9,
@@ -809,6 +825,18 @@ mod tests {
             let back = RunSpec::from_json_str(&text).unwrap();
             assert_eq!(back, spec, "{text}");
         }
+    }
+
+    #[test]
+    fn overlap_parses_and_defaults_off() {
+        let spec = RunSpec::from_json_str(r#"{"method":"cg"}"#).unwrap();
+        assert!(!spec.exec.overlap);
+        let spec =
+            RunSpec::from_json_str(r#"{"method":"cg","exec":{"overlap":true}}"#).unwrap();
+        assert!(spec.exec.overlap);
+        assert!(spec.describe().contains("overlap=on"), "{}", spec.describe());
+        let b = RunSpec::builder().overlap(true).build().unwrap();
+        assert!(b.exec.overlap);
     }
 
     #[test]

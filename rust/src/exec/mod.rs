@@ -215,6 +215,13 @@ pub struct ExecSpec {
     pub threads: usize,
     /// Chunk-granularity override (`None` = [`DEFAULT_CHUNK_ROWS`]).
     pub chunk_rows: Option<usize>,
+    /// Overlap halo communication with interior compute (`--overlap
+    /// on`): halo exchanges split into start/finish with the
+    /// halo-independent interior chunks computed while the messages are
+    /// in flight. Purely a scheduling knob — chunk plans, scalar kernels
+    /// and fold orders are unchanged, so histories are bitwise identical
+    /// on or off (asserted by `tests/integration_exec.rs`).
+    pub overlap: bool,
 }
 
 impl ExecSpec {
@@ -223,6 +230,7 @@ impl ExecSpec {
             strategy,
             threads,
             chunk_rows: None,
+            overlap: false,
         }
     }
 
@@ -231,10 +239,15 @@ impl ExecSpec {
         self
     }
 
+    pub fn with_overlap(mut self, on: bool) -> Self {
+        self.overlap = on;
+        self
+    }
+
     /// Materialise an executor (spawns the worker pool for the task
     /// strategy — build once per rank, not per kernel call).
     pub fn build(&self) -> Executor {
-        let exec = Executor::new(self.strategy, self.threads);
+        let exec = Executor::new(self.strategy, self.threads).with_overlap(self.overlap);
         match self.chunk_rows {
             Some(rows) => exec.with_chunk_rows(rows),
             None => exec,
@@ -254,6 +267,7 @@ pub struct Executor {
     strategy: ExecStrategy,
     threads: usize,
     chunk_rows: usize,
+    overlap: bool,
     pool: Option<WorkerPool>,
     team: Option<ThreadTeam>,
 }
@@ -278,6 +292,7 @@ impl Executor {
             strategy,
             threads,
             chunk_rows: DEFAULT_CHUNK_ROWS,
+            overlap: false,
             pool,
             team,
         }
@@ -292,12 +307,25 @@ impl Executor {
         self
     }
 
+    /// Enable halo-exchange/interior-compute overlap (see
+    /// [`ExecSpec::overlap`]). A scheduling knob only — numerics are
+    /// bitwise identical either way.
+    pub fn with_overlap(mut self, on: bool) -> Self {
+        self.overlap = on;
+        self
+    }
+
     pub fn strategy(&self) -> ExecStrategy {
         self.strategy
     }
 
     pub fn threads(&self) -> usize {
         self.threads
+    }
+
+    /// Whether halo exchanges should overlap with interior compute.
+    pub fn overlap(&self) -> bool {
+        self.overlap
     }
 
     /// Number of chunks the executor would split `n` rows into, given a
@@ -494,6 +522,88 @@ impl Executor {
         });
     }
 
+    /// Overlapped chunk execution — the `Overlap` batch shape: run
+    /// `chunk(bi)` for every absolute chunk index in `[0, nblocks)`,
+    /// split into a halo-independent interior range `[lo, hi)` and the
+    /// boundary remainder (`[0, lo)` and `[hi, nblocks)`).
+    ///
+    /// The interior runs *while* the caller-side `finish` closure drains
+    /// the halo receives; boundary chunks are released only after both
+    /// completed. On the parallel strategies the workers chew interior
+    /// chunks off a shared claim cursor while the caller sits in
+    /// `finish`; on a single participant the interior simply runs before
+    /// the blocking receives — the classic nonblocking-MPI overlap
+    /// (under the threaded transport the neighbour ranks compute
+    /// concurrently either way). `finish` always executes on the calling
+    /// thread and therefore needs no `Send`/`Sync`.
+    ///
+    /// `chunk` owns its block lookup and any per-slot partial write;
+    /// slots are absolute chunk indices, so a reduction folded after
+    /// this call combines the exact same partials in the exact same
+    /// order as the non-overlapped path — numerics cannot change.
+    pub fn run_overlap(
+        &self,
+        nblocks: usize,
+        interior: (usize, usize),
+        chunk: &(dyn Fn(usize) + Sync),
+        finish: &mut dyn FnMut(),
+    ) {
+        let (lo, hi) = interior;
+        debug_assert!(lo <= hi && hi <= nblocks);
+        if !self.parallel(nblocks) {
+            for bi in lo..hi {
+                chunk(bi);
+            }
+            finish();
+            for bi in (0..lo).chain(hi..nblocks) {
+                chunk(bi);
+            }
+            return;
+        }
+        match self.strategy {
+            ExecStrategy::ForkJoin => {
+                use std::sync::atomic::{AtomicUsize, Ordering};
+                let team = self.team.as_ref().expect("fork-join team present");
+                // phase 1: members claim interior chunks off a shared
+                // cursor (dynamic, because member 0 joins late) while the
+                // caller completes the receives. One participant *more*
+                // than the interior chunk count: member 0 spends the
+                // phase in `finish`, so hi-lo chunks need hi-lo workers
+                // besides it or a single-interior-chunk plan would
+                // serialise (recvs first, compute after — no overlap).
+                let cursor = AtomicUsize::new(lo);
+                team.run_with_main(
+                    self.threads.min(hi - lo + 1),
+                    &|_| loop {
+                        let bi = cursor.fetch_add(1, Ordering::Relaxed);
+                        if bi >= hi {
+                            break;
+                        }
+                        chunk(bi);
+                    },
+                    Some(finish),
+                );
+                // phase 2: the released boundary chunks, round-robin
+                let nb = lo + (nblocks - hi);
+                if nb > 0 {
+                    let nthreads = self.threads.min(nb);
+                    team.run(nthreads, &|t| {
+                        let mut j = t;
+                        while j < nb {
+                            chunk(if j < lo { j } else { hi + (j - lo) });
+                            j += nthreads;
+                        }
+                    });
+                }
+            }
+            ExecStrategy::TaskPool => {
+                let pool = self.pool.as_ref().expect("task pool present");
+                pool.run_overlap(nblocks, interior, chunk, finish);
+            }
+            ExecStrategy::Seq => unreachable!(),
+        }
+    }
+
     /// Run a caller-built dependency graph on the task pool (fork-join
     /// and seq executors run it inline in submission order, which is a
     /// valid topological order because `DagTask` deps point backwards).
@@ -520,6 +630,7 @@ impl std::fmt::Debug for Executor {
             .field("strategy", &self.strategy.name())
             .field("threads", &self.threads)
             .field("chunk_rows", &self.chunk_rows)
+            .field("overlap", &self.overlap)
             .finish()
     }
 }
@@ -675,6 +786,36 @@ mod tests {
             );
             assert_eq!(got.to_bits(), reference.to_bits(), "{ex:?}");
             assert_eq!(buf2, buf, "{ex:?}");
+        }
+    }
+
+    #[test]
+    fn run_overlap_covers_everything_and_gates_boundary() {
+        use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+        for ex in executors(64) {
+            for _ in 0..10 {
+                let n = 9;
+                let hit: Vec<AtomicUsize> = (0..n).map(|_| AtomicUsize::new(0)).collect();
+                let finished = AtomicBool::new(false);
+                let violations = AtomicUsize::new(0);
+                let mut finish = || finished.store(true, Ordering::SeqCst);
+                ex.run_overlap(
+                    n,
+                    (2, 7),
+                    &|bi| {
+                        if !(2..7).contains(&bi) && !finished.load(Ordering::SeqCst) {
+                            violations.fetch_add(1, Ordering::SeqCst);
+                        }
+                        hit[bi].fetch_add(1, Ordering::SeqCst);
+                    },
+                    &mut finish,
+                );
+                assert!(finished.load(Ordering::SeqCst), "{ex:?}: finish skipped");
+                assert_eq!(violations.load(Ordering::SeqCst), 0, "{ex:?}");
+                for (bi, h) in hit.iter().enumerate() {
+                    assert_eq!(h.load(Ordering::SeqCst), 1, "{ex:?} chunk {bi}");
+                }
+            }
         }
     }
 

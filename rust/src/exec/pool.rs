@@ -74,6 +74,9 @@ type Job = Box<dyn FnOnce() + Send + 'static>;
 type Stage1 = dyn Fn(usize, usize, usize) + Sync;
 /// Reducing kernel signature: `(chunk index, r0, r1) -> partial`.
 type Stage2 = dyn Fn(usize, usize, usize) -> f64 + Sync;
+/// Self-contained chunk task over an *absolute* chunk index (the
+/// overlap shape: the closure owns its block lookup and slot writes).
+type ChunkFn = dyn Fn(usize) + Sync;
 
 /// The recurring batch templates of the solver hot loop.
 #[derive(Clone, Copy, PartialEq, Eq, Debug)]
@@ -86,6 +89,11 @@ enum Shape {
     /// claiming thread — the per-chunk SpMV→dot dependency chain with
     /// the chunk's rows still hot in cache.
     Pipeline2,
+    /// Chunk `i` runs `chunk(base + i)` — one *segment* of an
+    /// interior/boundary overlap batch ([`WorkerPool::run_overlap`]):
+    /// the closure receives the absolute chunk index and does its own
+    /// block lookup and per-slot partial write.
+    Span,
 }
 
 /// One template batch: the shape plus erased pointers into the caller's
@@ -100,8 +108,12 @@ struct ShapeBatch {
     blocks: &'static [(usize, usize)],
     f1: Option<&'static Stage1>,
     f2: Option<&'static Stage2>,
+    /// Self-contained chunk task (`Span` only).
+    chunk: Option<&'static ChunkFn>,
+    /// Absolute index of this segment's first chunk (`Span` only).
+    base: usize,
     /// Per-slot partials sink (`Collect` / `Pipeline2`); null for
-    /// `ForEach`. Slot `i` is written by exactly one claimant.
+    /// `ForEach` / `Span`. Slot `i` is written by exactly one claimant.
     partials: *mut f64,
 }
 
@@ -114,6 +126,10 @@ unsafe impl Send for ShapeBatch {}
 impl ShapeBatch {
     /// Execute chunk `bi` of this batch (called without the pool lock).
     fn run_chunk(&self, bi: usize) {
+        if self.shape == Shape::Span {
+            (self.chunk.expect("span chunk task"))(self.base + bi);
+            return;
+        }
         let (r0, r1) = self.blocks[bi];
         match self.shape {
             Shape::ForEach => {
@@ -130,6 +146,7 @@ impl ShapeBatch {
                 // SAFETY: slot `bi` is this claimant's exclusive slot.
                 unsafe { *self.partials.add(bi) = v };
             }
+            Shape::Span => unreachable!("handled above"),
         }
     }
 }
@@ -308,6 +325,8 @@ impl WorkerPool {
             blocks: unsafe { erase_blocks(blocks) },
             f1: Some(unsafe { erase_stage1(f) }),
             f2: None,
+            chunk: None,
+            base: 0,
             partials: std::ptr::null_mut(),
         };
         self.run_shape(sb);
@@ -326,6 +345,8 @@ impl WorkerPool {
             blocks: unsafe { erase_blocks(blocks) },
             f1: None,
             f2: Some(unsafe { erase_stage2(f) }),
+            chunk: None,
+            base: 0,
             partials: partials.as_mut_ptr(),
         };
         self.run_shape(sb);
@@ -353,9 +374,58 @@ impl WorkerPool {
             blocks: unsafe { erase_blocks(blocks) },
             f1: Some(unsafe { erase_stage1(f1) }),
             f2: Some(unsafe { erase_stage2(f2) }),
+            chunk: None,
+            base: 0,
             partials: partials.as_mut_ptr(),
         };
         self.run_shape(sb);
+    }
+
+    /// The `Overlap` batch shape: run `chunk(bi)` for every absolute
+    /// chunk index in `[0, nblocks)`, split into a halo-independent
+    /// interior range `[lo, hi)` and the boundary remainder. Workers
+    /// start chewing interior chunks off the claim cursor the moment the
+    /// batch is published, while the *submitting* thread runs `finish`
+    /// (completing the halo receives) instead of claiming; once `finish`
+    /// returns the submitter joins the interior claim loop, and the
+    /// boundary chunks (`[0, lo)` then `[hi, nblocks)`) are released as
+    /// follow-up segments — the paper's §3.3 dependency structure
+    /// (boundary tasks depend on the communication task) expressed as
+    /// gated cursor segments of one logical batch. `finish` never leaves
+    /// the submitting thread, so it needs no `Send`/`Sync`. Steady
+    /// state: allocation-free.
+    pub fn run_overlap(
+        &self,
+        nblocks: usize,
+        interior: (usize, usize),
+        chunk: &ChunkFn,
+        finish: &mut dyn FnMut(),
+    ) {
+        let (lo, hi) = interior;
+        debug_assert!(lo <= hi && hi <= nblocks);
+        // SAFETY: see `erase_*` — no segment outlives this call.
+        let chunk: &'static ChunkFn = unsafe { erase_chunk(chunk) };
+        let seg = |base: usize, len: usize| ShapeBatch {
+            shape: Shape::Span,
+            nblocks: len,
+            blocks: &[],
+            f1: None,
+            f2: None,
+            chunk: Some(chunk),
+            base,
+            partials: std::ptr::null_mut(),
+        };
+        if hi > lo {
+            self.run_shape_with_main(seg(lo, hi - lo), Some(finish));
+        } else {
+            finish();
+        }
+        if lo > 0 {
+            self.run_shape(seg(0, lo));
+        }
+        if hi < nblocks {
+            self.run_shape(seg(hi, nblocks - hi));
+        }
     }
 
     /// Submit one template batch and drain it: publish the descriptor
@@ -363,6 +433,17 @@ impl WorkerPool {
     /// claim chunks alongside the workers, then wait until every chunk
     /// ran and every attached worker detached.
     fn run_shape(&self, sb: ShapeBatch) {
+        self.run_shape_with_main(sb, None);
+    }
+
+    /// [`WorkerPool::run_shape`] with an optional `main` closure the
+    /// submitting thread runs *between publishing the batch and joining
+    /// the claim loop* — the overlap hook: workers execute chunks while
+    /// the submitter completes halo receives. A panic in `main` (e.g. a
+    /// poisoned transport) is held until the batch fully drained — the
+    /// erased borrows must not outlive this frame and the pool must stay
+    /// reusable — then re-raised.
+    fn run_shape_with_main(&self, sb: ShapeBatch, main: Option<&mut dyn FnMut()>) {
         {
             let mut st = self.shared.state.lock().unwrap();
             assert!(st.batch.is_none(), "nested batch on the same pool");
@@ -377,6 +458,7 @@ impl WorkerPool {
             });
             self.shared.cv.notify_all();
         }
+        let main_panic = main.and_then(|m| catch_unwind(AssertUnwindSafe(m)).err());
         // the submitter participates without attach/detach bookkeeping:
         // its claims are recorded before it checks for completion
         let (claimed, ok) = claim_chunks(&self.shared.cursor, &sb);
@@ -396,6 +478,9 @@ impl WorkerPool {
             st = self.shared.cv.wait(st).unwrap();
         };
         drop(st);
+        if let Some(payload) = main_panic {
+            std::panic::resume_unwind(payload);
+        }
         if panicked {
             panic!("a worker-pool task panicked");
         }
@@ -488,6 +573,10 @@ unsafe fn erase_stage1(f: &Stage1) -> &'static Stage1 {
 
 unsafe fn erase_stage2(f: &Stage2) -> &'static Stage2 {
     std::mem::transmute::<&Stage2, &'static Stage2>(f)
+}
+
+unsafe fn erase_chunk(f: &ChunkFn) -> &'static ChunkFn {
+    std::mem::transmute::<&ChunkFn, &'static ChunkFn>(f)
 }
 
 impl Drop for WorkerPool {
@@ -703,6 +792,49 @@ mod tests {
             for (bi, v) in partials.iter().enumerate() {
                 assert_eq!(*v, (bi + 1) as f64, "stage 2 ran before stage 1");
             }
+        }
+    }
+
+    #[test]
+    fn overlap_gates_boundary_chunks_behind_finish() {
+        let pool = WorkerPool::new(3);
+        let n = 12;
+        for _ in 0..20 {
+            let hit: Vec<AtomicUsize> = (0..n).map(|_| AtomicUsize::new(0)).collect();
+            let finished = AtomicUsize::new(0);
+            let violations = AtomicUsize::new(0);
+            let mut finish = || {
+                finished.store(1, Ordering::SeqCst);
+            };
+            pool.run_overlap(
+                n,
+                (2, 10),
+                &|bi| {
+                    assert!(bi < n);
+                    // boundary chunks ([0,2) and [10,12)) may only run
+                    // once finish() completed
+                    if !(2..10).contains(&bi) && finished.load(Ordering::SeqCst) == 0 {
+                        violations.fetch_add(1, Ordering::SeqCst);
+                    }
+                    hit[bi].fetch_add(1, Ordering::SeqCst);
+                },
+                &mut finish,
+            );
+            assert_eq!(violations.load(Ordering::SeqCst), 0);
+            assert_eq!(finished.load(Ordering::SeqCst), 1);
+            for (bi, h) in hit.iter().enumerate() {
+                assert_eq!(h.load(Ordering::SeqCst), 1, "chunk {bi}");
+            }
+        }
+        // degenerate interiors: empty interior = finish then everything;
+        // full interior = no boundary segments
+        for interior in [(0usize, 0usize), (0, 5)] {
+            let hit = AtomicUsize::new(0);
+            let mut finish = || {};
+            pool.run_overlap(5, interior, &|_| {
+                hit.fetch_add(1, Ordering::SeqCst);
+            }, &mut finish);
+            assert_eq!(hit.load(Ordering::SeqCst), 5, "{interior:?}");
         }
     }
 

@@ -93,6 +93,23 @@ impl ThreadTeam {
     /// calling thread runs member 0. Panics in any member are re-raised
     /// here after the barrier, leaving the team reusable.
     pub fn run(&self, nthreads: usize, job: &(dyn Fn(usize) + Sync)) {
+        self.run_with_main(nthreads, job, None);
+    }
+
+    /// [`ThreadTeam::run`] with an extra `main` closure the caller runs
+    /// *after publishing the region and before executing `job(0)`* —
+    /// the halo-overlap hook: parked members wake and start chewing
+    /// chunks (regions used this way claim off a shared cursor rather
+    /// than static stripes) while member 0 completes the receives, then
+    /// joins. `main` never leaves the calling thread, so it needs no
+    /// `Send`/`Sync` — which is exactly why it cannot be folded into
+    /// `job`.
+    pub fn run_with_main(
+        &self,
+        nthreads: usize,
+        job: &(dyn Fn(usize) + Sync),
+        main: Option<&mut dyn FnMut()>,
+    ) {
         let nthreads = nthreads.clamp(1, self.handles.len() + 1);
         // SAFETY: the erased borrow is dereferenced only by members of
         // this region, and `run` does not return until `working == 0` —
@@ -110,8 +127,15 @@ impl ThreadTeam {
             st.region = Some(Region { job, nthreads });
             self.shared.cv.notify_all();
         }
-        // the caller is member 0
-        let ok = catch_unwind(AssertUnwindSafe(|| job(0))).is_ok();
+        // the caller is member 0; with a `main` it first drains the
+        // overlapped communication, then joins the region
+        let ok = catch_unwind(AssertUnwindSafe(|| {
+            if let Some(main) = main {
+                main();
+            }
+            job(0)
+        }))
+        .is_ok();
         let mut st = self.shared.state.lock().unwrap();
         if !ok {
             st.panicked += 1;
@@ -216,6 +240,25 @@ mod tests {
                 count.fetch_add(1, Ordering::SeqCst);
             });
             assert_eq!(count.load(Ordering::SeqCst), n);
+        }
+    }
+
+    #[test]
+    fn run_with_main_overlaps_main_with_members() {
+        let team = ThreadTeam::new(2);
+        for _ in 0..20 {
+            let hits = AtomicUsize::new(0);
+            let mut done = false;
+            team.run_with_main(
+                3,
+                &|_| {
+                    hits.fetch_add(1, Ordering::SeqCst);
+                },
+                Some(&mut || done = true),
+            );
+            // main ran exactly once, on the caller, before its job(0)
+            assert!(done);
+            assert_eq!(hits.load(Ordering::SeqCst), 3);
         }
     }
 

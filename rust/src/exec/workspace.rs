@@ -28,6 +28,8 @@
 
 use std::rc::Rc;
 
+use crate::sparse::EllMatrix;
+
 /// Reusable per-solve scratch state. One per rank per solve — it is not
 /// `Sync` (the `Rc` plans) and never crosses the rank thread boundary.
 #[derive(Default)]
@@ -36,6 +38,10 @@ pub struct IterationWorkspace {
     /// handful of shapes (one per operand length × chunk-limit
     /// combination), so a linear scan beats any map.
     plans: Vec<((usize, usize), Rc<[(usize, usize)]>)>,
+    /// Cached interior chunk ranges keyed by `(rows, parts)` — see
+    /// [`IterationWorkspace::interior`]. One matrix per rank per solve,
+    /// so the matrix is not part of the key.
+    interiors: Vec<((usize, usize), (usize, usize))>,
     /// Reduction partials scratch (operations never nest reductions).
     pub partials: Vec<f64>,
     /// Halo gather staging: one neighbour plane at a time.
@@ -63,6 +69,63 @@ impl IterationWorkspace {
     pub fn cached_plans(&self) -> usize {
         self.plans.len()
     }
+
+    /// The halo-independent *interior* chunk range `[lo, hi)` of the
+    /// `(n, parts)` chunk plan `blocks` against matrix `a` — cached after
+    /// the first call, so per-iteration classification costs nothing.
+    ///
+    /// A row is *boundary* iff its stencil reads a genuine halo index —
+    /// an extended index in `[n, n_ext - 1)`. The zero-pad slot
+    /// (`n_ext - 1`) does not count: fill entries of every grid-boundary
+    /// row point there, it always reads 0.0, and a halo exchange never
+    /// writes it. A chunk is interior iff none of its rows is boundary.
+    ///
+    /// With the z-slab decomposition the boundary rows are the first and
+    /// last owned xy-planes, so boundary chunks form a prefix and a
+    /// suffix of the plan and the interior is one contiguous range. The
+    /// classification does not assume that: if an interior candidate
+    /// range still contains a boundary chunk (a decomposition this repo
+    /// never produces), it degrades to an empty interior — overlap then
+    /// simply does no work before the receives, which is always correct.
+    pub fn interior(
+        &mut self,
+        n: usize,
+        parts: usize,
+        blocks: &[(usize, usize)],
+        a: &EllMatrix,
+    ) -> (usize, usize) {
+        if let Some((_, r)) = self
+            .interiors
+            .iter()
+            .find(|((pn, pp), _)| *pn == n && *pp == parts)
+        {
+            return *r;
+        }
+        let halo_lo = a.n;
+        let halo_hi = a.n_ext - 1; // pad slot excluded
+        let row_is_boundary = |r: usize| {
+            a.row_cols(r)
+                .iter()
+                .any(|&c| (c as usize) >= halo_lo && (c as usize) < halo_hi)
+        };
+        let chunk_is_boundary =
+            |&(r0, r1): &(usize, usize)| (r0..r1).any(&row_is_boundary);
+        let nb = blocks.len();
+        let mut lo = 0;
+        while lo < nb && chunk_is_boundary(&blocks[lo]) {
+            lo += 1;
+        }
+        let mut hi = nb;
+        while hi > lo && chunk_is_boundary(&blocks[hi - 1]) {
+            hi -= 1;
+        }
+        let mut range = (lo, hi);
+        if blocks[lo..hi].iter().any(&chunk_is_boundary) {
+            range = (0, 0);
+        }
+        self.interiors.push(((n, parts), range));
+        range
+    }
 }
 
 #[cfg(test)]
@@ -82,6 +145,45 @@ mod tests {
         let c = ws.plan(1000, 3);
         assert_eq!(&c[..], &split_rows(1000, 3)[..]);
         assert_eq!(ws.cached_plans(), 2);
+    }
+
+    #[test]
+    fn interior_classification_matches_halo_planes() {
+        use crate::mesh::Grid3;
+        use crate::sparse::{LocalSystem, StencilKind};
+        // middle rank of 3: both neighbours -> first and last owned
+        // xy-planes are boundary, everything between is interior
+        let sys = LocalSystem::build(Grid3::new(4, 4, 12), StencilKind::P7, 1, 3);
+        let n = sys.n();
+        let plane = 16;
+        let mut ws = IterationWorkspace::new();
+        let blocks = ws.plan(n, n / plane); // one chunk per plane
+        let (lo, hi) = ws.interior(n, n / plane, &blocks, &sys.a);
+        assert_eq!((lo, hi), (1, blocks.len() - 1));
+        // cached: second call answers without rescanning
+        assert_eq!(ws.interior(n, n / plane, &blocks, &sys.a), (lo, hi));
+        // every interior chunk row reads only owned indices or the pad
+        let pad = sys.a.n_ext - 1;
+        for &(r0, r1) in &blocks[lo..hi] {
+            for r in r0..r1 {
+                assert!(sys
+                    .a
+                    .row_cols(r)
+                    .iter()
+                    .all(|&c| (c as usize) < n || (c as usize) == pad));
+            }
+        }
+        // single rank: no halo, everything interior
+        let sys1 = LocalSystem::build(Grid3::new(4, 4, 12), StencilKind::P7, 0, 1);
+        let blocks1 = ws.plan(sys1.n(), 8);
+        let r = ws.interior(sys1.n(), 8, &blocks1, &sys1.a);
+        assert_eq!(r, (0, blocks1.len()));
+        // end rank of 2: only a next-neighbour -> suffix boundary only
+        let sys0 = LocalSystem::build(Grid3::new(4, 4, 12), StencilKind::P7, 0, 2);
+        let mut ws0 = IterationWorkspace::new();
+        let blocks0 = ws0.plan(sys0.n(), sys0.n() / plane);
+        let (lo0, hi0) = ws0.interior(sys0.n(), sys0.n() / plane, &blocks0, &sys0.a);
+        assert_eq!((lo0, hi0), (0, blocks0.len() - 1));
     }
 
     #[test]

@@ -82,6 +82,10 @@ pub struct HarnessOpts {
     /// lockstep oracle or genuinely concurrent rank threads. Histories
     /// are bitwise identical either way (transport determinism contract).
     pub transport: TransportKind,
+    /// Overlap halo communication with interior compute in the
+    /// real-numerics runs (`--overlap on`). Histories are bitwise
+    /// identical either way (overlap determinism contract).
+    pub overlap: bool,
 }
 
 impl Default for HarnessOpts {
@@ -96,6 +100,7 @@ impl Default for HarnessOpts {
             threads: 0,
             ranks: 0,
             transport: TransportKind::Lockstep,
+            overlap: false,
         }
     }
 }
@@ -119,7 +124,7 @@ impl HarnessOpts {
     /// Per-rank shared-memory executor spec for the real-numerics
     /// experiments (each rank builds its own executor from this).
     pub fn exec_spec(&self) -> ExecSpec {
-        ExecSpec::new(self.exec, self.threads.max(1))
+        ExecSpec::new(self.exec, self.threads.max(1)).with_overlap(self.overlap)
     }
 
     /// The resolved [`RunSpec`] for one real-numerics run of a harness
@@ -163,6 +168,7 @@ impl HarnessOpts {
             "transport".to_string(),
             Json::Str(self.transport.name().to_string()),
         );
+        m.insert("overlap".to_string(), Json::Bool(self.overlap));
         Json::Obj(m)
     }
 

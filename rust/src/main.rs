@@ -73,10 +73,12 @@ fn usage() {
          solve   --method cg|cg-nb|bicgstab|bicgstab-b1|jacobi|gs|gs-rb|gs-relaxed\n\
         \x20        --grid NXxNYxNZ --stencil 7|27 --ranks N --backend native|xla\n\
         \x20        --transport lockstep|threaded --exec seq|fork-join|task --threads N\n\
+        \x20        --overlap on|off (hide halo exchanges behind interior compute)\n\
         \x20        --eps 1e-6 --ntasks N --task-seed S --artifacts DIR\n\
         \x20        --spec FILE (replay a saved run) --emit-spec [FILE] (save/print it)\n\
          figures --all | --fig 1|2|3|4|5|6|iters|gs-iters|granularity|latency|headline\n\
         \x20        --out DIR --reps N --quick --ranks N --transport lockstep|threaded\n\
+        \x20        --overlap on|off\n\
          trace   --methods cg,cg-nb --out DIR\n\
          sweep   --granularity [--out DIR] | --spec FILE | <solve flags> --emit-spec [FILE]\n\
          sizes   [--artifacts DIR]"
@@ -126,6 +128,15 @@ fn parse_arg<T: FromStr<Err = SpecError>>(
     args.str_or(name, default).parse::<T>().map_err(CliError::from)
 }
 
+/// `--overlap on|off` — the halo-overlap knob (default off).
+fn parse_overlap(args: &Args) -> Result<bool, CliError> {
+    match args.str_or("overlap", "off").as_str() {
+        "on" | "true" => Ok(true),
+        "off" | "false" => Ok(false),
+        other => Err(CliError(format!("--overlap expects on|off, got '{other}'"))),
+    }
+}
+
 /// The resolved `RunSpec` of this invocation: `--spec FILE` replays a
 /// saved description verbatim; otherwise the solve flags build one.
 fn resolve_spec(args: &Args) -> Result<RunSpec, CliError> {
@@ -149,6 +160,7 @@ fn resolve_spec(args: &Args) -> Result<RunSpec, CliError> {
         // the CLI has always clamped --threads 0 to 1 (hand-built specs
         // go through the stricter RunSpec::validate instead)
         .threads(num(args, "threads", 1)?.max(1))
+        .overlap(parse_overlap(args)?)
         .transport_str(&args.str_or("transport", "lockstep"))
         .backend_str(&args.str_or("backend", "native"))
         .opts(opts)
@@ -180,12 +192,14 @@ fn cmd_solve(args: &Args) -> Result<(), CliError> {
     );
     let world = session.world_stats().cloned().unwrap_or_default();
     println!(
-        "p2p_msgs={} p2p_bytes={} allreduces={} rank_threads={} max_concurrent_ranks={}",
+        "p2p_msgs={} p2p_bytes={} allreduces={} rank_threads={} max_concurrent_ranks={} \
+         overlapped_rows={}",
         world.p2p_messages,
         world.p2p_bytes,
         world.allreduces,
         world.rank_threads,
-        world.max_concurrent_ranks
+        world.max_concurrent_ranks,
+        world.overlapped_rows
     );
 
     // project the measured configuration onto the machine model
@@ -213,6 +227,7 @@ fn cmd_figures(args: &Args) -> Result<(), CliError> {
         threads: num(args, "threads", 0)?,
         ranks: num(args, "ranks", 0)?,
         transport: parse_arg::<TransportKind>(args, "transport", "lockstep")?,
+        overlap: parse_overlap(args)?,
         ..Default::default()
     };
     let which = if args.flag("all") {

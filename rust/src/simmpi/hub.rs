@@ -171,6 +171,11 @@ pub struct RankTransport {
     ar_next: BTreeMap<(Comm, Tag), u64>,
     /// Rounds contributed but not yet waited on, oldest first.
     ar_pending: BTreeMap<(Comm, Tag), VecDeque<u64>>,
+    /// Overlap-effectiveness rows accumulated rank-locally
+    /// (`Transport::record_overlap`) and flushed into the hub stats once
+    /// at [`RankTransport::finish`] — the hot path never takes the hub
+    /// lock just to bump this counter.
+    overlap_rows: u64,
 }
 
 impl RankTransport {
@@ -181,6 +186,7 @@ impl RankTransport {
             rank,
             ar_next: BTreeMap::new(),
             ar_pending: BTreeMap::new(),
+            overlap_rows: 0,
         }
     }
 
@@ -221,6 +227,7 @@ impl RankTransport {
     fn finish(&self) {
         let hub = &*self.hub;
         let mut st = hub.state.lock().unwrap();
+        st.stats.overlapped_rows += self.overlap_rows;
         st.finished[self.rank] = true;
         st.running = st.running.saturating_sub(1);
         st.idle = 0;
@@ -415,6 +422,12 @@ impl Transport for RankTransport {
         }
         st.idle = 0;
         hub.cv.notify_all();
+    }
+
+    fn record_overlap(&mut self, rows: u64) {
+        // rank-local accumulation — flushed at `finish` so the hot path
+        // adds no hub-lock traffic
+        self.overlap_rows += rows;
     }
 
     fn allreduce_wait(&mut self, comm: Comm, tag: Tag) -> Payload {

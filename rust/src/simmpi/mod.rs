@@ -197,6 +197,15 @@ pub trait Transport {
     /// order is [`rank_fold`] — fixed, rank-count-deterministic.
     fn allreduce_wait(&mut self, comm: Comm, tag: Tag) -> Payload;
 
+    /// Overlap-effectiveness accounting: the solver reports how many
+    /// interior rows it scheduled ahead of this phase's receive
+    /// completion (rows of useful work available while the messages were
+    /// in flight — plan-derived, so an upper bound: a straggler chunk
+    /// claimed after the receives completed still counts). Lands in
+    /// [`WorldStats::overlapped_rows`]; default no-op so test transports
+    /// need not care.
+    fn record_overlap(&mut self, _rows: u64) {}
+
     /// Blocking allreduce(SUM) — contribution + wait.
     fn allreduce(&mut self, comm: Comm, tag: Tag, partial: Payload) -> Payload {
         self.allreduce_start(comm, tag, partial);
@@ -223,6 +232,14 @@ pub struct WorldStats {
     /// observation (typically the rank count, at least 1), not a value
     /// true by construction.
     pub max_concurrent_ranks: usize,
+    /// Total interior rows scheduled ahead of the halo receives (between
+    /// `Ops::exchange_start` and `Ops::exchange_finish`), summed over
+    /// all ranks and iterations — the overlap-effectiveness gauge of the
+    /// interior/boundary split. Plan-derived (each overlapped exchange
+    /// credits its whole interior range), so it is an upper bound on the
+    /// rows genuinely computed while messages were in flight. 0 when
+    /// `--overlap off` or single-rank.
+    pub overlapped_rows: u64,
 }
 
 /// The fixed allreduce reduction schedule shared by every transport

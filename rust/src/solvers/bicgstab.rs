@@ -22,7 +22,7 @@
 //! (`8k + salt`) so seeded task-order runs reproduce pre-refactor
 //! histories bit for bit.
 
-use super::{Compute, HaloVec, Observer, Ops, RankState, SolveOpts, SolveStats, SolverDriver};
+use super::{Compute, DotWith, Observer, Ops, RankState, SolveOpts, SolveStats, SolverDriver};
 use crate::exec::Executor;
 use crate::simmpi::Transport;
 
@@ -78,12 +78,20 @@ fn classic(
             break;
         }
         // Ap = A·p ; ad = (r', Ap)                       BARRIER 1
-        ops.exchange(st, tp, HaloVec::P, 2 * k);
         let part = {
             let RankState {
                 sys, p_ext, ap, rprime, ..
             } = st;
-            ops.spmv_dot_ordered(&sys.a, p_ext, ap, rprime, key(k, 0))
+            ops.halo_spmv_dot(
+                &sys.a,
+                &sys.halo,
+                tp,
+                p_ext,
+                ap,
+                DotWith::Slice(rprime),
+                key(k, 0),
+                2 * k,
+            )
         };
         let ad = drv.allreduce(tp, k, 31, part);
         let alpha = rho / ad;
@@ -94,10 +102,9 @@ fn classic(
             s_ext[..n].copy_from_slice(&r_ext[..n]);
             ops.axpby(-alpha, &ap[..n], 1.0, &mut s_ext[..n], n);
         }
-        ops.exchange(st, tp, HaloVec::S, 2 * k + 1);
         let part = {
             let RankState { sys, s_ext, as_, .. } = st;
-            ops.spmv(&sys.a, s_ext, as_);
+            ops.halo_spmv(&sys.a, &sys.halo, tp, s_ext, as_, 2 * k + 1);
             let num = ops.dot_ordered(&as_[..n], &s_ext[..n], n, key(k, 1));
             let den = ops.dot_ordered(&as_[..n], &as_[..n], n, key(k, 2));
             (num, den)
@@ -187,12 +194,20 @@ fn b1(
 
     for k in 0..opts.max_iters {
         // line 3: ad = (A·p)·r'                    BARRIER (the one kept)
-        ops.exchange(st, tp, HaloVec::P, 2 * k);
         let part = {
             let RankState {
                 sys, p_ext, ap, rprime, ..
             } = st;
-            ops.spmv_dot_ordered(&sys.a, p_ext, ap, rprime, key(k, 0))
+            ops.halo_spmv_dot(
+                &sys.a,
+                &sys.halo,
+                tp,
+                p_ext,
+                ap,
+                DotWith::Slice(rprime),
+                key(k, 0),
+                2 * k,
+            )
         };
         let ad = drv.allreduce(tp, k, 42, part);
         let alpha = an / ad;
@@ -205,10 +220,9 @@ fn b1(
         }
         // line 5 (Tk 2): ω = (A·s)·s / ((A·s)·(A·s)) — posted, then
         // overlapped with line 6 (Tk 3): x_{1/2} = x + alpha·p
-        ops.exchange(st, tp, HaloVec::S, 2 * k + 1);
         let part = {
             let RankState { sys, s_ext, as_, .. } = st;
-            ops.spmv(&sys.a, s_ext, as_);
+            ops.halo_spmv(&sys.a, &sys.halo, tp, s_ext, as_, 2 * k + 1);
             let num = ops.dot_ordered(&as_[..n], &s_ext[..n], n, key(k, 1));
             let den = ops.dot_ordered(&as_[..n], &as_[..n], n, key(k, 2));
             (num, den)

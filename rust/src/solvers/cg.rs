@@ -24,7 +24,7 @@
 //! order (§3.3). CG tolerates this (paper: "this does not constitute an
 //! issue for the CG methods").
 
-use super::{Compute, HaloVec, Observer, Ops, RankState, SolveOpts, SolveStats, SolverDriver};
+use super::{Compute, DotWith, Observer, Ops, RankState, SolveOpts, SolveStats, SolverDriver};
 use crate::exec::Executor;
 use crate::simmpi::Transport;
 
@@ -72,12 +72,12 @@ fn classic(
         if drv.pre_check(rr) {
             break;
         }
-        // halo exchange of p, SpMV, local pAp (per-chunk dependency
-        // chain: dot_i waits only on spmv_i)
-        ops.exchange(st, tp, HaloVec::P, k);
+        // halo exchange of p fused with the SpMV + local pAp (per-chunk
+        // dependency chain: dot_i waits only on spmv_i; with overlap on,
+        // interior chunks run while the halo planes are in flight)
         let part = {
             let RankState { sys, p_ext, ap, .. } = st;
-            ops.spmv_dot_ordered(&sys.a, p_ext, ap, p_ext, k)
+            ops.halo_spmv_dot(&sys.a, &sys.halo, tp, p_ext, ap, DotWith::Exchanged, k, k)
         };
         let pap = drv.allreduce(tp, k, 11, part); // BARRIER 1
         let alpha = rr / pap;
@@ -125,12 +125,11 @@ fn nonblocking(
     // init: r = b; p = r; Ap = A·p; an = (r,r); ad = (Ap,p)
     st.r_ext[..n].copy_from_slice(&st.sys.b);
     st.p_ext[..n].copy_from_slice(&st.sys.b);
-    ops.exchange(st, tp, HaloVec::P, 0);
     let (an_part, ad_part) = {
         let RankState {
             sys, r_ext, p_ext, ap, ..
         } = st;
-        ops.spmv(&sys.a, p_ext, ap);
+        ops.halo_spmv(&sys.a, &sys.halo, tp, p_ext, ap, 0);
         let an = ops.dot(&r_ext[..n], &r_ext[..n], n);
         let ad = ops.dot(&ap[..n], &p_ext[..n], n);
         (an, ad)
@@ -157,11 +156,11 @@ fn nonblocking(
         drv.start_scalar(tp, k, 20, part);
 
         // Tk 1: Ar = A·r (β-independent, runs under the in-flight
-        // collective)
-        ops.exchange(st, tp, HaloVec::R, k);
+        // collective; the fused halo exchange additionally overlaps the
+        // interior rows of the SpMV with the halo messages)
         {
             let RankState { sys, r_ext, ar, .. } = st;
-            ops.spmv(&sys.a, r_ext, ar);
+            ops.halo_spmv(&sys.a, &sys.halo, tp, r_ext, ar, k);
         }
         let an_new = drv.wait_scalar(tp, k, 20);
         let beta = an_new / an;

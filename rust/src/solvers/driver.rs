@@ -35,10 +35,92 @@
 
 use crate::exec::{fold_mut, Executor, IterationWorkspace, Reduction, SharedRows};
 use crate::kernels;
-use crate::simmpi::{isodd, HaloExchange, Payload, Tag, Transport};
+use crate::mesh::HaloMap;
+use crate::simmpi::{isodd, Comm, HaloExchange, Payload, Tag, Transport};
 use crate::sparse::EllMatrix;
 
 use super::{completion_order, Compute, HaloVec, Observer, RankState, SolveOpts, SolveStats};
+
+/// What a fused SpMV·dot reduces against: the freshly exchanged vector
+/// itself (CG's Σ (A·p)·p) or a separate rank-local slice (BiCGStab's
+/// Σ (A·p)·r′). Needed because the overlapped exchange holds the
+/// exchanged vector mutably while the dot reads it.
+#[derive(Clone, Copy)]
+pub enum DotWith<'a> {
+    /// Dot against the owned rows of the exchanged vector.
+    Exchanged,
+    /// Dot against a separate slice.
+    Slice(&'a [f64]),
+}
+
+/// The (communicator, wire tag) of one exchange phase — the ISODD split.
+fn wire(phase: usize) -> (Comm, Tag) {
+    (isodd(phase), isodd(phase) as Tag)
+}
+
+/// Rows in the interior chunk range `[lo, hi)` — the per-exchange
+/// overlap-effectiveness count fed to [`Transport::record_overlap`].
+fn overlapped_rows(blocks: &[(usize, usize)], lo: usize, hi: usize) -> u64 {
+    blocks[lo..hi]
+        .iter()
+        .map(|&(r0, r1)| (r1 - r0) as u64)
+        .sum()
+}
+
+/// The one parallel-overlap reduction schedule shared by every fused
+/// `halo_*` reduction: run `chunk(x_live, bi, r0, r1) -> partial` over
+/// the whole plan with the halo receives drained into `x_ext`'s halo
+/// region *while* the interior chunks execute, write each partial into
+/// its absolute slot of `partials`, record the overlap gauge, and fold
+/// with `red` after everything landed — same slots, same fold order as
+/// the synchronous path, bit for bit.
+///
+/// SAFETY (the single home of the overlap aliasing argument): interior
+/// chunks are exactly the chunks whose rows read no extended index in
+/// `[n, n_ext-1)` (`IterationWorkspace::interior`), the receives write
+/// only that halo region, `chunk` writes only its own chunk's disjoint
+/// rows of any output vector it captures, and each partial slot has
+/// exactly one writer — so the erased `SharedRows` views never overlap
+/// a write with a concurrent read or write.
+#[allow(clippy::too_many_arguments)]
+fn reduce_overlap_with(
+    exec: &Executor,
+    partials: &mut Vec<f64>,
+    blocks: &[(usize, usize)],
+    red: &Reduction,
+    interior: (usize, usize),
+    tp: &mut dyn Transport,
+    halo: &HaloMap,
+    comm_tag: (Comm, Tag),
+    x_ext: &mut [f64],
+    chunk: &(dyn Fn(&mut [f64], usize, usize, usize) -> f64 + Sync),
+) -> f64 {
+    let (comm, tag) = comm_tag;
+    let nb = blocks.len();
+    partials.clear();
+    partials.resize(nb, 0.0);
+    let psink = SharedRows::new(partials);
+    let xs = SharedRows::new(x_ext);
+    let mut finish = || {
+        // SAFETY: writes only the halo region (see above).
+        let x = unsafe { xs.full() };
+        HaloExchange::complete_recvs(tp, halo, x, tag, comm);
+    };
+    exec.run_overlap(
+        nb,
+        interior,
+        &|bi| {
+            let (r0, r1) = blocks[bi];
+            // SAFETY: see the function-level safety argument.
+            let x = unsafe { xs.full() };
+            let v = chunk(x, bi, r0, r1);
+            unsafe { psink.full()[bi] = v };
+        },
+        &mut finish,
+    );
+    tp.record_overlap(overlapped_rows(blocks, interior.0, interior.1));
+    fold_mut(partials, red)
+}
 
 // ---------------------------------------------------------------------
 // Convergence tracking
@@ -322,6 +404,11 @@ impl Ops<'_> {
     /// baton reproduces the old phase-stepped order. The halo plan is
     /// borrowed from the rank state — not cloned — and the gather runs
     /// through the workspace staging buffer.
+    ///
+    /// This is the *synchronous* exchange ([`Ops::exchange_start`]
+    /// followed immediately by [`Ops::exchange_finish`]). The overlapped
+    /// `halo_*` operations below interleave interior compute between the
+    /// two halves instead.
     pub fn exchange(
         &mut self,
         st: &mut RankState,
@@ -329,11 +416,380 @@ impl Ops<'_> {
         which: HaloVec,
         phase: usize,
     ) {
-        let comm = isodd(phase);
-        let tag = isodd(phase) as Tag;
+        self.exchange_start(st, tp, which, phase);
+        self.exchange_finish(st, tp, which, phase);
+    }
+
+    /// Nonblocking half 1 of the halo exchange: gather each boundary
+    /// plane through the staging buffer and post the (eager) sends.
+    /// Pair with [`Ops::exchange_finish`] on the same `(which, phase)`.
+    pub fn exchange_start(
+        &mut self,
+        st: &mut RankState,
+        tp: &mut dyn Transport,
+        which: HaloVec,
+        phase: usize,
+    ) {
+        let (comm, tag) = wire(phase);
         let (halo, x) = st.halo_and(which);
         HaloExchange::post_sends(tp, halo, x, tag, comm, &mut self.ws.halo_stage);
+    }
+
+    /// Nonblocking half 2 of the halo exchange: drain every neighbour's
+    /// plane into the halo region (blocking per message).
+    pub fn exchange_finish(
+        &mut self,
+        st: &mut RankState,
+        tp: &mut dyn Transport,
+        which: HaloVec,
+        phase: usize,
+    ) {
+        let (comm, tag) = wire(phase);
+        let (halo, x) = st.halo_and(which);
         HaloExchange::complete_recvs(tp, halo, x, tag, comm);
+    }
+
+    /// Synchronous exchange over explicit borrows (the form the fused
+    /// `halo_*` operations fall back to when overlap is off).
+    fn exchange_slice(
+        &mut self,
+        tp: &mut dyn Transport,
+        halo: &HaloMap,
+        x: &mut [f64],
+        phase: usize,
+    ) {
+        let (comm, tag) = wire(phase);
+        HaloExchange::post_sends(tp, halo, x, tag, comm, &mut self.ws.halo_stage);
+        HaloExchange::complete_recvs(tp, halo, x, tag, comm);
+    }
+
+    /// Whether an exchange of `halo` should take the overlapped
+    /// (start → interior → finish → boundary) path: the executor knob is
+    /// on and there is at least one neighbour to overlap with.
+    fn overlap_active(&self, halo: &HaloMap) -> bool {
+        self.exec.overlap() && !halo.neighbours.is_empty()
+    }
+
+    /// Plain chunk plan plus its cached interior range (overlap path of
+    /// the non-§3.3 operations — same `(n, parts)` key as
+    /// [`Ops::blocks`]).
+    fn plain_plan_interior(
+        &mut self,
+        a: &EllMatrix,
+    ) -> (std::rc::Rc<[(usize, usize)]>, (usize, usize)) {
+        let parts = self.exec.nchunks(a.n, self.backend.max_chunks());
+        let blocks = self.ws.plan(a.n, parts);
+        let interior = self.ws.interior(a.n, parts, &blocks, a);
+        (blocks, interior)
+    }
+
+    /// Ordered chunk plan (§3.3 task blocks when `ntasks > 0`) plus fold
+    /// order plus its cached interior range (overlap path of the
+    /// reducing operations).
+    fn ordered_plan_interior(
+        &mut self,
+        a: &EllMatrix,
+        key: usize,
+    ) -> (std::rc::Rc<[(usize, usize)]>, Reduction, (usize, usize)) {
+        let parts = if self.opts.ntasks > 0 {
+            self.opts.ntasks
+        } else {
+            self.exec.nchunks(a.n, self.backend.max_chunks())
+        };
+        let blocks = self.ws.plan(a.n, parts);
+        let red = if self.opts.ntasks > 0 {
+            Reduction::Ordered(completion_order(
+                blocks.len(),
+                self.opts.task_order_seed,
+                key,
+            ))
+        } else {
+            Reduction::Tree
+        };
+        let interior = self.ws.interior(a.n, parts, &blocks, a);
+        (blocks, red, interior)
+    }
+
+    // -----------------------------------------------------------------
+    // Fused halo-exchange + kernel operations (the overlap hot path).
+    //
+    // Each `halo_*` method is the synchronous exchange followed by the
+    // matching kernel when overlap is off (or the rank has no
+    // neighbours) and the start → interior → finish → boundary schedule
+    // when it is on. The chunk plan, the scalar kernel per chunk, the
+    // per-slot partial positions and the fold order are identical in
+    // both modes, so convergence histories are bitwise identical —
+    // asserted across every method × rank count × strategy × transport
+    // by `tests/integration_exec.rs`.
+    //
+    // SAFETY (shared by all overlap paths below): interior chunks are
+    // exactly the chunks whose rows read no extended index in
+    // `[n, n_ext-1)` (`IterationWorkspace::interior`), the receives
+    // write only that halo region, chunk kernels write only their own
+    // disjoint row ranges, and each partial slot has exactly one
+    // writer. The `SharedRows` views therefore never overlap a write
+    // with a concurrent read or write.
+    // -----------------------------------------------------------------
+
+    /// Halo exchange of `x_ext` fused with y = A·x_ext.
+    pub fn halo_spmv(
+        &mut self,
+        a: &EllMatrix,
+        halo: &HaloMap,
+        tp: &mut dyn Transport,
+        x_ext: &mut [f64],
+        y: &mut [f64],
+        phase: usize,
+    ) {
+        if !self.overlap_active(halo) {
+            self.exchange_slice(tp, halo, x_ext, phase);
+            self.spmv(a, x_ext, y);
+            return;
+        }
+        let (comm, tag) = wire(phase);
+        HaloExchange::post_sends(tp, halo, x_ext, tag, comm, &mut self.ws.halo_stage);
+        let (blocks, interior) = self.plain_plan_interior(a);
+        let (lo, hi) = interior;
+        if self.parallel_native(blocks.len()) {
+            let bl: &[(usize, usize)] = &blocks;
+            let xs = SharedRows::new(x_ext);
+            let rows = SharedRows::new(y);
+            let mut finish = || {
+                // SAFETY: writes only the halo region (see block above).
+                let x = unsafe { xs.full() };
+                HaloExchange::complete_recvs(tp, halo, x, tag, comm);
+            };
+            self.exec.run_overlap(
+                bl.len(),
+                interior,
+                &|bi| {
+                    let (r0, r1) = bl[bi];
+                    // SAFETY: see the overlap safety block above.
+                    let x = unsafe { xs.full() };
+                    let y = unsafe { rows.full() };
+                    kernels::spmv_ell(a, x, y, r0, r1);
+                },
+                &mut finish,
+            );
+        } else {
+            for &(r0, r1) in &blocks[lo..hi] {
+                self.backend.spmv(a, x_ext, y, r0, r1);
+            }
+            HaloExchange::complete_recvs(tp, halo, x_ext, tag, comm);
+            for &(r0, r1) in blocks[..lo].iter().chain(&blocks[hi..]) {
+                self.backend.spmv(a, x_ext, y, r0, r1);
+            }
+        }
+        tp.record_overlap(overlapped_rows(&blocks, lo, hi));
+    }
+
+    /// Halo exchange of `x_ext` fused with y = A·x_ext and the partial
+    /// Σ y·p (`spmv_dot_ordered` with the exchange folded in).
+    #[allow(clippy::too_many_arguments)]
+    pub fn halo_spmv_dot(
+        &mut self,
+        a: &EllMatrix,
+        halo: &HaloMap,
+        tp: &mut dyn Transport,
+        x_ext: &mut [f64],
+        y: &mut [f64],
+        p: DotWith<'_>,
+        key: usize,
+        phase: usize,
+    ) -> f64 {
+        if !self.overlap_active(halo) {
+            self.exchange_slice(tp, halo, x_ext, phase);
+            let x: &[f64] = x_ext;
+            return match p {
+                DotWith::Exchanged => self.spmv_dot_ordered(a, x, y, x, key),
+                DotWith::Slice(s) => self.spmv_dot_ordered(a, x, y, s, key),
+            };
+        }
+        let (comm, tag) = wire(phase);
+        HaloExchange::post_sends(tp, halo, x_ext, tag, comm, &mut self.ws.halo_stage);
+        let (blocks, red, interior) = self.ordered_plan_interior(a, key);
+        let nb = blocks.len();
+        if self.parallel_native(nb) {
+            let Ops { exec, ws, .. } = &mut *self;
+            let rows = SharedRows::new(y);
+            reduce_overlap_with(
+                exec,
+                &mut ws.partials,
+                &blocks,
+                &red,
+                interior,
+                tp,
+                halo,
+                (comm, tag),
+                x_ext,
+                &|x, _bi, r0, r1| {
+                    // SAFETY: this chunk's y rows are written only here;
+                    // the dot reads them back plus owned indices of x/p.
+                    let yv = unsafe { rows.full() };
+                    kernels::spmv_ell(a, x, yv, r0, r1);
+                    let pv: &[f64] = match p {
+                        DotWith::Exchanged => x,
+                        DotWith::Slice(s) => s,
+                    };
+                    kernels::dot(yv, pv, r0, r1)
+                },
+            )
+        } else {
+            // the SpMV honours the backend's chunk capability and only
+            // its chunks split around the receives; the dot (which never
+            // touches the halo) runs after, exactly as in the
+            // synchronous path
+            let (sb, (slo, shi)) = self.plain_plan_interior(a);
+            for &(r0, r1) in &sb[slo..shi] {
+                self.backend.spmv(a, x_ext, y, r0, r1);
+            }
+            HaloExchange::complete_recvs(tp, halo, x_ext, tag, comm);
+            for &(r0, r1) in sb[..slo].iter().chain(&sb[shi..]) {
+                self.backend.spmv(a, x_ext, y, r0, r1);
+            }
+            tp.record_overlap(overlapped_rows(&sb, slo, shi));
+            let pv: &[f64] = match p {
+                DotWith::Exchanged => x_ext,
+                DotWith::Slice(s) => s,
+            };
+            self.reduce(
+                &blocks,
+                &red,
+                |r0, r1| kernels::dot(y, pv, r0, r1),
+                |b, r0, r1| b.dot(y, pv, r0, r1),
+            )
+        }
+    }
+
+    /// Halo exchange of `x_ext` fused with one Jacobi sweep + residual
+    /// partial (`jacobi_step_ordered` with the exchange folded in;
+    /// `key` doubles as the exchange phase, as in the Jacobi loop).
+    #[allow(clippy::too_many_arguments)]
+    pub fn halo_jacobi_step(
+        &mut self,
+        a: &EllMatrix,
+        b: &[f64],
+        halo: &HaloMap,
+        tp: &mut dyn Transport,
+        x_ext: &mut [f64],
+        x_new: &mut [f64],
+        key: usize,
+    ) -> f64 {
+        if !self.overlap_active(halo) {
+            self.exchange_slice(tp, halo, x_ext, key);
+            return self.jacobi_step_ordered(a, b, x_ext, x_new, key);
+        }
+        let (comm, tag) = wire(key);
+        HaloExchange::post_sends(tp, halo, x_ext, tag, comm, &mut self.ws.halo_stage);
+        let (blocks, red, interior) = self.ordered_plan_interior(a, key);
+        let (lo, hi) = interior;
+        let nb = blocks.len();
+        if self.parallel_native(nb) {
+            let Ops { exec, ws, .. } = &mut *self;
+            let rows = SharedRows::new(x_new);
+            reduce_overlap_with(
+                exec,
+                &mut ws.partials,
+                &blocks,
+                &red,
+                interior,
+                tp,
+                halo,
+                (comm, tag),
+                x_ext,
+                &|x, _bi, r0, r1| {
+                    // SAFETY: this chunk's x_new rows are written only
+                    // here.
+                    let xn = unsafe { rows.full() };
+                    kernels::jacobi_sweep(a, b, x, xn, r0, r1)
+                },
+            )
+        } else {
+            let Ops { ws, backend, .. } = &mut *self;
+            let partials = &mut ws.partials;
+            partials.clear();
+            partials.resize(nb, 0.0);
+            for (bi, &(r0, r1)) in blocks.iter().enumerate().take(hi).skip(lo) {
+                partials[bi] = backend.jacobi_step(a, b, x_ext, x_new, r0, r1);
+            }
+            HaloExchange::complete_recvs(tp, halo, x_ext, tag, comm);
+            for (bi, &(r0, r1)) in blocks.iter().enumerate() {
+                if bi < lo || bi >= hi {
+                    partials[bi] = backend.jacobi_step(a, b, x_ext, x_new, r0, r1);
+                }
+            }
+            tp.record_overlap(overlapped_rows(&blocks, lo, hi));
+            fold_mut(partials, &red)
+        }
+    }
+
+    /// Halo exchange of `x_ext` fused with one blocked coloured
+    /// half-sweep (`gs_colour_blocked_ordered` with the exchange folded
+    /// in — the first colour of a red-black sweep). Sound because the
+    /// blocked kernel reads halo columns *live* from `x_ext`, never from
+    /// the snapshot `x_old`, so interior chunks stay halo-independent
+    /// and a snapshot taken before the receives is indistinguishable
+    /// from one taken after.
+    #[allow(clippy::too_many_arguments)]
+    pub fn halo_gs_colour_blocked(
+        &mut self,
+        a: &EllMatrix,
+        b: &[f64],
+        mask: &[bool],
+        colour: bool,
+        halo: &HaloMap,
+        tp: &mut dyn Transport,
+        x_ext: &mut [f64],
+        x_old: &[f64],
+        key: usize,
+        phase: usize,
+    ) -> f64 {
+        if !self.overlap_active(halo) {
+            self.exchange_slice(tp, halo, x_ext, phase);
+            return self.gs_colour_blocked_ordered(a, b, mask, colour, x_ext, x_old, key);
+        }
+        let (comm, tag) = wire(phase);
+        HaloExchange::post_sends(tp, halo, x_ext, tag, comm, &mut self.ws.halo_stage);
+        let (blocks, red, interior) = self.ordered_plan_interior(a, key);
+        let (lo, hi) = interior;
+        let nb = blocks.len();
+        if self.parallel_native(nb) {
+            let Ops { exec, ws, .. } = &mut *self;
+            reduce_overlap_with(
+                exec,
+                &mut ws.partials,
+                &blocks,
+                &red,
+                interior,
+                tp,
+                halo,
+                (comm, tag),
+                x_ext,
+                &|x, _bi, r0, r1| {
+                    // this chunk writes only its own rows of x; cross-
+                    // chunk same-colour couplings read the snapshot
+                    kernels::gs_colour_sweep_blocked(a, b, mask, colour, x, x_old, r0, r1)
+                },
+            )
+        } else {
+            let Ops { ws, backend, .. } = &mut *self;
+            let partials = &mut ws.partials;
+            partials.clear();
+            partials.resize(nb, 0.0);
+            for (bi, &(r0, r1)) in blocks.iter().enumerate().take(hi).skip(lo) {
+                partials[bi] =
+                    backend.gs_colour_sweep_blocked(a, b, mask, colour, x_ext, x_old, r0, r1);
+            }
+            HaloExchange::complete_recvs(tp, halo, x_ext, tag, comm);
+            for (bi, &(r0, r1)) in blocks.iter().enumerate() {
+                if bi < lo || bi >= hi {
+                    partials[bi] =
+                        backend.gs_colour_sweep_blocked(a, b, mask, colour, x_ext, x_old, r0, r1);
+                }
+            }
+            tp.record_overlap(overlapped_rows(&blocks, lo, hi));
+            fold_mut(partials, &red)
+        }
     }
 
     /// y[0..n) = A·x_ext.

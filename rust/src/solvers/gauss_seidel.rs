@@ -58,12 +58,11 @@ pub fn solve_rank(
     const T_BWD: usize = 1;
 
     for k in 0..opts.max_iters {
-        // ---- forward sweep ----
-        ops.exchange(st, tp, HaloVec::X, 2 * k + T_FWD);
-        let part = sweep(&mut ops, st, variant, opts, k, true);
-        // ---- backward sweep ----
-        ops.exchange(st, tp, HaloVec::X, 2 * k + T_BWD);
-        sweep(&mut ops, st, variant, opts, k, false);
+        // each directional sweep owns its halo exchange (fused into the
+        // sweep so the red-black variant can overlap its first colour
+        // with the messages in flight)
+        let part = sweep(&mut ops, st, tp, variant, opts, k, true, 2 * k + T_FWD);
+        sweep(&mut ops, st, tp, variant, opts, k, false, 2 * k + T_BWD);
 
         // residual of the iterate entering this iteration (forward pass
         // partials), allreduced — the paper's rTL reduction (Code 4)
@@ -81,20 +80,33 @@ pub fn solve_rank(
     drv.finish(name, 0)
 }
 
-/// One directional sweep on one rank; returns the local residual partial
+/// One directional sweep on one rank, *including* its halo exchange of
+/// x (phase-tagged by `phase`); returns the local residual partial
 /// (squared, measured against pre-update values).
+///
+/// Only the red-black blocked path overlaps the exchange with compute:
+/// its same-colour chunks are independent given the snapshot, so the
+/// interior chunks of the first colour can sweep while the halo planes
+/// are in flight. The processor-local and relaxed variants are live
+/// sequential sweeps whose very first rows may read halo values — they
+/// keep the synchronous exchange (`--overlap` is a no-op for them by
+/// construction, not by accident).
+#[allow(clippy::too_many_arguments)]
 fn sweep(
     ops: &mut Ops,
     st: &mut RankState,
+    tp: &mut dyn Transport,
     variant: GsVariant,
     opts: &SolveOpts,
     k: usize,
     forward: bool,
+    phase: usize,
 ) -> f64 {
     let n = st.sys.n();
     match variant {
         GsVariant::ProcessorLocal => {
             // true sequential GS over the local rows
+            ops.exchange(st, tp, HaloVec::X, phase);
             if forward {
                 kernels::gs_sweep(&st.sys.a, &st.sys.b, &mut st.x_ext, 0..n)
             } else {
@@ -104,40 +116,67 @@ fn sweep(
         GsVariant::RedBlack => {
             // colour order: forward = red then black, backward = reversed
             let colours: [bool; 2] = if forward { [true, false] } else { [false, true] };
-            let mut res = 0.0;
-            for colour in colours {
-                let RankState { sys, x_ext, s_ext, .. } = st;
-                if opts.ntasks <= 1 {
-                    // single task: sequential within the colour — delegate
-                    // to the backend (snapshot semantics for parity with
-                    // the XLA artifact when ntasks==0)
+            if opts.ntasks <= 1 {
+                // single task: sequential within the colour — delegate
+                // to the backend (snapshot semantics for parity with
+                // the XLA artifact when ntasks==0); whole-range chunks
+                // leave nothing halo-independent to overlap
+                ops.exchange(st, tp, HaloVec::X, phase);
+                let mut res = 0.0;
+                for colour in colours {
+                    let RankState { sys, x_ext, .. } = st;
                     res += ops.gs_colour_whole(&sys.a, &sys.b, &sys.red_mask, colour, x_ext);
-                } else {
-                    // same-colour tasks are concurrent: snapshot first,
-                    // then chunk-parallel blocked half-sweeps. Each
-                    // colour folds its own residual partials and the two
-                    // totals are summed — a last-ulp regrouping of the
-                    // pre-refactor single accumulator chain, kept
-                    // because it is what allows the colours to fold
-                    // independently of executor scheduling (pinned by a
-                    // regression test in tests/integration_exec.rs).
-                    s_ext.copy_from_slice(x_ext);
-                    res += ops.gs_colour_blocked_ordered(
-                        &sys.a,
-                        &sys.b,
-                        &sys.red_mask,
-                        colour,
-                        x_ext,
-                        s_ext,
-                        k,
-                    );
                 }
+                return res * 0.5;
+            }
+            // same-colour tasks are concurrent: snapshot first, then
+            // chunk-parallel blocked half-sweeps. Each colour folds its
+            // own residual partials and the two totals are summed — a
+            // last-ulp regrouping of the pre-refactor single accumulator
+            // chain, kept because it is what allows the colours to fold
+            // independently of executor scheduling (pinned by a
+            // regression test in tests/integration_exec.rs).
+            //
+            // The first colour fuses the exchange: interior chunks sweep
+            // while the halo planes are in flight. Snapshotting before
+            // the receives is sound because the blocked kernel reads
+            // halo columns live from x_ext, never from the snapshot.
+            let mut res = 0.0;
+            {
+                let RankState { sys, x_ext, s_ext, .. } = st;
+                s_ext.copy_from_slice(x_ext);
+                res += ops.halo_gs_colour_blocked(
+                    &sys.a,
+                    &sys.b,
+                    &sys.red_mask,
+                    colours[0],
+                    &sys.halo,
+                    tp,
+                    x_ext,
+                    s_ext,
+                    k,
+                    phase,
+                );
+            }
+            {
+                let RankState { sys, x_ext, s_ext, .. } = st;
+                s_ext.copy_from_slice(x_ext);
+                res += ops.gs_colour_blocked_ordered(
+                    &sys.a,
+                    &sys.b,
+                    &sys.red_mask,
+                    colours[1],
+                    x_ext,
+                    s_ext,
+                    k,
+                );
             }
             res * 0.5 // two half-sweeps each measured half the rows
         }
         GsVariant::Relaxed => {
             // forward/backward subdomain tasks racing on x (Code 4):
             // executed on the live vector in completion order
+            ops.exchange(st, tp, HaloVec::X, phase);
             let blocks = task_blocks(n, opts.ntasks.max(1));
             let mut order = completion_order(
                 blocks.len(),

@@ -10,7 +10,7 @@
 //! nondeterminism emulation (harmless for Jacobi: only the reduction
 //! reorders).
 
-use super::{Compute, HaloVec, Observer, Ops, RankState, SolveOpts, SolveStats, SolverDriver};
+use super::{Compute, Observer, Ops, RankState, SolveOpts, SolveStats, SolverDriver};
 use crate::exec::Executor;
 use crate::simmpi::Transport;
 
@@ -26,14 +26,13 @@ pub fn solve_rank(
     let mut ops = Ops::new(exec, opts, backend);
 
     for k in 0..opts.max_iters {
-        // halo exchange of the current iterate
-        ops.exchange(st, tp, HaloVec::X, k);
-
-        // fused sweep + local residual
+        // halo exchange of the current iterate fused with the
+        // sweep+residual kernel: with `--overlap on` the interior chunks
+        // sweep while the halo planes are in flight
         let n = st.sys.n();
         let part = {
             let RankState { sys, x_ext, tmp, .. } = st;
-            let res = ops.jacobi_step_ordered(&sys.a, &sys.b, x_ext, tmp, k);
+            let res = ops.halo_jacobi_step(&sys.a, &sys.b, &sys.halo, tp, x_ext, tmp, k);
             x_ext[..n].copy_from_slice(&tmp[..n]);
             res
         };

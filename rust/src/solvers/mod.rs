@@ -40,7 +40,7 @@ mod observer;
 pub use backend::{Compute, Native};
 pub use bicgstab::BiVariant;
 pub use cg::CgVariant;
-pub use driver::{ConvergenceTracker, Ops, SolverDriver};
+pub use driver::{ConvergenceTracker, DotWith, Ops, SolverDriver};
 pub use gauss_seidel::GsVariant;
 pub use observer::{NoopObserver, Observer};
 

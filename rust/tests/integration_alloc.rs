@@ -100,21 +100,30 @@ fn steady_state_iterations_do_not_allocate() {
     // buffer recycling, allreduce round pooling), with a tiny slack
     // because the counter is process-wide and both rank threads land in
     // it.
+    // The overlap rows re-run the multi-rank shapes with the halo
+    // exchange split into start → interior → finish → boundary: the
+    // overlapped steady-state iteration must stay within the exact same
+    // bounds (the overlap path reuses the cached chunk plans, the
+    // workspace partials buffer and the recycled transport buffers — it
+    // introduces no per-iteration allocation of its own).
     let grid = Grid3::new(32, 32, 32);
     let opts = SolveOpts {
         eps: 0.0,
         max_iters: ITERS,
         ..SolveOpts::default()
     };
-    for (strategy, threads, ranks, bound) in [
-        (ExecStrategy::Seq, 1usize, 1usize, 0usize),
-        (ExecStrategy::Seq, 1, 2, 2),
-        (ExecStrategy::ForkJoin, 4, 1, 8),
-        (ExecStrategy::TaskPool, 4, 1, 8),
+    for (strategy, threads, ranks, overlap, bound) in [
+        (ExecStrategy::Seq, 1usize, 1usize, false, 0usize),
+        (ExecStrategy::Seq, 1, 2, false, 2),
+        (ExecStrategy::ForkJoin, 4, 1, false, 8),
+        (ExecStrategy::TaskPool, 4, 1, false, 8),
+        (ExecStrategy::Seq, 1, 2, true, 2),
+        (ExecStrategy::ForkJoin, 4, 2, true, 8),
+        (ExecStrategy::TaskPool, 4, 2, true, 8),
     ] {
         let mut pb = Problem::build(grid, StencilKind::P7, ranks);
         let probe = AllocProbe::new();
-        let spec = ExecSpec::new(strategy, threads);
+        let spec = ExecSpec::new(strategy, threads).with_overlap(overlap);
         let stats = pb.solve_hybrid_observed(
             Method::parse("cg").unwrap(),
             &opts,
@@ -123,13 +132,19 @@ fn steady_state_iterations_do_not_allocate() {
             &probe,
         );
         assert_eq!(stats.iterations, ITERS, "{strategy:?}: must run all iters");
+        if overlap && ranks > 1 {
+            assert!(
+                pb.stats.overlapped_rows > 0,
+                "{strategy:?}: overlap run did no overlapped work"
+            );
+        }
         for i in (WARMUP + 1)..=ITERS {
             let d = probe.delta(i);
             assert!(
                 d <= bound,
-                "{} threads={threads} ranks={ranks}: iteration {i} performed \
-                 {d} heap allocations (allowed {bound}) — the zero-allocation \
-                 steady state regressed",
+                "{} threads={threads} ranks={ranks} overlap={overlap}: iteration {i} \
+                 performed {d} heap allocations (allowed {bound}) — the \
+                 zero-allocation steady state regressed",
                 strategy.name(),
             );
         }

@@ -401,6 +401,64 @@ fn lockstep_vs_threaded_bitwise_all_methods_ranks_execs() {
 }
 
 // ---------------------------------------------------------------------
+// overlap equivalence: start → interior → finish → boundary schedule
+// ---------------------------------------------------------------------
+
+/// The acceptance contract of the halo-overlap optimisation: for every
+/// method variant × rank count × executor strategy × transport, running
+/// with `overlap: on` (halo exchange split into start/finish with the
+/// halo-independent interior chunks computed while the messages are in
+/// flight) produces convergence histories bitwise identical to
+/// `overlap: off`. The chunk plans, scalar kernels, per-slot partial
+/// positions and fold orders are unchanged — only the execution order
+/// of independent rows moves, which floating point cannot observe.
+#[test]
+fn overlap_on_vs_off_bitwise_all_methods_ranks_execs_transports() {
+    let grid = Grid3::new(6, 6, 12);
+    for method in ALL_METHODS {
+        let mut opts = SolveOpts::default();
+        if method.starts_with("gs-") {
+            opts.ntasks = 6;
+            opts.task_order_seed = 3;
+        }
+        for ranks in [1usize, 2, 4] {
+            for strategy in [ExecStrategy::Seq, ExecStrategy::ForkJoin, ExecStrategy::TaskPool] {
+                for kind in [TransportKind::Lockstep, TransportKind::Threaded] {
+                    let spec_off = ExecSpec::new(strategy, 2).with_chunk_rows(24);
+                    let spec_on = spec_off.clone().with_overlap(true);
+                    let m = Method::parse(method).unwrap();
+                    let mut poff = Problem::build(grid, StencilKind::P7, ranks);
+                    let off = poff.solve_hybrid(m, &opts, &spec_off, kind);
+                    let mut pon = Problem::build(grid, StencilKind::P7, ranks);
+                    let on = pon.solve_hybrid(m, &opts, &spec_on, kind);
+                    let ctx = format!(
+                        "{method} x{ranks} ranks, {} exec, {} transport",
+                        strategy.name(),
+                        kind.name()
+                    );
+                    assert!(off.converged, "{ctx}: did not converge");
+                    assert_identical(&off, &on, &ctx);
+                    // effectiveness accounting: the overlapped run did
+                    // real interior work while messages were in flight —
+                    // except for the inherently sequential GS variants,
+                    // which keep the synchronous exchange by design
+                    assert_eq!(poff.stats.overlapped_rows, 0, "{ctx}: off overlapped");
+                    if ranks > 1 && method != "gs" && method != "gs-relaxed" {
+                        assert!(
+                            pon.stats.overlapped_rows > 0,
+                            "{ctx}: no interior rows overlapped"
+                        );
+                    }
+                    if ranks == 1 {
+                        assert_eq!(pon.stats.overlapped_rows, 0, "{ctx}: no neighbours");
+                    }
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
 // red-black GS per-colour fold regrouping (pinned)
 // ---------------------------------------------------------------------
 
