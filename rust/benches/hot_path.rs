@@ -1,43 +1,73 @@
 //! Hot-path throughput benchmark: solver iterations/sec for the four
 //! classic methods × {seq, fork-join, task} on a multi-rank *threaded*
-//! transport, with halo overlap off vs on — the measured perf
-//! trajectory of the repo (`BENCH_hot_path.json` at the repo root;
-//! later PRs are compared against this file's history).
+//! transport, with halo overlap off vs on — plus a per-kernel-backend
+//! single-thread SpMV throughput section. The emitted
+//! `BENCH_hot_path.json` (repo root) is the measured perf trajectory of
+//! the repo: CI diffs fresh quick-run medians against the committed
+//! snapshot (`scripts/perf_gate.py`) and fails on regressions beyond
+//! the noise band.
 //!
 //!     cargo bench --bench hot_path            # 64³ grid, full run
 //!     cargo bench --bench hot_path -- --quick # 16³ grid CI smoke run
 //!
-//! Methodology: fixed iteration count (eps = 0 never converges, so every
-//! configuration performs identical work), genuinely concurrent rank
-//! threads (`TransportKind::Threaded`, 2 ranks), per-rank executors
-//! built once and reused across repetitions
-//! (`solve_hybrid_execs_observed` — the plan-once / run-many path
-//! `api::Session` uses), one warm solve, then the best of `reps` timed
-//! solves. Reported per configuration: iterations per second and
-//! nanoseconds per iteration, with `overlap: off` and `overlap: on`
-//! side by side (same chunk plans and folds — histories are bitwise
-//! identical, so the delta is pure schedule).
+//! Methodology (rebar-style): fixed iteration count (eps = 0 never
+//! converges, so every configuration performs identical work), a
+//! separate warm-up phase per configuration (plans, buffers, transport
+//! keys), then `ROUNDS` timed repetitions *interleaved across all
+//! configurations* — round-robin rather than back-to-back, so slow
+//! drift of the machine (thermal state, competing load) lands evenly on
+//! every cell instead of biasing whichever config ran last. Each cell
+//! reports median / min / stddev over its rounds; iters-per-sec derives
+//! from the median (robust), not the best (optimistic).
 
 use std::collections::BTreeMap;
 use std::time::Instant;
 
 use hlam::exec::{ExecSpec, ExecStrategy, Executor};
+use hlam::kernels;
 use hlam::mesh::Grid3;
 use hlam::simmpi::TransportKind;
 use hlam::solvers::{Method, NoopObserver, Problem, SolveOpts};
-use hlam::sparse::StencilKind;
+use hlam::sparse::{KernelKind, LocalSystem, StencilKind};
 use hlam::util::json::Json;
+use hlam::util::Rng;
 
 const RANKS: usize = 2;
+
+/// (median, min, stddev) of a sample set, in the sample's unit.
+fn sample_stats(samples: &[f64]) -> (f64, f64, f64) {
+    let mut s = samples.to_vec();
+    s.sort_by(f64::total_cmp);
+    let n = s.len();
+    let median = if n % 2 == 1 {
+        s[n / 2]
+    } else {
+        0.5 * (s[n / 2 - 1] + s[n / 2])
+    };
+    let mean = s.iter().sum::<f64>() / n as f64;
+    let var = s.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+    (median, s[0], var.sqrt())
+}
+
+struct Cell {
+    method: Method,
+    name: &'static str,
+    strategy: ExecStrategy,
+    threads: usize,
+    overlap: bool,
+    execs: Vec<Executor>,
+    samples: Vec<f64>,
+    overlapped_rows: u64,
+}
 
 fn main() {
     let quick = std::env::args().any(|a| a == "--quick");
     // quick: tiny grid so the CI smoke job finishes in seconds while
     // still exercising multi-chunk parallel paths via chunk_rows
-    let (grid, iters, reps, chunk_rows) = if quick {
-        (Grid3::new(16, 16, 16), 10usize, 2usize, Some(512))
+    let (grid, iters, rounds, chunk_rows) = if quick {
+        (Grid3::new(16, 16, 16), 10usize, 5usize, Some(512))
     } else {
-        (Grid3::new(64, 64, 64), 40, 3, None)
+        (Grid3::new(64, 64, 64), 40, 7, None)
     };
     let threads = std::thread::available_parallelism()
         .map(|n| n.get())
@@ -57,72 +87,114 @@ fn main() {
     println!(
         "== hot-path iterations/sec (grid {}x{}x{} = {n} rows, 7-pt, \
          {iters} fixed iters, {RANKS} ranks, threaded transport, \
-         overlap off vs on) ==\n",
+         {rounds} interleaved rounds, overlap off vs on) ==\n",
         grid.nx, grid.ny, grid.nz
     );
 
-    let mut entries: Vec<Json> = Vec::new();
+    // one shared assembly: every cell solves the same system (solves
+    // reset the iterate; the matrix and halo map are never mutated)
+    let mut pb = Problem::build(grid, StencilKind::P7, RANKS);
+
+    let mut cells: Vec<Cell> = Vec::new();
     for name in ["jacobi", "gs", "cg", "bicgstab"] {
-        let method = Method::parse(name).expect("known method");
-        let mut pb = Problem::build(grid, StencilKind::P7, RANKS);
         for (strategy, t) in configs {
             for overlap in [false, true] {
                 let mut spec = ExecSpec::new(strategy, t).with_overlap(overlap);
                 if let Some(rows) = chunk_rows {
                     spec = spec.with_chunk_rows(rows);
                 }
-                // plan once: persistent per-rank executors, reused by
-                // every solve of this configuration
-                let execs: Vec<Executor> = (0..RANKS).map(|_| spec.build()).collect();
-                let run = |pb: &mut Problem| {
-                    let s = pb.solve_hybrid_execs_observed(
-                        method,
-                        &opts,
-                        &execs,
-                        TransportKind::Threaded,
-                        &NoopObserver,
-                    );
-                    std::hint::black_box(s.rel_residual);
-                    debug_assert_eq!(s.iterations, iters);
-                };
-                run(&mut pb); // warm: plans, buffers, transport keys
-                let mut best = f64::INFINITY;
-                for _ in 0..reps {
-                    let t0 = Instant::now();
-                    run(&mut pb);
-                    best = best.min(t0.elapsed().as_secs_f64());
-                }
-                let iters_per_sec = iters as f64 / best;
-                let ns_per_iter = best * 1e9 / iters as f64;
-                let overlapped_rows = pb.stats.overlapped_rows;
-                println!(
-                    "{name:<9} exec={:<9} threads={t} overlap={:<3}: {:>10.1} iters/s \
-                     {:>12.0} ns/iter  (overlapped_rows={overlapped_rows})",
-                    strategy.name(),
-                    if overlap { "on" } else { "off" },
-                    iters_per_sec,
-                    ns_per_iter
-                );
-                let mut e = BTreeMap::new();
-                e.insert("method".to_string(), Json::Str(name.to_string()));
-                e.insert(
-                    "strategy".to_string(),
-                    Json::Str(strategy.name().to_string()),
-                );
-                e.insert("threads".to_string(), Json::Num(t as f64));
-                e.insert("overlap".to_string(), Json::Bool(overlap));
-                e.insert(
-                    "overlapped_rows".to_string(),
-                    Json::Num(overlapped_rows as f64),
-                );
-                e.insert("iters_per_sec".to_string(), Json::Num(iters_per_sec));
-                e.insert("ns_per_iter".to_string(), Json::Num(ns_per_iter));
-                e.insert("seconds_best".to_string(), Json::Num(best));
-                entries.push(Json::Obj(e));
+                cells.push(Cell {
+                    method: Method::parse(name).expect("known method"),
+                    name,
+                    strategy,
+                    threads: t,
+                    overlap,
+                    // plan once: persistent per-rank executors, reused
+                    // by every repetition of this configuration
+                    execs: (0..RANKS).map(|_| spec.build()).collect(),
+                    samples: Vec::with_capacity(rounds),
+                    overlapped_rows: 0,
+                });
             }
         }
-        println!();
     }
+
+    // phase 1: warm-up — every cell runs once untimed (plan caches,
+    // buffer capacities, ISODD transport keys)
+    for cell in &mut cells {
+        let s = pb.solve_hybrid_execs_observed(
+            cell.method,
+            &opts,
+            &cell.execs,
+            TransportKind::Threaded,
+            &NoopObserver,
+        );
+        std::hint::black_box(s.rel_residual);
+        assert_eq!(s.iterations, iters, "{}: fixed-work contract", cell.name);
+    }
+
+    // phase 2: timing — rounds interleaved across all cells
+    for _ in 0..rounds {
+        for cell in &mut cells {
+            let t0 = Instant::now();
+            let s = pb.solve_hybrid_execs_observed(
+                cell.method,
+                &opts,
+                &cell.execs,
+                TransportKind::Threaded,
+                &NoopObserver,
+            );
+            cell.samples.push(t0.elapsed().as_secs_f64());
+            std::hint::black_box(s.rel_residual);
+            cell.overlapped_rows = pb.stats.overlapped_rows;
+        }
+    }
+
+    let mut entries: Vec<Json> = Vec::new();
+    let mut last_method = "";
+    for cell in &cells {
+        let (median, min, stddev) = sample_stats(&cell.samples);
+        let iters_per_sec = iters as f64 / median;
+        let ns_per_iter = median * 1e9 / iters as f64;
+        if cell.name != last_method {
+            if !last_method.is_empty() {
+                println!();
+            }
+            last_method = cell.name;
+        }
+        println!(
+            "{:<9} exec={:<9} threads={} overlap={:<3}: {:>10.1} iters/s \
+             {:>12.0} ns/iter  (stddev {:>6.1}% of median, overlapped_rows={})",
+            cell.name,
+            cell.strategy.name(),
+            cell.threads,
+            if cell.overlap { "on" } else { "off" },
+            iters_per_sec,
+            ns_per_iter,
+            100.0 * stddev / median,
+            cell.overlapped_rows
+        );
+        let mut e = BTreeMap::new();
+        e.insert("method".to_string(), Json::Str(cell.name.to_string()));
+        e.insert(
+            "strategy".to_string(),
+            Json::Str(cell.strategy.name().to_string()),
+        );
+        e.insert("threads".to_string(), Json::Num(cell.threads as f64));
+        e.insert("overlap".to_string(), Json::Bool(cell.overlap));
+        e.insert(
+            "overlapped_rows".to_string(),
+            Json::Num(cell.overlapped_rows as f64),
+        );
+        e.insert("iters_per_sec".to_string(), Json::Num(iters_per_sec));
+        e.insert("ns_per_iter".to_string(), Json::Num(ns_per_iter));
+        e.insert("seconds_median".to_string(), Json::Num(median));
+        e.insert("seconds_min".to_string(), Json::Num(min));
+        e.insert("seconds_stddev".to_string(), Json::Num(stddev));
+        entries.push(Json::Obj(e));
+    }
+
+    let spmv = bench_spmv_backends(quick, rounds);
 
     let mut root = BTreeMap::new();
     root.insert("bench".to_string(), Json::Str("hot_path".to_string()));
@@ -137,9 +209,13 @@ fn main() {
         Json::Str(TransportKind::Threaded.name().to_string()),
     );
     root.insert("iters_per_solve".to_string(), Json::Num(iters as f64));
-    root.insert("reps".to_string(), Json::Num(reps as f64));
+    root.insert("rounds".to_string(), Json::Num(rounds as f64));
     root.insert("quick".to_string(), Json::Bool(quick));
+    // a freshly measured snapshot is never provisional; the committed
+    // baseline carries `true` until a real run replaces it
+    root.insert("provisional".to_string(), Json::Bool(false));
     root.insert("entries".to_string(), Json::Arr(entries));
+    root.insert("spmv".to_string(), spmv);
     let doc = Json::Obj(root);
 
     // the bench runs with the crate dir as cwd reference; the trajectory
@@ -147,7 +223,8 @@ fn main() {
     let out = format!("{}/../BENCH_hot_path.json", env!("CARGO_MANIFEST_DIR"));
     std::fs::write(&out, format!("{doc}\n")).expect("write BENCH_hot_path.json");
     // round-trip: the emitted trajectory point must parse and contain
-    // both overlap modes for every (method, strategy) pair
+    // both overlap modes for every (method, strategy) pair plus the
+    // kernel-backend SpMV grid
     let text = std::fs::read_to_string(&out).expect("read back");
     let parsed = Json::parse(&text).expect("BENCH_hot_path.json must parse");
     let entries = parsed
@@ -160,5 +237,110 @@ fn main() {
         .filter(|e| matches!(e.get("overlap"), Some(Json::Bool(true))))
         .count();
     assert_eq!(on, entries.len() / 2, "both overlap modes present");
-    println!("wrote {out} ({} entries)", entries.len());
+    let spmv_entries = parsed
+        .get("spmv")
+        .and_then(|s| s.get("entries"))
+        .and_then(|e| e.as_arr())
+        .expect("spmv entries array");
+    assert_eq!(spmv_entries.len(), KernelKind::ALL.len(), "one spmv row per kernel");
+    println!("\nwrote {out} ({} entries)", entries.len());
+}
+
+/// Single-thread SpMV throughput per kernel backend on one big local
+/// system — the memory-traffic comparison the kernel tier exists for.
+/// Same interleaved-rounds discipline as the solver grid, plus an
+/// inline bitwise cross-check of every backend against the ELL result.
+fn bench_spmv_backends(quick: bool, rounds: usize) -> Json {
+    let grid = if quick {
+        Grid3::new(48, 48, 48)
+    } else {
+        Grid3::new(128, 128, 128)
+    };
+    let mut sys = LocalSystem::build(grid, StencilKind::P7, 0, 1);
+    let n = sys.n();
+    let mut rng = Rng::new(2023);
+    let mut x = sys.new_ext();
+    for v in x.iter_mut().take(n) {
+        *v = rng.normal();
+    }
+    println!(
+        "\n== single-thread SpMV throughput by kernel backend \
+         (grid {}x{}x{} = {n} rows, 7-pt, {rounds} interleaved rounds) ==\n",
+        grid.nx, grid.ny, grid.nz
+    );
+
+    // warm-up: materialise every layout once and pin the bitwise
+    // contract before any timing
+    let mut want = vec![0.0; n];
+    sys.a.set_kernel(KernelKind::Ell);
+    kernels::spmv(&sys.a, &x, &mut want, 0, n);
+    let mut y = vec![0.0; n];
+    for k in KernelKind::ALL {
+        sys.a.set_kernel(k);
+        y.fill(0.0);
+        kernels::spmv(&sys.a, &x, &mut y, 0, n);
+        for (i, (a, b)) in y.iter().zip(&want).enumerate() {
+            assert_eq!(
+                a.to_bits(),
+                b.to_bits(),
+                "kernel {} diverges from ell at row {i}",
+                k.name()
+            );
+        }
+    }
+
+    // timing: rounds interleaved across backends
+    let mut samples: Vec<Vec<f64>> = vec![Vec::with_capacity(rounds); KernelKind::ALL.len()];
+    for _ in 0..rounds {
+        for (ki, k) in KernelKind::ALL.iter().enumerate() {
+            sys.a.set_kernel(*k);
+            let t0 = Instant::now();
+            kernels::spmv(&sys.a, &x, &mut y, 0, n);
+            samples[ki].push(t0.elapsed().as_secs_f64());
+            std::hint::black_box(y[n / 2]);
+        }
+    }
+
+    let nnz = sys.a.nnz() as f64;
+    let csr_idx = KernelKind::ALL
+        .iter()
+        .position(|k| *k == KernelKind::Csr)
+        .expect("csr in ALL");
+    let (csr_median, _, _) = sample_stats(&samples[csr_idx]);
+    let mut entries: Vec<Json> = Vec::new();
+    for (ki, k) in KernelKind::ALL.iter().enumerate() {
+        let (median, min, stddev) = sample_stats(&samples[ki]);
+        let rows_per_sec = n as f64 / median;
+        let gflops = 2.0 * nnz / median / 1e9;
+        let speedup_vs_csr = csr_median / median;
+        println!(
+            "{:<8} {:>10.2} Mrows/s {:>7.2} GFLOP/s  speedup vs csr {:>5.2}x  \
+             (stddev {:>5.1}% of median)",
+            k.name(),
+            rows_per_sec / 1e6,
+            gflops,
+            speedup_vs_csr,
+            100.0 * stddev / median
+        );
+        let mut e = BTreeMap::new();
+        e.insert("kernel".to_string(), Json::Str(k.name().to_string()));
+        e.insert("rows_per_sec".to_string(), Json::Num(rows_per_sec));
+        e.insert("gflops".to_string(), Json::Num(gflops));
+        e.insert("speedup_vs_csr".to_string(), Json::Num(speedup_vs_csr));
+        e.insert("seconds_median".to_string(), Json::Num(median));
+        e.insert("seconds_min".to_string(), Json::Num(min));
+        e.insert("seconds_stddev".to_string(), Json::Num(stddev));
+        entries.push(Json::Obj(e));
+    }
+
+    let mut s = BTreeMap::new();
+    s.insert(
+        "grid".to_string(),
+        Json::Str(format!("{}x{}x{}", grid.nx, grid.ny, grid.nz)),
+    );
+    s.insert("rows".to_string(), Json::Num(n as f64));
+    s.insert("nnz".to_string(), Json::Num(nnz));
+    s.insert("threads".to_string(), Json::Num(1.0));
+    s.insert("entries".to_string(), Json::Arr(entries));
+    Json::Obj(s)
 }

@@ -14,7 +14,7 @@ use hlam::kernels;
 use hlam::mesh::Grid3;
 use hlam::simmpi::TransportKind;
 use hlam::solvers::{Method, SolveOpts};
-use hlam::sparse::{CsrMatrix, LocalSystem, StencilKind};
+use hlam::sparse::{CsrMatrix, KernelKind, LocalSystem, StencilKind};
 use hlam::util::bench::{bench, gbps};
 use hlam::util::Rng;
 
@@ -147,6 +147,48 @@ fn main() {
         println!("{}  speedup x{:.2}", r.report(), dot_seq_ns / r.median_ns);
     }
     println!();
+
+    // Kernel-backend SpMV throughput grid on the same production-size
+    // system: every layout of the kernel tier × every executor shape.
+    // All cells compute the bitwise-identical product (DESIGN.md §9) —
+    // the grid measures pure memory traffic. Validated by CI via
+    // `cargo bench --no-run`; run it for the measured numbers.
+    {
+        let mut a = sys.a.clone();
+        println!("== kernel-backend spmv grid (n={n}, 7-pt, backend × threads) ==\n");
+        for k in KernelKind::ALL {
+            a.set_kernel(k);
+            let mut seq_ns = 0.0;
+            for (strategy, threads) in configs {
+                let exec = Executor::new(strategy, threads);
+                let blocks = exec.blocks(n, usize::MAX);
+                let label = format!(
+                    "spmv kernel={:<7} exec={:<9} threads={threads}",
+                    k.name(),
+                    strategy.name()
+                );
+                let r = bench(&label, || {
+                    let rows = SharedRows::new(&mut y);
+                    exec.for_each(&blocks, |_, r0, r1| {
+                        // SAFETY: chunks write disjoint row ranges of y.
+                        let y = unsafe { rows.full() };
+                        kernels::spmv(&a, &x, y, r0, r1);
+                    });
+                    y[0]
+                });
+                if strategy == ExecStrategy::Seq {
+                    seq_ns = r.median_ns;
+                }
+                println!(
+                    "{}  {:>8.2} Mrows/s  speedup x{:.2}",
+                    r.report(),
+                    n as f64 * 1e3 / r.median_ns,
+                    seq_ns / r.median_ns
+                );
+            }
+            println!();
+        }
+    }
 
     // Hybrid ranks × threads grid on the production-size system: real
     // concurrent ranks (ThreadedTransport) × real threads (task pool) —

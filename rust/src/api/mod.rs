@@ -53,7 +53,7 @@ use crate::exec::{ExecSpec, ExecStrategy};
 use crate::mesh::Grid3;
 use crate::simmpi::TransportKind;
 use crate::solvers::{CgVariant, Method, SolveOpts};
-use crate::sparse::StencilKind;
+use crate::sparse::{KernelKind, StencilKind};
 use crate::util::Json;
 
 // ---------------------------------------------------------------------
@@ -66,6 +66,7 @@ const STENCIL_VALID: &str = "7|27";
 const STRATEGY_VALID: &str = "seq|fork-join|task";
 const TRANSPORT_VALID: &str = "lockstep|threaded";
 const BACKEND_VALID: &str = "native|xla";
+const KERNEL_VALID: &str = "csr|ell|sell|stencil";
 
 fn unknown(
     what: &'static str,
@@ -181,6 +182,15 @@ impl FromStr for BackendKind {
     }
 }
 
+impl FromStr for KernelKind {
+    type Err = SpecError;
+
+    fn from_str(s: &str) -> Result<Self, SpecError> {
+        KernelKind::parse(s)
+            .ok_or_else(|| unknown("kernel", s, KERNEL_VALID, &["csr", "ell", "sell", "stencil"]))
+    }
+}
+
 // ---------------------------------------------------------------------
 // RunSpec
 // ---------------------------------------------------------------------
@@ -199,6 +209,10 @@ pub struct RunSpec {
     pub exec: ExecSpec,
     pub transport: TransportKind,
     pub backend: BackendKind,
+    /// Kernel layout the native backend executes (`--kernel`). Pure
+    /// memory-traffic choice: every layout reproduces the ELL histories
+    /// bitwise (DESIGN.md §9).
+    pub kernel: KernelKind,
     pub opts: SolveOpts,
 }
 
@@ -214,6 +228,7 @@ impl Default for RunSpec {
             exec: ExecSpec::new(ExecStrategy::Seq, 1),
             transport: TransportKind::Lockstep,
             backend: BackendKind::Native,
+            kernel: KernelKind::Ell,
             opts: SolveOpts::default(),
         }
     }
@@ -266,6 +281,16 @@ impl RunSpec {
                 "backend 'xla' supports transport 'lockstep' only (the PJRT client is \
                  shared across ranks)"
                     .into(),
+            ));
+        }
+        if self.backend == BackendKind::Xla && self.kernel != KernelKind::Ell {
+            return Err(invalid(
+                "kernel",
+                format!(
+                    "backend 'xla' executes the AOT ELL artifacts only; kernel '{}' is a \
+                     native-backend layout",
+                    self.kernel.name()
+                ),
             ));
         }
         Ok(())
@@ -326,6 +351,7 @@ impl RunSpec {
             "backend".to_string(),
             Json::Str(self.backend.name().to_string()),
         );
+        m.insert("kernel".to_string(), Json::Str(self.kernel.name().to_string()));
         m.insert("opts".to_string(), Json::Obj(opts));
         Json::Obj(m)
     }
@@ -347,7 +373,8 @@ impl RunSpec {
         check_keys(
             j,
             &[
-                "grid", "stencil", "method", "ranks", "exec", "transport", "backend", "opts",
+                "grid", "stencil", "method", "ranks", "exec", "transport", "backend", "kernel",
+                "opts",
             ],
             "spec",
         )?;
@@ -393,6 +420,9 @@ impl RunSpec {
         }
         if let Some(b) = opt_str(j, "backend")? {
             spec.backend = b.parse()?;
+        }
+        if let Some(k) = opt_str(j, "kernel")? {
+            spec.kernel = k.parse()?;
         }
         if let Some(o) = j.get("opts") {
             if o.as_obj().is_none() {
@@ -474,10 +504,11 @@ impl RunSpec {
     /// One-line human summary (CLI echo).
     pub fn describe(&self) -> String {
         format!(
-            "method={} backend={} grid={}x{}x{} w={} ranks={} transport={} exec={} threads={} \
-             overlap={}",
+            "method={} backend={} kernel={} grid={}x{}x{} w={} ranks={} transport={} exec={} \
+             threads={} overlap={}",
             self.method.name(),
             self.backend.name(),
+            self.kernel.name(),
             self.grid.nx,
             self.grid.ny,
             self.grid.nz,
@@ -639,6 +670,11 @@ impl RunSpecBuilder {
         self
     }
 
+    pub fn kernel(mut self, kernel: KernelKind) -> Self {
+        self.spec.kernel = kernel;
+        self
+    }
+
     pub fn opts(mut self, opts: SolveOpts) -> Self {
         self.spec.opts = opts;
         self
@@ -694,6 +730,11 @@ impl RunSpecBuilder {
     pub fn backend_str(self, s: &str) -> Self {
         let parsed = s.parse::<BackendKind>();
         self.apply(parsed, |spec, b| spec.backend = b)
+    }
+
+    pub fn kernel_str(self, s: &str) -> Self {
+        let parsed = s.parse::<KernelKind>();
+        self.apply(parsed, |spec, k| spec.kernel = k)
     }
 
     fn apply<T>(mut self, parsed: Result<T, SpecError>, set: impl FnOnce(&mut RunSpec, T)) -> Self {
@@ -837,6 +878,29 @@ mod tests {
         assert!(spec.describe().contains("overlap=on"), "{}", spec.describe());
         let b = RunSpec::builder().overlap(true).build().unwrap();
         assert!(b.exec.overlap);
+    }
+
+    #[test]
+    fn kernel_parses_serialises_and_validates() {
+        // default + round-trip through JSON
+        let spec = RunSpec::from_json_str(r#"{"method":"cg"}"#).unwrap();
+        assert_eq!(spec.kernel, KernelKind::Ell);
+        for k in KernelKind::ALL {
+            let spec = RunSpec::builder().kernel(k).build().unwrap();
+            let back = RunSpec::from_json_str(&spec.to_json_string()).unwrap();
+            assert_eq!(back.kernel, k);
+            assert!(spec.describe().contains(&format!("kernel={}", k.name())));
+        }
+        // bad names get a suggestion
+        let err = RunSpec::builder().kernel_str("stencl").build().unwrap_err();
+        assert!(err.to_string().contains("stencil"), "{err}");
+        // xla executes the ELL artifacts only
+        let err = RunSpec::builder()
+            .backend_str("xla")
+            .kernel_str("csr")
+            .build()
+            .unwrap_err();
+        assert!(matches!(err, SpecError::Invalid { field: "kernel", .. }));
     }
 
     #[test]

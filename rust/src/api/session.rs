@@ -124,6 +124,11 @@ impl Session {
             cache, exec_cache, ..
         } = self;
         let pb = Self::problem_in(cache, spec.grid, spec.stencil, spec.ranks);
+        // kernel layout is a per-run switch on the cached assembly:
+        // derived layouts materialise once and the ELL buffers never
+        // move, so `assembly_ptr` identity (and the XLA literal cache)
+        // survive kernel changes between runs
+        pb.set_kernel(spec.kernel);
         let stats = match spec.backend {
             BackendKind::Native => {
                 let execs = Self::execs_in(exec_cache, &spec.exec, spec.ranks);
@@ -353,6 +358,33 @@ mod tests {
         assert_eq!(s.cached_executor_sets(), 2);
         s.clear_executors();
         assert_eq!(s.cached_executor_sets(), 0);
+    }
+
+    #[test]
+    fn kernel_switch_reuses_the_assembly() {
+        use crate::sparse::KernelKind;
+        let mut s = Session::new();
+        let ell = RunSpec::builder().grid_str("4x4x8").build().unwrap();
+        let a = s.run(&ell).unwrap();
+        let ptr = s.assembly_ptr(ell.grid, ell.stencil, 1).unwrap();
+        for k in KernelKind::ALL {
+            let spec = RunSpec::builder()
+                .grid_str("4x4x8")
+                .kernel(k)
+                .build()
+                .unwrap();
+            let b = s.run(&spec).unwrap();
+            assert_eq!(s.cached_problems(), 1, "kernel switch must not reassemble");
+            assert_eq!(
+                s.assembly_ptr(ell.grid, ell.stencil, 1),
+                Some(ptr),
+                "ELL buffers moved under kernel {}",
+                k.name()
+            );
+            for (x, y) in a.history.iter().zip(&b.history) {
+                assert_eq!(x.to_bits(), y.to_bits(), "kernel {} changed bits", k.name());
+            }
+        }
     }
 
     #[test]

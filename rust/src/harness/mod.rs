@@ -17,7 +17,7 @@ use crate::mesh::Grid3;
 use crate::simmpi::{TransportKind, WorldStats};
 use crate::simulator::{repeat_runs, simulate_run, ExecModel, RunConfig};
 use crate::solvers::{Method, SolveOpts, SolveStats};
-use crate::sparse::StencilKind;
+use crate::sparse::{KernelKind, StencilKind};
 use crate::stats::{median, strong_efficiency, weak_efficiency, BoxStats};
 use crate::trace::build_trace;
 use crate::util::Json;
@@ -86,6 +86,9 @@ pub struct HarnessOpts {
     /// real-numerics runs (`--overlap on`). Histories are bitwise
     /// identical either way (overlap determinism contract).
     pub overlap: bool,
+    /// Kernel layout for the real-numerics runs (`--kernel`). Histories
+    /// are bitwise identical across layouts (DESIGN.md §9).
+    pub kernel: KernelKind,
 }
 
 impl Default for HarnessOpts {
@@ -101,6 +104,7 @@ impl Default for HarnessOpts {
             ranks: 0,
             transport: TransportKind::Lockstep,
             overlap: false,
+            kernel: KernelKind::Ell,
         }
     }
 }
@@ -148,6 +152,7 @@ impl HarnessOpts {
             exec: self.exec_spec(),
             transport: self.transport,
             backend: BackendKind::Native,
+            kernel: self.kernel,
             opts,
         }
     }
@@ -169,6 +174,10 @@ impl HarnessOpts {
             Json::Str(self.transport.name().to_string()),
         );
         m.insert("overlap".to_string(), Json::Bool(self.overlap));
+        m.insert(
+            "kernel".to_string(),
+            Json::Str(self.kernel.name().to_string()),
+        );
         Json::Obj(m)
     }
 

@@ -10,7 +10,9 @@
 //! task block would dominate, and (b) as an independent cross-check of the
 //! XLA artifacts (tests/integration_xla.rs asserts both agree).
 
-use crate::sparse::{CsrMatrix, EllMatrix};
+use crate::sparse::{
+    CsrMatrix, EllMatrix, KernelKind, Operator, RowEntries, SellMatrix, StencilOp, SELL_C,
+};
 
 /// y[r0..r1] = A[r0..r1, :] · x_ext  (ELL layout).
 ///
@@ -360,6 +362,330 @@ pub fn gs_colour_sweep_blocked(
     res
 }
 
+/// y[r0..r1] = A[r0..r1, :] · x_ext  (SELL-4 layout, sell.rs).
+///
+/// §Perf: slices fully inside the range run the column-major 4-lane
+/// loop — four independent row accumulators advance through the slice's
+/// slots in lockstep, which the autovectoriser turns into f64x4
+/// loads/gathers/FMAs. Slices cut by the range boundary fall back to a
+/// per-row loop over the same storage (identical accumulation order, so
+/// chunking never changes bits).
+pub fn spmv_sell(a: &SellMatrix, x_ext: &[f64], y: &mut [f64], r0: usize, r1: usize) {
+    debug_assert_eq!(x_ext.len(), a.n_ext);
+    const C: usize = SELL_C;
+    let mut r = r0;
+    while r < r1 {
+        let s = r / C;
+        let chunk_end = ((s + 1) * C).min(a.n);
+        let base = a.slice_ptr[s];
+        let w = a.slice_w[s];
+        if r == s * C && chunk_end == s * C + C && chunk_end <= r1 {
+            let mut acc = [0.0f64; C];
+            for j in 0..w {
+                let o = base + j * C;
+                let vs = &a.vals[o..o + C];
+                let cs = &a.cols[o..o + C];
+                for k in 0..C {
+                    acc[k] += vs[k] * x_ext[cs[k] as usize];
+                }
+            }
+            y[r..r + C].copy_from_slice(&acc);
+            r += C;
+        } else {
+            let hi = r1.min(chunk_end);
+            while r < hi {
+                let k = r - s * C;
+                let mut acc = 0.0;
+                for j in 0..w {
+                    let o = base + j * C + k;
+                    acc += a.vals[o] * x_ext[a.cols[o] as usize];
+                }
+                y[r] = acc;
+                r += 1;
+            }
+        }
+    }
+}
+
+/// y[r0..r1] = A[r0..r1, :] · x_ext  (matrix-free stencil, stencil.rs).
+///
+/// §Perf: interior rows (whole neighbourhood owned) use fixed strides
+/// into x_ext and literal coefficients — no matrix loads at all, which
+/// is where the ≥2× single-thread win over CSR/ELL comes from on
+/// bandwidth-bound grids. Boundary rows take the O(1)-per-neighbour
+/// slow path. Grid coordinates are tracked incrementally (no divmod per
+/// row).
+pub fn spmv_stencil(s: &StencilOp, x_ext: &[f64], y: &mut [f64], r0: usize, r1: usize) {
+    debug_assert_eq!(x_ext.len(), s.n_ext());
+    match s.offs.len() {
+        7 => spmv_stencil_w::<7>(s, x_ext, y, r0, r1),
+        27 => spmv_stencil_w::<27>(s, x_ext, y, r0, r1),
+        _ => spmv_stencil_generic(s, x_ext, y, r0, r1),
+    }
+}
+
+#[inline(always)]
+fn spmv_stencil_w<const W: usize>(
+    s: &StencilOp,
+    x_ext: &[f64],
+    y: &mut [f64],
+    r0: usize,
+    r1: usize,
+) {
+    let g = s.part.grid;
+    let (nx, ny) = (g.nx, g.ny);
+    let plane = g.plane();
+    let mut deltas = [0isize; W];
+    deltas.copy_from_slice(&s.deltas);
+    let mut cx = r0 % nx;
+    let mut cy = (r0 / nx) % ny;
+    let mut cz = s.part.z0 + r0 / plane;
+    for r in r0..r1 {
+        if s.is_fast(cx, cy, cz) {
+            // same term order as the ELL row: diagonal first, then the
+            // neighbours in offset order (all present — no fill here)
+            let mut acc = 0.0;
+            acc += s.diag_val * x_ext[r];
+            for d in deltas.iter().skip(1) {
+                acc -= x_ext[(r as isize + d) as usize];
+            }
+            y[r] = acc;
+        } else {
+            y[r] = s.row_dot_slow(x_ext, cx, cy, cz);
+        }
+        cx += 1;
+        if cx == nx {
+            cx = 0;
+            cy += 1;
+            if cy == ny {
+                cy = 0;
+                cz += 1;
+            }
+        }
+    }
+}
+
+fn spmv_stencil_generic(s: &StencilOp, x_ext: &[f64], y: &mut [f64], r0: usize, r1: usize) {
+    for i in r0..r1 {
+        let mut acc = 0.0;
+        s.for_row(i, |v, c| acc += v * x_ext[c]);
+        y[i] = acc;
+    }
+}
+
+// ---------------------------------------------------------------------
+// Backend dispatchers: every matrix-consuming kernel has an
+// Operator-level entry point that routes to the layout selected by
+// `RunSpec::kernel`. Per-row accumulation order is identical in all
+// four layouts (see `sparse::RowEntries`), so the dispatch is invisible
+// in the results — only in the memory traffic. These are the functions
+// the `Native` backend and the executor's parallel paths call.
+// ---------------------------------------------------------------------
+
+/// y[r0..r1] = A[r0..r1, :] · x_ext on the operator's active layout.
+pub fn spmv(a: &Operator, x_ext: &[f64], y: &mut [f64], r0: usize, r1: usize) {
+    match a.kernel() {
+        KernelKind::Ell => spmv_ell(a, x_ext, y, r0, r1),
+        KernelKind::Csr => spmv_csr(a.csr(), x_ext, y, r0, r1),
+        KernelKind::Sell => spmv_sell(a.sell(), x_ext, y, r0, r1),
+        KernelKind::Stencil => spmv_stencil(a.stencil(), x_ext, y, r0, r1),
+    }
+}
+
+/// One Jacobi sweep on the operator's active layout (see `jacobi_sweep`).
+pub fn jacobi_sweep_op(
+    a: &Operator,
+    b: &[f64],
+    x_ext: &[f64],
+    x_new: &mut [f64],
+    r0: usize,
+    r1: usize,
+) -> f64 {
+    match a.kernel() {
+        KernelKind::Ell => jacobi_sweep(a, b, x_ext, x_new, r0, r1),
+        KernelKind::Csr => jacobi_rows(a.csr(), &a.diag, b, x_ext, x_new, r0, r1),
+        KernelKind::Sell => jacobi_rows(a.sell(), &a.diag, b, x_ext, x_new, r0, r1),
+        KernelKind::Stencil => jacobi_rows(a.stencil(), &a.diag, b, x_ext, x_new, r0, r1),
+    }
+}
+
+/// Ordered in-place GS sweep on the operator's active layout
+/// (see `gs_sweep`).
+pub fn gs_sweep_op<I: Iterator<Item = usize>>(
+    a: &Operator,
+    b: &[f64],
+    x_ext: &mut [f64],
+    order: I,
+) -> f64 {
+    match a.kernel() {
+        KernelKind::Ell => gs_sweep(a, b, x_ext, order),
+        KernelKind::Csr => gs_rows(a.csr(), &a.diag, b, x_ext, order),
+        KernelKind::Sell => gs_rows(a.sell(), &a.diag, b, x_ext, order),
+        KernelKind::Stencil => gs_rows(a.stencil(), &a.diag, b, x_ext, order),
+    }
+}
+
+/// Coloured GS half-sweep on the operator's active layout
+/// (see `gs_colour_sweep`).
+pub fn gs_colour_sweep_op(
+    a: &Operator,
+    b: &[f64],
+    mask: &[bool],
+    colour: bool,
+    x_ext: &mut [f64],
+    r0: usize,
+    r1: usize,
+) -> f64 {
+    match a.kernel() {
+        KernelKind::Ell => gs_colour_sweep(a, b, mask, colour, x_ext, r0, r1),
+        KernelKind::Csr => gs_colour_rows(a.csr(), &a.diag, b, mask, colour, x_ext, r0, r1),
+        KernelKind::Sell => gs_colour_rows(a.sell(), &a.diag, b, mask, colour, x_ext, r0, r1),
+        KernelKind::Stencil => gs_colour_rows(a.stencil(), &a.diag, b, mask, colour, x_ext, r0, r1),
+    }
+}
+
+/// Blocked coloured GS half-sweep on the operator's active layout
+/// (see `gs_colour_sweep_blocked`).
+#[allow(clippy::too_many_arguments)]
+pub fn gs_colour_sweep_blocked_op(
+    a: &Operator,
+    b: &[f64],
+    mask: &[bool],
+    colour: bool,
+    x_ext: &mut [f64],
+    x_old: &[f64],
+    r0: usize,
+    r1: usize,
+) -> f64 {
+    match a.kernel() {
+        KernelKind::Ell => gs_colour_sweep_blocked(a, b, mask, colour, x_ext, x_old, r0, r1),
+        KernelKind::Csr => {
+            gs_colour_blocked_rows(a.csr(), a.n, &a.diag, b, mask, colour, x_ext, x_old, r0, r1)
+        }
+        KernelKind::Sell => {
+            gs_colour_blocked_rows(a.sell(), a.n, &a.diag, b, mask, colour, x_ext, x_old, r0, r1)
+        }
+        KernelKind::Stencil => gs_colour_blocked_rows(
+            a.stencil(),
+            a.n,
+            &a.diag,
+            b,
+            mask,
+            colour,
+            x_ext,
+            x_old,
+            r0,
+            r1,
+        ),
+    }
+}
+
+/// Jacobi sweep body over any layout's row visitor.
+#[inline(always)]
+fn jacobi_rows<M: RowEntries>(
+    m: &M,
+    diag: &[f64],
+    b: &[f64],
+    x_ext: &[f64],
+    x_new: &mut [f64],
+    r0: usize,
+    r1: usize,
+) -> f64 {
+    let mut res = 0.0;
+    for i in r0..r1 {
+        let mut ax = 0.0;
+        m.for_row(i, |v, c| ax += v * x_ext[c]);
+        let r = b[i] - ax;
+        res += r * r;
+        x_new[i] = x_ext[i] + r / diag[i];
+    }
+    res
+}
+
+/// Live in-place GS body over any layout's row visitor.
+#[inline(always)]
+fn gs_rows<M: RowEntries, I: Iterator<Item = usize>>(
+    m: &M,
+    diag: &[f64],
+    b: &[f64],
+    x_ext: &mut [f64],
+    order: I,
+) -> f64 {
+    let mut res = 0.0;
+    for i in order {
+        let mut ax = 0.0;
+        m.for_row(i, |v, c| ax += v * x_ext[c]);
+        let r = b[i] - ax;
+        res += r * r;
+        x_ext[i] += r / diag[i];
+    }
+    res
+}
+
+/// Coloured GS body over any layout's row visitor.
+#[inline(always)]
+#[allow(clippy::too_many_arguments)]
+fn gs_colour_rows<M: RowEntries>(
+    m: &M,
+    diag: &[f64],
+    b: &[f64],
+    mask: &[bool],
+    colour: bool,
+    x_ext: &mut [f64],
+    r0: usize,
+    r1: usize,
+) -> f64 {
+    let mut res = 0.0;
+    for i in r0..r1 {
+        if mask[i] != colour {
+            continue;
+        }
+        let mut ax = 0.0;
+        m.for_row(i, |v, c| ax += v * x_ext[c]);
+        let r = b[i] - ax;
+        res += r * r;
+        x_ext[i] += r / diag[i];
+    }
+    res
+}
+
+/// Blocked coloured GS body over any layout's row visitor (snapshot
+/// semantics of `gs_colour_sweep_blocked`).
+#[inline(always)]
+#[allow(clippy::too_many_arguments)]
+fn gs_colour_blocked_rows<M: RowEntries>(
+    m: &M,
+    n: usize,
+    diag: &[f64],
+    b: &[f64],
+    mask: &[bool],
+    colour: bool,
+    x_ext: &mut [f64],
+    x_old: &[f64],
+    r0: usize,
+    r1: usize,
+) -> f64 {
+    let mut res = 0.0;
+    for i in r0..r1 {
+        if mask[i] != colour {
+            continue;
+        }
+        let mut ax = 0.0;
+        m.for_row(i, |v, c| {
+            let xv = if (c >= r0 && c < r1) || c >= n {
+                x_ext[c]
+            } else {
+                x_old[c]
+            };
+            ax += v * xv;
+        });
+        let r = b[i] - ax;
+        res += r * r;
+        x_ext[i] += r / diag[i];
+    }
+    res
+}
+
 /// Residual r = b - A·x over the whole local range; returns ||r||² partial.
 pub fn residual(a: &EllMatrix, b: &[f64], x_ext: &[f64], r: &mut [f64]) -> f64 {
     let mut acc = 0.0;
@@ -532,6 +858,99 @@ mod tests {
         }
         for i in 0..sys.n() {
             assert!((x[i] - 1.0).abs() < 1e-8, "x[{i}]={}", x[i]);
+        }
+    }
+
+    /// Randomise owned + halo entries of an extended vector; the zero
+    /// pad slot stays 0 (solver invariant all backends rely on).
+    fn randomised_ext(sys: &LocalSystem, seed: u64) -> Vec<f64> {
+        let mut rng = Rng::new(seed);
+        let mut x = sys.new_ext();
+        let last = x.len() - 1;
+        for v in x.iter_mut().take(last) {
+            *v = rng.normal();
+        }
+        x
+    }
+
+    #[test]
+    fn spmv_backends_bitwise_identical() {
+        for kind in [StencilKind::P7, StencilKind::P27] {
+            for (rank, nranks) in [(0, 1), (0, 3), (1, 3), (2, 3)] {
+                let mut sys = LocalSystem::build(Grid3::new(5, 4, 9), kind, rank, nranks);
+                let x = randomised_ext(&sys, 17);
+                let mut want = vec![0.0; sys.n()];
+                spmv(&sys.a, &x, &mut want, 0, sys.n());
+                for k in KernelKind::ALL {
+                    sys.a.set_kernel(k);
+                    let mut y = vec![0.0; sys.n()];
+                    // odd-sized blocks exercise the partial-slice and
+                    // boundary-row paths
+                    let mut r0 = 0;
+                    while r0 < sys.n() {
+                        let r1 = (r0 + 5).min(sys.n());
+                        spmv(&sys.a, &x, &mut y, r0, r1);
+                        r0 = r1;
+                    }
+                    for i in 0..sys.n() {
+                        assert_eq!(
+                            want[i].to_bits(),
+                            y[i].to_bits(),
+                            "{k:?} {kind:?} rank {rank}/{nranks} row {i}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn sweep_backends_bitwise_identical() {
+        let grid = Grid3::new(5, 4, 9);
+        for kind in [StencilKind::P7, StencilKind::P27] {
+            let mut sys = LocalSystem::build(grid, kind, 1, 3);
+            let x0 = randomised_ext(&sys, 23);
+            let n = sys.n();
+            let snapshot = x0.clone();
+            let mut reference: Option<[(Vec<f64>, f64); 4]> = None;
+            for k in KernelKind::ALL {
+                sys.a.set_kernel(k);
+                let mut xj = vec![0.0; n];
+                let rj = jacobi_sweep_op(&sys.a, &sys.b, &x0, &mut xj, 0, n);
+                let mut xg = x0.clone();
+                let rg = gs_sweep_op(&sys.a, &sys.b, &mut xg, 0..n)
+                    + gs_sweep_op(&sys.a, &sys.b, &mut xg, (0..n).rev());
+                let mut xc = x0.clone();
+                let rc = gs_colour_sweep_op(&sys.a, &sys.b, &sys.red_mask, true, &mut xc, 0, n)
+                    + gs_colour_sweep_op(&sys.a, &sys.b, &sys.red_mask, false, &mut xc, 0, n);
+                let mut xb = x0.clone();
+                let rb = gs_colour_sweep_blocked_op(
+                    &sys.a,
+                    &sys.b,
+                    &sys.red_mask,
+                    true,
+                    &mut xb,
+                    &snapshot,
+                    n / 3,
+                    2 * n / 3,
+                );
+                let got = [(xj, rj), (xg, rg), (xc, rc), (xb, rb)];
+                match &reference {
+                    None => reference = Some(got),
+                    Some(want) => {
+                        for (s, ((wx, wr), (gx, gr))) in want.iter().zip(&got).enumerate() {
+                            assert_eq!(wr.to_bits(), gr.to_bits(), "{k:?} sweep {s} residual");
+                            for (i, (a, b)) in wx.iter().zip(gx).enumerate() {
+                                assert_eq!(
+                                    a.to_bits(),
+                                    b.to_bits(),
+                                    "{k:?} {kind:?} sweep {s} row {i}"
+                                );
+                            }
+                        }
+                    }
+                }
+            }
         }
     }
 

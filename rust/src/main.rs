@@ -35,6 +35,7 @@ use hlam::harness::{self, HarnessOpts};
 use hlam::runtime::Runtime;
 use hlam::simmpi::TransportKind;
 use hlam::solvers::SolveOpts;
+use hlam::sparse::KernelKind;
 use hlam::util::Args;
 
 fn main() -> ExitCode {
@@ -73,6 +74,7 @@ fn usage() {
          solve   --method cg|cg-nb|bicgstab|bicgstab-b1|jacobi|gs|gs-rb|gs-relaxed\n\
         \x20        --grid NXxNYxNZ --stencil 7|27 --ranks N --backend native|xla\n\
         \x20        --transport lockstep|threaded --exec seq|fork-join|task --threads N\n\
+        \x20        --kernel csr|ell|sell|stencil (matrix layout; bitwise-identical results)\n\
         \x20        --overlap on|off (hide halo exchanges behind interior compute)\n\
         \x20        --eps 1e-6 --ntasks N --task-seed S --artifacts DIR\n\
         \x20        --spec FILE (replay a saved run) --emit-spec [FILE] (save/print it)\n\
@@ -163,6 +165,7 @@ fn resolve_spec(args: &Args) -> Result<RunSpec, CliError> {
         .overlap(parse_overlap(args)?)
         .transport_str(&args.str_or("transport", "lockstep"))
         .backend_str(&args.str_or("backend", "native"))
+        .kernel_str(&args.str_or("kernel", "ell"))
         .opts(opts)
         .build()?;
     Ok(spec)
@@ -228,6 +231,7 @@ fn cmd_figures(args: &Args) -> Result<(), CliError> {
         ranks: num(args, "ranks", 0)?,
         transport: parse_arg::<TransportKind>(args, "transport", "lockstep")?,
         overlap: parse_overlap(args)?,
+        kernel: parse_arg::<KernelKind>(args, "kernel", "ell")?,
         ..Default::default()
     };
     let which = if args.flag("all") {

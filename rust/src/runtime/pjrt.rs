@@ -17,7 +17,7 @@ use anyhow::{anyhow, bail, Context, Result};
 
 use crate::kernels;
 use crate::solvers::Compute;
-use crate::sparse::EllMatrix;
+use crate::sparse::Operator;
 use crate::util::Json;
 
 /// Loaded artifact set: manifest + lazily compiled executables.
@@ -206,7 +206,7 @@ impl XlaCompute {
     /// Build or reuse the literal form of the matrix operands.
     fn with_matrix<R>(
         &self,
-        a: &EllMatrix,
+        a: &Operator,
         f: impl FnOnce(&xla::Literal, &xla::Literal, &xla::Literal) -> R,
     ) -> R {
         assert_eq!(a.n, self.n, "matrix size != artifact size");
@@ -229,7 +229,7 @@ impl XlaCompute {
 }
 
 impl Compute for XlaCompute {
-    fn spmv(&mut self, a: &EllMatrix, x_ext: &[f64], y: &mut [f64], r0: usize, r1: usize) {
+    fn spmv(&mut self, a: &Operator, x_ext: &[f64], y: &mut [f64], r0: usize, r1: usize) {
         if !self.whole(r0, r1) {
             return kernels::spmv_ell(a, x_ext, y, r0, r1);
         }
@@ -309,7 +309,7 @@ impl Compute for XlaCompute {
 
     fn jacobi_step(
         &mut self,
-        a: &EllMatrix,
+        a: &Operator,
         b: &[f64],
         x_ext: &[f64],
         x_new: &mut [f64],
@@ -329,7 +329,7 @@ impl Compute for XlaCompute {
 
     fn gs_colour_sweep(
         &mut self,
-        a: &EllMatrix,
+        a: &Operator,
         b: &[f64],
         mask: &[bool],
         colour: bool,
@@ -354,7 +354,7 @@ impl Compute for XlaCompute {
 
     fn gs_colour_sweep_blocked(
         &mut self,
-        a: &EllMatrix,
+        a: &Operator,
         b: &[f64],
         mask: &[bool],
         colour: bool,

@@ -9,7 +9,7 @@ use std::path::Path;
 use std::rc::Rc;
 
 use crate::solvers::Compute;
-use crate::sparse::EllMatrix;
+use crate::sparse::Operator;
 
 /// Load/execution error of the stub runtime. Displays the same guidance
 /// the real runtime gives for a missing artifact directory.
@@ -83,7 +83,7 @@ impl XlaCompute {
 }
 
 impl Compute for XlaCompute {
-    fn spmv(&mut self, _a: &EllMatrix, _x_ext: &[f64], _y: &mut [f64], _r0: usize, _r1: usize) {
+    fn spmv(&mut self, _a: &Operator, _x_ext: &[f64], _y: &mut [f64], _r0: usize, _r1: usize) {
         unreachable!("stub XlaCompute cannot be constructed")
     }
 
@@ -124,7 +124,7 @@ impl Compute for XlaCompute {
 
     fn jacobi_step(
         &mut self,
-        _a: &EllMatrix,
+        _a: &Operator,
         _b: &[f64],
         _x_ext: &[f64],
         _x_new: &mut [f64],
@@ -136,7 +136,7 @@ impl Compute for XlaCompute {
 
     fn gs_colour_sweep(
         &mut self,
-        _a: &EllMatrix,
+        _a: &Operator,
         _b: &[f64],
         _mask: &[bool],
         _colour: bool,
@@ -149,7 +149,7 @@ impl Compute for XlaCompute {
 
     fn gs_colour_sweep_blocked(
         &mut self,
-        _a: &EllMatrix,
+        _a: &Operator,
         _b: &[f64],
         _mask: &[bool],
         _colour: bool,

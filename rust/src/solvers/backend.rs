@@ -20,11 +20,11 @@
 //!    Compute`.
 
 use crate::kernels;
-use crate::sparse::EllMatrix;
+use crate::sparse::Operator;
 
 pub trait Compute {
     /// y[r0..r1) = A[r0..r1) · x_ext.
-    fn spmv(&mut self, a: &EllMatrix, x_ext: &[f64], y: &mut [f64], r0: usize, r1: usize);
+    fn spmv(&mut self, a: &Operator, x_ext: &[f64], y: &mut [f64], r0: usize, r1: usize);
 
     /// Partial of x·y over [r0, r1).
     fn dot(&mut self, x: &[f64], y: &[f64], r0: usize, r1: usize) -> f64;
@@ -63,7 +63,7 @@ pub trait Compute {
     /// of the incoming x.
     fn jacobi_step(
         &mut self,
-        a: &EllMatrix,
+        a: &Operator,
         b: &[f64],
         x_ext: &[f64],
         x_new: &mut [f64],
@@ -76,7 +76,7 @@ pub trait Compute {
     #[allow(clippy::too_many_arguments)]
     fn gs_colour_sweep(
         &mut self,
-        a: &EllMatrix,
+        a: &Operator,
         b: &[f64],
         mask: &[bool],
         colour: bool,
@@ -91,7 +91,7 @@ pub trait Compute {
     #[allow(clippy::too_many_arguments)]
     fn gs_colour_sweep_blocked(
         &mut self,
-        a: &EllMatrix,
+        a: &Operator,
         b: &[f64],
         mask: &[bool],
         colour: bool,
@@ -124,8 +124,8 @@ pub trait Compute {
 pub struct Native;
 
 impl Compute for Native {
-    fn spmv(&mut self, a: &EllMatrix, x_ext: &[f64], y: &mut [f64], r0: usize, r1: usize) {
-        kernels::spmv_ell(a, x_ext, y, r0, r1);
+    fn spmv(&mut self, a: &Operator, x_ext: &[f64], y: &mut [f64], r0: usize, r1: usize) {
+        kernels::spmv(a, x_ext, y, r0, r1);
     }
 
     fn dot(&mut self, x: &[f64], y: &[f64], r0: usize, r1: usize) -> f64 {
@@ -165,19 +165,19 @@ impl Compute for Native {
 
     fn jacobi_step(
         &mut self,
-        a: &EllMatrix,
+        a: &Operator,
         b: &[f64],
         x_ext: &[f64],
         x_new: &mut [f64],
         r0: usize,
         r1: usize,
     ) -> f64 {
-        kernels::jacobi_sweep(a, b, x_ext, x_new, r0, r1)
+        kernels::jacobi_sweep_op(a, b, x_ext, x_new, r0, r1)
     }
 
     fn gs_colour_sweep(
         &mut self,
-        a: &EllMatrix,
+        a: &Operator,
         b: &[f64],
         mask: &[bool],
         colour: bool,
@@ -185,12 +185,12 @@ impl Compute for Native {
         r0: usize,
         r1: usize,
     ) -> f64 {
-        kernels::gs_colour_sweep(a, b, mask, colour, x_ext, r0, r1)
+        kernels::gs_colour_sweep_op(a, b, mask, colour, x_ext, r0, r1)
     }
 
     fn gs_colour_sweep_blocked(
         &mut self,
-        a: &EllMatrix,
+        a: &Operator,
         b: &[f64],
         mask: &[bool],
         colour: bool,
@@ -199,7 +199,7 @@ impl Compute for Native {
         r0: usize,
         r1: usize,
     ) -> f64 {
-        kernels::gs_colour_sweep_blocked(a, b, mask, colour, x_ext, x_old, r0, r1)
+        kernels::gs_colour_sweep_blocked_op(a, b, mask, colour, x_ext, x_old, r0, r1)
     }
 
     fn thread_safe(&self) -> bool {

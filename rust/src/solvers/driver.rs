@@ -37,7 +37,7 @@ use crate::exec::{fold_mut, Executor, IterationWorkspace, Reduction, SharedRows}
 use crate::kernels;
 use crate::mesh::HaloMap;
 use crate::simmpi::{isodd, Comm, HaloExchange, Payload, Tag, Transport};
-use crate::sparse::EllMatrix;
+use crate::sparse::Operator;
 
 use super::{completion_order, Compute, HaloVec, Observer, RankState, SolveOpts, SolveStats};
 
@@ -475,7 +475,7 @@ impl Ops<'_> {
     /// [`Ops::blocks`]).
     fn plain_plan_interior(
         &mut self,
-        a: &EllMatrix,
+        a: &Operator,
     ) -> (std::rc::Rc<[(usize, usize)]>, (usize, usize)) {
         let parts = self.exec.nchunks(a.n, self.backend.max_chunks());
         let blocks = self.ws.plan(a.n, parts);
@@ -488,7 +488,7 @@ impl Ops<'_> {
     /// reducing operations).
     fn ordered_plan_interior(
         &mut self,
-        a: &EllMatrix,
+        a: &Operator,
         key: usize,
     ) -> (std::rc::Rc<[(usize, usize)]>, Reduction, (usize, usize)) {
         let parts = if self.opts.ntasks > 0 {
@@ -534,7 +534,7 @@ impl Ops<'_> {
     /// Halo exchange of `x_ext` fused with y = A·x_ext.
     pub fn halo_spmv(
         &mut self,
-        a: &EllMatrix,
+        a: &Operator,
         halo: &HaloMap,
         tp: &mut dyn Transport,
         x_ext: &mut [f64],
@@ -567,7 +567,7 @@ impl Ops<'_> {
                     // SAFETY: see the overlap safety block above.
                     let x = unsafe { xs.full() };
                     let y = unsafe { rows.full() };
-                    kernels::spmv_ell(a, x, y, r0, r1);
+                    kernels::spmv(a, x, y, r0, r1);
                 },
                 &mut finish,
             );
@@ -588,7 +588,7 @@ impl Ops<'_> {
     #[allow(clippy::too_many_arguments)]
     pub fn halo_spmv_dot(
         &mut self,
-        a: &EllMatrix,
+        a: &Operator,
         halo: &HaloMap,
         tp: &mut dyn Transport,
         x_ext: &mut [f64],
@@ -626,7 +626,7 @@ impl Ops<'_> {
                     // SAFETY: this chunk's y rows are written only here;
                     // the dot reads them back plus owned indices of x/p.
                     let yv = unsafe { rows.full() };
-                    kernels::spmv_ell(a, x, yv, r0, r1);
+                    kernels::spmv(a, x, yv, r0, r1);
                     let pv: &[f64] = match p {
                         DotWith::Exchanged => x,
                         DotWith::Slice(s) => s,
@@ -667,7 +667,7 @@ impl Ops<'_> {
     #[allow(clippy::too_many_arguments)]
     pub fn halo_jacobi_step(
         &mut self,
-        a: &EllMatrix,
+        a: &Operator,
         b: &[f64],
         halo: &HaloMap,
         tp: &mut dyn Transport,
@@ -701,7 +701,7 @@ impl Ops<'_> {
                     // SAFETY: this chunk's x_new rows are written only
                     // here.
                     let xn = unsafe { rows.full() };
-                    kernels::jacobi_sweep(a, b, x, xn, r0, r1)
+                    kernels::jacobi_sweep_op(a, b, x, xn, r0, r1)
                 },
             )
         } else {
@@ -733,7 +733,7 @@ impl Ops<'_> {
     #[allow(clippy::too_many_arguments)]
     pub fn halo_gs_colour_blocked(
         &mut self,
-        a: &EllMatrix,
+        a: &Operator,
         b: &[f64],
         mask: &[bool],
         colour: bool,
@@ -768,7 +768,7 @@ impl Ops<'_> {
                 &|x, _bi, r0, r1| {
                     // this chunk writes only its own rows of x; cross-
                     // chunk same-colour couplings read the snapshot
-                    kernels::gs_colour_sweep_blocked(a, b, mask, colour, x, x_old, r0, r1)
+                    kernels::gs_colour_sweep_blocked_op(a, b, mask, colour, x, x_old, r0, r1)
                 },
             )
         } else {
@@ -793,7 +793,7 @@ impl Ops<'_> {
     }
 
     /// y[0..n) = A·x_ext.
-    pub fn spmv(&mut self, a: &EllMatrix, x_ext: &[f64], y: &mut [f64]) {
+    pub fn spmv(&mut self, a: &Operator, x_ext: &[f64], y: &mut [f64]) {
         let blocks = self.blocks(a.n);
         let rows = SharedRows::new(y);
         self.for_each_op(
@@ -801,7 +801,7 @@ impl Ops<'_> {
             |r0, r1| {
                 // SAFETY: chunks write disjoint row ranges of y.
                 let y = unsafe { rows.full() };
-                kernels::spmv_ell(a, x_ext, y, r0, r1);
+                kernels::spmv(a, x_ext, y, r0, r1);
             },
             |b, r0, r1| b.spmv(a, x_ext, y, r0, r1),
         );
@@ -875,7 +875,7 @@ impl Ops<'_> {
     /// real dependency edge instead of an inter-kernel barrier.
     pub fn spmv_dot_ordered(
         &mut self,
-        a: &EllMatrix,
+        a: &Operator,
         x_ext: &[f64],
         y: &mut [f64],
         p: &[f64],
@@ -891,7 +891,7 @@ impl Ops<'_> {
                 &|_, r0, r1| {
                     // SAFETY: chunks write disjoint row ranges of y.
                     let y = unsafe { rows.full() };
-                    kernels::spmv_ell(a, x_ext, y, r0, r1);
+                    kernels::spmv(a, x_ext, y, r0, r1);
                 },
                 &|_, r0, r1| {
                     // SAFETY: reads this chunk's rows, written by its own
@@ -987,7 +987,7 @@ impl Ops<'_> {
     /// One Jacobi sweep (fused with the residual partial), §3.3-ordered.
     pub fn jacobi_step_ordered(
         &mut self,
-        a: &EllMatrix,
+        a: &Operator,
         b: &[f64],
         x_ext: &[f64],
         x_new: &mut [f64],
@@ -1001,7 +1001,7 @@ impl Ops<'_> {
             |r0, r1| {
                 // SAFETY: chunks write disjoint row ranges of x_new.
                 let x_new = unsafe { rows.full() };
-                kernels::jacobi_sweep(a, b, x_ext, x_new, r0, r1)
+                kernels::jacobi_sweep_op(a, b, x_ext, x_new, r0, r1)
             },
             |be, r0, r1| be.jacobi_step(a, b, x_ext, x_new, r0, r1),
         )
@@ -1011,7 +1011,7 @@ impl Ops<'_> {
     /// live sequential semantics — not chunkable, single backend call.
     pub fn gs_colour_whole(
         &mut self,
-        a: &EllMatrix,
+        a: &Operator,
         b: &[f64],
         mask: &[bool],
         colour: bool,
@@ -1026,7 +1026,7 @@ impl Ops<'_> {
     #[allow(clippy::too_many_arguments)]
     pub fn gs_colour_blocked_ordered(
         &mut self,
-        a: &EllMatrix,
+        a: &Operator,
         b: &[f64],
         mask: &[bool],
         colour: bool,
@@ -1044,7 +1044,7 @@ impl Ops<'_> {
                 // cross-chunk couplings read the snapshot x_old, and the
                 // halo region (rows >= n) is read-only during the sweep.
                 let x_ext = unsafe { rows.full() };
-                kernels::gs_colour_sweep_blocked(a, b, mask, colour, x_ext, x_old, r0, r1)
+                kernels::gs_colour_sweep_blocked_op(a, b, mask, colour, x_ext, x_old, r0, r1)
             },
             |be, r0, r1| be.gs_colour_sweep_blocked(a, b, mask, colour, x_ext, x_old, r0, r1),
         )

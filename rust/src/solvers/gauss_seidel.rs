@@ -108,9 +108,9 @@ fn sweep(
             // true sequential GS over the local rows
             ops.exchange(st, tp, HaloVec::X, phase);
             if forward {
-                kernels::gs_sweep(&st.sys.a, &st.sys.b, &mut st.x_ext, 0..n)
+                kernels::gs_sweep_op(&st.sys.a, &st.sys.b, &mut st.x_ext, 0..n)
             } else {
-                kernels::gs_sweep(&st.sys.a, &st.sys.b, &mut st.x_ext, (0..n).rev())
+                kernels::gs_sweep_op(&st.sys.a, &st.sys.b, &mut st.x_ext, (0..n).rev())
             }
         }
         GsVariant::RedBlack => {
@@ -190,9 +190,9 @@ fn sweep(
             for &bi in &order {
                 let (r0, r1) = blocks[bi];
                 res += if forward {
-                    kernels::gs_sweep(&st.sys.a, &st.sys.b, &mut st.x_ext, r0..r1)
+                    kernels::gs_sweep_op(&st.sys.a, &st.sys.b, &mut st.x_ext, r0..r1)
                 } else {
-                    kernels::gs_sweep(&st.sys.a, &st.sys.b, &mut st.x_ext, (r0..r1).rev())
+                    kernels::gs_sweep_op(&st.sys.a, &st.sys.b, &mut st.x_ext, (r0..r1).rev())
                 };
             }
             res

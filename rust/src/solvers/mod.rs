@@ -49,7 +49,7 @@ use std::sync::Mutex;
 use crate::exec::{ExecSpec, Executor};
 use crate::mesh::Grid3;
 use crate::simmpi::{run_ranks, RankTransport, Transport, TransportKind, WorldStats};
-use crate::sparse::{EllMatrix, LocalSystem, StencilKind};
+use crate::sparse::{KernelKind, LocalSystem, Operator, StencilKind};
 use crate::util::Rng;
 
 /// Which algorithm to run.
@@ -302,7 +302,7 @@ impl SharedBackend<'_, '_> {
 }
 
 impl Compute for SharedBackend<'_, '_> {
-    fn spmv(&mut self, a: &EllMatrix, x_ext: &[f64], y: &mut [f64], r0: usize, r1: usize) {
+    fn spmv(&mut self, a: &Operator, x_ext: &[f64], y: &mut [f64], r0: usize, r1: usize) {
         self.with(|b| b.spmv(a, x_ext, y, r0, r1))
     }
 
@@ -343,7 +343,7 @@ impl Compute for SharedBackend<'_, '_> {
 
     fn jacobi_step(
         &mut self,
-        a: &EllMatrix,
+        a: &Operator,
         b: &[f64],
         x_ext: &[f64],
         x_new: &mut [f64],
@@ -355,7 +355,7 @@ impl Compute for SharedBackend<'_, '_> {
 
     fn gs_colour_sweep(
         &mut self,
-        a: &EllMatrix,
+        a: &Operator,
         b: &[f64],
         mask: &[bool],
         colour: bool,
@@ -368,7 +368,7 @@ impl Compute for SharedBackend<'_, '_> {
 
     fn gs_colour_sweep_blocked(
         &mut self,
-        a: &EllMatrix,
+        a: &Operator,
         b: &[f64],
         mask: &[bool],
         colour: bool,
@@ -420,6 +420,18 @@ impl Problem {
 
     pub fn nranks(&self) -> usize {
         self.ranks.len()
+    }
+
+    /// Select the kernel layout every rank's operator executes
+    /// (`RunSpec::kernel`). Derived layouts are materialised once per
+    /// rank on first selection; the canonical ELL buffers never move, so
+    /// assembly caches keyed on their pointers stay valid. Backends
+    /// produce bitwise-identical histories regardless of this switch
+    /// (DESIGN.md §9).
+    pub fn set_kernel(&mut self, kernel: KernelKind) {
+        for st in &mut self.ranks {
+            st.sys.a.set_kernel(kernel);
+        }
     }
 
     /// Max |x - 1| across all ranks (exact solution of the HPCG system).

@@ -21,7 +21,7 @@
 //! holds across rank boundaries without communication).
 
 use crate::mesh::{Grid3, HaloMap, Partition};
-use crate::sparse::EllMatrix;
+use crate::sparse::{EllMatrix, Operator, StencilOp};
 
 /// Stencil pattern selector (the two sparsity levels of the paper).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -82,7 +82,9 @@ pub fn stencil_offsets(kind: StencilKind) -> Vec<(i64, i64, i64)> {
 pub struct LocalSystem {
     pub part: Partition,
     pub kind: StencilKind,
-    pub a: EllMatrix,
+    /// Local operator: canonical ELL image + selectable kernel layouts
+    /// (always carries the matrix-free stencil twin, built below).
+    pub a: Operator,
     /// Local rhs (b = A·1 globally).
     pub b: Vec<f64>,
     pub halo: HaloMap,
@@ -144,10 +146,11 @@ impl LocalSystem {
             b[lrow] = bsum;
         }
         let halo = part.halo_map();
+        let stencil = StencilOp::new(part.clone(), kind, diag_val);
         LocalSystem {
             part,
             kind,
-            a,
+            a: Operator::with_stencil(a, stencil),
             b,
             halo,
             red_mask,

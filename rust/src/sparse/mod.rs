@@ -1,10 +1,48 @@
-//! Sparse matrix substrates: ELL and CSR storage + the HPCG-style stencil
-//! system generator of the paper's evaluation (§4.1).
+//! Sparse matrix substrates: ELL, CSR, sliced-ELL (SELL-4) and
+//! matrix-free stencil layouts behind one [`Operator`] switch, plus the
+//! HPCG-style stencil system generator of the paper's evaluation (§4.1).
 
 mod csr;
 mod ell;
 mod generator;
+mod op;
+mod sell;
+mod stencil;
 
 pub use csr::CsrMatrix;
 pub use ell::EllMatrix;
 pub use generator::{stencil_offsets, LocalSystem, StencilKind};
+pub use op::{KernelKind, Operator};
+pub use sell::{SellMatrix, SELL_C};
+pub use stencil::StencilOp;
+
+/// Visit the structurally-present entries of one row, in the canonical
+/// slot order shared by every layout (generator offset order, diagonal
+/// first). This is what lets the generic sweep kernels run on any layout
+/// while keeping per-row accumulation order — and therefore every
+/// floating-point bit — identical across backends (DESIGN.md §9).
+pub trait RowEntries {
+    fn for_row<F: FnMut(f64, usize)>(&self, i: usize, f: F);
+}
+
+impl RowEntries for EllMatrix {
+    #[inline]
+    fn for_row<F: FnMut(f64, usize)>(&self, i: usize, mut f: F) {
+        let pad = (self.n_ext - 1) as i32;
+        for (&v, &c) in self.row_vals(i).iter().zip(self.row_cols(i)) {
+            if c != pad {
+                f(v, c as usize);
+            }
+        }
+    }
+}
+
+impl RowEntries for CsrMatrix {
+    #[inline]
+    fn for_row<F: FnMut(f64, usize)>(&self, i: usize, mut f: F) {
+        let (cols, vals) = self.row(i);
+        for (&c, &v) in cols.iter().zip(vals) {
+            f(v, c as usize);
+        }
+    }
+}

@@ -1,0 +1,202 @@
+//! Kernel-backend selection: one assembled operator, four executable
+//! layouts.
+//!
+//! The solvers are written against [`Operator`], which always owns the
+//! canonical ELL image of the local matrix (the layout shared with the
+//! Pallas kernels and the AOT artifacts) and can additionally carry
+//!
+//!  * a CSR image (HPCCG-faithful indirect layout),
+//!  * a SELL-4 sliced-ELL image (`sell.rs`, autovectoriser-friendly),
+//!  * a matrix-free stencil description (`stencil.rs`, no matrix
+//!    traffic at all).
+//!
+//! Which one the kernels execute is a per-run switch ([`KernelKind`],
+//! threaded down from `RunSpec::kernel`). All four layouts represent the
+//! *same* matrix with the *same* per-row term order, so every backend
+//! produces bitwise-identical results (DESIGN.md §9) — the selection is
+//! purely a memory-traffic/performance choice.
+
+use crate::sparse::{CsrMatrix, EllMatrix, SellMatrix, StencilOp};
+
+/// Which kernel layout the compute tier executes (`RunSpec::kernel`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum KernelKind {
+    /// Compressed sparse row — indirect row pointers, no fill.
+    Csr,
+    /// ELLPACK — fixed-width rows, fill gathers the zero pad (default).
+    #[default]
+    Ell,
+    /// Sliced ELL (SELL-4): 4-row slices, column-major within a slice.
+    Sell,
+    /// Matrix-free: stencil coefficients generated on the fly.
+    Stencil,
+}
+
+impl KernelKind {
+    /// All kinds, in the order used by sweeps and docs.
+    pub const ALL: [KernelKind; 4] = [
+        KernelKind::Csr,
+        KernelKind::Ell,
+        KernelKind::Sell,
+        KernelKind::Stencil,
+    ];
+
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "csr" => Some(KernelKind::Csr),
+            "ell" => Some(KernelKind::Ell),
+            "sell" => Some(KernelKind::Sell),
+            "stencil" => Some(KernelKind::Stencil),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            KernelKind::Csr => "csr",
+            KernelKind::Ell => "ell",
+            KernelKind::Sell => "sell",
+            KernelKind::Stencil => "stencil",
+        }
+    }
+}
+
+/// The local operator: canonical ELL image plus optional alternative
+/// layouts, with a switch saying which one the kernels should execute.
+///
+/// `Deref<Target = EllMatrix>` keeps the whole codebase's `a.n` /
+/// `a.diag` / `a.row_vals(..)` accesses working unchanged — the ELL
+/// image is always present and is the source of truth for structure
+/// queries regardless of the active kernel.
+#[derive(Debug, Clone)]
+pub struct Operator {
+    kernel: KernelKind,
+    ell: EllMatrix,
+    csr: Option<CsrMatrix>,
+    sell: Option<SellMatrix>,
+    stencil: Option<StencilOp>,
+}
+
+impl std::ops::Deref for Operator {
+    type Target = EllMatrix;
+
+    fn deref(&self) -> &EllMatrix {
+        &self.ell
+    }
+}
+
+impl Operator {
+    /// Wrap a general ELL matrix (no matrix-free description available).
+    pub fn from_ell(ell: EllMatrix) -> Self {
+        Operator {
+            kernel: KernelKind::Ell,
+            ell,
+            csr: None,
+            sell: None,
+            stencil: None,
+        }
+    }
+
+    /// Wrap a generated stencil system: the ELL image plus its
+    /// matrix-free twin (generator.rs builds both).
+    pub fn with_stencil(ell: EllMatrix, stencil: StencilOp) -> Self {
+        Operator {
+            kernel: KernelKind::Ell,
+            ell,
+            csr: None,
+            sell: None,
+            stencil: Some(stencil),
+        }
+    }
+
+    pub fn kernel(&self) -> KernelKind {
+        self.kernel
+    }
+
+    /// Select the kernel layout, materialising it from the ELL image if
+    /// it does not exist yet (CSR/SELL are derived; the stencil form can
+    /// only come from the generator). The ELL buffers are never moved or
+    /// reallocated, so pointer-identity caches keyed on them stay valid.
+    pub fn set_kernel(&mut self, kernel: KernelKind) {
+        match kernel {
+            KernelKind::Csr => {
+                if self.csr.is_none() {
+                    self.csr = Some(CsrMatrix::from_ell(&self.ell));
+                }
+            }
+            KernelKind::Sell => {
+                if self.sell.is_none() {
+                    self.sell = Some(SellMatrix::from_ell(&self.ell));
+                }
+            }
+            KernelKind::Stencil => {
+                assert!(
+                    self.stencil.is_some(),
+                    "stencil kernel requires a generated stencil system \
+                     (Operator::with_stencil); this operator only has a \
+                     general sparse image"
+                );
+            }
+            KernelKind::Ell => {}
+        }
+        self.kernel = kernel;
+    }
+
+    /// The canonical ELL image (also available implicitly via `Deref`).
+    pub fn ell(&self) -> &EllMatrix {
+        &self.ell
+    }
+
+    /// Active CSR image; panics unless `set_kernel(Csr)` materialised it.
+    pub fn csr(&self) -> &CsrMatrix {
+        self.csr.as_ref().expect("csr layout not materialised")
+    }
+
+    /// Active SELL image; panics unless `set_kernel(Sell)` materialised it.
+    pub fn sell(&self) -> &SellMatrix {
+        self.sell.as_ref().expect("sell layout not materialised")
+    }
+
+    /// Matrix-free description; present only for generated stencil systems.
+    pub fn stencil(&self) -> &StencilOp {
+        self.stencil.as_ref().expect("no stencil description")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_roundtrip() {
+        for k in KernelKind::ALL {
+            assert_eq!(KernelKind::parse(k.name()), Some(k));
+        }
+        assert_eq!(KernelKind::parse("banana"), None);
+        assert_eq!(KernelKind::default(), KernelKind::Ell);
+    }
+
+    #[test]
+    fn set_kernel_materialises_lazily() {
+        let mut m = EllMatrix::new(3, 3, 4);
+        m.set(0, 0, 0, 2.0);
+        m.set(1, 0, 1, 2.0);
+        m.set(2, 0, 2, 2.0);
+        let mut op = Operator::from_ell(m);
+        assert_eq!(op.kernel(), KernelKind::Ell);
+        op.set_kernel(KernelKind::Csr);
+        assert_eq!(op.csr().nnz(), 3);
+        op.set_kernel(KernelKind::Sell);
+        assert_eq!(op.sell().n, 3);
+        // deref keeps structure queries on the ELL image
+        assert_eq!(op.n, 3);
+        assert_eq!(op.kernel(), KernelKind::Sell);
+    }
+
+    #[test]
+    #[should_panic(expected = "stencil kernel requires")]
+    fn stencil_requires_generated_system() {
+        let mut op = Operator::from_ell(EllMatrix::new(2, 1, 3));
+        op.set_kernel(KernelKind::Stencil);
+    }
+}

@@ -1,0 +1,164 @@
+//! SELL-C-σ-style sliced ELL storage (Kreutzer et al.'s SELL-C-σ with
+//! C = 4, σ = 1): rows are grouped into slices of [`SELL_C`] consecutive
+//! rows, each slice stores `slice_w` slots **column-major within the
+//! slice** (`vals[ptr + j*C + k]` = slot `j` of row `k` in the slice).
+//!
+//! The column-major slice layout is what lets the autovectoriser turn
+//! the inner SpMV loop into `f64x4` gather+FMA code: the 4 rows of a
+//! slice advance through their slots in lockstep, so each slot step is
+//! one contiguous 4-lane load of coefficients and one 4-lane gather.
+//!
+//! σ = 1 means *no row sorting* — rows keep their natural mesh order, so
+//! per-row term order matches the ELL image exactly and the bitwise
+//! determinism contract extends to this layout for free (DESIGN.md §9).
+//! The price is slice padding: a slice is as wide as its longest row
+//! (padded entries are `0.0` gathering the zero pad slot, exactly like
+//! ELL fill).
+
+use super::EllMatrix;
+
+/// Slice height. 4 × f64 = one AVX2 register / half an AVX-512 one.
+pub const SELL_C: usize = 4;
+
+#[derive(Debug, Clone)]
+pub struct SellMatrix {
+    /// Owned rows.
+    pub n: usize,
+    /// Extended vector length (n + halo + 1), same as the ELL image.
+    pub n_ext: usize,
+    /// Start offset of each slice in `vals`/`cols`; length `nslices + 1`.
+    pub slice_ptr: Vec<usize>,
+    /// Slot count of each slice (max non-fill row length in the slice).
+    pub slice_w: Vec<usize>,
+    /// Column-major within each slice; padding is 0.0.
+    pub vals: Vec<f64>,
+    /// Gather indices; padding points at the zero pad (`n_ext - 1`).
+    pub cols: Vec<i32>,
+}
+
+impl SellMatrix {
+    /// Convert from ELL: compact each row's non-fill entries (preserving
+    /// slot order), then re-tile into column-major slices of `SELL_C`
+    /// rows. Rows past `n` in the last slice are all-padding.
+    pub fn from_ell(ell: &EllMatrix) -> Self {
+        let c = SELL_C;
+        let n = ell.n;
+        let pad = (ell.n_ext - 1) as i32;
+        let nslices = n.div_ceil(c);
+        let mut slice_ptr = vec![0usize; nslices + 1];
+        let mut slice_w = vec![0usize; nslices];
+        for s in 0..nslices {
+            let mut w = 0;
+            for r in s * c..((s + 1) * c).min(n) {
+                let true_len = ell.row_cols(r).iter().filter(|&&cc| cc != pad).count();
+                w = w.max(true_len);
+            }
+            slice_w[s] = w;
+            slice_ptr[s + 1] = slice_ptr[s] + w * c;
+        }
+        let total = slice_ptr[nslices];
+        let mut vals = vec![0.0; total];
+        let mut cols = vec![pad; total];
+        for s in 0..nslices {
+            let base = slice_ptr[s];
+            for (k, r) in (s * c..((s + 1) * c).min(n)).enumerate() {
+                let mut slot = 0;
+                for (&v, &cc) in ell.row_vals(r).iter().zip(ell.row_cols(r)) {
+                    if cc != pad {
+                        vals[base + slot * c + k] = v;
+                        cols[base + slot * c + k] = cc;
+                        slot += 1;
+                    }
+                }
+            }
+        }
+        SellMatrix {
+            n,
+            n_ext: ell.n_ext,
+            slice_ptr,
+            slice_w,
+            vals,
+            cols,
+        }
+    }
+
+    /// Structurally-present (non-padding) entries.
+    pub fn nnz(&self) -> usize {
+        let pad = (self.n_ext - 1) as i32;
+        self.cols.iter().filter(|&&c| c != pad).count()
+    }
+}
+
+impl super::RowEntries for SellMatrix {
+    #[inline]
+    fn for_row<F: FnMut(f64, usize)>(&self, i: usize, mut f: F) {
+        let s = i / SELL_C;
+        let k = i - s * SELL_C;
+        let base = self.slice_ptr[s];
+        let pad = (self.n_ext - 1) as i32;
+        for j in 0..self.slice_w[s] {
+            let o = base + j * SELL_C + k;
+            let c = self.cols[o];
+            if c == pad {
+                // this row is shorter than the slice: only padding left
+                break;
+            }
+            f(self.vals[o], c as usize);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::RowEntries;
+    use super::*;
+
+    fn small_ell() -> EllMatrix {
+        // 6 rows so the second slice is short (rows 4..6 + 2 pad rows)
+        let mut m = EllMatrix::new(6, 3, 8);
+        for i in 0..6 {
+            m.set(i, 0, i, 2.0);
+            if i > 0 {
+                m.set(i, 1, i - 1, -1.0);
+            }
+            if i < 5 {
+                m.set(i, 2, i + 1, -1.0);
+            }
+        }
+        m
+    }
+
+    #[test]
+    fn from_ell_tiles_and_compacts() {
+        let ell = small_ell();
+        let sell = SellMatrix::from_ell(&ell);
+        assert_eq!(sell.slice_w, vec![3, 3]);
+        assert_eq!(sell.slice_ptr, vec![0, 12, 24]);
+        assert_eq!(sell.nnz(), ell.nnz());
+        // row 0 (2 entries) in slot order: diag first, then +1 neighbour
+        let mut got = Vec::new();
+        sell.for_row(0, |v, c| got.push((v, c)));
+        assert_eq!(got, vec![(2.0, 0), (-1.0, 1)]);
+        // column-major: slot 0 of rows 0..4 are adjacent
+        assert_eq!(&sell.vals[0..4], &[2.0, 2.0, 2.0, 2.0]);
+    }
+
+    #[test]
+    fn row_entries_match_ell_order() {
+        let ell = small_ell();
+        let sell = SellMatrix::from_ell(&ell);
+        let pad = (ell.n_ext - 1) as i32;
+        for i in 0..ell.n {
+            let want: Vec<(f64, usize)> = ell
+                .row_vals(i)
+                .iter()
+                .zip(ell.row_cols(i))
+                .filter(|(_, &c)| c != pad)
+                .map(|(&v, &c)| (v, c as usize))
+                .collect();
+            let mut got = Vec::new();
+            sell.for_row(i, |v, c| got.push((v, c)));
+            assert_eq!(got, want, "row {i}");
+        }
+    }
+}

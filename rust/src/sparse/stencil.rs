@@ -1,0 +1,199 @@
+//! Matrix-free stencil operator: the generated systems (generator.rs)
+//! have a fixed coefficient pattern — `diag_val` on the diagonal, `-1.0`
+//! on every structurally-present neighbour — so the matrix never needs
+//! to be *loaded* at all. This backend regenerates the coefficients on
+//! the fly from the mesh geometry, eliminating the `vals`/`cols` memory
+//! traffic that dominates the bandwidth-bound SpMV (the paper's hot
+//! loop), at zero storage cost.
+//!
+//! Bitwise contract (DESIGN.md §9): for every row the neighbour terms
+//! are accumulated in exactly the generator's offset order (diagonal
+//! first), skipping absent neighbours. The ELL image stores those absent
+//! offsets as fill (`0.0` gathering the zero pad), and adding `±0.0` to
+//! an accumulator that started at `+0.0` can never change its bits under
+//! round-to-nearest, so skipping them here is exact — all backends
+//! produce identical bits.
+
+use crate::mesh::Partition;
+use super::{stencil_offsets, StencilKind};
+
+#[derive(Debug, Clone)]
+pub struct StencilOp {
+    pub kind: StencilKind,
+    pub part: Partition,
+    /// Diagonal coefficient (27.0 + diag_shift); off-diagonals are -1.0.
+    pub diag_val: f64,
+    /// Neighbour offsets in generator order (diagonal first).
+    pub offs: Vec<(i64, i64, i64)>,
+    /// Local-index stride of each offset, valid for rows whose whole
+    /// neighbourhood is owned (the fast interior path).
+    pub deltas: Vec<isize>,
+}
+
+impl StencilOp {
+    pub fn new(part: Partition, kind: StencilKind, diag_val: f64) -> Self {
+        let offs = stencil_offsets(kind);
+        let nx = part.grid.nx as isize;
+        let plane = part.grid.plane() as isize;
+        let deltas = offs
+            .iter()
+            .map(|&(dx, dy, dz)| dz as isize * plane + dy as isize * nx + dx as isize)
+            .collect();
+        StencilOp {
+            kind,
+            part,
+            diag_val,
+            offs,
+            deltas,
+        }
+    }
+
+    /// Owned rows (matches the ELL image's `n`).
+    pub fn n(&self) -> usize {
+        self.part.n_local()
+    }
+
+    /// Extended-vector length (matches the ELL image's `n_ext`).
+    pub fn n_ext(&self) -> usize {
+        self.part.n_ext()
+    }
+
+    /// True iff row (x, y, z) can use the strided fast path: every
+    /// neighbour in the 3³ neighbourhood exists and is *owned* (halo
+    /// planes live at `n + ..`, not at contiguous strides).
+    #[inline]
+    pub fn is_fast(&self, x: usize, y: usize, z: usize) -> bool {
+        let g = self.part.grid;
+        x >= 1
+            && x + 2 <= g.nx
+            && y >= 1
+            && y + 2 <= g.ny
+            && z >= self.part.z0 + 1
+            && z + 2 <= self.part.z1
+    }
+
+    /// Extended-vector index of a grid point visible from this rank
+    /// (owned or in a halo plane) — the arithmetic twin of
+    /// `Partition::local_of_global`.
+    #[inline]
+    pub fn visible_index(&self, x: usize, y: usize, z: usize) -> usize {
+        let p = &self.part;
+        let plane = p.grid.plane();
+        let base = y * p.grid.nx + x;
+        if z >= p.z0 && z < p.z1 {
+            (z - p.z0) * plane + base
+        } else if z + 1 == p.z0 {
+            p.n_local() + base
+        } else {
+            debug_assert_eq!(z, p.z1, "point not visible from this rank");
+            let off = if p.has_prev() { plane } else { 0 };
+            p.n_local() + off + base
+        }
+    }
+
+    /// Row dot for a boundary row at grid coords (x, y, z): per-offset
+    /// inside-grid check + O(1) visibility arithmetic, accumulating in
+    /// generator offset order.
+    #[inline]
+    pub fn row_dot_slow(&self, x_ext: &[f64], x: usize, y: usize, z: usize) -> f64 {
+        let g = self.part.grid;
+        let mut acc = 0.0;
+        for (e, &(dx, dy, dz)) in self.offs.iter().enumerate() {
+            let gx = x as i64 + dx;
+            let gy = y as i64 + dy;
+            let gz = z as i64 + dz;
+            let inside = gx >= 0
+                && gy >= 0
+                && gz >= 0
+                && (gx as usize) < g.nx
+                && (gy as usize) < g.ny
+                && (gz as usize) < g.nz;
+            if !inside {
+                continue;
+            }
+            let idx = self.visible_index(gx as usize, gy as usize, gz as usize);
+            let coeff = if e == 0 { self.diag_val } else { -1.0 };
+            acc += coeff * x_ext[idx];
+        }
+        acc
+    }
+}
+
+impl super::RowEntries for StencilOp {
+    #[inline]
+    fn for_row<F: FnMut(f64, usize)>(&self, i: usize, mut f: F) {
+        let g = self.part.grid;
+        let plane = g.plane();
+        let z = self.part.z0 + i / plane;
+        let rem = i % plane;
+        let y = rem / g.nx;
+        let x = rem % g.nx;
+        for (e, &(dx, dy, dz)) in self.offs.iter().enumerate() {
+            let gx = x as i64 + dx;
+            let gy = y as i64 + dy;
+            let gz = z as i64 + dz;
+            let inside = gx >= 0
+                && gy >= 0
+                && gz >= 0
+                && (gx as usize) < g.nx
+                && (gy as usize) < g.ny
+                && (gz as usize) < g.nz;
+            if !inside {
+                continue;
+            }
+            let idx = self.visible_index(gx as usize, gy as usize, gz as usize);
+            let coeff = if e == 0 { self.diag_val } else { -1.0 };
+            f(coeff, idx);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{LocalSystem, RowEntries};
+    use super::*;
+    use crate::mesh::Grid3;
+
+    #[test]
+    fn row_entries_match_ell_image() {
+        for (nranks, rank) in [(1, 0), (3, 0), (3, 1), (3, 2)] {
+            for kind in [StencilKind::P7, StencilKind::P27] {
+                let sys = LocalSystem::build(Grid3::new(4, 3, 9), kind, rank, nranks);
+                let st = sys.a.stencil();
+                let pad = (sys.a.n_ext - 1) as i32;
+                for i in 0..sys.n() {
+                    let want: Vec<(f64, usize)> = sys
+                        .a
+                        .row_vals(i)
+                        .iter()
+                        .zip(sys.a.row_cols(i))
+                        .filter(|(_, &c)| c != pad)
+                        .map(|(&v, &c)| (v, c as usize))
+                        .collect();
+                    let mut got = Vec::new();
+                    st.for_row(i, |v, c| got.push((v, c)));
+                    assert_eq!(got, want, "rank {rank}/{nranks} {kind:?} row {i}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fast_rows_have_valid_strides() {
+        let sys = LocalSystem::build(Grid3::new(5, 5, 12), StencilKind::P27, 1, 3);
+        let st = sys.a.stencil();
+        let g = st.part.grid;
+        for i in 0..sys.n() {
+            let grow = st.part.global_of_local(i);
+            let (x, y, z) = g.coords(grow);
+            if !st.is_fast(x, y, z) {
+                continue;
+            }
+            // stride addressing must land on the same columns as the ELL row
+            for (e, &d) in st.deltas.iter().enumerate() {
+                let col = (i as isize + d) as usize;
+                assert_eq!(col, sys.a.row_cols(i)[e] as usize, "row {i} offset {e}");
+            }
+        }
+    }
+}

@@ -21,7 +21,7 @@ use hlam::exec::{ExecSpec, ExecStrategy};
 use hlam::mesh::Grid3;
 use hlam::simmpi::TransportKind;
 use hlam::solvers::{Method, Observer, Problem, SolveOpts};
-use hlam::sparse::StencilKind;
+use hlam::sparse::{KernelKind, StencilKind};
 
 /// System allocator with a process-wide allocation counter (`alloc` and
 /// `realloc` count; frees don't — growth is what steady state forbids).
@@ -112,41 +112,49 @@ fn steady_state_iterations_do_not_allocate() {
         max_iters: ITERS,
         ..SolveOpts::default()
     };
-    for (strategy, threads, ranks, overlap, bound) in [
-        (ExecStrategy::Seq, 1usize, 1usize, false, 0usize),
-        (ExecStrategy::Seq, 1, 2, false, 2),
-        (ExecStrategy::ForkJoin, 4, 1, false, 8),
-        (ExecStrategy::TaskPool, 4, 1, false, 8),
-        (ExecStrategy::Seq, 1, 2, true, 2),
-        (ExecStrategy::ForkJoin, 4, 2, true, 8),
-        (ExecStrategy::TaskPool, 4, 2, true, 8),
-    ] {
-        let mut pb = Problem::build(grid, StencilKind::P7, ranks);
-        let probe = AllocProbe::new();
-        let spec = ExecSpec::new(strategy, threads).with_overlap(overlap);
-        let stats = pb.solve_hybrid_observed(
-            Method::parse("cg").unwrap(),
-            &opts,
-            &spec,
-            TransportKind::Lockstep,
-            &probe,
-        );
-        assert_eq!(stats.iterations, ITERS, "{strategy:?}: must run all iters");
-        if overlap && ranks > 1 {
-            assert!(
-                pb.stats.overlapped_rows > 0,
-                "{strategy:?}: overlap run did no overlapped work"
+    // The second pass re-runs every shape on the matrix-free stencil
+    // backend: its StencilOp is prebuilt by the generator and
+    // `set_kernel(Stencil)` only flips the dispatch switch, so the
+    // steady-state bounds must hold unchanged there too.
+    for kernel in [KernelKind::Ell, KernelKind::Stencil] {
+        for (strategy, threads, ranks, overlap, bound) in [
+            (ExecStrategy::Seq, 1usize, 1usize, false, 0usize),
+            (ExecStrategy::Seq, 1, 2, false, 2),
+            (ExecStrategy::ForkJoin, 4, 1, false, 8),
+            (ExecStrategy::TaskPool, 4, 1, false, 8),
+            (ExecStrategy::Seq, 1, 2, true, 2),
+            (ExecStrategy::ForkJoin, 4, 2, true, 8),
+            (ExecStrategy::TaskPool, 4, 2, true, 8),
+        ] {
+            let mut pb = Problem::build(grid, StencilKind::P7, ranks);
+            pb.set_kernel(kernel);
+            let probe = AllocProbe::new();
+            let spec = ExecSpec::new(strategy, threads).with_overlap(overlap);
+            let stats = pb.solve_hybrid_observed(
+                Method::parse("cg").unwrap(),
+                &opts,
+                &spec,
+                TransportKind::Lockstep,
+                &probe,
             );
-        }
-        for i in (WARMUP + 1)..=ITERS {
-            let d = probe.delta(i);
-            assert!(
-                d <= bound,
-                "{} threads={threads} ranks={ranks} overlap={overlap}: iteration {i} \
-                 performed {d} heap allocations (allowed {bound}) — the \
-                 zero-allocation steady state regressed",
-                strategy.name(),
-            );
+            assert_eq!(stats.iterations, ITERS, "{strategy:?}: must run all iters");
+            if overlap && ranks > 1 {
+                assert!(
+                    pb.stats.overlapped_rows > 0,
+                    "{strategy:?}: overlap run did no overlapped work"
+                );
+            }
+            for i in (WARMUP + 1)..=ITERS {
+                let d = probe.delta(i);
+                assert!(
+                    d <= bound,
+                    "{} kernel={} threads={threads} ranks={ranks} overlap={overlap}: \
+                     iteration {i} performed {d} heap allocations (allowed {bound}) — \
+                     the zero-allocation steady state regressed",
+                    strategy.name(),
+                    kernel.name(),
+                );
+            }
         }
     }
 }

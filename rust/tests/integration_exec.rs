@@ -15,7 +15,7 @@ use hlam::kernels;
 use hlam::mesh::Grid3;
 use hlam::simmpi::TransportKind;
 use hlam::solvers::{completion_order, Method, Native, Ops, Problem, SolveOpts, SolveStats};
-use hlam::sparse::{LocalSystem, StencilKind};
+use hlam::sparse::{KernelKind, LocalSystem, StencilKind};
 use hlam::util::proptest::forall;
 use hlam::util::Rng;
 
@@ -453,6 +453,91 @@ fn overlap_on_vs_off_bitwise_all_methods_ranks_execs_transports() {
                         assert_eq!(pon.stats.overlapped_rows, 0, "{ctx}: no neighbours");
                     }
                 }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// kernel-backend equivalence: csr / ell / sell / stencil
+// ---------------------------------------------------------------------
+
+/// The acceptance contract of the kernel-backend tier (DESIGN.md §9):
+/// for every method variant × rank count × executor strategy × overlap
+/// setting, switching the operator layout (`RunSpec::kernel`) between
+/// csr, ell, sell and stencil produces bitwise-identical convergence
+/// histories. All four layouts visit each row's structural entries in
+/// the same slot order with the same scalar arithmetic, so the layout
+/// is invisible to floating point — this sweep is what pins that.
+#[test]
+fn kernel_backends_bitwise_all_methods_ranks_execs_overlap() {
+    let grid = Grid3::new(6, 6, 12);
+    for method in ALL_METHODS {
+        let mut opts = SolveOpts::default();
+        if method.starts_with("gs-") {
+            opts.ntasks = 6;
+            opts.task_order_seed = 3;
+        }
+        for ranks in [1usize, 2, 4] {
+            for strategy in [ExecStrategy::Seq, ExecStrategy::ForkJoin, ExecStrategy::TaskPool] {
+                for overlap in [false, true] {
+                    let spec = ExecSpec::new(strategy, 2)
+                        .with_chunk_rows(24)
+                        .with_overlap(overlap);
+                    let m = Method::parse(method).unwrap();
+                    let mut reference: Option<SolveStats> = None;
+                    for kernel in KernelKind::ALL {
+                        let mut pb = Problem::build(grid, StencilKind::P7, ranks);
+                        pb.set_kernel(kernel);
+                        let got = pb.solve_hybrid(m, &opts, &spec, TransportKind::Lockstep);
+                        let ctx = format!(
+                            "{method} x{ranks} ranks, {} exec, overlap={overlap}, kernel={}",
+                            strategy.name(),
+                            kernel.name()
+                        );
+                        match &reference {
+                            None => {
+                                assert!(got.converged, "{ctx}: did not converge");
+                                reference = Some(got);
+                            }
+                            Some(want) => assert_identical(want, &got, &ctx),
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// The same contract across the threaded transport (really concurrent
+/// rank threads): a compact spot-check — the full transport sweep is
+/// covered kernel-independently above and in the lockstep-vs-threaded
+/// test, and the layout cannot interact with message scheduling.
+#[test]
+fn kernel_backends_bitwise_under_threaded_transport() {
+    let grid = Grid3::new(6, 6, 12);
+    for method in ["cg-nb", "gs-rb", "bicgstab", "jacobi"] {
+        let mut opts = SolveOpts::default();
+        if method.starts_with("gs-") {
+            opts.ntasks = 6;
+            opts.task_order_seed = 3;
+        }
+        let m = Method::parse(method).unwrap();
+        let spec = ExecSpec::new(ExecStrategy::TaskPool, 2)
+            .with_chunk_rows(24)
+            .with_overlap(true);
+        let mut reference: Option<SolveStats> = None;
+        for kernel in KernelKind::ALL {
+            let mut pb = Problem::build(grid, StencilKind::P7, 2);
+            pb.set_kernel(kernel);
+            let got = pb.solve_hybrid(m, &opts, &spec, TransportKind::Threaded);
+            let ctx = format!("{method} threaded, kernel={}", kernel.name());
+            match &reference {
+                None => {
+                    assert!(got.converged, "{ctx}: did not converge");
+                    reference = Some(got);
+                }
+                Some(want) => assert_identical(want, &got, &ctx),
             }
         }
     }

@@ -1,0 +1,203 @@
+#!/usr/bin/env python3
+"""CI perf regression gate for the hot-path benchmark trajectory.
+
+Validates a freshly measured ``BENCH_hot_path.json`` snapshot
+(schema + sanity invariants) and diffs its medians against the
+committed baseline, failing when throughput regresses beyond a noise
+band.
+
+Usage:
+    python3 scripts/perf_gate.py --fresh BENCH_hot_path.json \
+        --baseline /tmp/baseline.json [--band 0.15]
+
+Exit status: 0 = ok (or comparison skipped, see below), 1 = schema
+violation or regression.
+
+The noise band (fraction of baseline median throughput a cell may lose
+before the gate fails) defaults to 0.15 and can be overridden with
+``--band`` or the ``HLAM_PERF_BAND`` environment variable.
+
+Comparison is skipped — with an explicit message, never silently — when
+the baseline is marked ``"provisional": true`` (the committed
+placeholder before the first real measured run: bootstrap path), or
+when baseline and fresh snapshots were produced at different bench
+shapes (quick vs full, different grid), which makes medians
+incomparable. Schema validation of the fresh snapshot always runs.
+"""
+
+import argparse
+import json
+import os
+import sys
+
+METHODS = ["jacobi", "gs", "cg", "bicgstab"]
+STRATEGIES = ["seq", "fork-join", "task"]
+KERNELS = ["csr", "ell", "sell", "stencil"]
+
+
+def fail(msg):
+    print(f"perf gate: FAIL: {msg}", file=sys.stderr)
+    sys.exit(1)
+
+
+def load(path, what):
+    try:
+        with open(path) as f:
+            return json.load(f)
+    except (OSError, ValueError) as e:
+        fail(f"cannot load {what} snapshot {path}: {e}")
+
+
+def solver_cells(doc):
+    """Index solver entries by (method, strategy, threads, overlap)."""
+    cells = {}
+    for e in doc.get("entries", []):
+        key = (e["method"], e["strategy"], int(e["threads"]), bool(e["overlap"]))
+        if key in cells:
+            fail(f"duplicate solver cell {key}")
+        cells[key] = e
+    return cells
+
+
+def spmv_cells(doc):
+    """Index spmv entries by kernel name."""
+    section = doc.get("spmv", {})
+    return {e["kernel"]: e for e in section.get("entries", [])}
+
+
+def validate_fresh(doc):
+    """Schema + sanity invariants of a freshly measured snapshot."""
+    assert doc.get("bench") == "hot_path", f"bench != hot_path: {doc.get('bench')}"
+    assert doc.get("transport") == "threaded", doc.get("transport")
+    entries = doc.get("entries", [])
+    assert len(entries) == len(METHODS) * len(STRATEGIES) * 2, (
+        f"expected {len(METHODS)} methods x {len(STRATEGIES)} strategies "
+        f"x 2 overlap modes, got {len(entries)} entries"
+    )
+    for e in entries:
+        assert e["iters_per_sec"] > 0, e
+        assert e["ns_per_iter"] > 0, e
+        assert e["seconds_median"] >= e["seconds_min"] > 0, e
+        assert e["seconds_stddev"] >= 0, e
+    cells = solver_cells(doc)
+    by_cfg = {(m, s, o): e for (m, s, _t, o), e in cells.items()}
+    for method in METHODS:
+        for strategy in STRATEGIES:
+            off = by_cfg[(method, strategy, False)]
+            on = by_cfg[(method, strategy, True)]
+            # very generous smoke-size threshold: overlap-on must not be
+            # slower than 0.25x of overlap-off. Timings on a shared
+            # runner at this problem size are noisy, so this only
+            # catches catastrophic serialisation of the overlapped path
+            # (the deterministic overlapped_rows checks below are the
+            # real accidental-serialisation guard).
+            ratio = on["iters_per_sec"] / off["iters_per_sec"]
+            assert ratio >= 0.25, (
+                f"{method}/{strategy}: overlap-on regressed overlap-off by "
+                f"more than 4x (ratio {ratio:.2f}) — the overlapped path "
+                f"serialised"
+            )
+            # the split did real work while messages were in flight
+            # (gs is the processor-local sequential sweep: it keeps the
+            # synchronous exchange by design)
+            if method != "gs":
+                assert on["overlapped_rows"] > 0, (method, strategy, on)
+            assert off["overlapped_rows"] == 0, (method, strategy, off)
+    spmv = spmv_cells(doc)
+    assert sorted(spmv) == sorted(KERNELS), (
+        f"spmv section must cover {KERNELS}, got {sorted(spmv)}"
+    )
+    for k, e in spmv.items():
+        assert e["rows_per_sec"] > 0, (k, e)
+        assert e["seconds_median"] >= e["seconds_min"] > 0, (k, e)
+    print(f"perf gate: fresh snapshot schema ok ({len(entries)} solver cells, "
+          f"{len(spmv)} spmv cells)")
+
+
+def compare(fresh, baseline, band):
+    """Diff medians; returns the list of regression messages."""
+    regressions = []
+    fresh_cells = solver_cells(fresh)
+    base_cells = solver_cells(baseline)
+    compared = 0
+    for key, b in sorted(base_cells.items()):
+        f = fresh_cells.get(key)
+        if f is None:
+            # thread counts follow the runner (clamped 2..4), so a
+            # baseline measured on different hardware may have cells the
+            # runner cannot reproduce — report, don't fail
+            print(f"perf gate: note: baseline cell {key} absent from fresh "
+                  f"snapshot (different thread count?) — not compared")
+            continue
+        compared += 1
+        floor = b["iters_per_sec"] * (1.0 - band)
+        if f["iters_per_sec"] < floor:
+            regressions.append(
+                f"solver {key}: {f['iters_per_sec']:.1f} iters/s vs baseline "
+                f"{b['iters_per_sec']:.1f} (floor {floor:.1f}, band {band:.0%})"
+            )
+    for k, b in sorted(spmv_cells(baseline).items()):
+        f = spmv_cells(fresh).get(k)
+        if f is None:
+            print(f"perf gate: note: baseline spmv kernel '{k}' absent from "
+                  f"fresh snapshot — not compared")
+            continue
+        compared += 1
+        floor = b["rows_per_sec"] * (1.0 - band)
+        if f["rows_per_sec"] < floor:
+            regressions.append(
+                f"spmv {k}: {f['rows_per_sec']:.3e} rows/s vs baseline "
+                f"{b['rows_per_sec']:.3e} (floor {floor:.3e}, band {band:.0%})"
+            )
+    print(f"perf gate: compared {compared} cells at noise band {band:.0%}")
+    return regressions
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--fresh", required=True, help="freshly measured snapshot")
+    ap.add_argument("--baseline", required=True, help="committed baseline")
+    ap.add_argument(
+        "--band",
+        type=float,
+        default=float(os.environ.get("HLAM_PERF_BAND", "0.15")),
+        help="allowed fractional median-throughput loss (default 0.15, "
+        "env HLAM_PERF_BAND)",
+    )
+    args = ap.parse_args()
+    if not 0.0 <= args.band < 1.0:
+        fail(f"--band must be in [0, 1), got {args.band}")
+
+    fresh = load(args.fresh, "fresh")
+    baseline = load(args.baseline, "baseline")
+
+    try:
+        validate_fresh(fresh)
+    except AssertionError as e:
+        fail(f"fresh snapshot invalid: {e}")
+
+    if baseline.get("provisional"):
+        print("perf gate: SKIP comparison — baseline is provisional (no real "
+              "measured run committed yet). Run `cargo bench --bench hot_path` "
+              "on quiet hardware and commit the result to arm the gate.")
+        return
+    for field in ("quick", "grid", "iters_per_solve"):
+        if baseline.get(field) != fresh.get(field):
+            print(f"perf gate: SKIP comparison — baseline {field}="
+                  f"{baseline.get(field)!r} vs fresh {field}="
+                  f"{fresh.get(field)!r}: snapshots measured at different "
+                  f"bench shapes are not comparable. To arm the CI gate, "
+                  f"commit a snapshot produced with the same flags CI uses "
+                  f"(`cargo bench --bench hot_path -- --quick`).")
+            return
+
+    regressions = compare(fresh, baseline, args.band)
+    if regressions:
+        for r in regressions:
+            print(f"perf gate: REGRESSION: {r}", file=sys.stderr)
+        fail(f"{len(regressions)} cell(s) regressed beyond the noise band")
+    print("perf gate: ok — no cell regressed beyond the noise band")
+
+
+if __name__ == "__main__":
+    main()
