@@ -27,7 +27,7 @@ use hlam::exec::{ExecSpec, ExecStrategy, Executor};
 use hlam::kernels;
 use hlam::mesh::Grid3;
 use hlam::simmpi::TransportKind;
-use hlam::solvers::{Method, NoopObserver, Problem, SolveOpts};
+use hlam::solvers::{Method, NoopObserver, PrecondKind, Problem, SolveOpts};
 use hlam::sparse::{KernelKind, LocalSystem, StencilKind};
 use hlam::util::json::Json;
 use hlam::util::Rng;
@@ -195,6 +195,7 @@ fn main() {
     }
 
     let spmv = bench_spmv_backends(quick, rounds);
+    let precond = bench_precond(quick, rounds);
 
     let mut root = BTreeMap::new();
     root.insert("bench".to_string(), Json::Str("hot_path".to_string()));
@@ -216,6 +217,7 @@ fn main() {
     root.insert("provisional".to_string(), Json::Bool(false));
     root.insert("entries".to_string(), Json::Arr(entries));
     root.insert("spmv".to_string(), spmv);
+    root.insert("precond".to_string(), precond);
     let doc = Json::Obj(root);
 
     // the bench runs with the crate dir as cwd reference; the trajectory
@@ -243,7 +245,160 @@ fn main() {
         .and_then(|e| e.as_arr())
         .expect("spmv entries array");
     assert_eq!(spmv_entries.len(), KernelKind::ALL.len(), "one spmv row per kernel");
+    let precond_entries = parsed
+        .get("precond")
+        .and_then(|s| s.get("entries"))
+        .and_then(|e| e.as_arr())
+        .expect("precond entries array");
+    assert_eq!(
+        precond_entries.len(),
+        PRECOND_CELLS.len(),
+        "one time-to-tolerance row per precond cell"
+    );
     println!("\nwrote {out} ({} entries)", entries.len());
+}
+
+/// The preconditioner grid: Krylov × preconditioner, plus the two-stage
+/// multisplitting outer method, each with its resolved inner strength.
+const PRECOND_CELLS: [(&str, PrecondKind, usize); 9] = [
+    ("cg", PrecondKind::None, 1),
+    ("cg", PrecondKind::Jacobi, 2),
+    ("cg", PrecondKind::BlockJacobi, 2),
+    ("cg", PrecondKind::Chebyshev, 4),
+    ("bicgstab", PrecondKind::None, 1),
+    ("bicgstab", PrecondKind::Jacobi, 2),
+    ("bicgstab", PrecondKind::BlockJacobi, 2),
+    ("bicgstab", PrecondKind::Chebyshev, 4),
+    ("multisplit", PrecondKind::BlockJacobi, 4),
+];
+
+/// Time-to-solution on the anisotropic variable-coefficient problem:
+/// unlike the fixed-work solver grid above, every cell here runs to a
+/// 1e-8 *relative* tolerance, so the two axes that matter are measured
+/// directly — iterations-to-tolerance (does the preconditioner cut the
+/// count?) and seconds-to-tolerance (does it still win after paying for
+/// the M⁻¹ applies?). Same interleaved-rounds discipline; iteration
+/// counts are asserted identical across rounds (determinism contract).
+fn bench_precond(quick: bool, rounds: usize) -> Json {
+    let grid = if quick {
+        Grid3::new(16, 16, 16)
+    } else {
+        Grid3::new(64, 64, 64)
+    };
+    let eps = 1e-8;
+    let n = grid.nx * grid.ny * grid.nz;
+    println!(
+        "\n== preconditioned time-to-tolerance (anisotropic 7-pt, grid \
+         {}x{}x{} = {n} rows, rel eps {eps:.0e}, {RANKS} ranks, \
+         {rounds} interleaved rounds) ==\n",
+        grid.nx, grid.ny, grid.nz
+    );
+
+    let mut pb = Problem::build_aniso(grid, StencilKind::P7, RANKS);
+    let mut execs: Vec<Vec<Executor>> = Vec::new();
+    let mut opts_by_cell: Vec<SolveOpts> = Vec::new();
+    for (_, precond, inner) in PRECOND_CELLS {
+        let spec = ExecSpec::new(ExecStrategy::Seq, 1);
+        execs.push((0..RANKS).map(|_| spec.build()).collect());
+        opts_by_cell.push(SolveOpts {
+            eps,
+            max_iters: 200_000,
+            precond,
+            inner_iters: inner,
+            ..SolveOpts::default()
+        });
+    }
+
+    // warm-up: every cell must actually reach the tolerance, and its
+    // iteration count is the fixed point the timed rounds re-assert
+    let mut iters_by_cell = vec![0usize; PRECOND_CELLS.len()];
+    for (ci, (name, precond, _)) in PRECOND_CELLS.iter().enumerate() {
+        let s = pb.solve_hybrid_execs_observed(
+            Method::parse(name).expect("known method"),
+            &opts_by_cell[ci],
+            &execs[ci],
+            TransportKind::Threaded,
+            &NoopObserver,
+        );
+        assert!(
+            s.converged,
+            "{name}/{}: rel={} after {} iters",
+            precond.name(),
+            s.rel_residual,
+            s.iterations
+        );
+        iters_by_cell[ci] = s.iterations;
+    }
+
+    let mut samples: Vec<Vec<f64>> = vec![Vec::with_capacity(rounds); PRECOND_CELLS.len()];
+    for _ in 0..rounds {
+        for (ci, (name, precond, _)) in PRECOND_CELLS.iter().enumerate() {
+            let t0 = Instant::now();
+            let s = pb.solve_hybrid_execs_observed(
+                Method::parse(name).expect("known method"),
+                &opts_by_cell[ci],
+                &execs[ci],
+                TransportKind::Threaded,
+                &NoopObserver,
+            );
+            samples[ci].push(t0.elapsed().as_secs_f64());
+            std::hint::black_box(s.rel_residual);
+            assert_eq!(
+                s.iterations,
+                iters_by_cell[ci],
+                "{name}/{}: iteration count must be run-to-run deterministic",
+                precond.name()
+            );
+        }
+    }
+
+    let cg_none_iters = iters_by_cell[0] as f64;
+    let (cg_none_seconds, _, _) = sample_stats(&samples[0]);
+    let mut entries: Vec<Json> = Vec::new();
+    for (ci, (name, precond, inner)) in PRECOND_CELLS.iter().enumerate() {
+        let (median, min, stddev) = sample_stats(&samples[ci]);
+        let iters = iters_by_cell[ci];
+        let iter_ratio = cg_none_iters / iters as f64;
+        let time_ratio = cg_none_seconds / median;
+        println!(
+            "{:<10} precond={:<12} inner={}: {:>6} iters  {:>9.4}s to tolerance  \
+             (vs plain cg: {:>5.2}x fewer iters, {:>5.2}x faster)",
+            name,
+            precond.name(),
+            inner,
+            iters,
+            median,
+            iter_ratio,
+            time_ratio
+        );
+        let mut e = BTreeMap::new();
+        e.insert("method".to_string(), Json::Str(name.to_string()));
+        e.insert(
+            "precond".to_string(),
+            Json::Str(precond.name().to_string()),
+        );
+        e.insert("inner".to_string(), Json::Num(*inner as f64));
+        e.insert("iterations".to_string(), Json::Num(iters as f64));
+        e.insert("seconds_median".to_string(), Json::Num(median));
+        e.insert("seconds_min".to_string(), Json::Num(min));
+        e.insert("seconds_stddev".to_string(), Json::Num(stddev));
+        e.insert(
+            "seconds_per_iter".to_string(),
+            Json::Num(median / iters as f64),
+        );
+        entries.push(Json::Obj(e));
+    }
+
+    let mut s = BTreeMap::new();
+    s.insert(
+        "grid".to_string(),
+        Json::Str(format!("{}x{}x{}", grid.nx, grid.ny, grid.nz)),
+    );
+    s.insert("problem".to_string(), Json::Str("p7-aniso".to_string()));
+    s.insert("eps".to_string(), Json::Num(eps));
+    s.insert("ranks".to_string(), Json::Num(RANKS as f64));
+    s.insert("entries".to_string(), Json::Arr(entries));
+    Json::Obj(s)
 }
 
 /// Single-thread SpMV throughput per kernel backend on one big local

@@ -52,7 +52,7 @@ use std::str::FromStr;
 use crate::exec::{ExecSpec, ExecStrategy};
 use crate::mesh::Grid3;
 use crate::simmpi::TransportKind;
-use crate::solvers::{CgVariant, Method, SolveOpts};
+use crate::solvers::{CgVariant, Method, PrecondKind, SolveOpts};
 use crate::sparse::{KernelKind, StencilKind};
 use crate::util::Json;
 
@@ -61,12 +61,28 @@ use crate::util::Json;
 // enumerated spec field, with "did you mean" suggestions)
 // ---------------------------------------------------------------------
 
-const METHOD_VALID: &str = "jacobi|gs|gs-rb|gs-relaxed|cg|cg-nb|bicgstab|bicgstab-b1";
+const METHOD_VALID: &str = "jacobi|gs|gs-rb|gs-relaxed|cg|cg-nb|bicgstab|bicgstab-b1|multisplit";
 const STENCIL_VALID: &str = "7|27";
 const STRATEGY_VALID: &str = "seq|fork-join|task";
 const TRANSPORT_VALID: &str = "lockstep|threaded";
 const BACKEND_VALID: &str = "native|xla";
 const KERNEL_VALID: &str = "csr|ell|sell|stencil";
+const PRECOND_VALID: &str = "none|jacobi|block-jacobi|chebyshev";
+
+/// Every parseable method name: the 8 paper variants plus the
+/// multisplitting outer solver (kept out of [`Method::NAMES`], which
+/// the harness sweeps as "the paper's 8").
+const METHOD_CANDIDATES: [&str; 9] = [
+    "jacobi",
+    "gs",
+    "gs-rb",
+    "gs-relaxed",
+    "cg",
+    "cg-nb",
+    "bicgstab",
+    "bicgstab-b1",
+    "multisplit",
+];
 
 fn unknown(
     what: &'static str,
@@ -93,7 +109,23 @@ impl FromStr for Method {
     /// assert!(err.to_string().contains("did you mean 'cg'"));
     /// ```
     fn from_str(s: &str) -> Result<Self, SpecError> {
-        Method::parse(s).ok_or_else(|| unknown("method", s, METHOD_VALID, &Method::NAMES))
+        Method::parse(s).ok_or_else(|| unknown("method", s, METHOD_VALID, &METHOD_CANDIDATES))
+    }
+}
+
+impl FromStr for PrecondKind {
+    type Err = SpecError;
+
+    /// ```
+    /// use hlam::solvers::PrecondKind;
+    /// let p: PrecondKind = "block-jacobi".parse().unwrap();
+    /// assert_eq!(p.name(), "block-jacobi");
+    /// let err = "chebyshv".parse::<PrecondKind>().unwrap_err();
+    /// assert!(err.to_string().contains("did you mean 'chebyshev'"));
+    /// ```
+    fn from_str(s: &str) -> Result<Self, SpecError> {
+        PrecondKind::parse(s)
+            .ok_or_else(|| unknown("precond", s, PRECOND_VALID, &PrecondKind::NAMES))
     }
 }
 
@@ -293,6 +325,20 @@ impl RunSpec {
                 ),
             ));
         }
+        if self.opts.inner_iters == 0 {
+            return Err(invalid("inner", "must be at least 1".into()));
+        }
+        if self.opts.precond != PrecondKind::None && !self.method.supports_precond() {
+            return Err(invalid(
+                "precond",
+                format!(
+                    "method '{}' has no preconditioner seam; precond '{}' applies to \
+                     cg, bicgstab and multisplit only",
+                    self.method.name(),
+                    self.opts.precond.name()
+                ),
+            ));
+        }
         Ok(())
     }
 
@@ -352,6 +398,11 @@ impl RunSpec {
             Json::Str(self.backend.name().to_string()),
         );
         m.insert("kernel".to_string(), Json::Str(self.kernel.name().to_string()));
+        m.insert(
+            "precond".to_string(),
+            Json::Str(self.opts.precond.name().to_string()),
+        );
+        m.insert("inner".to_string(), Json::Num(self.opts.inner_iters as f64));
         m.insert("opts".to_string(), Json::Obj(opts));
         Json::Obj(m)
     }
@@ -374,7 +425,7 @@ impl RunSpec {
             j,
             &[
                 "grid", "stencil", "method", "ranks", "exec", "transport", "backend", "kernel",
-                "opts",
+                "precond", "inner", "opts",
             ],
             "spec",
         )?;
@@ -423,6 +474,12 @@ impl RunSpec {
         }
         if let Some(k) = opt_str(j, "kernel")? {
             spec.kernel = k.parse()?;
+        }
+        if let Some(p) = opt_str(j, "precond")? {
+            spec.opts.precond = p.parse()?;
+        }
+        if let Some(x) = opt_usize(j, "inner")? {
+            spec.opts.inner_iters = x;
         }
         if let Some(o) = j.get("opts") {
             if o.as_obj().is_none() {
@@ -505,7 +562,7 @@ impl RunSpec {
     pub fn describe(&self) -> String {
         format!(
             "method={} backend={} kernel={} grid={}x{}x{} w={} ranks={} transport={} exec={} \
-             threads={} overlap={}",
+             threads={} overlap={} precond={} inner={}",
             self.method.name(),
             self.backend.name(),
             self.kernel.name(),
@@ -517,7 +574,9 @@ impl RunSpec {
             self.transport.name(),
             self.exec.strategy.name(),
             self.exec.threads,
-            if self.exec.overlap { "on" } else { "off" }
+            if self.exec.overlap { "on" } else { "off" },
+            self.opts.precond.name(),
+            self.opts.inner_iters
         )
     }
 }
@@ -700,6 +759,20 @@ impl RunSpecBuilder {
         self
     }
 
+    /// Rank-local preconditioner (`--precond`): cg/bicgstab run their
+    /// preconditioned forms, multisplit uses it as the inner solve.
+    pub fn precond(mut self, precond: PrecondKind) -> Self {
+        self.spec.opts.precond = precond;
+        self
+    }
+
+    /// Inner strength (`--inner-iters`): preconditioner sweeps / steps /
+    /// degree, and multisplit's K inner iterations per outer round.
+    pub fn inner_iters(mut self, inner: usize) -> Self {
+        self.spec.opts.inner_iters = inner;
+        self
+    }
+
     // parsing setters (CLI names; first failure surfaces at build) -----
 
     pub fn method_str(self, s: &str) -> Self {
@@ -735,6 +808,11 @@ impl RunSpecBuilder {
     pub fn kernel_str(self, s: &str) -> Self {
         let parsed = s.parse::<KernelKind>();
         self.apply(parsed, |spec, k| spec.kernel = k)
+    }
+
+    pub fn precond_str(self, s: &str) -> Self {
+        let parsed = s.parse::<PrecondKind>();
+        self.apply(parsed, |spec, p| spec.opts.precond = p)
     }
 
     fn apply<T>(mut self, parsed: Result<T, SpecError>, set: impl FnOnce(&mut RunSpec, T)) -> Self {
@@ -945,5 +1023,77 @@ mod tests {
     fn describe_mentions_the_key_dimensions() {
         let d = RunSpec::default().describe();
         assert!(d.contains("method=cg") && d.contains("ranks=1"), "{d}");
+        assert!(d.contains("precond=none") && d.contains("inner=1"), "{d}");
+    }
+
+    #[test]
+    fn precond_parses_serialises_and_round_trips() {
+        // default: no preconditioner, single inner iteration
+        let spec = RunSpec::from_json_str(r#"{"method":"cg"}"#).unwrap();
+        assert_eq!(spec.opts.precond, PrecondKind::None);
+        assert_eq!(spec.opts.inner_iters, 1);
+        // top-level keys, every kind, builder path
+        for (name, kind) in [
+            ("none", PrecondKind::None),
+            ("jacobi", PrecondKind::Jacobi),
+            ("block-jacobi", PrecondKind::BlockJacobi),
+            ("chebyshev", PrecondKind::Chebyshev),
+        ] {
+            let text = format!(r#"{{"method":"cg","precond":"{name}","inner":3}}"#);
+            let spec = RunSpec::from_json_str(&text).unwrap();
+            assert_eq!(spec.opts.precond, kind);
+            assert_eq!(spec.opts.inner_iters, 3);
+            let back = RunSpec::from_json_str(&spec.to_json_string()).unwrap();
+            assert_eq!(back, spec);
+            let b = RunSpec::builder()
+                .precond(kind)
+                .inner_iters(3)
+                .build()
+                .unwrap();
+            assert_eq!(b, spec);
+            assert!(spec.describe().contains(&format!("precond={name}")));
+        }
+        // misspelled names get a suggestion
+        let err = RunSpec::builder().precond_str("chebyshv").build().unwrap_err();
+        assert!(err.to_string().contains("chebyshev"), "{err}");
+    }
+
+    #[test]
+    fn precond_validates_method_support() {
+        // jacobi / gs / cg-nb have no preconditioner seam
+        for m in ["jacobi", "gs", "cg-nb", "bicgstab-b1"] {
+            let err = RunSpec::builder()
+                .method_str(m)
+                .precond(PrecondKind::Jacobi)
+                .build()
+                .unwrap_err();
+            assert!(
+                matches!(err, SpecError::Invalid { field: "precond", .. }),
+                "{m}: {err}"
+            );
+        }
+        // the supporting trio accepts every kind
+        for m in ["cg", "bicgstab", "multisplit"] {
+            assert!(RunSpec::builder()
+                .method_str(m)
+                .precond(PrecondKind::Chebyshev)
+                .inner_iters(4)
+                .build()
+                .is_ok());
+        }
+        // inner must be at least 1
+        let err = RunSpec::builder().inner_iters(0).build().unwrap_err();
+        assert!(matches!(err, SpecError::Invalid { field: "inner", .. }));
+    }
+
+    #[test]
+    fn multisplit_parses_and_round_trips() {
+        let spec = RunSpec::from_json_str(
+            r#"{"method":"multisplit","precond":"block-jacobi","inner":4,"ranks":2,"grid":"4x4x8"}"#,
+        )
+        .unwrap();
+        assert_eq!(spec.method, Method::Multisplit);
+        let back = RunSpec::from_json_str(&spec.to_json_string()).unwrap();
+        assert_eq!(back, spec);
     }
 }

@@ -16,7 +16,7 @@ use crate::machine::MachineModel;
 use crate::mesh::Grid3;
 use crate::simmpi::{TransportKind, WorldStats};
 use crate::simulator::{repeat_runs, simulate_run, ExecModel, RunConfig};
-use crate::solvers::{Method, SolveOpts, SolveStats};
+use crate::solvers::{Method, PrecondKind, SolveOpts, SolveStats};
 use crate::sparse::{KernelKind, StencilKind};
 use crate::stats::{median, strong_efficiency, weak_efficiency, BoxStats};
 use crate::trace::build_trace;
@@ -89,6 +89,13 @@ pub struct HarnessOpts {
     /// Kernel layout for the real-numerics runs (`--kernel`). Histories
     /// are bitwise identical across layouts (DESIGN.md §9).
     pub kernel: KernelKind,
+    /// Rank-local preconditioner (`--precond`) for the real-numerics
+    /// runs; applied only to the methods with a preconditioner seam
+    /// (cg, bicgstab, multisplit — DESIGN.md §10).
+    pub precond: PrecondKind,
+    /// Preconditioner strength (`--inner-iters`): sweeps / steps /
+    /// Chebyshev degree, and multisplit's inner iteration count.
+    pub inner_iters: usize,
 }
 
 impl Default for HarnessOpts {
@@ -105,6 +112,8 @@ impl Default for HarnessOpts {
             transport: TransportKind::Lockstep,
             overlap: false,
             kernel: KernelKind::Ell,
+            precond: PrecondKind::None,
+            inner_iters: 1,
         }
     }
 }
@@ -144,6 +153,14 @@ impl HarnessOpts {
         ranks: usize,
         opts: SolveOpts,
     ) -> RunSpec {
+        let mut opts = opts;
+        // the --precond/--inner-iters knobs only land on the methods
+        // with a preconditioner seam; the other variants keep running
+        // their paper-exact loops
+        if method.supports_precond() {
+            opts.precond = self.precond;
+            opts.inner_iters = self.inner_iters.max(1);
+        }
         RunSpec {
             grid,
             stencil: kind,
@@ -178,6 +195,11 @@ impl HarnessOpts {
             "kernel".to_string(),
             Json::Str(self.kernel.name().to_string()),
         );
+        m.insert(
+            "precond".to_string(),
+            Json::Str(self.precond.name().to_string()),
+        );
+        m.insert("inner".to_string(), Json::Num(self.inner_iters as f64));
         Json::Obj(m)
     }
 
@@ -281,14 +303,47 @@ fn write_file(out_dir: &Path, name: &str, content: &str) {
 /// resolved harness options plus the exact [`RunSpec`] of every real
 /// solver run behind the table (empty for simulator-only figures).
 /// Feeding one of those specs to `hlam solve --spec` (or `Session::run`)
-/// replays that run byte-identically.
-fn spec_sidecar(out_dir: &Path, csv_name: &str, hopts: &HarnessOpts, runs: &[RunSpec]) {
+/// replays that run byte-identically. Each run's measured transport
+/// counters land in a parallel `measured` array (index-matched with
+/// `runs`) so the replayable specs stay strict-parse clean: the spec
+/// already records the resolved precond/inner configuration, the
+/// measured entry adds what only a run can know — `overlapped_rows`,
+/// the halo rows actually hidden behind interior compute.
+fn spec_sidecar(
+    out_dir: &Path,
+    csv_name: &str,
+    hopts: &HarnessOpts,
+    runs: &[(RunSpec, WorldStats)],
+) {
     let mut m = BTreeMap::new();
     m.insert("csv".to_string(), Json::Str(csv_name.to_string()));
     m.insert("harness".to_string(), hopts.to_json());
     m.insert(
         "runs".to_string(),
-        Json::Arr(runs.iter().map(RunSpec::to_json).collect()),
+        Json::Arr(runs.iter().map(|(spec, _)| spec.to_json()).collect()),
+    );
+    m.insert(
+        "measured".to_string(),
+        Json::Arr(
+            runs.iter()
+                .map(|(spec, world)| {
+                    let mut r = BTreeMap::new();
+                    r.insert(
+                        "overlapped_rows".to_string(),
+                        Json::Num(world.overlapped_rows as f64),
+                    );
+                    r.insert(
+                        "precond".to_string(),
+                        Json::Str(spec.opts.precond.name().to_string()),
+                    );
+                    r.insert(
+                        "inner".to_string(),
+                        Json::Num(spec.opts.inner_iters as f64),
+                    );
+                    Json::Obj(r)
+                })
+                .collect(),
+        ),
     );
     let name = format!("{}.spec.json", csv_name.trim_end_matches(".csv"));
     write_file(out_dir, &name, &(Json::Obj(m).to_string() + "\n"));
@@ -318,7 +373,15 @@ pub fn projection_config(spec: &RunSpec, stats: &SolveStats, world: &WorldStats)
         hopts.ntasks_p27 = spec.opts.ntasks;
         hopts.seed = spec.opts.task_order_seed.max(1);
     }
-    weak_config(model, stats.method, spec.stencil, 1, &hopts)
+    // multisplit has no paper-scale cost row; per outer round it moves
+    // the same data as a Jacobi sweep (one SpMV, one halo exchange, one
+    // allreduce), so project it through the jacobi cost model
+    let method = if stats.method == "multisplit" {
+        "jacobi"
+    } else {
+        stats.method
+    };
+    weak_config(model, method, spec.stencil, 1, &hopts)
 }
 
 // ---------------------------------------------------------------------
@@ -352,7 +415,7 @@ pub fn iteration_table(out_dir: &Path, hopts: &HarnessOpts) -> String {
     // one session for the whole table: the {grid, stencil, ranks}
     // assembly is built once per stencil and reused by all 8 methods
     let mut session = Session::new();
-    let mut runs: Vec<RunSpec> = Vec::new();
+    let mut runs: Vec<(RunSpec, WorldStats)> = Vec::new();
     // user-controlled --ranks can contradict the table grid; surface a
     // structured message instead of panicking mid-table
     let probe = hopts.run_spec(
@@ -389,7 +452,8 @@ pub fn iteration_table(out_dir: &Path, hopts: &HarnessOpts) -> String {
                 hopts.run_spec(Method::parse(method).unwrap(), grid, kind, nranks, opts);
             // pre-validated above (specs differ only in method/opts)
             let stats = session.run(&spec).expect("pre-validated spec");
-            runs.push(spec);
+            let world = session.world_stats().cloned().unwrap_or_default();
+            runs.push((spec, world));
             let paper = paper_iterations(method, kind);
             let _ = writeln!(
                 csv,
@@ -830,7 +894,7 @@ pub fn gs_iteration_table(out_dir: &Path, hopts: &HarnessOpts) -> String {
     ];
     // one session: the 4 variants share one assembly
     let mut session = Session::new();
-    let mut runs: Vec<RunSpec> = Vec::new();
+    let mut runs: Vec<(RunSpec, WorldStats)> = Vec::new();
     let probe = hopts.run_spec(
         Method::parse("gs").unwrap(),
         grid,
@@ -856,7 +920,8 @@ pub fn gs_iteration_table(out_dir: &Path, hopts: &HarnessOpts) -> String {
             opts,
         );
         let stats = session.run(&spec).expect("pre-validated spec");
-        runs.push(spec);
+        let world = session.world_stats().cloned().unwrap_or_default();
+        runs.push((spec, world));
         let _ = writeln!(csv, "{label},{},{paper}", stats.iterations);
         let _ = writeln!(
             out,

@@ -115,6 +115,41 @@ pub fn waxpby(a: f64, x: &[f64], b: f64, y: &[f64], c: f64, z: &mut [f64], r0: u
     }
 }
 
+/// z[i] = c * r[i] / diag[i] over [r0, r1)  (scaled diagonal solve).
+///
+/// The first step of every diagonal-based preconditioner: point-Jacobi
+/// uses c = 1, Chebyshev uses c = 1/θ.
+pub fn diag_solve(diag: &[f64], r: &[f64], z: &mut [f64], c: f64, r0: usize, r1: usize) {
+    for i in r0..r1 {
+        z[i] = c * r[i] / diag[i];
+    }
+}
+
+/// Fused Chebyshev/Jacobi correction over [r0, r1):
+/// `d[i] = c1*d[i] + c2*(r[i] - q[i])/diag[i]; z[i] += d[i]`.
+///
+/// One pass updates both the Chebyshev difference vector `d` and the
+/// accumulated preconditioned vector `z`; with `c1 = 0, c2 = 1` it is a
+/// damped-Jacobi correction step. Element-wise, so any chunking
+/// produces the same bits.
+pub fn cheb_update(
+    diag: &[f64],
+    r: &[f64],
+    q: &[f64],
+    d: &mut [f64],
+    z: &mut [f64],
+    c1: f64,
+    c2: f64,
+    r0: usize,
+    r1: usize,
+) {
+    for i in r0..r1 {
+        let di = c1 * d[i] + c2 * (r[i] - q[i]) / diag[i];
+        d[i] = di;
+        z[i] += di;
+    }
+}
+
 /// Fused y[i] = a*x[i] + b*y[i]; returns partial y'·p  (CG-NB Tk 2).
 ///
 /// §Perf: paired accumulators + slice windows (bounds checks hoisted).

@@ -34,7 +34,7 @@ use hlam::exec::ExecStrategy;
 use hlam::harness::{self, HarnessOpts};
 use hlam::runtime::Runtime;
 use hlam::simmpi::TransportKind;
-use hlam::solvers::SolveOpts;
+use hlam::solvers::{PrecondKind, SolveOpts};
 use hlam::sparse::KernelKind;
 use hlam::util::Args;
 
@@ -71,11 +71,13 @@ fn usage() {
          \n\
          usage: hlam <solve|figures|trace|sweep|sizes> [options]\n\
          \n\
-         solve   --method cg|cg-nb|bicgstab|bicgstab-b1|jacobi|gs|gs-rb|gs-relaxed\n\
+         solve   --method cg|cg-nb|bicgstab|bicgstab-b1|jacobi|gs|gs-rb|gs-relaxed|multisplit\n\
         \x20        --grid NXxNYxNZ --stencil 7|27 --ranks N --backend native|xla\n\
         \x20        --transport lockstep|threaded --exec seq|fork-join|task --threads N\n\
         \x20        --kernel csr|ell|sell|stencil (matrix layout; bitwise-identical results)\n\
         \x20        --overlap on|off (hide halo exchanges behind interior compute)\n\
+        \x20        --precond none|jacobi|block-jacobi|chebyshev (cg, bicgstab, multisplit)\n\
+        \x20        --inner-iters K (preconditioner sweeps / multisplit inner iterations)\n\
         \x20        --eps 1e-6 --ntasks N --task-seed S --artifacts DIR\n\
         \x20        --spec FILE (replay a saved run) --emit-spec [FILE] (save/print it)\n\
          figures --all | --fig 1|2|3|4|5|6|iters|gs-iters|granularity|latency|headline\n\
@@ -152,6 +154,7 @@ fn resolve_spec(args: &Args) -> Result<RunSpec, CliError> {
         max_iters: num(args, "max-iters", 10_000)?,
         ntasks: num(args, "ntasks", 0)?,
         task_order_seed: num(args, "task-seed", 0u64)?,
+        ..SolveOpts::default()
     };
     let spec = RunSpec::builder()
         .method_str(&args.str_or("method", "cg"))
@@ -167,6 +170,9 @@ fn resolve_spec(args: &Args) -> Result<RunSpec, CliError> {
         .backend_str(&args.str_or("backend", "native"))
         .kernel_str(&args.str_or("kernel", "ell"))
         .opts(opts)
+        // after .opts() so the flags land on top of the assembled options
+        .precond_str(&args.str_or("precond", "none"))
+        .inner_iters(num(args, "inner-iters", 1)?)
         .build()?;
     Ok(spec)
 }
@@ -232,6 +238,8 @@ fn cmd_figures(args: &Args) -> Result<(), CliError> {
         transport: parse_arg::<TransportKind>(args, "transport", "lockstep")?,
         overlap: parse_overlap(args)?,
         kernel: parse_arg::<KernelKind>(args, "kernel", "ell")?,
+        precond: parse_arg::<PrecondKind>(args, "precond", "none")?,
+        inner_iters: num(args, "inner-iters", 1)?,
         ..Default::default()
     };
     let which = if args.flag("all") {

@@ -22,6 +22,7 @@
 //! (`8k + salt`) so seeded task-order runs reproduce pre-refactor
 //! histories bit for bit.
 
+use super::precond::{self, PrecondKind};
 use super::{Compute, DotWith, Observer, Ops, RankState, SolveOpts, SolveStats, SolverDriver};
 use crate::exec::Executor;
 use crate::simmpi::Transport;
@@ -47,7 +48,12 @@ pub fn solve_rank(
     obs: &dyn Observer,
 ) -> SolveStats {
     match variant {
-        BiVariant::Classic => classic(st, tp, opts, backend, exec, obs),
+        // `precond: none` must reproduce pre-precond histories
+        // bit-for-bit — the legacy loop is entered untouched.
+        BiVariant::Classic if opts.precond == PrecondKind::None => {
+            classic(st, tp, opts, backend, exec, obs)
+        }
+        BiVariant::Classic => preconditioned(st, tp, opts, backend, exec, obs),
         BiVariant::B1 => b1(st, tp, opts, backend, exec, obs),
     }
 }
@@ -148,6 +154,139 @@ fn classic(
             ops.axpby(-omega, &ap[..n], 1.0, &mut p_ext[..n], n);
             // p = r + beta * p (1.0*x is bitwise x, so this is the same
             // triad as the old manual loop — but chunk-parallel)
+            ops.axpby(1.0, &r_ext[..n], beta, &mut p_ext[..n], n);
+        }
+        rho = rho_new;
+        rr = rr_new;
+        drv.record(k + 1, rr);
+    }
+
+    drv.finish("bicgstab", 0)
+}
+
+/// Right-preconditioned BiCGStab (van der Vorst): solve `A M⁻¹ y = b`
+/// implicitly — `p̂ = M⁻¹p`, `v = A p̂`, `ŝ = M⁻¹s`, `t = A ŝ`, and the
+/// x-update accumulates `α p̂ + ω ŝ` directly, so the returned x solves
+/// the *original* system and the residual/convergence history keeps its
+/// unpreconditioned meaning. Same three blocking barriers as classic;
+/// the two `M⁻¹` applies are rank-local and communication-free
+/// (DESIGN.md §10), so the allreduce/halo schedule only changes by the
+/// exchange moving from p/s to their preconditioned images.
+fn preconditioned(
+    st: &mut RankState,
+    tp: &mut dyn Transport,
+    opts: &SolveOpts,
+    backend: &mut dyn Compute,
+    exec: &Executor,
+    obs: &dyn Observer,
+) -> SolveStats {
+    let mut drv = SolverDriver::new(exec, opts, obs, tp.rank());
+    let mut ops = Ops::new(exec, opts, backend);
+    let n = st.sys.n();
+    let pc = precond::build(opts.precond, &st.sys, opts.inner_iters)
+        .expect("preconditioned BiCGStab requires precond != none");
+
+    // r = b; r' = r; p = r; rho = (r', r)
+    st.r_ext[..n].copy_from_slice(&st.sys.b);
+    st.p_ext[..n].copy_from_slice(&st.sys.b);
+    st.rprime[..n].copy_from_slice(&st.sys.b);
+    let part = ops.dot(&st.rprime[..n], &st.r_ext[..n], n);
+    let mut rho = drv.allreduce(tp, 0, 34, part);
+    drv.conv.set_reference(rho); // (r,r) == (r',r) at start
+    let mut rr = rho;
+
+    for k in 0..opts.max_iters {
+        if drv.pre_check(rr) {
+            break;
+        }
+        // p̂ = M⁻¹p ; Ap̂ = A·p̂ ; ad = (r', Ap̂)             BARRIER 1
+        let part = {
+            let RankState {
+                sys,
+                p_ext,
+                z_ext,
+                ap,
+                rprime,
+                pw1,
+                pw2,
+                ..
+            } = st;
+            pc.apply(&mut ops, sys, &p_ext[..n], z_ext, pw1, pw2);
+            ops.halo_spmv_dot(
+                &sys.a,
+                &sys.halo,
+                tp,
+                z_ext,
+                ap,
+                DotWith::Slice(rprime),
+                key(k, 0),
+                2 * k,
+            )
+        };
+        let ad = drv.allreduce(tp, k, 35, part);
+        let alpha = rho / ad;
+
+        // s = r − alpha·Ap̂ ; ŝ = M⁻¹s ; Aŝ = A·ŝ ;
+        // ω = (Aŝ,s)/(Aŝ,Aŝ)                                BARRIER 2
+        {
+            let RankState { r_ext, s_ext, ap, .. } = st;
+            s_ext[..n].copy_from_slice(&r_ext[..n]);
+            ops.axpby(-alpha, &ap[..n], 1.0, &mut s_ext[..n], n);
+        }
+        let part = {
+            let RankState {
+                sys,
+                s_ext,
+                z2_ext,
+                as_,
+                pw1,
+                pw2,
+                ..
+            } = st;
+            pc.apply(&mut ops, sys, &s_ext[..n], z2_ext, pw1, pw2);
+            ops.halo_spmv(&sys.a, &sys.halo, tp, z2_ext, as_, 2 * k + 1);
+            let num = ops.dot_ordered(&as_[..n], &s_ext[..n], n, key(k, 1));
+            let den = ops.dot_ordered(&as_[..n], &as_[..n], n, key(k, 2));
+            (num, den)
+        };
+        let (num, den) = drv.allreduce_pair(tp, k, 36, part);
+        let omega = num / den;
+
+        // x += alpha·p̂ + omega·ŝ ; r = s − omega·Aŝ ;
+        // rho' = (r', r) ; rr = (r, r)                      BARRIER 3
+        let part = {
+            let RankState {
+                x_ext,
+                r_ext,
+                s_ext,
+                z_ext,
+                z2_ext,
+                as_,
+                rprime,
+                ..
+            } = st;
+            ops.waxpby(
+                alpha,
+                &z_ext[..n],
+                omega,
+                &z2_ext[..n],
+                1.0,
+                &mut x_ext[..n],
+                n,
+            );
+            r_ext[..n].copy_from_slice(&s_ext[..n]);
+            ops.axpby(-omega, &as_[..n], 1.0, &mut r_ext[..n], n);
+            let rho_p = ops.dot_ordered(&rprime[..n], &r_ext[..n], n, key(k, 3));
+            let rr_p = ops.dot_ordered(&r_ext[..n], &r_ext[..n], n, key(k, 4));
+            (rho_p, rr_p)
+        };
+        let (rho_new, rr_new) = drv.allreduce_pair(tp, k, 37, part);
+
+        // p = r + beta (p − omega·Ap̂)
+        let beta = (rho_new / rho) * (alpha / omega);
+        {
+            let RankState { r_ext, p_ext, ap, .. } = st;
+            ops.axpby(-omega, &ap[..n], 1.0, &mut p_ext[..n], n);
             ops.axpby(1.0, &r_ext[..n], beta, &mut p_ext[..n], n);
         }
         rho = rho_new;

@@ -24,6 +24,7 @@
 //! order (§3.3). CG tolerates this (paper: "this does not constitute an
 //! issue for the CG methods").
 
+use super::precond::{self, PrecondKind};
 use super::{Compute, DotWith, Observer, Ops, RankState, SolveOpts, SolveStats, SolverDriver};
 use crate::exec::Executor;
 use crate::simmpi::Transport;
@@ -44,7 +45,14 @@ pub fn solve_rank(
     obs: &dyn Observer,
 ) -> SolveStats {
     match variant {
-        CgVariant::Classic => classic(st, tp, opts, backend, exec, obs),
+        // `precond: none` must reproduce pre-precond histories
+        // bit-for-bit, so the legacy loop below is entered untouched —
+        // the preconditioned form is a separate function, not a branch
+        // inside the loop.
+        CgVariant::Classic if opts.precond == PrecondKind::None => {
+            classic(st, tp, opts, backend, exec, obs)
+        }
+        CgVariant::Classic => preconditioned(st, tp, opts, backend, exec, obs),
         CgVariant::NonBlocking => nonblocking(st, tp, opts, backend, exec, obs),
     }
 }
@@ -99,6 +107,97 @@ fn classic(
             let RankState { r_ext, p_ext, .. } = st;
             ops.axpby(1.0, &r_ext[..n], beta, &mut p_ext[..n], n);
         }
+        rr = rr_new;
+        drv.record(k + 1, rr);
+    }
+
+    drv.finish("cg", 0)
+}
+
+/// Preconditioned CG (PCG) with a rank-local `M⁻¹` (DESIGN.md §10).
+///
+/// Same two blocking barriers per iteration as classic CG — the second
+/// one carries the fused pair ((r,z), (r,r)) so residual-based
+/// convergence tracking costs no extra collective. The preconditioner
+/// application is communication-free and built from the same chunk
+/// plans as every other kernel, so the bitwise determinism contract
+/// extends unchanged.
+fn preconditioned(
+    st: &mut RankState,
+    tp: &mut dyn Transport,
+    opts: &SolveOpts,
+    backend: &mut dyn Compute,
+    exec: &Executor,
+    obs: &dyn Observer,
+) -> SolveStats {
+    let mut drv = SolverDriver::new(exec, opts, obs, tp.rank());
+    let mut ops = Ops::new(exec, opts, backend);
+    let n = st.sys.n();
+    let pc = precond::build(opts.precond, &st.sys, opts.inner_iters)
+        .expect("preconditioned CG requires precond != none");
+
+    // init: r = b; z = M⁻¹r; p = z; (rz, rr) allreduced as one pair
+    st.r_ext[..n].copy_from_slice(&st.sys.b);
+    let parts = {
+        let RankState {
+            sys,
+            r_ext,
+            p_ext,
+            z_ext,
+            pw1,
+            pw2,
+            ..
+        } = st;
+        pc.apply(&mut ops, sys, &r_ext[..n], z_ext, pw1, pw2);
+        p_ext[..n].copy_from_slice(&z_ext[..n]);
+        let rz = ops.dot(&r_ext[..n], &z_ext[..n], n);
+        let rr = ops.dot(&r_ext[..n], &r_ext[..n], n);
+        (rz, rr)
+    };
+    let (mut rz, mut rr) = drv.allreduce_pair(tp, 0, 14, parts);
+    drv.conv.set_reference(rr);
+
+    for k in 0..opts.max_iters {
+        if drv.pre_check(rr) {
+            break;
+        }
+        // halo exchange of p fused with the SpMV + local pAp
+        let part = {
+            let RankState { sys, p_ext, ap, .. } = st;
+            ops.halo_spmv_dot(&sys.a, &sys.halo, tp, p_ext, ap, DotWith::Exchanged, k, k)
+        };
+        let pap = drv.allreduce(tp, k, 15, part); // BARRIER 1
+        let alpha = rz / pap;
+
+        // x += alpha p ; r -= alpha Ap ; z = M⁻¹r ; (rz', rr') fused
+        let parts = {
+            let RankState {
+                sys,
+                x_ext,
+                r_ext,
+                p_ext,
+                ap,
+                z_ext,
+                pw1,
+                pw2,
+                ..
+            } = st;
+            ops.axpby(alpha, &p_ext[..n], 1.0, &mut x_ext[..n], n);
+            ops.axpby(-alpha, &ap[..n], 1.0, &mut r_ext[..n], n);
+            pc.apply(&mut ops, sys, &r_ext[..n], z_ext, pw1, pw2);
+            let rz = ops.dot_ordered(&r_ext[..n], &z_ext[..n], n, 2 * k);
+            let rr = ops.dot_ordered(&r_ext[..n], &r_ext[..n], n, 2 * k + 1);
+            (rz, rr)
+        };
+        let (rz_new, rr_new) = drv.allreduce_pair(tp, k, 16, parts); // BARRIER 2
+        let beta = rz_new / rz;
+
+        // p = z + beta p
+        {
+            let RankState { z_ext, p_ext, .. } = st;
+            ops.axpby(1.0, &z_ext[..n], beta, &mut p_ext[..n], n);
+        }
+        rz = rz_new;
         rr = rr_new;
         drv.record(k + 1, rr);
     }

@@ -870,6 +870,55 @@ impl Ops<'_> {
         );
     }
 
+    /// z = c·D⁻¹r over [0, n) (scaled diagonal solve, preconditioner
+    /// entry step). Element-wise, so chunking never changes the bits;
+    /// always executed by the native kernels (preconditioning is a
+    /// rank-local native tier, like the processor-local GS sweep).
+    pub fn diag_solve(&mut self, diag: &[f64], r: &[f64], z: &mut [f64], c: f64, n: usize) {
+        let blocks = self.blocks(n);
+        let rows = SharedRows::new(z);
+        self.for_each_op(
+            &blocks,
+            |r0, r1| {
+                // SAFETY: chunks write disjoint row ranges of z.
+                let z = unsafe { rows.full() };
+                kernels::diag_solve(diag, r, z, c, r0, r1);
+            },
+            |_, r0, r1| kernels::diag_solve(diag, r, z, c, r0, r1),
+        );
+    }
+
+    /// Fused preconditioner correction over [0, n):
+    /// `d = c1·d + c2·D⁻¹(r − q); z += d` (Chebyshev recurrence body;
+    /// `c1 = 0, c2 = 1` is a damped-Jacobi step). Element-wise per row,
+    /// so chunking never changes the bits.
+    #[allow(clippy::too_many_arguments)]
+    pub fn cheb_update(
+        &mut self,
+        diag: &[f64],
+        r: &[f64],
+        q: &[f64],
+        d: &mut [f64],
+        z: &mut [f64],
+        c1: f64,
+        c2: f64,
+        n: usize,
+    ) {
+        let blocks = self.blocks(n);
+        let drows = SharedRows::new(d);
+        let zrows = SharedRows::new(z);
+        self.for_each_op(
+            &blocks,
+            |r0, r1| {
+                // SAFETY: chunks write disjoint row ranges of d and z.
+                let d = unsafe { drows.full() };
+                let z = unsafe { zrows.full() };
+                kernels::cheb_update(diag, r, q, d, z, c1, c2, r0, r1);
+            },
+            |_, r0, r1| kernels::cheb_update(diag, r, q, d, z, c1, c2, r0, r1),
+        );
+    }
+
     /// Fused SpMV + dot: y = A·x_ext, returns Σ y·p. Under the task
     /// strategy each chunk's dot depends only on that chunk's SpMV — a
     /// real dependency edge instead of an inter-kernel barrier.

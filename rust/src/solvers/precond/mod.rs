@@ -1,0 +1,332 @@
+//! Preconditioner tier: rank-local `z = M⁻¹·r` applications (DESIGN.md §10).
+//!
+//! Every preconditioner here is **rank-local by construction**: the
+//! apply never reads a neighbour's halo values (the halo region of the
+//! output vector is zeroed on entry and every internal operator
+//! application therefore sees zero off-rank values — i.e. M is the
+//! block-diagonal restriction of A to the rank's rows). That keeps
+//! `M⁻¹` communication-free, so the solver's allreduce/halo schedule —
+//! and with it the bitwise determinism contract across strategies ×
+//! threads × transports × overlap × kernels — is unchanged: the
+//! preconditioned vectors are built from the same chunk plans
+//! ([`Ops::diag_solve`], [`Ops::cheb_update`], [`Ops::spmv`]) whose
+//! per-chunk results are independent of execution order, plus the
+//! sequential per-rank GS sweeps.
+//!
+//! The three implementations:
+//!
+//! * **point-Jacobi** — `inner` damped-Jacobi steps on the local block
+//!   (`inner = 1` is exact diagonal scaling `z = D⁻¹r`). Symmetric, so
+//!   PCG-safe for any `inner`.
+//! * **block-Jacobi** — `inner` *symmetric* Gauss–Seidel sweeps
+//!   (forward + backward) of the existing [`crate::kernels::gs_sweep_op`]
+//!   kernels over the rank-local block, starting from zero. The
+//!   symmetric pass makes M SPD, so PCG convergence theory applies.
+//! * **Chebyshev** — a degree-`inner` Chebyshev polynomial in D⁻¹A with
+//!   eigenvalue bounds estimated **once at build time** via Gershgorin
+//!   row sums; the apply is a fixed sequence of SpMV + fused
+//!   element-wise updates, allocation-free.
+//!
+//! All scratch lives in [`super::RankState`] (`z_ext`, `z2_ext`, `pw1`,
+//! `pw2`), sized at solve setup — the steady state stays
+//! zero-allocation (integration_alloc.rs asserts this for PCG).
+
+use super::driver::Ops;
+use crate::kernels;
+use crate::sparse::LocalSystem;
+
+/// Which preconditioner a solve applies (`SolveOpts::precond`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum PrecondKind {
+    /// No preconditioning — the legacy unpreconditioned loops run
+    /// untouched (bitwise-identical histories to pre-precond builds).
+    #[default]
+    None,
+    /// Point-Jacobi: `inner` damped-Jacobi steps (1 = `z = D⁻¹r`).
+    Jacobi,
+    /// Block-Jacobi: `inner` symmetric GS sweeps over the local block.
+    BlockJacobi,
+    /// Degree-`inner` Chebyshev polynomial in D⁻¹A (Gershgorin bounds).
+    Chebyshev,
+}
+
+impl PrecondKind {
+    /// All accepted names, in display order.
+    pub const NAMES: [&'static str; 4] = ["none", "jacobi", "block-jacobi", "chebyshev"];
+
+    pub fn parse(s: &str) -> Option<PrecondKind> {
+        match s {
+            "none" => Some(PrecondKind::None),
+            "jacobi" => Some(PrecondKind::Jacobi),
+            "block-jacobi" => Some(PrecondKind::BlockJacobi),
+            "chebyshev" => Some(PrecondKind::Chebyshev),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            PrecondKind::None => "none",
+            PrecondKind::Jacobi => "jacobi",
+            PrecondKind::BlockJacobi => "block-jacobi",
+            PrecondKind::Chebyshev => "chebyshev",
+        }
+    }
+}
+
+/// A rank-local `z = M⁻¹·r` application.
+///
+/// Contract: `apply` fully overwrites `z_ext[..n]` and zeroes
+/// `z_ext[n..]` (the halo + pad region), reads `r[..n]` only, and
+/// performs **no communication**. `w1`/`w2` are caller-provided `n`-row
+/// scratch; their prior contents are ignored.
+pub trait Preconditioner {
+    fn apply(
+        &self,
+        ops: &mut Ops,
+        sys: &LocalSystem,
+        r: &[f64],
+        z_ext: &mut [f64],
+        w1: &mut [f64],
+        w2: &mut [f64],
+    );
+
+    /// The kind this instance implements (for artifact metadata).
+    fn kind(&self) -> PrecondKind;
+}
+
+/// Build the preconditioner for `kind` at solve setup.
+///
+/// Returns `None` for [`PrecondKind::None`] so callers can branch to
+/// the untouched legacy loop. The one `Box` allocation happens at setup
+/// time, before the iteration loop — the steady state stays
+/// allocation-free.
+pub fn build(
+    kind: PrecondKind,
+    sys: &LocalSystem,
+    inner: usize,
+) -> Option<Box<dyn Preconditioner>> {
+    let inner = inner.max(1);
+    match kind {
+        PrecondKind::None => None,
+        PrecondKind::Jacobi => Some(Box::new(PointJacobi { steps: inner })),
+        PrecondKind::BlockJacobi => Some(Box::new(BlockJacobi { sweeps: inner })),
+        PrecondKind::Chebyshev => Some(Box::new(Chebyshev::new(sys, inner))),
+    }
+}
+
+/// Zero the halo + pad tail of `z_ext` so every local operator
+/// application inside the preconditioner sees zero off-rank values.
+#[inline]
+fn zero_halo(z_ext: &mut [f64], n: usize) {
+    for v in &mut z_ext[n..] {
+        *v = 0.0;
+    }
+}
+
+/// `inner` damped-Jacobi steps on the local block (exact `D⁻¹r` at 1).
+struct PointJacobi {
+    steps: usize,
+}
+
+impl Preconditioner for PointJacobi {
+    fn apply(
+        &self,
+        ops: &mut Ops,
+        sys: &LocalSystem,
+        r: &[f64],
+        z_ext: &mut [f64],
+        w1: &mut [f64],
+        w2: &mut [f64],
+    ) {
+        let n = sys.a.n;
+        zero_halo(z_ext, n);
+        // z⁽¹⁾ = D⁻¹ r
+        ops.diag_solve(&sys.a.diag, r, &mut z_ext[..n], 1.0, n);
+        for _ in 1..self.steps {
+            // z += D⁻¹ (r − A·z), local A (halo reads hit the zero tail)
+            ops.spmv(&sys.a, z_ext, w1);
+            ops.cheb_update(&sys.a.diag, r, w1, w2, &mut z_ext[..n], 0.0, 1.0, n);
+        }
+    }
+
+    fn kind(&self) -> PrecondKind {
+        PrecondKind::Jacobi
+    }
+}
+
+/// `sweeps` symmetric GS passes over the rank-local block, from zero.
+///
+/// Runs the same sequential per-rank sweep kernel as the
+/// processor-local GS method ([`kernels::gs_sweep_op`]), so it is
+/// bitwise-independent of strategy/threads by construction and
+/// dispatches per kernel layout with the proven-bitwise sweep bodies.
+struct BlockJacobi {
+    sweeps: usize,
+}
+
+impl Preconditioner for BlockJacobi {
+    fn apply(
+        &self,
+        _ops: &mut Ops,
+        sys: &LocalSystem,
+        r: &[f64],
+        z_ext: &mut [f64],
+        _w1: &mut [f64],
+        _w2: &mut [f64],
+    ) {
+        let n = sys.a.n;
+        for v in z_ext.iter_mut() {
+            *v = 0.0;
+        }
+        for _ in 0..self.sweeps {
+            kernels::gs_sweep_op(&sys.a, r, z_ext, 0..n);
+            kernels::gs_sweep_op(&sys.a, r, z_ext, (0..n).rev());
+        }
+    }
+
+    fn kind(&self) -> PrecondKind {
+        PrecondKind::BlockJacobi
+    }
+}
+
+/// Degree-`degree` Chebyshev polynomial in the diagonally scaled local
+/// operator D⁻¹A (Saad, *Iterative Methods*, alg. 12.1 adapted to
+/// preconditioning: `z = p(D⁻¹A) D⁻¹ r`).
+struct Chebyshev {
+    degree: usize,
+    /// Spectrum centre θ = (λmax + λmin)/2.
+    theta: f64,
+    /// Spectrum half-width δ = (λmax − λmin)/2.
+    delta: f64,
+}
+
+impl Chebyshev {
+    /// Estimate `λmax(D⁻¹A) ≤ max_i Σ_j |a_ij| / a_ii` (Gershgorin row
+    /// sums, halo columns included — a safe overestimate for the local
+    /// block) once at build time; assume `λmin = λmax / 30`.
+    fn new(sys: &LocalSystem, degree: usize) -> Chebyshev {
+        let a = &sys.a;
+        let mut lmax = 0.0f64;
+        for i in 0..a.n {
+            let row: f64 = a.row_vals(i).iter().map(|v| v.abs()).sum();
+            let bound = row / a.diag[i];
+            if bound > lmax {
+                lmax = bound;
+            }
+        }
+        if lmax <= 0.0 {
+            lmax = 2.0; // degenerate (empty rank) — any positive bound works
+        }
+        let lmin = lmax / 30.0;
+        Chebyshev {
+            degree,
+            theta: 0.5 * (lmax + lmin),
+            delta: 0.5 * (lmax - lmin),
+        }
+    }
+}
+
+impl Preconditioner for Chebyshev {
+    fn apply(
+        &self,
+        ops: &mut Ops,
+        sys: &LocalSystem,
+        r: &[f64],
+        z_ext: &mut [f64],
+        w1: &mut [f64],
+        w2: &mut [f64],
+    ) {
+        let n = sys.a.n;
+        let (d, q) = (w1, w2);
+        zero_halo(z_ext, n);
+        // d⁽¹⁾ = D⁻¹ r / θ;  z⁽¹⁾ = d⁽¹⁾
+        ops.diag_solve(&sys.a.diag, r, d, 1.0 / self.theta, n);
+        z_ext[..n].copy_from_slice(d);
+        let sigma = self.theta / self.delta;
+        let mut rho = 1.0 / sigma;
+        for _ in 1..self.degree {
+            // q = A·z, local (halo reads hit the zero tail)
+            ops.spmv(&sys.a, z_ext, q);
+            let rho_new = 1.0 / (2.0 * sigma - rho);
+            // d = ρ'ρ·d + (2ρ'/δ)·D⁻¹(r − q);  z += d
+            ops.cheb_update(
+                &sys.a.diag,
+                r,
+                q,
+                d,
+                &mut z_ext[..n],
+                rho_new * rho,
+                2.0 * rho_new / self.delta,
+                n,
+            );
+            rho = rho_new;
+        }
+    }
+
+    fn kind(&self) -> PrecondKind {
+        PrecondKind::Chebyshev
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exec::Executor;
+    use crate::mesh::Grid3;
+    use crate::solvers::{Native, SolveOpts};
+    use crate::sparse::StencilKind;
+
+    fn system() -> LocalSystem {
+        LocalSystem::build(Grid3::new(4, 4, 4), StencilKind::P7, 0, 1)
+    }
+
+    fn apply(kind: PrecondKind, inner: usize) -> Vec<f64> {
+        let sys = system();
+        let n = sys.a.n;
+        let pc = build(kind, &sys, inner).expect("non-none kind");
+        let exec = Executor::seq();
+        let opts = SolveOpts::default();
+        let mut backend = Native;
+        let mut ops = Ops::new(&exec, &opts, &mut backend);
+        let r: Vec<f64> = (0..n).map(|i| 1.0 + (i % 7) as f64).collect();
+        let mut z_ext = vec![f64::NAN; sys.a.n_ext];
+        let (mut w1, mut w2) = (vec![0.0; n], vec![0.0; n]);
+        pc.apply(&mut ops, &sys, &r, &mut z_ext, &mut w1, &mut w2);
+        assert!(z_ext[n..].iter().all(|&v| v == 0.0), "halo must be zeroed");
+        z_ext.truncate(n);
+        z_ext
+    }
+
+    #[test]
+    fn jacobi_single_step_is_diagonal_scaling() {
+        let sys = system();
+        let z = apply(PrecondKind::Jacobi, 1);
+        for (i, &zi) in z.iter().enumerate() {
+            let want = (1.0 + (i % 7) as f64) / sys.a.diag[i];
+            assert_eq!(zi, want, "row {i}");
+        }
+    }
+
+    #[test]
+    fn applies_are_finite_and_nonzero() {
+        for kind in [
+            PrecondKind::Jacobi,
+            PrecondKind::BlockJacobi,
+            PrecondKind::Chebyshev,
+        ] {
+            let z = apply(kind, 3);
+            assert!(z.iter().all(|v| v.is_finite()), "{kind:?}");
+            assert!(z.iter().any(|&v| v != 0.0), "{kind:?}");
+        }
+    }
+
+    #[test]
+    fn parse_and_name_round_trip() {
+        for name in PrecondKind::NAMES {
+            let k = PrecondKind::parse(name).unwrap();
+            assert_eq!(k.name(), name);
+        }
+        assert_eq!(PrecondKind::parse("ilu"), None);
+    }
+}

@@ -157,6 +157,83 @@ impl LocalSystem {
         }
     }
 
+    /// Assemble the **anisotropic variable-coefficient** variant of the
+    /// stencil system — the hard problem the preconditioner tier is
+    /// measured on (DESIGN.md §10).
+    ///
+    /// Each cell carries a deterministic coefficient σ(g) ∈ [1, 100)
+    /// (log-uniform, from an integer hash of the *global* index, so
+    /// every rank count assembles the same global matrix). The edge to
+    /// neighbour `(dx,dy,dz)` gets weight
+    /// `-(wx^|dx| · wy^|dy| · wz^|dz|) · sqrt(σ_i σ_j)` with
+    /// `(wx, wy, wz) = (1, 0.1, 0.01)` — strong x-coupling, weak y/z —
+    /// and the diagonal is the absolute row sum plus `0.01·σ_i`, so A
+    /// is symmetric positive definite with a thin dominance margin.
+    /// The 100× coefficient jumps plus the anisotropy stall plain
+    /// CG/BiCGStab; diagonal-aware preconditioners recover most of it.
+    ///
+    /// The rhs is `b = A·1` (exact solution x = 1, like the HPCG
+    /// variant). No matrix-free stencil twin exists for this matrix —
+    /// `csr`/`ell`/`sell` kernels apply, `stencil` is rejected at
+    /// kernel selection.
+    pub fn build_aniso(grid: Grid3, kind: StencilKind, rank: usize, nranks: usize) -> Self {
+        let part = Partition::new(grid, rank, nranks);
+        let offs = stencil_offsets(kind);
+        let w = kind.width();
+        let n = part.n_local();
+        let mut a = EllMatrix::new(n, w, part.n_ext());
+        let mut b = vec![0.0; n];
+        let mut red_mask = vec![false; n];
+        let (wx, wy, wz) = (1.0f64, 0.1f64, 0.01f64);
+
+        for lrow in 0..n {
+            let grow = part.global_of_local(lrow);
+            let (x, y, z) = grid.coords(grow);
+            red_mask[lrow] = (x + y + z) % 2 == 0;
+            let sig_i = aniso_sigma(grow as u64);
+            let mut bsum = 0.0;
+            let mut rowsum = 0.0;
+            // off-diagonals first; slot 0 (the diagonal) is set after
+            // the absolute row sum is known
+            for (e, &(dx, dy, dz)) in offs.iter().enumerate().skip(1) {
+                let (gx, gy, gz) = (x as i64 + dx, y as i64 + dy, z as i64 + dz);
+                let inside = gx >= 0
+                    && gy >= 0
+                    && gz >= 0
+                    && (gx as usize) < grid.nx
+                    && (gy as usize) < grid.ny
+                    && (gz as usize) < grid.nz;
+                if !inside {
+                    continue;
+                }
+                let gcol = grid.idx(gx as usize, gy as usize, gz as usize);
+                let sig_j = aniso_sigma(gcol as u64);
+                let aniso = wx.powi(dx.unsigned_abs() as i32)
+                    * wy.powi(dy.unsigned_abs() as i32)
+                    * wz.powi(dz.unsigned_abs() as i32);
+                let val = -aniso * (sig_i * sig_j).sqrt();
+                bsum += val;
+                rowsum += val.abs();
+                let lcol = part
+                    .local_of_global(gcol)
+                    .unwrap_or_else(|| panic!("column {gcol} not visible from rank {rank}"));
+                a.set(lrow, e, lcol, val);
+            }
+            let diag_val = rowsum + 0.01 * sig_i;
+            a.set(lrow, 0, lrow, diag_val);
+            b[lrow] = bsum + diag_val;
+        }
+        let halo = part.halo_map();
+        LocalSystem {
+            part,
+            kind,
+            a: Operator::from_ell(a),
+            b,
+            halo,
+            red_mask,
+        }
+    }
+
     pub fn n(&self) -> usize {
         self.a.n
     }
@@ -165,6 +242,19 @@ impl LocalSystem {
     pub fn new_ext(&self) -> Vec<f64> {
         vec![0.0; self.part.n_ext()]
     }
+}
+
+/// Deterministic per-cell coefficient σ ∈ [1, 100), log-uniform in the
+/// global index (splitmix64 finaliser — any rank hashing the same
+/// global cell gets the same coefficient, bit for bit).
+fn aniso_sigma(g: u64) -> f64 {
+    let mut h = g.wrapping_add(0x9e3779b97f4a7c15);
+    h = (h ^ (h >> 30)).wrapping_mul(0xbf58476d1ce4e5b9);
+    h = (h ^ (h >> 27)).wrapping_mul(0x94d049bb133111eb);
+    h ^= h >> 31;
+    // uniform in [0, 1) from the top 53 bits, then log-uniform spread
+    let u = (h >> 11) as f64 / (1u64 << 53) as f64;
+    100f64.powf(u)
 }
 
 #[cfg(test)]

@@ -20,7 +20,7 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 use hlam::exec::{ExecSpec, ExecStrategy};
 use hlam::mesh::Grid3;
 use hlam::simmpi::TransportKind;
-use hlam::solvers::{Method, Observer, Problem, SolveOpts};
+use hlam::solvers::{Method, Observer, PrecondKind, Problem, SolveOpts};
 use hlam::sparse::{KernelKind, StencilKind};
 
 /// System allocator with a process-wide allocation counter (`alloc` and
@@ -153,6 +153,56 @@ fn steady_state_iterations_do_not_allocate() {
                      the zero-allocation steady state regressed",
                     strategy.name(),
                     kernel.name(),
+                );
+            }
+        }
+    }
+
+    // Preconditioned CG (DESIGN.md §10): every M⁻¹ apply runs through
+    // the same cached chunk plans and the preallocated z/d/q workspace
+    // vectors in RankState, so the steady-state bounds hold unchanged —
+    // the preconditioner tier adds no per-iteration allocation.
+    for (precond, inner) in [
+        (PrecondKind::Jacobi, 2),
+        (PrecondKind::BlockJacobi, 2),
+        (PrecondKind::Chebyshev, 3),
+    ] {
+        let popts = SolveOpts {
+            eps: 0.0,
+            max_iters: ITERS,
+            precond,
+            inner_iters: inner,
+            ..SolveOpts::default()
+        };
+        for (strategy, threads, ranks, overlap, bound) in [
+            (ExecStrategy::Seq, 1usize, 1usize, false, 0usize),
+            (ExecStrategy::Seq, 1, 2, true, 2),
+            (ExecStrategy::TaskPool, 4, 2, true, 8),
+        ] {
+            let mut pb = Problem::build(grid, StencilKind::P7, ranks);
+            let probe = AllocProbe::new();
+            let spec = ExecSpec::new(strategy, threads).with_overlap(overlap);
+            let stats = pb.solve_hybrid_observed(
+                Method::parse("cg").unwrap(),
+                &popts,
+                &spec,
+                TransportKind::Lockstep,
+                &probe,
+            );
+            assert_eq!(
+                stats.iterations, ITERS,
+                "pcg/{}: must run all iters",
+                precond.name()
+            );
+            for i in (WARMUP + 1)..=ITERS {
+                let d = probe.delta(i);
+                assert!(
+                    d <= bound,
+                    "pcg precond={} {} threads={threads} ranks={ranks} overlap={overlap}: \
+                     iteration {i} performed {d} heap allocations (allowed {bound}) — \
+                     the preconditioned zero-allocation steady state regressed",
+                    precond.name(),
+                    strategy.name(),
                 );
             }
         }

@@ -33,6 +33,23 @@ import sys
 METHODS = ["jacobi", "gs", "cg", "bicgstab"]
 STRATEGIES = ["seq", "fork-join", "task"]
 KERNELS = ["csr", "ell", "sell", "stencil"]
+# the preconditioner time-to-tolerance grid (anisotropic problem):
+# (method, precond) cells the bench must emit
+PRECOND_CELLS = [
+    ("cg", "none"),
+    ("cg", "jacobi"),
+    ("cg", "block-jacobi"),
+    ("cg", "chebyshev"),
+    ("bicgstab", "none"),
+    ("bicgstab", "jacobi"),
+    ("bicgstab", "block-jacobi"),
+    ("bicgstab", "chebyshev"),
+    ("multisplit", "block-jacobi"),
+]
+# a diagonal-aware preconditioner must cut plain CG's iteration count on
+# the anisotropic problem by at least this factor (deterministic check —
+# iteration counts carry no timing noise)
+PRECOND_MIN_ITER_RATIO = 3.0
 
 
 def fail(msg):
@@ -63,6 +80,16 @@ def spmv_cells(doc):
     """Index spmv entries by kernel name."""
     section = doc.get("spmv", {})
     return {e["kernel"]: e for e in section.get("entries", [])}
+
+
+def precond_cells(doc):
+    """Index precond entries by (method, precond) — absent section → {}.
+
+    Snapshots committed before the preconditioner tier landed have no
+    ``precond`` key; callers treat the empty map as "old schema".
+    """
+    section = doc.get("precond", {})
+    return {(e["method"], e["precond"]): e for e in section.get("entries", [])}
 
 
 def validate_fresh(doc):
@@ -110,8 +137,45 @@ def validate_fresh(doc):
     for k, e in spmv.items():
         assert e["rows_per_sec"] > 0, (k, e)
         assert e["seconds_median"] >= e["seconds_min"] > 0, (k, e)
+    precond = precond_cells(doc)
+    assert sorted(precond) == sorted(PRECOND_CELLS), (
+        f"precond section must cover {sorted(PRECOND_CELLS)}, "
+        f"got {sorted(precond)}"
+    )
+    for key, e in precond.items():
+        assert e["iterations"] > 0, (key, e)
+        assert e["inner"] >= 1, (key, e)
+        assert e["seconds_median"] >= e["seconds_min"] > 0, (key, e)
+        assert e["seconds_stddev"] >= 0, (key, e)
+    # the headline claim of the preconditioner tier: on the anisotropic
+    # problem at least one diagonal-aware preconditioner cuts plain CG's
+    # iterations >= 3x AND its wall-clock. Fully enforced on full-size
+    # runs; the CI quick grid (16^3) is small enough that the advantage
+    # shrinks and solves are sub-millisecond, so quick runs only require
+    # a 1.5x iteration cut and skip the (noise-dominated) timing check.
+    quick = bool(doc.get("quick"))
+    min_ratio = 1.5 if quick else PRECOND_MIN_ITER_RATIO
+    plain = precond[("cg", "none")]
+    best_iter_ratio = 0.0
+    faster = False
+    for p in ("block-jacobi", "chebyshev"):
+        e = precond[("cg", p)]
+        ratio = plain["iterations"] / e["iterations"]
+        best_iter_ratio = max(best_iter_ratio, ratio)
+        if ratio >= min_ratio and \
+                e["seconds_median"] < plain["seconds_median"]:
+            faster = True
+    assert best_iter_ratio >= min_ratio, (
+        f"no preconditioner reached a {min_ratio:.1f}x iteration cut over "
+        f"plain cg (best {best_iter_ratio:.2f}x) on the anisotropic problem"
+    )
+    assert quick or faster, (
+        f"a preconditioner cut iterations {best_iter_ratio:.2f}x but none "
+        f"also beat plain cg's wall-clock to tolerance"
+    )
     print(f"perf gate: fresh snapshot schema ok ({len(entries)} solver cells, "
-          f"{len(spmv)} spmv cells)")
+          f"{len(spmv)} spmv cells, {len(precond)} precond cells — best cg "
+          f"iteration cut {best_iter_ratio:.1f}x)")
 
 
 def compare(fresh, baseline, band):
@@ -148,6 +212,33 @@ def compare(fresh, baseline, band):
             regressions.append(
                 f"spmv {k}: {f['rows_per_sec']:.3e} rows/s vs baseline "
                 f"{b['rows_per_sec']:.3e} (floor {floor:.3e}, band {band:.0%})"
+            )
+    base_precond = precond_cells(baseline)
+    if not base_precond:
+        print("perf gate: SKIP precond comparison — baseline predates the "
+              "preconditioner section (old schema). Commit a fresh "
+              "`cargo bench --bench hot_path` snapshot to arm it.")
+    for key, b in sorted(base_precond.items()):
+        f = precond_cells(fresh).get(key)
+        if f is None:
+            print(f"perf gate: note: baseline precond cell {key} absent from "
+                  f"fresh snapshot — not compared")
+            continue
+        compared += 1
+        # time-to-tolerance: lower is better, so the floor is a ceiling
+        ceiling = b["seconds_median"] * (1.0 + band)
+        if f["seconds_median"] > ceiling:
+            regressions.append(
+                f"precond {key}: {f['seconds_median']:.4f}s to tolerance vs "
+                f"baseline {b['seconds_median']:.4f}s (ceiling {ceiling:.4f}, "
+                f"band {band:.0%})"
+            )
+        # iteration counts are deterministic — any growth is a real
+        # convergence regression, not noise
+        if f["iterations"] > b["iterations"]:
+            regressions.append(
+                f"precond {key}: iterations-to-tolerance grew "
+                f"{b['iterations']} -> {f['iterations']}"
             )
     print(f"perf gate: compared {compared} cells at noise band {band:.0%}")
     return regressions
