@@ -1,0 +1,209 @@
+//! Service throughput benchmark: replay a mixed workload trace through
+//! the concurrent solve service and record solves/sec, queue-latency
+//! percentiles, and the batch hit rate in `BENCH_service.json` (repo
+//! root). A second pass replays the same trace against a deliberately
+//! tiny queue cap to prove admission control sheds load with structured
+//! `queue-full` rejects rather than unbounded buffering.
+//!
+//!     cargo bench --bench service            # 100-spec trace, 4 workers
+//!     cargo bench --bench service -- --quick # 30-spec CI smoke run
+//!
+//! The trace (`harness::workload_trace`) mixes methods, exec
+//! strategies, transports, and kernel backends while clustering on
+//! three assembly plans, so plan-keyed routing is guaranteed batch
+//! reuse: every plan's second job onward hits its worker's cached
+//! assembly. Determinism of the *results* under this concurrency is
+//! not asserted here — `tests/integration_service.rs` pins that — this
+//! bench measures the throughput side of the ISSUE's contract.
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+use hlam::api::RunSpec;
+use hlam::harness::workload_trace;
+use hlam::service::{RejectCode, Response, Service, ServiceConfig, SolveRequest};
+use hlam::stats::quantile_sorted;
+use hlam::util::json::Json;
+
+const SEED: u64 = 20230412;
+
+fn submit_all(service: &Service, trace: &[RunSpec]) {
+    for (i, spec) in trace.iter().enumerate() {
+        service.submit(
+            SolveRequest {
+                id: Some(format!("job-{i}")),
+                spec: spec.clone(),
+                iter_budget: None,
+            },
+            None,
+        );
+    }
+}
+
+fn sorted(mut v: Vec<f64>) -> Vec<f64> {
+    v.sort_by(f64::total_cmp);
+    v
+}
+
+fn put_num(m: &mut BTreeMap<String, Json>, key: &str, v: f64) {
+    m.insert(key.to_string(), Json::Num(v));
+}
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let (n, workers, total_threads) = if quick {
+        (30usize, 2usize, 4usize)
+    } else {
+        (100, 4, 8)
+    };
+    let trace = workload_trace(n, SEED);
+    println!(
+        "== service throughput ({n} mixed specs, {workers} workers, \
+         {total_threads}-lane budget) =="
+    );
+
+    // -- main pass: everything admitted, measure the pipeline ---------
+    let cfg = ServiceConfig {
+        workers,
+        total_threads,
+        queue_cap: n, // the whole trace fits: no admission noise in timings
+        default_iter_budget: None,
+        exec_cache_sets: 4,
+    };
+    let service = Service::start(cfg);
+    let t0 = Instant::now();
+    submit_all(&service, &trace);
+    let responses = service.drain();
+    let wall = t0.elapsed().as_secs_f64();
+    let counters = service.shutdown();
+
+    assert_eq!(responses.len(), n, "one response per request");
+    let oks: Vec<_> = responses.iter().filter_map(|r| r.as_ok()).collect();
+    assert_eq!(oks.len(), n, "every trace spec must solve cleanly");
+    let queue_ms = sorted(oks.iter().map(|o| o.queue_ms).collect());
+    let solve_ms = sorted(oks.iter().map(|o| o.solve_ms).collect());
+    let solves_per_sec = n as f64 / wall;
+    let hit_rate =
+        counters.batch_hits as f64 / (counters.batch_hits + counters.batch_misses) as f64;
+    assert!(
+        counters.batch_hits >= 1,
+        "three plans over {n} jobs must produce batch reuse"
+    );
+
+    println!("  {solves_per_sec:8.1} solves/sec  wall {wall:.3}s");
+    println!(
+        "  queue_ms p50 {:8.3}  p95 {:8.3}   solve_ms p50 {:8.3}  p95 {:8.3}",
+        quantile_sorted(&queue_ms, 0.50),
+        quantile_sorted(&queue_ms, 0.95),
+        quantile_sorted(&solve_ms, 0.50),
+        quantile_sorted(&solve_ms, 0.95),
+    );
+    println!(
+        "  batch {}/{} hit rate {:.2}  plans {}  peak lanes {}/{}",
+        counters.batch_hits,
+        counters.batch_hits + counters.batch_misses,
+        hit_rate,
+        counters.distinct_plans,
+        counters.peak_lanes,
+        counters.total_lanes,
+    );
+
+    // -- small-cap pass: same trace, queue cap 2, scheduling paused so
+    // the reject count is deterministic (2 admitted, the rest shed) ---
+    let small_cap = 2usize;
+    let small = Service::start_paused(ServiceConfig {
+        workers,
+        total_threads,
+        queue_cap: small_cap,
+        default_iter_budget: None,
+        exec_cache_sets: 4,
+    });
+    submit_all(&small, &trace);
+    small.resume();
+    let small_responses = small.drain();
+    let small_counters = small.shutdown();
+    let queue_full = small_responses
+        .iter()
+        .filter(|r| {
+            matches!(
+                r,
+                Response::Reject {
+                    code: RejectCode::QueueFull,
+                    ..
+                }
+            )
+        })
+        .count();
+    assert_eq!(
+        queue_full,
+        n - small_cap,
+        "a paused cap-{small_cap} service admits exactly {small_cap} jobs"
+    );
+    println!(
+        "  small-cap pass: cap {small_cap} -> {} completed, {queue_full} queue-full rejects",
+        small_counters.completed
+    );
+
+    // -- emit the trajectory point ------------------------------------
+    let mut root = BTreeMap::new();
+    root.insert("bench".to_string(), Json::Str("service".to_string()));
+    root.insert("quick".to_string(), Json::Bool(quick));
+    put_num(&mut root, "requests", n as f64);
+    put_num(&mut root, "seed", SEED as f64);
+    put_num(&mut root, "workers", workers as f64);
+    put_num(&mut root, "total_threads", total_threads as f64);
+    put_num(&mut root, "wall_seconds", wall);
+    put_num(&mut root, "solves_per_sec", solves_per_sec);
+    put_num(&mut root, "queue_ms_p50", quantile_sorted(&queue_ms, 0.50));
+    put_num(&mut root, "queue_ms_p95", quantile_sorted(&queue_ms, 0.95));
+    put_num(&mut root, "solve_ms_p50", quantile_sorted(&solve_ms, 0.50));
+    put_num(&mut root, "solve_ms_p95", quantile_sorted(&solve_ms, 0.95));
+    put_num(&mut root, "batch_hits", counters.batch_hits as f64);
+    put_num(&mut root, "batch_misses", counters.batch_misses as f64);
+    put_num(&mut root, "batch_hit_rate", hit_rate);
+    put_num(&mut root, "distinct_plans", counters.distinct_plans as f64);
+    put_num(&mut root, "peak_lanes", counters.peak_lanes as f64);
+    put_num(&mut root, "total_lanes", counters.total_lanes as f64);
+    let mut sc = BTreeMap::new();
+    put_num(&mut sc, "queue_cap", small_cap as f64);
+    put_num(&mut sc, "rejected_queue_full", queue_full as f64);
+    put_num(&mut sc, "completed", small_counters.completed as f64);
+    root.insert("small_cap".to_string(), Json::Obj(sc));
+    // freshly measured, never provisional (cf. BENCH_hot_path.json)
+    root.insert("provisional".to_string(), Json::Bool(false));
+    let doc = Json::Obj(root);
+
+    let out = format!("{}/../BENCH_service.json", env!("CARGO_MANIFEST_DIR"));
+    std::fs::write(&out, format!("{doc}\n")).expect("write BENCH_service.json");
+    // round-trip schema check: the file CI uploads must parse and carry
+    // the throughput fields plus evidence of both batching and shedding
+    let text = std::fs::read_to_string(&out).expect("read back");
+    let parsed = Json::parse(&text).expect("BENCH_service.json must parse");
+    assert_eq!(parsed.get("bench").and_then(Json::as_str), Some("service"));
+    for key in [
+        "solves_per_sec",
+        "queue_ms_p50",
+        "queue_ms_p95",
+        "batch_hit_rate",
+    ] {
+        let v = parsed.get(key).and_then(Json::as_f64).expect(key);
+        assert!(v.is_finite() && v >= 0.0, "{key} must be a finite measure");
+    }
+    assert!(
+        parsed
+            .get("batch_hits")
+            .and_then(Json::as_usize)
+            .expect("batch_hits")
+            >= 1
+    );
+    assert!(
+        parsed
+            .get("small_cap")
+            .and_then(|s| s.get("rejected_queue_full"))
+            .and_then(Json::as_usize)
+            .expect("small_cap.rejected_queue_full")
+            >= 1
+    );
+    assert_eq!(parsed.get("provisional"), Some(&Json::Bool(false)));
+    println!("\nwrote {out}");
+}

@@ -69,21 +69,6 @@ const BACKEND_VALID: &str = "native|xla";
 const KERNEL_VALID: &str = "csr|ell|sell|stencil";
 const PRECOND_VALID: &str = "none|jacobi|block-jacobi|chebyshev";
 
-/// Every parseable method name: the 8 paper variants plus the
-/// multisplitting outer solver (kept out of [`Method::NAMES`], which
-/// the harness sweeps as "the paper's 8").
-const METHOD_CANDIDATES: [&str; 9] = [
-    "jacobi",
-    "gs",
-    "gs-rb",
-    "gs-relaxed",
-    "cg",
-    "cg-nb",
-    "bicgstab",
-    "bicgstab-b1",
-    "multisplit",
-];
-
 fn unknown(
     what: &'static str,
     input: &str,
@@ -109,7 +94,9 @@ impl FromStr for Method {
     /// assert!(err.to_string().contains("did you mean 'cg'"));
     /// ```
     fn from_str(s: &str) -> Result<Self, SpecError> {
-        Method::parse(s).ok_or_else(|| unknown("method", s, METHOD_VALID, &METHOD_CANDIDATES))
+        // suggestions index Method::ALL_NAMES (the 8 paper variants
+        // plus multisplit), so every parseable method is suggestable
+        Method::parse(s).ok_or_else(|| unknown("method", s, METHOD_VALID, &Method::ALL_NAMES))
     }
 }
 

@@ -15,14 +15,14 @@
 use std::path::PathBuf;
 use std::rc::Rc;
 
-use crate::exec::{ExecSpec, Executor};
+use crate::exec::{ExecSpec, Executor, ThreadBudget, ThreadLease};
 use crate::mesh::Grid3;
 use crate::runtime::{Runtime, XlaCompute};
 use crate::simmpi::{TransportKind, WorldStats};
 use crate::solvers::{NoopObserver, Observer, Problem, SolveStats};
 use crate::sparse::StencilKind;
 
-use super::{BackendKind, RunSpec, SolveError};
+use super::{BackendKind, RunSpec, SolveError, SpecError};
 
 struct CacheEntry {
     grid: Grid3,
@@ -65,6 +65,13 @@ pub struct Session {
     cache: Vec<CacheEntry>,
     /// Persistent per-rank executors keyed by {exec spec, ranks}.
     exec_cache: Vec<ExecCacheEntry>,
+    /// Bound on distinct cached executor sets (oldest evicted beyond
+    /// it). `None` — the historical default — caches without bound.
+    exec_cache_limit: Option<usize>,
+    /// Machine-wide compute-lane budget shared with other sessions.
+    /// When set, every native run leases `ranks × threads` lanes for
+    /// its duration instead of assuming it owns the machine.
+    budget: Option<ThreadBudget>,
     /// Lazily-loaded PJRT runtime (one load per session, not per run).
     runtime: Option<Rc<Runtime>>,
     last_world: Option<WorldStats>,
@@ -90,8 +97,39 @@ impl Session {
             artifacts: dir.into(),
             cache: Vec::new(),
             exec_cache: Vec::new(),
+            exec_cache_limit: None,
+            budget: None,
             runtime: None,
             last_world: None,
+        }
+    }
+
+    /// Share a machine-wide [`ThreadBudget`] with this session: every
+    /// later native run leases `ranks × threads` compute lanes from it
+    /// (blocking until they are free) and returns them when the solve
+    /// finishes. N sessions sharing one budget therefore never run more
+    /// lanes concurrently than the budget's total — the service layer's
+    /// oversubscription guard. Leasing never changes numerics: it
+    /// gates *when* a run starts, not what it computes.
+    pub fn set_thread_budget(&mut self, budget: ThreadBudget) {
+        self.budget = Some(budget);
+    }
+
+    /// The shared thread budget, if one was set.
+    pub fn thread_budget(&self) -> Option<&ThreadBudget> {
+        self.budget.as_ref()
+    }
+
+    /// Bound the executor cache to `limit` distinct {exec spec, ranks}
+    /// sets; the oldest set (and its parked OS threads) is dropped when
+    /// a new one would exceed the bound. Long-lived multi-tenant
+    /// callers set this so arbitrary client specs cannot grow the
+    /// per-session thread population without bound.
+    pub fn set_exec_cache_limit(&mut self, limit: usize) {
+        assert!(limit >= 1, "an executor cache needs room for one set");
+        self.exec_cache_limit = Some(limit);
+        while self.exec_cache.len() > limit {
+            self.exec_cache.remove(0);
         }
     }
 
@@ -114,6 +152,28 @@ impl Session {
         obs: &dyn Observer,
     ) -> Result<SolveStats, SolveError> {
         spec.validate()?;
+        // with a shared budget, lease the run's compute lanes up front
+        // (blocking while other sessions hold them) and release on every
+        // exit path — the lease is RAII and carries no numeric state
+        let _lease: Option<ThreadLease> = match &self.budget {
+            None => None,
+            Some(b) => {
+                let lanes = spec.ranks * spec.exec.threads;
+                if !b.fits(lanes) {
+                    return Err(SolveError::Spec(SpecError::Invalid {
+                        field: "threads",
+                        reason: format!(
+                            "run needs {lanes} compute lanes (ranks {} x threads {}) but \
+                             the session's thread budget holds only {}",
+                            spec.ranks,
+                            spec.exec.threads,
+                            b.total()
+                        ),
+                    }));
+                }
+                Some(b.lease(lanes))
+            }
+        };
         let rt = match spec.backend {
             BackendKind::Xla => Some(self.runtime()?),
             BackendKind::Native => None,
@@ -121,7 +181,7 @@ impl Session {
         // split borrows: problem assembly and executors live in disjoint
         // caches, so one run can hold both
         let Session {
-            cache, exec_cache, ..
+            cache, exec_cache, exec_cache_limit, ..
         } = self;
         let pb = Self::problem_in(cache, spec.grid, spec.stencil, spec.ranks);
         // kernel layout is a per-run switch on the cached assembly:
@@ -131,7 +191,7 @@ impl Session {
         pb.set_kernel(spec.kernel);
         let stats = match spec.backend {
             BackendKind::Native => {
-                let execs = Self::execs_in(exec_cache, &spec.exec, spec.ranks);
+                let execs = Self::execs_in(exec_cache, *exec_cache_limit, &spec.exec, spec.ranks);
                 pb.solve_hybrid_execs_observed(spec.method, &spec.opts, execs, spec.transport, obs)
             }
             BackendKind::Xla => {
@@ -202,9 +262,11 @@ impl Session {
 
     /// The persistent per-rank executors for {spec, ranks} — built (and
     /// their pools/teams spawned) on first use, reused by every later
-    /// native run of the session.
+    /// native run of the session. With a cache limit set, the oldest
+    /// set is evicted (threads joined) to make room.
     fn execs_in<'c>(
         exec_cache: &'c mut Vec<ExecCacheEntry>,
+        limit: Option<usize>,
         spec: &ExecSpec,
         ranks: usize,
     ) -> &'c [Executor] {
@@ -213,6 +275,11 @@ impl Session {
             .position(|e| e.spec == *spec && e.execs.len() == ranks)
         {
             return &exec_cache[i].execs;
+        }
+        if let Some(limit) = limit {
+            while exec_cache.len() >= limit {
+                exec_cache.remove(0);
+            }
         }
         let execs: Vec<Executor> = (0..ranks).map(|_| spec.build()).collect();
         exec_cache.push(ExecCacheEntry {
@@ -385,6 +452,61 @@ mod tests {
                 assert_eq!(x.to_bits(), y.to_bits(), "kernel {} changed bits", k.name());
             }
         }
+    }
+
+    #[test]
+    fn budget_leases_are_returned_and_oversized_specs_rejected() {
+        use crate::exec::ThreadBudget;
+        let mut s = Session::new();
+        s.set_thread_budget(ThreadBudget::new(2));
+        let spec = RunSpec::builder().grid_str("4x4x8").ranks(2).build().unwrap();
+        let a = s.run(&spec).unwrap();
+        let b = s.thread_budget().unwrap();
+        assert_eq!(b.in_use(), 0, "lease must be returned after the run");
+        assert_eq!(b.peak_in_use(), 2, "ranks x threads lanes were held");
+        assert_eq!(b.leases_granted(), 1);
+        // leasing is numerically invisible
+        let mut plain = Session::new();
+        let c = plain.run(&spec).unwrap();
+        for (x, y) in a.history.iter().zip(&c.history) {
+            assert_eq!(x.to_bits(), y.to_bits(), "budget lease changed bits");
+        }
+        // a spec that can never fit is a structured error, not a hang
+        let big = RunSpec::builder().grid_str("4x4x8").ranks(4).build().unwrap();
+        match s.run(&big) {
+            Err(SolveError::Spec(SpecError::Invalid { field, .. })) => {
+                assert_eq!(field, "threads")
+            }
+            other => panic!("expected over-budget spec error, got {other:?}"),
+        }
+        assert_eq!(s.thread_budget().unwrap().in_use(), 0);
+    }
+
+    #[test]
+    fn exec_cache_limit_evicts_the_oldest_set() {
+        use crate::exec::ExecStrategy;
+        let mut s = Session::new();
+        s.set_exec_cache_limit(2);
+        let mk = |strategy, threads| {
+            RunSpec::builder()
+                .grid_str("4x4x8")
+                .exec(ExecSpec::new(strategy, threads))
+                .build()
+                .unwrap()
+        };
+        s.run(&mk(ExecStrategy::Seq, 1)).unwrap();
+        s.run(&mk(ExecStrategy::ForkJoin, 2)).unwrap();
+        assert_eq!(s.cached_executor_sets(), 2);
+        s.run(&mk(ExecStrategy::TaskPool, 2)).unwrap();
+        assert_eq!(s.cached_executor_sets(), 2, "oldest set must be evicted");
+        // the survivors are the two most recent sets: re-running them
+        // builds nothing new
+        s.run(&mk(ExecStrategy::ForkJoin, 2)).unwrap();
+        s.run(&mk(ExecStrategy::TaskPool, 2)).unwrap();
+        assert_eq!(s.cached_executor_sets(), 2);
+        // tightening the limit prunes immediately
+        s.set_exec_cache_limit(1);
+        assert_eq!(s.cached_executor_sets(), 1);
     }
 
     #[test]

@@ -1,0 +1,231 @@
+//! Thread-budget accounting for concurrent solves.
+//!
+//! A single solve sizes its executors freely: `Session` builds one
+//! [`super::Executor`] per rank and the machine is otherwise idle. A
+//! *service* running N solves at once cannot — N jobs each spawning
+//! `ranks × threads` compute lanes oversubscribe the cores and recreate
+//! exactly the MPI×OpenMP contention the hybrid-parallelism literature
+//! warns about (PAPERS.md, arXiv 1303.5275). The fix is the classic
+//! one: a machine-wide budget of compute lanes that concurrent jobs
+//! lease from and return to, so the *sum* of active lanes never exceeds
+//! the configured total regardless of how many jobs are in flight.
+//!
+//! [`ThreadBudget`] is that budget: a counting semaphore over an
+//! explicit lane total, handing out RAII [`ThreadLease`]s. Leases are
+//! acquired whole (a job needs all its ranks' executors at once —
+//! partial acquisition would deadlock two half-admitted jobs) and
+//! returned on drop, waking blocked waiters. The budget carries no
+//! numeric state and never touches the solve itself, so leasing cannot
+//! perturb results — it only decides *when* a job's executors run.
+
+use std::sync::{Arc, Condvar, Mutex};
+
+#[derive(Debug)]
+struct State {
+    in_use: usize,
+    /// High-water mark of concurrently leased lanes.
+    peak: usize,
+    /// Total leases ever granted.
+    granted: u64,
+}
+
+#[derive(Debug)]
+struct Inner {
+    total: usize,
+    state: Mutex<State>,
+    freed: Condvar,
+}
+
+/// A shared budget of compute lanes (`ranks × threads` slots) that
+/// concurrent jobs lease executors against. Cloning is cheap and shares
+/// the budget (`Arc` inside); the type is `Send + Sync`.
+///
+/// ```
+/// use hlam::exec::ThreadBudget;
+/// let budget = ThreadBudget::new(4);
+/// let a = budget.try_lease(3).expect("3 of 4 lanes free");
+/// assert!(budget.try_lease(2).is_none(), "only 1 lane left");
+/// drop(a);
+/// assert_eq!(budget.in_use(), 0);
+/// assert!(budget.try_lease(2).is_some());
+/// ```
+#[derive(Debug, Clone)]
+pub struct ThreadBudget {
+    inner: Arc<Inner>,
+}
+
+impl ThreadBudget {
+    /// A budget of `total` compute lanes. `total` must be at least 1.
+    pub fn new(total: usize) -> ThreadBudget {
+        assert!(total >= 1, "a thread budget needs at least one lane");
+        ThreadBudget {
+            inner: Arc::new(Inner {
+                total,
+                state: Mutex::new(State {
+                    in_use: 0,
+                    peak: 0,
+                    granted: 0,
+                }),
+                freed: Condvar::new(),
+            }),
+        }
+    }
+
+    /// The configured lane total.
+    pub fn total(&self) -> usize {
+        self.inner.total
+    }
+
+    /// Lanes currently leased out.
+    pub fn in_use(&self) -> usize {
+        self.inner.state.lock().unwrap().in_use
+    }
+
+    /// High-water mark of concurrently leased lanes (proof that a
+    /// service actually ran jobs concurrently — and never over budget).
+    pub fn peak_in_use(&self) -> usize {
+        self.inner.state.lock().unwrap().peak
+    }
+
+    /// Total leases granted so far.
+    pub fn leases_granted(&self) -> u64 {
+        self.inner.state.lock().unwrap().granted
+    }
+
+    /// Can a request for `lanes` ever be satisfied? Admission control
+    /// checks this up front and rejects oversized jobs with a
+    /// structured error instead of letting them block forever.
+    pub fn fits(&self, lanes: usize) -> bool {
+        lanes >= 1 && lanes <= self.inner.total
+    }
+
+    /// Non-blocking acquisition: `Some(lease)` if `lanes` are free right
+    /// now, `None` otherwise (including requests that can never fit).
+    pub fn try_lease(&self, lanes: usize) -> Option<ThreadLease> {
+        if !self.fits(lanes) {
+            return None;
+        }
+        let mut st = self.inner.state.lock().unwrap();
+        if st.in_use + lanes > self.inner.total {
+            return None;
+        }
+        Some(Self::grant(&self.inner, &mut st, lanes))
+    }
+
+    /// Blocking acquisition: waits until `lanes` are free. Panics on a
+    /// request that can never fit (callers gate with [`Self::fits`] —
+    /// an oversized request is an admission error, not a queue state).
+    pub fn lease(&self, lanes: usize) -> ThreadLease {
+        assert!(
+            self.fits(lanes),
+            "lease of {lanes} lanes can never fit a budget of {} (admission \
+             control must reject the job instead)",
+            self.inner.total
+        );
+        let mut st = self.inner.state.lock().unwrap();
+        while st.in_use + lanes > self.inner.total {
+            st = self.inner.freed.wait(st).unwrap();
+        }
+        Self::grant(&self.inner, &mut st, lanes)
+    }
+
+    fn grant(inner: &Arc<Inner>, st: &mut State, lanes: usize) -> ThreadLease {
+        st.in_use += lanes;
+        st.peak = st.peak.max(st.in_use);
+        st.granted += 1;
+        ThreadLease {
+            inner: inner.clone(),
+            lanes,
+        }
+    }
+}
+
+/// RAII grant of compute lanes from a [`ThreadBudget`]; dropping it
+/// returns the lanes and wakes blocked [`ThreadBudget::lease`] callers.
+#[derive(Debug)]
+pub struct ThreadLease {
+    inner: Arc<Inner>,
+    lanes: usize,
+}
+
+impl ThreadLease {
+    /// Number of lanes this lease holds.
+    pub fn lanes(&self) -> usize {
+        self.lanes
+    }
+}
+
+impl Drop for ThreadLease {
+    fn drop(&mut self) {
+        let mut st = self.inner.state.lock().unwrap();
+        st.in_use -= self.lanes;
+        drop(st);
+        self.inner.freed.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn lease_and_return_bookkeeping() {
+        let b = ThreadBudget::new(4);
+        assert_eq!(b.total(), 4);
+        let l1 = b.try_lease(2).unwrap();
+        let l2 = b.try_lease(2).unwrap();
+        assert_eq!(b.in_use(), 4);
+        assert!(b.try_lease(1).is_none(), "budget exhausted");
+        drop(l1);
+        assert_eq!(b.in_use(), 2);
+        drop(l2);
+        assert_eq!(b.in_use(), 0);
+        assert_eq!(b.peak_in_use(), 4);
+        assert_eq!(b.leases_granted(), 2);
+    }
+
+    #[test]
+    fn oversized_requests_never_fit() {
+        let b = ThreadBudget::new(2);
+        assert!(!b.fits(3));
+        assert!(!b.fits(0));
+        assert!(b.try_lease(3).is_none());
+        assert!(b.try_lease(0).is_none());
+    }
+
+    #[test]
+    #[should_panic(expected = "can never fit")]
+    fn blocking_lease_rejects_impossible_requests() {
+        ThreadBudget::new(2).lease(3);
+    }
+
+    #[test]
+    fn blocking_lease_wakes_when_lanes_return() {
+        let b = ThreadBudget::new(2);
+        let held = b.lease(2);
+        let b2 = b.clone();
+        let woke = Arc::new(AtomicUsize::new(0));
+        let woke2 = woke.clone();
+        let t = std::thread::spawn(move || {
+            let _l = b2.lease(1); // blocks until `held` drops
+            woke2.store(1, Ordering::SeqCst);
+        });
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        assert_eq!(woke.load(Ordering::SeqCst), 0, "must block while full");
+        drop(held);
+        t.join().unwrap();
+        assert_eq!(woke.load(Ordering::SeqCst), 1);
+        assert_eq!(b.in_use(), 0);
+    }
+
+    #[test]
+    fn budget_clones_share_state() {
+        let a = ThreadBudget::new(3);
+        let b = a.clone();
+        let _l = a.try_lease(2).unwrap();
+        assert_eq!(b.in_use(), 2);
+        assert!(b.try_lease(2).is_none());
+        assert!(b.try_lease(1).is_some());
+    }
+}

@@ -30,10 +30,12 @@
 //! `SolveOpts::{ntasks, task_order_seed}`), not smuggled in by the
 //! scheduler.
 
+pub mod budget;
 pub mod pool;
 pub mod team;
 pub mod workspace;
 
+pub use budget::{ThreadBudget, ThreadLease};
 pub use pool::DagTask;
 pub use workspace::IterationWorkspace;
 use pool::WorkerPool;

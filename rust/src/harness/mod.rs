@@ -934,6 +934,64 @@ pub fn gs_iteration_table(out_dir: &Path, hopts: &HarnessOpts) -> String {
     out
 }
 
+/// Deterministic mixed workload trace for the solve service (`hlam
+/// serve --emit-trace N`, `benches/service.rs`, the service smoke
+/// tests): `n` valid native-backend [`RunSpec`]s drawn from a seeded
+/// stream over methods × exec strategies × transports × kernels.
+///
+/// The trace deliberately clusters on **three** assembly plans
+/// `{grid, stencil, ranks}` so any service replaying even a short
+/// prefix sees repeated plans — that is what makes batch-reuse hits
+/// (and their determinism requirements) testable rather than
+/// accidental. Same `(n, seed)` → byte-identical trace.
+pub fn workload_trace(n: usize, seed: u64) -> Vec<RunSpec> {
+    let plans = [
+        (Grid3::new(8, 8, 16), StencilKind::P7, 1usize),
+        (Grid3::new(8, 8, 16), StencilKind::P7, 2),
+        (Grid3::new(6, 6, 12), StencilKind::P27, 1),
+    ];
+    let methods = ["cg", "cg-nb", "bicgstab", "jacobi", "gs", "multisplit"];
+    let strategies = [
+        ExecStrategy::Seq,
+        ExecStrategy::ForkJoin,
+        ExecStrategy::TaskPool,
+    ];
+    let transports = [TransportKind::Lockstep, TransportKind::Threaded];
+    let kernels = [
+        KernelKind::Ell,
+        KernelKind::Csr,
+        KernelKind::Sell,
+        KernelKind::Stencil,
+    ];
+    let mut rng = crate::util::Rng::new(seed).substream(0x5e41_11ce);
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        let (grid, stencil, ranks) = plans[rng.below(plans.len())];
+        let method: Method = methods[rng.below(methods.len())].parse().expect("known name");
+        let strategy = strategies[rng.below(strategies.len())];
+        let threads = 1 + rng.below(2);
+        let overlap = strategy != ExecStrategy::Seq && rng.below(2) == 0;
+        let mut spec = RunSpec::default();
+        spec.grid = grid;
+        spec.stencil = stencil;
+        spec.method = method;
+        spec.ranks = ranks;
+        spec.exec = ExecSpec::new(strategy, threads).with_overlap(overlap);
+        spec.transport = transports[rng.below(transports.len())];
+        spec.kernel = kernels[rng.below(kernels.len())];
+        if method == Method::Multisplit {
+            // the two-stage outer solver exercises the inner-solve seam
+            spec.opts.precond = PrecondKind::BlockJacobi;
+            spec.opts.inner_iters = 2;
+        } else if method.supports_precond() && rng.below(3) == 0 {
+            spec.opts.precond = PrecondKind::Jacobi;
+        }
+        debug_assert!(spec.validate().is_ok(), "trace generated an invalid spec");
+        out.push(spec);
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1035,6 +1093,37 @@ mod tests {
         assert!(
             speedup > 5.0 && speedup < 60.0,
             "cg-nb OSS_t speedup at 64 nodes = {speedup:.1}% (paper 19.7%)"
+        );
+    }
+
+    #[test]
+    fn workload_trace_is_deterministic_and_clusters_plans() {
+        let a = workload_trace(40, 7);
+        assert_eq!(a.len(), 40);
+        assert_eq!(a, workload_trace(40, 7), "same (n, seed) must replay");
+        assert_ne!(a, workload_trace(40, 8), "seed must matter");
+        let mut plans: Vec<String> = a
+            .iter()
+            .map(|s| {
+                format!(
+                    "{}x{}x{}/p{}/r{}",
+                    s.grid.nx,
+                    s.grid.ny,
+                    s.grid.nz,
+                    s.stencil.width(),
+                    s.ranks
+                )
+            })
+            .collect();
+        plans.sort();
+        plans.dedup();
+        assert_eq!(plans.len(), 3, "the trace clusters on three assembly plans");
+        for s in &a {
+            s.validate().expect("trace specs must validate");
+        }
+        assert!(
+            a.iter().any(|s| s.method == Method::Multisplit),
+            "the mixed trace should exercise the multisplit outer solver"
         );
     }
 

@@ -21,7 +21,10 @@
 //! [`api::Session`] with structured errors and per-iteration
 //! [`solvers::Observer`] callbacks — see DESIGN.md §6. The older
 //! `Problem::solve*` entry points remain as engine-level shims with
-//! bitwise-identical numerics.
+//! bitwise-identical numerics. On top of it, [`service`] runs many
+//! specs *concurrently*: `hlam serve` schedules NDJSON request streams
+//! over a shared [`exec::ThreadBudget`] with plan batching and
+//! admission control — see DESIGN.md §11.
 
 pub mod api;
 pub mod exec;
@@ -30,6 +33,7 @@ pub mod kernels;
 pub mod machine;
 pub mod mesh;
 pub mod runtime;
+pub mod service;
 pub mod simmpi;
 pub mod simulator;
 pub mod solvers;

@@ -2,6 +2,7 @@
 //!
 //! Subcommands:
 //!   solve     run one solver with real numerics (native or XLA backend)
+//!   serve     long-lived concurrent solve service (NDJSON stdin / Unix socket)
 //!   figures   regenerate the paper's tables/figures into --out
 //!   trace     emit Fig-1-style task traces for chosen methods
 //!   sweep     task-granularity sweep (§4.2) / RunSpec record & replay
@@ -18,6 +19,7 @@
 //!              --exec task --threads 4
 //!   hlam solve --method cg --backend xla --grid 8x8x8 --stencil 7
 //!   hlam solve --emit-spec run.json && hlam solve --spec run.json
+//!   hlam serve --emit-trace 100 | hlam serve --stdin --workers 4 --summary
 //!   hlam figures --all --out results
 //!   hlam figures --fig 3 --quick
 //!   hlam trace --methods cg,cg-nb
@@ -33,17 +35,22 @@ use hlam::api::{RunSpec, Session, SolveError, SpecError};
 use hlam::exec::ExecStrategy;
 use hlam::harness::{self, HarnessOpts};
 use hlam::runtime::Runtime;
+use hlam::service::{self, ServeOptions, ServiceConfig};
 use hlam::simmpi::TransportKind;
 use hlam::solvers::{PrecondKind, SolveOpts};
 use hlam::sparse::KernelKind;
-use hlam::util::Args;
+use hlam::util::{Args, Json};
 
 fn main() -> ExitCode {
     let raw: Vec<String> = std::env::args().skip(1).collect();
-    let args = Args::parse(raw, &["all", "quick", "verbose", "granularity", "xla"]);
+    let args = Args::parse(
+        raw,
+        &["all", "quick", "verbose", "granularity", "xla", "stdin", "summary"],
+    );
     let cmd = args.positional.first().map(String::as_str).unwrap_or("help");
     let result = match cmd {
         "solve" => cmd_solve(&args),
+        "serve" => cmd_serve(&args),
         "figures" => cmd_figures(&args),
         "trace" => cmd_trace(&args),
         "sweep" => cmd_sweep(&args),
@@ -69,7 +76,7 @@ fn usage() {
     println!(
         "hlam — hybrid linear algebra methods (JPDC 2023 reproduction)\n\
          \n\
-         usage: hlam <solve|figures|trace|sweep|sizes> [options]\n\
+         usage: hlam <solve|serve|figures|trace|sweep|sizes> [options]\n\
          \n\
          solve   --method cg|cg-nb|bicgstab|bicgstab-b1|jacobi|gs|gs-rb|gs-relaxed|multisplit\n\
         \x20        --grid NXxNYxNZ --stencil 7|27 --ranks N --backend native|xla\n\
@@ -80,6 +87,12 @@ fn usage() {
         \x20        --inner-iters K (preconditioner sweeps / multisplit inner iterations)\n\
         \x20        --eps 1e-6 --ntasks N --task-seed S --artifacts DIR\n\
         \x20        --spec FILE (replay a saved run) --emit-spec [FILE] (save/print it)\n\
+         serve   --stdin (NDJSON requests on stdin, responses on stdout)\n\
+        \x20        --socket PATH (Unix-domain-socket listener; combinable with --stdin)\n\
+        \x20        --workers N --total-threads N (shared compute-lane budget)\n\
+        \x20        --queue-cap N (pending-job bound; beyond it: structured rejects)\n\
+        \x20        --iter-budget N (default per-job iteration cap) --summary\n\
+        \x20        --emit-trace N [--seed S] (print a deterministic request trace)\n\
          figures --all | --fig 1|2|3|4|5|6|iters|gs-iters|granularity|latency|headline\n\
         \x20        --out DIR --reps N --quick --ranks N --transport lockstep|threaded\n\
         \x20        --overlap on|off\n\
@@ -226,6 +239,50 @@ fn cmd_solve(args: &Args) -> Result<(), CliError> {
     Ok(())
 }
 
+fn cmd_serve(args: &Args) -> Result<(), CliError> {
+    // trace-emission mode: print the deterministic mixed workload as
+    // NDJSON requests (pipe back into `hlam serve --stdin`)
+    if args.get("emit-trace").is_some() {
+        let n = num(args, "emit-trace", 100usize)?;
+        let seed = num(args, "seed", 20230412u64)?;
+        for (i, spec) in harness::workload_trace(n, seed).iter().enumerate() {
+            let mut m = std::collections::BTreeMap::new();
+            m.insert("id".to_string(), Json::Str(format!("job-{i}")));
+            m.insert("spec".to_string(), spec.to_json());
+            println!("{}", Json::Obj(m));
+        }
+        return Ok(());
+    }
+    let cfg = ServiceConfig {
+        workers: num(args, "workers", 2)?,
+        total_threads: num(args, "total-threads", 4)?,
+        queue_cap: num(args, "queue-cap", 64)?,
+        default_iter_budget: match args.get("iter-budget") {
+            None => None,
+            Some(_) => Some(num(args, "iter-budget", 1usize)?),
+        },
+        exec_cache_sets: num(args, "exec-cache-sets", 4)?,
+    };
+    if cfg.workers == 0 || cfg.total_threads == 0 || cfg.queue_cap == 0 {
+        return Err(CliError(
+            "--workers, --total-threads and --queue-cap must be at least 1".into(),
+        ));
+    }
+    if cfg.default_iter_budget == Some(0) {
+        return Err(CliError("--iter-budget must be at least 1".into()));
+    }
+    let socket = args.get("socket").map(PathBuf::from);
+    let opts = ServeOptions {
+        cfg,
+        // with no listener configured, stdin is the only useful input
+        stdin: args.flag("stdin") || socket.is_none(),
+        socket,
+        summary: args.flag("summary"),
+    };
+    service::serve(&opts).map_err(|e| CliError(format!("serve: {e}")))?;
+    Ok(())
+}
+
 fn cmd_figures(args: &Args) -> Result<(), CliError> {
     let out = PathBuf::from(args.str_or("out", "results"));
     let opts = HarnessOpts {
@@ -326,10 +383,8 @@ fn cmd_sweep(args: &Args) -> Result<(), CliError> {
         );
         // the convergence history is the replay contract: print a
         // bit-exact digest so two runs can be diffed from the console
-        let digest = stats
-            .history
-            .iter()
-            .fold(0u64, |acc, r| acc.rotate_left(1) ^ r.to_bits());
+        // (the same digest `hlam serve` reports per response line)
+        let digest = service::history_digest(&stats.history);
         println!("history_digest={digest:016x} ({} entries)", stats.history.len());
         return Ok(());
     }

@@ -1,0 +1,41 @@
+//! `hlam serve` — a long-lived concurrent solve service.
+//!
+//! Single-shot `hlam solve` answers one caller and exits; production
+//! deployments of an iterative-methods library answer *streams* of
+//! solve requests from many tenants at once. This module is that layer
+//! (DESIGN.md §11): clients write JSON [`crate::api::RunSpec`]s one per
+//! line (NDJSON) — on stdin or a Unix-domain socket — and read one
+//! response line per request carrying the per-solve `SolveStats`
+//! summary, queue latency, and batch-reuse telemetry.
+//!
+//! The three design pillars, each load-bearing for the paper's hybrid
+//! model at service scale:
+//!
+//!  * **Budgeted concurrency** — all workers share one
+//!    [`crate::exec::ThreadBudget`]; a job leases its `ranks × threads`
+//!    compute lanes for exactly the duration of its solve, so N
+//!    concurrent jobs never oversubscribe the machine the way naive
+//!    MPI×OpenMP nesting does (PAPERS.md, arXiv 1303.5275).
+//!  * **Plan batching** — jobs sharing an assembly plan
+//!    `{grid, stencil, ranks}` are routed to the same worker, whose
+//!    private `Session` turns the repeat into a cache hit: one
+//!    assembled system, one warm executor set, many solves.
+//!  * **Admission control** — a bounded pending queue (`queue-full`
+//!    rejects beyond the cap), structured rejects for specs that could
+//!    never run (`over-budget`, `backend-unsupported`, `spec-invalid`),
+//!    and deterministic per-job iteration budgets through the
+//!    [`crate::solvers::Observer`] early-stop seam.
+//!
+//! Determinism survives all of it: each solve runs an unmodified
+//! `Session::run_observed` on a worker-private session, so every
+//! response's history digest is bitwise identical to a fresh
+//! single-shot run of the same spec (`tests/integration_service.rs`
+//! asserts this at service concurrency 1 and 4).
+
+pub mod scheduler;
+pub mod server;
+pub mod wire;
+
+pub use scheduler::{Counters, IterationCap, ReplySink, Service, ServiceConfig};
+pub use server::{serve, ServeOptions};
+pub use wire::{history_digest, JobOk, RejectCode, Request, Response, SolveRequest};

@@ -1,0 +1,536 @@
+//! The concurrent solve scheduler: admission control, batch-keyed
+//! routing, budget-leased execution, and response delivery.
+//!
+//! Threading model (DESIGN.md §11): `Session` is deliberately not
+//! `Send` (it may hold an `Rc` PJRT runtime), so the service never
+//! shares one session across threads. Instead each worker thread owns a
+//! private `Session`, and the scheduler routes every job whose spec
+//! shares an assembly plan `{grid, stencil, ranks}` to the *same*
+//! worker — the worker's problem cache then turns the second job of a
+//! plan into a batch hit that reuses the assembled system and warm
+//! executors. Concurrency across plans, locality within a plan.
+//!
+//! What keeps concurrent results bitwise identical to single-shot runs:
+//! every job still executes `Session::run_observed` on a private
+//! session, the shared [`ThreadBudget`] only decides *when* a job's
+//! executors run (never what they compute), and the per-job iteration
+//! budget goes through `Observer::stop` as a pure function of the
+//! iteration number. Nothing about scheduling order can reach the
+//! numerics.
+
+use std::collections::VecDeque;
+use std::io::Write;
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use crate::api::{BackendKind, RunSpec, Session};
+use crate::exec::ThreadBudget;
+use crate::solvers::Observer;
+
+use super::wire::{history_digest, JobOk, RejectCode, Request, Response, SolveRequest};
+
+/// Shared sink a job's response line is written to on completion (one
+/// per client connection; `None` collects in-process for [`Service::drain`]).
+pub type ReplySink = Arc<Mutex<Box<dyn Write + Send>>>;
+
+/// Service sizing and admission policy.
+#[derive(Debug, Clone)]
+pub struct ServiceConfig {
+    /// Worker threads (each owns a private `Session`).
+    pub workers: usize,
+    /// Machine-wide compute-lane budget: the sum of `ranks × threads`
+    /// over concurrently *running* jobs never exceeds this.
+    pub total_threads: usize,
+    /// Maximum jobs waiting in queues; admissions beyond it are
+    /// rejected with `queue-full` (bounded in-flight memory).
+    pub queue_cap: usize,
+    /// Iteration budget applied to jobs that do not carry their own.
+    pub default_iter_budget: Option<usize>,
+    /// Distinct warm executor sets each worker session keeps
+    /// (`Session::set_exec_cache_limit`).
+    pub exec_cache_sets: usize,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        ServiceConfig {
+            workers: 2,
+            total_threads: 4,
+            queue_cap: 64,
+            default_iter_budget: None,
+            exec_cache_sets: 4,
+        }
+    }
+}
+
+/// Cumulative service telemetry (also printed by `hlam serve --summary`).
+#[derive(Debug, Clone, Default)]
+pub struct Counters {
+    /// Solve requests seen (accepted + rejected).
+    pub submitted: u64,
+    pub accepted: u64,
+    pub rejected: u64,
+    pub cancelled: u64,
+    /// Solves that ran to a result.
+    pub completed: u64,
+    /// Admitted jobs whose solve failed.
+    pub errors: u64,
+    /// Completed jobs that reused a worker's cached assembly plan.
+    pub batch_hits: u64,
+    pub batch_misses: u64,
+    /// Distinct assembly plans seen across all workers.
+    pub distinct_plans: u64,
+    /// High-water mark of concurrently leased compute lanes.
+    pub peak_lanes: usize,
+    /// The configured lane total.
+    pub total_lanes: usize,
+}
+
+/// Deterministic per-job "timeout": stops a solve after `cap` recorded
+/// iterations through the [`Observer::stop`] seam. The decision is a
+/// pure function of the iteration number, so under the threaded
+/// transport every rank reaches the same verdict on the same iteration
+/// — the only cancellation shape the observer contract permits
+/// mid-solve (wall-clock checks could make ranks disagree and deadlock
+/// the transport).
+#[derive(Debug, Clone, Copy)]
+pub struct IterationCap(pub usize);
+
+impl Observer for IterationCap {
+    fn stop(&self, iteration: usize, _rel_residual: f64) -> bool {
+        iteration >= self.0
+    }
+}
+
+struct Job {
+    id: String,
+    spec: RunSpec,
+    iter_budget: Option<usize>,
+    lanes: usize,
+    plan: String,
+    submitted: Instant,
+    reply: Option<ReplySink>,
+}
+
+#[derive(Default)]
+struct State {
+    /// One FIFO per worker (plan-keyed routing fills them).
+    queues: Vec<VecDeque<Job>>,
+    pending: usize,
+    running: usize,
+    paused: bool,
+    shutdown: bool,
+    /// Assembly-plan registry in first-seen order; a plan's index mod
+    /// the worker count is its home worker.
+    plans: Vec<String>,
+    collected: Vec<Response>,
+    counters: Counters,
+    next_auto_id: u64,
+}
+
+struct Inner {
+    state: Mutex<State>,
+    /// Workers wait here for queued jobs.
+    work: Condvar,
+    /// `drain` waits here for pending + running to reach zero.
+    done: Condvar,
+}
+
+/// The long-lived solve service: start it, submit NDJSON request lines
+/// (or parsed requests), read responses from each job's reply sink or
+/// via [`Service::drain`]. See the module docs for the threading model.
+pub struct Service {
+    inner: Arc<Inner>,
+    budget: ThreadBudget,
+    cfg: ServiceConfig,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl Service {
+    /// Start the worker threads and begin scheduling immediately.
+    pub fn start(cfg: ServiceConfig) -> Service {
+        Service::launch(cfg, false)
+    }
+
+    /// Start with scheduling *paused*: jobs queue (and admission
+    /// control applies) but no worker picks one up until
+    /// [`Service::resume`]. Tests use this to make queue-cap and
+    /// cancellation outcomes deterministic.
+    pub fn start_paused(cfg: ServiceConfig) -> Service {
+        Service::launch(cfg, true)
+    }
+
+    fn launch(cfg: ServiceConfig, paused: bool) -> Service {
+        assert!(cfg.workers >= 1, "the service needs at least one worker");
+        assert!(cfg.queue_cap >= 1, "queue cap must admit at least one job");
+        let budget = ThreadBudget::new(cfg.total_threads);
+        let inner = Arc::new(Inner {
+            state: Mutex::new(State {
+                queues: (0..cfg.workers).map(|_| VecDeque::new()).collect(),
+                paused,
+                counters: Counters {
+                    total_lanes: cfg.total_threads,
+                    ..Counters::default()
+                },
+                ..State::default()
+            }),
+            work: Condvar::new(),
+            done: Condvar::new(),
+        });
+        let workers = (0..cfg.workers)
+            .map(|w| {
+                let inner = inner.clone();
+                let budget = budget.clone();
+                let cfg = cfg.clone();
+                std::thread::Builder::new()
+                    .name(format!("hlam-serve-{w}"))
+                    .spawn(move || worker_loop(w, &inner, &budget, &cfg))
+                    .expect("spawn service worker")
+            })
+            .collect();
+        Service {
+            inner,
+            budget,
+            cfg,
+            workers,
+        }
+    }
+
+    /// Release a paused service's queues to the workers.
+    pub fn resume(&self) {
+        self.inner.state.lock().unwrap().paused = false;
+        self.inner.work.notify_all();
+    }
+
+    /// The shared compute-lane budget (telemetry access).
+    pub fn budget(&self) -> &ThreadBudget {
+        &self.budget
+    }
+
+    /// Parse and submit one NDJSON request line. Responses — including
+    /// immediate admission rejects — are delivered through `reply`
+    /// (collected for [`Service::drain`] when `None`).
+    pub fn submit_line(&self, line: &str, reply: Option<ReplySink>) {
+        match super::wire::parse_request(line) {
+            Ok(Request::Solve(req)) => self.submit(req, reply),
+            Ok(Request::Cancel { id }) => self.cancel(&id, reply),
+            Err(e) => {
+                let st = {
+                    let mut st = self.inner.state.lock().unwrap();
+                    st.counters.submitted += 1;
+                    st
+                };
+                reject_locked(
+                    st,
+                    reply,
+                    "?".to_string(),
+                    RejectCode::SpecInvalid,
+                    e.to_string(),
+                );
+            }
+        }
+    }
+
+    /// Admit or reject one solve request. Admission applies, in order:
+    /// spec validation, native-backend check, budget fit, queue cap.
+    pub fn submit(&self, req: SolveRequest, reply: Option<ReplySink>) {
+        let spec = req.spec;
+        let iter_budget = req.iter_budget;
+        let mut st = self.inner.state.lock().unwrap();
+        st.counters.submitted += 1;
+        let id = req.id.unwrap_or_else(|| {
+            st.next_auto_id += 1;
+            format!("job-{}", st.next_auto_id)
+        });
+        if let Err(e) = spec.validate() {
+            return reject_locked(st, reply, id, RejectCode::SpecInvalid, e.to_string());
+        }
+        if spec.backend != BackendKind::Native {
+            return reject_locked(
+                st,
+                reply,
+                id,
+                RejectCode::BackendUnsupported,
+                "the service executes the native backend only; run xla specs through \
+                 `hlam solve --backend xla`"
+                    .to_string(),
+            );
+        }
+        let lanes = spec.ranks * spec.exec.threads;
+        if !self.budget.fits(lanes) {
+            return reject_locked(
+                st,
+                reply,
+                id,
+                RejectCode::OverBudget,
+                format!(
+                    "job needs {lanes} compute lanes (ranks {} x threads {}) but the \
+                     service budget holds only {}",
+                    spec.ranks,
+                    spec.exec.threads,
+                    self.budget.total()
+                ),
+            );
+        }
+        if st.pending >= self.cfg.queue_cap {
+            let (pending, cap) = (st.pending, self.cfg.queue_cap);
+            return reject_locked(
+                st,
+                reply,
+                id,
+                RejectCode::QueueFull,
+                format!("queue full: {pending} jobs pending at cap {cap}"),
+            );
+        }
+        let plan = plan_key(&spec);
+        let plan_idx = match st.plans.iter().position(|p| *p == plan) {
+            Some(i) => i,
+            None => {
+                st.plans.push(plan.clone());
+                st.plans.len() - 1
+            }
+        };
+        let worker = plan_idx % self.cfg.workers;
+        let iter_budget = iter_budget.or(self.cfg.default_iter_budget);
+        st.queues[worker].push_back(Job {
+            id,
+            spec,
+            iter_budget,
+            lanes,
+            plan,
+            submitted: Instant::now(),
+            reply,
+        });
+        st.pending += 1;
+        st.counters.accepted += 1;
+        drop(st);
+        self.inner.work.notify_all();
+    }
+
+    /// Remove a still-queued job. The cancelled job's terminal response
+    /// (`status: cancelled`) is delivered through `reply`; an id that is
+    /// not waiting (unknown, already running, or finished) yields a
+    /// `not-pending` reject — running jobs cannot be interrupted without
+    /// breaking the observer purity contract.
+    pub fn cancel(&self, id: &str, reply: Option<ReplySink>) {
+        let mut st = self.inner.state.lock().unwrap();
+        let found = st.queues.iter_mut().find_map(|q| {
+            q.iter().position(|j| j.id == id).and_then(|i| q.remove(i))
+        });
+        let resp = match found {
+            Some(job) => {
+                st.pending -= 1;
+                st.counters.cancelled += 1;
+                Response::Cancelled { id: job.id }
+            }
+            None => {
+                st.counters.rejected += 1;
+                Response::Reject {
+                    id: id.to_string(),
+                    code: RejectCode::NotPending,
+                    reason: "no job with this id is waiting in the queue (running jobs \
+                             cannot be cancelled: rank-pure early-stop only)"
+                        .to_string(),
+                }
+            }
+        };
+        match reply {
+            None => {
+                st.collected.push(resp);
+                drop(st);
+            }
+            Some(sink) => {
+                drop(st);
+                write_response(&sink, &resp);
+            }
+        }
+        self.inner.done.notify_all();
+    }
+
+    /// Block until no job is pending or running, then take every
+    /// response collected so far (jobs submitted with a `None` reply).
+    /// Resume a paused service first or this waits forever.
+    pub fn drain(&self) -> Vec<Response> {
+        let mut st = self.inner.state.lock().unwrap();
+        while st.pending > 0 || st.running > 0 {
+            st = self.inner.done.wait(st).unwrap();
+        }
+        std::mem::take(&mut st.collected)
+    }
+
+    /// Current telemetry snapshot.
+    pub fn counters(&self) -> Counters {
+        let st = self.inner.state.lock().unwrap();
+        let mut c = st.counters.clone();
+        c.distinct_plans = st.plans.len() as u64;
+        drop(st);
+        c.peak_lanes = self.budget.peak_in_use();
+        c
+    }
+
+    /// Stop the workers (after their queues empty) and return the final
+    /// telemetry.
+    pub fn shutdown(mut self) -> Counters {
+        self.stop_and_join();
+        self.counters()
+    }
+
+    fn stop_and_join(&mut self) {
+        {
+            let mut st = self.inner.state.lock().unwrap();
+            st.shutdown = true;
+            st.paused = false;
+        }
+        self.inner.work.notify_all();
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Service {
+    fn drop(&mut self) {
+        self.stop_and_join();
+    }
+}
+
+/// Count an admission reject under the state lock, then deliver it —
+/// client writes happen only after the lock drops (a stuck client must
+/// never stall the scheduler).
+fn reject_locked(
+    mut st: std::sync::MutexGuard<'_, State>,
+    reply: Option<ReplySink>,
+    id: String,
+    code: RejectCode,
+    reason: String,
+) {
+    st.counters.rejected += 1;
+    let resp = Response::Reject { id, code, reason };
+    match reply {
+        None => st.collected.push(resp),
+        Some(sink) => {
+            drop(st);
+            write_response(&sink, &resp);
+        }
+    }
+}
+
+/// The batching key: jobs sharing it reuse one assembled problem.
+fn plan_key(spec: &RunSpec) -> String {
+    format!(
+        "{}x{}x{}/p{}/r{}",
+        spec.grid.nx,
+        spec.grid.ny,
+        spec.grid.nz,
+        spec.stencil.width(),
+        spec.ranks
+    )
+}
+
+fn write_response(sink: &ReplySink, resp: &Response) {
+    // a vanished client must not take the service down with it
+    let mut w = sink.lock().unwrap();
+    let _ = writeln!(w, "{}", resp.to_json());
+    let _ = w.flush();
+}
+
+fn worker_loop(w: usize, inner: &Inner, budget: &ThreadBudget, cfg: &ServiceConfig) {
+    let mut session = Session::new();
+    session.set_exec_cache_limit(cfg.exec_cache_sets.max(1));
+    session.set_thread_budget(budget.clone());
+    loop {
+        let job = {
+            let mut st = inner.state.lock().unwrap();
+            loop {
+                if !st.paused {
+                    if let Some(job) = st.queues[w].pop_front() {
+                        st.pending -= 1;
+                        st.running += 1;
+                        break job;
+                    }
+                    if st.shutdown {
+                        return;
+                    }
+                } else if st.shutdown {
+                    return;
+                }
+                st = inner.work.wait(st).unwrap();
+            }
+        };
+        let queue_ms = job.submitted.elapsed().as_secs_f64() * 1e3;
+        // batch hit = this worker already assembled the job's plan
+        // (routing sends every job of a plan here, so the second one
+        // reuses the first one's system)
+        let ptr_before = session.assembly_ptr(job.spec.grid, job.spec.stencil, job.spec.ranks);
+        let t0 = Instant::now();
+        // the session's shared budget leases `lanes` while solving —
+        // blocking here, after dequeue, keeps the queue moving on other
+        // workers without ever oversubscribing the lane total
+        let result = match job.iter_budget {
+            Some(cap) => session.run_observed(&job.spec, &IterationCap(cap)),
+            None => session.run(&job.spec),
+        };
+        let solve_ms = t0.elapsed().as_secs_f64() * 1e3;
+        let resp = match result {
+            Ok(stats) => {
+                let ptr_after =
+                    session.assembly_ptr(job.spec.grid, job.spec.stencil, job.spec.ranks);
+                debug_assert!(
+                    ptr_before.is_none() || ptr_before == ptr_after,
+                    "batched assembly reuse moved the cached system"
+                );
+                let early_stopped = job
+                    .iter_budget
+                    .is_some_and(|cap| !stats.converged && stats.history.len() >= cap);
+                Response::Ok(Box::new(JobOk {
+                    id: job.id,
+                    method: stats.method,
+                    iterations: stats.iterations,
+                    converged: stats.converged,
+                    rel_residual: stats.rel_residual,
+                    restarts: stats.restarts,
+                    history_len: stats.history.len(),
+                    history_digest: history_digest(&stats.history),
+                    rel_residual_bits: stats.rel_residual.to_bits(),
+                    early_stopped,
+                    plan: job.plan,
+                    batch_hit: ptr_before.is_some() && ptr_before == ptr_after,
+                    worker: w,
+                    lanes: job.lanes,
+                    queue_ms,
+                    solve_ms,
+                }))
+            }
+            Err(e) => Response::Error {
+                id: job.id,
+                reason: e.to_string(),
+            },
+        };
+        // sink writes happen before `running` drops (so `drain` implies
+        // every response reached its client) but never under the state
+        // lock (so a stuck client cannot stall the scheduler)
+        if let Some(sink) = &job.reply {
+            write_response(sink, &resp);
+        }
+        {
+            let mut st = inner.state.lock().unwrap();
+            match &resp {
+                Response::Ok(ok) => {
+                    st.counters.completed += 1;
+                    if ok.batch_hit {
+                        st.counters.batch_hits += 1;
+                    } else {
+                        st.counters.batch_misses += 1;
+                    }
+                }
+                _ => st.counters.errors += 1,
+            }
+            if job.reply.is_none() {
+                st.collected.push(resp);
+            }
+            st.running -= 1;
+        }
+        inner.done.notify_all();
+    }
+}

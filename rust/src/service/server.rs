@@ -1,0 +1,123 @@
+//! Service front-ends: NDJSON over stdin/stdout and a Unix-domain
+//! socket listener.
+//!
+//! stdin mode reads request lines until EOF, streams response lines to
+//! stdout (out-of-completion-order; correlate by `id`), waits for every
+//! in-flight job, and exits — the shape CI's `service-smoke` job pipes
+//! a trace through. Socket mode accepts connections on a filesystem
+//! path; each connection is its own NDJSON request/response stream.
+//! With both enabled the socket listener runs in the background and
+//! stdin EOF still decides the process lifetime.
+
+use std::io::{BufRead, BufReader, Write};
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::path::PathBuf;
+use std::sync::{Arc, Mutex};
+
+use super::scheduler::{Counters, ReplySink, Service, ServiceConfig};
+
+/// What `hlam serve` resolved from its flags.
+#[derive(Debug, Clone)]
+pub struct ServeOptions {
+    pub cfg: ServiceConfig,
+    /// Read NDJSON requests from stdin, answer on stdout.
+    pub stdin: bool,
+    /// Listen for NDJSON connections on this Unix-socket path.
+    pub socket: Option<PathBuf>,
+    /// Print the counters summary to stderr on exit.
+    pub summary: bool,
+}
+
+/// Run the service until its inputs end (stdin EOF, or forever in
+/// socket-only mode). Returns the final telemetry.
+pub fn serve(opts: &ServeOptions) -> std::io::Result<Counters> {
+    let service = Arc::new(Service::start(opts.cfg.clone()));
+    if let Some(path) = &opts.socket {
+        // a stale socket file from a previous run would fail the bind
+        let _ = std::fs::remove_file(path);
+        let listener = UnixListener::bind(path)?;
+        eprintln!("hlam serve: listening on {}", path.display());
+        if opts.stdin {
+            let svc = service.clone();
+            std::thread::Builder::new()
+                .name("hlam-serve-accept".to_string())
+                .spawn(move || accept_loop(&listener, &svc))?;
+        } else {
+            accept_loop(&listener, &service);
+        }
+    }
+    if opts.stdin {
+        let out: ReplySink =
+            Arc::new(Mutex::new(Box::new(std::io::stdout()) as Box<dyn Write + Send>));
+        let stdin = std::io::stdin();
+        for line in stdin.lock().lines() {
+            let line = line?;
+            if line.trim().is_empty() {
+                continue;
+            }
+            service.submit_line(line.trim(), Some(out.clone()));
+        }
+        // every accepted job finishes and flushes its response before
+        // drain returns (scheduler writes precede the running-count drop)
+        service.drain();
+    }
+    let counters = service.counters();
+    if opts.summary {
+        print_summary(&counters);
+    }
+    Ok(counters)
+}
+
+fn print_summary(c: &Counters) {
+    eprintln!(
+        "hlam serve: submitted={} accepted={} completed={} rejected={} cancelled={} \
+         errors={} batch_hits={} batch_misses={} distinct_plans={} peak_lanes={}/{}",
+        c.submitted,
+        c.accepted,
+        c.completed,
+        c.rejected,
+        c.cancelled,
+        c.errors,
+        c.batch_hits,
+        c.batch_misses,
+        c.distinct_plans,
+        c.peak_lanes,
+        c.total_lanes
+    );
+}
+
+/// Accept connections until the listener dies; one handler thread per
+/// connection (requests from all connections share the one scheduler).
+fn accept_loop(listener: &UnixListener, service: &Arc<Service>) {
+    for stream in listener.incoming() {
+        match stream {
+            Ok(stream) => {
+                let svc = service.clone();
+                let _ = std::thread::Builder::new()
+                    .name("hlam-serve-conn".to_string())
+                    .spawn(move || handle_connection(stream, &svc));
+            }
+            Err(e) => {
+                eprintln!("hlam serve: accept failed: {e}");
+                return;
+            }
+        }
+    }
+}
+
+fn handle_connection(stream: UnixStream, service: &Arc<Service>) {
+    let Ok(write_half) = stream.try_clone() else {
+        return;
+    };
+    let sink: ReplySink = Arc::new(Mutex::new(Box::new(write_half) as Box<dyn Write + Send>));
+    let reader = BufReader::new(stream);
+    for line in reader.lines() {
+        let Ok(line) = line else { break };
+        if line.trim().is_empty() {
+            continue;
+        }
+        service.submit_line(line.trim(), Some(sink.clone()));
+    }
+    // responses for this connection's still-running jobs keep the sink
+    // alive through their jobs; nothing to join here
+}

@@ -1,0 +1,339 @@
+//! NDJSON wire format of the solve service.
+//!
+//! One request per line in, one response per line out. A request is
+//! either a bare [`RunSpec`] object (the exact `--emit-spec` JSON), a
+//! wrapped form
+//!
+//! ```json
+//! {"id":"job-7","spec":{"method":"cg","grid":"8x8x16"},"iter_budget":50}
+//! ```
+//!
+//! or a cancellation `{"cancel":"job-7"}`. Responses correlate by `id`
+//! (auto-assigned `job-N` when absent) and carry exactly one terminal
+//! line per solve request: `status` is `ok`, `reject` (admission denied,
+//! with a machine-readable `code` and human `reason`), `error` (admitted
+//! but the solve failed), or `cancelled` (dequeued before starting).
+//!
+//! `ok` responses embed the per-solve [`SolveStats`] summary plus the
+//! service telemetry the ISSUE's benchmark consumes: `queue_ms` (time
+//! from submission to solve start), `solve_ms`, `batch` (`hit` when the
+//! worker reused a cached assembly plan), and the bit-exact
+//! `history_digest` that makes concurrent results diffable against a
+//! single-shot `hlam sweep --spec` run of the same spec.
+
+use std::collections::BTreeMap;
+
+use crate::api::{suggest, RunSpec, SpecError};
+use crate::util::Json;
+
+/// Rotate-xor digest over every history entry's bit pattern — the same
+/// digest `hlam sweep` prints, so service and single-shot runs can be
+/// compared line-to-line without shipping full histories over the wire.
+pub fn history_digest(history: &[f64]) -> u64 {
+    history
+        .iter()
+        .fold(0u64, |acc, r| acc.rotate_left(1) ^ r.to_bits())
+}
+
+/// A parsed request line.
+#[derive(Debug, Clone)]
+pub enum Request {
+    Solve(SolveRequest),
+    /// Remove a still-queued job. Running jobs are never interrupted —
+    /// cancellation mid-solve would have to go through `Observer::stop`,
+    /// whose purity contract forbids racy external state.
+    Cancel { id: String },
+}
+
+/// One requested solve.
+#[derive(Debug, Clone)]
+pub struct SolveRequest {
+    /// Client-chosen correlation id; `None` lets the service assign one.
+    pub id: Option<String>,
+    pub spec: RunSpec,
+    /// Deterministic per-job budget: the solve stops after this many
+    /// recorded iterations (through the `Observer::stop` seam — a pure
+    /// function of the iteration number, so every rank agrees).
+    pub iter_budget: Option<usize>,
+}
+
+const REQUEST_KEYS: [&str; 4] = ["cancel", "id", "iter_budget", "spec"];
+
+/// Parse one NDJSON request line (see the module docs for the accepted
+/// shapes). Errors are [`SpecError`]s with the same "did you mean"
+/// treatment the spec parser gives its own fields.
+pub fn parse_request(line: &str) -> Result<Request, SpecError> {
+    let j = Json::parse(line).map_err(|e| SpecError::Json { msg: e.to_string() })?;
+    let Some(obj) = j.as_obj() else {
+        return Err(SpecError::Json {
+            msg: "a request line must be a JSON object".into(),
+        });
+    };
+    if !obj.contains_key("spec") && !obj.contains_key("cancel") {
+        // bare RunSpec form — the spec parser rejects unknown keys itself
+        return Ok(Request::Solve(SolveRequest {
+            id: None,
+            spec: RunSpec::from_json(&j)?,
+            iter_budget: None,
+        }));
+    }
+    for key in obj.keys() {
+        if !REQUEST_KEYS.contains(&key.as_str()) {
+            return Err(SpecError::Unknown {
+                what: "request field",
+                input: key.clone(),
+                valid: "id|spec|iter_budget|cancel",
+                suggestion: suggest(key, &REQUEST_KEYS),
+            });
+        }
+    }
+    if let Some(c) = obj.get("cancel") {
+        let Some(id) = c.as_str() else {
+            return Err(SpecError::Json {
+                msg: "'cancel' must hold the job id string".into(),
+            });
+        };
+        return Ok(Request::Cancel { id: id.to_string() });
+    }
+    let spec = RunSpec::from_json(obj.get("spec").expect("checked above"))?;
+    let id = match obj.get("id") {
+        None => None,
+        Some(Json::Str(s)) => Some(s.clone()),
+        Some(_) => {
+            return Err(SpecError::Json {
+                msg: "'id' must be a string".into(),
+            })
+        }
+    };
+    let iter_budget = match obj.get("iter_budget") {
+        None => None,
+        Some(v) => match v.as_usize() {
+            Some(n) if n >= 1 && v.as_f64().is_some_and(|x| x.fract() == 0.0) => Some(n),
+            _ => {
+                return Err(SpecError::Json {
+                    msg: "'iter_budget' must be a positive integer".into(),
+                })
+            }
+        },
+    };
+    Ok(Request::Solve(SolveRequest {
+        id,
+        spec,
+        iter_budget,
+    }))
+}
+
+/// Why an admission was denied (the `code` field of a reject line).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RejectCode {
+    /// The request line or spec did not parse / validate.
+    SpecInvalid,
+    /// The service executes the native backend only.
+    BackendUnsupported,
+    /// `ranks × threads` exceeds the service's total thread budget —
+    /// the job could never be scheduled.
+    OverBudget,
+    /// The pending queue is at its configured cap.
+    QueueFull,
+    /// A cancel named an id that is not waiting in the queue.
+    NotPending,
+}
+
+impl RejectCode {
+    pub fn name(&self) -> &'static str {
+        match self {
+            RejectCode::SpecInvalid => "spec-invalid",
+            RejectCode::BackendUnsupported => "backend-unsupported",
+            RejectCode::OverBudget => "over-budget",
+            RejectCode::QueueFull => "queue-full",
+            RejectCode::NotPending => "not-pending",
+        }
+    }
+}
+
+/// A completed solve (the `status: ok` payload).
+#[derive(Debug, Clone)]
+pub struct JobOk {
+    pub id: String,
+    pub method: &'static str,
+    pub iterations: usize,
+    pub converged: bool,
+    pub rel_residual: f64,
+    pub restarts: usize,
+    pub history_len: usize,
+    /// [`history_digest`] of the full convergence history.
+    pub history_digest: u64,
+    /// Exact bit pattern of the final relative residual.
+    pub rel_residual_bits: u64,
+    /// `true` when the per-job iteration budget ended the run early.
+    pub early_stopped: bool,
+    /// Assembly plan key (`NXxNYxNZ/pW/rR`) the job was batched under.
+    pub plan: String,
+    /// Did the worker reuse a cached assembly for this plan?
+    pub batch_hit: bool,
+    pub worker: usize,
+    /// Compute lanes (`ranks × threads`) the job leased while solving.
+    pub lanes: usize,
+    /// Milliseconds from admission to solve start (queue latency).
+    pub queue_ms: f64,
+    pub solve_ms: f64,
+}
+
+/// One response line. `to_json` renders the NDJSON payload.
+#[derive(Debug, Clone)]
+pub enum Response {
+    Ok(Box<JobOk>),
+    Reject {
+        id: String,
+        code: RejectCode,
+        reason: String,
+    },
+    Error {
+        id: String,
+        reason: String,
+    },
+    Cancelled {
+        id: String,
+    },
+}
+
+impl Response {
+    pub fn id(&self) -> &str {
+        match self {
+            Response::Ok(ok) => &ok.id,
+            Response::Reject { id, .. } => id,
+            Response::Error { id, .. } => id,
+            Response::Cancelled { id } => id,
+        }
+    }
+
+    pub fn status(&self) -> &'static str {
+        match self {
+            Response::Ok(_) => "ok",
+            Response::Reject { .. } => "reject",
+            Response::Error { .. } => "error",
+            Response::Cancelled { .. } => "cancelled",
+        }
+    }
+
+    pub fn as_ok(&self) -> Option<&JobOk> {
+        match self {
+            Response::Ok(ok) => Some(ok),
+            _ => None,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("id".to_string(), Json::Str(self.id().to_string()));
+        m.insert("status".to_string(), Json::Str(self.status().to_string()));
+        match self {
+            Response::Ok(ok) => {
+                m.insert("method".to_string(), Json::Str(ok.method.to_string()));
+                m.insert("iterations".to_string(), Json::Num(ok.iterations as f64));
+                m.insert("converged".to_string(), Json::Bool(ok.converged));
+                m.insert("rel_residual".to_string(), Json::Num(ok.rel_residual));
+                m.insert("restarts".to_string(), Json::Num(ok.restarts as f64));
+                m.insert("history_len".to_string(), Json::Num(ok.history_len as f64));
+                m.insert(
+                    "history_digest".to_string(),
+                    Json::Str(format!("{:016x}", ok.history_digest)),
+                );
+                m.insert(
+                    "rel_residual_bits".to_string(),
+                    Json::Str(format!("{:016x}", ok.rel_residual_bits)),
+                );
+                m.insert("early_stopped".to_string(), Json::Bool(ok.early_stopped));
+                m.insert("plan".to_string(), Json::Str(ok.plan.clone()));
+                m.insert(
+                    "batch".to_string(),
+                    Json::Str(if ok.batch_hit { "hit" } else { "miss" }.to_string()),
+                );
+                m.insert("worker".to_string(), Json::Num(ok.worker as f64));
+                m.insert("lanes".to_string(), Json::Num(ok.lanes as f64));
+                m.insert("queue_ms".to_string(), Json::Num(ok.queue_ms));
+                m.insert("solve_ms".to_string(), Json::Num(ok.solve_ms));
+            }
+            Response::Reject { code, reason, .. } => {
+                m.insert("code".to_string(), Json::Str(code.name().to_string()));
+                m.insert("reason".to_string(), Json::Str(reason.clone()));
+            }
+            Response::Error { reason, .. } => {
+                m.insert("reason".to_string(), Json::Str(reason.clone()));
+            }
+            Response::Cancelled { .. } => {}
+        }
+        Json::Obj(m)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn digest_matches_the_sweep_idiom() {
+        let h = [1.0f64, 0.5, 0.25];
+        let mut manual = 0u64;
+        for r in h {
+            manual = manual.rotate_left(1) ^ r.to_bits();
+        }
+        assert_eq!(history_digest(&h), manual);
+        assert_ne!(history_digest(&[1.0, 0.5]), history_digest(&[0.5, 1.0]));
+    }
+
+    #[test]
+    fn parses_bare_spec_and_wrapped_forms() {
+        let bare = r#"{"method":"cg"}"#;
+        match parse_request(bare).unwrap() {
+            Request::Solve(s) => {
+                assert!(s.id.is_none());
+                assert_eq!(s.spec.method.name(), "cg");
+                assert!(s.iter_budget.is_none());
+            }
+            other => panic!("expected solve, got {other:?}"),
+        }
+        let wrapped = r#"{"id":"a-1","spec":{"method":"bicgstab"},"iter_budget":5}"#;
+        match parse_request(wrapped).unwrap() {
+            Request::Solve(s) => {
+                assert_eq!(s.id.as_deref(), Some("a-1"));
+                assert_eq!(s.spec.method.name(), "bicgstab");
+                assert_eq!(s.iter_budget, Some(5));
+            }
+            other => panic!("expected solve, got {other:?}"),
+        }
+        match parse_request(r#"{"cancel":"a-1"}"#).unwrap() {
+            Request::Cancel { id } => assert_eq!(id, "a-1"),
+            other => panic!("expected cancel, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn request_field_typos_get_suggestions() {
+        let err = parse_request(r#"{"spec":{"method":"cg"},"iter_budge":5}"#).unwrap_err();
+        assert!(
+            err.to_string().contains("did you mean 'iter_budget'"),
+            "{err}"
+        );
+        let zero_budget = r#"{"iter_budget":0,"spec":{"method":"cg"}}"#;
+        assert!(parse_request(zero_budget).is_err());
+        assert!(parse_request(r#"{"cancel":7}"#).is_err());
+        assert!(parse_request("[]").is_err());
+        assert!(parse_request("not json").is_err());
+    }
+
+    #[test]
+    fn responses_render_one_json_object_per_line() {
+        let r = Response::Reject {
+            id: "j1".into(),
+            code: RejectCode::QueueFull,
+            reason: "queue full".into(),
+        };
+        let j = r.to_json();
+        assert_eq!(j.get("status").unwrap().as_str(), Some("reject"));
+        assert_eq!(j.get("code").unwrap().as_str(), Some("queue-full"));
+        let line = j.to_string();
+        assert!(!line.contains('\n'));
+        assert_eq!(Json::parse(&line).unwrap(), j);
+    }
+}

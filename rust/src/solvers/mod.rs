@@ -82,6 +82,23 @@ impl Method {
         "bicgstab-b1",
     ];
 
+    /// Every parseable canonical method name: [`Method::NAMES`] (the
+    /// paper's 8, which the harness sweeps) plus the multisplitting
+    /// outer solver. CLI listings and "did you mean" suggestions index
+    /// this set, so a method cannot be parseable yet invisible —
+    /// pinned by `tests/integration_api.rs`.
+    pub const ALL_NAMES: [&'static str; 9] = [
+        "jacobi",
+        "gs",
+        "gs-rb",
+        "gs-relaxed",
+        "cg",
+        "cg-nb",
+        "bicgstab",
+        "bicgstab-b1",
+        "multisplit",
+    ];
+
     pub fn parse(s: &str) -> Option<Method> {
         Some(match s {
             "jacobi" => Method::Jacobi,

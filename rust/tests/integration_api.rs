@@ -361,3 +361,33 @@ fn bad_input_yields_structured_errors_with_suggestions() {
         other => panic!("expected spec error, got {other:?}"),
     }
 }
+
+#[test]
+fn multisplit_is_listed_and_suggested() {
+    // regression: `Method::parse` accepted "multisplit" while the
+    // did-you-mean candidate list stopped at the 8 classic variants, so
+    // a near-miss typo never suggested it. `Method::ALL_NAMES` is now
+    // the single pinned list of every parseable canonical name.
+    assert!(Method::ALL_NAMES.contains(&"multisplit"));
+    for name in Method::ALL_NAMES {
+        let m: Method = name.parse().unwrap_or_else(|e| panic!("{name}: {e}"));
+        assert_eq!(m.name(), name, "canonical names round-trip");
+    }
+    // the classic-variant list used by sweeps stays a strict subset
+    for name in Method::NAMES {
+        assert!(Method::ALL_NAMES.contains(&name), "{name} missing");
+    }
+    assert_eq!(Method::ALL_NAMES.len(), Method::NAMES.len() + 1);
+
+    let err = "multisplt".parse::<Method>().unwrap_err();
+    match &err {
+        SpecError::Unknown { suggestion, .. } => {
+            assert_eq!(*suggestion, Some("multisplit"));
+        }
+        other => panic!("expected Unknown, got {other:?}"),
+    }
+    assert!(
+        err.to_string().contains("did you mean 'multisplit'"),
+        "{err}"
+    );
+}

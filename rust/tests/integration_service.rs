@@ -1,0 +1,273 @@
+//! Acceptance contract of the concurrent solve service (ISSUE 8):
+//!
+//!  * replaying a mixed workload trace through the service at
+//!    concurrency 1 and 4 yields, for every job, a convergence history
+//!    **bitwise identical** to a fresh single-shot `Session::run` of
+//!    the same spec — including jobs that hit a worker's batched
+//!    assembly cache;
+//!  * admission control is structured and deterministic: `queue-full`
+//!    past the cap, `over-budget` for specs that could never lease,
+//!    `backend-unsupported` for non-native specs, with exactly one
+//!    terminal response per request;
+//!  * cancellation removes queued jobs only, and the per-job iteration
+//!    budget reproduces a single-shot `run_observed` with the same
+//!    `IterationCap` — bit for bit.
+
+use std::collections::BTreeMap;
+
+use hlam::api::{BackendKind, RunSpec, Session};
+use hlam::harness::workload_trace;
+use hlam::mesh::Grid3;
+use hlam::service::{
+    history_digest, IterationCap, RejectCode, Response, Service, ServiceConfig, SolveRequest,
+};
+
+const TRACE_LEN: usize = 24;
+const TRACE_SEED: u64 = 11;
+
+fn submit(service: &Service, id: &str, spec: &RunSpec, iter_budget: Option<usize>) {
+    service.submit(
+        SolveRequest {
+            id: Some(id.to_string()),
+            spec: spec.clone(),
+            iter_budget,
+        },
+        None,
+    );
+}
+
+/// A small fast-converging spec for the admission/cancel tests.
+fn tiny_spec() -> RunSpec {
+    let mut spec = RunSpec::default();
+    spec.grid = Grid3::new(6, 6, 8);
+    spec
+}
+
+#[test]
+fn service_results_are_bitwise_identical_to_single_shot_runs() {
+    let trace = workload_trace(TRACE_LEN, TRACE_SEED);
+    // reference: each spec solved single-shot in a fresh session (no
+    // cache, no concurrency, no budget)
+    let reference: Vec<_> = trace
+        .iter()
+        .map(|spec| {
+            let stats = Session::new().run(spec).expect("single-shot solve");
+            let digest = history_digest(&stats.history);
+            let bits = stats.rel_residual.to_bits();
+            (digest, stats.history.len(), bits)
+        })
+        .collect();
+
+    for workers in [1usize, 4] {
+        let service = Service::start(ServiceConfig {
+            workers,
+            total_threads: 4,
+            queue_cap: TRACE_LEN,
+            default_iter_budget: None,
+            exec_cache_sets: 4,
+        });
+        for (i, spec) in trace.iter().enumerate() {
+            submit(&service, &format!("t-{i}"), spec, None);
+        }
+        let responses = service.drain();
+        let counters = service.shutdown();
+        assert_eq!(responses.len(), TRACE_LEN, "one response per request");
+
+        let by_id: BTreeMap<&str, &Response> = responses.iter().map(|r| (r.id(), r)).collect();
+        let mut batched_and_checked = 0u64;
+        for (i, (digest, len, bits)) in reference.iter().enumerate() {
+            let ok = by_id[format!("t-{i}").as_str()]
+                .as_ok()
+                .unwrap_or_else(|| panic!("t-{i} must be ok at {workers} workers"));
+            assert_eq!(
+                (ok.history_digest, ok.history_len, ok.rel_residual_bits),
+                (*digest, *len, *bits),
+                "t-{i} ({}) at {workers} workers diverged from single-shot",
+                ok.method
+            );
+            if ok.batch_hit {
+                batched_and_checked += 1;
+            }
+        }
+        assert_eq!(counters.completed, TRACE_LEN as u64);
+        assert_eq!(counters.batch_hits, batched_and_checked);
+        // every job after the first of its plan reuses that worker's
+        // cached assembly, so the hit count is exact, not probabilistic
+        let mut plans: Vec<String> = trace
+            .iter()
+            .map(|s| {
+                format!(
+                    "{}x{}x{}/p{}/r{}",
+                    s.grid.nx,
+                    s.grid.ny,
+                    s.grid.nz,
+                    s.stencil.width(),
+                    s.ranks
+                )
+            })
+            .collect();
+        plans.sort();
+        plans.dedup();
+        assert_eq!(counters.distinct_plans, plans.len() as u64);
+        assert_eq!(
+            counters.batch_hits,
+            (TRACE_LEN - plans.len()) as u64,
+            "all but each plan's first job must be batch hits"
+        );
+        assert!(counters.peak_lanes <= counters.total_lanes, "budget held");
+    }
+}
+
+#[test]
+fn queue_cap_sheds_load_deterministically() {
+    // paused scheduling: no worker drains the queue, so a cap of 2
+    // admits exactly the first two submissions
+    let service = Service::start_paused(ServiceConfig {
+        workers: 1,
+        total_threads: 4,
+        queue_cap: 2,
+        default_iter_budget: None,
+        exec_cache_sets: 4,
+    });
+    let spec = tiny_spec();
+    for i in 0..5 {
+        submit(&service, &format!("q-{i}"), &spec, None);
+    }
+    service.resume();
+    let responses = service.drain();
+    let counters = service.shutdown();
+    assert_eq!(responses.len(), 5);
+    let rejected: Vec<&str> = responses
+        .iter()
+        .filter(|r| {
+            matches!(
+                r,
+                Response::Reject {
+                    code: RejectCode::QueueFull,
+                    ..
+                }
+            )
+        })
+        .map(Response::id)
+        .collect();
+    assert_eq!(rejected, ["q-2", "q-3", "q-4"], "exactly the overflow");
+    assert_eq!(counters.accepted, 2);
+    assert_eq!(counters.completed, 2);
+    assert_eq!(counters.rejected, 3);
+}
+
+#[test]
+fn impossible_specs_are_rejected_up_front() {
+    let service = Service::start(ServiceConfig {
+        workers: 1,
+        total_threads: 2,
+        queue_cap: 8,
+        default_iter_budget: None,
+        exec_cache_sets: 4,
+    });
+    // 2 ranks x 2 threads = 4 lanes can never lease from a 2-lane budget
+    let mut over = tiny_spec();
+    over.ranks = 2;
+    over.exec.threads = 2;
+    submit(&service, "over", &over, None);
+    // xla validates (lockstep + ell) but the service is native-only
+    let mut xla = tiny_spec();
+    xla.backend = BackendKind::Xla;
+    submit(&service, "xla", &xla, None);
+    // an invalid spec never reaches the queue
+    let mut bad = tiny_spec();
+    bad.ranks = 0;
+    submit(&service, "bad", &bad, None);
+    let responses = service.drain();
+    let counters = service.shutdown();
+    assert_eq!(responses.len(), 3);
+    let code_of = |id: &str| match responses.iter().find(|r| r.id() == id) {
+        Some(Response::Reject { code, .. }) => *code,
+        other => panic!("{id}: expected reject, got {other:?}"),
+    };
+    assert_eq!(code_of("over"), RejectCode::OverBudget);
+    assert_eq!(code_of("xla"), RejectCode::BackendUnsupported);
+    assert_eq!(code_of("bad"), RejectCode::SpecInvalid);
+    assert_eq!(counters.accepted, 0);
+    assert_eq!(counters.rejected, 3);
+}
+
+#[test]
+fn cancel_removes_queued_jobs_only() {
+    let service = Service::start_paused(ServiceConfig {
+        workers: 1,
+        total_threads: 4,
+        queue_cap: 8,
+        default_iter_budget: None,
+        exec_cache_sets: 4,
+    });
+    let spec = tiny_spec();
+    submit(&service, "keep", &spec, None);
+    submit(&service, "drop", &spec, None);
+    service.cancel("drop", None);
+    service.cancel("ghost", None);
+    service.resume();
+    let responses = service.drain();
+    let counters = service.shutdown();
+    assert_eq!(
+        responses.len(),
+        3,
+        "keep's solve, drop's cancel, ghost's reject"
+    );
+    let status_of = |id: &str| {
+        responses
+            .iter()
+            .find(|r| r.id() == id)
+            .map(Response::status)
+            .unwrap_or_else(|| panic!("no response for {id}"))
+    };
+    assert_eq!(status_of("keep"), "ok");
+    assert_eq!(status_of("drop"), "cancelled");
+    match responses.iter().find(|r| r.id() == "ghost") {
+        Some(Response::Reject { code, .. }) => assert_eq!(*code, RejectCode::NotPending),
+        other => panic!("ghost: expected not-pending reject, got {other:?}"),
+    }
+    assert_eq!(counters.cancelled, 1);
+    assert_eq!(counters.completed, 1);
+}
+
+#[test]
+fn iteration_budget_matches_a_single_shot_observed_run() {
+    let mut spec = RunSpec::default();
+    spec.grid = Grid3::new(8, 8, 16);
+    let cap = 3usize;
+    let reference = Session::new()
+        .run_observed(&spec, &IterationCap(cap))
+        .expect("single-shot capped run");
+    assert_eq!(reference.history.len(), cap, "the cap must bind");
+    assert!(!reference.converged);
+
+    let service = Service::start(ServiceConfig {
+        workers: 2,
+        total_threads: 4,
+        queue_cap: 8,
+        default_iter_budget: None,
+        exec_cache_sets: 4,
+    });
+    submit(&service, "capped", &spec, Some(cap));
+    // the same spec without a budget must run past the cap
+    submit(&service, "free", &spec, None);
+    let responses = service.drain();
+    drop(service);
+    let capped = responses
+        .iter()
+        .find(|r| r.id() == "capped")
+        .and_then(Response::as_ok)
+        .expect("capped job ok");
+    assert!(capped.early_stopped);
+    assert_eq!(capped.history_len, cap);
+    assert_eq!(capped.history_digest, history_digest(&reference.history));
+    assert_eq!(capped.rel_residual_bits, reference.rel_residual.to_bits());
+    let free = responses
+        .iter()
+        .find(|r| r.id() == "free")
+        .and_then(Response::as_ok)
+        .expect("free job ok");
+    assert!(!free.early_stopped);
+    assert!(free.history_len > cap);
+}

@@ -50,6 +50,11 @@ PRECOND_CELLS = [
 # the anisotropic problem by at least this factor (deterministic check —
 # iteration counts carry no timing noise)
 PRECOND_MIN_ITER_RATIO = 3.0
+# the committed baseline may stay a provisional (zeroed) placeholder only
+# until the repo reaches this many commits; past it, CI fails until a
+# real measured snapshot is committed. The provisional placeholder
+# landed at commit 10; this deadline leaves ~3 PRs of grace.
+PROVISIONAL_DEADLINE_COMMITS = 15
 
 
 def fail(msg):
@@ -255,6 +260,14 @@ def main():
         help="allowed fractional median-throughput loss (default 0.15, "
         "env HLAM_PERF_BAND)",
     )
+    ap.add_argument(
+        "--commits",
+        type=int,
+        default=None,
+        help="repo commit count (`git rev-list --count HEAD`); when given, "
+        "a provisional baseline is a hard failure once the count reaches "
+        f"{PROVISIONAL_DEADLINE_COMMITS}",
+    )
     args = ap.parse_args()
     if not 0.0 <= args.band < 1.0:
         fail(f"--band must be in [0, 1), got {args.band}")
@@ -268,9 +281,21 @@ def main():
         fail(f"fresh snapshot invalid: {e}")
 
     if baseline.get("provisional"):
-        print("perf gate: SKIP comparison — baseline is provisional (no real "
-              "measured run committed yet). Run `cargo bench --bench hot_path` "
-              "on quiet hardware and commit the result to arm the gate.")
+        how = ("To arm the gate, run exactly:\n"
+               "    cargo bench --bench hot_path\n"
+               "on quiet hardware and commit the updated BENCH_hot_path.json "
+               "(CI smoke shape: `cargo bench --bench hot_path -- --quick`).")
+        if args.commits is not None and \
+                args.commits >= PROVISIONAL_DEADLINE_COMMITS:
+            fail(f"baseline is still provisional (zeroed placeholder) at "
+                 f"commit {args.commits} >= deadline "
+                 f"{PROVISIONAL_DEADLINE_COMMITS}. {how}")
+        print(f"perf gate: SKIP comparison — baseline is provisional (no real "
+              f"measured run committed yet; hard deadline at commit "
+              f"{PROVISIONAL_DEADLINE_COMMITS}"
+              + (f", currently {args.commits}" if args.commits is not None
+                 else "")
+              + f"). {how}")
         return
     for field in ("quick", "grid", "iters_per_solve"):
         if baseline.get(field) != fresh.get(field):

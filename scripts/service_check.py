@@ -1,0 +1,158 @@
+#!/usr/bin/env python3
+"""CI validator for the `hlam serve` NDJSON protocol.
+
+Given the request trace piped into the service and the response stream
+it produced, checks that the service honoured the wire contract:
+
+  * every response line is one well-formed JSON object with a known
+    ``status`` (``ok`` | ``reject`` | ``error`` | ``cancelled``);
+  * exactly one terminal response per request, correlated by ``id``
+    (requests without an explicit id are matched by count against the
+    service's auto-assigned ``job-N`` ids);
+  * ``ok`` responses carry the full per-solve summary (stats fields,
+    queue/solve latency, plan + batch telemetry, bit-exact digests);
+  * with ``--expect-batch-hit``: at least one ``ok`` response reused a
+    batched assembly (``"batch": "hit"`` — the trace clusters on few
+    plans, so reuse is pigeonhole-guaranteed when every job completes);
+  * with ``--expect-reject``: at least one ``queue-full`` admission
+    reject (CI replays the trace at a deliberately tiny queue cap).
+
+Usage:
+    python3 scripts/service_check.py --requests /tmp/trace.ndjson \
+        --responses /tmp/responses.ndjson \
+        [--expect-batch-hit] [--expect-reject]
+
+Exit status: 0 = contract held, 1 = violation (message on stderr).
+"""
+
+import argparse
+import json
+import sys
+
+STATUSES = {"ok", "reject", "error", "cancelled"}
+OK_FIELDS = [
+    "id", "status", "method", "iterations", "converged", "rel_residual",
+    "restarts", "history_len", "history_digest", "rel_residual_bits",
+    "early_stopped", "plan", "batch", "worker", "lanes", "queue_ms",
+    "solve_ms",
+]
+REJECT_CODES = {
+    "spec-invalid", "backend-unsupported", "over-budget", "queue-full",
+    "not-pending",
+}
+
+
+def fail(msg):
+    print(f"service check: FAIL: {msg}", file=sys.stderr)
+    sys.exit(1)
+
+
+def read_ndjson(path, what):
+    objs = []
+    with open(path) as f:
+        for lineno, line in enumerate(f, 1):
+            if not line.strip():
+                continue
+            try:
+                obj = json.loads(line)
+            except ValueError as e:
+                fail(f"{what} line {lineno} is not valid JSON: {e}")
+            if not isinstance(obj, dict):
+                fail(f"{what} line {lineno} is not a JSON object")
+            objs.append(obj)
+    return objs
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--requests", required=True)
+    ap.add_argument("--responses", required=True)
+    ap.add_argument(
+        "--expect-reject",
+        action="store_true",
+        help="require at least one queue-full admission reject",
+    )
+    ap.add_argument(
+        "--expect-batch-hit",
+        action="store_true",
+        help="require at least one batched-assembly reuse",
+    )
+    args = ap.parse_args()
+
+    requests = read_ndjson(args.requests, "request")
+    responses = read_ndjson(args.responses, "response")
+    solve_requests = [r for r in requests if "cancel" not in r]
+    if not solve_requests:
+        fail("no solve requests in the trace")
+
+    if len(responses) != len(requests):
+        fail(f"{len(requests)} request lines but {len(responses)} response "
+             f"lines — the service must answer every line exactly once")
+
+    # correlation: explicit request ids must each get exactly one response
+    want_ids = [r["id"] for r in solve_requests if "id" in r]
+    got_ids = [r.get("id") for r in responses]
+    if None in got_ids:
+        fail("a response is missing its 'id'")
+    if len(set(got_ids)) != len(got_ids):
+        dupes = sorted({i for i in got_ids if got_ids.count(i) > 1})
+        fail(f"duplicate terminal responses for ids {dupes}")
+    missing = sorted(set(want_ids) - set(got_ids))
+    if missing:
+        fail(f"no response for request ids {missing}")
+
+    by_status = {s: 0 for s in STATUSES}
+    batch_hits = 0
+    queue_full = 0
+    for resp in responses:
+        status = resp.get("status")
+        if status not in STATUSES:
+            fail(f"response {resp.get('id')}: unknown status {status!r}")
+        by_status[status] += 1
+        if status == "ok":
+            for field in OK_FIELDS:
+                if field not in resp:
+                    fail(f"ok response {resp['id']} is missing '{field}'")
+            if resp["batch"] not in ("hit", "miss"):
+                fail(f"{resp['id']}: batch must be hit|miss, "
+                     f"got {resp['batch']!r}")
+            if resp["batch"] == "hit":
+                batch_hits += 1
+            for field in ("queue_ms", "solve_ms"):
+                if not (isinstance(resp[field], (int, float))
+                        and resp[field] >= 0):
+                    fail(f"{resp['id']}: {field} must be a non-negative "
+                         f"number, got {resp[field]!r}")
+            for field in ("history_digest", "rel_residual_bits"):
+                try:
+                    int(resp[field], 16)
+                except (TypeError, ValueError):
+                    fail(f"{resp['id']}: {field} must be a hex string, "
+                         f"got {resp[field]!r}")
+        elif status == "reject":
+            code = resp.get("code")
+            if code not in REJECT_CODES:
+                fail(f"reject {resp.get('id')}: unknown code {code!r}")
+            if not resp.get("reason"):
+                fail(f"reject {resp.get('id')} carries no reason")
+            if code == "queue-full":
+                queue_full += 1
+
+    if by_status["ok"] == 0:
+        fail("no solve completed")
+    if by_status["error"]:
+        fail(f"{by_status['error']} admitted solves failed")
+    if args.expect_batch_hit and batch_hits == 0:
+        fail("no response reused a batched assembly — plan routing broke")
+    if args.expect_reject and queue_full == 0:
+        fail("expected at least one queue-full reject at the tiny queue "
+             "cap, saw none")
+
+    print(f"service check: ok — {len(responses)} responses "
+          f"({by_status['ok']} ok, {by_status['reject']} reject, "
+          f"{by_status['cancelled']} cancelled), {batch_hits} batch hits, "
+          f"{queue_full} queue-full rejects")
+
+
+if __name__ == "__main__":
+    main()
