@@ -34,6 +34,7 @@ fn submit_all(service: &Service, trace: &[RunSpec]) {
                 id: Some(format!("job-{i}")),
                 spec: spec.clone(),
                 iter_budget: None,
+                deadline_ms: None,
             },
             None,
         );
@@ -69,6 +70,8 @@ fn main() {
         queue_cap: n, // the whole trace fits: no admission noise in timings
         default_iter_budget: None,
         exec_cache_sets: 4,
+        default_deadline_ms: None,
+        max_retries: 1,
     };
     let service = Service::start(cfg);
     let t0 = Instant::now();
@@ -117,6 +120,8 @@ fn main() {
         queue_cap: small_cap,
         default_iter_budget: None,
         exec_cache_sets: 4,
+        default_deadline_ms: None,
+        max_retries: 1,
     });
     submit_all(&small, &trace);
     small.resume();

@@ -11,13 +11,21 @@
 //!    non-zero instead of panicking.
 //!  * [`SolveError`] — a well-formed spec could not be *executed*: the
 //!    spec failed validation, a backend could not be constructed (e.g.
-//!    missing XLA artifacts), or spec file I/O failed.
+//!    missing XLA artifacts), spec file I/O failed, or the solve hit a
+//!    structured runtime failure — numerical breakdown, divergence, a
+//!    non-finite residual, or a transport failure underneath the solve
+//!    (the failure taxonomy, DESIGN.md §12; these variants mirror
+//!    [`crate::solvers::SolveFailure`]).
 //!
-//! Note that failing to converge is **not** an error — it is reported
-//! through `SolveStats::converged`, exactly as the legacy entry points
-//! did.
+//! Note that merely failing to converge within `max_iters` is **not**
+//! an error — it is reported through `SolveStats::converged`, exactly
+//! as the legacy entry points did. The runtime-failure variants fire
+//! only when a guard detects the solve cannot produce a meaningful
+//! answer at all.
 
 use std::fmt;
+
+use crate::solvers::SolveFailure;
 
 /// A malformed run description (user input). See the module docs.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -80,6 +88,47 @@ pub enum SolveError {
     Backend { backend: &'static str, reason: String },
     /// Reading or writing a spec file failed.
     Io { path: String, reason: String },
+    /// A Krylov denominator (`what` names it) vanished or went
+    /// non-finite after `restarts` restart attempts.
+    Breakdown {
+        what: &'static str,
+        value: f64,
+        iteration: usize,
+        restarts: usize,
+    },
+    /// The relative residual grew past `SolveOpts::divergence_ratio` ×
+    /// the best value seen.
+    Diverged {
+        iteration: usize,
+        rel_residual: f64,
+        growth: f64,
+    },
+    /// A residual or allreduced scalar went NaN/∞.
+    NonFinite { what: &'static str, iteration: usize },
+    /// The transport failed underneath the solve (deadlock, timeout,
+    /// injected abort) — the originating rank/phase/cause.
+    TransportFailure {
+        rank: usize,
+        phase: String,
+        what: String,
+    },
+}
+
+impl SolveError {
+    /// Stable kebab-case wire code for the service layer:
+    /// `bad-spec | backend | io | solver-breakdown | diverged |
+    /// non-finite | transport`.
+    pub fn code(&self) -> &'static str {
+        match self {
+            SolveError::Spec(_) => "bad-spec",
+            SolveError::Backend { .. } => "backend",
+            SolveError::Io { .. } => "io",
+            SolveError::Breakdown { .. } => "solver-breakdown",
+            SolveError::Diverged { .. } => "diverged",
+            SolveError::NonFinite { .. } => "non-finite",
+            SolveError::TransportFailure { .. } => "transport",
+        }
+    }
 }
 
 impl fmt::Display for SolveError {
@@ -90,6 +139,64 @@ impl fmt::Display for SolveError {
                 write!(f, "backend '{backend}' unavailable: {reason}")
             }
             SolveError::Io { path, reason } => write!(f, "spec file '{path}': {reason}"),
+            SolveError::Breakdown {
+                what,
+                value,
+                iteration,
+                restarts,
+            } => write!(
+                f,
+                "solver breakdown at iteration {iteration}: {what} = {value:.3e} \
+                 (after {restarts} restarts)"
+            ),
+            SolveError::Diverged {
+                iteration,
+                rel_residual,
+                growth,
+            } => write!(
+                f,
+                "solver diverged at iteration {iteration}: rel residual {rel_residual:.3e} \
+                 ({growth:.1e}x the best seen)"
+            ),
+            SolveError::NonFinite { what, iteration } => {
+                write!(f, "non-finite {what} at iteration {iteration}")
+            }
+            SolveError::TransportFailure { rank, phase, what } => {
+                write!(f, "transport failure at rank {rank} during {phase}: {what}")
+            }
+        }
+    }
+}
+
+impl From<SolveFailure> for SolveError {
+    fn from(fail: SolveFailure) -> Self {
+        match fail {
+            SolveFailure::Breakdown {
+                what,
+                value,
+                iteration,
+                restarts,
+            } => SolveError::Breakdown {
+                what,
+                value,
+                iteration,
+                restarts,
+            },
+            SolveFailure::Diverged {
+                iteration,
+                rel_residual,
+                growth,
+            } => SolveError::Diverged {
+                iteration,
+                rel_residual,
+                growth,
+            },
+            SolveFailure::NonFinite { what, iteration } => {
+                SolveError::NonFinite { what, iteration }
+            }
+            SolveFailure::Transport { rank, phase, what } => {
+                SolveError::TransportFailure { rank, phase, what }
+            }
         }
     }
 }

@@ -51,7 +51,7 @@ use std::str::FromStr;
 
 use crate::exec::{ExecSpec, ExecStrategy};
 use crate::mesh::Grid3;
-use crate::simmpi::TransportKind;
+use crate::simmpi::{Fault, FaultKind, FaultPlan, TransportKind};
 use crate::solvers::{CgVariant, Method, PrecondKind, SolveOpts};
 use crate::sparse::{KernelKind, StencilKind};
 use crate::util::Json;
@@ -68,6 +68,7 @@ const TRANSPORT_VALID: &str = "lockstep|threaded";
 const BACKEND_VALID: &str = "native|xla";
 const KERNEL_VALID: &str = "csr|ell|sell|stencil";
 const PRECOND_VALID: &str = "none|jacobi|block-jacobi|chebyshev";
+const FAULT_VALID: &str = "stall|abort|panic|delay-allreduce|corrupt-allreduce";
 
 fn unknown(
     what: &'static str,
@@ -233,6 +234,13 @@ pub struct RunSpec {
     /// bitwise (DESIGN.md §9).
     pub kernel: KernelKind,
     pub opts: SolveOpts,
+    /// Deterministic fault injection (JSON key `fault`; empty = fault
+    /// free). A saved chaos run replays its faults exactly (DESIGN.md
+    /// §12).
+    pub fault: FaultPlan,
+    /// Threaded-transport deadlock timeout override in milliseconds.
+    /// 0 = resolve from `HLAM_DEADLOCK_TIMEOUT_MS` or the 30 s default.
+    pub deadlock_timeout_ms: u64,
 }
 
 impl Default for RunSpec {
@@ -249,6 +257,8 @@ impl Default for RunSpec {
             backend: BackendKind::Native,
             kernel: KernelKind::Ell,
             opts: SolveOpts::default(),
+            fault: FaultPlan::none(),
+            deadlock_timeout_ms: 0,
         }
     }
 }
@@ -293,6 +303,23 @@ impl RunSpec {
         }
         if self.opts.restart_eps.is_nan() || self.opts.restart_eps < 0.0 {
             return Err(invalid("restart_eps", "must be a non-negative number".into()));
+        }
+        if self.opts.divergence_ratio.is_nan() || self.opts.divergence_ratio < 1.0 {
+            return Err(invalid(
+                "divergence_ratio",
+                "must be a number >= 1.0 (residual growth factor that flags divergence)".into(),
+            ));
+        }
+        for f in &self.fault.faults {
+            if f.rank >= self.ranks {
+                return Err(invalid(
+                    "fault",
+                    format!(
+                        "fault rank {} out of range: the spec runs {} rank(s)",
+                        f.rank, self.ranks
+                    ),
+                ));
+            }
         }
         if self.backend == BackendKind::Xla && self.transport == TransportKind::Threaded {
             return Err(invalid(
@@ -347,6 +374,14 @@ impl RunSpec {
 
         let mut opts = BTreeMap::new();
         opts.insert("eps".to_string(), Json::Num(self.opts.eps));
+        opts.insert(
+            "restarts".to_string(),
+            Json::Num(self.opts.restarts as f64),
+        );
+        opts.insert(
+            "divergence_ratio".to_string(),
+            Json::Num(self.opts.divergence_ratio),
+        );
         opts.insert("eps_absolute".to_string(), Json::Bool(self.opts.eps_absolute));
         opts.insert("restart_eps".to_string(), Json::Num(self.opts.restart_eps));
         opts.insert(
@@ -391,6 +426,40 @@ impl RunSpec {
         );
         m.insert("inner".to_string(), Json::Num(self.opts.inner_iters as f64));
         m.insert("opts".to_string(), Json::Obj(opts));
+        // failure-taxonomy knobs are emitted only when non-default, so
+        // fault-free specs serialise byte-identically to older releases
+        if self.deadlock_timeout_ms > 0 {
+            m.insert(
+                "deadlock_timeout_ms".to_string(),
+                Json::Num(self.deadlock_timeout_ms as f64),
+            );
+        }
+        if !self.fault.is_empty() {
+            let mut fp = BTreeMap::new();
+            fp.insert(
+                "seed".to_string(),
+                if self.fault.seed <= 9_000_000_000_000_000 {
+                    Json::Num(self.fault.seed as f64)
+                } else {
+                    Json::Str(self.fault.seed.to_string())
+                },
+            );
+            let faults = self
+                .fault
+                .faults
+                .iter()
+                .map(|f| {
+                    let mut o = BTreeMap::new();
+                    o.insert("kind".to_string(), Json::Str(f.kind.name().to_string()));
+                    o.insert("rank".to_string(), Json::Num(f.rank as f64));
+                    o.insert("at".to_string(), Json::Num(f.at as f64));
+                    o.insert("delay_ms".to_string(), Json::Num(f.delay_ms as f64));
+                    Json::Obj(o)
+                })
+                .collect();
+            fp.insert("faults".to_string(), Json::Arr(faults));
+            m.insert("fault".to_string(), Json::Obj(fp));
+        }
         Json::Obj(m)
     }
 
@@ -412,7 +481,7 @@ impl RunSpec {
             j,
             &[
                 "grid", "stencil", "method", "ranks", "exec", "transport", "backend", "kernel",
-                "precond", "inner", "opts",
+                "precond", "inner", "opts", "fault", "deadlock_timeout_ms",
             ],
             "spec",
         )?;
@@ -483,6 +552,8 @@ impl RunSpec {
                     "max_iters",
                     "ntasks",
                     "task_order_seed",
+                    "restarts",
+                    "divergence_ratio",
                 ],
                 "opts",
             )?;
@@ -501,6 +572,12 @@ impl RunSpec {
             if let Some(x) = opt_usize(o, "ntasks")? {
                 spec.opts.ntasks = x;
             }
+            if let Some(x) = opt_usize(o, "restarts")? {
+                spec.opts.restarts = x;
+            }
+            if let Some(x) = opt_f64(o, "divergence_ratio")? {
+                spec.opts.divergence_ratio = x;
+            }
             if let Some(s) = o.get("task_order_seed") {
                 spec.opts.task_order_seed = match s {
                     Json::Num(_) => int_field(s, "task_order_seed")? as u64,
@@ -514,6 +591,12 @@ impl RunSpec {
                     }
                 };
             }
+        }
+        if let Some(x) = opt_usize(j, "deadlock_timeout_ms")? {
+            spec.deadlock_timeout_ms = x as u64;
+        }
+        if let Some(fj) = j.get("fault") {
+            spec.fault = parse_fault_plan(fj)?;
         }
         spec.validate()?;
         Ok(spec)
@@ -547,7 +630,7 @@ impl RunSpec {
 
     /// One-line human summary (CLI echo).
     pub fn describe(&self) -> String {
-        format!(
+        let mut d = format!(
             "method={} backend={} kernel={} grid={}x{}x{} w={} ranks={} transport={} exec={} \
              threads={} overlap={} precond={} inner={}",
             self.method.name(),
@@ -564,7 +647,18 @@ impl RunSpec {
             if self.exec.overlap { "on" } else { "off" },
             self.opts.precond.name(),
             self.opts.inner_iters
-        )
+        );
+        if !self.fault.is_empty() {
+            d.push_str(&format!(
+                " fault=seed:{}+{}explicit",
+                self.fault.seed,
+                self.fault.faults.len()
+            ));
+        }
+        if self.deadlock_timeout_ms > 0 {
+            d.push_str(&format!(" deadlock_timeout_ms={}", self.deadlock_timeout_ms));
+        }
+        d
     }
 }
 
@@ -640,6 +734,86 @@ fn opt_bool(j: &Json, field: &'static str) -> Result<Option<bool>, SpecError> {
             msg: format!("field '{field}' must be a boolean"),
         }),
     }
+}
+
+/// Strictly parse the `fault` object: `{"seed": n, "faults": [{"kind":
+/// ..., "rank": n, "at": n, "delay_ms": n}, ...]}`. Unknown keys and
+/// unknown fault kinds are rejected with suggestions, like every other
+/// spec field.
+fn parse_fault_plan(j: &Json) -> Result<FaultPlan, SpecError> {
+    if j.as_obj().is_none() {
+        return Err(SpecError::Json {
+            msg: "field 'fault' must be an object".into(),
+        });
+    }
+    check_keys(j, &["seed", "faults"], "fault")?;
+    let mut plan = FaultPlan::none();
+    if let Some(s) = j.get("seed") {
+        plan.seed = match s {
+            Json::Num(_) => int_field(s, "seed")? as u64,
+            Json::Str(s) => s.parse::<u64>().map_err(|_| SpecError::Json {
+                msg: format!("field 'fault.seed': bad integer '{s}'"),
+            })?,
+            _ => {
+                return Err(SpecError::Json {
+                    msg: "field 'fault.seed' must be an integer".into(),
+                })
+            }
+        };
+    }
+    if let Some(arr) = j.get("faults") {
+        let items = arr.as_arr().ok_or_else(|| SpecError::Json {
+            msg: "field 'fault.faults' must be an array".into(),
+        })?;
+        for f in items {
+            if f.as_obj().is_none() {
+                return Err(SpecError::Json {
+                    msg: "each entry of 'fault.faults' must be an object".into(),
+                });
+            }
+            check_keys(f, &["kind", "rank", "at", "delay_ms"], "fault")?;
+            let kind_name = req_str(f, "kind")?;
+            let kind = FaultKind::parse(kind_name)
+                .ok_or_else(|| unknown("fault kind", kind_name, FAULT_VALID, &FaultKind::NAMES))?;
+            plan.faults.push(Fault {
+                kind,
+                rank: opt_usize(f, "rank")?.unwrap_or(0),
+                at: opt_usize(f, "at")?.unwrap_or(0),
+                delay_ms: opt_usize(f, "delay_ms")?.unwrap_or(0) as u64,
+            });
+        }
+    }
+    Ok(plan)
+}
+
+/// Parse the CLI's compact fault syntax `kind,rank,at[,delay_ms]`
+/// (e.g. `abort,1,2` or `stall,0,3,250`).
+fn parse_fault_cli(s: &str) -> Result<Fault, SpecError> {
+    let parts: Vec<&str> = s.split(',').map(str::trim).collect();
+    if !(3..=4).contains(&parts.len()) {
+        return Err(SpecError::Invalid {
+            field: "fault",
+            reason: format!("'{s}': expected kind,rank,at[,delay_ms]"),
+        });
+    }
+    let kind = FaultKind::parse(parts[0])
+        .ok_or_else(|| unknown("fault kind", parts[0], FAULT_VALID, &FaultKind::NAMES))?;
+    let int = |what: &'static str, v: &str| {
+        v.parse::<u64>().map_err(|_| SpecError::Invalid {
+            field: "fault",
+            reason: format!("{what} '{v}' is not a non-negative integer"),
+        })
+    };
+    Ok(Fault {
+        kind,
+        rank: int("rank", parts[1])? as usize,
+        at: int("at", parts[2])? as usize,
+        delay_ms: if parts.len() == 4 {
+            int("delay_ms", parts[3])?
+        } else {
+            0
+        },
+    })
 }
 
 // ---------------------------------------------------------------------
@@ -760,6 +934,47 @@ impl RunSpecBuilder {
         self
     }
 
+    /// Breakdown restart budget (`--restarts`): how many times BiCGStab
+    /// may deterministically reseed its shadow residual before a
+    /// vanished denominator becomes a `Breakdown` error.
+    pub fn restarts(mut self, restarts: usize) -> Self {
+        self.spec.opts.restarts = restarts;
+        self
+    }
+
+    /// Divergence guard: fail the solve once the relative residual
+    /// exceeds this multiple of the best value seen.
+    pub fn divergence_ratio(mut self, ratio: f64) -> Self {
+        self.spec.opts.divergence_ratio = ratio;
+        self
+    }
+
+    /// Install a complete fault plan (replaces any prior one).
+    pub fn fault(mut self, plan: FaultPlan) -> Self {
+        self.spec.fault = plan;
+        self
+    }
+
+    /// Seed-derived chaos plan (`--fault-seed`): the concrete faults are
+    /// drawn deterministically once the rank count is known.
+    pub fn fault_seed(mut self, seed: u64) -> Self {
+        self.spec.fault.seed = seed;
+        self
+    }
+
+    /// Append one explicit fault to the plan.
+    pub fn push_fault(mut self, fault: Fault) -> Self {
+        self.spec.fault.faults.push(fault);
+        self
+    }
+
+    /// Threaded-transport deadlock timeout override
+    /// (`--deadlock-timeout-ms`); 0 keeps the env/default resolution.
+    pub fn deadlock_timeout_ms(mut self, ms: u64) -> Self {
+        self.spec.deadlock_timeout_ms = ms;
+        self
+    }
+
     // parsing setters (CLI names; first failure surfaces at build) -----
 
     pub fn method_str(self, s: &str) -> Self {
@@ -800,6 +1015,12 @@ impl RunSpecBuilder {
     pub fn precond_str(self, s: &str) -> Self {
         let parsed = s.parse::<PrecondKind>();
         self.apply(parsed, |spec, p| spec.opts.precond = p)
+    }
+
+    /// Parse one `--fault kind,rank,at[,delay_ms]` spec and append it.
+    pub fn fault_str(self, s: &str) -> Self {
+        let parsed = parse_fault_cli(s);
+        self.apply(parsed, |spec, f| spec.fault.faults.push(f))
     }
 
     fn apply<T>(mut self, parsed: Result<T, SpecError>, set: impl FnOnce(&mut RunSpec, T)) -> Self {
@@ -1071,6 +1292,69 @@ mod tests {
         // inner must be at least 1
         let err = RunSpec::builder().inner_iters(0).build().unwrap_err();
         assert!(matches!(err, SpecError::Invalid { field: "inner", .. }));
+    }
+
+    #[test]
+    fn fault_plan_round_trips_and_defaults_empty() {
+        // fault-free specs do not serialise the taxonomy keys at all
+        let plain = RunSpec::default().to_json_string();
+        assert!(!plain.contains("fault"), "{plain}");
+        assert!(!plain.contains("deadlock_timeout_ms"), "{plain}");
+        // explicit faults + seed + timeout round-trip exactly
+        let spec = RunSpec::builder()
+            .grid_str("4x4x8")
+            .ranks(2)
+            .fault_seed(77)
+            .fault_str("abort,1,2")
+            .fault_str("stall,0,3,250")
+            .deadlock_timeout_ms(2000)
+            .restarts(2)
+            .divergence_ratio(1e6)
+            .build()
+            .unwrap();
+        assert_eq!(spec.fault.faults.len(), 2);
+        assert_eq!(spec.fault.faults[1].delay_ms, 250);
+        let back = RunSpec::from_json_str(&spec.to_json_string()).unwrap();
+        assert_eq!(back, spec, "{}", spec.to_json_string());
+        assert_eq!(back.opts.restarts, 2);
+        assert_eq!(back.deadlock_timeout_ms, 2000);
+        assert!(spec.describe().contains("fault=seed:77+2explicit"));
+    }
+
+    #[test]
+    fn fault_parsing_is_strict_with_suggestions() {
+        // unknown fault kind in JSON gets a did-you-mean
+        let err = RunSpec::from_json_str(
+            r#"{"method":"cg","fault":{"faults":[{"kind":"abrt","rank":0,"at":1}]}}"#,
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("abort"), "{err}");
+        // unknown keys inside the fault object are rejected
+        let err =
+            RunSpec::from_json_str(r#"{"method":"cg","fault":{"sede":3}}"#).unwrap_err();
+        assert!(err.to_string().contains("seed"), "{err}");
+        // CLI syntax errors surface at build
+        let err = RunSpec::builder().fault_str("abort,1").build().unwrap_err();
+        assert!(err.to_string().contains("kind,rank,at"), "{err}");
+        let err = RunSpec::builder().fault_str("stll,0,1").build().unwrap_err();
+        assert!(err.to_string().contains("stall"), "{err}");
+    }
+
+    #[test]
+    fn fault_validation_checks_rank_range_and_divergence_ratio() {
+        // a fault aimed at a rank the spec never runs is a typo
+        let err = RunSpec::builder()
+            .ranks(2)
+            .grid_str("4x4x8")
+            .fault_str("abort,5,1")
+            .build()
+            .unwrap_err();
+        assert!(matches!(err, SpecError::Invalid { field: "fault", .. }), "{err}");
+        let err = RunSpec::builder().divergence_ratio(0.5).build().unwrap_err();
+        assert!(
+            matches!(err, SpecError::Invalid { field: "divergence_ratio", .. }),
+            "{err}"
+        );
     }
 
     #[test]

@@ -189,6 +189,10 @@ impl Session {
         // move, so `assembly_ptr` identity (and the XLA literal cache)
         // survive kernel changes between runs
         pb.set_kernel(spec.kernel);
+        // the problem is cached across runs, so the per-run failure
+        // knobs must be (re)installed from the spec every time
+        pb.fault = spec.fault.clone();
+        pb.deadlock_timeout_ms = spec.deadlock_timeout_ms;
         let stats = match spec.backend {
             BackendKind::Native => {
                 let execs = Self::execs_in(exec_cache, *exec_cache_limit, &spec.exec, spec.ranks);
@@ -215,6 +219,11 @@ impl Session {
         };
         let world = pb.stats.clone();
         self.last_world = Some(world);
+        // a structured runtime failure outranks the partial stats: the
+        // caller gets the taxonomy error, the service layer a wire code
+        if let Some(fail) = stats.failure.clone() {
+            return Err(fail.into());
+        }
         Ok(stats)
     }
 

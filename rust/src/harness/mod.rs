@@ -10,7 +10,7 @@ use std::collections::BTreeMap;
 use std::fmt::Write as _;
 use std::path::Path;
 
-use crate::api::{BackendKind, RunSpec, Session};
+use crate::api::{suggest, BackendKind, RunSpec, Session, SpecError};
 use crate::exec::{ExecSpec, ExecStrategy};
 use crate::machine::MachineModel;
 use crate::mesh::Grid3;
@@ -39,9 +39,14 @@ pub fn paper_iterations(method: &str, kind: StencilKind) -> usize {
     }
 }
 
+/// The methods the paper tabulates one-node reference times for.
+const PAPER_REF_METHODS: [&str; 4] = ["cg", "bicgstab", "jacobi", "gs"];
+
 /// Paper-reported one-node MPI-only median reference times (Figs. 3-4).
-pub fn paper_reference_time(method: &str, kind: StencilKind) -> f64 {
-    match (method, kind) {
+/// A method outside the paper's tables is a structured error — it used
+/// to answer `NaN`, which propagated silently into CSV output.
+pub fn paper_reference_time(method: &str, kind: StencilKind) -> Result<f64, SpecError> {
+    Ok(match (method, kind) {
         ("cg", StencilKind::P7) => 1.52,
         ("cg", StencilKind::P27) => 19.35,
         ("bicgstab", StencilKind::P7) => 1.96,
@@ -50,8 +55,15 @@ pub fn paper_reference_time(method: &str, kind: StencilKind) -> f64 {
         ("jacobi", StencilKind::P27) => 113.91,
         ("gs", StencilKind::P7) => 1.31,
         ("gs", StencilKind::P27) => 61.65,
-        _ => f64::NAN,
-    }
+        _ => {
+            return Err(SpecError::Unknown {
+                what: "paper reference method",
+                input: method.to_string(),
+                valid: "cg|bicgstab|jacobi|gs",
+                suggestion: suggest(method, &PAPER_REF_METHODS),
+            })
+        }
+    })
 }
 
 fn nbar(kind: StencilKind) -> f64 {
@@ -171,6 +183,8 @@ impl HarnessOpts {
             backend: BackendKind::Native,
             kernel: self.kernel,
             opts,
+            fault: crate::simmpi::FaultPlan::none(),
+            deadlock_timeout_ms: 0,
         }
     }
 
@@ -569,7 +583,11 @@ fn weak_panel(
         "panel {name} (w={}, ref {:.3}s simulated vs {:.2}s paper):\n  {:<26}",
         kind.width(),
         t_ref,
-        paper_reference_time(ref_method, kind),
+        // panels reference a fixed, paper-tabled method; anything else
+        // is a programming error worth failing loudly over (the old
+        // NaN fallback silently poisoned the CSV)
+        paper_reference_time(ref_method, kind)
+            .expect("weak panels must reference a paper-tabled method"),
         "nodes"
     );
     for n in &nodes_list {
@@ -1046,9 +1064,24 @@ mod tests {
                 assert!(paper_iterations(m, kind) > 0);
             }
             for m in ["cg", "bicgstab", "gs", "jacobi"] {
-                assert!(paper_reference_time(m, kind) > 0.0);
+                assert!(paper_reference_time(m, kind).unwrap() > 0.0);
             }
         }
+    }
+
+    #[test]
+    fn paper_reference_time_rejects_untabled_methods() {
+        // the paper tabulates no reference time for these; the old code
+        // answered NaN and the CSVs carried it silently
+        for m in ["cg-nb", "multisplit", "nonsense"] {
+            let err = paper_reference_time(m, StencilKind::P7).unwrap_err();
+            let msg = err.to_string();
+            assert!(msg.contains(m), "{msg}");
+            assert!(msg.contains("cg|bicgstab|jacobi|gs"), "{msg}");
+        }
+        // close misspellings get a suggestion
+        let err = paper_reference_time("jacobl", StencilKind::P27).unwrap_err();
+        assert!(err.to_string().contains("did you mean 'jacobi'"), "{err}");
     }
 
     #[test]

@@ -86,12 +86,17 @@ fn usage() {
         \x20        --precond none|jacobi|block-jacobi|chebyshev (cg, bicgstab, multisplit)\n\
         \x20        --inner-iters K (preconditioner sweeps / multisplit inner iterations)\n\
         \x20        --eps 1e-6 --ntasks N --task-seed S --artifacts DIR\n\
+        \x20        --restarts N (BiCGStab breakdown restarts) --divergence-ratio R\n\
+        \x20        --fault kind,rank,at[,delay_ms] --fault-seed S (deterministic chaos)\n\
+        \x20        --deadlock-timeout-ms N (threaded-transport watchdog override)\n\
         \x20        --spec FILE (replay a saved run) --emit-spec [FILE] (save/print it)\n\
          serve   --stdin (NDJSON requests on stdin, responses on stdout)\n\
         \x20        --socket PATH (Unix-domain-socket listener; combinable with --stdin)\n\
         \x20        --workers N --total-threads N (shared compute-lane budget)\n\
         \x20        --queue-cap N (pending-job bound; beyond it: structured rejects)\n\
         \x20        --iter-budget N (default per-job iteration cap) --summary\n\
+        \x20        --deadline-ms N (default per-job wall-clock deadline)\n\
+        \x20        --retries N (panicked-job retries on a rebuilt session; default 1)\n\
         \x20        --emit-trace N [--seed S] (print a deterministic request trace)\n\
          figures --all | --fig 1|2|3|4|5|6|iters|gs-iters|granularity|latency|headline\n\
         \x20        --out DIR --reps N --quick --ranks N --transport lockstep|threaded\n\
@@ -167,9 +172,11 @@ fn resolve_spec(args: &Args) -> Result<RunSpec, CliError> {
         max_iters: num(args, "max-iters", 10_000)?,
         ntasks: num(args, "ntasks", 0)?,
         task_order_seed: num(args, "task-seed", 0u64)?,
+        restarts: num(args, "restarts", 0)?,
+        divergence_ratio: num(args, "divergence-ratio", SolveOpts::default().divergence_ratio)?,
         ..SolveOpts::default()
     };
-    let spec = RunSpec::builder()
+    let mut builder = RunSpec::builder()
         .method_str(&args.str_or("method", "cg"))
         .grid_str(&args.str_or("grid", "16x16x32"))
         .stencil_str(&args.str_or("stencil", "7"))
@@ -186,8 +193,12 @@ fn resolve_spec(args: &Args) -> Result<RunSpec, CliError> {
         // after .opts() so the flags land on top of the assembled options
         .precond_str(&args.str_or("precond", "none"))
         .inner_iters(num(args, "inner-iters", 1)?)
-        .build()?;
-    Ok(spec)
+        .fault_seed(num(args, "fault-seed", 0u64)?)
+        .deadlock_timeout_ms(num(args, "deadlock-timeout-ms", 0u64)?);
+    if let Some(f) = args.get("fault") {
+        builder = builder.fault_str(f);
+    }
+    Ok(builder.build()?)
 }
 
 /// `--emit-spec FILE` writes the resolved spec JSON; a bare trailing
@@ -262,6 +273,11 @@ fn cmd_serve(args: &Args) -> Result<(), CliError> {
             Some(_) => Some(num(args, "iter-budget", 1usize)?),
         },
         exec_cache_sets: num(args, "exec-cache-sets", 4)?,
+        default_deadline_ms: match args.get("deadline-ms") {
+            None => None,
+            Some(_) => Some(num(args, "deadline-ms", 0u64)?),
+        },
+        max_retries: num(args, "retries", 1)?,
     };
     if cfg.workers == 0 || cfg.total_threads == 0 || cfg.queue_cap == 0 {
         return Err(CliError(

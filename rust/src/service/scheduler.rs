@@ -20,9 +20,10 @@
 
 use std::collections::VecDeque;
 use std::io::Write;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use crate::api::{BackendKind, RunSpec, Session};
 use crate::exec::ThreadBudget;
@@ -50,6 +51,14 @@ pub struct ServiceConfig {
     /// Distinct warm executor sets each worker session keeps
     /// (`Session::set_exec_cache_limit`).
     pub exec_cache_sets: usize,
+    /// Wall-clock deadline applied to jobs that do not carry their own
+    /// `deadline_ms` (enforced through the rank-consistent memoised
+    /// deadline observer; expired jobs answer code `deadline`).
+    pub default_deadline_ms: Option<u64>,
+    /// How many times a job whose solve *panicked* (an unstructured
+    /// failure, e.g. an injected `FaultKind::Panic`) is retried on a
+    /// rebuilt session before answering code `internal-panic`.
+    pub max_retries: usize,
 }
 
 impl Default for ServiceConfig {
@@ -60,6 +69,8 @@ impl Default for ServiceConfig {
             queue_cap: 64,
             default_iter_budget: None,
             exec_cache_sets: 4,
+            default_deadline_ms: None,
+            max_retries: 1,
         }
     }
 }
@@ -85,6 +96,13 @@ pub struct Counters {
     pub peak_lanes: usize,
     /// The configured lane total.
     pub total_lanes: usize,
+    /// Solves that panicked under `catch_unwind` (each one also tore
+    /// down and rebuilt its worker's session).
+    pub panics: u64,
+    /// Panicked jobs that were requeued for another attempt.
+    pub retried: u64,
+    /// Jobs ended by their wall-clock deadline (code `deadline`).
+    pub deadlines: u64,
 }
 
 /// Deterministic per-job "timeout": stops a solve after `cap` recorded
@@ -103,10 +121,70 @@ impl Observer for IterationCap {
     }
 }
 
+/// Wall-clock deadline that satisfies the observer purity contract by
+/// memoisation: the *first* rank to ask about iteration `k` samples the
+/// clock and records the verdict; every later rank asking about `k`
+/// reads the recorded answer. All ranks therefore agree on exactly
+/// which iteration the deadline fired at, even though the trigger is
+/// temporal — no transport deadlock, and the job's history up to the
+/// stop stays bitwise identical to an undeadlined run.
+pub struct DeadlineGuard {
+    deadline: Instant,
+    /// Verdict per iteration, first-writer-wins (index = iteration).
+    verdicts: Mutex<Vec<bool>>,
+}
+
+impl DeadlineGuard {
+    pub fn new(ms: u64) -> DeadlineGuard {
+        DeadlineGuard {
+            deadline: Instant::now() + Duration::from_millis(ms),
+            verdicts: Mutex::new(Vec::new()),
+        }
+    }
+
+    /// Did any recorded verdict fire? (Queried after the solve to tell
+    /// a deadline stop apart from convergence / iteration budget.)
+    pub fn fired(&self) -> bool {
+        self.verdicts.lock().unwrap().iter().any(|&v| v)
+    }
+
+    fn verdict(&self, iteration: usize) -> bool {
+        let mut v = self.verdicts.lock().unwrap();
+        if iteration >= v.len() {
+            let expired = Instant::now() >= self.deadline;
+            v.resize(iteration + 1, expired);
+        }
+        v[iteration]
+    }
+}
+
+/// The per-job observer: iteration budget OR wall-clock deadline, both
+/// rank-consistent (see [`IterationCap`] and [`DeadlineGuard`]).
+struct JobObserver<'a> {
+    cap: Option<usize>,
+    deadline: Option<&'a DeadlineGuard>,
+}
+
+impl Observer for JobObserver<'_> {
+    fn stop(&self, iteration: usize, _rel_residual: f64) -> bool {
+        // evaluate the deadline even when the cap already fires, so the
+        // memoised verdict table stays identical across ranks that race
+        // past the cap check
+        let capped = self.cap.is_some_and(|c| iteration >= c);
+        let expired = self
+            .deadline
+            .is_some_and(|d| d.verdict(iteration));
+        capped || expired
+    }
+}
+
 struct Job {
     id: String,
     spec: RunSpec,
     iter_budget: Option<usize>,
+    deadline_ms: Option<u64>,
+    /// Retry ordinal: 0 on first execution, bumped on panic requeue.
+    attempt: usize,
     lanes: usize,
     plan: String,
     submitted: Instant,
@@ -237,6 +315,7 @@ impl Service {
     pub fn submit(&self, req: SolveRequest, reply: Option<ReplySink>) {
         let spec = req.spec;
         let iter_budget = req.iter_budget;
+        let deadline_ms = req.deadline_ms;
         let mut st = self.inner.state.lock().unwrap();
         st.counters.submitted += 1;
         let id = req.id.unwrap_or_else(|| {
@@ -293,10 +372,13 @@ impl Service {
         };
         let worker = plan_idx % self.cfg.workers;
         let iter_budget = iter_budget.or(self.cfg.default_iter_budget);
+        let deadline_ms = deadline_ms.or(self.cfg.default_deadline_ms);
         st.queues[worker].push_back(Job {
             id,
             spec,
             iter_budget,
+            deadline_ms,
+            attempt: 0,
             lanes,
             plan,
             submitted: Instant::now(),
@@ -435,10 +517,28 @@ fn write_response(sink: &ReplySink, resp: &Response) {
     let _ = w.flush();
 }
 
-fn worker_loop(w: usize, inner: &Inner, budget: &ThreadBudget, cfg: &ServiceConfig) {
+/// A worker's private session, built fresh at start and rebuilt after
+/// every contained panic (the poisoned caches are discarded wholesale).
+fn fresh_session(budget: &ThreadBudget, cfg: &ServiceConfig) -> Session {
     let mut session = Session::new();
     session.set_exec_cache_limit(cfg.exec_cache_sets.max(1));
     session.set_thread_budget(budget.clone());
+    session
+}
+
+/// Human-readable text of a caught panic payload.
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+fn worker_loop(w: usize, inner: &Inner, budget: &ThreadBudget, cfg: &ServiceConfig) {
+    let mut session = fresh_session(budget, cfg);
     loop {
         let job = {
             let mut st = inner.state.lock().unwrap();
@@ -463,16 +563,76 @@ fn worker_loop(w: usize, inner: &Inner, budget: &ThreadBudget, cfg: &ServiceConf
         // (routing sends every job of a plan here, so the second one
         // reuses the first one's system)
         let ptr_before = session.assembly_ptr(job.spec.grid, job.spec.stencil, job.spec.ranks);
+        let deadline = job.deadline_ms.map(DeadlineGuard::new);
         let t0 = Instant::now();
         // the session's shared budget leases `lanes` while solving —
         // blocking here, after dequeue, keeps the queue moving on other
-        // workers without ever oversubscribing the lane total
-        let result = match job.iter_budget {
-            Some(cap) => session.run_observed(&job.spec, &IterationCap(cap)),
-            None => session.run(&job.spec),
+        // workers without ever oversubscribing the lane total. The solve
+        // runs under catch_unwind so an unstructured panic (e.g. an
+        // injected FaultKind::Panic) is contained to this one job.
+        let obs = JobObserver {
+            cap: job.iter_budget,
+            deadline: deadline.as_ref(),
         };
+        let outcome = catch_unwind(AssertUnwindSafe(|| session.run_observed(&job.spec, &obs)));
         let solve_ms = t0.elapsed().as_secs_f64() * 1e3;
+        let result = match outcome {
+            Ok(result) => result,
+            Err(payload) => {
+                // the panicked session may hold arbitrary mid-solve
+                // state: discard it wholesale and rebuild (self-healing
+                // at the cost of re-warming the worker's caches)
+                session = fresh_session(budget, cfg);
+                if job.attempt < cfg.max_retries {
+                    // requeue silently — the client sees exactly one
+                    // terminal response, from the final attempt
+                    let mut st = inner.state.lock().unwrap();
+                    st.counters.panics += 1;
+                    st.counters.retried += 1;
+                    let mut job = job;
+                    job.attempt += 1;
+                    st.pending += 1;
+                    st.running -= 1;
+                    st.queues[w].push_back(job);
+                    drop(st);
+                    inner.work.notify_all();
+                    continue;
+                }
+                let resp = Response::Error {
+                    id: job.id,
+                    code: "internal-panic",
+                    reason: format!(
+                        "solve panicked on attempt {}: {}",
+                        job.attempt + 1,
+                        panic_message(payload.as_ref())
+                    ),
+                };
+                if let Some(sink) = &job.reply {
+                    write_response(sink, &resp);
+                }
+                let mut st = inner.state.lock().unwrap();
+                st.counters.panics += 1;
+                st.counters.errors += 1;
+                if job.reply.is_none() {
+                    st.collected.push(resp);
+                }
+                st.running -= 1;
+                drop(st);
+                inner.done.notify_all();
+                continue;
+            }
+        };
+        let deadline_fired = deadline.as_ref().is_some_and(|d| d.fired());
         let resp = match result {
+            Ok(stats) if deadline_fired => Response::Error {
+                id: job.id,
+                code: "deadline",
+                reason: format!(
+                    "deadline of {} ms exceeded after {} iteration(s)",
+                    job.deadline_ms.unwrap_or(0),
+                    stats.history.len()
+                ),
+            },
             Ok(stats) => {
                 let ptr_after =
                     session.assembly_ptr(job.spec.grid, job.spec.stencil, job.spec.ranks);
@@ -504,6 +664,7 @@ fn worker_loop(w: usize, inner: &Inner, budget: &ThreadBudget, cfg: &ServiceConf
             }
             Err(e) => Response::Error {
                 id: job.id,
+                code: e.code(),
                 reason: e.to_string(),
             },
         };
@@ -523,6 +684,12 @@ fn worker_loop(w: usize, inner: &Inner, budget: &ThreadBudget, cfg: &ServiceConf
                     } else {
                         st.counters.batch_misses += 1;
                     }
+                }
+                Response::Error {
+                    code: "deadline", ..
+                } => {
+                    st.counters.deadlines += 1;
+                    st.counters.errors += 1;
                 }
                 _ => st.counters.errors += 1,
             }

@@ -71,13 +71,17 @@ pub fn serve(opts: &ServeOptions) -> std::io::Result<Counters> {
 fn print_summary(c: &Counters) {
     eprintln!(
         "hlam serve: submitted={} accepted={} completed={} rejected={} cancelled={} \
-         errors={} batch_hits={} batch_misses={} distinct_plans={} peak_lanes={}/{}",
+         errors={} panics={} retried={} deadlines={} batch_hits={} batch_misses={} \
+         distinct_plans={} peak_lanes={}/{}",
         c.submitted,
         c.accepted,
         c.completed,
         c.rejected,
         c.cancelled,
         c.errors,
+        c.panics,
+        c.retried,
+        c.deadlines,
         c.batch_hits,
         c.batch_misses,
         c.distinct_plans,

@@ -55,9 +55,13 @@ pub struct SolveRequest {
     /// recorded iterations (through the `Observer::stop` seam — a pure
     /// function of the iteration number, so every rank agrees).
     pub iter_budget: Option<usize>,
+    /// Wall-clock deadline for this job in milliseconds. Enforced
+    /// through the rank-consistent memoised deadline observer; an
+    /// expired job answers `status: error` with code `deadline`.
+    pub deadline_ms: Option<u64>,
 }
 
-const REQUEST_KEYS: [&str; 4] = ["cancel", "id", "iter_budget", "spec"];
+const REQUEST_KEYS: [&str; 5] = ["cancel", "deadline_ms", "id", "iter_budget", "spec"];
 
 /// Parse one NDJSON request line (see the module docs for the accepted
 /// shapes). Errors are [`SpecError`]s with the same "did you mean"
@@ -75,6 +79,7 @@ pub fn parse_request(line: &str) -> Result<Request, SpecError> {
             id: None,
             spec: RunSpec::from_json(&j)?,
             iter_budget: None,
+            deadline_ms: None,
         }));
     }
     for key in obj.keys() {
@@ -82,7 +87,7 @@ pub fn parse_request(line: &str) -> Result<Request, SpecError> {
             return Err(SpecError::Unknown {
                 what: "request field",
                 input: key.clone(),
-                valid: "id|spec|iter_budget|cancel",
+                valid: "id|spec|iter_budget|deadline_ms|cancel",
                 suggestion: suggest(key, &REQUEST_KEYS),
             });
         }
@@ -116,10 +121,22 @@ pub fn parse_request(line: &str) -> Result<Request, SpecError> {
             }
         },
     };
+    let deadline_ms = match obj.get("deadline_ms") {
+        None => None,
+        Some(v) => match v.as_f64() {
+            Some(x) if x.fract() == 0.0 && x >= 0.0 && x <= 9.0e15 => Some(x as u64),
+            _ => {
+                return Err(SpecError::Json {
+                    msg: "'deadline_ms' must be a non-negative integer".into(),
+                })
+            }
+        },
+    };
     Ok(Request::Solve(SolveRequest {
         id,
         spec,
         iter_budget,
+        deadline_ms,
     }))
 }
 
@@ -190,6 +207,13 @@ pub enum Response {
     },
     Error {
         id: String,
+        /// Machine-readable failure code: the [`SolveError::code`]
+        /// vocabulary (`solver-breakdown | diverged | non-finite |
+        /// transport | ...`) plus the service's own `deadline` and
+        /// `internal-panic`.
+        ///
+        /// [`SolveError::code`]: crate::api::SolveError::code
+        code: &'static str,
         reason: String,
     },
     Cancelled {
@@ -258,7 +282,8 @@ impl Response {
                 m.insert("code".to_string(), Json::Str(code.name().to_string()));
                 m.insert("reason".to_string(), Json::Str(reason.clone()));
             }
-            Response::Error { reason, .. } => {
+            Response::Error { code, reason, .. } => {
+                m.insert("code".to_string(), Json::Str(code.to_string()));
                 m.insert("reason".to_string(), Json::Str(reason.clone()));
             }
             Response::Cancelled { .. } => {}

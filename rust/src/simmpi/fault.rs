@@ -1,0 +1,190 @@
+//! Deterministic fault injection for the simulated-MPI substrate
+//! (DESIGN.md §12).
+//!
+//! A [`FaultPlan`] is a seeded, replayable list of [`Fault`]s injected
+//! into both transport disciplines at two well-defined seams: the entry
+//! of every blocking wait (`wait_for`) and the posting of every
+//! allreduce contribution. Because the injection points are counted
+//! per rank — not wall-clock driven — the same plan produces the same
+//! behaviour on every run: delays never change numerics (histories stay
+//! bitwise identical to fault-free runs), aborts and corruptions
+//! surface as the same structured failure on every replay.
+//!
+//! The plan travels with [`crate::api::RunSpec`] (JSON key `fault`), so
+//! a chaos run is a replayable `.spec.json` artifact like everything
+//! else.
+
+use crate::util::Rng;
+
+/// What one injected fault does at its trigger point.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultKind {
+    /// Sleep `delay_ms` before each of the rank's first `at` blocking
+    /// waits — models a straggler rank. Never changes numerics; under
+    /// the threaded transport a stall longer than the deadlock timeout
+    /// surfaces as a peer-side timeout failure.
+    Stall,
+    /// Abort the rank at its `at`-th blocking wait: the rank unwinds
+    /// with a structured [`super::TransportFailure`], the hub is
+    /// poisoned, and every peer aborts its next wait.
+    Abort,
+    /// Plain `panic!` at the rank's `at`-th blocking wait — an
+    /// *unstructured* failure, used to exercise the service layer's
+    /// catch_unwind / session-rebuild containment.
+    Panic,
+    /// Sleep `delay_ms` before posting the rank's `at`-th allreduce
+    /// contribution. Never changes numerics.
+    DelayAllreduce,
+    /// Replace the rank's `at`-th allreduce contribution with NaN
+    /// lanes. The fold propagates NaN to every rank identically, so the
+    /// solvers' runtime guards see the same non-finite scalar on all
+    /// ranks and fail in lockstep (no transport deadlock).
+    CorruptAllreduce,
+}
+
+impl FaultKind {
+    pub fn parse(s: &str) -> Option<Self> {
+        Some(match s {
+            "stall" => FaultKind::Stall,
+            "abort" => FaultKind::Abort,
+            "panic" => FaultKind::Panic,
+            "delay-allreduce" => FaultKind::DelayAllreduce,
+            "corrupt-allreduce" => FaultKind::CorruptAllreduce,
+            _ => return None,
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            FaultKind::Stall => "stall",
+            FaultKind::Abort => "abort",
+            FaultKind::Panic => "panic",
+            FaultKind::DelayAllreduce => "delay-allreduce",
+            FaultKind::CorruptAllreduce => "corrupt-allreduce",
+        }
+    }
+
+    /// Every parseable kind, for did-you-mean suggestions.
+    pub const NAMES: [&'static str; 5] =
+        ["stall", "abort", "panic", "delay-allreduce", "corrupt-allreduce"];
+}
+
+/// One injected fault: `kind` at `rank`'s `at`-th operation (0-based;
+/// waits for `Stall`/`Abort`/`Panic`, allreduce posts for the
+/// allreduce kinds). `delay_ms` only matters for the delaying kinds.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Fault {
+    pub kind: FaultKind,
+    pub rank: usize,
+    pub at: usize,
+    pub delay_ms: u64,
+}
+
+/// A seeded, deterministic set of faults for one run. Empty plan =
+/// fault-free. A plan with `faults` listed replays exactly those; a
+/// plan with only a non-zero `seed` derives a small chaos set from the
+/// seed at run time (once the rank count is known).
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct FaultPlan {
+    /// Replay seed: derives the fault set when `faults` is empty.
+    pub seed: u64,
+    /// Explicit faults (take precedence over seed derivation).
+    pub faults: Vec<Fault>,
+}
+
+impl FaultPlan {
+    /// The fault-free plan.
+    pub fn none() -> FaultPlan {
+        FaultPlan::default()
+    }
+
+    /// True when the plan injects nothing (and never will).
+    pub fn is_empty(&self) -> bool {
+        self.faults.is_empty() && self.seed == 0
+    }
+
+    /// Derive a small deterministic chaos set from a seed: one fault,
+    /// with kind / rank / trigger point drawn from the seeded stream.
+    /// Same `(seed, nranks)` → same plan, byte for byte.
+    pub fn chaos(seed: u64, nranks: usize) -> FaultPlan {
+        let mut rng = Rng::new(seed).substream(0xfa17);
+        let kinds = [
+            FaultKind::Stall,
+            FaultKind::Abort,
+            FaultKind::DelayAllreduce,
+            FaultKind::CorruptAllreduce,
+        ];
+        let kind = kinds[rng.below(kinds.len())];
+        let fault = Fault {
+            kind,
+            rank: rng.below(nranks.max(1)),
+            at: 1 + rng.below(4),
+            delay_ms: 1 + rng.below(3) as u64,
+        };
+        FaultPlan {
+            seed,
+            faults: vec![fault],
+        }
+    }
+
+    /// The concrete fault list for a run over `nranks` ranks: explicit
+    /// faults verbatim, else the seed-derived chaos set.
+    pub fn resolved(&self, nranks: usize) -> Vec<Fault> {
+        if !self.faults.is_empty() {
+            self.faults.clone()
+        } else if self.seed != 0 {
+            FaultPlan::chaos(self.seed, nranks).faults
+        } else {
+            Vec::new()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kind_names_round_trip() {
+        for name in FaultKind::NAMES {
+            let k = FaultKind::parse(name).expect(name);
+            assert_eq!(k.name(), name);
+        }
+        assert_eq!(FaultKind::parse("sigsegv"), None);
+    }
+
+    #[test]
+    fn chaos_is_deterministic_in_seed_and_ranks() {
+        let a = FaultPlan::chaos(7, 4);
+        assert_eq!(a, FaultPlan::chaos(7, 4));
+        assert_eq!(a.resolved(4), FaultPlan::chaos(7, 4).faults);
+        assert_eq!(a.faults.len(), 1);
+        assert!(a.faults[0].rank < 4);
+        // a different seed must be able to produce a different plan
+        let others: Vec<FaultPlan> = (8..32).map(|s| FaultPlan::chaos(s, 4)).collect();
+        assert!(others.iter().any(|p| p.faults != a.faults));
+    }
+
+    #[test]
+    fn empty_and_seeded_plans_resolve_as_documented() {
+        assert!(FaultPlan::none().is_empty());
+        assert!(FaultPlan::none().resolved(4).is_empty());
+        let seeded = FaultPlan {
+            seed: 9,
+            faults: Vec::new(),
+        };
+        assert!(!seeded.is_empty());
+        assert_eq!(seeded.resolved(3), FaultPlan::chaos(9, 3).faults);
+        // explicit faults win over the seed
+        let explicit = FaultPlan {
+            seed: 9,
+            faults: vec![Fault {
+                kind: FaultKind::Abort,
+                rank: 0,
+                at: 2,
+                delay_ms: 0,
+            }],
+        };
+        assert_eq!(explicit.resolved(3), explicit.faults);
+    }
+}

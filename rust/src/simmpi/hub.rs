@@ -27,11 +27,15 @@
 //! contract in the module docs).
 
 use std::collections::{BTreeMap, HashSet, VecDeque};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
 use std::thread::ThreadId;
 use std::time::Duration;
 
-use super::{rank_fold_iter, Comm, MsgKey, Payload, Tag, Transport, TransportKind, WorldStats};
+use super::fault::{Fault, FaultKind, FaultPlan};
+use super::{
+    rank_fold_iter, Comm, MsgKey, Payload, Tag, Transport, TransportFailure, TransportKind,
+    WorldStats,
+};
 
 /// One in-flight allreduce round on a (comm, tag) key. Rounds exist
 /// because the ISODD split reuses keys every second iteration while a
@@ -102,8 +106,31 @@ pub struct Hub {
     deadlock_timeout: Duration,
 }
 
+/// Threaded blocking-wait bound when no per-run override is given: the
+/// `HLAM_DEADLOCK_TIMEOUT_MS` environment knob if set (tests drop it to
+/// ~2s so fault suites fail fast), else 30s — far beyond any genuine
+/// solve, so exceeding it is a deadlock.
+fn default_deadlock_timeout() -> Duration {
+    std::env::var("HLAM_DEADLOCK_TIMEOUT_MS")
+        .ok()
+        .and_then(|v| v.trim().parse::<u64>().ok())
+        .filter(|&ms| ms > 0)
+        .map(Duration::from_millis)
+        .unwrap_or(Duration::from_secs(30))
+}
+
 impl Hub {
     pub fn new(nranks: usize, kind: TransportKind) -> Self {
+        Hub::with_timeout(nranks, kind, None)
+    }
+
+    /// A hub with an explicit deadlock-timeout override (`None` falls
+    /// back to `HLAM_DEADLOCK_TIMEOUT_MS`, then the 30s default).
+    pub fn with_timeout(
+        nranks: usize,
+        kind: TransportKind,
+        deadlock_timeout: Option<Duration>,
+    ) -> Self {
         assert!(nranks > 0, "empty world");
         Hub {
             state: Mutex::new(HubState {
@@ -123,8 +150,15 @@ impl Hub {
             cv: Condvar::new(),
             kind,
             nranks,
-            deadlock_timeout: Duration::from_secs(30),
+            deadlock_timeout: deadlock_timeout.unwrap_or_else(default_deadlock_timeout),
         }
+    }
+
+    /// Lock the hub state, surviving mutex poisoning: a rank that
+    /// panicked while holding the guard must not convert every peer's
+    /// designed "a peer rank failed" abort into an opaque PoisonError.
+    fn lock(&self) -> MutexGuard<'_, HubState> {
+        self.state.lock().unwrap_or_else(|e| e.into_inner())
     }
 
     pub fn kind(&self) -> TransportKind {
@@ -137,7 +171,7 @@ impl Hub {
 
     /// Communication statistics so far (final after the scope joined).
     pub fn stats(&self) -> WorldStats {
-        let st = self.state.lock().unwrap();
+        let st = self.lock();
         let mut s = st.stats.clone();
         s.rank_threads = st.thread_ids.len();
         s
@@ -145,7 +179,7 @@ impl Hub {
 
     /// Abort the run: wake every parked rank into a panic.
     fn poison(&self) {
-        let mut st = self.state.lock().unwrap();
+        let mut st = self.lock();
         st.poisoned = true;
         self.cv.notify_all();
     }
@@ -176,6 +210,14 @@ pub struct RankTransport {
     /// at [`RankTransport::finish`] — the hot path never takes the hub
     /// lock just to bump this counter.
     overlap_rows: u64,
+    /// This rank's injected faults (empty on real runs — the fault-free
+    /// hot path is a single `is_empty` branch and counts nothing).
+    faults: Vec<Fault>,
+    /// Ordinal of the next blocking wait (fault trigger counter).
+    wait_count: usize,
+    /// Ordinal of the next allreduce contribution (fault trigger
+    /// counter).
+    ar_count: usize,
 }
 
 impl RankTransport {
@@ -187,7 +229,72 @@ impl RankTransport {
             ar_next: BTreeMap::new(),
             ar_pending: BTreeMap::new(),
             overlap_rows: 0,
+            faults: Vec::new(),
+            wait_count: 0,
+            ar_count: 0,
         }
+    }
+
+    /// Fault hook at the entry of every blocking wait: stalls sleep
+    /// (numerics untouched), aborts unwind with a structured
+    /// [`TransportFailure`], panics unwind raw (exercising the service
+    /// layer's catch_unwind containment). Trigger points are counted
+    /// per rank, so replays are deterministic.
+    fn inject_wait_faults(&mut self, phase: &str) {
+        if self.faults.is_empty() {
+            return;
+        }
+        let ord = self.wait_count;
+        self.wait_count += 1;
+        for f in &self.faults {
+            match f.kind {
+                FaultKind::Stall if ord < f.at => {
+                    std::thread::sleep(Duration::from_millis(f.delay_ms));
+                }
+                FaultKind::Abort if ord == f.at => {
+                    self.hub.poison();
+                    std::panic::panic_any(TransportFailure {
+                        rank: self.rank,
+                        phase: phase.to_string(),
+                        what: "injected abort".to_string(),
+                    });
+                }
+                FaultKind::Panic if ord == f.at => {
+                    panic!("rank {}: injected panic at {phase} #{ord}", self.rank);
+                }
+                _ => {}
+            }
+        }
+    }
+
+    /// Fault hook on every allreduce contribution: delays sleep before
+    /// posting (numerics untouched), corruptions replace the payload
+    /// with NaN lanes — the fixed fold propagates them to every rank
+    /// identically, so solver guards fail in lockstep instead of
+    /// deadlocking the transport.
+    fn inject_allreduce_faults(&mut self, partial: Payload) -> Payload {
+        if self.faults.is_empty() {
+            return partial;
+        }
+        let ord = self.ar_count;
+        self.ar_count += 1;
+        let mut out = partial;
+        for f in &self.faults {
+            if ord != f.at {
+                continue;
+            }
+            match f.kind {
+                FaultKind::DelayAllreduce => {
+                    std::thread::sleep(Duration::from_millis(f.delay_ms));
+                }
+                FaultKind::CorruptAllreduce => {
+                    let lanes = [f64::NAN; super::MAX_REDUCE_LEN];
+                    out = Payload::from_slice(&lanes[..partial.len()]);
+                }
+                _ => {}
+            }
+        }
+        out
     }
 
     /// Register this rank's thread and enter the scheduling discipline:
@@ -196,7 +303,7 @@ impl RankTransport {
     /// cross-rank overlap the acceptance criteria ask for).
     fn attach(&self) {
         let hub = &*self.hub;
-        let mut st = hub.state.lock().unwrap();
+        let mut st = hub.lock();
         st.thread_ids.insert(std::thread::current().id());
         st.live += 1;
         hub.cv.notify_all();
@@ -207,26 +314,35 @@ impl RankTransport {
                 // running gauge starts only *after* release, so it counts
                 // genuinely executing bodies, not parked ones.
                 while st.live < hub.nranks && !st.poisoned {
-                    st = hub.cv.wait(st).unwrap();
+                    st = hub.cv.wait(st).unwrap_or_else(|e| e.into_inner());
                 }
                 st.running += 1;
                 st.stats.max_concurrent_ranks = st.stats.max_concurrent_ranks.max(st.running);
             }
             TransportKind::Lockstep => {
                 while st.turn != self.rank && !st.poisoned {
-                    st = hub.cv.wait(st).unwrap();
+                    st = hub.cv.wait(st).unwrap_or_else(|e| e.into_inner());
                 }
                 st.running += 1;
                 st.stats.max_concurrent_ranks = st.stats.max_concurrent_ranks.max(st.running);
             }
         }
-        assert!(!st.poisoned, "rank {}: a peer rank failed", self.rank);
+        if st.poisoned {
+            // drop the guard first: the structured peer-echo abort must
+            // not poison the mutex on its way out
+            drop(st);
+            std::panic::panic_any(TransportFailure {
+                rank: self.rank,
+                phase: "attach".to_string(),
+                what: "a peer rank failed".to_string(),
+            });
+        }
     }
 
     /// Mark this rank's body complete and hand over scheduling.
     fn finish(&self) {
         let hub = &*self.hub;
-        let mut st = hub.state.lock().unwrap();
+        let mut st = hub.lock();
         st.stats.overlapped_rows += self.overlap_rows;
         st.finished[self.rank] = true;
         st.running = st.running.saturating_sub(1);
@@ -239,23 +355,36 @@ impl RankTransport {
 
     /// Block until `op` succeeds against the hub state. Lockstep yields
     /// the turn on every failed attempt and re-runs only when the baton
-    /// comes back; threaded parks on the condvar. Panics on poisoning,
-    /// detected lockstep deadlock cycles, or threaded timeout.
-    fn wait_for<T>(&self, what: &str, mut op: impl FnMut(&mut HubState) -> Option<T>) -> T {
+    /// comes back; threaded parks on the condvar. Poisoning, detected
+    /// lockstep deadlock cycles, and threaded timeouts unwind with a
+    /// structured [`TransportFailure`] (the guard is dropped first so
+    /// the mutex is never poisoned by the designed failure path), which
+    /// [`try_run_ranks`] converts into a returned error.
+    fn wait_for<T>(&mut self, what: &str, mut op: impl FnMut(&mut HubState) -> Option<T>) -> T {
+        self.inject_wait_faults(what);
         let hub = &*self.hub;
+        let rank = self.rank;
+        let fail = |st: MutexGuard<'_, HubState>, cause: String| -> ! {
+            drop(st);
+            std::panic::panic_any(TransportFailure {
+                rank,
+                phase: what.to_string(),
+                what: cause,
+            })
+        };
         // one absolute deadline per blocking episode (threaded): wakeups
         // from unrelated traffic must not keep resetting the window, or
         // a genuinely stuck rank would only be diagnosed once the whole
         // run quiesces
         let deadline = std::time::Instant::now() + hub.deadlock_timeout;
-        let mut st = hub.state.lock().unwrap();
+        let mut st = hub.lock();
         loop {
             if st.poisoned {
-                panic!("rank {}: aborting {what}: a peer rank failed", self.rank);
+                fail(st, "a peer rank failed".to_string());
             }
             match hub.kind {
                 TransportKind::Lockstep => {
-                    debug_assert_eq!(st.turn, self.rank, "lockstep op outside of turn");
+                    debug_assert_eq!(st.turn, rank, "lockstep op outside of turn");
                     if let Some(v) = op(&mut st) {
                         st.idle = 0;
                         return v;
@@ -266,13 +395,13 @@ impl RankTransport {
                         // progress: every rank is blocked — deadlock
                         st.poisoned = true;
                         hub.cv.notify_all();
-                        panic!("rank {}: lockstep deadlock waiting for {what}", self.rank);
+                        fail(st, "lockstep deadlock: every rank is blocked".to_string());
                     }
                     st.running -= 1;
                     advance_turn(&mut st, hub.nranks);
                     hub.cv.notify_all();
-                    while st.turn != self.rank && !st.poisoned {
-                        st = hub.cv.wait(st).unwrap();
+                    while st.turn != rank && !st.poisoned {
+                        st = hub.cv.wait(st).unwrap_or_else(|e| e.into_inner());
                     }
                     st.running += 1;
                     st.stats.max_concurrent_ranks = st.stats.max_concurrent_ranks.max(st.running);
@@ -284,7 +413,10 @@ impl RankTransport {
                     st.running -= 1;
                     let remaining =
                         deadline.saturating_duration_since(std::time::Instant::now());
-                    let (guard, timeout) = hub.cv.wait_timeout(st, remaining).unwrap();
+                    let (guard, timeout) = hub
+                        .cv
+                        .wait_timeout(st, remaining)
+                        .unwrap_or_else(|e| e.into_inner());
                     st = guard;
                     st.running += 1;
                     st.stats.max_concurrent_ranks = st.stats.max_concurrent_ranks.max(st.running);
@@ -294,9 +426,12 @@ impl RankTransport {
                         }
                         st.poisoned = true;
                         hub.cv.notify_all();
-                        panic!(
-                            "rank {}: transport deadlock (timeout) waiting for {what}",
-                            self.rank
+                        fail(
+                            st,
+                            format!(
+                                "deadlock: wait exceeded the {:?} timeout",
+                                hub.deadlock_timeout
+                            ),
                         );
                     }
                 }
@@ -317,7 +452,7 @@ impl Transport for RankTransport {
     fn send(&mut self, dst: usize, tag: Tag, comm: Comm, data: &[f64]) {
         let hub = &*self.hub;
         assert!(dst < hub.nranks, "bad rank");
-        let mut st = hub.state.lock().unwrap();
+        let mut st = hub.lock();
         debug_assert!(
             hub.kind == TransportKind::Threaded || st.turn == self.rank,
             "lockstep op outside of turn"
@@ -374,6 +509,7 @@ impl Transport for RankTransport {
     }
 
     fn allreduce_start(&mut self, comm: Comm, tag: Tag, partial: Payload) {
+        let partial = self.inject_allreduce_faults(partial);
         let round = {
             let c = self.ar_next.entry((comm, tag)).or_insert(0);
             let r = *c;
@@ -387,7 +523,7 @@ impl Transport for RankTransport {
         let key: ReduceKey = (comm, tag, round);
         let hub = &*self.hub;
         let n = hub.nranks;
-        let mut st = hub.state.lock().unwrap();
+        let mut st = hub.lock();
         debug_assert!(
             hub.kind == TransportKind::Threaded || st.turn == self.rank,
             "lockstep op outside of turn"
@@ -464,43 +600,83 @@ impl Transport for RankTransport {
 ///
 /// A panic in any rank body poisons the hub (so no peer hangs waiting
 /// for messages that will never come) and is re-raised once every
-/// thread joined.
+/// thread joined; transport failures (deadlock, timeout) panic with the
+/// failure's message. [`try_run_ranks`] is the non-panicking form.
 pub fn run_ranks<'env, R: Send + 'env>(
     kind: TransportKind,
     bodies: Vec<Box<dyn FnOnce(&mut RankTransport) -> R + Send + 'env>>,
 ) -> (Vec<R>, WorldStats) {
+    match try_run_ranks(kind, bodies, &FaultPlan::none(), None) {
+        Ok(out) => out,
+        Err(tf) => panic!("{tf}"),
+    }
+}
+
+/// [`run_ranks`] with structured failure reporting and deterministic
+/// fault injection. Transport-layer failures — deadlocks, timeouts,
+/// injected aborts, and the peer-echo aborts they cause — come back as
+/// `Err(TransportFailure)` instead of a panic; the reported failure is
+/// the *originating* one (lowest rank among non-peer-echo failures) so
+/// the same chaos plan reports the same cause on every replay. Plain
+/// panics in rank bodies (including injected `FaultKind::Panic`) are
+/// NOT part of the transport taxonomy: they are re-raised after every
+/// thread joined, for the caller's own catch_unwind seam (the service
+/// layer's containment boundary).
+pub fn try_run_ranks<'env, R: Send + 'env>(
+    kind: TransportKind,
+    bodies: Vec<Box<dyn FnOnce(&mut RankTransport) -> R + Send + 'env>>,
+    faults: &FaultPlan,
+    deadlock_timeout: Option<Duration>,
+) -> Result<(Vec<R>, WorldStats), TransportFailure> {
     let nranks = bodies.len();
-    let hub = Arc::new(Hub::new(nranks, kind));
+    let hub = Arc::new(Hub::with_timeout(nranks, kind, deadlock_timeout));
+    let injected = faults.resolved(nranks);
     let mut results: Vec<Option<R>> = Vec::with_capacity(nranks);
     results.resize_with(nranks, || None);
+    let mut failures: Vec<Option<TransportFailure>> = vec![None; nranks];
+    let mut panics: Vec<Option<Box<dyn std::any::Any + Send>>> = Vec::with_capacity(nranks);
+    panics.resize_with(nranks, || None);
     std::thread::scope(|s| {
-        for (rank, (body, slot)) in bodies.into_iter().zip(results.iter_mut()).enumerate() {
+        let slots = results
+            .iter_mut()
+            .zip(failures.iter_mut().zip(panics.iter_mut()));
+        for (rank, (body, (slot, (fail_slot, panic_slot)))) in
+            bodies.into_iter().zip(slots).enumerate()
+        {
             let hub = Arc::clone(&hub);
+            let mine: Vec<Fault> = injected.iter().filter(|f| f.rank == rank).copied().collect();
             s.spawn(move || {
                 let mut tp = RankTransport::new(hub, rank);
-                tp.attach();
+                tp.faults = mine;
                 let out = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-                    body(&mut tp)
+                    tp.attach();
+                    let v = body(&mut tp);
+                    tp.finish();
+                    v
                 }));
                 match out {
-                    Ok(v) => {
-                        *slot = Some(v);
-                        tp.finish();
-                    }
+                    Ok(v) => *slot = Some(v),
                     Err(payload) => {
                         tp.hub.poison();
-                        std::panic::resume_unwind(payload);
+                        match payload.downcast::<TransportFailure>() {
+                            Ok(tf) => *fail_slot = Some(*tf),
+                            Err(other) => *panic_slot = Some(other),
+                        }
                     }
                 }
             });
         }
     });
+    // a plain (non-transport) panic is outside the taxonomy: re-raise
+    // it for the caller's catch_unwind
+    if let Some(payload) = panics.into_iter().flatten().next() {
+        std::panic::resume_unwind(payload);
+    }
     // the old `World::in_flight() == 0` end-of-run invariant: a clean
     // run leaves no undelivered messages and no unconsumed allreduce
-    // rounds behind (panicked runs never reach this point — the scope
-    // re-raises first)
+    // rounds behind
     {
-        let st = hub.state.lock().unwrap();
+        let st = hub.lock();
         debug_assert!(
             st.poisoned || st.mailboxes.values().all(|q| q.is_empty()),
             "undelivered messages left in flight"
@@ -510,12 +686,23 @@ pub fn run_ranks<'env, R: Send + 'env>(
             "unconsumed allreduce rounds left behind"
         );
     }
+    // primary failure: prefer the originating fault over the peer-echo
+    // aborts it caused, lowest rank first for a deterministic report
+    let primary = failures
+        .iter()
+        .flatten()
+        .find(|f| !f.is_peer_echo())
+        .or_else(|| failures.iter().flatten().next())
+        .cloned();
+    if let Some(tf) = primary {
+        return Err(tf);
+    }
     let stats = hub.stats();
     let results = results
         .into_iter()
         .map(|r| r.expect("rank body produced no result"))
         .collect();
-    (results, stats)
+    Ok((results, stats))
 }
 
 #[cfg(test)]
@@ -560,5 +747,163 @@ mod tests {
     #[should_panic(expected = "empty world")]
     fn empty_world_rejected() {
         let _ = Hub::new(0, TransportKind::Lockstep);
+    }
+
+    /// One closure per rank through the fallible entry point.
+    fn try_per_rank<R: Send>(
+        kind: TransportKind,
+        nranks: usize,
+        plan: &FaultPlan,
+        timeout: Option<Duration>,
+        body: impl Fn(&mut RankTransport) -> R + Sync,
+    ) -> Result<(Vec<R>, WorldStats), TransportFailure> {
+        let body = &body;
+        let bodies: Vec<Box<dyn FnOnce(&mut RankTransport) -> R + Send + '_>> = (0..nranks)
+            .map(|_| {
+                Box::new(move |tp: &mut RankTransport| body(tp))
+                    as Box<dyn FnOnce(&mut RankTransport) -> R + Send + '_>
+            })
+            .collect();
+        try_run_ranks(kind, bodies, plan, timeout)
+    }
+
+    #[test]
+    fn injected_abort_surfaces_as_structured_failure() {
+        let plan = FaultPlan {
+            seed: 0,
+            faults: vec![Fault {
+                kind: FaultKind::Abort,
+                rank: 1,
+                at: 0,
+                delay_ms: 0,
+            }],
+        };
+        for kind in [TransportKind::Lockstep, TransportKind::Threaded] {
+            let err = try_per_rank(kind, 2, &plan, None, |tp| {
+                tp.allreduce(0, 0, Payload::scalar(1.0))[0]
+            })
+            .err()
+            .expect("injected abort must fail the run");
+            assert_eq!(err.rank, 1, "{kind:?}");
+            assert_eq!(err.what, "injected abort", "{kind:?}");
+            assert!(!err.is_peer_echo());
+        }
+    }
+
+    #[test]
+    fn threaded_timeout_is_a_structured_failure() {
+        let err = try_per_rank(
+            TransportKind::Threaded,
+            1,
+            &FaultPlan::none(),
+            Some(Duration::from_millis(50)),
+            |tp| tp.recv(0, 99, 0), // a message nobody sends
+        )
+        .err()
+        .expect("timeout must fail the run");
+        assert_eq!(err.phase, "recv");
+        assert!(err.what.contains("deadlock"), "{}", err.what);
+    }
+
+    #[test]
+    fn lockstep_deadlock_is_a_structured_failure() {
+        let err = try_per_rank(
+            TransportKind::Lockstep,
+            2,
+            &FaultPlan::none(),
+            None,
+            |tp| tp.recv(1 - tp.rank(), 99, 0),
+        )
+        .err()
+        .expect("cyclic wait must fail the run");
+        assert!(err.what.contains("lockstep deadlock"), "{}", err.what);
+    }
+
+    #[test]
+    fn corrupt_allreduce_propagates_nan_to_every_rank() {
+        let plan = FaultPlan {
+            seed: 0,
+            faults: vec![Fault {
+                kind: FaultKind::CorruptAllreduce,
+                rank: 0,
+                at: 0,
+                delay_ms: 0,
+            }],
+        };
+        for kind in [TransportKind::Lockstep, TransportKind::Threaded] {
+            let (got, _) = try_per_rank(kind, 3, &plan, None, |tp| {
+                tp.allreduce(0, 0, Payload::scalar(1.0))[0]
+            })
+            .expect("corruption is not a transport failure");
+            assert!(got.iter().all(|v| v.is_nan()), "{kind:?}: {got:?}");
+        }
+    }
+
+    #[test]
+    fn stall_and_delay_leave_numerics_unchanged() {
+        let plan = FaultPlan {
+            seed: 0,
+            faults: vec![
+                Fault {
+                    kind: FaultKind::Stall,
+                    rank: 0,
+                    at: 2,
+                    delay_ms: 1,
+                },
+                Fault {
+                    kind: FaultKind::DelayAllreduce,
+                    rank: 1,
+                    at: 0,
+                    delay_ms: 1,
+                },
+            ],
+        };
+        for kind in [TransportKind::Lockstep, TransportKind::Threaded] {
+            let run = |p: &FaultPlan| {
+                try_per_rank(kind, 2, p, None, |tp| {
+                    let a = tp.allreduce(0, 0, Payload::scalar(0.1 + tp.rank() as f64))[0];
+                    tp.allreduce(0, 0, Payload::scalar(a * 0.5))[0]
+                })
+                .expect("delays must not fail the run")
+                .0
+            };
+            let faulty = run(&plan);
+            let clean = run(&FaultPlan::none());
+            let fb: Vec<u64> = faulty.iter().map(|v| v.to_bits()).collect();
+            let cb: Vec<u64> = clean.iter().map(|v| v.to_bits()).collect();
+            assert_eq!(fb, cb, "{kind:?}");
+        }
+    }
+
+    #[test]
+    fn injected_panic_reraises_for_caller_catch_unwind() {
+        let plan = FaultPlan {
+            seed: 0,
+            faults: vec![Fault {
+                kind: FaultKind::Panic,
+                rank: 0,
+                at: 0,
+                delay_ms: 0,
+            }],
+        };
+        let out = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            try_per_rank(TransportKind::Lockstep, 2, &plan, None, |tp| {
+                tp.allreduce(0, 0, Payload::scalar(1.0))[0]
+            })
+        }));
+        assert!(out.is_err(), "injected panic must re-raise, not Err");
+    }
+
+    #[test]
+    fn deadlock_timeout_env_knob_parses() {
+        // resolution order: explicit override > env > 30s default; the
+        // env var itself is exercised by the chaos integration suite
+        assert_eq!(
+            Hub::with_timeout(1, TransportKind::Threaded, Some(Duration::from_millis(7)))
+                .deadlock_timeout,
+            Duration::from_millis(7)
+        );
+        let hub = Hub::new(1, TransportKind::Threaded);
+        assert!(hub.deadlock_timeout >= Duration::from_millis(1));
     }
 }

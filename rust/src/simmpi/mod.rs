@@ -35,11 +35,53 @@
 //! vector planes, allreduces combine real partial sums, so multi-rank
 //! solver convergence (including reduction-order effects) is real.
 
+pub mod fault;
 pub mod hub;
 
-pub use hub::{run_ranks, Hub, RankTransport};
+pub use fault::{Fault, FaultKind, FaultPlan};
+pub use hub::{run_ranks, try_run_ranks, Hub, RankTransport};
 
 use crate::mesh::HaloMap;
+
+/// A structured transport-layer failure: which rank failed, in which
+/// communication phase, and why. Raised instead of an opaque panic by
+/// the hub's deadlock detectors and fault-injection aborts, and carried
+/// up through [`try_run_ranks`] so callers can report it as a typed
+/// [`crate::api::SolveError::TransportFailure`] instead of a process
+/// abort.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TransportFailure {
+    /// The rank whose wait failed (for peer-abort propagation, the rank
+    /// that *originated* the failure once `try_run_ranks` selected the
+    /// primary).
+    pub rank: usize,
+    /// The communication phase that was blocked: "recv", "allreduce",
+    /// "attach", or the fault-injection site.
+    pub phase: String,
+    /// Human-readable cause ("lockstep deadlock", "timeout",
+    /// "injected abort", "a peer rank failed", ...).
+    pub what: String,
+}
+
+impl std::fmt::Display for TransportFailure {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "transport failure at rank {} during {}: {}",
+            self.rank, self.phase, self.what
+        )
+    }
+}
+
+impl TransportFailure {
+    /// True when this failure is only the echo of another rank's
+    /// failure (the poisoned-hub abort every peer takes), as opposed to
+    /// the originating fault. `try_run_ranks` prefers non-peer failures
+    /// when selecting the primary cause to report.
+    pub fn is_peer_echo(&self) -> bool {
+        self.what.contains("peer rank failed")
+    }
+}
 
 /// Communicator id. The paper uses two (`MPIcommD[ISODD(k)]`) to overlap
 /// collectives of consecutive iterations without tag collisions.

@@ -38,6 +38,37 @@ fn key(k: usize, salt: usize) -> usize {
     8 * k + salt
 }
 
+/// Breakdown restart for the classic loops (`SolveOpts::restarts`):
+/// re-seed the shadow residual and search direction from the current
+/// residual — r' = r, p = r — and allreduce the fresh ρ = (r', r) on
+/// `tag` (38 classic, 39 preconditioned; unused by any per-iteration
+/// collective). Every rank reaches this from the same allreduced
+/// breakdown verdict, so the restart itself is deterministic and
+/// histories stay bitwise reproducible across strategies / transports /
+/// overlap.
+fn reseed_shadow(
+    st: &mut RankState,
+    ops: &mut Ops<'_>,
+    drv: &SolverDriver<'_>,
+    tp: &mut dyn Transport,
+    n: usize,
+    k: usize,
+    tag: u64,
+) -> f64 {
+    let part = {
+        let RankState {
+            r_ext,
+            p_ext,
+            rprime,
+            ..
+        } = st;
+        rprime[..n].copy_from_slice(&r_ext[..n]);
+        p_ext[..n].copy_from_slice(&r_ext[..n]);
+        ops.dot(&r_ext[..n], &rprime[..n], n)
+    };
+    drv.allreduce(tp, k, tag, part)
+}
+
 pub fn solve_rank(
     st: &mut RankState,
     tp: &mut dyn Transport,
@@ -78,6 +109,7 @@ fn classic(
     let mut rho = drv.allreduce(tp, 0, 30, part);
     drv.conv.set_reference(rho); // (r,r) == (r',r) at start
     let mut rr = rho;
+    let mut restarts = 0;
 
     for k in 0..opts.max_iters {
         if drv.pre_check(rr) {
@@ -100,6 +132,23 @@ fn classic(
             )
         };
         let ad = drv.allreduce(tp, k, 31, part);
+        // ρ from BARRIER 3 and r'·Ap can both vanish when r' has lost
+        // its correlation with r (the paper's §3.3 near-breakdown):
+        // restart while budget remains, else fail structurally.
+        if drv.is_breakdown(rho) || drv.is_breakdown(ad) {
+            if restarts < opts.restarts {
+                restarts += 1;
+                rho = reseed_shadow(st, &mut ops, &drv, tp, n, k, 38);
+                continue;
+            }
+            let (what, v) = if drv.is_breakdown(rho) {
+                ("rho", rho)
+            } else {
+                ("r'Ap", ad)
+            };
+            drv.fail_breakdown(what, v, k, restarts);
+            break;
+        }
         let alpha = rho / ad;
 
         // s = r − alpha·Ap ; As = A·s ; ω = (As,s)/(As,As)   BARRIER 2
@@ -116,6 +165,15 @@ fn classic(
             (num, den)
         };
         let (num, den) = drv.allreduce_pair(tp, k, 32, part);
+        if drv.is_breakdown(den) {
+            if restarts < opts.restarts {
+                restarts += 1;
+                rho = reseed_shadow(st, &mut ops, &drv, tp, n, k, 38);
+                continue;
+            }
+            drv.fail_breakdown("omega-den", den, k, restarts);
+            break;
+        }
         let omega = num / den;
 
         // x += alpha·p + omega·s ; r = s − omega·As ;
@@ -161,7 +219,7 @@ fn classic(
         drv.record(k + 1, rr);
     }
 
-    drv.finish("bicgstab", 0)
+    drv.finish("bicgstab", restarts)
 }
 
 /// Right-preconditioned BiCGStab (van der Vorst): solve `A M⁻¹ y = b`
@@ -194,6 +252,7 @@ fn preconditioned(
     let mut rho = drv.allreduce(tp, 0, 34, part);
     drv.conv.set_reference(rho); // (r,r) == (r',r) at start
     let mut rr = rho;
+    let mut restarts = 0;
 
     for k in 0..opts.max_iters {
         if drv.pre_check(rr) {
@@ -224,6 +283,20 @@ fn preconditioned(
             )
         };
         let ad = drv.allreduce(tp, k, 35, part);
+        if drv.is_breakdown(rho) || drv.is_breakdown(ad) {
+            if restarts < opts.restarts {
+                restarts += 1;
+                rho = reseed_shadow(st, &mut ops, &drv, tp, n, k, 39);
+                continue;
+            }
+            let (what, v) = if drv.is_breakdown(rho) {
+                ("rho", rho)
+            } else {
+                ("r'Ap", ad)
+            };
+            drv.fail_breakdown(what, v, k, restarts);
+            break;
+        }
         let alpha = rho / ad;
 
         // s = r − alpha·Ap̂ ; ŝ = M⁻¹s ; Aŝ = A·ŝ ;
@@ -250,6 +323,15 @@ fn preconditioned(
             (num, den)
         };
         let (num, den) = drv.allreduce_pair(tp, k, 36, part);
+        if drv.is_breakdown(den) {
+            if restarts < opts.restarts {
+                restarts += 1;
+                rho = reseed_shadow(st, &mut ops, &drv, tp, n, k, 39);
+                continue;
+            }
+            drv.fail_breakdown("omega-den", den, k, restarts);
+            break;
+        }
         let omega = num / den;
 
         // x += alpha·p̂ + omega·ŝ ; r = s − omega·Aŝ ;
@@ -294,7 +376,7 @@ fn preconditioned(
         drv.record(k + 1, rr);
     }
 
-    drv.finish("bicgstab", 0)
+    drv.finish("bicgstab", restarts)
 }
 
 /// BiCGStab-B1 (Algorithm 2): one blocking barrier (αd, line 3); the ω

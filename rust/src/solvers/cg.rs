@@ -88,6 +88,9 @@ fn classic(
             ops.halo_spmv_dot(&sys.a, &sys.halo, tp, p_ext, ap, DotWith::Exchanged, k, k)
         };
         let pap = drv.allreduce(tp, k, 11, part); // BARRIER 1
+        if drv.breakdown("pAp", pap, k) {
+            break;
+        }
         let alpha = rr / pap;
 
         // x += alpha p ; r -= alpha Ap ; rr' = (r,r)
@@ -167,6 +170,9 @@ fn preconditioned(
             ops.halo_spmv_dot(&sys.a, &sys.halo, tp, p_ext, ap, DotWith::Exchanged, k, k)
         };
         let pap = drv.allreduce(tp, k, 15, part); // BARRIER 1
+        if drv.breakdown("pAp", pap, k) {
+            break;
+        }
         let alpha = rz / pap;
 
         // x += alpha p ; r -= alpha Ap ; z = M⁻¹r ; (rz', rr') fused
@@ -293,6 +299,9 @@ fn nonblocking(
             );
         }
         let ad_new = drv.wait_scalar(tp, k, 21);
+        if drv.breakdown("pAp", ad_new, k) {
+            break;
+        }
 
         an = an_new;
         ad = ad_new;

@@ -39,7 +39,9 @@ use crate::mesh::HaloMap;
 use crate::simmpi::{isodd, Comm, HaloExchange, Payload, Tag, Transport};
 use crate::sparse::Operator;
 
-use super::{completion_order, Compute, HaloVec, Observer, RankState, SolveOpts, SolveStats};
+use super::{
+    completion_order, Compute, HaloVec, Observer, RankState, SolveFailure, SolveOpts, SolveStats,
+};
 
 /// What a fused SpMV·dot reduces against: the freshly exchanged vector
 /// itself (CG's Σ (A·p)·p) or a separate rank-local slice (BiCGStab's
@@ -127,16 +129,38 @@ fn reduce_overlap_with(
 // ---------------------------------------------------------------------
 
 /// Residual bookkeeping shared by all methods: reference residual,
-/// relative-residual history, iteration count, convergence flag. Every
-/// rank runs its own tracker over the *same* allreduced values, so all
-/// ranks take identical decisions and produce identical histories.
-#[derive(Debug, Default)]
+/// relative-residual history, iteration count, convergence flag, and
+/// the runtime guards of the failure taxonomy (DESIGN.md §12):
+/// non-finite residual detection and divergence (growth past
+/// `SolveOpts::divergence_ratio` × the best residual seen). Every rank
+/// runs its own tracker over the *same* allreduced values, so all
+/// ranks take identical decisions and produce identical histories —
+/// including the decision to fail.
+#[derive(Debug)]
 pub struct ConvergenceTracker {
     res0: f64,
     rel: f64,
+    /// Best (smallest) relative residual seen so far — the divergence
+    /// guard's reference point.
+    best_rel: f64,
     history: Vec<f64>,
     iterations: usize,
     converged: bool,
+    failure: Option<SolveFailure>,
+}
+
+impl Default for ConvergenceTracker {
+    fn default() -> Self {
+        ConvergenceTracker {
+            res0: 0.0,
+            rel: 1.0,
+            best_rel: f64::INFINITY,
+            history: Vec::new(),
+            iterations: 0,
+            converged: false,
+            failure: None,
+        }
+    }
 }
 
 /// Cap on the history capacity reserved up front (8k iterations ≈ 64 KiB
@@ -145,13 +169,16 @@ pub struct ConvergenceTracker {
 /// steady state); longer runs fall back to amortised growth.
 const HISTORY_RESERVE_CAP: usize = 8192;
 
+/// Breakdown threshold relative to the reference squared residual: a
+/// Krylov denominator whose magnitude falls under `reference() ×
+/// BREAKDOWN_EPS` has lost all significant digits — α/β/ω computed from
+/// it would be garbage. Scaled (not absolute) so well-conditioned
+/// solves on any magnitude of right-hand side never trip it.
+const BREAKDOWN_EPS: f64 = 1e-30;
+
 impl ConvergenceTracker {
     pub fn new() -> Self {
-        ConvergenceTracker {
-            res0: 0.0,
-            rel: 1.0,
-            ..Default::default()
-        }
+        ConvergenceTracker::default()
     }
 
     /// Tracker with the history buffer pre-reserved for `max_iters`
@@ -174,8 +201,21 @@ impl ConvergenceTracker {
     }
 
     /// Top-of-loop convergence test against the current squared residual
-    /// (no history entry). Returns true once converged.
+    /// (no history entry). Returns true once the loop should end —
+    /// converged, or a non-finite residual surfaced (the guard reads the
+    /// same allreduced scalar on every rank, so every rank stops here
+    /// together).
     pub fn pre_check(&mut self, res2: f64, opts: &SolveOpts) -> bool {
+        if self.failure.is_some() {
+            return true;
+        }
+        if !res2.is_finite() {
+            self.fail(SolveFailure::NonFinite {
+                what: "residual",
+                iteration: self.iterations,
+            });
+            return true;
+        }
         self.rel = (res2 / self.res0).sqrt();
         if self.rel <= opts.eps_rel(self.res0) {
             self.converged = true;
@@ -186,16 +226,41 @@ impl ConvergenceTracker {
     /// End-of-iteration record: first call fixes the reference
     /// (stationary convention), pushes the relative residual into the
     /// history and updates the completed-iteration count. Returns true
-    /// once converged.
+    /// once the loop should end — converged, or a runtime guard fired
+    /// (non-finite residual, divergence past
+    /// `SolveOpts::divergence_ratio` × the best residual seen). A
+    /// non-finite residual is never pushed into the history; every rank
+    /// evaluates the guards on the same allreduced value, so histories
+    /// stay identical across ranks even on the failing path.
     pub fn record(&mut self, completed: usize, res2: f64, opts: &SolveOpts) -> bool {
+        if self.failure.is_some() {
+            return true;
+        }
         if self.res0 == 0.0 {
             self.set_reference(res2);
+        }
+        if !res2.is_finite() {
+            self.iterations = completed;
+            self.fail(SolveFailure::NonFinite {
+                what: "residual",
+                iteration: completed,
+            });
+            return true;
         }
         self.rel = (res2 / self.res0).sqrt();
         self.history.push(self.rel);
         self.iterations = completed;
         if self.rel <= opts.eps_rel(self.res0) {
             self.converged = true;
+        } else if self.rel < self.best_rel {
+            self.best_rel = self.rel;
+        } else if self.rel > opts.divergence_ratio * self.best_rel {
+            self.fail(SolveFailure::Diverged {
+                iteration: completed,
+                rel_residual: self.rel,
+                growth: self.rel / self.best_rel,
+            });
+            return true;
         }
         self.converged
     }
@@ -207,6 +272,18 @@ impl ConvergenceTracker {
     /// Current relative residual (the last value pushed/checked).
     pub fn rel(&self) -> f64 {
         self.rel
+    }
+
+    /// Record a structured failure (the first one wins — later guards
+    /// see the solve already failed and change nothing).
+    pub fn fail(&mut self, f: SolveFailure) {
+        if self.failure.is_none() {
+            self.failure = Some(f);
+        }
+    }
+
+    pub fn failure(&self) -> Option<&SolveFailure> {
+        self.failure.as_ref()
     }
 }
 
@@ -254,6 +331,38 @@ impl<'a> SolverDriver<'a> {
     /// Krylov loops) honour it.
     pub fn pre_check(&mut self, res2: f64) -> bool {
         self.conv.pre_check(res2, self.opts) || self.stopped
+    }
+
+    /// Is `v` a broken-down Krylov denominator (ρ, r'·Ap, pᵀAp, the ω
+    /// denominator)? True when non-finite or vanishing under the
+    /// reference-scaled epsilon. Pure predicate — pair with
+    /// [`SolverDriver::fail_breakdown`] once any restart budget is
+    /// spent. Every rank evaluates it on the same allreduced scalar, so
+    /// every rank takes the same branch and the loops stay in lockstep.
+    pub fn is_breakdown(&self, v: f64) -> bool {
+        let scale = self.conv.reference().max(f64::MIN_POSITIVE);
+        !v.is_finite() || v.abs() < scale * BREAKDOWN_EPS
+    }
+
+    /// Record a terminal breakdown on `what` (the loop breaks next).
+    pub fn fail_breakdown(&mut self, what: &'static str, v: f64, iteration: usize, restarts: usize) {
+        self.conv.fail(SolveFailure::Breakdown {
+            what,
+            value: v,
+            iteration,
+            restarts,
+        });
+    }
+
+    /// Combined guard for loops without a restart policy (CG's pᵀAp,
+    /// PCG's zᵀr): detect + record + report in one call.
+    pub fn breakdown(&mut self, what: &'static str, v: f64, iteration: usize) -> bool {
+        if self.is_breakdown(v) {
+            self.fail_breakdown(what, v, iteration, 0);
+            true
+        } else {
+            false
+        }
     }
 
     /// End-of-iteration record: pushes the history entry, notifies the
@@ -326,6 +435,7 @@ impl<'a> SolverDriver<'a> {
             x_error: 0.0,
             history: self.conv.history,
             restarts,
+            failure: self.conv.failure,
         };
         self.obs.on_finish(self.rank, &stats);
         stats
@@ -1166,6 +1276,72 @@ mod tests {
         assert!(!t.record(1, 25.0, &opts));
         assert!(t.pre_check(100.0 * 1e-14, &opts));
         assert_eq!(t.history.len(), 1);
+    }
+
+    #[test]
+    fn tracker_flags_divergence_against_best_residual() {
+        let opts = SolveOpts {
+            divergence_ratio: 10.0,
+            ..SolveOpts::default()
+        };
+        let mut t = ConvergenceTracker::new();
+        t.set_reference(1.0);
+        assert!(!t.record(1, 0.01, &opts)); // rel 0.1 — the best
+        assert!(!t.record(2, 0.25, &opts)); // rel 0.5 — growth under 10x
+        assert!(t.record(3, 4.0, &opts)); // rel 2.0 > 10 × 0.1
+        assert!(!t.converged());
+        match t.failure() {
+            Some(SolveFailure::Diverged {
+                iteration: 3,
+                growth,
+                ..
+            }) => assert!((growth - 20.0).abs() < 1e-9),
+            other => panic!("expected Diverged, got {other:?}"),
+        }
+        // latched: later records change nothing
+        assert!(t.record(4, 0.01, &opts));
+        assert_eq!(t.history.len(), 3);
+    }
+
+    #[test]
+    fn tracker_flags_non_finite_without_polluting_history() {
+        let opts = SolveOpts::default();
+        let mut t = ConvergenceTracker::new();
+        t.set_reference(1.0);
+        assert!(!t.record(1, 0.25, &opts));
+        assert!(t.record(2, f64::NAN, &opts));
+        assert_eq!(t.history, vec![0.5]);
+        match t.failure() {
+            Some(SolveFailure::NonFinite { iteration: 2, .. }) => {}
+            other => panic!("expected NonFinite, got {other:?}"),
+        }
+        let mut p = ConvergenceTracker::new();
+        p.set_reference(1.0);
+        assert!(p.pre_check(f64::INFINITY, &opts));
+        assert!(!p.converged());
+    }
+
+    #[test]
+    fn driver_breakdown_guard_scales_with_reference() {
+        let exec = Executor::seq();
+        let opts = SolveOpts::default();
+        let obs = super::super::NoopObserver;
+        let mut drv = SolverDriver::new(&exec, &opts, &obs, 0);
+        drv.conv.set_reference(1.0);
+        assert!(!drv.is_breakdown(1e-20));
+        assert!(drv.is_breakdown(0.0));
+        assert!(drv.is_breakdown(f64::NAN));
+        assert!(drv.breakdown("pAp", 1e-40, 3));
+        let s = drv.finish("cg", 0);
+        assert!(!s.converged);
+        match s.failure {
+            Some(SolveFailure::Breakdown {
+                what: "pAp",
+                iteration: 3,
+                ..
+            }) => {}
+            other => panic!("expected Breakdown, got {other:?}"),
+        }
     }
 
     #[test]

@@ -51,7 +51,10 @@ use std::sync::Mutex;
 
 use crate::exec::{ExecSpec, Executor};
 use crate::mesh::Grid3;
-use crate::simmpi::{run_ranks, RankTransport, Transport, TransportKind, WorldStats};
+use crate::simmpi::{
+    try_run_ranks, FaultPlan, RankTransport, Transport, TransportFailure, TransportKind,
+    WorldStats,
+};
 use crate::sparse::{KernelKind, LocalSystem, Operator, StencilKind};
 use crate::util::Rng;
 
@@ -171,6 +174,100 @@ pub struct SolveOpts {
     /// sweeps / Chebyshev degree — and the K of multisplit's K inner
     /// iterations per outer round. Clamped to ≥ 1.
     pub inner_iters: usize,
+    /// Breakdown-restart budget for classic BiCGStab: on a detected
+    /// breakdown (|ρ|, |ω| denominator or r'·Ap vanishing under the
+    /// scaled epsilon) the shadow residual and search direction are
+    /// re-seeded from the current residual up to this many times before
+    /// the solve fails with `SolveFailure::Breakdown`. 0 (the default)
+    /// fails on the first breakdown. Deterministic: the decision reads
+    /// only allreduced scalars, so every rank restarts in lockstep and
+    /// histories stay bitwise reproducible across strategies /
+    /// transports / overlap.
+    pub restarts: usize,
+    /// Divergence guard: fail with `SolveFailure::Diverged` once the
+    /// relative residual exceeds `divergence_ratio ×` the best relative
+    /// residual seen so far. The default (1e8) never fires on a healthy
+    /// solve — histories are bitwise unchanged — but catches runaway
+    /// iterations long before they overflow into NaN garbage.
+    pub divergence_ratio: f64,
+}
+
+/// Why a solve failed — the structured failure taxonomy (DESIGN.md
+/// §12). Carried in [`SolveStats::failure`] by the engine-level
+/// `Problem::solve*` paths (whose signatures predate the taxonomy) and
+/// converted into a typed `crate::api::SolveError` by `Session::run`.
+#[derive(Debug, Clone, PartialEq)]
+pub enum SolveFailure {
+    /// A residual or allreduced scalar went NaN/∞ at `iteration`.
+    NonFinite { what: &'static str, iteration: usize },
+    /// The relative residual grew past `SolveOpts::divergence_ratio` ×
+    /// the best value seen (`growth` is the observed ratio).
+    Diverged {
+        iteration: usize,
+        rel_residual: f64,
+        growth: f64,
+    },
+    /// A Krylov denominator (`what` names it: "rho", "r'Ap", "pAp",
+    /// "omega-den") vanished or went non-finite after `restarts`
+    /// restart attempts.
+    Breakdown {
+        what: &'static str,
+        value: f64,
+        iteration: usize,
+        restarts: usize,
+    },
+    /// The transport failed underneath the solve (deadlock, timeout,
+    /// injected abort) — the originating rank/phase/cause.
+    Transport {
+        rank: usize,
+        phase: String,
+        what: String,
+    },
+}
+
+impl SolveFailure {
+    /// Stable kebab-case tag ("non-finite", "diverged", "breakdown",
+    /// "transport") — the wire vocabulary of the service layer.
+    pub fn tag(&self) -> &'static str {
+        match self {
+            SolveFailure::NonFinite { .. } => "non-finite",
+            SolveFailure::Diverged { .. } => "diverged",
+            SolveFailure::Breakdown { .. } => "breakdown",
+            SolveFailure::Transport { .. } => "transport",
+        }
+    }
+}
+
+impl std::fmt::Display for SolveFailure {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SolveFailure::NonFinite { what, iteration } => {
+                write!(f, "non-finite {what} at iteration {iteration}")
+            }
+            SolveFailure::Diverged {
+                iteration,
+                rel_residual,
+                growth,
+            } => write!(
+                f,
+                "diverged at iteration {iteration}: rel residual {rel_residual:.3e} \
+                 ({growth:.1e}x the best seen)"
+            ),
+            SolveFailure::Breakdown {
+                what,
+                value,
+                iteration,
+                restarts,
+            } => write!(
+                f,
+                "breakdown at iteration {iteration}: {what} = {value:.3e} \
+                 (after {restarts} restarts)"
+            ),
+            SolveFailure::Transport { rank, phase, what } => {
+                write!(f, "transport failure at rank {rank} during {phase}: {what}")
+            }
+        }
+    }
 }
 
 impl SolveOpts {
@@ -205,6 +302,8 @@ impl Default for SolveOpts {
             task_order_seed: 0,
             precond: PrecondKind::None,
             inner_iters: 1,
+            restarts: 0,
+            divergence_ratio: 1e8,
         }
     }
 }
@@ -222,6 +321,11 @@ pub struct SolveStats {
     /// Relative residual after each iteration.
     pub history: Vec<f64>,
     pub restarts: usize,
+    /// Why the solve stopped without converging, when it stopped for a
+    /// structured reason (breakdown, divergence, non-finite residual,
+    /// transport failure). `None` for a clean converge or a plain
+    /// max-iters exhaustion. When set, `converged` is always false.
+    pub failure: Option<SolveFailure>,
 }
 
 /// Per-rank solver state: the local system plus every work vector any of
@@ -475,6 +579,14 @@ pub struct Problem {
     pub kind: StencilKind,
     /// Communication + concurrency statistics of the last solve.
     pub stats: WorldStats,
+    /// Deterministic fault plan injected into the transport of every
+    /// solve on this problem (DESIGN.md §12). Empty = fault-free; the
+    /// fault-free hot path costs one branch per blocking wait.
+    pub fault: FaultPlan,
+    /// Deadlock timeout for the threaded transport, in milliseconds.
+    /// 0 = resolve from `HLAM_DEADLOCK_TIMEOUT_MS`, else the 30s
+    /// default. Tests drop this to ~2s so injected stalls fail fast.
+    pub deadlock_timeout_ms: u64,
 }
 
 impl Problem {
@@ -488,6 +600,8 @@ impl Problem {
             grid,
             kind,
             stats: WorldStats::default(),
+            fault: FaultPlan::none(),
+            deadlock_timeout_ms: 0,
         }
     }
 
@@ -506,6 +620,8 @@ impl Problem {
             grid,
             kind,
             stats: WorldStats::default(),
+            fault: FaultPlan::none(),
+            deadlock_timeout_ms: 0,
         }
     }
 
@@ -562,6 +678,34 @@ impl Problem {
         s
     }
 
+    /// Explicit threaded-transport deadlock timeout, if this problem
+    /// overrides the env/default resolution.
+    fn deadlock_timeout(&self) -> Option<std::time::Duration> {
+        (self.deadlock_timeout_ms > 0)
+            .then(|| std::time::Duration::from_millis(self.deadlock_timeout_ms))
+    }
+
+    /// Synthesise the stats of a solve the transport killed before any
+    /// rank finished: no iterations, no history, a structured
+    /// [`SolveFailure::Transport`] naming the originating rank.
+    fn transport_failed_stats(&mut self, method: Method, tf: TransportFailure) -> SolveStats {
+        self.stats = WorldStats::default();
+        SolveStats {
+            method: method.name(),
+            iterations: 0,
+            converged: false,
+            rel_residual: 1.0,
+            x_error: 0.0,
+            history: Vec::new(),
+            restarts: 0,
+            failure: Some(SolveFailure::Transport {
+                rank: tf.rank,
+                phase: tf.phase,
+                what: tf.what,
+            }),
+        }
+    }
+
     /// Run `method` to convergence with the given backend on the default
     /// sequential executor (lockstep transport).
     ///
@@ -611,6 +755,8 @@ impl Problem {
         obs: &dyn Observer,
     ) -> SolveStats {
         self.reset();
+        let fault = self.fault.clone();
+        let timeout = self.deadlock_timeout();
         let shared = Mutex::new(SharedBackendPtr(backend as *mut (dyn Compute + '_)));
         let shared = &shared;
         let bodies: Vec<Box<dyn FnOnce(&mut RankTransport) -> SolveStats + Send + '_>> = self
@@ -624,8 +770,10 @@ impl Problem {
                     as Box<dyn FnOnce(&mut RankTransport) -> SolveStats + Send + '_>
             })
             .collect();
-        let run = run_ranks(TransportKind::Lockstep, bodies);
-        self.finish_run(run)
+        match try_run_ranks(TransportKind::Lockstep, bodies, &fault, timeout) {
+            Ok(run) => self.finish_run(run),
+            Err(tf) => self.transport_failed_stats(method, tf),
+        }
     }
 
     /// Run `method` under the real hybrid dimension: `transport` decides
@@ -690,6 +838,8 @@ impl Problem {
             "one executor per rank required"
         );
         self.reset();
+        let fault = self.fault.clone();
+        let timeout = self.deadlock_timeout();
         let bodies: Vec<Box<dyn FnOnce(&mut RankTransport) -> SolveStats + Send + '_>> = self
             .ranks
             .iter_mut()
@@ -702,8 +852,10 @@ impl Problem {
                     as Box<dyn FnOnce(&mut RankTransport) -> SolveStats + Send + '_>
             })
             .collect();
-        let run = run_ranks(transport, bodies);
-        self.finish_run(run)
+        match try_run_ranks(transport, bodies, &fault, timeout) {
+            Ok(run) => self.finish_run(run),
+            Err(tf) => self.transport_failed_stats(method, tf),
+        }
     }
 }
 

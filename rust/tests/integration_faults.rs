@@ -1,0 +1,386 @@
+//! Acceptance contract of the failure taxonomy + deterministic fault
+//! injection (ISSUE 9):
+//!
+//!  * injected transport faults surface as structured
+//!    [`SolveError::TransportFailure`] values naming the originating
+//!    rank and phase — never as a process abort — on both transports;
+//!  * a threaded rank stalled past the configured `deadlock_timeout_ms`
+//!    is diagnosed as a timeout, while the lockstep oracle (which
+//!    serialises ranks and therefore cannot time out) completes the
+//!    same plan;
+//!  * corrupted allreduce payloads trip the solver guards into the
+//!    structured taxonomy (`non-finite` / `solver-breakdown`), and the
+//!    verdict is identical on every replay;
+//!  * BiCGStab's deterministic breakdown restart turns an injected
+//!    breakdown into a converged solve once `SolveOpts::restarts`
+//!    grants budget;
+//!  * faults that only perturb *timing* (delayed allreduce posts) leave
+//!    convergence histories bitwise identical to the fault-free run;
+//!  * a seeded chaos plan replays to the identical outcome, Ok or Err;
+//!  * the solve service drains a chaos trace (≥25 % injected failures,
+//!    including raw panics) with exactly one structured response per
+//!    request, bitwise-identical results for the fault-free jobs, and
+//!    telemetry that accounts for every panic, retry, and deadline.
+
+use hlam::api::{RunSpec, Session, SolveError};
+use hlam::mesh::Grid3;
+use hlam::service::{history_digest, Response, Service, ServiceConfig, SolveRequest};
+use hlam::simmpi::{Fault, FaultKind, FaultPlan, TransportKind};
+
+/// A small 2-rank spec with one explicit fault installed.
+fn faulty_spec(
+    method: &str,
+    transport: TransportKind,
+    kind: FaultKind,
+    rank: usize,
+    at: usize,
+    delay_ms: u64,
+) -> RunSpec {
+    RunSpec::builder()
+        .method_str(method)
+        .grid(Grid3::new(6, 6, 8))
+        .ranks(2)
+        .transport(transport)
+        .push_fault(Fault {
+            kind,
+            rank,
+            at,
+            delay_ms,
+        })
+        .build()
+        .expect("fault spec builds")
+}
+
+#[test]
+fn injected_abort_surfaces_as_structured_transport_failure() {
+    for transport in [TransportKind::Lockstep, TransportKind::Threaded] {
+        let spec = faulty_spec("cg", transport, FaultKind::Abort, 1, 2, 0);
+        let err = Session::new()
+            .run(&spec)
+            .expect_err("an aborted rank cannot produce a clean solve");
+        match &err {
+            SolveError::TransportFailure { rank, what, .. } => {
+                // primary-failure selection reports the *originating*
+                // abort, not the peer-echo failures it causes on rank 0
+                assert_eq!(*rank, 1, "{transport:?}: wrong originating rank");
+                assert_eq!(what, "injected abort", "{transport:?}");
+            }
+            other => panic!("{transport:?}: expected transport failure, got {other:?}"),
+        }
+    }
+}
+
+#[test]
+fn threaded_stall_times_out_while_lockstep_completes() {
+    let stalled = |transport| {
+        let mut spec = faulty_spec("cg", transport, FaultKind::Stall, 0, 2, 150);
+        // rank 1 blocks on rank 0's contribution; the 150 ms stall per
+        // wait must overrun this window decisively
+        spec.deadlock_timeout_ms = 40;
+        spec
+    };
+    let err = Session::new()
+        .run(&stalled(TransportKind::Threaded))
+        .expect_err("a stalled threaded rank must be diagnosed, not waited out");
+    assert!(
+        matches!(err, SolveError::TransportFailure { .. }),
+        "expected a transport timeout, got {err:?}"
+    );
+    // lockstep serialises ranks, so a stall is slow but never stuck:
+    // the same plan (same timeout knob) completes and converges
+    let stats = Session::new()
+        .run(&stalled(TransportKind::Lockstep))
+        .expect("lockstep survives a pure stall");
+    assert!(stats.converged);
+}
+
+#[test]
+fn corrupted_allreduce_fails_structurally_and_identically_on_replay() {
+    let spec = faulty_spec(
+        "cg",
+        TransportKind::Lockstep,
+        FaultKind::CorruptAllreduce,
+        0,
+        1,
+        0,
+    );
+    let verdict = |spec: &RunSpec| {
+        let err = Session::new()
+            .run(spec)
+            .expect_err("NaN lanes in an allreduce cannot converge");
+        assert!(
+            matches!(
+                err,
+                SolveError::NonFinite { .. }
+                    | SolveError::Breakdown { .. }
+                    | SolveError::Diverged { .. }
+            ),
+            "corruption must land in the solver taxonomy, got {err:?}"
+        );
+        err.to_string()
+    };
+    assert_eq!(verdict(&spec), verdict(&spec), "verdict must replay");
+}
+
+#[test]
+fn bicgstab_restart_recovers_from_an_injected_breakdown() {
+    let spec_at = |at: usize, restarts: usize| {
+        let mut spec = faulty_spec(
+            "bicgstab",
+            TransportKind::Lockstep,
+            FaultKind::CorruptAllreduce,
+            0,
+            at,
+            0,
+        );
+        spec.grid = Grid3::new(8, 8, 16);
+        spec.opts.restarts = restarts;
+        spec
+    };
+    // scan the first few allreduce ordinals for one whose corruption
+    // lands in a guarded Krylov denominator (ρ, r'·Ap, ω) — the NaN is
+    // indistinguishable from a true breakdown to the guard
+    let broken_at = (0..8).find(|&at| {
+        matches!(
+            Session::new().run(&spec_at(at, 0)),
+            Err(SolveError::Breakdown { .. })
+        )
+    });
+    let at = broken_at.expect("some early allreduce ordinal must hit a breakdown guard");
+    // the same fault with restart budget: the reseed consumes the
+    // poisoned direction and the solve completes cleanly
+    let stats = Session::new()
+        .run(&spec_at(at, 3))
+        .expect("restart budget must absorb the injected breakdown");
+    assert!(stats.converged, "restarted solve must converge");
+    assert!(stats.restarts >= 1, "recovery must be via restart");
+}
+
+#[test]
+fn delay_faults_leave_histories_bitwise_identical() {
+    let base = |kind: Option<FaultKind>| {
+        let mut b = RunSpec::builder()
+            .method_str("cg")
+            .grid(Grid3::new(6, 6, 8))
+            .ranks(2)
+            .transport(TransportKind::Threaded);
+        if let Some(kind) = kind {
+            b = b.push_fault(Fault {
+                kind,
+                rank: 1,
+                at: 1,
+                delay_ms: 30,
+            });
+        }
+        b.build().unwrap()
+    };
+    let clean = Session::new().run(&base(None)).expect("clean run");
+    for kind in [FaultKind::DelayAllreduce, FaultKind::Stall] {
+        let slowed = Session::new()
+            .run(&base(Some(kind)))
+            .expect("timing faults do not fail a solve");
+        assert_eq!(
+            history_digest(&slowed.history),
+            history_digest(&clean.history),
+            "{kind:?} must not perturb numerics"
+        );
+        assert_eq!(
+            slowed.rel_residual.to_bits(),
+            clean.rel_residual.to_bits(),
+            "{kind:?} must not perturb the final residual"
+        );
+    }
+}
+
+#[test]
+fn seeded_chaos_plans_replay_identically_across_methods_and_transports() {
+    let outcome = |spec: &RunSpec| match Session::new().run(spec) {
+        Ok(stats) => format!(
+            "ok:{}:{:016x}",
+            stats.history.len(),
+            history_digest(&stats.history)
+        ),
+        Err(e) => format!("err:{e}"),
+    };
+    for method in ["cg", "bicgstab", "multisplit"] {
+        for transport in [TransportKind::Lockstep, TransportKind::Threaded] {
+            for seed in 1..=3u64 {
+                let spec = RunSpec::builder()
+                    .method_str(method)
+                    .grid(Grid3::new(6, 6, 8))
+                    .ranks(2)
+                    .transport(transport)
+                    .fault(FaultPlan {
+                        seed,
+                        faults: Vec::new(),
+                    })
+                    .build()
+                    .unwrap();
+                let first = outcome(&spec);
+                assert_eq!(
+                    first,
+                    outcome(&spec),
+                    "{method}/{transport:?}: chaos seed {seed} must replay"
+                );
+                // the derived chaos plan never injects a raw panic, so
+                // every outcome is structured: a clean solve (timing
+                // faults) or a taxonomy error — never a process abort
+                assert!(
+                    first.starts_with("ok:") || first.starts_with("err:"),
+                    "{first}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn service_chaos_drain_answers_every_request_exactly_once() {
+    const JOBS: usize = 16;
+    let clean = RunSpec::builder()
+        .method_str("cg")
+        .grid(Grid3::new(6, 6, 8))
+        .ranks(2)
+        .build()
+        .unwrap();
+    let reference = Session::new().run(&clean).expect("reference solve");
+    let ref_digest = history_digest(&reference.history);
+
+    let with_fault = |kind: FaultKind, rank: usize| {
+        let mut spec = clean.clone();
+        spec.fault.faults.push(Fault {
+            kind,
+            rank,
+            at: 2,
+            delay_ms: 0,
+        });
+        spec
+    };
+    let service = Service::start(ServiceConfig {
+        workers: 2,
+        total_threads: 4,
+        queue_cap: JOBS,
+        default_iter_budget: None,
+        exec_cache_sets: 4,
+        default_deadline_ms: None,
+        max_retries: 1,
+    });
+    // 75 % injected failures (≥ the 25 % the acceptance bar asks for):
+    // raw panics, structured aborts, corrupted numerics, then clean
+    for i in 0..JOBS {
+        let spec = match i % 4 {
+            0 => with_fault(FaultKind::Panic, 0),
+            1 => with_fault(FaultKind::Abort, 1),
+            2 => with_fault(FaultKind::CorruptAllreduce, 0),
+            _ => clean.clone(),
+        };
+        service.submit(
+            SolveRequest {
+                id: Some(format!("c-{i}")),
+                spec,
+                iter_budget: None,
+                deadline_ms: None,
+            },
+            None,
+        );
+    }
+    let responses = service.drain();
+    let counters = service.shutdown();
+
+    assert_eq!(responses.len(), JOBS, "exactly one response per request");
+    let mut ids: Vec<&str> = responses.iter().map(Response::id).collect();
+    ids.sort_unstable();
+    ids.dedup();
+    assert_eq!(ids.len(), JOBS, "no duplicate responses");
+
+    for i in 0..JOBS {
+        let id = format!("c-{i}");
+        let resp = responses.iter().find(|r| r.id() == id).unwrap();
+        match i % 4 {
+            0 => match resp {
+                // a panicking job is retried once on a rebuilt session,
+                // panics again (the fault is in the spec), and only the
+                // final attempt answers
+                Response::Error { code, reason, .. } => {
+                    assert_eq!(*code, "internal-panic", "{id}");
+                    assert!(reason.contains("attempt 2"), "{id}: {reason}");
+                    assert!(reason.contains("injected panic"), "{id}: {reason}");
+                }
+                other => panic!("{id}: expected internal-panic, got {other:?}"),
+            },
+            1 => match resp {
+                Response::Error { code, reason, .. } => {
+                    assert_eq!(*code, "transport", "{id}");
+                    assert!(reason.contains("injected abort"), "{id}: {reason}");
+                }
+                other => panic!("{id}: expected transport error, got {other:?}"),
+            },
+            2 => match resp {
+                Response::Error { code, .. } => {
+                    assert!(
+                        ["non-finite", "solver-breakdown", "diverged"].contains(code),
+                        "{id}: corrupted numerics must land in the taxonomy, got {code}"
+                    );
+                }
+                other => panic!("{id}: expected solver error, got {other:?}"),
+            },
+            _ => {
+                let ok = resp
+                    .as_ok()
+                    .unwrap_or_else(|| panic!("{id}: clean job failed: {resp:?}"));
+                // chaos on neighbouring jobs must not leak into clean
+                // results — bitwise identical to the single-shot run
+                assert_eq!(ok.history_digest, ref_digest, "{id}");
+                assert_eq!(ok.rel_residual_bits, reference.rel_residual.to_bits(), "{id}");
+            }
+        }
+    }
+    let quarter = (JOBS / 4) as u64;
+    assert_eq!(counters.completed, quarter, "clean jobs");
+    assert_eq!(counters.errors, 3 * quarter, "faulted jobs");
+    assert_eq!(counters.retried, quarter, "each panic job retried once");
+    assert_eq!(counters.panics, 2 * quarter, "both attempts panicked");
+    assert_eq!(counters.deadlines, 0);
+    assert_eq!(counters.accepted, JOBS as u64);
+}
+
+#[test]
+fn expired_deadline_answers_with_the_deadline_code() {
+    let service = Service::start(ServiceConfig {
+        workers: 1,
+        total_threads: 2,
+        queue_cap: 4,
+        default_iter_budget: None,
+        exec_cache_sets: 4,
+        default_deadline_ms: None,
+        max_retries: 1,
+    });
+    let mut spec = RunSpec::default();
+    spec.grid = Grid3::new(6, 6, 8);
+    service.submit(
+        SolveRequest {
+            id: Some("late".to_string()),
+            spec,
+            iter_budget: None,
+            // already expired on arrival: the memoised deadline observer
+            // stops the solve at its first verdict and the job answers
+            // with the deadline code instead of a partial ok
+            deadline_ms: Some(0),
+        },
+        None,
+    );
+    let responses = service.drain();
+    let counters = service.shutdown();
+    assert_eq!(responses.len(), 1);
+    match &responses[0] {
+        Response::Error { id, code, reason } => {
+            assert_eq!(id, "late");
+            assert_eq!(*code, "deadline");
+            assert!(reason.contains("deadline of 0 ms"), "{reason}");
+        }
+        other => panic!("expected deadline error, got {other:?}"),
+    }
+    assert_eq!(counters.deadlines, 1);
+    assert_eq!(counters.errors, 1);
+    assert_eq!(counters.completed, 0);
+}

@@ -31,6 +31,7 @@ fn submit(service: &Service, id: &str, spec: &RunSpec, iter_budget: Option<usize
             id: Some(id.to_string()),
             spec: spec.clone(),
             iter_budget,
+            deadline_ms: None,
         },
         None,
     );
@@ -65,6 +66,8 @@ fn service_results_are_bitwise_identical_to_single_shot_runs() {
             queue_cap: TRACE_LEN,
             default_iter_budget: None,
             exec_cache_sets: 4,
+            default_deadline_ms: None,
+            max_retries: 1,
         });
         for (i, spec) in trace.iter().enumerate() {
             submit(&service, &format!("t-{i}"), spec, None);
@@ -128,6 +131,8 @@ fn queue_cap_sheds_load_deterministically() {
         queue_cap: 2,
         default_iter_budget: None,
         exec_cache_sets: 4,
+        default_deadline_ms: None,
+        max_retries: 1,
     });
     let spec = tiny_spec();
     for i in 0..5 {
@@ -164,6 +169,8 @@ fn impossible_specs_are_rejected_up_front() {
         queue_cap: 8,
         default_iter_budget: None,
         exec_cache_sets: 4,
+        default_deadline_ms: None,
+        max_retries: 1,
     });
     // 2 ranks x 2 threads = 4 lanes can never lease from a 2-lane budget
     let mut over = tiny_spec();
@@ -200,6 +207,8 @@ fn cancel_removes_queued_jobs_only() {
         queue_cap: 8,
         default_iter_budget: None,
         exec_cache_sets: 4,
+        default_deadline_ms: None,
+        max_retries: 1,
     });
     let spec = tiny_spec();
     submit(&service, "keep", &spec, None);
@@ -248,6 +257,8 @@ fn iteration_budget_matches_a_single_shot_observed_run() {
         queue_cap: 8,
         default_iter_budget: None,
         exec_cache_sets: 4,
+        default_deadline_ms: None,
+        max_retries: 1,
     });
     submit(&service, "capped", &spec, Some(cap));
     // the same spec without a budget must run past the cap

@@ -1,14 +1,25 @@
 #!/usr/bin/env python3
-"""CI perf regression gate for the hot-path benchmark trajectory.
+"""CI perf regression gate for the benchmark trajectories.
 
-Validates a freshly measured ``BENCH_hot_path.json`` snapshot
-(schema + sanity invariants) and diffs its medians against the
-committed baseline, failing when throughput regresses beyond a noise
-band.
+Validates a freshly measured snapshot (schema + sanity invariants) and
+diffs it against the committed baseline, failing when throughput
+regresses beyond a noise band. Two snapshot families are understood:
+
+  * ``--mode hot-path`` (default): ``BENCH_hot_path.json`` — per-cell
+    solver/spmv/precond medians, compared cell by cell;
+  * ``--mode service``: ``BENCH_service.json`` — the solve-service
+    throughput point. Wall-clock figures (solves/sec) are compared
+    under the noise band; the *deterministic* routing telemetry
+    (batch hits, distinct plans, queue-full reject count) must match
+    the baseline exactly — those carry no timing noise, so any drift
+    is a real scheduling change, not jitter.
 
 Usage:
     python3 scripts/perf_gate.py --fresh BENCH_hot_path.json \
         --baseline /tmp/baseline.json [--band 0.15]
+    python3 scripts/perf_gate.py --mode service \
+        --fresh BENCH_service.json --baseline /tmp/service_baseline.json \
+        [--band 0.5]
 
 Exit status: 0 = ok (or comparison skipped, see below), 1 = schema
 violation or regression.
@@ -55,6 +66,19 @@ PRECOND_MIN_ITER_RATIO = 3.0
 # real measured snapshot is committed. The provisional placeholder
 # landed at commit 10; this deadline leaves ~3 PRs of grace.
 PROVISIONAL_DEADLINE_COMMITS = 15
+# same mechanism for the service snapshot (placeholder landed later)
+SERVICE_PROVISIONAL_DEADLINE_COMMITS = 20
+# wall-clock throughput fields of the service snapshot (noise-banded);
+# everything in SERVICE_EXACT_FIELDS is deterministic and diffed exactly
+SERVICE_MEASURE_FIELDS = [
+    "solves_per_sec", "queue_ms_p50", "queue_ms_p95",
+    "solve_ms_p50", "solve_ms_p95", "wall_seconds",
+]
+SERVICE_EXACT_FIELDS = ["batch_hits", "batch_misses", "distinct_plans"]
+# bench-shape fields: snapshots measured at different shapes are not
+# comparable (quick vs full trace, different worker/lane layout)
+SERVICE_SHAPE_FIELDS = ["quick", "requests", "seed", "workers",
+                        "total_threads"]
 
 
 def fail(msg):
@@ -183,6 +207,105 @@ def validate_fresh(doc):
           f"iteration cut {best_iter_ratio:.1f}x)")
 
 
+def validate_service_fresh(doc):
+    """Schema + sanity invariants of a fresh service snapshot."""
+    assert doc.get("bench") == "service", f"bench != service: {doc.get('bench')}"
+    assert doc.get("provisional") is False, (
+        "a freshly measured service snapshot must not be provisional"
+    )
+    for field in SERVICE_MEASURE_FIELDS + ["batch_hit_rate"]:
+        v = doc.get(field)
+        assert isinstance(v, (int, float)) and v >= 0, (field, v)
+    assert doc.get("batch_hits", 0) >= 1, (
+        "the clustered trace must produce at least one batched-assembly hit"
+    )
+    small_cap = doc.get("small_cap")
+    assert isinstance(small_cap, dict), "missing small_cap section"
+    assert small_cap.get("rejected_queue_full", 0) >= 1, (
+        "the small-cap replay must shed load with queue-full rejects"
+    )
+    print(f"perf gate: fresh service snapshot schema ok "
+          f"({doc['solves_per_sec']:.1f} solves/s, "
+          f"{doc['batch_hits']} batch hits, "
+          f"{small_cap['rejected_queue_full']} queue-full rejects)")
+
+
+def compare_service(fresh, baseline, band):
+    """Diff the service point; returns the list of regression messages."""
+    regressions = []
+    floor = baseline["solves_per_sec"] * (1.0 - band)
+    if fresh["solves_per_sec"] < floor:
+        regressions.append(
+            f"service throughput: {fresh['solves_per_sec']:.1f} solves/s vs "
+            f"baseline {baseline['solves_per_sec']:.1f} (floor {floor:.1f}, "
+            f"band {band:.0%})"
+        )
+    # latency percentiles: lower is better, the band is a ceiling
+    for field in ("queue_ms_p95", "solve_ms_p95"):
+        ceiling = baseline[field] * (1.0 + band)
+        if fresh[field] > ceiling:
+            regressions.append(
+                f"service {field}: {fresh[field]:.3f} ms vs baseline "
+                f"{baseline[field]:.3f} (ceiling {ceiling:.3f}, band {band:.0%})"
+            )
+    # routing telemetry is deterministic for a fixed trace — exact diff
+    for field in SERVICE_EXACT_FIELDS:
+        if fresh.get(field) != baseline.get(field):
+            regressions.append(
+                f"service {field}: deterministic telemetry drifted "
+                f"{baseline.get(field)!r} -> {fresh.get(field)!r}"
+            )
+    fresh_shed = fresh.get("small_cap", {}).get("rejected_queue_full")
+    base_shed = baseline.get("small_cap", {}).get("rejected_queue_full")
+    if fresh_shed != base_shed:
+        regressions.append(
+            f"service small_cap.rejected_queue_full: deterministic shed "
+            f"count drifted {base_shed!r} -> {fresh_shed!r}"
+        )
+    print(f"perf gate: compared service point at noise band {band:.0%}")
+    return regressions
+
+
+def gate_service(args, fresh, baseline):
+    """Service-mode gate body (validation + provisional/shape skips)."""
+    try:
+        validate_service_fresh(fresh)
+    except AssertionError as e:
+        fail(f"fresh service snapshot invalid: {e}")
+    if baseline.get("provisional"):
+        how = ("To arm the gate, run exactly:\n"
+               "    cargo bench --bench service -- --quick\n"
+               "on quiet hardware and commit the updated BENCH_service.json "
+               "(the same shape CI measures).")
+        if args.commits is not None and \
+                args.commits >= SERVICE_PROVISIONAL_DEADLINE_COMMITS:
+            fail(f"service baseline is still provisional at commit "
+                 f"{args.commits} >= deadline "
+                 f"{SERVICE_PROVISIONAL_DEADLINE_COMMITS}. {how}")
+        print(f"perf gate: SKIP service comparison — baseline is provisional "
+              f"(hard deadline at commit "
+              f"{SERVICE_PROVISIONAL_DEADLINE_COMMITS}"
+              + (f", currently {args.commits}" if args.commits is not None
+                 else "")
+              + f"). {how}")
+        return
+    for field in SERVICE_SHAPE_FIELDS:
+        if baseline.get(field) != fresh.get(field):
+            print(f"perf gate: SKIP service comparison — baseline {field}="
+                  f"{baseline.get(field)!r} vs fresh {field}="
+                  f"{fresh.get(field)!r}: snapshots measured at different "
+                  f"bench shapes are not comparable. Commit a snapshot "
+                  f"produced with the flags CI uses "
+                  f"(`cargo bench --bench service -- --quick`).")
+            return
+    regressions = compare_service(fresh, baseline, args.band)
+    if regressions:
+        for r in regressions:
+            print(f"perf gate: REGRESSION: {r}", file=sys.stderr)
+        fail(f"{len(regressions)} service figure(s) regressed")
+    print("perf gate: ok — service point within the noise band")
+
+
 def compare(fresh, baseline, band):
     """Diff medians; returns the list of regression messages."""
     regressions = []
@@ -251,6 +374,12 @@ def compare(fresh, baseline, band):
 
 def main():
     ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument(
+        "--mode",
+        choices=["hot-path", "service"],
+        default="hot-path",
+        help="which snapshot family the inputs belong to",
+    )
     ap.add_argument("--fresh", required=True, help="freshly measured snapshot")
     ap.add_argument("--baseline", required=True, help="committed baseline")
     ap.add_argument(
@@ -274,6 +403,10 @@ def main():
 
     fresh = load(args.fresh, "fresh")
     baseline = load(args.baseline, "baseline")
+
+    if args.mode == "service":
+        gate_service(args, fresh, baseline)
+        return
 
     try:
         validate_fresh(fresh)

@@ -15,12 +15,19 @@ it produced, checks that the service honoured the wire contract:
     batched assembly (``"batch": "hit"`` — the trace clusters on few
     plans, so reuse is pigeonhole-guaranteed when every job completes);
   * with ``--expect-reject``: at least one ``queue-full`` admission
-    reject (CI replays the trace at a deliberately tiny queue cap).
+    reject (CI replays the trace at a deliberately tiny queue cap);
+  * with ``--chaos``: the trace injects faults, so ``error`` responses
+    are expected rather than fatal — each must carry a known structured
+    code and a reason, at least ``--min-error-share`` of the solve
+    requests must have failed (proving the faults actually fired), and
+    at least one clean solve must still complete (proving failure
+    containment: chaos on one job never takes the service down).
 
 Usage:
     python3 scripts/service_check.py --requests /tmp/trace.ndjson \
         --responses /tmp/responses.ndjson \
-        [--expect-batch-hit] [--expect-reject]
+        [--expect-batch-hit] [--expect-reject] \
+        [--chaos [--min-error-share 0.25]]
 
 Exit status: 0 = contract held, 1 = violation (message on stderr).
 """
@@ -39,6 +46,12 @@ OK_FIELDS = [
 REJECT_CODES = {
     "spec-invalid", "backend-unsupported", "over-budget", "queue-full",
     "not-pending",
+}
+# the structured failure taxonomy (DESIGN.md §12): SolveError::code()
+# values plus the service's own deadline / panic-containment codes
+ERROR_CODES = {
+    "bad-spec", "backend", "io", "solver-breakdown", "diverged",
+    "non-finite", "transport", "deadline", "internal-panic",
 }
 
 
@@ -76,6 +89,19 @@ def main():
         "--expect-batch-hit",
         action="store_true",
         help="require at least one batched-assembly reuse",
+    )
+    ap.add_argument(
+        "--chaos",
+        action="store_true",
+        help="the trace injects faults: structured error responses are "
+        "expected, not fatal",
+    )
+    ap.add_argument(
+        "--min-error-share",
+        type=float,
+        default=0.25,
+        help="with --chaos, the minimum fraction of solve requests that "
+        "must have failed (default 0.25)",
     )
     args = ap.parse_args()
 
@@ -137,11 +163,25 @@ def main():
                 fail(f"reject {resp.get('id')} carries no reason")
             if code == "queue-full":
                 queue_full += 1
+        elif status == "error":
+            code = resp.get("code")
+            if code not in ERROR_CODES:
+                fail(f"error {resp.get('id')}: code {code!r} is outside the "
+                     f"failure taxonomy {sorted(ERROR_CODES)}")
+            if not resp.get("reason"):
+                fail(f"error {resp.get('id')} carries no reason")
 
     if by_status["ok"] == 0:
         fail("no solve completed")
-    if by_status["error"]:
+    if by_status["error"] and not args.chaos:
         fail(f"{by_status['error']} admitted solves failed")
+    if args.chaos:
+        share = by_status["error"] / len(solve_requests)
+        if share < args.min_error_share:
+            fail(f"chaos trace produced only {by_status['error']}/"
+                 f"{len(solve_requests)} errors ({share:.0%}) — below the "
+                 f"{args.min_error_share:.0%} floor, the injected faults "
+                 f"did not fire")
     if args.expect_batch_hit and batch_hits == 0:
         fail("no response reused a batched assembly — plan routing broke")
     if args.expect_reject and queue_full == 0:
@@ -149,7 +189,8 @@ def main():
              "cap, saw none")
 
     print(f"service check: ok — {len(responses)} responses "
-          f"({by_status['ok']} ok, {by_status['reject']} reject, "
+          f"({by_status['ok']} ok, {by_status['error']} error, "
+          f"{by_status['reject']} reject, "
           f"{by_status['cancelled']} cancelled), {batch_hits} batch hits, "
           f"{queue_full} queue-full rejects")
 
