@@ -196,6 +196,7 @@ fn main() {
 
     let spmv = bench_spmv_backends(quick, rounds);
     let precond = bench_precond(quick, rounds);
+    let recovery = bench_recovery(quick, iters, rounds, &opts, &mut pb);
 
     let mut root = BTreeMap::new();
     root.insert("bench".to_string(), Json::Str("hot_path".to_string()));
@@ -218,6 +219,7 @@ fn main() {
     root.insert("entries".to_string(), Json::Arr(entries));
     root.insert("spmv".to_string(), spmv);
     root.insert("precond".to_string(), precond);
+    root.insert("recovery".to_string(), recovery);
     let doc = Json::Obj(root);
 
     // the bench runs with the crate dir as cwd reference; the trajectory
@@ -255,7 +257,136 @@ fn main() {
         PRECOND_CELLS.len(),
         "one time-to-tolerance row per precond cell"
     );
+    let recovery_entries = parsed
+        .get("recovery")
+        .and_then(|s| s.get("entries"))
+        .and_then(|e| e.as_arr())
+        .expect("recovery entries array");
+    assert_eq!(
+        recovery_entries.len(),
+        RECOVERY_CELLS.len(),
+        "one overhead row per recovery cell"
+    );
     println!("\nwrote {out} ({} entries)", entries.len());
+}
+
+/// Recovery-tier overhead cells: the same fixed-work cg solve with the
+/// rollback machinery off vs armed. `checkpoint_every` snapshots the
+/// iteration state at that cadence; `scrub_every` adds the
+/// true-residual + checksum corruption guard (DESIGN.md §13).
+const RECOVERY_CELLS: [(&str, usize, usize); 3] = [
+    ("off", 0, 0),
+    ("checkpoint", 5, 0),
+    ("checkpoint-scrub", 5, 5),
+];
+
+/// Measures what arming checkpointed rollback recovery costs on a clean
+/// (fault-free) solve — the price every solve pays for the insurance.
+/// Same fixed-work interleaved-rounds discipline as the solver grid,
+/// reusing its shared assembly and fixed-iteration `SolveOpts`; the
+/// warm-up pass also re-asserts the byte-equivalence contract (knobs on
+/// must not perturb a clean run's result bitwise).
+fn bench_recovery(
+    quick: bool,
+    iters: usize,
+    rounds: usize,
+    base_opts: &SolveOpts,
+    pb: &mut Problem,
+) -> Json {
+    println!(
+        "\n== recovery overhead (cg, fixed {iters} iters, {RANKS} ranks, \
+         checkpoint/scrub off vs armed, {rounds} interleaved rounds) ==\n"
+    );
+    let mut spec = ExecSpec::new(ExecStrategy::Seq, 1);
+    if quick {
+        spec = spec.with_chunk_rows(512);
+    }
+    let execs: Vec<Executor> = (0..RANKS).map(|_| spec.build()).collect();
+    let opts_by_cell: Vec<SolveOpts> = RECOVERY_CELLS
+        .iter()
+        .map(|&(_, ck, sc)| SolveOpts {
+            checkpoint_every: ck,
+            scrub_every: sc,
+            ..base_opts.clone()
+        })
+        .collect();
+
+    // warm-up + byte-equivalence: recovery knobs must leave the clean
+    // run's residual bitwise untouched (checkpoints only read state;
+    // scrubs fold into dead buffers)
+    let mut rel_bits = 0u64;
+    let mut checkpoints = vec![0usize; RECOVERY_CELLS.len()];
+    for (ci, (label, _, _)) in RECOVERY_CELLS.iter().enumerate() {
+        let s = pb.solve_hybrid_execs_observed(
+            Method::parse("cg").expect("known method"),
+            &opts_by_cell[ci],
+            &execs,
+            TransportKind::Threaded,
+            &NoopObserver,
+        );
+        assert_eq!(s.iterations, iters, "recovery/{label}: fixed-work contract");
+        if ci == 0 {
+            rel_bits = s.rel_residual.to_bits();
+        } else {
+            assert_eq!(
+                s.rel_residual.to_bits(),
+                rel_bits,
+                "recovery/{label}: armed knobs perturbed a clean solve"
+            );
+        }
+        checkpoints[ci] = s.checkpoints;
+    }
+
+    let mut samples: Vec<Vec<f64>> = vec![Vec::with_capacity(rounds); RECOVERY_CELLS.len()];
+    for _ in 0..rounds {
+        for (ci, _) in RECOVERY_CELLS.iter().enumerate() {
+            let t0 = Instant::now();
+            let s = pb.solve_hybrid_execs_observed(
+                Method::parse("cg").expect("known method"),
+                &opts_by_cell[ci],
+                &execs,
+                TransportKind::Threaded,
+                &NoopObserver,
+            );
+            samples[ci].push(t0.elapsed().as_secs_f64());
+            std::hint::black_box(s.rel_residual);
+        }
+    }
+
+    let (off_median, _, _) = sample_stats(&samples[0]);
+    let mut entries: Vec<Json> = Vec::new();
+    for (ci, (label, ck, sc)) in RECOVERY_CELLS.iter().enumerate() {
+        let (median, min, stddev) = sample_stats(&samples[ci]);
+        let iters_per_sec = iters as f64 / median;
+        let overhead = median / off_median;
+        println!(
+            "{:<16} checkpoint_every={ck} scrub_every={sc}: {:>10.1} iters/s  \
+             {:>5.2}x vs off  ({} checkpoints, stddev {:>5.1}% of median)",
+            label,
+            iters_per_sec,
+            overhead,
+            checkpoints[ci],
+            100.0 * stddev / median
+        );
+        let mut e = BTreeMap::new();
+        e.insert("label".to_string(), Json::Str(label.to_string()));
+        e.insert("checkpoint_every".to_string(), Json::Num(*ck as f64));
+        e.insert("scrub_every".to_string(), Json::Num(*sc as f64));
+        e.insert("checkpoints".to_string(), Json::Num(checkpoints[ci] as f64));
+        e.insert("iters_per_sec".to_string(), Json::Num(iters_per_sec));
+        e.insert("overhead_vs_off".to_string(), Json::Num(overhead));
+        e.insert("seconds_median".to_string(), Json::Num(median));
+        e.insert("seconds_min".to_string(), Json::Num(min));
+        e.insert("seconds_stddev".to_string(), Json::Num(stddev));
+        entries.push(Json::Obj(e));
+    }
+
+    let mut s = BTreeMap::new();
+    s.insert("method".to_string(), Json::Str("cg".to_string()));
+    s.insert("iters_per_solve".to_string(), Json::Num(iters as f64));
+    s.insert("ranks".to_string(), Json::Num(RANKS as f64));
+    s.insert("entries".to_string(), Json::Arr(entries));
+    Json::Obj(s)
 }
 
 /// The preconditioner grid: Krylov × preconditioner, plus the two-stage

@@ -112,12 +112,16 @@ pub enum SolveError {
         phase: String,
         what: String,
     },
+    /// Silent corruption detected by the ABFT scrub (checksum break on
+    /// an allreduce fold, or recursive-vs-true residual drift) and not
+    /// recovered within the rollback budget (DESIGN.md §13).
+    CorruptionDetected { iteration: usize, drift: f64 },
 }
 
 impl SolveError {
     /// Stable kebab-case wire code for the service layer:
     /// `bad-spec | backend | io | solver-breakdown | diverged |
-    /// non-finite | transport`.
+    /// non-finite | transport | corruption`.
     pub fn code(&self) -> &'static str {
         match self {
             SolveError::Spec(_) => "bad-spec",
@@ -127,6 +131,7 @@ impl SolveError {
             SolveError::Diverged { .. } => "diverged",
             SolveError::NonFinite { .. } => "non-finite",
             SolveError::TransportFailure { .. } => "transport",
+            SolveError::CorruptionDetected { .. } => "corruption",
         }
     }
 }
@@ -164,6 +169,10 @@ impl fmt::Display for SolveError {
             SolveError::TransportFailure { rank, phase, what } => {
                 write!(f, "transport failure at rank {rank} during {phase}: {what}")
             }
+            SolveError::CorruptionDetected { iteration, drift } => write!(
+                f,
+                "silent corruption detected at iteration {iteration} (drift {drift:.3e})"
+            ),
         }
     }
 }
@@ -196,6 +205,9 @@ impl From<SolveFailure> for SolveError {
             }
             SolveFailure::Transport { rank, phase, what } => {
                 SolveError::TransportFailure { rank, phase, what }
+            }
+            SolveFailure::Corrupted { iteration, drift } => {
+                SolveError::CorruptionDetected { iteration, drift }
             }
         }
     }

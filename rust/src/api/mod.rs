@@ -68,7 +68,8 @@ const TRANSPORT_VALID: &str = "lockstep|threaded";
 const BACKEND_VALID: &str = "native|xla";
 const KERNEL_VALID: &str = "csr|ell|sell|stencil";
 const PRECOND_VALID: &str = "none|jacobi|block-jacobi|chebyshev";
-const FAULT_VALID: &str = "stall|abort|panic|delay-allreduce|corrupt-allreduce";
+const FAULT_VALID: &str =
+    "stall|abort|panic|delay-allreduce|corrupt-allreduce|silent-allreduce";
 
 fn unknown(
     what: &'static str,
@@ -353,6 +354,33 @@ impl RunSpec {
                 ),
             ));
         }
+        if self.opts.checkpoint_every > 0 || self.opts.scrub_every > 0 {
+            let field = if self.opts.checkpoint_every > 0 {
+                "checkpoint"
+            } else {
+                "scrub"
+            };
+            if !self.method.supports_recovery() {
+                return Err(invalid(
+                    field,
+                    format!(
+                        "method '{}' has no rollback seam; checkpoint/scrub apply to \
+                         jacobi, cg and bicgstab (classic variants) only",
+                        self.method.name()
+                    ),
+                ));
+            }
+            if self.opts.precond != PrecondKind::None {
+                return Err(invalid(
+                    field,
+                    format!(
+                        "checkpoint/scrub cover the unpreconditioned classic loops only; \
+                         precond '{}' is not supported",
+                        self.opts.precond.name()
+                    ),
+                ));
+            }
+        }
         Ok(())
     }
 
@@ -426,8 +454,18 @@ impl RunSpec {
         );
         m.insert("inner".to_string(), Json::Num(self.opts.inner_iters as f64));
         m.insert("opts".to_string(), Json::Obj(opts));
-        // failure-taxonomy knobs are emitted only when non-default, so
-        // fault-free specs serialise byte-identically to older releases
+        // failure-taxonomy and recovery knobs are emitted only when
+        // non-default, so fault-free specs serialise byte-identically to
+        // older releases
+        if self.opts.checkpoint_every > 0 {
+            m.insert(
+                "checkpoint".to_string(),
+                Json::Num(self.opts.checkpoint_every as f64),
+            );
+        }
+        if self.opts.scrub_every > 0 {
+            m.insert("scrub".to_string(), Json::Num(self.opts.scrub_every as f64));
+        }
         if self.deadlock_timeout_ms > 0 {
             m.insert(
                 "deadlock_timeout_ms".to_string(),
@@ -481,7 +519,7 @@ impl RunSpec {
             j,
             &[
                 "grid", "stencil", "method", "ranks", "exec", "transport", "backend", "kernel",
-                "precond", "inner", "opts", "fault", "deadlock_timeout_ms",
+                "precond", "inner", "opts", "fault", "deadlock_timeout_ms", "checkpoint", "scrub",
             ],
             "spec",
         )?;
@@ -592,6 +630,12 @@ impl RunSpec {
                 };
             }
         }
+        if let Some(x) = opt_usize(j, "checkpoint")? {
+            spec.opts.checkpoint_every = x;
+        }
+        if let Some(x) = opt_usize(j, "scrub")? {
+            spec.opts.scrub_every = x;
+        }
         if let Some(x) = opt_usize(j, "deadlock_timeout_ms")? {
             spec.deadlock_timeout_ms = x as u64;
         }
@@ -654,6 +698,12 @@ impl RunSpec {
                 self.fault.seed,
                 self.fault.faults.len()
             ));
+        }
+        if self.opts.checkpoint_every > 0 {
+            d.push_str(&format!(" checkpoint={}", self.opts.checkpoint_every));
+        }
+        if self.opts.scrub_every > 0 {
+            d.push_str(&format!(" scrub={}", self.opts.scrub_every));
         }
         if self.deadlock_timeout_ms > 0 {
             d.push_str(&format!(" deadlock_timeout_ms={}", self.deadlock_timeout_ms));
@@ -972,6 +1022,22 @@ impl RunSpecBuilder {
     /// (`--deadlock-timeout-ms`); 0 keeps the env/default resolution.
     pub fn deadlock_timeout_ms(mut self, ms: u64) -> Self {
         self.spec.deadlock_timeout_ms = ms;
+        self
+    }
+
+    /// Snapshot a rank-consistent checkpoint every `every` completed
+    /// iterations (`--checkpoint`); 0 (the default) disables rollback
+    /// recovery entirely.
+    pub fn checkpoint_every(mut self, every: usize) -> Self {
+        self.spec.opts.checkpoint_every = every;
+        self
+    }
+
+    /// Verify allreduce checksums every iteration and recompute the true
+    /// residual every `every` iterations (`--scrub`); 0 (the default)
+    /// disables silent-corruption detection.
+    pub fn scrub_every(mut self, every: usize) -> Self {
+        self.spec.opts.scrub_every = every;
         self
     }
 
@@ -1355,6 +1421,51 @@ mod tests {
             matches!(err, SpecError::Invalid { field: "divergence_ratio", .. }),
             "{err}"
         );
+    }
+
+    #[test]
+    fn checkpoint_scrub_round_trip_and_default_emission() {
+        // default specs must not grow new keys (byte-stability)
+        let plain = RunSpec::builder().method_str("cg").build().unwrap();
+        let text = plain.to_json_string();
+        assert!(!text.contains("checkpoint"), "{text}");
+        assert!(!text.contains("scrub"), "{text}");
+
+        let spec = RunSpec::builder()
+            .method_str("bicgstab")
+            .checkpoint_every(25)
+            .scrub_every(10)
+            .build()
+            .unwrap();
+        let back = RunSpec::from_json_str(&spec.to_json_string()).unwrap();
+        assert_eq!(back, spec, "{}", spec.to_json_string());
+        assert_eq!(back.opts.checkpoint_every, 25);
+        assert_eq!(back.opts.scrub_every, 10);
+        let d = spec.describe();
+        assert!(d.contains("checkpoint=25"), "{d}");
+        assert!(d.contains("scrub=10"), "{d}");
+    }
+
+    #[test]
+    fn checkpoint_requires_a_recovery_capable_unpreconditioned_method() {
+        for m in ["cg-nb", "gs", "bicgstab-b1", "multisplit"] {
+            let err = RunSpec::builder()
+                .method_str(m)
+                .checkpoint_every(10)
+                .build()
+                .unwrap_err();
+            assert!(
+                matches!(err, SpecError::Invalid { field: "checkpoint", .. }),
+                "{m}: {err}"
+            );
+        }
+        let err = RunSpec::builder()
+            .method_str("cg")
+            .precond_str("jacobi")
+            .scrub_every(5)
+            .build()
+            .unwrap_err();
+        assert!(matches!(err, SpecError::Invalid { field: "scrub", .. }), "{err}");
     }
 
     #[test]

@@ -18,11 +18,16 @@ use std::rc::Rc;
 use crate::exec::{ExecSpec, Executor, ThreadBudget, ThreadLease};
 use crate::mesh::Grid3;
 use crate::runtime::{Runtime, XlaCompute};
-use crate::simmpi::{TransportKind, WorldStats};
-use crate::solvers::{NoopObserver, Observer, Problem, SolveStats};
+use crate::simmpi::{FaultPlan, TransportKind, WorldStats};
+use crate::solvers::{NoopObserver, Observer, Problem, SolveFailure, SolveStats};
 use crate::sparse::StencilKind;
 
 use super::{BackendKind, RunSpec, SolveError, SpecError};
+
+/// Bound on in-session rollback resumes per run: a fault that keeps
+/// recurring past this many warm restarts is not transient, and the
+/// structured error surfaces instead of looping.
+const MAX_ROLLBACKS: usize = 3;
 
 struct CacheEntry {
     grid: Grid3,
@@ -193,30 +198,82 @@ impl Session {
         // knobs must be (re)installed from the spec every time
         pb.fault = spec.fault.clone();
         pb.deadlock_timeout_ms = spec.deadlock_timeout_ms;
-        let stats = match spec.backend {
-            BackendKind::Native => {
-                let execs = Self::execs_in(exec_cache, *exec_cache_limit, &spec.exec, spec.ranks);
-                pb.solve_hybrid_execs_observed(spec.method, &spec.opts, execs, spec.transport, obs)
+        // snapshots left by an earlier run on this cached assembly must
+        // never feed this run's rollback chain — unless the caller (the
+        // service scheduler's warm resume) deliberately installed them
+        // and armed the resume
+        let service_resume = pb.resume_armed();
+        if !service_resume {
+            pb.clear_checkpoints();
+        }
+        // rollback retry chain: a transport failure or a detected
+        // corruption with a live rank-consistent checkpoint resumes from
+        // the snapshot instead of surfacing, up to [`MAX_ROLLBACKS`]
+        // times. Injected faults are one-shot transients: retry attempts
+        // run with the plan cleared (the next `run` reinstalls it from
+        // the spec), so a recovered solve replays the fault-free tail
+        // bitwise.
+        let mut rollbacks = 0usize;
+        let mut corruptions = 0usize;
+        let mut checkpoints = 0usize;
+        let mut resumed_from: Option<usize> = None;
+        let mut stats = loop {
+            let attempt = match spec.backend {
+                BackendKind::Native => {
+                    let execs =
+                        Self::execs_in(exec_cache, *exec_cache_limit, &spec.exec, spec.ranks);
+                    pb.solve_hybrid_execs_observed(
+                        spec.method,
+                        &spec.opts,
+                        execs,
+                        spec.transport,
+                        obs,
+                    )
+                }
+                BackendKind::Xla => {
+                    // lockstep-only (validated above): the PJRT client is
+                    // shared across the serialised rank bodies
+                    debug_assert_eq!(spec.transport, TransportKind::Lockstep);
+                    let rt = rt.clone().expect("loaded above for the xla backend");
+                    let (n, n_ext) = {
+                        let st = &pb.ranks[0];
+                        (st.n(), st.sys.part.n_ext())
+                    };
+                    let mut xc =
+                        XlaCompute::new(rt, n, spec.stencil.width(), n_ext).map_err(|e| {
+                            SolveError::Backend {
+                                backend: "xla",
+                                reason: format!(
+                                    "{e} (see `hlam sizes` for available artifact sizes)"
+                                ),
+                            }
+                        })?;
+                    let exec = spec.exec.build();
+                    pb.solve_with_observed(spec.method, &spec.opts, &mut xc, &exec, obs)
+                }
+            };
+            checkpoints += attempt.checkpoints;
+            corruptions += attempt.corruptions;
+            let recoverable = matches!(
+                attempt.failure,
+                Some(SolveFailure::Transport { .. } | SolveFailure::Corrupted { .. })
+            );
+            if recoverable && rollbacks < MAX_ROLLBACKS {
+                if let Some(at) = pb.resume_from_checkpoint() {
+                    rollbacks += 1;
+                    resumed_from = Some(at);
+                    pb.fault = FaultPlan::default();
+                    continue;
+                }
             }
-            BackendKind::Xla => {
-                // lockstep-only (validated above): the PJRT client is
-                // shared across the serialised rank bodies
-                debug_assert_eq!(spec.transport, TransportKind::Lockstep);
-                let rt = rt.expect("loaded above for the xla backend");
-                let (n, n_ext) = {
-                    let st = &pb.ranks[0];
-                    (st.n(), st.sys.part.n_ext())
-                };
-                let mut xc = XlaCompute::new(rt, n, spec.stencil.width(), n_ext).map_err(|e| {
-                    SolveError::Backend {
-                        backend: "xla",
-                        reason: format!("{e} (see `hlam sizes` for available artifact sizes)"),
-                    }
-                })?;
-                let exec = spec.exec.build();
-                pb.solve_with_observed(spec.method, &spec.opts, &mut xc, &exec, obs)
-            }
+            break attempt;
         };
+        stats.checkpoints = checkpoints;
+        stats.rollbacks = rollbacks;
+        stats.corruptions = corruptions;
+        if resumed_from.is_some() {
+            stats.resumed_from = resumed_from;
+        }
         let world = pb.stats.clone();
         self.last_world = Some(world);
         // a structured runtime failure outranks the partial stats: the
@@ -516,6 +573,41 @@ mod tests {
         // tightening the limit prunes immediately
         s.set_exec_cache_limit(1);
         assert_eq!(s.cached_executor_sets(), 1);
+    }
+
+    #[test]
+    fn rollback_recovers_silent_corruption_bitwise() {
+        let mk = |f: &dyn Fn(crate::api::RunSpecBuilder) -> crate::api::RunSpecBuilder| {
+            f(RunSpec::builder().grid_str("4x4x8").ranks(2).method_str("jacobi"))
+                .build()
+                .unwrap()
+        };
+        let clean = Session::new().run(&mk(&|b| b)).unwrap();
+        assert!(clean.iterations > 8, "test needs a longer solve");
+        // a silent skew on rank 0's 6th residual contribution: detected
+        // by the sealed checksum, rolled back to the iteration-4
+        // snapshot, replayed clean — bitwise equal to the unfaulted run
+        let mut s = Session::new();
+        let rec = s
+            .run(&mk(&|b| {
+                b.checkpoint_every(2).scrub_every(1).fault_str("silent-allreduce,0,5")
+            }))
+            .unwrap();
+        assert_eq!(rec.rollbacks, 1);
+        assert_eq!(rec.corruptions, 1);
+        assert_eq!(rec.resumed_from, Some(4));
+        assert!(rec.checkpoints >= 2, "both cadence points must snapshot");
+        assert_eq!(rec.iterations, clean.iterations);
+        assert_eq!(rec.history.len(), clean.history.len());
+        for (a, b) in rec.history.iter().zip(&clean.history) {
+            assert_eq!(a.to_bits(), b.to_bits(), "recovered tail diverged");
+        }
+        // without a checkpoint the same fault surfaces as the taxonomy
+        // error instead of looping
+        match s.run(&mk(&|b| b.scrub_every(1).fault_str("silent-allreduce,0,5"))) {
+            Err(SolveError::CorruptionDetected { iteration, .. }) => assert_eq!(iteration, 5),
+            other => panic!("expected corruption error, got {other:?}"),
+        }
     }
 
     #[test]

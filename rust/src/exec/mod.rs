@@ -37,7 +37,7 @@ pub mod workspace;
 
 pub use budget::{ThreadBudget, ThreadLease};
 pub use pool::DagTask;
-pub use workspace::IterationWorkspace;
+pub use workspace::{stage_copy, IterationWorkspace};
 use pool::WorkerPool;
 use team::ThreadTeam;
 

@@ -48,6 +48,17 @@ pub struct IterationWorkspace {
     pub halo_stage: Vec<f64>,
 }
 
+/// Capacity-preserving refill of a staging buffer: clear + extend, so
+/// repeated stagings of a same-shaped source never reallocate after the
+/// first. This is the one idiom behind every reused buffer in the
+/// workspace, and the checkpoint tier stages its snapshots through it
+/// (DESIGN.md §13) — the "zero allocation after the first snapshot"
+/// argument lives here.
+pub fn stage_copy(dst: &mut Vec<f64>, src: &[f64]) {
+    dst.clear();
+    dst.extend_from_slice(src);
+}
+
 impl IterationWorkspace {
     pub fn new() -> Self {
         IterationWorkspace::default()
@@ -194,5 +205,19 @@ mod tests {
         ws.partials.clear();
         ws.partials.resize(64, 1.0);
         assert_eq!(ws.partials.capacity(), cap);
+    }
+
+    #[test]
+    fn stage_copy_reuses_capacity() {
+        let src: Vec<f64> = (0..48).map(|i| i as f64).collect();
+        let mut dst = Vec::new();
+        stage_copy(&mut dst, &src);
+        assert_eq!(dst, src);
+        let cap = dst.capacity();
+        let ptr = dst.as_ptr();
+        stage_copy(&mut dst, &src[..32]);
+        assert_eq!(&dst[..], &src[..32]);
+        assert_eq!(dst.capacity(), cap);
+        assert_eq!(dst.as_ptr(), ptr, "same-or-smaller refill must not reallocate");
     }
 }

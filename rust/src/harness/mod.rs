@@ -321,26 +321,27 @@ fn write_file(out_dir: &Path, name: &str, content: &str) {
 /// counters land in a parallel `measured` array (index-matched with
 /// `runs`) so the replayable specs stay strict-parse clean: the spec
 /// already records the resolved precond/inner configuration, the
-/// measured entry adds what only a run can know — `overlapped_rows`,
-/// the halo rows actually hidden behind interior compute.
+/// measured entry adds what only a run can know — `overlapped_rows`
+/// (halo rows actually hidden behind interior compute) and the recovery
+/// counters (`restarts`, `rollbacks`, `corruptions`, `checkpoints`).
 fn spec_sidecar(
     out_dir: &Path,
     csv_name: &str,
     hopts: &HarnessOpts,
-    runs: &[(RunSpec, WorldStats)],
+    runs: &[(RunSpec, SolveStats, WorldStats)],
 ) {
     let mut m = BTreeMap::new();
     m.insert("csv".to_string(), Json::Str(csv_name.to_string()));
     m.insert("harness".to_string(), hopts.to_json());
     m.insert(
         "runs".to_string(),
-        Json::Arr(runs.iter().map(|(spec, _)| spec.to_json()).collect()),
+        Json::Arr(runs.iter().map(|(spec, _, _)| spec.to_json()).collect()),
     );
     m.insert(
         "measured".to_string(),
         Json::Arr(
             runs.iter()
-                .map(|(spec, world)| {
+                .map(|(spec, stats, world)| {
                     let mut r = BTreeMap::new();
                     r.insert(
                         "overlapped_rows".to_string(),
@@ -353,6 +354,19 @@ fn spec_sidecar(
                     r.insert(
                         "inner".to_string(),
                         Json::Num(spec.opts.inner_iters as f64),
+                    );
+                    r.insert("restarts".to_string(), Json::Num(stats.restarts as f64));
+                    r.insert(
+                        "rollbacks".to_string(),
+                        Json::Num(stats.rollbacks as f64),
+                    );
+                    r.insert(
+                        "corruptions".to_string(),
+                        Json::Num(stats.corruptions as f64),
+                    );
+                    r.insert(
+                        "checkpoints".to_string(),
+                        Json::Num(stats.checkpoints as f64),
                     );
                     Json::Obj(r)
                 })
@@ -429,7 +443,7 @@ pub fn iteration_table(out_dir: &Path, hopts: &HarnessOpts) -> String {
     // one session for the whole table: the {grid, stencil, ranks}
     // assembly is built once per stencil and reused by all 8 methods
     let mut session = Session::new();
-    let mut runs: Vec<(RunSpec, WorldStats)> = Vec::new();
+    let mut runs: Vec<(RunSpec, SolveStats, WorldStats)> = Vec::new();
     // user-controlled --ranks can contradict the table grid; surface a
     // structured message instead of panicking mid-table
     let probe = hopts.run_spec(
@@ -467,7 +481,7 @@ pub fn iteration_table(out_dir: &Path, hopts: &HarnessOpts) -> String {
             // pre-validated above (specs differ only in method/opts)
             let stats = session.run(&spec).expect("pre-validated spec");
             let world = session.world_stats().cloned().unwrap_or_default();
-            runs.push((spec, world));
+            runs.push((spec, stats.clone(), world));
             let paper = paper_iterations(method, kind);
             let _ = writeln!(
                 csv,
@@ -912,7 +926,7 @@ pub fn gs_iteration_table(out_dir: &Path, hopts: &HarnessOpts) -> String {
     ];
     // one session: the 4 variants share one assembly
     let mut session = Session::new();
-    let mut runs: Vec<(RunSpec, WorldStats)> = Vec::new();
+    let mut runs: Vec<(RunSpec, SolveStats, WorldStats)> = Vec::new();
     let probe = hopts.run_spec(
         Method::parse("gs").unwrap(),
         grid,
@@ -939,7 +953,7 @@ pub fn gs_iteration_table(out_dir: &Path, hopts: &HarnessOpts) -> String {
         );
         let stats = session.run(&spec).expect("pre-validated spec");
         let world = session.world_stats().cloned().unwrap_or_default();
-        runs.push((spec, world));
+        runs.push((spec, stats.clone(), world));
         let _ = writeln!(csv, "{label},{},{paper}", stats.iterations);
         let _ = writeln!(
             out,

@@ -89,6 +89,8 @@ fn usage() {
         \x20        --restarts N (BiCGStab breakdown restarts) --divergence-ratio R\n\
         \x20        --fault kind,rank,at[,delay_ms] --fault-seed S (deterministic chaos)\n\
         \x20        --deadlock-timeout-ms N (threaded-transport watchdog override)\n\
+        \x20        --checkpoint N (rollback snapshot every N iterations; 0 = off)\n\
+        \x20        --scrub N (ABFT corruption scrub cadence; 0 = off)\n\
         \x20        --spec FILE (replay a saved run) --emit-spec [FILE] (save/print it)\n\
          serve   --stdin (NDJSON requests on stdin, responses on stdout)\n\
         \x20        --socket PATH (Unix-domain-socket listener; combinable with --stdin)\n\
@@ -194,7 +196,9 @@ fn resolve_spec(args: &Args) -> Result<RunSpec, CliError> {
         .precond_str(&args.str_or("precond", "none"))
         .inner_iters(num(args, "inner-iters", 1)?)
         .fault_seed(num(args, "fault-seed", 0u64)?)
-        .deadlock_timeout_ms(num(args, "deadlock-timeout-ms", 0u64)?);
+        .deadlock_timeout_ms(num(args, "deadlock-timeout-ms", 0u64)?)
+        .checkpoint_every(num(args, "checkpoint", 0)?)
+        .scrub_every(num(args, "scrub", 0)?);
     if let Some(f) = args.get("fault") {
         builder = builder.fault_str(f);
     }
@@ -223,6 +227,17 @@ fn cmd_solve(args: &Args) -> Result<(), CliError> {
         "iterations={} converged={} rel_residual={:.3e} x_error={:.3e} restarts={}",
         stats.iterations, stats.converged, stats.rel_residual, stats.x_error, stats.restarts
     );
+    if spec.opts.checkpoint_every > 0 || spec.opts.scrub_every > 0 {
+        println!(
+            "checkpoints={} rollbacks={} corruptions={} resumed_from={}",
+            stats.checkpoints,
+            stats.rollbacks,
+            stats.corruptions,
+            stats
+                .resumed_from
+                .map_or_else(|| "-".to_string(), |at| at.to_string())
+        );
+    }
     let world = session.world_stats().cloned().unwrap_or_default();
     println!(
         "p2p_msgs={} p2p_bytes={} allreduces={} rank_threads={} max_concurrent_ranks={} \

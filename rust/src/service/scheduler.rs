@@ -27,7 +27,7 @@ use std::time::{Duration, Instant};
 
 use crate::api::{BackendKind, RunSpec, Session};
 use crate::exec::ThreadBudget;
-use crate::solvers::Observer;
+use crate::solvers::{Observer, SolverCheckpoint};
 
 use super::wire::{history_digest, JobOk, RejectCode, Request, Response, SolveRequest};
 
@@ -103,6 +103,13 @@ pub struct Counters {
     pub retried: u64,
     /// Jobs ended by their wall-clock deadline (code `deadline`).
     pub deadlines: u64,
+    /// Rank-consistent checkpoints captured across all completed jobs.
+    pub checkpoints: u64,
+    /// Rollback resumes: session-level retry-chain resumes plus warm
+    /// resumes of panicked jobs on rebuilt sessions.
+    pub rollbacks: u64,
+    /// Silent-corruption detections (ABFT scrub), recovered or not.
+    pub corruption_detected: u64,
 }
 
 /// Deterministic per-job "timeout": stops a solve after `cap` recorded
@@ -185,6 +192,12 @@ struct Job {
     deadline_ms: Option<u64>,
     /// Retry ordinal: 0 on first execution, bumped on panic requeue.
     attempt: usize,
+    /// Warm-resume payload: rank snapshots salvaged from a panicked
+    /// attempt's session, installed into the rebuilt session so the
+    /// retry resumes mid-solve instead of from iteration 0.
+    resume: Option<Vec<Box<SolverCheckpoint>>>,
+    /// Warm resumes already performed for this job across requeues.
+    rollbacks: usize,
     lanes: usize,
     plan: String,
     submitted: Instant,
@@ -379,6 +392,8 @@ impl Service {
             iter_budget,
             deadline_ms,
             attempt: 0,
+            resume: None,
+            rollbacks: 0,
             lanes,
             plan,
             submitted: Instant::now(),
@@ -540,7 +555,7 @@ fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
 fn worker_loop(w: usize, inner: &Inner, budget: &ThreadBudget, cfg: &ServiceConfig) {
     let mut session = fresh_session(budget, cfg);
     loop {
-        let job = {
+        let mut job = {
             let mut st = inner.state.lock().unwrap();
             loop {
                 if !st.paused {
@@ -563,6 +578,17 @@ fn worker_loop(w: usize, inner: &Inner, budget: &ThreadBudget, cfg: &ServiceConf
         // (routing sends every job of a plan here, so the second one
         // reuses the first one's system)
         let ptr_before = session.assembly_ptr(job.spec.grid, job.spec.stencil, job.spec.ranks);
+        // a requeued attempt carrying salvaged snapshots installs them
+        // into this (rebuilt) session's problem and arms the one-shot
+        // resume, so only the iterations since the last checkpoint are
+        // re-executed
+        if let Some(ckpts) = job.resume.take() {
+            let pb = session.problem(job.spec.grid, job.spec.stencil, job.spec.ranks);
+            pb.install_checkpoints(ckpts);
+            if pb.resume_from_checkpoint().is_none() {
+                pb.clear_checkpoints();
+            }
+        }
         let deadline = job.deadline_ms.map(DeadlineGuard::new);
         let t0 = Instant::now();
         // the session's shared budget leases `lanes` while solving —
@@ -579,6 +605,22 @@ fn worker_loop(w: usize, inner: &Inner, budget: &ThreadBudget, cfg: &ServiceConf
         let result = match outcome {
             Ok(result) => result,
             Err(payload) => {
+                // before discarding the poisoned session, salvage any
+                // rank-consistent snapshots the dead solve captured:
+                // checkpoint slots are written only at iteration
+                // boundaries, so they are sound even though the solve
+                // itself panicked mid-flight
+                let salvaged = if job.spec.opts.checkpoint_every > 0
+                    && session
+                        .assembly_ptr(job.spec.grid, job.spec.stencil, job.spec.ranks)
+                        .is_some()
+                {
+                    session
+                        .problem(job.spec.grid, job.spec.stencil, job.spec.ranks)
+                        .take_checkpoints()
+                } else {
+                    None
+                };
                 // the panicked session may hold arbitrary mid-solve
                 // state: discard it wholesale and rebuild (self-healing
                 // at the cost of re-warming the worker's caches)
@@ -589,8 +631,12 @@ fn worker_loop(w: usize, inner: &Inner, budget: &ThreadBudget, cfg: &ServiceConf
                     let mut st = inner.state.lock().unwrap();
                     st.counters.panics += 1;
                     st.counters.retried += 1;
-                    let mut job = job;
                     job.attempt += 1;
+                    if salvaged.is_some() {
+                        job.resume = salvaged;
+                        job.rollbacks += 1;
+                        st.counters.rollbacks += 1;
+                    }
                     st.pending += 1;
                     st.running -= 1;
                     st.queues[w].push_back(job);
@@ -650,6 +696,10 @@ fn worker_loop(w: usize, inner: &Inner, budget: &ThreadBudget, cfg: &ServiceConf
                     converged: stats.converged,
                     rel_residual: stats.rel_residual,
                     restarts: stats.restarts,
+                    checkpoints: stats.checkpoints,
+                    rollbacks: job.rollbacks + stats.rollbacks,
+                    resumed_from: stats.resumed_from,
+                    corruptions: stats.corruptions,
                     history_len: stats.history.len(),
                     history_digest: history_digest(&stats.history),
                     rel_residual_bits: stats.rel_residual.to_bits(),
@@ -679,6 +729,11 @@ fn worker_loop(w: usize, inner: &Inner, budget: &ThreadBudget, cfg: &ServiceConf
             match &resp {
                 Response::Ok(ok) => {
                     st.counters.completed += 1;
+                    st.counters.checkpoints += ok.checkpoints as u64;
+                    // warm resumes were already counted at requeue time;
+                    // only the session-level retry chain's share is new
+                    st.counters.rollbacks += (ok.rollbacks - job.rollbacks) as u64;
+                    st.counters.corruption_detected += ok.corruptions as u64;
                     if ok.batch_hit {
                         st.counters.batch_hits += 1;
                     } else {
@@ -689,6 +744,12 @@ fn worker_loop(w: usize, inner: &Inner, budget: &ThreadBudget, cfg: &ServiceConf
                     code: "deadline", ..
                 } => {
                     st.counters.deadlines += 1;
+                    st.counters.errors += 1;
+                }
+                Response::Error {
+                    code: "corruption", ..
+                } => {
+                    st.counters.corruption_detected += 1;
                     st.counters.errors += 1;
                 }
                 _ => st.counters.errors += 1,

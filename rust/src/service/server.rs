@@ -71,8 +71,9 @@ pub fn serve(opts: &ServeOptions) -> std::io::Result<Counters> {
 fn print_summary(c: &Counters) {
     eprintln!(
         "hlam serve: submitted={} accepted={} completed={} rejected={} cancelled={} \
-         errors={} panics={} retried={} deadlines={} batch_hits={} batch_misses={} \
-         distinct_plans={} peak_lanes={}/{}",
+         errors={} panics={} retried={} deadlines={} checkpoints={} rollbacks={} \
+         corruption_detected={} batch_hits={} batch_misses={} distinct_plans={} \
+         peak_lanes={}/{}",
         c.submitted,
         c.accepted,
         c.completed,
@@ -82,6 +83,9 @@ fn print_summary(c: &Counters) {
         c.panics,
         c.retried,
         c.deadlines,
+        c.checkpoints,
+        c.rollbacks,
+        c.corruption_detected,
         c.batch_hits,
         c.batch_misses,
         c.distinct_plans,

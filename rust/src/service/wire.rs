@@ -177,6 +177,15 @@ pub struct JobOk {
     pub converged: bool,
     pub rel_residual: f64,
     pub restarts: usize,
+    /// Checkpoints captured while solving (0 with checkpointing off).
+    pub checkpoints: usize,
+    /// Rollback resumes (session retry chain plus service warm resumes)
+    /// behind this result; 0 for an uninterrupted solve.
+    pub rollbacks: usize,
+    /// Iteration ordinal the most recent rollback resumed from.
+    pub resumed_from: Option<usize>,
+    /// Silent-corruption detections recovered on the way to this result.
+    pub corruptions: usize,
     pub history_len: usize,
     /// [`history_digest`] of the full convergence history.
     pub history_digest: u64,
@@ -258,6 +267,18 @@ impl Response {
                 m.insert("converged".to_string(), Json::Bool(ok.converged));
                 m.insert("rel_residual".to_string(), Json::Num(ok.rel_residual));
                 m.insert("restarts".to_string(), Json::Num(ok.restarts as f64));
+                m.insert(
+                    "checkpoints".to_string(),
+                    Json::Num(ok.checkpoints as f64),
+                );
+                m.insert("rollbacks".to_string(), Json::Num(ok.rollbacks as f64));
+                if let Some(at) = ok.resumed_from {
+                    m.insert("resumed_from".to_string(), Json::Num(at as f64));
+                }
+                m.insert(
+                    "corruptions".to_string(),
+                    Json::Num(ok.corruptions as f64),
+                );
                 m.insert("history_len".to_string(), Json::Num(ok.history_len as f64));
                 m.insert(
                     "history_digest".to_string(),

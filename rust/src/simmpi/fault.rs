@@ -35,11 +35,20 @@ pub enum FaultKind {
     /// Sleep `delay_ms` before posting the rank's `at`-th allreduce
     /// contribution. Never changes numerics.
     DelayAllreduce,
-    /// Replace the rank's `at`-th allreduce contribution with NaN
-    /// lanes. The fold propagates NaN to every rank identically, so the
-    /// solvers' runtime guards see the same non-finite scalar on all
-    /// ranks and fail in lockstep (no transport deadlock).
+    /// Replace the rank's `at`-th allreduce contribution's data lanes
+    /// with NaN (the checksum lane, sealed before injection, is left
+    /// intact — the fault models corruption in flight). The fold
+    /// propagates NaN to every rank identically, so the solvers'
+    /// runtime guards see the same non-finite scalar on all ranks and
+    /// fail in lockstep (no transport deadlock).
     CorruptAllreduce,
+    /// Skew the rank's `at`-th allreduce contribution's data lanes by a
+    /// small finite factor, leaving the checksum lane intact — a
+    /// *silent* corruption: every value stays finite, so only the
+    /// checksum scrub (`--scrub`) can see it. With scrubbing off the
+    /// solve quietly converges to a wrong-history answer, which is
+    /// exactly the failure mode this kind exists to demonstrate.
+    SilentAllreduce,
 }
 
 impl FaultKind {
@@ -50,6 +59,7 @@ impl FaultKind {
             "panic" => FaultKind::Panic,
             "delay-allreduce" => FaultKind::DelayAllreduce,
             "corrupt-allreduce" => FaultKind::CorruptAllreduce,
+            "silent-allreduce" => FaultKind::SilentAllreduce,
             _ => return None,
         })
     }
@@ -61,12 +71,19 @@ impl FaultKind {
             FaultKind::Panic => "panic",
             FaultKind::DelayAllreduce => "delay-allreduce",
             FaultKind::CorruptAllreduce => "corrupt-allreduce",
+            FaultKind::SilentAllreduce => "silent-allreduce",
         }
     }
 
     /// Every parseable kind, for did-you-mean suggestions.
-    pub const NAMES: [&'static str; 5] =
-        ["stall", "abort", "panic", "delay-allreduce", "corrupt-allreduce"];
+    pub const NAMES: [&'static str; 6] = [
+        "stall",
+        "abort",
+        "panic",
+        "delay-allreduce",
+        "corrupt-allreduce",
+        "silent-allreduce",
+    ];
 }
 
 /// One injected fault: `kind` at `rank`'s `at`-th operation (0-based;

@@ -37,6 +37,12 @@ use super::{
     WorldStats,
 };
 
+/// Relative lane skew applied by [`FaultKind::SilentAllreduce`]: large
+/// enough that the checksum scrub detects it robustly above fold
+/// rounding (which is ~1e-14 × scale), small enough that every value
+/// stays finite and plausible — the definition of a silent error.
+const SILENT_SKEW: f64 = 1e-3;
+
 /// One in-flight allreduce round on a (comm, tag) key. Rounds exist
 /// because the ISODD split reuses keys every second iteration while a
 /// fast rank may already be two allreduces ahead of a slow one.
@@ -268,10 +274,13 @@ impl RankTransport {
     }
 
     /// Fault hook on every allreduce contribution: delays sleep before
-    /// posting (numerics untouched), corruptions replace the payload
-    /// with NaN lanes — the fixed fold propagates them to every rank
-    /// identically, so solver guards fail in lockstep instead of
-    /// deadlocking the transport.
+    /// posting (numerics untouched), corruptions mutate the data lanes
+    /// *in place* — NaN for the loud kind, a finite skew for the silent
+    /// one — leaving any sealed checksum lane intact, since the fault
+    /// models damage in flight after the contributor checksummed it.
+    /// The fixed fold propagates the damage to every rank identically,
+    /// so solver guards fail in lockstep instead of deadlocking the
+    /// transport.
     fn inject_allreduce_faults(&mut self, partial: Payload) -> Payload {
         if self.faults.is_empty() {
             return partial;
@@ -288,8 +297,10 @@ impl RankTransport {
                     std::thread::sleep(Duration::from_millis(f.delay_ms));
                 }
                 FaultKind::CorruptAllreduce => {
-                    let lanes = [f64::NAN; super::MAX_REDUCE_LEN];
-                    out = Payload::from_slice(&lanes[..partial.len()]);
+                    out.corrupt_lanes_nan();
+                }
+                FaultKind::SilentAllreduce => {
+                    out.skew_lanes(SILENT_SKEW);
                 }
                 _ => {}
             }
@@ -836,6 +847,47 @@ mod tests {
             })
             .expect("corruption is not a transport failure");
             assert!(got.iter().all(|v| v.is_nan()), "{kind:?}: {got:?}");
+        }
+    }
+
+    #[test]
+    fn corruption_kinds_break_sealed_checksum_only_when_injected() {
+        // Every rank seals its contribution; the injected kinds mutate
+        // lanes after sealing, so the folded payload's checksum drifts —
+        // finite for the silent kind, infinite for the NaN kind — while
+        // a clean round folds with only reassociation rounding.
+        for (plan_kind, min_drift) in [
+            (Some(FaultKind::SilentAllreduce), 1e-6),
+            (Some(FaultKind::CorruptAllreduce), 1.0),
+            (None, 0.0),
+        ] {
+            let plan = match plan_kind {
+                Some(kind) => FaultPlan {
+                    seed: 0,
+                    faults: vec![Fault {
+                        kind,
+                        rank: 1,
+                        at: 0,
+                        delay_ms: 0,
+                    }],
+                },
+                None => FaultPlan::none(),
+            };
+            for kind in [TransportKind::Lockstep, TransportKind::Threaded] {
+                let (got, _) = try_per_rank(kind, 3, &plan, None, |tp| {
+                    let mut p = Payload::pair(1.0 + tp.rank() as f64, 0.5);
+                    p.seal();
+                    tp.allreduce(0, 0, p).check_drift()
+                })
+                .expect("corruption is not a transport failure");
+                for drift in got {
+                    if plan_kind.is_some() {
+                        assert!(drift > min_drift, "{kind:?}: drift {drift}");
+                    } else {
+                        assert!(drift < 1e-12, "{kind:?}: clean drift {drift}");
+                    }
+                }
+            }
         }
     }
 

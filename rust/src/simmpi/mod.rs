@@ -132,6 +132,15 @@ pub const MAX_REDUCE_LEN: usize = 2;
 pub struct Payload {
     vals: [f64; MAX_REDUCE_LEN],
     len: usize,
+    /// Duplicate-fold checksum lane (ABFT-style, DESIGN.md §13). Sealed
+    /// by recovery-aware callers to the lane sum *before* posting; the
+    /// fold accumulates it alongside the data lanes, so on a clean round
+    /// the folded `check` equals the sum of the folded lanes (both are
+    /// the same linear combination of the same rank contributions,
+    /// reassociated). A lane corrupted *after* sealing breaks the
+    /// identity and is detected at the consumer. Always carried, never
+    /// read unless a caller sealed it — the default path is unchanged.
+    check: f64,
 }
 
 impl Payload {
@@ -140,6 +149,7 @@ impl Payload {
         Payload {
             vals: [v, 0.0],
             len: 1,
+            check: 0.0,
         }
     }
 
@@ -148,6 +158,7 @@ impl Payload {
         Payload {
             vals: [a, b],
             len: 2,
+            check: 0.0,
         }
     }
 
@@ -159,7 +170,11 @@ impl Payload {
         );
         let mut vals = [0.0; MAX_REDUCE_LEN];
         vals[..s.len()].copy_from_slice(s);
-        Payload { vals, len: s.len() }
+        Payload {
+            vals,
+            len: s.len(),
+            check: 0.0,
+        }
     }
 
     /// All-zero payload of `len` lanes — the fold identity
@@ -169,15 +184,63 @@ impl Payload {
         Payload {
             vals: [0.0; MAX_REDUCE_LEN],
             len,
+            check: 0.0,
         }
     }
 
     /// Element-wise `self += p` — one step of the [`rank_fold`]
-    /// accumulation schedule.
+    /// accumulation schedule. The checksum lane folds with the data
+    /// lanes so the sealed-sum identity survives the reduction.
     pub fn accumulate(&mut self, p: &Payload) {
         assert_eq!(p.len(), self.len, "ragged allreduce");
         for i in 0..self.len {
             self.vals[i] += p.vals[i];
+        }
+        self.check += p.check;
+    }
+
+    /// Seal the checksum lane to the current lane sum. Call immediately
+    /// before posting the contribution; any later lane mutation (an
+    /// injected or real bit-flip) breaks `check == Σ lanes` at the
+    /// consumer.
+    pub fn seal(&mut self) {
+        self.check = self.vals[..self.len].iter().sum();
+    }
+
+    /// The folded checksum lane (meaningful only if every contributor
+    /// sealed).
+    pub fn check(&self) -> f64 {
+        self.check
+    }
+
+    /// Checksum drift of a folded payload: `|check − Σ lanes|`, with NaN
+    /// anywhere reported as infinite drift. Zero-ish (fold reassociation
+    /// rounding only) on a clean round where every rank sealed.
+    pub fn check_drift(&self) -> f64 {
+        let sum: f64 = self.vals[..self.len].iter().sum();
+        let drift = (self.check - sum).abs();
+        if drift.is_nan() {
+            f64::INFINITY
+        } else {
+            drift
+        }
+    }
+
+    /// Corrupt every data lane to NaN *in place*, leaving the checksum
+    /// lane untouched — models a fault that hits the payload after the
+    /// contributor sealed it (the hub's `corrupt-allreduce` injection).
+    pub fn corrupt_lanes_nan(&mut self) {
+        for v in &mut self.vals[..self.len] {
+            *v = f64::NAN;
+        }
+    }
+
+    /// Skew every data lane by a finite relative factor *in place*,
+    /// leaving the checksum lane untouched — models a silent (finite)
+    /// corruption that no non-finite guard can see.
+    pub fn skew_lanes(&mut self, rel: f64) {
+        for v in &mut self.vals[..self.len] {
+            *v *= 1.0 + rel;
         }
     }
 

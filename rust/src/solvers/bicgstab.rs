@@ -23,7 +23,10 @@
 //! histories bit for bit.
 
 use super::precond::{self, PrecondKind};
-use super::{Compute, DotWith, Observer, Ops, RankState, SolveOpts, SolveStats, SolverDriver};
+use super::{
+    Compute, DotWith, Observer, Ops, RankState, SolveOpts, SolveStats, SolverCheckpoint,
+    SolverDriver,
+};
 use crate::exec::Executor;
 use crate::simmpi::Transport;
 
@@ -49,7 +52,7 @@ fn key(k: usize, salt: usize) -> usize {
 fn reseed_shadow(
     st: &mut RankState,
     ops: &mut Ops<'_>,
-    drv: &SolverDriver<'_>,
+    drv: &mut SolverDriver<'_>,
     tp: &mut dyn Transport,
     n: usize,
     k: usize,
@@ -66,9 +69,10 @@ fn reseed_shadow(
         p_ext[..n].copy_from_slice(&r_ext[..n]);
         ops.dot(&r_ext[..n], &rprime[..n], n)
     };
-    drv.allreduce(tp, k, tag, part)
+    drv.allreduce_checked(tp, k, tag, part)
 }
 
+#[allow(clippy::too_many_arguments)]
 pub fn solve_rank(
     st: &mut RankState,
     tp: &mut dyn Transport,
@@ -77,18 +81,20 @@ pub fn solve_rank(
     backend: &mut dyn Compute,
     exec: &Executor,
     obs: &dyn Observer,
+    resume: bool,
 ) -> SolveStats {
     match variant {
         // `precond: none` must reproduce pre-precond histories
         // bit-for-bit — the legacy loop is entered untouched.
         BiVariant::Classic if opts.precond == PrecondKind::None => {
-            classic(st, tp, opts, backend, exec, obs)
+            classic(st, tp, opts, backend, exec, obs, resume)
         }
         BiVariant::Classic => preconditioned(st, tp, opts, backend, exec, obs),
         BiVariant::B1 => b1(st, tp, opts, backend, exec, obs),
     }
 }
 
+#[allow(clippy::too_many_arguments)]
 fn classic(
     st: &mut RankState,
     tp: &mut dyn Transport,
@@ -96,22 +102,44 @@ fn classic(
     backend: &mut dyn Compute,
     exec: &Executor,
     obs: &dyn Observer,
+    resume: bool,
 ) -> SolveStats {
     let mut drv = SolverDriver::new(exec, opts, obs, tp.rank());
     let mut ops = Ops::new(exec, opts, backend);
     let n = st.sys.n();
 
-    // r = b; r' = r; p = r; rho = (r', r)
-    st.r_ext[..n].copy_from_slice(&st.sys.b);
-    st.p_ext[..n].copy_from_slice(&st.sys.b);
-    st.rprime[..n].copy_from_slice(&st.sys.b);
-    let part = ops.dot(&st.rprime[..n], &st.r_ext[..n], n);
-    let mut rho = drv.allreduce(tp, 0, 30, part);
-    drv.conv.set_reference(rho); // (r,r) == (r',r) at start
-    let mut rr = rho;
-    let mut restarts = 0;
+    let (k0, mut rho, mut rr, mut restarts);
+    if resume {
+        // restore the owned rows of x, r, p, r' plus the carried (ρ, rr)
+        // and the restart budget already spent; Ap / s / As are
+        // recomputed before first use, and every rank resumes from the
+        // same ordinal, so the init allreduce below is skipped
+        // consistently on all ranks.
+        let c = st.ckpt.as_ref().expect("resume requires a checkpoint");
+        assert_eq!(c.method, "bicgstab", "checkpoint method mismatch");
+        st.x_ext[..n].copy_from_slice(&c.x);
+        st.r_ext[..n].copy_from_slice(&c.r);
+        st.p_ext[..n].copy_from_slice(&c.p);
+        st.rprime[..n].copy_from_slice(&c.rprime);
+        rho = c.scalars[0];
+        rr = c.scalars[1];
+        restarts = c.restarts;
+        k0 = c.resume_at;
+        drv.restore(c);
+    } else {
+        // r = b; r' = r; p = r; rho = (r', r)
+        st.r_ext[..n].copy_from_slice(&st.sys.b);
+        st.p_ext[..n].copy_from_slice(&st.sys.b);
+        st.rprime[..n].copy_from_slice(&st.sys.b);
+        let part = ops.dot(&st.rprime[..n], &st.r_ext[..n], n);
+        rho = drv.allreduce_checked(tp, 0, 30, part);
+        drv.conv.set_reference(rho); // (r,r) == (r',r) at start
+        rr = rho;
+        restarts = 0;
+        k0 = 0;
+    }
 
-    for k in 0..opts.max_iters {
+    for k in k0..opts.max_iters {
         if drv.pre_check(rr) {
             break;
         }
@@ -131,14 +159,14 @@ fn classic(
                 2 * k,
             )
         };
-        let ad = drv.allreduce(tp, k, 31, part);
+        let ad = drv.allreduce_checked(tp, k, 31, part);
         // ρ from BARRIER 3 and r'·Ap can both vanish when r' has lost
         // its correlation with r (the paper's §3.3 near-breakdown):
         // restart while budget remains, else fail structurally.
         if drv.is_breakdown(rho) || drv.is_breakdown(ad) {
             if restarts < opts.restarts {
                 restarts += 1;
-                rho = reseed_shadow(st, &mut ops, &drv, tp, n, k, 38);
+                rho = reseed_shadow(st, &mut ops, &mut drv, tp, n, k, 38);
                 continue;
             }
             let (what, v) = if drv.is_breakdown(rho) {
@@ -164,11 +192,11 @@ fn classic(
             let den = ops.dot_ordered(&as_[..n], &as_[..n], n, key(k, 2));
             (num, den)
         };
-        let (num, den) = drv.allreduce_pair(tp, k, 32, part);
+        let (num, den) = drv.allreduce_pair_checked(tp, k, 32, part);
         if drv.is_breakdown(den) {
             if restarts < opts.restarts {
                 restarts += 1;
-                rho = reseed_shadow(st, &mut ops, &drv, tp, n, k, 38);
+                rho = reseed_shadow(st, &mut ops, &mut drv, tp, n, k, 38);
                 continue;
             }
             drv.fail_breakdown("omega-den", den, k, restarts);
@@ -203,7 +231,7 @@ fn classic(
             let rr_p = ops.dot_ordered(&r_ext[..n], &r_ext[..n], n, key(k, 4));
             (rho_p, rr_p)
         };
-        let (rho_new, rr_new) = drv.allreduce_pair(tp, k, 33, part);
+        let (rho_new, rr_new) = drv.allreduce_pair_checked(tp, k, 33, part);
 
         // p = r + beta (p − omega·Ap)
         let beta = (rho_new / rho) * (alpha / omega);
@@ -216,7 +244,47 @@ fn classic(
         }
         rho = rho_new;
         rr = rr_new;
-        drv.record(k + 1, rr);
+        let done = drv.record(k + 1, rr);
+        // true-residual scrub: recompute ‖b − Ax‖² and compare against
+        // the recursive residual. Writes only Ar and tmp (dead scratch
+        // in this loop) and x's halo (never consumed), so the solve's
+        // trajectory is untouched.
+        if !done && drv.should_scrub(k + 1) {
+            let part = {
+                let RankState {
+                    sys, x_ext, ar, tmp, ..
+                } = st;
+                ops.halo_spmv(&sys.a, &sys.halo, tp, x_ext, ar, 2 * k);
+                ops.waxpby(1.0, &sys.b, -1.0, &ar[..n], 0.0, &mut tmp[..n], n);
+                ops.dot(&tmp[..n], &tmp[..n], n)
+            };
+            let res2_true = drv.allreduce_checked(tp, k, 46, part);
+            drv.scrub_residual(k + 1, res2_true);
+        }
+        if !done && drv.should_checkpoint(k + 1) {
+            let RankState {
+                ckpt,
+                x_ext,
+                r_ext,
+                p_ext,
+                rprime,
+                ..
+            } = st;
+            SolverCheckpoint::capture(
+                ckpt,
+                "bicgstab",
+                k + 1,
+                restarts,
+                [rho, rr],
+                &x_ext[..n],
+                &r_ext[..n],
+                &p_ext[..n],
+                &rprime[..n],
+                &drv.conv,
+                opts.max_iters,
+            );
+            drv.note_checkpoint();
+        }
     }
 
     drv.finish("bicgstab", restarts)
@@ -286,7 +354,7 @@ fn preconditioned(
         if drv.is_breakdown(rho) || drv.is_breakdown(ad) {
             if restarts < opts.restarts {
                 restarts += 1;
-                rho = reseed_shadow(st, &mut ops, &drv, tp, n, k, 39);
+                rho = reseed_shadow(st, &mut ops, &mut drv, tp, n, k, 39);
                 continue;
             }
             let (what, v) = if drv.is_breakdown(rho) {
@@ -326,7 +394,7 @@ fn preconditioned(
         if drv.is_breakdown(den) {
             if restarts < opts.restarts {
                 restarts += 1;
-                rho = reseed_shadow(st, &mut ops, &drv, tp, n, k, 39);
+                rho = reseed_shadow(st, &mut ops, &mut drv, tp, n, k, 39);
                 continue;
             }
             drv.fail_breakdown("omega-den", den, k, restarts);

@@ -25,7 +25,10 @@
 //! issue for the CG methods").
 
 use super::precond::{self, PrecondKind};
-use super::{Compute, DotWith, Observer, Ops, RankState, SolveOpts, SolveStats, SolverDriver};
+use super::{
+    Compute, DotWith, Observer, Ops, RankState, SolveOpts, SolveStats, SolverCheckpoint,
+    SolverDriver,
+};
 use crate::exec::Executor;
 use crate::simmpi::Transport;
 
@@ -35,6 +38,7 @@ pub enum CgVariant {
     NonBlocking,
 }
 
+#[allow(clippy::too_many_arguments)]
 pub fn solve_rank(
     st: &mut RankState,
     tp: &mut dyn Transport,
@@ -43,6 +47,7 @@ pub fn solve_rank(
     backend: &mut dyn Compute,
     exec: &Executor,
     obs: &dyn Observer,
+    resume: bool,
 ) -> SolveStats {
     match variant {
         // `precond: none` must reproduce pre-precond histories
@@ -50,13 +55,14 @@ pub fn solve_rank(
         // the preconditioned form is a separate function, not a branch
         // inside the loop.
         CgVariant::Classic if opts.precond == PrecondKind::None => {
-            classic(st, tp, opts, backend, exec, obs)
+            classic(st, tp, opts, backend, exec, obs, resume)
         }
         CgVariant::Classic => preconditioned(st, tp, opts, backend, exec, obs),
         CgVariant::NonBlocking => nonblocking(st, tp, opts, backend, exec, obs),
     }
 }
 
+#[allow(clippy::too_many_arguments)]
 fn classic(
     st: &mut RankState,
     tp: &mut dyn Transport,
@@ -64,19 +70,39 @@ fn classic(
     backend: &mut dyn Compute,
     exec: &Executor,
     obs: &dyn Observer,
+    resume: bool,
 ) -> SolveStats {
     let mut drv = SolverDriver::new(exec, opts, obs, tp.rank());
     let mut ops = Ops::new(exec, opts, backend);
     let n = st.sys.n();
 
-    // init: r = b; p = r; rr = (r, r)
-    st.r_ext[..n].copy_from_slice(&st.sys.b);
-    st.p_ext[..n].copy_from_slice(&st.sys.b);
-    let part = ops.dot(&st.r_ext[..n], &st.r_ext[..n], n);
-    let mut rr = drv.allreduce(tp, 0, 10, part);
-    drv.conv.set_reference(rr);
+    let (k0, mut rr);
+    if resume {
+        // restore the owned rows of x, r, p and the carried scalar; the
+        // halo regions are refreshed by the first resumed exchange and
+        // Ap is recomputed, so the replay is bitwise identical to an
+        // uninterrupted run reaching iteration k0. Every rank resumes
+        // from the same ordinal (ordinal-triggered capture), so the init
+        // allreduce below is skipped consistently on all ranks.
+        let c = st.ckpt.as_ref().expect("resume requires a checkpoint");
+        assert_eq!(c.method, "cg", "checkpoint method mismatch");
+        st.x_ext[..n].copy_from_slice(&c.x);
+        st.r_ext[..n].copy_from_slice(&c.r);
+        st.p_ext[..n].copy_from_slice(&c.p);
+        rr = c.scalars[0];
+        k0 = c.resume_at;
+        drv.restore(c);
+    } else {
+        // init: r = b; p = r; rr = (r, r)
+        st.r_ext[..n].copy_from_slice(&st.sys.b);
+        st.p_ext[..n].copy_from_slice(&st.sys.b);
+        let part = ops.dot(&st.r_ext[..n], &st.r_ext[..n], n);
+        rr = drv.allreduce_checked(tp, 0, 10, part);
+        drv.conv.set_reference(rr);
+        k0 = 0;
+    }
 
-    for k in 0..opts.max_iters {
+    for k in k0..opts.max_iters {
         if drv.pre_check(rr) {
             break;
         }
@@ -87,7 +113,7 @@ fn classic(
             let RankState { sys, p_ext, ap, .. } = st;
             ops.halo_spmv_dot(&sys.a, &sys.halo, tp, p_ext, ap, DotWith::Exchanged, k, k)
         };
-        let pap = drv.allreduce(tp, k, 11, part); // BARRIER 1
+        let pap = drv.allreduce_checked(tp, k, 11, part); // BARRIER 1
         if drv.breakdown("pAp", pap, k) {
             break;
         }
@@ -102,7 +128,7 @@ fn classic(
             ops.axpby(-alpha, &ap[..n], 1.0, &mut r_ext[..n], n);
             ops.dot_ordered(&r_ext[..n], &r_ext[..n], n, k)
         };
-        let rr_new = drv.allreduce(tp, k, 12, part); // BARRIER 2
+        let rr_new = drv.allreduce_checked(tp, k, 12, part); // BARRIER 2
         let beta = rr_new / rr;
 
         // p = r + beta p
@@ -111,7 +137,43 @@ fn classic(
             ops.axpby(1.0, &r_ext[..n], beta, &mut p_ext[..n], n);
         }
         rr = rr_new;
-        drv.record(k + 1, rr);
+        let done = drv.record(k + 1, rr);
+        // true-residual scrub (ABFT): recompute ‖b − Ax‖² through the
+        // same fused halo-SpMV the solve uses and compare against the
+        // recursive residual. Reads x (whose halo CG never consumes) and
+        // writes only Ap and tmp — both dead until recomputed — so the
+        // solve's own trajectory is untouched.
+        if !done && drv.should_scrub(k + 1) {
+            let part = {
+                let RankState {
+                    sys, x_ext, ap, tmp, ..
+                } = st;
+                ops.halo_spmv(&sys.a, &sys.halo, tp, x_ext, ap, k);
+                ops.waxpby(1.0, &sys.b, -1.0, &ap[..n], 0.0, &mut tmp[..n], n);
+                ops.dot(&tmp[..n], &tmp[..n], n)
+            };
+            let res2_true = drv.allreduce_checked(tp, k, 13, part);
+            drv.scrub_residual(k + 1, res2_true);
+        }
+        if !done && drv.should_checkpoint(k + 1) {
+            let RankState {
+                ckpt, x_ext, r_ext, p_ext, ..
+            } = st;
+            SolverCheckpoint::capture(
+                ckpt,
+                "cg",
+                k + 1,
+                0,
+                [rr, 0.0],
+                &x_ext[..n],
+                &r_ext[..n],
+                &p_ext[..n],
+                &[],
+                &drv.conv,
+                opts.max_iters,
+            );
+            drv.note_checkpoint();
+        }
     }
 
     drv.finish("cg", 0)

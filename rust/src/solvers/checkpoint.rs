@@ -1,0 +1,187 @@
+//! Rank-consistent in-memory solver checkpoints (DESIGN.md §13).
+//!
+//! A [`SolverCheckpoint`] is a full snapshot of one rank's iteration
+//! state: the owned rows of every vector the method carries across
+//! iterations, the carried recurrence scalars, the breakdown-restart
+//! count, and the convergence tracker (reference residual, current /
+//! best relative residual, history prefix, completed count). Capture is
+//! triggered by the *iteration ordinal* (`SolveOpts::checkpoint_every`),
+//! which every rank evaluates on the same allreduced values — so every
+//! rank snapshots the same iteration without any extra coordination,
+//! and the set of per-rank checkpoints is globally consistent by
+//! construction.
+//!
+//! What is deliberately *not* captured: halo regions (re-exchanged by
+//! the first resumed iteration, exactly as an uninterrupted run would
+//! exchange them) and per-iteration scratch like `Ap`, `s`, or `As`
+//! (recomputed from the captured vectors before first use). Resuming
+//! from a checkpoint therefore replays the remaining iterations through
+//! the identical sequence of kernel calls, fold orders, and allreduces
+//! as a run that never faulted — the histories match bit for bit
+//! (asserted by `tests/integration_faults.rs`).
+//!
+//! Snapshots are staged through the same capacity-retaining refill
+//! idiom as the iteration workspace ([`crate::exec::stage_copy`]): the
+//! first capture allocates the buffers, every later capture copies into
+//! them, so checkpointing adds zero steady-state allocations to the
+//! solve loop (`tests/integration_alloc.rs` asserts this with
+//! checkpointing enabled).
+
+use crate::exec::stage_copy;
+
+use super::driver::{ConvergenceTracker, HISTORY_RESERVE_CAP};
+
+/// One rank's full iteration state at a checkpoint cadence boundary.
+/// Boxed inside [`super::RankState`] so the common (checkpointing off)
+/// case costs one pointer.
+#[derive(Debug, Clone)]
+pub struct SolverCheckpoint {
+    /// Method tag (`"jacobi"`, `"cg"`, `"bicgstab"`) — guards against
+    /// resuming a checkpoint with a different method's loop.
+    pub method: &'static str,
+    /// The loop ordinal to resume from: the snapshot was taken after
+    /// `resume_at` completed iterations, so the resumed loop starts at
+    /// `k = resume_at`.
+    pub resume_at: usize,
+    /// BiCGStab breakdown-restart count at the snapshot (0 elsewhere).
+    pub restarts: usize,
+    /// Carried recurrence scalars: CG stores `[rr, 0]`, BiCGStab
+    /// `[rho, rr]`, Jacobi carries none.
+    pub scalars: [f64; 2],
+    /// Owned rows of the iterate x (halo region re-exchanged on resume).
+    pub x: Vec<f64>,
+    /// Owned rows of the residual r (empty for Jacobi).
+    pub r: Vec<f64>,
+    /// Owned rows of the search direction p (empty for Jacobi).
+    pub p: Vec<f64>,
+    /// Owned rows of the BiCGStab shadow residual r′ (empty elsewhere).
+    pub rprime: Vec<f64>,
+    /// Tracker state: reference squared residual.
+    pub res0: f64,
+    /// Tracker state: relative residual at the snapshot.
+    pub rel: f64,
+    /// Tracker state: best relative residual seen (divergence guard).
+    pub best_rel: f64,
+    /// Tracker state: relative-residual history prefix.
+    pub history: Vec<f64>,
+}
+
+impl SolverCheckpoint {
+    /// Snapshot the current iteration state into `slot`, reusing the
+    /// previous snapshot's buffers when one exists. `history_cap` bounds
+    /// the up-front history reservation (pass `max_iters`; clamped to
+    /// [`HISTORY_RESERVE_CAP`]) so in-cap solves never grow the history
+    /// copy after the first capture.
+    #[allow(clippy::too_many_arguments)]
+    pub fn capture(
+        slot: &mut Option<Box<SolverCheckpoint>>,
+        method: &'static str,
+        resume_at: usize,
+        restarts: usize,
+        scalars: [f64; 2],
+        x: &[f64],
+        r: &[f64],
+        p: &[f64],
+        rprime: &[f64],
+        conv: &ConvergenceTracker,
+        history_cap: usize,
+    ) {
+        let c = slot.get_or_insert_with(|| {
+            Box::new(SolverCheckpoint {
+                method,
+                resume_at: 0,
+                restarts: 0,
+                scalars: [0.0; 2],
+                x: Vec::with_capacity(x.len()),
+                r: Vec::with_capacity(r.len()),
+                p: Vec::with_capacity(p.len()),
+                rprime: Vec::with_capacity(rprime.len()),
+                res0: 0.0,
+                rel: 0.0,
+                best_rel: 0.0,
+                history: Vec::with_capacity(history_cap.min(HISTORY_RESERVE_CAP)),
+            })
+        });
+        c.method = method;
+        c.resume_at = resume_at;
+        c.restarts = restarts;
+        c.scalars = scalars;
+        stage_copy(&mut c.x, x);
+        stage_copy(&mut c.r, r);
+        stage_copy(&mut c.p, p);
+        stage_copy(&mut c.rprime, rprime);
+        c.res0 = conv.reference();
+        c.rel = conv.rel();
+        c.best_rel = conv.best_rel();
+        stage_copy(&mut c.history, conv.history());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::solvers::SolveOpts;
+
+    fn tracker_with(entries: &[f64]) -> ConvergenceTracker {
+        let opts = SolveOpts::default();
+        let mut t = ConvergenceTracker::new();
+        t.set_reference(1.0);
+        for (i, &res2) in entries.iter().enumerate() {
+            t.record(i + 1, res2, &opts);
+        }
+        t
+    }
+
+    #[test]
+    fn capture_snapshots_state_and_reuses_buffers() {
+        let conv = tracker_with(&[0.25, 0.04]);
+        let x: Vec<f64> = (0..32).map(|i| i as f64).collect();
+        let r: Vec<f64> = (0..32).map(|i| -(i as f64)).collect();
+        let mut slot: Option<Box<SolverCheckpoint>> = None;
+        SolverCheckpoint::capture(
+            &mut slot, "cg", 2, 0, [0.04, 0.0], &x, &r, &r, &[], &conv, 100,
+        );
+        let (xp, hp) = {
+            let c = slot.as_ref().unwrap();
+            assert_eq!(c.method, "cg");
+            assert_eq!(c.resume_at, 2);
+            assert_eq!(c.scalars, [0.04, 0.0]);
+            assert_eq!(c.x, x);
+            assert_eq!(c.r, r);
+            assert!(c.rprime.is_empty());
+            assert_eq!(c.res0, 1.0);
+            assert_eq!(c.history, vec![0.5, 0.2]);
+            assert_eq!(c.best_rel, conv.best_rel());
+            (c.x.as_ptr(), c.history.capacity())
+        };
+        // a later capture with same-shaped state reuses every buffer
+        let conv2 = tracker_with(&[0.25, 0.04, 0.01, 0.0025]);
+        SolverCheckpoint::capture(
+            &mut slot, "cg", 4, 0, [0.0025, 0.0], &x, &r, &r, &[], &conv2, 100,
+        );
+        let c = slot.as_ref().unwrap();
+        assert_eq!(c.resume_at, 4);
+        assert_eq!(c.history, vec![0.5, 0.2, 0.1, 0.05]);
+        assert_eq!(c.x.as_ptr(), xp, "second capture must reuse the x buffer");
+        assert_eq!(c.history.capacity(), hp);
+    }
+
+    #[test]
+    fn restore_round_trips_through_tracker() {
+        let conv = tracker_with(&[0.25, 0.04]);
+        let mut slot: Option<Box<SolverCheckpoint>> = None;
+        SolverCheckpoint::capture(
+            &mut slot, "jacobi", 2, 0, [0.0; 2], &[1.0], &[], &[], &[], &conv, 10,
+        );
+        let c = slot.unwrap();
+        let mut t = ConvergenceTracker::new();
+        t.restore(c.res0, c.rel, c.best_rel, c.resume_at, &c.history);
+        assert_eq!(t.reference(), conv.reference());
+        assert_eq!(t.rel(), conv.rel());
+        assert_eq!(t.best_rel(), conv.best_rel());
+        assert_eq!(t.iterations(), 2);
+        assert_eq!(t.history(), conv.history());
+        assert!(!t.converged());
+        assert!(t.failure().is_none());
+    }
+}

@@ -41,6 +41,7 @@ use crate::sparse::Operator;
 
 use super::{
     completion_order, Compute, HaloVec, Observer, RankState, SolveFailure, SolveOpts, SolveStats,
+    SolverCheckpoint,
 };
 
 /// What a fused SpMV·dot reduces against: the freshly exchanged vector
@@ -166,8 +167,25 @@ impl Default for ConvergenceTracker {
 /// Cap on the history capacity reserved up front (8k iterations ≈ 64 KiB
 /// per rank). Solves within the cap push into reserved space — no
 /// reallocation inside the iteration loop (part of the zero-allocation
-/// steady state); longer runs fall back to amortised growth.
-const HISTORY_RESERVE_CAP: usize = 8192;
+/// steady state); longer runs fall back to amortised growth. Shared with
+/// the checkpoint tier, which pre-reserves its history copy to the same
+/// bound so repeated snapshots never reallocate either.
+pub(crate) const HISTORY_RESERVE_CAP: usize = 8192;
+
+/// Relative band for the duplicate-fold checksum verification
+/// (DESIGN.md §13): the fold reassociates `check` and the lane sums
+/// differently, which perturbs the identity by a few ulps per rank
+/// (~1e-14 × scale); anything past this band is corruption, not
+/// rounding. The silent-injection skew (1e-3) clears it by five orders
+/// of magnitude.
+const CHECKSUM_BAND: f64 = 1e-8;
+
+/// Relative band for the true-residual scrub: the recursive residual of
+/// the Krylov recurrences drifts from ‖b−Ax‖ by accumulated rounding
+/// (≪ 1e-10 relative over the iteration counts this repo runs); a
+/// relative gap past this band means the carried state and the iterate
+/// no longer describe the same solve.
+const SCRUB_DRIFT_BAND: f64 = 1e-7;
 
 /// Breakdown threshold relative to the reference squared residual: a
 /// Krylov denominator whose magnitude falls under `reference() ×
@@ -285,6 +303,46 @@ impl ConvergenceTracker {
     pub fn failure(&self) -> Option<&SolveFailure> {
         self.failure.as_ref()
     }
+
+    /// Best (smallest) relative residual seen so far — checkpointed so a
+    /// resumed solve evaluates the divergence guard against the same
+    /// reference point as an uninterrupted one.
+    pub fn best_rel(&self) -> f64 {
+        self.best_rel
+    }
+
+    /// Completed-iteration count (the last `record`'s ordinal).
+    pub fn iterations(&self) -> usize {
+        self.iterations
+    }
+
+    /// The relative-residual history recorded so far.
+    pub fn history(&self) -> &[f64] {
+        &self.history
+    }
+
+    /// Restore the tracker to a checkpointed state: reference, current /
+    /// best relative residual, completed count and the history prefix.
+    /// Clears `converged` and any failure latch — the checkpoint was
+    /// taken on a live, healthy solve (capture is skipped otherwise), so
+    /// a resumed loop continues exactly where the snapshot left off.
+    pub fn restore(
+        &mut self,
+        res0: f64,
+        rel: f64,
+        best_rel: f64,
+        iterations: usize,
+        history: &[f64],
+    ) {
+        self.res0 = res0;
+        self.rel = rel;
+        self.best_rel = best_rel;
+        self.iterations = iterations;
+        self.history.clear();
+        self.history.extend_from_slice(history);
+        self.converged = false;
+        self.failure = None;
+    }
 }
 
 // ---------------------------------------------------------------------
@@ -306,6 +364,10 @@ pub struct SolverDriver<'a> {
     pub rank: usize,
     /// Latched once `obs.stop` fires; surfaces through `pre_check`.
     stopped: bool,
+    /// Checkpoints captured this solve (DESIGN.md §13).
+    checkpoints: usize,
+    /// The iteration this solve resumed from, when it did.
+    resumed_from: Option<usize>,
 }
 
 impl<'a> SolverDriver<'a> {
@@ -323,7 +385,45 @@ impl<'a> SolverDriver<'a> {
             obs,
             rank,
             stopped: false,
+            checkpoints: 0,
+            resumed_from: None,
         }
+    }
+
+    /// Restore the convergence tracker from a checkpoint and mark this
+    /// solve as resumed (vector / scalar restoration is the method
+    /// loop's job — it knows which rows and carried scalars it owns).
+    pub fn restore(&mut self, c: &SolverCheckpoint) {
+        self.conv
+            .restore(c.res0, c.rel, c.best_rel, c.resume_at, &c.history);
+        self.resumed_from = Some(c.resume_at);
+    }
+
+    /// Should the loop snapshot after `completed` iterations? Cadence is
+    /// ordinal-based — every rank evaluates the same `completed`, so
+    /// every rank snapshots the same iteration. Never snapshots a
+    /// stopped or failed solve (a corrupt state must not become a
+    /// rollback target).
+    pub fn should_checkpoint(&self, completed: usize) -> bool {
+        self.opts.checkpoint_every > 0
+            && completed % self.opts.checkpoint_every == 0
+            && self.conv.failure().is_none()
+            && !self.stopped
+    }
+
+    /// Should the loop run the (expensive) true-residual scrub after
+    /// `completed` iterations? The cheap checksum verification is not
+    /// gated by this — it rides every `_checked` allreduce whenever
+    /// `scrub_every > 0`.
+    pub fn should_scrub(&self, completed: usize) -> bool {
+        self.opts.scrub_every > 0
+            && completed % self.opts.scrub_every == 0
+            && self.conv.failure().is_none()
+    }
+
+    /// Count one captured checkpoint.
+    pub fn note_checkpoint(&mut self) {
+        self.checkpoints += 1;
     }
 
     /// Top-of-loop convergence test (no history entry); also reports a
@@ -401,6 +501,88 @@ impl<'a> SolverDriver<'a> {
         (v[0], v[1])
     }
 
+    /// Checksummed scalar allreduce (ABFT duplicate-fold, DESIGN.md
+    /// §13). With `scrub_every == 0` this is byte-for-byte the plain
+    /// [`SolverDriver::allreduce`] — payloads carry a zero checksum lane
+    /// either way, so the wire traffic is identical. With scrubbing on,
+    /// the contribution is sealed (checksum lane = Σ data lanes) before
+    /// posting and the folded result is verified: the fold sums checksum
+    /// lanes alongside data lanes, so by linearity the folded checksum
+    /// must equal the folded lane sum up to reassociation rounding. Any
+    /// post-seal lane corruption — including a finite, rank-consistent
+    /// skew that the residual recurrences would absorb silently — breaks
+    /// the identity on every rank identically.
+    pub fn allreduce_checked(
+        &mut self,
+        tp: &mut dyn Transport,
+        k: usize,
+        tag: u64,
+        partial: f64,
+    ) -> f64 {
+        if self.opts.scrub_every == 0 {
+            return self.allreduce(tp, k, tag, partial);
+        }
+        let mut p = Payload::scalar(partial);
+        p.seal();
+        let v = tp.allreduce(isodd(k), tag, p);
+        self.obs.on_allreduce(self.rank, tag, v.as_slice());
+        self.verify_fold(k, &v);
+        v[0]
+    }
+
+    /// Checksummed pair allreduce — see [`SolverDriver::allreduce_checked`].
+    pub fn allreduce_pair_checked(
+        &mut self,
+        tp: &mut dyn Transport,
+        k: usize,
+        tag: u64,
+        partial: (f64, f64),
+    ) -> (f64, f64) {
+        if self.opts.scrub_every == 0 {
+            return self.allreduce_pair(tp, k, tag, partial);
+        }
+        let mut p = Payload::pair(partial.0, partial.1);
+        p.seal();
+        let v = tp.allreduce(isodd(k), tag, p);
+        self.obs.on_allreduce(self.rank, tag, v.as_slice());
+        self.verify_fold(k, &v);
+        (v[0], v[1])
+    }
+
+    /// Verify a folded payload's duplicate checksum; latch
+    /// [`SolveFailure::Corrupted`] on a break. Every rank receives the
+    /// identical folded payload, so every rank latches (or doesn't)
+    /// together — the loops stay in lockstep through detection, exactly
+    /// like the other runtime guards. NaN lanes make the drift
+    /// non-finite, which is checked first (a `drift > band` comparison
+    /// against NaN would be silently false).
+    fn verify_fold(&mut self, k: usize, v: &Payload) {
+        let drift = v.check_drift();
+        let scale: f64 = v.as_slice().iter().map(|x| x.abs()).sum::<f64>() + v.check().abs();
+        if !drift.is_finite() || drift > CHECKSUM_BAND * (scale + 1.0) {
+            self.conv.fail(SolveFailure::Corrupted {
+                iteration: k,
+                drift,
+            });
+        }
+    }
+
+    /// Compare the true squared residual ‖b − Ax‖² (recomputed by the
+    /// method loop at scrub cadence) against the recursively carried
+    /// relative residual; latch [`SolveFailure::Corrupted`] when they
+    /// disagree past the drift band. Catches corruption that slipped
+    /// into vector state without touching a collective.
+    pub fn scrub_residual(&mut self, completed: usize, res2_true: f64) {
+        let rel_true = (res2_true.max(0.0) / self.conv.reference()).sqrt();
+        let drift = (rel_true - self.conv.rel()).abs();
+        if !drift.is_finite() || drift > SCRUB_DRIFT_BAND * (1.0 + self.conv.rel()) {
+            self.conv.fail(SolveFailure::Corrupted {
+                iteration: completed,
+                drift,
+            });
+        }
+    }
+
     /// Nonblocking scalar allreduce contribution — pair with
     /// [`SolverDriver::wait_scalar`] after the overlapped compute.
     pub fn start_scalar(&self, tp: &mut dyn Transport, k: usize, tag: u64, partial: f64) {
@@ -427,6 +609,7 @@ impl<'a> SolverDriver<'a> {
     /// Final per-rank stats assembly. `x_error` is a cross-rank quantity
     /// and is filled in by `Problem` once every rank joined.
     pub fn finish(self, method: &'static str, restarts: usize) -> SolveStats {
+        let corruptions = matches!(self.conv.failure, Some(SolveFailure::Corrupted { .. })) as usize;
         let stats = SolveStats {
             method,
             iterations: self.conv.iterations,
@@ -436,6 +619,10 @@ impl<'a> SolverDriver<'a> {
             history: self.conv.history,
             restarts,
             failure: self.conv.failure,
+            checkpoints: self.checkpoints,
+            rollbacks: 0,
+            resumed_from: self.resumed_from,
+            corruptions,
         };
         self.obs.on_finish(self.rank, &stats);
         stats

@@ -10,7 +10,9 @@
 //! nondeterminism emulation (harmless for Jacobi: only the reduction
 //! reorders).
 
-use super::{Compute, Observer, Ops, RankState, SolveOpts, SolveStats, SolverDriver};
+use super::{
+    Compute, Observer, Ops, RankState, SolveOpts, SolveStats, SolverCheckpoint, SolverDriver,
+};
 use crate::exec::Executor;
 use crate::simmpi::Transport;
 
@@ -21,15 +23,29 @@ pub fn solve_rank(
     backend: &mut dyn Compute,
     exec: &Executor,
     obs: &dyn Observer,
+    resume: bool,
 ) -> SolveStats {
     let mut drv = SolverDriver::new(exec, opts, obs, tp.rank());
     let mut ops = Ops::new(exec, opts, backend);
+    let n = st.sys.n();
 
-    for k in 0..opts.max_iters {
+    // Jacobi carries no recurrence scalars: a checkpoint is the iterate
+    // plus the tracker, and resuming re-exchanges the halo on the first
+    // sweep exactly as iteration k0 of an uninterrupted run would.
+    let k0 = if resume {
+        let c = st.ckpt.as_ref().expect("resume requires a checkpoint");
+        assert_eq!(c.method, "jacobi", "checkpoint method mismatch");
+        st.x_ext[..n].copy_from_slice(&c.x);
+        drv.restore(c);
+        c.resume_at
+    } else {
+        0
+    };
+
+    for k in k0..opts.max_iters {
         // halo exchange of the current iterate fused with the
         // sweep+residual kernel: with `--overlap on` the interior chunks
         // sweep while the halo planes are in flight
-        let n = st.sys.n();
         let part = {
             let RankState { sys, x_ext, tmp, .. } = st;
             let res = ops.halo_jacobi_step(&sys.a, &sys.b, &sys.halo, tp, x_ext, tmp, k);
@@ -37,8 +53,29 @@ pub fn solve_rank(
             res
         };
 
-        let res = drv.allreduce(tp, k, 1_000_000, part);
-        if drv.record(k + 1, res) {
+        // checksummed residual allreduce: the recorded Jacobi residual
+        // is pre-sweep (lagged one iterate), so the true-residual scrub
+        // does not apply — the duplicate-fold checksum is the scrub here
+        let res = drv.allreduce_checked(tp, k, 1_000_000, part);
+        let done = drv.record(k + 1, res);
+        if !done && drv.should_checkpoint(k + 1) {
+            let RankState { ckpt, x_ext, .. } = st;
+            SolverCheckpoint::capture(
+                ckpt,
+                "jacobi",
+                k + 1,
+                0,
+                [0.0; 2],
+                &x_ext[..n],
+                &[],
+                &[],
+                &[],
+                &drv.conv,
+                opts.max_iters,
+            );
+            drv.note_checkpoint();
+        }
+        if done {
             break;
         }
     }

@@ -32,6 +32,7 @@
 mod backend;
 mod bicgstab;
 mod cg;
+pub mod checkpoint;
 mod driver;
 mod gauss_seidel;
 mod jacobi;
@@ -42,6 +43,7 @@ pub mod precond;
 pub use backend::{Compute, Native};
 pub use bicgstab::BiVariant;
 pub use cg::CgVariant;
+pub use checkpoint::SolverCheckpoint;
 pub use driver::{ConvergenceTracker, DotWith, Ops, SolverDriver};
 pub use gauss_seidel::GsVariant;
 pub use observer::{NoopObserver, Observer};
@@ -146,6 +148,21 @@ impl Method {
                 | Method::Multisplit
         )
     }
+
+    /// Does this method honour `SolveOpts::checkpoint_every` /
+    /// `scrub_every` (the rollback-recovery tier, DESIGN.md §13)?
+    ///
+    /// The unpreconditioned classic loops — Jacobi, CG, BiCGStab — have
+    /// checkpoint/resume/scrub seams; the pipelined (cg-nb,
+    /// bicgstab-b1), colour-swept (gs*) and preconditioned loops do
+    /// not. A non-zero cadence elsewhere is a spec validation error,
+    /// not a silent no-op — the `supports_precond` discipline.
+    pub fn supports_recovery(&self) -> bool {
+        matches!(
+            self,
+            Method::Jacobi | Method::Cg(CgVariant::Classic) | Method::BiCgStab(BiVariant::Classic)
+        )
+    }
 }
 
 /// Solve options (paper §4.1 defaults).
@@ -190,6 +207,23 @@ pub struct SolveOpts {
     /// solve — histories are bitwise unchanged — but catches runaway
     /// iterations long before they overflow into NaN garbage.
     pub divergence_ratio: f64,
+    /// Checkpoint cadence: snapshot the full iteration state into
+    /// [`RankState::ckpt`] every this-many completed iterations
+    /// (ordinal-triggered, so every rank snapshots the same iteration).
+    /// 0 (the default) disables checkpointing — that path is
+    /// byte-equivalent to a build without the recovery tier. Only the
+    /// recovery-capable methods accept a non-zero cadence
+    /// ([`Method::supports_recovery`]).
+    pub checkpoint_every: usize,
+    /// Silent-corruption scrub cadence (ABFT-style, DESIGN.md §13):
+    /// every this-many completed iterations the driver verifies the
+    /// duplicate-fold checksum on allreduce payloads and the loop
+    /// recomputes the true residual ‖b−Ax‖ against the recursive one
+    /// within a structured drift band, failing with
+    /// [`SolveFailure::Corrupted`] on mismatch. 0 (the default)
+    /// disables both checks; checksum sealing is also gated on this, so
+    /// the default allreduce bytes are untouched.
+    pub scrub_every: usize,
 }
 
 /// Why a solve failed — the structured failure taxonomy (DESIGN.md
@@ -223,6 +257,14 @@ pub enum SolveFailure {
         phase: String,
         what: String,
     },
+    /// Silent corruption detected at `iteration` by the scrub tier
+    /// (DESIGN.md §13): either the duplicate-fold checksum on an
+    /// allreduce payload drifted from the lane sum, or the recomputed
+    /// true residual ‖b−Ax‖ left the structured drift band around the
+    /// recursive residual. `drift` is the observed discrepancy. The
+    /// verdict reads only allreduced values, so every rank latches it
+    /// identically.
+    Corrupted { iteration: usize, drift: f64 },
 }
 
 impl SolveFailure {
@@ -234,6 +276,7 @@ impl SolveFailure {
             SolveFailure::Diverged { .. } => "diverged",
             SolveFailure::Breakdown { .. } => "breakdown",
             SolveFailure::Transport { .. } => "transport",
+            SolveFailure::Corrupted { .. } => "corruption",
         }
     }
 }
@@ -266,6 +309,10 @@ impl std::fmt::Display for SolveFailure {
             SolveFailure::Transport { rank, phase, what } => {
                 write!(f, "transport failure at rank {rank} during {phase}: {what}")
             }
+            SolveFailure::Corrupted { iteration, drift } => write!(
+                f,
+                "silent corruption detected at iteration {iteration} (drift {drift:.3e})"
+            ),
         }
     }
 }
@@ -304,6 +351,8 @@ impl Default for SolveOpts {
             inner_iters: 1,
             restarts: 0,
             divergence_ratio: 1e8,
+            checkpoint_every: 0,
+            scrub_every: 0,
         }
     }
 }
@@ -323,9 +372,23 @@ pub struct SolveStats {
     pub restarts: usize,
     /// Why the solve stopped without converging, when it stopped for a
     /// structured reason (breakdown, divergence, non-finite residual,
-    /// transport failure). `None` for a clean converge or a plain
-    /// max-iters exhaustion. When set, `converged` is always false.
+    /// transport failure, detected corruption). `None` for a clean
+    /// converge or a plain max-iters exhaustion. When set, `converged`
+    /// is always false.
     pub failure: Option<SolveFailure>,
+    /// Checkpoints captured during this run (0 with checkpointing off).
+    pub checkpoints: usize,
+    /// Rollback resumes in the retry chain that produced this result.
+    /// The solver itself always reports 0; the retrying caller
+    /// (`Session::run`, the service scheduler) accumulates it.
+    pub rollbacks: usize,
+    /// Iteration ordinal the most recent resume restarted from, when
+    /// this result came out of a rollback chain.
+    pub resumed_from: Option<usize>,
+    /// Corruption detections in the retry chain (each detected —
+    /// whether or not recovered — counts once). Accumulated by the
+    /// retrying caller like `rollbacks`.
+    pub corruptions: usize,
 }
 
 /// Per-rank solver state: the local system plus every work vector any of
@@ -349,6 +412,12 @@ pub struct RankState {
     /// Preconditioner scratch (Chebyshev difference vector, etc.).
     pub pw1: Vec<f64>,
     pub pw2: Vec<f64>,
+    /// Last captured rollback checkpoint (DESIGN.md §13). Plain owned
+    /// data, so it survives a transport failure or a contained worker
+    /// panic along with the rest of the rank state. `None` until the
+    /// first snapshot; never *read* unless a caller explicitly arms
+    /// [`Problem::resume_from_checkpoint`] for the next run.
+    pub ckpt: Option<Box<SolverCheckpoint>>,
 }
 
 /// Which extended vector a halo exchange moves. Naming the vector (vs
@@ -385,6 +454,7 @@ impl RankState {
             z2_ext: vec![0.0; n_ext],
             pw1: vec![0.0; n],
             pw2: vec![0.0; n],
+            ckpt: None,
             sys,
         }
     }
@@ -418,6 +488,11 @@ impl RankState {
 /// method against a transport handle. This is the function every rank
 /// thread runs — the inverted (SPMD) form of the old phase-stepping
 /// driver.
+///
+/// `resume = true` restores the loop from [`RankState::ckpt`] instead
+/// of iteration 0 (rollback recovery, DESIGN.md §13) — callers arm it
+/// through [`Problem::resume_from_checkpoint`]; it requires a
+/// recovery-capable method and a previously captured checkpoint.
 pub fn solve_rank(
     method: Method,
     st: &mut RankState,
@@ -426,6 +501,7 @@ pub fn solve_rank(
     backend: &mut dyn Compute,
     exec: &Executor,
     obs: &dyn Observer,
+    resume: bool,
 ) -> SolveStats {
     assert!(
         opts.precond == PrecondKind::None || method.supports_precond(),
@@ -434,11 +510,19 @@ pub fn solve_rank(
         method.name(),
         opts.precond.name()
     );
+    assert!(
+        (opts.checkpoint_every == 0 && opts.scrub_every == 0 && !resume)
+            || (method.supports_recovery() && opts.precond == PrecondKind::None),
+        "method '{}' (precond '{}') does not support checkpoint/scrub/resume; \
+         use unpreconditioned jacobi, cg or bicgstab",
+        method.name(),
+        opts.precond.name()
+    );
     match method {
-        Method::Jacobi => jacobi::solve_rank(st, tp, opts, backend, exec, obs),
+        Method::Jacobi => jacobi::solve_rank(st, tp, opts, backend, exec, obs, resume),
         Method::GaussSeidel(v) => gauss_seidel::solve_rank(st, tp, v, opts, backend, exec, obs),
-        Method::Cg(v) => cg::solve_rank(st, tp, v, opts, backend, exec, obs),
-        Method::BiCgStab(v) => bicgstab::solve_rank(st, tp, v, opts, backend, exec, obs),
+        Method::Cg(v) => cg::solve_rank(st, tp, v, opts, backend, exec, obs, resume),
+        Method::BiCgStab(v) => bicgstab::solve_rank(st, tp, v, opts, backend, exec, obs, resume),
         Method::Multisplit => multisplit::solve_rank(st, tp, opts, backend, exec, obs),
     }
 }
@@ -587,6 +671,12 @@ pub struct Problem {
     /// 0 = resolve from `HLAM_DEADLOCK_TIMEOUT_MS`, else the 30s
     /// default. Tests drop this to ~2s so injected stalls fail fast.
     pub deadlock_timeout_ms: u64,
+    /// One-shot rollback arm: when true, the *next* solve restores each
+    /// rank from its captured checkpoint instead of iteration 0, then
+    /// the flag clears. Set via [`Problem::resume_from_checkpoint`];
+    /// never set on the default path, so stale checkpoint slots from an
+    /// earlier run on a cached problem are never read by accident.
+    resume: bool,
 }
 
 impl Problem {
@@ -602,6 +692,7 @@ impl Problem {
             stats: WorldStats::default(),
             fault: FaultPlan::none(),
             deadlock_timeout_ms: 0,
+            resume: false,
         }
     }
 
@@ -622,6 +713,7 @@ impl Problem {
             stats: WorldStats::default(),
             fault: FaultPlan::none(),
             deadlock_timeout_ms: 0,
+            resume: false,
         }
     }
 
@@ -657,6 +749,83 @@ impl Problem {
     fn reset(&mut self) {
         for st in &mut self.ranks {
             st.x_ext.iter_mut().for_each(|v| *v = 0.0);
+        }
+    }
+
+    /// True when every rank holds a checkpoint from the same iteration
+    /// ordinal — the precondition for [`Problem::resume_from_checkpoint`].
+    /// Ordinal-triggered capture makes per-rank ordinals agree by
+    /// construction; this verifies it survived whatever failure brought
+    /// the caller here.
+    pub fn has_checkpoint(&self) -> bool {
+        self.checkpoint_iteration().is_some()
+    }
+
+    /// The iteration ordinal the captured checkpoint would resume from
+    /// (`None` when any rank lacks a snapshot or ordinals disagree).
+    pub fn checkpoint_iteration(&self) -> Option<usize> {
+        let first = self.ranks.first()?.ckpt.as_ref()?.resume_at;
+        self.ranks
+            .iter()
+            .all(|st| st.ckpt.as_ref().is_some_and(|c| c.resume_at == first))
+            .then_some(first)
+    }
+
+    /// Arm the next solve to restore every rank from its captured
+    /// checkpoint instead of iteration 0 (rollback recovery). One-shot:
+    /// the arm clears when that solve starts. Returns the resume
+    /// ordinal, or `None` (and stays unarmed) without a consistent
+    /// checkpoint.
+    pub fn resume_from_checkpoint(&mut self) -> Option<usize> {
+        let at = self.checkpoint_iteration()?;
+        self.resume = true;
+        Some(at)
+    }
+
+    /// Whether [`Problem::resume_from_checkpoint`] armed the next solve.
+    /// `Session::run` reads this to distinguish a deliberately armed
+    /// warm resume (service rollback across a session rebuild) from
+    /// stale snapshots left on a cached assembly by an earlier run.
+    pub fn resume_armed(&self) -> bool {
+        self.resume
+    }
+
+    /// Drop any captured checkpoints (even a partial or inconsistent
+    /// set). `Session::run` calls this at the start of every non-resume
+    /// run so one run's snapshots can never feed another's rollback.
+    pub fn clear_checkpoints(&mut self) {
+        for st in &mut self.ranks {
+            st.ckpt = None;
+        }
+    }
+
+    /// Move the captured checkpoints out (service warm resume: carry
+    /// them across a session rebuild after a contained panic). Returns
+    /// `None` unless every rank has one.
+    pub fn take_checkpoints(&mut self) -> Option<Vec<Box<SolverCheckpoint>>> {
+        if !self.has_checkpoint() {
+            return None;
+        }
+        Some(
+            self.ranks
+                .iter_mut()
+                .map(|st| st.ckpt.take().expect("checked by has_checkpoint"))
+                .collect(),
+        )
+    }
+
+    /// Install checkpoints taken from another `Problem` of the same
+    /// shape (the rebuilt session's copy of the same plan). Panics on a
+    /// rank-count mismatch — callers route by plan key, so a mismatch
+    /// is a routing bug.
+    pub fn install_checkpoints(&mut self, ckpts: Vec<Box<SolverCheckpoint>>) {
+        assert_eq!(
+            ckpts.len(),
+            self.ranks.len(),
+            "checkpoint set does not match rank count"
+        );
+        for (st, c) in self.ranks.iter_mut().zip(ckpts) {
+            st.ckpt = Some(c);
         }
     }
 
@@ -703,6 +872,10 @@ impl Problem {
                 phase: tf.phase,
                 what: tf.what,
             }),
+            checkpoints: 0,
+            rollbacks: 0,
+            resumed_from: None,
+            corruptions: 0,
         }
     }
 
@@ -757,6 +930,7 @@ impl Problem {
         self.reset();
         let fault = self.fault.clone();
         let timeout = self.deadlock_timeout();
+        let resume = std::mem::take(&mut self.resume);
         let shared = Mutex::new(SharedBackendPtr(backend as *mut (dyn Compute + '_)));
         let shared = &shared;
         let bodies: Vec<Box<dyn FnOnce(&mut RankTransport) -> SolveStats + Send + '_>> = self
@@ -765,7 +939,7 @@ impl Problem {
             .map(|st| {
                 Box::new(move |tp: &mut RankTransport| {
                     let mut backend = SharedBackend { inner: shared };
-                    solve_rank(method, st, tp, opts, &mut backend, exec, obs)
+                    solve_rank(method, st, tp, opts, &mut backend, exec, obs, resume)
                 })
                     as Box<dyn FnOnce(&mut RankTransport) -> SolveStats + Send + '_>
             })
@@ -840,6 +1014,7 @@ impl Problem {
         self.reset();
         let fault = self.fault.clone();
         let timeout = self.deadlock_timeout();
+        let resume = std::mem::take(&mut self.resume);
         let bodies: Vec<Box<dyn FnOnce(&mut RankTransport) -> SolveStats + Send + '_>> = self
             .ranks
             .iter_mut()
@@ -847,7 +1022,7 @@ impl Problem {
             .map(|(st, exec)| {
                 Box::new(move |tp: &mut RankTransport| {
                     let mut backend = Native;
-                    solve_rank(method, st, tp, opts, &mut backend, exec, obs)
+                    solve_rank(method, st, tp, opts, &mut backend, exec, obs, resume)
                 })
                     as Box<dyn FnOnce(&mut RankTransport) -> SolveStats + Send + '_>
             })

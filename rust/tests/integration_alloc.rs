@@ -207,4 +207,52 @@ fn steady_state_iterations_do_not_allocate() {
             }
         }
     }
+
+    // Checkpointed + scrubbed solves (DESIGN.md §13): the first capture
+    // allocates the snapshot buffers (history reserved to `max_iters` up
+    // front) and the first true-residual scrub warms its kernel plans —
+    // at cadence 2 both land inside the warm-up window — after which
+    // snapshot refills go through the capacity-retaining `stage_copy`
+    // idiom and scrubs reuse the solve's own dead buffers: the
+    // steady-state bounds hold unchanged with recovery armed.
+    let copts = SolveOpts {
+        eps: 0.0,
+        max_iters: ITERS,
+        checkpoint_every: 2,
+        scrub_every: 2,
+        ..SolveOpts::default()
+    };
+    for method in ["jacobi", "cg", "bicgstab"] {
+        for (strategy, threads, ranks, overlap, bound) in [
+            (ExecStrategy::Seq, 1usize, 1usize, false, 0usize),
+            (ExecStrategy::Seq, 1, 2, true, 2),
+            (ExecStrategy::TaskPool, 4, 2, true, 8),
+        ] {
+            let mut pb = Problem::build(grid, StencilKind::P7, ranks);
+            let probe = AllocProbe::new();
+            let spec = ExecSpec::new(strategy, threads).with_overlap(overlap);
+            let stats = pb.solve_hybrid_observed(
+                Method::parse(method).unwrap(),
+                &copts,
+                &spec,
+                TransportKind::Lockstep,
+                &probe,
+            );
+            assert_eq!(stats.iterations, ITERS, "{method}: must run all iters");
+            assert!(
+                stats.checkpoints >= ITERS / 2,
+                "{method}: cadence 2 must keep capturing"
+            );
+            for i in (WARMUP + 1)..=ITERS {
+                let d = probe.delta(i);
+                assert!(
+                    d <= bound,
+                    "ckpt {method} {} threads={threads} ranks={ranks} overlap={overlap}: \
+                     iteration {i} performed {d} heap allocations (allowed {bound}) — \
+                     the checkpointed zero-allocation steady state regressed",
+                    strategy.name(),
+                );
+            }
+        }
+    }
 }

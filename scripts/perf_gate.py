@@ -61,6 +61,14 @@ PRECOND_CELLS = [
 # the anisotropic problem by at least this factor (deterministic check —
 # iteration counts carry no timing noise)
 PRECOND_MIN_ITER_RATIO = 3.0
+# the recovery-overhead cells the bench must emit: the same fixed-work
+# cg solve with checkpointed-rollback recovery off vs armed
+RECOVERY_CELLS = ["off", "checkpoint", "checkpoint-scrub"]
+# a clean solve with checkpoint+scrub armed may not cost more than this
+# multiple of the unarmed solve. Very generous — at cadence 5 the real
+# overhead is a few percent; this only catches the insurance becoming
+# catastrophically expensive (e.g. per-iteration deep copies).
+RECOVERY_MAX_OVERHEAD = 4.0
 # the committed baseline may stay a provisional (zeroed) placeholder only
 # until the repo reaches this many commits; past it, CI fails until a
 # real measured snapshot is committed. The provisional placeholder
@@ -119,6 +127,16 @@ def precond_cells(doc):
     """
     section = doc.get("precond", {})
     return {(e["method"], e["precond"]): e for e in section.get("entries", [])}
+
+
+def recovery_cells(doc):
+    """Index recovery-overhead entries by label — absent section → {}.
+
+    Snapshots committed before the recovery tier landed have no
+    ``recovery`` key; callers treat the empty map as "old schema".
+    """
+    section = doc.get("recovery", {})
+    return {e["label"]: e for e in section.get("entries", [])}
 
 
 def validate_fresh(doc):
@@ -202,9 +220,30 @@ def validate_fresh(doc):
         f"a preconditioner cut iterations {best_iter_ratio:.2f}x but none "
         f"also beat plain cg's wall-clock to tolerance"
     )
+    recovery = recovery_cells(doc)
+    assert sorted(recovery) == sorted(RECOVERY_CELLS), (
+        f"recovery section must cover {sorted(RECOVERY_CELLS)}, "
+        f"got {sorted(recovery)}"
+    )
+    for label, e in recovery.items():
+        assert e["iters_per_sec"] > 0, (label, e)
+        assert e["seconds_median"] >= e["seconds_min"] > 0, (label, e)
+        assert e["seconds_stddev"] >= 0, (label, e)
+        # checkpoint counts are deterministic: cadence 0 never captures,
+        # an armed cadence must keep capturing
+        if label == "off":
+            assert e["checkpoints"] == 0, (label, e)
+        else:
+            assert e["checkpoints"] >= 1, (label, e)
+            assert e["overhead_vs_off"] <= RECOVERY_MAX_OVERHEAD, (
+                f"recovery/{label}: arming checkpoints cost "
+                f"{e['overhead_vs_off']:.2f}x a clean solve "
+                f"(allowed {RECOVERY_MAX_OVERHEAD:.1f}x)"
+            )
     print(f"perf gate: fresh snapshot schema ok ({len(entries)} solver cells, "
-          f"{len(spmv)} spmv cells, {len(precond)} precond cells — best cg "
-          f"iteration cut {best_iter_ratio:.1f}x)")
+          f"{len(spmv)} spmv cells, {len(precond)} precond cells, "
+          f"{len(recovery)} recovery cells — best cg iteration cut "
+          f"{best_iter_ratio:.1f}x)")
 
 
 def validate_service_fresh(doc):
@@ -367,6 +406,31 @@ def compare(fresh, baseline, band):
             regressions.append(
                 f"precond {key}: iterations-to-tolerance grew "
                 f"{b['iterations']} -> {f['iterations']}"
+            )
+    base_recovery = recovery_cells(baseline)
+    if not base_recovery:
+        print("perf gate: SKIP recovery comparison — baseline predates the "
+              "recovery section (old schema). Commit a fresh "
+              "`cargo bench --bench hot_path` snapshot to arm it.")
+    for label, b in sorted(base_recovery.items()):
+        f = recovery_cells(fresh).get(label)
+        if f is None:
+            print(f"perf gate: note: baseline recovery cell '{label}' absent "
+                  f"from fresh snapshot — not compared")
+            continue
+        compared += 1
+        floor = b["iters_per_sec"] * (1.0 - band)
+        if f["iters_per_sec"] < floor:
+            regressions.append(
+                f"recovery {label}: {f['iters_per_sec']:.1f} iters/s vs "
+                f"baseline {b['iters_per_sec']:.1f} (floor {floor:.1f}, "
+                f"band {band:.0%})"
+            )
+        # checkpoint counts are deterministic for a fixed-work solve
+        if f.get("checkpoints") != b.get("checkpoints"):
+            regressions.append(
+                f"recovery {label}: deterministic checkpoint count drifted "
+                f"{b.get('checkpoints')!r} -> {f.get('checkpoints')!r}"
             )
     print(f"perf gate: compared {compared} cells at noise band {band:.0%}")
     return regressions

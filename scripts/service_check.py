@@ -21,7 +21,13 @@ it produced, checks that the service honoured the wire contract:
     code and a reason, at least ``--min-error-share`` of the solve
     requests must have failed (proving the faults actually fired), and
     at least one clean solve must still complete (proving failure
-    containment: chaos on one job never takes the service down).
+    containment: chaos on one job never takes the service down);
+  * with ``--expect-recovery``: the trace arms checkpointed rollback
+    recovery (DESIGN.md §13) on faulted jobs, so at least one ``ok``
+    response must report ``rollbacks >= 1`` with a ``resumed_from``
+    ordinal — and every recovered job whose id ends in ``-faulty``
+    must match the digests of its ``-clean`` twin bit for bit (the
+    rollback-determinism contract on the wire).
 
 Usage:
     python3 scripts/service_check.py --requests /tmp/trace.ndjson \
@@ -39,19 +45,21 @@ import sys
 STATUSES = {"ok", "reject", "error", "cancelled"}
 OK_FIELDS = [
     "id", "status", "method", "iterations", "converged", "rel_residual",
-    "restarts", "history_len", "history_digest", "rel_residual_bits",
-    "early_stopped", "plan", "batch", "worker", "lanes", "queue_ms",
-    "solve_ms",
+    "restarts", "checkpoints", "rollbacks", "corruptions", "history_len",
+    "history_digest", "rel_residual_bits", "early_stopped", "plan",
+    "batch", "worker", "lanes", "queue_ms", "solve_ms",
 ]
+# resumed_from is the one optional ok field: present iff the result is
+# a rollback resume (DESIGN.md §13)
 REJECT_CODES = {
     "spec-invalid", "backend-unsupported", "over-budget", "queue-full",
     "not-pending",
 }
-# the structured failure taxonomy (DESIGN.md §12): SolveError::code()
+# the structured failure taxonomy (DESIGN.md §12–§13): SolveError::code()
 # values plus the service's own deadline / panic-containment codes
 ERROR_CODES = {
     "bad-spec", "backend", "io", "solver-breakdown", "diverged",
-    "non-finite", "transport", "deadline", "internal-panic",
+    "non-finite", "transport", "corruption", "deadline", "internal-panic",
 }
 
 
@@ -103,6 +111,14 @@ def main():
         help="with --chaos, the minimum fraction of solve requests that "
         "must have failed (default 0.25)",
     )
+    ap.add_argument(
+        "--expect-recovery",
+        action="store_true",
+        help="require at least one ok response recovered via rollback "
+        "(rollbacks >= 1 with a resumed_from ordinal), and bitwise "
+        "digest equality between '<id>-faulty' responses and their "
+        "'<id>-clean' twins",
+    )
     args = ap.parse_args()
 
     requests = read_ndjson(args.requests, "request")
@@ -130,6 +146,8 @@ def main():
     by_status = {s: 0 for s in STATUSES}
     batch_hits = 0
     queue_full = 0
+    recovered = 0
+    ok_by_id = {}
     for resp in responses:
         status = resp.get("status")
         if status not in STATUSES:
@@ -155,6 +173,14 @@ def main():
                 except (TypeError, ValueError):
                     fail(f"{resp['id']}: {field} must be a hex string, "
                          f"got {resp[field]!r}")
+            for field in ("checkpoints", "rollbacks", "corruptions"):
+                if not (isinstance(resp[field], (int, float))
+                        and resp[field] >= 0):
+                    fail(f"{resp['id']}: {field} must be a non-negative "
+                         f"count, got {resp[field]!r}")
+            if resp["rollbacks"] >= 1 and "resumed_from" in resp:
+                recovered += 1
+            ok_by_id[resp["id"]] = resp
         elif status == "reject":
             code = resp.get("code")
             if code not in REJECT_CODES:
@@ -187,12 +213,35 @@ def main():
     if args.expect_reject and queue_full == 0:
         fail("expected at least one queue-full reject at the tiny queue "
              "cap, saw none")
+    if args.expect_recovery:
+        if recovered == 0:
+            fail("expected at least one rollback-recovered solve (ok with "
+                 "rollbacks >= 1 and a resumed_from ordinal), saw none")
+        # the determinism contract on the wire: a recovered faulty job
+        # must land on exactly the bits its fault-free twin produced
+        paired = 0
+        for rid, resp in ok_by_id.items():
+            if not rid.endswith("-faulty"):
+                continue
+            twin = ok_by_id.get(rid[: -len("-faulty")] + "-clean")
+            if twin is None:
+                continue
+            paired += 1
+            for field in ("history_digest", "rel_residual_bits",
+                          "iterations"):
+                if resp[field] != twin[field]:
+                    fail(f"{rid}: {field} {resp[field]!r} differs from its "
+                         f"clean twin's {twin[field]!r} — rollback recovery "
+                         f"is not bitwise")
+        if paired == 0:
+            fail("--expect-recovery: no '-faulty'/'-clean' id pair "
+                 "completed, nothing proved the bitwise contract")
 
     print(f"service check: ok — {len(responses)} responses "
           f"({by_status['ok']} ok, {by_status['error']} error, "
           f"{by_status['reject']} reject, "
           f"{by_status['cancelled']} cancelled), {batch_hits} batch hits, "
-          f"{queue_full} queue-full rejects")
+          f"{queue_full} queue-full rejects, {recovered} rollback recoveries")
 
 
 if __name__ == "__main__":
